@@ -1,0 +1,242 @@
+//! Benchmark harness (criterion is unavailable offline; `harness = false`
+//! with hand-rolled timing via `util::timer::measure`).
+//!
+//! Two families:
+//!   * paper benches — regenerate every table and figure of the paper's
+//!     evaluation at `--effort quick` (default) or `--effort paper`;
+//!   * perf micro-benches — L1 kernel programs through PJRT, the TPE
+//!     proposal hot path, the hardware model + simulator (EXPERIMENTS.md
+//!     §Perf numbers come from here).
+//!
+//! Run: `cargo bench` (all) or `cargo bench -- fig3 table2 --effort quick`
+//! Filter names: fig1 fig3 fig3c fig4 table1 table2 table3 table4 ablations
+//!               kernels tpe hwmodel
+
+use sammpq::coordinator::report::Table;
+use sammpq::exp::{self, Effort};
+use sammpq::hw::{latency_cycles, HwConfig};
+use sammpq::runtime::program::{lit_f32, to_vec_f32};
+use sammpq::runtime::Runtime;
+use sammpq::search::space::{Dim, Space};
+use sammpq::search::{KmeansTpe, KmeansTpeParams, Objective, Searcher};
+use sammpq::train::ModelSession;
+use sammpq::util::cli::Args;
+use sammpq::util::timer::measure;
+use sammpq::util::Timer;
+
+fn should_run(args: &Args, name: &str) -> bool {
+    let filters: Vec<&str> = args
+        .positional
+        .iter()
+        .map(|s| s.as_str())
+        .filter(|s| !s.starts_with("--"))
+        .collect();
+    filters.is_empty() || filters.contains(&name)
+}
+
+fn section(name: &str) {
+    println!("\n##### bench: {name} #####");
+}
+
+// ---------------------------------------------------------------------------
+// Perf micro-benches
+// ---------------------------------------------------------------------------
+
+/// L1 kernel micro-bench: run the standalone Pallas kernel artifacts through
+/// PJRT and compare the fused quantize->matmul against the pure-XLA matmul
+/// reference (the §Perf efficiency ratio).
+fn bench_kernels(rt: &Runtime) -> anyhow::Result<()> {
+    section("kernels (L1 via PJRT)");
+    let root = Runtime::artifacts_root()?;
+    let dir = root.join("kernels");
+    let fq = rt.load_program(&dir.join("fake_quant_bench.hlo.txt"))?;
+    let qmm = rt.load_program(&dir.join("qmatmul_bench.hlo.txt"))?;
+    let mm = rt.load_program(&dir.join("matmul_ref_bench.hlo.txt"))?;
+
+    let x_fq = lit_f32(&vec![0.5f32; 256 * 1024], &[256, 1024])?;
+    let bits = lit_f32(&[4.0], &[1])?;
+    let (mean, min, _) = measure(3, 20, || {
+        let _ = fq.run(&[&x_fq, &bits]).unwrap();
+    });
+    let elems = 256.0 * 1024.0;
+    println!(
+        "fake_quant 256x1024 @4b: mean {:.3} ms, min {:.3} ms ({:.1} Melem/s)",
+        mean * 1e3,
+        min * 1e3,
+        elems / min / 1e6
+    );
+
+    let x = lit_f32(&vec![0.25f32; 256 * 256], &[256, 256])?;
+    let w = lit_f32(&vec![0.125f32; 256 * 128], &[256, 128])?;
+    let s = lit_f32(&[0.01, 0.01, 4.0, 4.0], &[4])?;
+    let flops = 2.0 * 256.0 * 256.0 * 128.0;
+    let (qmean, qmin, _) = measure(3, 20, || {
+        let _ = qmm.run(&[&x, &w, &s]).unwrap();
+    });
+    println!(
+        "qmatmul 256x256x128 @4b (fused quant+dot, tiled): mean {:.3} ms ({:.2} GFLOP/s)",
+        qmean * 1e3,
+        flops / qmin / 1e9
+    );
+    let (rmean, rmin, _) = measure(3, 20, || {
+        let _ = mm.run(&[&x, &w]).unwrap();
+    });
+    println!(
+        "matmul_ref 256x256x128 (pure XLA dot):             mean {:.3} ms ({:.2} GFLOP/s)",
+        rmean * 1e3,
+        flops / rmin / 1e9
+    );
+    println!(
+        "fused/reference efficiency ratio: {:.2}x (interpret-mode emulation overhead; \
+         structural VMEM/MXU estimates in DESIGN.md §Perf)",
+        rmin / qmin
+    );
+    // Sanity: outputs agree on constant inputs.
+    let a = to_vec_f32(&qmm.run(&[&x, &w, &s])?[0])?;
+    let b = to_vec_f32(&mm.run(&[&x, &w])?[0])?;
+    let max_rel = a
+        .iter()
+        .zip(&b)
+        .map(|(p, q)| ((p - q) / q.abs().max(1e-6)).abs())
+        .fold(0f32, f32::max);
+    println!("fused-vs-ref max rel deviation @4b: {max_rel:.4} (quantization error)");
+    Ok(())
+}
+
+/// L3 hot path: k-means TPE proposal cost as history grows (no DNN evals —
+/// a synthetic objective isolates the searcher).
+fn bench_tpe() {
+    section("tpe proposal hot path (L3)");
+    struct Cheap {
+        space: Space,
+    }
+    impl Objective for Cheap {
+        fn space(&self) -> &Space {
+            &self.space
+        }
+        fn eval(&mut self, c: &Vec<usize>) -> f64 {
+            -(c.iter().map(|&x| x as f64).sum::<f64>())
+        }
+    }
+    for dims in [20usize, 40, 80] {
+        let space = Space::new(
+            (0..dims).map(|d| Dim::new(format!("d{d}"), vec![0.0, 1.0, 2.0, 3.0, 4.0])).collect(),
+        );
+        let mut obj = Cheap { space };
+        let budget = 200;
+        let t = Timer::start();
+        let h = KmeansTpe::new(KmeansTpeParams { n_startup: 20, ..Default::default() })
+            .run(&mut obj, budget);
+        let total = t.secs();
+        println!(
+            "kmeans-tpe {dims} dims x 5 choices, {budget} trials: {:.1} ms total, \
+             {:.3} ms/proposal (search overhead excl. evals)",
+            total * 1e3,
+            total * 1e3 / budget as f64
+        );
+        assert_eq!(h.len(), budget);
+    }
+}
+
+/// Hardware model + cycle simulator throughput.
+fn bench_hwmodel() -> anyhow::Result<()> {
+    section("hardware model + simulator");
+    let meta = sammpq::runtime::client::load_meta("resnet50s-imagenet")?;
+    let hw = HwConfig::default();
+    let (b, w) = meta.resolve(|_| 4.0, |_| 1.0);
+    let net = meta.net_shape(&b, &w);
+    let (amean, _, _) = measure(10, 200, || {
+        let _ = latency_cycles(&hw, &net);
+    });
+    let (smean, _, _) = measure(3, 50, || {
+        let _ = sammpq::hw::sim::simulate(&hw, &net);
+    });
+    println!(
+        "resnet50s (30 layers): analytic {:.1} us/eval, simulator {:.1} us/eval \
+         ({}x analytic)",
+        amean * 1e6,
+        smean * 1e6,
+        (smean / amean).round() as u64
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(&argv);
+    let effort = Effort::parse(&args.get_or("effort", "quick"));
+    let t_all = Timer::start();
+
+    // Cheap benches first (no artifacts needed).
+    if should_run(&args, "fig3") {
+        section("fig3 (a/b tabular convergence)");
+        println!("{}", exp::fig3::run_tabular(effort)?);
+    }
+    if should_run(&args, "ablations") {
+        section("ablations (surrogate + c0 + latency-model)");
+        println!("{}", exp::ablations::run_surrogate_ablations(effort)?);
+        println!("{}", exp::ablations::run_c0_sweep(effort)?);
+        let meta = sammpq::runtime::client::load_meta("resnet20-cifar10")?;
+        println!("{}", exp::ablations::run_latency_validation(&meta)?);
+    }
+    if should_run(&args, "tpe") {
+        bench_tpe();
+    }
+    if should_run(&args, "hwmodel") {
+        bench_hwmodel()?;
+    }
+
+    // Artifact-backed benches share one PJRT client.
+    let need_rt = ["kernels", "fig1", "fig3c", "fig4", "table1", "table2", "table3", "table4"]
+        .iter()
+        .any(|n| should_run(&args, n));
+    if need_rt {
+        let rt = Runtime::new()?;
+        if should_run(&args, "kernels") {
+            bench_kernels(&rt)?;
+        }
+        if should_run(&args, "fig1") {
+            section("fig1 (weight distributions)");
+            let sess = ModelSession::open(&rt, "mobilenetv1-cifar100", 512, 128)?;
+            println!("{}", exp::fig1::run(&sess, 120)?);
+        }
+        if should_run(&args, "table1") {
+            section("table1 (epochs-per-config ablation)");
+            let sess = ModelSession::open(&rt, "resnet20-cifar10", 1024, 512)?;
+            println!("{}", exp::table1::run(&sess, effort)?);
+        }
+        if should_run(&args, "fig3c") {
+            section("fig3c (DNN convergence)");
+            let sess = ModelSession::open(&rt, "resnet18-cifar100", 1024, 512)?;
+            println!("{}", exp::fig3::run_dnn(&sess, effort)?);
+        }
+        if should_run(&args, "fig4") {
+            section("fig4 (search-space scatter)");
+            let sess = ModelSession::open(&rt, "resnet18-cifar100", 1024, 512)?;
+            println!("{}", exp::fig4::run(&sess, effort)?);
+        }
+        if should_run(&args, "table2") {
+            section("table2 (main comparison)");
+            println!("{}", exp::table2::run(&rt, effort, args.get("only"))?);
+        }
+        if should_run(&args, "table3") {
+            section("table3 (vs BOMP-NAS / GP-BO)");
+            println!("{}", exp::table3::run(&rt, effort)?);
+        }
+        if should_run(&args, "table4") {
+            section("table4 (returned configurations)");
+            println!(
+                "{}",
+                exp::table4::run(&rt, &["resnet20-cifar10"], 10, 6)?
+            );
+        }
+    }
+
+    let mut t = Table::new("bench run", &["metric", "value"]);
+    t.row(vec!["total wall-clock (s)".into(), format!("{:.1}", t_all.secs())]);
+    t.row(vec!["effort".into(), format!("{effort:?}")]);
+    println!("{}", t.render());
+    Ok(())
+}

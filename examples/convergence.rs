@@ -1,0 +1,18 @@
+//! Fig. 3a/3b standalone: TPE vs k-means TPE on the classic-ML workloads.
+//! Pure Rust — needs no artifacts, runs in seconds.
+//!
+//! Run: `cargo run --release --example convergence [paper]`
+
+use sammpq::exp::fig3;
+use sammpq::exp::Effort;
+
+fn main() -> anyhow::Result<()> {
+    let effort = std::env::args()
+        .nth(1)
+        .map(|s| Effort::parse(&s))
+        .unwrap_or(Effort::Quick);
+    let out = fig3::run_tabular(effort)?;
+    println!("{out}");
+    println!("CSV series written under results/fig3_*.csv");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Exercises every layer of the stack on a real small workload and proves
+//! they compose:
+//!   L1 Pallas kernels  — live inside the compiled programs (fake-quant +
+//!                        fused quantized matmul lower into the HLO),
+//!   L2 JAX model       — ResNet-20 QAT train/eval/hessian programs,
+//!   L3 Rust coordinator— data synthesis, OneCycle QAT training loop with a
+//!                        logged loss curve, Hessian pruning, k-means TPE
+//!                        search, hardware model, final training.
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end`
+
+use sammpq::coordinator::{Algo, Leader, LeaderCfg, ObjectiveCfg};
+use sammpq::hw::HwConfig;
+use sammpq::runtime::Runtime;
+use sammpq::train::ModelSession;
+use sammpq::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let t_all = Timer::start();
+    let rt = Runtime::new()?;
+    println!("[1/4] PJRT platform: {}", rt.platform());
+
+    let sess = ModelSession::open(&rt, "resnet20-cifar10", 2048, 512)?;
+    println!(
+        "[1/4] artifacts compiled: {} ({} layers, {} param tensors, batch {})",
+        sess.tag,
+        sess.meta.num_layers,
+        sess.meta.params.len(),
+        sess.meta.batch
+    );
+
+    // -- Training run with logged loss curve --------------------------------
+    let snap = sess.init_snapshot(42);
+    let mut state = sess.state_from_snapshot(&snap)?;
+    let bits = sess.meta.uniform_bits(8.0);
+    let widths = sess.meta.base_widths();
+    let steps = 300;
+    let t_train = Timer::start();
+    let out = sess.train(&mut state, &bits, &widths, steps, 3e-3)?;
+    let secs = t_train.secs();
+    println!(
+        "[2/4] QAT training: {steps} steps in {secs:.1}s ({:.0} ms/step)",
+        secs * 1e3 / steps as f64
+    );
+    print!("      loss curve: ");
+    for s in (0..steps).step_by(steps / 10) {
+        print!("{:.2} ", out.losses[s]);
+    }
+    println!("-> {:.3}", out.final_loss);
+    let acc = sess.evaluate(&state, &bits, &widths, 8)?;
+    println!("      val accuracy after {steps} steps @8b: {acc:.3}");
+    anyhow::ensure!(acc > 0.5, "end-to-end training failed to learn (acc {acc})");
+
+    // -- Full pipeline: prune + search + final train -------------------------
+    let (b16, w10) = sess.meta.resolve(|_| 16.0, |_| 1.0);
+    let fp16_mb = sess.meta.net_shape(&b16, &w10).model_size_mb();
+    let cfg = LeaderCfg {
+        pretrain_steps: 150,
+        n_evals: 16,
+        n_startup: 6,
+        final_steps: 600,
+        objective: ObjectiveCfg {
+            steps_per_eval: 24,
+            eval_batches: 4,
+            size_budget_mb: fp16_mb * 0.25,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    println!("[3/4] Alg.1 pipeline: pretrain -> hessian prune -> kmeans-tpe -> final");
+    let report = Leader::new(&sess, cfg, HwConfig::default()).run(Algo::KmeansTpe)?;
+    if let Some(p) = &report.pruned {
+        let (before, after) = p.log10_reduction();
+        println!("      pruning: bit-space 10^{before:.1} -> 10^{after:.1}");
+    }
+    println!(
+        "      search: {} evals in {:.1}s; best J = {:.4}",
+        report.history.len(),
+        report.search_secs,
+        report.best.value
+    );
+    println!(
+        "[4/4] RESULT  baseline: acc {:.3} @ {:.4} MB | ours: acc {:.3} @ {:.4} MB, {:.2}x speedup",
+        report.baseline_accuracy,
+        report.baseline_size_mb,
+        report.final_accuracy,
+        report.final_size_mb,
+        report.final_speedup
+    );
+    let compression = report.baseline_size_mb / report.final_size_mb;
+    anyhow::ensure!(compression > 3.0, "compression too weak: {compression:.2}x");
+    anyhow::ensure!(
+        report.final_accuracy > report.baseline_accuracy - 0.30,
+        "accuracy collapsed (final {} vs baseline {})",
+        report.final_accuracy,
+        report.baseline_accuracy
+    );
+    println!(
+        "\nEND-TO-END OK: {:.1}x compression at {:+.3} accuracy delta, total {:.0}s",
+        compression,
+        report.final_accuracy - report.baseline_accuracy,
+        t_all.secs()
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the ResNet-20/CIFAR-10-proxy artifact, pretrains briefly, runs a
+//! tiny k-means TPE search under a model-size budget, and prints the
+//! discovered configuration with its hardware metrics.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use sammpq::coordinator::{Algo, Leader, LeaderCfg, ObjectiveCfg};
+use sammpq::exp::table4::render_config;
+use sammpq::hw::HwConfig;
+use sammpq::runtime::Runtime;
+use sammpq::train::ModelSession;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // One model session = compiled train/eval/hessian programs + proxy data.
+    let sess = ModelSession::open(&rt, "resnet20-cifar10", 768, 384)?;
+    println!(
+        "model {} on {}: {} quantized layers, {} parameter tensors",
+        sess.meta.model,
+        sess.meta.dataset,
+        sess.meta.num_layers,
+        sess.meta.params.len()
+    );
+
+    // Budget: 20% of the FiP16 model size — the paper's compression regime.
+    let (b16, w10) = sess.meta.resolve(|_| 16.0, |_| 1.0);
+    let fp16_mb = sess.meta.net_shape(&b16, &w10).model_size_mb();
+
+    let cfg = LeaderCfg {
+        pretrain_steps: 80,
+        n_evals: 12,
+        n_startup: 5,
+        final_steps: 100,
+        objective: ObjectiveCfg {
+            steps_per_eval: 8,
+            eval_batches: 3,
+            size_budget_mb: fp16_mb * 0.2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let report = Leader::new(&sess, cfg, HwConfig::default()).run(Algo::KmeansTpe)?;
+
+    println!(
+        "\nFiP16 baseline: acc {:.3}, {:.4} MB",
+        report.baseline_accuracy, report.baseline_size_mb
+    );
+    println!(
+        "ours:           acc {:.3}, {:.4} MB ({:.1}x smaller), {:.2}x faster",
+        report.final_accuracy,
+        report.final_size_mb,
+        report.baseline_size_mb / report.final_size_mb,
+        report.final_speedup
+    );
+    println!("\n{}", render_config(&report, &sess));
+    Ok(())
+}

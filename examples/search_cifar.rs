@@ -1,0 +1,51 @@
+//! Domain example: compress ResNet-18 on the CIFAR-100 proxy against a hard
+//! size budget, comparing k-means TPE with every implemented baseline at the
+//! same evaluation budget — a miniature Table II for one model.
+//!
+//! Run: `make artifacts && cargo run --release --example search_cifar [n_evals]`
+
+use sammpq::coordinator::report::Table;
+use sammpq::coordinator::{Algo, Leader, LeaderCfg, ObjectiveCfg};
+use sammpq::hw::HwConfig;
+use sammpq::runtime::Runtime;
+use sammpq::train::ModelSession;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(10);
+    let rt = Runtime::new()?;
+    let sess = ModelSession::open(&rt, "resnet18-cifar100", 1024, 512)?;
+    let (b16, w10) = sess.meta.resolve(|_| 16.0, |_| 1.0);
+    let fp16_mb = sess.meta.net_shape(&b16, &w10).model_size_mb();
+
+    let cfg = LeaderCfg {
+        pretrain_steps: 100,
+        n_evals: n,
+        n_startup: (n / 3).max(3),
+        final_steps: 120,
+        objective: ObjectiveCfg {
+            steps_per_eval: 8,
+            eval_batches: 3,
+            size_budget_mb: fp16_mb * 0.12, // ~ the paper's 11x compression point
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let leader = Leader::new(&sess, cfg, HwConfig::default());
+
+    let mut t = Table::new(
+        &format!("resnet18-cifar100 @ {:.3} MB budget, n={n}", fp16_mb * 0.12),
+        &["algo", "final acc", "size MB", "speedup", "search s"],
+    );
+    for algo in [Algo::KmeansTpe, Algo::Tpe, Algo::Random, Algo::Evolutionary, Algo::Reinforce] {
+        let r = leader.run(algo)?;
+        t.row(vec![
+            algo.name().to_string(),
+            format!("{:.3}", r.final_accuracy),
+            format!("{:.4}", r.final_size_mb),
+            format!("{:.2}x", r.final_speedup),
+            format!("{:.1}", r.search_secs),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,179 @@
+"""AOT pipeline: lower every exported program to HLO TEXT + write meta.json.
+
+Runs exactly once (`make artifacts`); Python is never on the search path.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts layout:
+  artifacts/<model>-<dataset>/train_step.hlo.txt
+  artifacts/<model>-<dataset>/eval_batch.hlo.txt
+  artifacts/<model>-<dataset>/hessian_trace.hlo.txt
+  artifacts/<model>-<dataset>/meta.json
+  artifacts/kernels/{fake_quant_bench,qmatmul_bench}.hlo.txt   (L1 micro-bench)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .models import registry
+from .models.common import WIDTH_MULTS
+from . import train as train_mod
+from .kernels import fake_quant as fq_kernel
+from .kernels import qmatmul as qmm_kernel
+
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) // 1024} KiB)")
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_model(model_name: str, dataset: str, num_classes: int,
+                 out_root: str) -> None:
+    model = registry.build(model_name, num_classes)
+    tag = f"{model_name}-{dataset}"
+    out_dir = os.path.join(out_root, tag)
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"[aot] exporting {tag}: {len(model.params)} params, "
+          f"{model.num_layers} quantized layers")
+
+    n = len(model.params)
+    nl = model.num_layers
+    hw = model.image_hw
+    p_specs = [spec(p.shape) for p in model.params]
+    x_spec = spec((BATCH, hw, hw, 3))
+    y_spec = spec((BATCH,), jnp.int32)
+    bits_spec = spec((nl,))
+    widths_spec = spec((nl,))
+    scalar = spec(())
+
+    train_step = train_mod.build_train_step(model)
+    train_args = (p_specs + p_specs + p_specs +
+                  [scalar, x_spec, y_spec, bits_spec, widths_spec, scalar,
+                   scalar])
+    lower_to_file(train_step, train_args,
+                  os.path.join(out_dir, "train_step.hlo.txt"))
+
+    eval_batch = train_mod.build_eval_batch(model)
+    eval_args = (p_specs + [x_spec, y_spec, bits_spec, widths_spec])
+    lower_to_file(eval_batch, eval_args,
+                  os.path.join(out_dir, "eval_batch.hlo.txt"))
+
+    hess = train_mod.build_hessian_trace(model)
+    hess_args = (p_specs + [x_spec, y_spec, widths_spec,
+                            spec((), jnp.int32)])
+    lower_to_file(hess, hess_args,
+                  os.path.join(out_dir, "hessian_trace.hlo.txt"))
+
+    meta = {
+        "model": model_name,
+        "dataset": dataset,
+        "num_classes": num_classes,
+        "image_hw": hw,
+        "batch": BATCH,
+        "num_layers": nl,
+        "width_mults": WIDTH_MULTS,
+        "params": [dict(name=p.name, shape=list(p.shape), init=p.init,
+                        fan_in=p.fan_in, decay=p.decay)
+                   for p in model.params],
+        "layers": [dict(index=l.index, name=l.name, kind=l.kind, ksize=l.ksize,
+                        stride=l.stride, in_base=l.in_base, out_base=l.out_base,
+                        cmax_in=l.cmax_in, cmax_out=l.cmax_out, out_h=l.out_h,
+                        out_w=l.out_w, width_tie=l.width_tie,
+                        bits_tie=l.bits_tie, width_fixed=l.width_fixed,
+                        bits_free=l.bits_free)
+                   for l in model.layers],
+        "programs": {
+            "train_step": {
+                "inputs": "params*%d, m*%d, v*%d, t, x[%d,%d,%d,3], y[i32,%d], bits[%d], widths[%d], lr, wd"
+                          % (n, n, n, BATCH, hw, hw, BATCH, nl, nl),
+                "outputs": "params*%d, m*%d, v*%d, loss" % (n, n, n),
+            },
+            "eval_batch": {
+                "inputs": "params*%d, x, y, bits, widths" % n,
+                "outputs": "correct, loss",
+            },
+            "hessian_trace": {
+                "inputs": "params*%d, x, y, widths, seed[i32]" % n,
+                "outputs": "vHv[f32[%d]]" % nl,
+            },
+        },
+        "adam": {"b1": train_mod.ADAM_B1, "b2": train_mod.ADAM_B2,
+                 "eps": train_mod.ADAM_EPS},
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def export_kernel_benches(out_root: str) -> None:
+    """Standalone L1 kernel artifacts for the Rust-side micro-benchmarks."""
+    out_dir = os.path.join(out_root, "kernels")
+    os.makedirs(out_dir, exist_ok=True)
+
+    def fq_bench(x, bits):
+        return (fq_kernel.fake_quant(x, bits),)
+
+    lower_to_file(fq_bench, [spec((256, 1024)), spec((1,))],
+                  os.path.join(out_dir, "fake_quant_bench.hlo.txt"))
+
+    def qmm_bench(x, w, s):
+        return (qmm_kernel.qmatmul(x, w, s[0], s[1], s[2], s[3]),)
+
+    lower_to_file(qmm_bench, [spec((256, 256)), spec((256, 128)), spec((4,))],
+                  os.path.join(out_dir, "qmatmul_bench.hlo.txt"))
+
+    # Pure-jnp reference matmul of the same shape: the roofline comparator
+    # for EXPERIMENTS.md §Perf (kernel vs XLA-native efficiency ratio).
+    def mm_ref(x, w):
+        return (x @ w,)
+
+    lower_to_file(mm_ref, [spec((256, 256)), spec((256, 128))],
+                  os.path.join(out_dir, "matmul_ref_bench.hlo.txt"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated model-dataset tags to export")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    export_kernel_benches(args.out)
+    for model_name, dataset, classes in registry.EXPORTS:
+        tag = f"{model_name}-{dataset}"
+        if only is not None and tag not in only:
+            continue
+        export_model(model_name, dataset, classes, args.out)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

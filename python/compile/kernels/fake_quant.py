@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: symmetric per-tensor fake quantization with a *runtime* bit-width.
+
+This is the QAT hot-spot of the paper: every quantized layer fake-quantizes both
+its weights and its input activations to the layer's searched bit-width. The
+bit-width arrives as a runtime scalar (f32) so that ONE lowered HLO artifact
+serves every point of the search space — the Rust coordinator never re-lowers.
+
+Quantization scheme (matches `ref.fake_quant_ref` exactly):
+    levels = 2^(b-1) - 1                 (symmetric, no zero-point)
+    scale  = max(|x|) / levels           (per-tensor, max-calibrated)
+    q      = clip(round(x / scale), -levels, levels)
+    out    = q * scale
+
+The kernel runs as a single VMEM block (grid=()) — weight/activation tensors at
+CIFAR scale fit comfortably; on a real TPU the same kernel tiles via BlockSpec
+(see `qmatmul.py` for the tiled pattern). `interpret=True` is mandatory on this
+image: real TPU lowering emits a Mosaic custom-call the CPU PJRT client cannot
+execute.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fake_quant_kernel(x_ref, bits_ref, o_ref):
+    """Kernel body: quantize the whole block resident in VMEM."""
+    x = x_ref[...]
+    b = bits_ref[0]
+    levels = jnp.exp2(b - 1.0) - 1.0
+    amax = jnp.max(jnp.abs(x))
+    # Guard: all-zero tensors (e.g. fully masked channels) keep scale 1.0.
+    scale = jnp.where(amax > 0.0, amax / levels, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -levels, levels)
+    o_ref[...] = q * scale
+
+
+def fake_quant(x: jax.Array, bits: jax.Array) -> jax.Array:
+    """Fake-quantize `x` to `bits` bits (runtime value).
+
+    Args:
+      x:    any-shape f32 tensor.
+      bits: f32[1] — bit-width as a runtime scalar array. Values >= 16
+            are numerically near-identity (used for the FP16 baseline).
+
+    Returns:
+      f32 tensor of the same shape, quantized-then-dequantized.
+    """
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, bits)
+
+
+def fake_quant_vmem_bytes(shape, dtype_bytes: int = 4) -> int:
+    """VMEM footprint estimate for the single-block kernel (in + out)."""
+    n = 1
+    for d in shape:
+        n *= d
+    return 2 * n * dtype_bytes

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: tiled fused quantize->matmul.
+
+The paper's accelerator packs low-bit operands so one DSP performs multiple
+MACs; on TPU the analogous schedule is: stream HBM tiles into VMEM, quantize
+*in VMEM*, and feed the MXU one (bm x bk)@(bk x bn) systolic pass per tile
+(DESIGN.md §Hardware-Adaptation). This kernel implements that schedule.
+
+It computes  fq(x, sx, bx) @ fq(w, sw, bw)  where the per-tensor scales
+(sx, sw) are computed by the caller over the FULL tensors (so tiling does not
+change numerics vs. the per-tensor oracle in `ref.py`) and the bit-widths are
+runtime scalars.
+
+Used by L2 for dense heads and MobileNet pointwise (1x1) convolutions — the
+matmul-shaped layers that dominate those models.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile shapes: MXU-aligned on TPU would be (128, 128); interpret-mode CPU
+# emulation favours fewer grid steps, so tiles are chosen per call-site as the
+# largest divisor <= MAX_TILE.
+MAX_TILE_M = 256
+MAX_TILE_N = 128
+
+
+def _quant(v, scale, bits):
+    levels = jnp.exp2(bits - 1.0) - 1.0
+    q = jnp.clip(jnp.round(v / scale), -levels, levels)
+    return q * scale
+
+
+def _qmatmul_kernel(s_ref, x_ref, w_ref, o_ref):
+    """One (bm x bn) output tile: quantize both VMEM-resident operand tiles,
+    then a single MXU-shaped dot. s_ref = [sx, sw, bx, bw] broadcast to all
+    grid cells."""
+    sx, sw, bx, bw = s_ref[0], s_ref[1], s_ref[2], s_ref[3]
+    xq = _quant(x_ref[...], sx, bx)
+    wq = _quant(w_ref[...], sw, bw)
+    o_ref[...] = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def qmatmul(x: jax.Array, w: jax.Array, scale_x: jax.Array, scale_w: jax.Array,
+            bits_x: jax.Array, bits_w: jax.Array) -> jax.Array:
+    """Tiled fused quantized matmul.
+
+    Args:
+      x: f32[M, K] activations.  w: f32[K, N] weights.
+      scale_x / scale_w: f32[] per-tensor scales (full-tensor max / levels).
+      bits_x / bits_w:   f32[] runtime bit-widths.
+
+    Returns: f32[M, N] = fq(x) @ fq(w).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    bm = _largest_divisor(m, MAX_TILE_M)
+    bn = _largest_divisor(n, MAX_TILE_N)
+    s = jnp.stack([scale_x, scale_w, bits_x, bits_w]).astype(jnp.float32)
+    return pl.pallas_call(
+        _qmatmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i, j: (0,)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(s, x, w)
+
+
+def qmatmul_vmem_bytes(m: int, k: int, n: int) -> int:
+    """Per-grid-step VMEM footprint (x tile + w tile + out tile), f32."""
+    bm = _largest_divisor(m, MAX_TILE_M)
+    bn = _largest_divisor(n, MAX_TILE_N)
+    return 4 * (bm * k + k * bn + bm * bn)
+
+
+def qmatmul_mxu_passes(m: int, k: int, n: int) -> int:
+    """Number of 128x128x128 MXU systolic passes the tiled schedule issues —
+    the utilization estimator used in DESIGN.md / EXPERIMENTS.md §Perf."""
+    ceil = lambda a, b: -(-a // b)
+    return ceil(m, 128) * ceil(k, 128) * ceil(n, 128)

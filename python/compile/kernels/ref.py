@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness contracts: `python/tests/test_kernels.py`
+asserts `allclose(kernel(...), ref(...))` across a hypothesis-style sweep of
+shapes / bit-widths / value ranges, and the QAT straight-through backward pass
+(qat.py) recomputes quantized operands with these formulas, so kernel<->ref
+agreement is what makes training gradients consistent with the forward pass.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_levels(bits: jax.Array) -> jax.Array:
+    """Number of positive quantization levels for a symmetric b-bit grid."""
+    return jnp.exp2(bits - 1.0) - 1.0
+
+
+def quant_scale(x: jax.Array, bits: jax.Array) -> jax.Array:
+    """Per-tensor max-calibrated scale; 1.0 for all-zero tensors."""
+    amax = jnp.max(jnp.abs(x))
+    return jnp.where(amax > 0.0, amax / quant_levels(bits), 1.0)
+
+
+def fake_quant_ref(x: jax.Array, bits: jax.Array) -> jax.Array:
+    """Oracle for kernels.fake_quant.fake_quant (bits: f32[1] or scalar)."""
+    b = jnp.reshape(bits, (-1,))[0]
+    levels = quant_levels(b)
+    scale = quant_scale(x, b)
+    q = jnp.clip(jnp.round(x / scale), -levels, levels)
+    return q * scale
+
+
+def fake_quant_with_scale_ref(x: jax.Array, scale: jax.Array, bits: jax.Array) -> jax.Array:
+    """Quantize with an externally supplied per-tensor scale (qmatmul path)."""
+    levels = quant_levels(bits)
+    q = jnp.clip(jnp.round(x / scale), -levels, levels)
+    return q * scale
+
+
+def qmatmul_ref(x: jax.Array, w: jax.Array, scale_x: jax.Array, scale_w: jax.Array,
+                bits_x: jax.Array, bits_w: jax.Array) -> jax.Array:
+    """Oracle for kernels.qmatmul.qmatmul."""
+    xq = fake_quant_with_scale_ref(x, scale_x, bits_x)
+    wq = fake_quant_with_scale_ref(w, scale_w, bits_w)
+    return xq @ wq

@@ -1,0 +1,10 @@
+"""L2 façade: re-exports the model registry + program builders.
+
+The canonical entry points live in `models/registry.py` (architectures) and
+`train.py` (train/eval/hessian program builders); this module keeps the
+documented `python/compile/model.py` path stable for downstream users.
+"""
+
+from .models.registry import BUILDERS, EXPORTS, build  # noqa: F401
+from .train import (build_train_step, build_eval_batch,  # noqa: F401
+                    build_hessian_trace, cross_entropy)

@@ -1,0 +1,208 @@
+"""L2 model-construction framework: width-masked, runtime-quantized layers.
+
+Design (DESIGN.md §6.1): ONE lowered HLO artifact must serve the entire
+(bit-width x layer-width) search space, so neither may change tensor shapes:
+
+  * bit-widths enter as a runtime `f32[L]` input; layer `l` fake-quantizes its
+    weights AND input activations with `bits[l]` (paper §III-A: same bit-width
+    for weights and input activations of a layer);
+  * layer widths enter as a runtime `f32[L]` vector of ACTIVE CHANNEL COUNTS.
+    Every channel dimension is statically sized at `cmax = ceil(1.25 * base)`
+    (1.25 = max width multiplier in S) and a mask `iota(cmax) < widths[l]`
+    zeroes inactive channels. Structural ties (residual adds, depthwise
+    channels) are recorded in the layer metadata and resolved by the Rust
+    coordinator, which always sends a fully-consistent widths vector.
+
+`quant=False` builds the pure-FP graph (no Pallas calls, no rounding): used by
+the Hessian-trace program, which needs forward-mode AD that `custom_vjp`
+straight-through estimators cannot provide — and matches the paper, where
+sensitivity analysis runs on the full-precision pretrained model.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..qat import fake_quant_ste, qmatmul_ste
+
+WIDTH_MULTS = [0.75, 0.875, 1.0, 1.125, 1.25]
+MAX_MULT = 1.25
+
+
+def cmax_of(base: int) -> int:
+    return int(math.ceil(MAX_MULT * base))
+
+
+@dataclass
+class ParamSpec:
+    """One parameter tensor: creation-ordered; Rust initializes from this."""
+    name: str
+    shape: tuple
+    init: str      # 'he' | 'zeros' | 'ones'
+    fan_in: int    # for 'he' init: std = sqrt(2 / fan_in)
+    decay: bool    # apply weight decay (conv/fc kernels only)
+
+
+@dataclass
+class LayerMeta:
+    """One *quantized* layer: drives the hw model + search space in Rust."""
+    index: int
+    name: str
+    kind: str           # 'conv' | 'dwconv' | 'pwconv' | 'fc'
+    ksize: int
+    stride: int
+    in_base: int        # base (mult=1.0) input channel count
+    out_base: int       # base output channel count
+    cmax_in: int
+    cmax_out: int
+    out_h: int
+    out_w: int
+    width_tie: int      # layer index whose WIDTH entry governs this OUTPUT
+    bits_tie: int       # layer index whose BITS entry this layer uses
+    width_fixed: bool   # output width not searchable (e.g. fc -> classes)
+    bits_free: bool     # own bit-width search dimension (False: bits_tie'd)
+
+
+class Builder:
+    """Accumulates ParamSpecs / LayerMetas while the apply() closure is built."""
+
+    def __init__(self):
+        self.params: List[ParamSpec] = []
+        self.layers: List[LayerMeta] = []
+
+    def add_param(self, name, shape, init, fan_in, decay) -> int:
+        self.params.append(ParamSpec(name, tuple(int(s) for s in shape), init,
+                                     int(fan_in), decay))
+        return len(self.params) - 1
+
+    def add_layer(self, **kw) -> int:
+        idx = len(self.layers)
+        kw.setdefault("width_tie", idx)
+        kw.setdefault("bits_tie", idx)
+        kw.setdefault("width_fixed", False)
+        kw.setdefault("bits_free", True)
+        self.layers.append(LayerMeta(index=idx, **kw))
+        return idx
+
+
+def channel_mask(widths: jax.Array, layer_idx: int, cmax: int) -> jax.Array:
+    """f32[cmax] mask of active channels for layer `layer_idx`'s output."""
+    iota = lax.broadcasted_iota(jnp.float32, (cmax,), 0)
+    return (iota < widths[layer_idx]).astype(jnp.float32)
+
+
+def maybe_quant(x: jax.Array, bits: jax.Array, layer_idx: int, quant: bool) -> jax.Array:
+    """Fake-quantize through the Pallas STE kernel when building the QAT graph."""
+    if not quant:
+        return x
+    return fake_quant_ste(x, lax.dynamic_slice_in_dim(bits, layer_idx, 1))
+
+
+# ---------------------------------------------------------------------------
+# Layer apply helpers. All activations are NHWC; conv kernels are HWIO.
+# ---------------------------------------------------------------------------
+
+def conv2d(params, x, w_idx, meta: LayerMeta, bits, widths, quant, mask_in,
+           mask_out):
+    """Standard conv: quantize input activations + masked weights, convolve,
+    re-mask output channels."""
+    w = params[w_idx]
+    w = w * mask_in[None, None, :, None] * mask_out[None, None, None, :]
+    li = meta.bits_tie
+    xq = maybe_quant(x, bits, li, quant)
+    wq = maybe_quant(w, bits, li, quant)
+    y = lax.conv_general_dilated(
+        xq, wq, window_strides=(meta.stride, meta.stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y * mask_out[None, None, None, :]
+
+
+def dwconv2d(params, x, w_idx, meta: LayerMeta, bits, widths, quant, mask):
+    """Depthwise conv: channel set identical on input/output (mask shared)."""
+    w = params[w_idx]  # (k, k, 1, C)
+    w = w * mask[None, None, None, :]
+    li = meta.bits_tie
+    xq = maybe_quant(x, bits, li, quant)
+    wq = maybe_quant(w, bits, li, quant)
+    c = w.shape[-1]
+    y = lax.conv_general_dilated(
+        xq, wq, window_strides=(meta.stride, meta.stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=c)
+    return y * mask[None, None, None, :]
+
+
+def pwconv(params, x, w_idx, meta: LayerMeta, bits, widths, quant, mask_in,
+           mask_out):
+    """Pointwise (1x1) conv as the fused Pallas quantize->matmul kernel —
+    the matmul-shaped hot path of the MobileNets."""
+    n, h, wd, c = x.shape
+    w = params[w_idx]  # (C_in, C_out)
+    w = w * mask_in[:, None] * mask_out[None, :]
+    xm = x.reshape(n * h * wd, c)
+    li = meta.bits_tie
+    if quant:
+        b = bits[li]
+        y = qmatmul_ste(xm, w, b, b)
+    else:
+        y = xm @ w
+    y = y.reshape(n, h, wd, w.shape[1])
+    return y * mask_out[None, None, None, :]
+
+
+def dense(params, x, w_idx, b_idx, meta: LayerMeta, bits, quant):
+    """Final classifier head via the fused Pallas kernel."""
+    w = params[w_idx]
+    li = meta.bits_tie
+    if quant:
+        b = bits[li]
+        y = qmatmul_ste(x, w, b, b)
+    else:
+        y = x @ w
+    return y + params[b_idx][None, :]
+
+
+def batchnorm(params, x, g_idx, b_idx, mask):
+    """Batch-stat normalization (no running stats — proxy-training regime;
+    the evaluator also uses batch stats, documented in DESIGN.md). Masked
+    channels stay exactly zero: normalize, affine, re-mask."""
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    y = (x - mean) * lax.rsqrt(var + 1e-5)
+    y = y * params[g_idx][None, None, None, :] + params[b_idx][None, None, None, :]
+    return y * mask[None, None, None, :]
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def make_conv_param(b: Builder, name: str, k: int, cin: int, cout: int) -> int:
+    return b.add_param(name, (k, k, cin, cout), "he", k * k * cin, decay=True)
+
+
+def make_bn_params(b: Builder, name: str, c: int):
+    g = b.add_param(f"{name}.gamma", (c,), "ones", c, decay=False)
+    bb = b.add_param(f"{name}.beta", (c,), "zeros", c, decay=False)
+    return g, bb
+
+
+@dataclass
+class Model:
+    """A fully-built model: parameter specs, quantized-layer metadata, and the
+    apply closure `(params, x, bits, widths, quant) -> logits`."""
+    name: str
+    num_classes: int
+    image_hw: int
+    params: List[ParamSpec]
+    layers: List[LayerMeta]
+    apply: Callable
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)

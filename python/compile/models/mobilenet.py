@@ -1,0 +1,223 @@
+"""MobileNetV1 / MobileNetV2 (CIFAR-style) with searchable bits + widths.
+
+MobileNetV1: stem conv + 13 (depthwise, pointwise) pairs + fc. Depthwise
+layers share their channel set with the producing pointwise layer, so their
+width ties to it (width not free) but their BIT-WIDTH is a free dimension —
+matching the paper's MobileNetV1 config vector, which assigns bits to dw and
+pw layers separately.
+
+MobileNetV2: inverted residual blocks (expand pw -> dw -> project pw).
+Expansion width is free; the projection output ties to the stage governor so
+residual adds stay consistent. Pointwise convs run through the fused Pallas
+quantize->matmul kernel (`pwconv`), which dominates MobileNet compute.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import (Builder, Model, channel_mask, cmax_of, conv2d, dense,
+                     dwconv2d, pwconv, batchnorm, global_avg_pool,
+                     make_bn_params, make_conv_param)
+
+
+def build_mobilenet_v1(name: str, num_classes: int, image_hw: int,
+                       stem_base: int, block_cfg) -> Model:
+    """block_cfg: list of (out_base, stride) for the 13 dw/pw pairs."""
+    b = Builder()
+    hw = image_hw
+
+    stem_cmax = cmax_of(stem_base)
+    stem_idx = b.add_layer(name="stem", kind="conv", ksize=3, stride=1,
+                           in_base=3, out_base=stem_base, cmax_in=3,
+                           cmax_out=stem_cmax, out_h=hw, out_w=hw)
+    stem_w = make_conv_param(b, "stem.w", 3, 3, stem_cmax)
+    stem_g, stem_bb = make_bn_params(b, "stem.bn", stem_cmax)
+
+    pairs = []
+    in_tie, in_base, in_cmax = stem_idx, stem_base, stem_cmax
+    for i, (out_base, stride) in enumerate(block_cfg):
+        if stride == 2:
+            hw //= 2
+        out_cmax = cmax_of(out_base)
+        pfx = f"b{i}"
+        dw_idx = b.add_layer(name=f"{pfx}.dw", kind="dwconv", ksize=3,
+                             stride=stride, in_base=in_base, out_base=in_base,
+                             cmax_in=in_cmax, cmax_out=in_cmax, out_h=hw,
+                             out_w=hw, width_tie=in_tie)
+        dw_w = b.add_param(f"{pfx}.dw.w", (3, 3, 1, in_cmax), "he", 9, decay=True)
+        dw_g, dw_b = make_bn_params(b, f"{pfx}.dw.bn", in_cmax)
+        pw_idx = b.add_layer(name=f"{pfx}.pw", kind="pwconv", ksize=1, stride=1,
+                             in_base=in_base, out_base=out_base, cmax_in=in_cmax,
+                             cmax_out=out_cmax, out_h=hw, out_w=hw)
+        pw_w = b.add_param(f"{pfx}.pw.w", (in_cmax, out_cmax), "he", in_cmax,
+                           decay=True)
+        pw_g, pw_b = make_bn_params(b, f"{pfx}.pw.bn", out_cmax)
+        pairs.append(dict(dw=(dw_idx, dw_w, dw_g, dw_b),
+                          pw=(pw_idx, pw_w, pw_g, pw_b),
+                          in_cmax=in_cmax, out_cmax=out_cmax))
+        in_tie, in_base, in_cmax = pw_idx, out_base, out_cmax
+
+    fc_idx = b.add_layer(name="fc", kind="fc", ksize=1, stride=1,
+                         in_base=in_base, out_base=num_classes, cmax_in=in_cmax,
+                         cmax_out=num_classes, out_h=1, out_w=1,
+                         width_tie=in_tie, width_fixed=True)
+    fc_w = b.add_param("fc.w", (in_cmax, num_classes), "he", in_cmax, decay=True)
+    fc_b = b.add_param("fc.b", (num_classes,), "zeros", 1, decay=False)
+
+    layers, params_spec = b.layers, b.params
+
+    def apply(params, x, bits, widths, quant=True):
+        relu = jnp.maximum
+        m = channel_mask(widths, layers[stem_idx].width_tie, stem_cmax)
+        ones3 = jnp.ones((3,), dtype=jnp.float32)
+        h = conv2d(params, x, stem_w, layers[stem_idx], bits, widths, quant,
+                   ones3, m)
+        h = relu(batchnorm(params, h, stem_g, stem_bb, m), 0.0)
+        for pr in pairs:
+            dw_idx_, dw_w_, dw_g_, dw_b_ = pr["dw"]
+            pw_idx_, pw_w_, pw_g_, pw_b_ = pr["pw"]
+            m_in = channel_mask(widths, layers[dw_idx_].width_tie, pr["in_cmax"])
+            m_out = channel_mask(widths, layers[pw_idx_].width_tie, pr["out_cmax"])
+            h = dwconv2d(params, h, dw_w_, layers[dw_idx_], bits, widths, quant, m_in)
+            h = relu(batchnorm(params, h, dw_g_, dw_b_, m_in), 0.0)
+            h = pwconv(params, h, pw_w_, layers[pw_idx_], bits, widths, quant,
+                       m_in, m_out)
+            h = relu(batchnorm(params, h, pw_g_, pw_b_, m_out), 0.0)
+        pooled = global_avg_pool(h)
+        return dense(params, pooled, fc_w, fc_b, layers[fc_idx], bits, quant)
+
+    return Model(name=name, num_classes=num_classes, image_hw=image_hw,
+                 params=params_spec, layers=layers, apply=apply)
+
+
+def build_mobilenet_v2(name: str, num_classes: int, image_hw: int,
+                       stem_base: int, block_cfg, head_base: int) -> Model:
+    """block_cfg: list of (expand_ratio, out_base, stride, n_repeat)."""
+    b = Builder()
+    hw = image_hw
+
+    stem_cmax = cmax_of(stem_base)
+    stem_idx = b.add_layer(name="stem", kind="conv", ksize=3, stride=1,
+                           in_base=3, out_base=stem_base, cmax_in=3,
+                           cmax_out=stem_cmax, out_h=hw, out_w=hw)
+    stem_w = make_conv_param(b, "stem.w", 3, 3, stem_cmax)
+    stem_g, stem_bb = make_bn_params(b, "stem.bn", stem_cmax)
+
+    blocks = []
+    in_tie, in_base, in_cmax = stem_idx, stem_base, stem_cmax
+    bi = 0
+    for (t, out_base, stride0, n) in block_cfg:
+        for r in range(n):
+            stride = stride0 if r == 0 else 1
+            if stride == 2:
+                hw //= 2
+            out_cmax = cmax_of(out_base)
+            pfx = f"b{bi}"
+            bi += 1
+            mid_base = in_base * t
+            mid_cmax = cmax_of(mid_base)
+            exp = None
+            if t != 1:
+                exp_idx = b.add_layer(name=f"{pfx}.expand", kind="pwconv",
+                                      ksize=1, stride=1, in_base=in_base,
+                                      out_base=mid_base, cmax_in=in_cmax,
+                                      cmax_out=mid_cmax, out_h=hw * stride,
+                                      out_w=hw * stride)
+                exp_w = b.add_param(f"{pfx}.expand.w", (in_cmax, mid_cmax),
+                                    "he", in_cmax, decay=True)
+                exp_g, exp_b = make_bn_params(b, f"{pfx}.expand.bn", mid_cmax)
+                exp = (exp_idx, exp_w, exp_g, exp_b)
+                dw_tie = exp_idx
+            else:
+                mid_base, mid_cmax = in_base, in_cmax
+                dw_tie = in_tie
+            dw_idx = b.add_layer(name=f"{pfx}.dw", kind="dwconv", ksize=3,
+                                 stride=stride, in_base=mid_base,
+                                 out_base=mid_base, cmax_in=mid_cmax,
+                                 cmax_out=mid_cmax, out_h=hw, out_w=hw,
+                                 width_tie=dw_tie)
+            dw_w = b.add_param(f"{pfx}.dw.w", (3, 3, 1, mid_cmax), "he", 9,
+                               decay=True)
+            dw_g, dw_b = make_bn_params(b, f"{pfx}.dw.bn", mid_cmax)
+            residual = (stride == 1 and in_base == out_base)
+            if residual:
+                proj_idx = b.add_layer(name=f"{pfx}.project", kind="pwconv",
+                                       ksize=1, stride=1, in_base=mid_base,
+                                       out_base=out_base, cmax_in=mid_cmax,
+                                       cmax_out=out_cmax, out_h=hw, out_w=hw,
+                                       width_tie=in_tie)
+                governor = in_tie
+            else:
+                proj_idx = b.add_layer(name=f"{pfx}.project", kind="pwconv",
+                                       ksize=1, stride=1, in_base=mid_base,
+                                       out_base=out_base, cmax_in=mid_cmax,
+                                       cmax_out=out_cmax, out_h=hw, out_w=hw)
+                governor = proj_idx
+            proj_w = b.add_param(f"{pfx}.project.w", (mid_cmax, out_cmax),
+                                 "he", mid_cmax, decay=True)
+            proj_g, proj_b = make_bn_params(b, f"{pfx}.project.bn", out_cmax)
+            blocks.append(dict(exp=exp, dw=(dw_idx, dw_w, dw_g, dw_b),
+                               proj=(proj_idx, proj_w, proj_g, proj_b),
+                               residual=residual, mid_cmax=mid_cmax,
+                               out_cmax=out_cmax, in_cmax=in_cmax))
+            in_tie, in_base, in_cmax = governor, out_base, out_cmax
+
+    head_cmax = cmax_of(head_base)
+    head_idx = b.add_layer(name="head", kind="pwconv", ksize=1, stride=1,
+                           in_base=in_base, out_base=head_base, cmax_in=in_cmax,
+                           cmax_out=head_cmax, out_h=hw, out_w=hw)
+    head_w = b.add_param("head.w", (in_cmax, head_cmax), "he", in_cmax, decay=True)
+    head_g, head_bb = make_bn_params(b, "head.bn", head_cmax)
+
+    fc_idx = b.add_layer(name="fc", kind="fc", ksize=1, stride=1,
+                         in_base=head_base, out_base=num_classes,
+                         cmax_in=head_cmax, cmax_out=num_classes, out_h=1,
+                         out_w=1, width_tie=head_idx, width_fixed=True)
+    fc_w = b.add_param("fc.w", (head_cmax, num_classes), "he", head_cmax, decay=True)
+    fc_b = b.add_param("fc.b", (num_classes,), "zeros", 1, decay=False)
+
+    layers, params_spec = b.layers, b.params
+
+    def apply(params, x, bits, widths, quant=True):
+        relu6 = lambda v: jnp.clip(v, 0.0, 6.0)
+        m = channel_mask(widths, layers[stem_idx].width_tie, stem_cmax)
+        ones3 = jnp.ones((3,), dtype=jnp.float32)
+        h = conv2d(params, x, stem_w, layers[stem_idx], bits, widths, quant,
+                   ones3, m)
+        h = relu6(batchnorm(params, h, stem_g, stem_bb, m))
+        cur_mask = m
+        for blk in blocks:
+            inp = h
+            in_mask = cur_mask
+            if blk["exp"] is not None:
+                exp_idx_, exp_w_, exp_g_, exp_b_ = blk["exp"]
+                m_mid = channel_mask(widths, layers[exp_idx_].width_tie,
+                                     blk["mid_cmax"])
+                h = pwconv(params, h, exp_w_, layers[exp_idx_], bits, widths,
+                           quant, in_mask, m_mid)
+                h = relu6(batchnorm(params, h, exp_g_, exp_b_, m_mid))
+            else:
+                m_mid = in_mask
+            dw_idx_, dw_w_, dw_g_, dw_b_ = blk["dw"]
+            h = dwconv2d(params, h, dw_w_, layers[dw_idx_], bits, widths, quant,
+                         m_mid)
+            h = relu6(batchnorm(params, h, dw_g_, dw_b_, m_mid))
+            proj_idx_, proj_w_, proj_g_, proj_b_ = blk["proj"]
+            m_out = channel_mask(widths, layers[proj_idx_].width_tie,
+                                 blk["out_cmax"])
+            h = pwconv(params, h, proj_w_, layers[proj_idx_], bits, widths,
+                       quant, m_mid, m_out)
+            h = batchnorm(params, h, proj_g_, proj_b_, m_out)
+            if blk["residual"]:
+                h = h + inp
+            cur_mask = m_out
+        m_head = channel_mask(widths, layers[head_idx].width_tie, head_cmax)
+        h = pwconv(params, h, head_w, layers[head_idx], bits, widths, quant,
+                   cur_mask, m_head)
+        h = relu6(batchnorm(params, h, head_g, head_bb, m_head))
+        pooled = global_avg_pool(h)
+        return dense(params, pooled, fc_w, fc_b, layers[fc_idx], bits, quant)
+
+    return Model(name=name, num_classes=num_classes, image_hw=image_hw,
+                 params=params_spec, layers=layers, apply=apply)

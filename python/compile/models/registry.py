@@ -1,0 +1,79 @@
+"""Model registry: proxy-scale configurations of the paper's architectures.
+
+The paper evaluates ResNet-18/50 + MobileNetV2 on ImageNet, ResNet-18 +
+MobileNetV1 on CIFAR-100 and ResNet-20 on CIFAR-10. This testbed is a single
+CPU core, so every architecture is instantiated at proxy scale (16x16 inputs,
+reduced base widths) with the LAYER STRUCTURE preserved — layer count, stage
+layout, depthwise/pointwise/bottleneck/residual topology, which is what makes
+the (bits, widths) search space heterogeneous (DESIGN.md §2).
+
+Datasets map to class counts of the synthetic generators in rust `data/`:
+cifar10-proxy=10, cifar100-proxy=20, imagenet-proxy=30 classes.
+"""
+
+from __future__ import annotations
+
+from .common import Model
+from .mobilenet import build_mobilenet_v1, build_mobilenet_v2
+from .resnet import build_resnet_basic, build_resnet_bottleneck
+
+IMAGE_HW = 16
+
+
+def resnet20(num_classes: int = 10) -> Model:
+    # 3 stages x 3 basic blocks -> 19 convs + fc = 20+shortcut quantized layers.
+    return build_resnet_basic("resnet20", num_classes, IMAGE_HW,
+                              stage_bases=(8, 16, 32), blocks_per_stage=(3, 3, 3))
+
+
+def resnet18(num_classes: int = 20) -> Model:
+    # 4 stages x 2 basic blocks -> 17 convs + fc (paper's vector: 17 entries).
+    return build_resnet_basic("resnet18", num_classes, IMAGE_HW,
+                              stage_bases=(8, 16, 24, 32),
+                              blocks_per_stage=(2, 2, 2, 2))
+
+
+def resnet50s(num_classes: int = 30) -> Model:
+    # Bottleneck ResNet, slimmed: 4 stages x 2 blocks x 3 convs + shortcuts.
+    return build_resnet_bottleneck("resnet50s", num_classes, IMAGE_HW,
+                                   stage_bases=(8, 12, 16, 24),
+                                   blocks_per_stage=(2, 2, 2, 2), expand=2)
+
+
+def mobilenetv1(num_classes: int = 20) -> Model:
+    # Standard 13-pair MobileNetV1 layout, narrowed.
+    cfg = [(12, 1), (16, 2), (16, 1), (24, 2), (24, 1),
+           (32, 2), (32, 1), (32, 1), (32, 1), (32, 1), (32, 1),
+           (48, 2), (48, 1)]
+    return build_mobilenet_v1("mobilenetv1", num_classes, IMAGE_HW,
+                              stem_base=8, block_cfg=cfg)
+
+
+def mobilenetv2(num_classes: int = 30) -> Model:
+    # Inverted-residual layout (t, c, s, n), narrowed + shortened.
+    cfg = [(1, 8, 1, 1), (4, 12, 2, 2), (4, 16, 2, 2), (4, 24, 2, 1)]
+    return build_mobilenet_v2("mobilenetv2", num_classes, IMAGE_HW,
+                              stem_base=8, block_cfg=cfg, head_base=48)
+
+
+BUILDERS = {
+    "resnet20": resnet20,
+    "resnet18": resnet18,
+    "resnet50s": resnet50s,
+    "mobilenetv1": mobilenetv1,
+    "mobilenetv2": mobilenetv2,
+}
+
+# (model, dataset) pairs exported by `make artifacts` — one per Table II block.
+EXPORTS = [
+    ("resnet20", "cifar10", 10),
+    ("resnet18", "cifar100", 20),
+    ("mobilenetv1", "cifar100", 20),
+    ("resnet18", "imagenet", 30),
+    ("mobilenetv2", "imagenet", 30),
+    ("resnet50s", "imagenet", 30),
+]
+
+
+def build(model: str, num_classes: int) -> Model:
+    return BUILDERS[model](num_classes)

@@ -1,0 +1,255 @@
+"""ResNet family (CIFAR-style) with searchable per-layer bit-widths and widths.
+
+Width-tie scheme (resolved by the Rust coordinator; recorded in LayerMeta):
+  * each stage has a governing width dimension — the stem for stage 1, the
+    residual-branch output conv of the first block for later stages;
+  * every tensor that participates in a residual add (block output convs,
+    downsample shortcuts) ties its output width to the stage governor;
+  * the inner conv of every block is a FREE width dimension (this is where the
+    paper's "widen a layer while quantizing it harder" trade-off lives).
+
+Shortcut 1x1 convs are real quantized layers (they carry weights, count toward
+model size and latency) but are not independent search dimensions: bits tie to
+the block's output conv, width ties to the stage governor (bits_free=False).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import (Builder, Model, channel_mask, cmax_of, conv2d, dense,
+                     batchnorm, global_avg_pool, make_bn_params,
+                     make_conv_param)
+
+
+def _bn(b, name, c):
+    return make_bn_params(b, name, c)
+
+
+def build_resnet_basic(name: str, num_classes: int, image_hw: int,
+                       stage_bases, blocks_per_stage) -> Model:
+    """Basic-block ResNet (ResNet-20 / ResNet-18 shapes)."""
+    b = Builder()
+    hw = image_hw
+
+    stem_base = stage_bases[0]
+    stem_cmax = cmax_of(stem_base)
+    stem_idx = b.add_layer(name="stem", kind="conv", ksize=3, stride=1,
+                           in_base=3, out_base=stem_base, cmax_in=3,
+                           cmax_out=stem_cmax, out_h=hw, out_w=hw)
+    stem_w = make_conv_param(b, "stem.w", 3, 3, stem_cmax)
+    stem_g, stem_bb = _bn(b, "stem.bn", stem_cmax)
+
+    blocks = []
+    in_tie, in_base, in_cmax = stem_idx, stem_base, stem_cmax
+    for s, (base, nblocks) in enumerate(zip(stage_bases, blocks_per_stage)):
+        cmax = cmax_of(base)
+        for i in range(nblocks):
+            stride = 2 if (s > 0 and i == 0) else 1
+            if stride == 2:
+                hw //= 2
+            pfx = f"s{s}b{i}"
+            # Inner conv: free width dimension.
+            c1_idx = b.add_layer(name=f"{pfx}.conv1", kind="conv", ksize=3,
+                                 stride=stride, in_base=in_base, out_base=base,
+                                 cmax_in=in_cmax, cmax_out=cmax, out_h=hw, out_w=hw)
+            c1_w = make_conv_param(b, f"{pfx}.conv1.w", 3, in_cmax, cmax)
+            c1_g, c1_b = _bn(b, f"{pfx}.conv1.bn", cmax)
+            # Output conv: first block of a widening stage becomes governor.
+            needs_proj = (in_base != base) or (stride != 1)
+            if i == 0 and s > 0:
+                c2_idx = b.add_layer(name=f"{pfx}.conv2", kind="conv", ksize=3,
+                                     stride=1, in_base=base, out_base=base,
+                                     cmax_in=cmax, cmax_out=cmax, out_h=hw, out_w=hw)
+                governor = c2_idx
+            else:
+                c2_idx = b.add_layer(name=f"{pfx}.conv2", kind="conv", ksize=3,
+                                     stride=1, in_base=base, out_base=base,
+                                     cmax_in=cmax, cmax_out=cmax, out_h=hw,
+                                     out_w=hw, width_tie=in_tie if not needs_proj else in_tie)
+                governor = in_tie
+            c2_w = make_conv_param(b, f"{pfx}.conv2.w", 3, cmax, cmax)
+            c2_g, c2_b = _bn(b, f"{pfx}.conv2.bn", cmax)
+
+            sc = None
+            if needs_proj:
+                sc_idx = b.add_layer(name=f"{pfx}.down", kind="conv", ksize=1,
+                                     stride=stride, in_base=in_base, out_base=base,
+                                     cmax_in=in_cmax, cmax_out=cmax, out_h=hw,
+                                     out_w=hw, width_tie=governor,
+                                     bits_tie=c2_idx, bits_free=False)
+                sc_w = make_conv_param(b, f"{pfx}.down.w", 1, in_cmax, cmax)
+                sc_g, sc_b = _bn(b, f"{pfx}.down.bn", cmax)
+                sc = (sc_idx, sc_w, sc_g, sc_b)
+
+            blocks.append(dict(c1=(c1_idx, c1_w, c1_g, c1_b),
+                               c2=(c2_idx, c2_w, c2_g, c2_b), sc=sc,
+                               in_tie=in_tie, in_cmax=in_cmax,
+                               governor=governor, cmax=cmax))
+            in_tie, in_base, in_cmax = governor, base, cmax
+
+    fc_idx = b.add_layer(name="fc", kind="fc", ksize=1, stride=1,
+                         in_base=stage_bases[-1], out_base=num_classes,
+                         cmax_in=in_cmax, cmax_out=num_classes, out_h=1, out_w=1,
+                         width_tie=in_tie, width_fixed=True)
+    fc_w = b.add_param("fc.w", (in_cmax, num_classes), "he", in_cmax, decay=True)
+    fc_b = b.add_param("fc.b", (num_classes,), "zeros", 1, decay=False)
+
+    layers = b.layers
+    params_spec = b.params
+
+    def apply(params, x, bits, widths, quant=True):
+        relu = jnp.maximum
+        m_stem = channel_mask(widths, layers[stem_idx].width_tie, stem_cmax)
+        ones3 = jnp.ones((3,), dtype=jnp.float32)
+        h = conv2d(params, x, stem_w, layers[stem_idx], bits, widths, quant,
+                   ones3, m_stem)
+        h = relu(batchnorm(params, h, stem_g, stem_bb, m_stem), 0.0)
+        cur, cur_mask = h, m_stem
+        for blk in blocks:
+            c1_idx_, c1_w_, c1_g_, c1_b_ = blk["c1"]
+            c2_idx_, c2_w_, c2_g_, c2_b_ = blk["c2"]
+            m_mid = channel_mask(widths, layers[c1_idx_].width_tie, blk["cmax"])
+            m_out = channel_mask(widths, layers[c2_idx_].width_tie, blk["cmax"])
+            t = conv2d(params, cur, c1_w_, layers[c1_idx_], bits, widths, quant,
+                       cur_mask, m_mid)
+            t = relu(batchnorm(params, t, c1_g_, c1_b_, m_mid), 0.0)
+            t = conv2d(params, t, c2_w_, layers[c2_idx_], bits, widths, quant,
+                       m_mid, m_out)
+            t = batchnorm(params, t, c2_g_, c2_b_, m_out)
+            if blk["sc"] is not None:
+                sc_idx_, sc_w_, sc_g_, sc_b_ = blk["sc"]
+                s = conv2d(params, cur, sc_w_, layers[sc_idx_], bits, widths,
+                           quant, cur_mask, m_out)
+                s = batchnorm(params, s, sc_g_, sc_b_, m_out)
+            else:
+                s = cur
+            cur = relu(t + s, 0.0)
+            cur_mask = m_out
+        pooled = global_avg_pool(cur)
+        return dense(params, pooled, fc_w, fc_b, layers[fc_idx], bits, quant)
+
+    return Model(name=name, num_classes=num_classes, image_hw=image_hw,
+                 params=params_spec, layers=layers, apply=apply)
+
+
+def build_resnet_bottleneck(name: str, num_classes: int, image_hw: int,
+                            stage_bases, blocks_per_stage,
+                            expand: int = 2) -> Model:
+    """Bottleneck ResNet (ResNet-50-slim). Inner 1x1 reduce and 3x3 convs are
+    free width dims; the 1x1 expand conv ties to the stage governor."""
+    b = Builder()
+    hw = image_hw
+
+    stem_base = stage_bases[0]
+    stem_cmax = cmax_of(stem_base)
+    stem_idx = b.add_layer(name="stem", kind="conv", ksize=3, stride=1,
+                           in_base=3, out_base=stem_base, cmax_in=3,
+                           cmax_out=stem_cmax, out_h=hw, out_w=hw)
+    stem_w = make_conv_param(b, "stem.w", 3, 3, stem_cmax)
+    stem_g, stem_bb = _bn(b, "stem.bn", stem_cmax)
+
+    blocks = []
+    in_tie, in_base, in_cmax = stem_idx, stem_base, stem_cmax
+    for s, (base, nblocks) in enumerate(zip(stage_bases, blocks_per_stage)):
+        out_base = base * expand
+        cmax_i = cmax_of(base)
+        cmax_o = cmax_of(out_base)
+        for i in range(nblocks):
+            stride = 2 if (s > 0 and i == 0) else 1
+            if stride == 2:
+                hw //= 2
+            pfx = f"s{s}b{i}"
+            c1_idx = b.add_layer(name=f"{pfx}.reduce", kind="conv", ksize=1,
+                                 stride=1, in_base=in_base, out_base=base,
+                                 cmax_in=in_cmax, cmax_out=cmax_i,
+                                 out_h=hw * stride, out_w=hw * stride)
+            c1_w = make_conv_param(b, f"{pfx}.reduce.w", 1, in_cmax, cmax_i)
+            c1_g, c1_b = _bn(b, f"{pfx}.reduce.bn", cmax_i)
+            c2_idx = b.add_layer(name=f"{pfx}.conv3x3", kind="conv", ksize=3,
+                                 stride=stride, in_base=base, out_base=base,
+                                 cmax_in=cmax_i, cmax_out=cmax_i, out_h=hw,
+                                 out_w=hw, width_tie=c1_idx, bits_free=True)
+            c2_w = make_conv_param(b, f"{pfx}.conv3x3.w", 3, cmax_i, cmax_i)
+            c2_g, c2_b = _bn(b, f"{pfx}.conv3x3.bn", cmax_i)
+            needs_proj = (i == 0)
+            if i == 0:
+                c3_idx = b.add_layer(name=f"{pfx}.expand", kind="conv", ksize=1,
+                                     stride=1, in_base=base, out_base=out_base,
+                                     cmax_in=cmax_i, cmax_out=cmax_o, out_h=hw,
+                                     out_w=hw)
+                governor = c3_idx
+            else:
+                c3_idx = b.add_layer(name=f"{pfx}.expand", kind="conv", ksize=1,
+                                     stride=1, in_base=base, out_base=out_base,
+                                     cmax_in=cmax_i, cmax_out=cmax_o, out_h=hw,
+                                     out_w=hw, width_tie=in_tie)
+                governor = in_tie
+            c3_w = make_conv_param(b, f"{pfx}.expand.w", 1, cmax_i, cmax_o)
+            c3_g, c3_b = _bn(b, f"{pfx}.expand.bn", cmax_o)
+
+            sc = None
+            if needs_proj:
+                sc_idx = b.add_layer(name=f"{pfx}.down", kind="conv", ksize=1,
+                                     stride=stride, in_base=in_base,
+                                     out_base=out_base, cmax_in=in_cmax,
+                                     cmax_out=cmax_o, out_h=hw, out_w=hw,
+                                     width_tie=governor, bits_tie=c3_idx,
+                                     bits_free=False)
+                sc_w = make_conv_param(b, f"{pfx}.down.w", 1, in_cmax, cmax_o)
+                sc_g, sc_b = _bn(b, f"{pfx}.down.bn", cmax_o)
+                sc = (sc_idx, sc_w, sc_g, sc_b)
+
+            blocks.append(dict(c1=(c1_idx, c1_w, c1_g, c1_b),
+                               c2=(c2_idx, c2_w, c2_g, c2_b),
+                               c3=(c3_idx, c3_w, c3_g, c3_b), sc=sc,
+                               cmax_i=cmax_i, cmax_o=cmax_o, governor=governor))
+            in_tie, in_base, in_cmax = governor, out_base, cmax_o
+
+    fc_idx = b.add_layer(name="fc", kind="fc", ksize=1, stride=1,
+                         in_base=in_base, out_base=num_classes, cmax_in=in_cmax,
+                         cmax_out=num_classes, out_h=1, out_w=1,
+                         width_tie=in_tie, width_fixed=True)
+    fc_w = b.add_param("fc.w", (in_cmax, num_classes), "he", in_cmax, decay=True)
+    fc_b = b.add_param("fc.b", (num_classes,), "zeros", 1, decay=False)
+
+    layers = b.layers
+    params_spec = b.params
+
+    def apply(params, x, bits, widths, quant=True):
+        relu = jnp.maximum
+        m_stem = channel_mask(widths, layers[stem_idx].width_tie, stem_cmax)
+        ones3 = jnp.ones((3,), dtype=jnp.float32)
+        h = conv2d(params, x, stem_w, layers[stem_idx], bits, widths, quant,
+                   ones3, m_stem)
+        h = relu(batchnorm(params, h, stem_g, stem_bb, m_stem), 0.0)
+        cur, cur_mask = h, m_stem
+        for blk in blocks:
+            c1_idx_, c1_w_, c1_g_, c1_b_ = blk["c1"]
+            c2_idx_, c2_w_, c2_g_, c2_b_ = blk["c2"]
+            c3_idx_, c3_w_, c3_g_, c3_b_ = blk["c3"]
+            m_i = channel_mask(widths, layers[c1_idx_].width_tie, blk["cmax_i"])
+            m_o = channel_mask(widths, layers[c3_idx_].width_tie, blk["cmax_o"])
+            t = conv2d(params, cur, c1_w_, layers[c1_idx_], bits, widths, quant,
+                       cur_mask, m_i)
+            t = relu(batchnorm(params, t, c1_g_, c1_b_, m_i), 0.0)
+            t = conv2d(params, t, c2_w_, layers[c2_idx_], bits, widths, quant,
+                       m_i, m_i)
+            t = relu(batchnorm(params, t, c2_g_, c2_b_, m_i), 0.0)
+            t = conv2d(params, t, c3_w_, layers[c3_idx_], bits, widths, quant,
+                       m_i, m_o)
+            t = batchnorm(params, t, c3_g_, c3_b_, m_o)
+            if blk["sc"] is not None:
+                sc_idx_, sc_w_, sc_g_, sc_b_ = blk["sc"]
+                s = conv2d(params, cur, sc_w_, layers[sc_idx_], bits, widths,
+                           quant, cur_mask, m_o)
+                s = batchnorm(params, s, sc_g_, sc_b_, m_o)
+            else:
+                s = cur
+            cur = relu(t + s, 0.0)
+            cur_mask = m_o
+        pooled = global_avg_pool(cur)
+        return dense(params, pooled, fc_w, fc_b, layers[fc_idx], bits, quant)
+
+    return Model(name=name, num_classes=num_classes, image_hw=image_hw,
+                 params=params_spec, layers=layers, apply=apply)

@@ -1,0 +1,69 @@
+"""Quantization-aware-training primitives: straight-through estimators (STE)
+around the L1 Pallas kernels.
+
+`round()` has zero gradient almost everywhere, so QAT backpropagates through
+fake quantization with the straight-through estimator: forward = the Pallas
+kernel, backward = identity on the real-valued operand. For the fused
+quantize->matmul kernel the backward pass uses the *quantized* operands
+(recomputed with the `ref.py` formulas, which the kernel test-suite pins to be
+identical to the kernel's own quantization), i.e.
+
+    dL/dx = g @ fq(w)^T        dL/dw = fq(x)^T @ g
+
+which is the exact gradient of the forward computation under STE.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fake_quant as fq_kernel
+from .kernels import qmatmul as qmm_kernel
+from .kernels import ref
+
+
+@jax.custom_vjp
+def fake_quant_ste(x, bits):
+    """STE fake quantization. x: any f32 tensor; bits: f32[1] runtime array."""
+    return fq_kernel.fake_quant(x, bits)
+
+
+def _fq_fwd(x, bits):
+    return fq_kernel.fake_quant(x, bits), None
+
+
+def _fq_bwd(_, g):
+    # Identity STE (max-calibrated symmetric quant never clips, so no mask).
+    return g, jnp.zeros((1,), dtype=jnp.float32)
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+@jax.custom_vjp
+def qmatmul_ste(x, w, bits_x, bits_w):
+    """STE fused quantized matmul: fq(x) @ fq(w), Pallas-tiled forward."""
+    sx = ref.quant_scale(x, bits_x)
+    sw = ref.quant_scale(w, bits_w)
+    return qmm_kernel.qmatmul(x, w, sx, sw, bits_x, bits_w)
+
+
+def _qmm_fwd(x, w, bits_x, bits_w):
+    sx = ref.quant_scale(x, bits_x)
+    sw = ref.quant_scale(w, bits_w)
+    out = qmm_kernel.qmatmul(x, w, sx, sw, bits_x, bits_w)
+    return out, (x, w, sx, sw, bits_x, bits_w)
+
+
+def _qmm_bwd(res, g):
+    x, w, sx, sw, bx, bw = res
+    xq = ref.fake_quant_with_scale_ref(x, sx, bx)
+    wq = ref.fake_quant_with_scale_ref(w, sw, bw)
+    dx = g @ wq.T
+    dw = xq.T @ g
+    zero = jnp.zeros((), dtype=jnp.float32)
+    return dx, dw, zero, zero
+
+
+qmatmul_ste.defvjp(_qmm_fwd, _qmm_bwd)

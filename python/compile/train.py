@@ -1,0 +1,122 @@
+"""Program builders for the three PJRT artifacts exported per model.
+
+Every program takes and returns FLAT positional arrays (no pytrees) in a fixed
+documented order, so the Rust runtime can marshal literals without a pytree
+library. The orders are recorded in meta.json by `aot.py`.
+
+  train_step : (*params, *m, *v, t, x, y, bits, widths, lr, wd)
+            -> (*params', *m', *v', loss)
+     One Adam/QAT step (paper trains with Adam; the OneCycleLR schedule is
+     implemented by the Rust trainer, which passes `lr` per step).
+
+  eval_batch : (*params, x, y, bits, widths) -> (correct, loss)
+
+  hessian_trace : (*params, x, y, widths, seed) -> vHv[f32[L]]
+     One Hutchinson sample of the per-layer Hessian-trace: a single Rademacher
+     tangent over ALL decayed conv/fc kernels at once; per-layer vT(Hv) is an
+     unbiased estimate of tr(H_ll) (cross-layer terms vanish in expectation).
+     Runs on the FP graph (quant=False): matches the paper (sensitivity of the
+     full-precision pretrained model) and keeps forward-mode AD legal (the STE
+     custom_vjp does not support jvp).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .models.common import Model
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def cross_entropy(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None].astype(jnp.int32),
+                                         axis=1))
+
+
+def build_train_step(model: Model):
+    n = len(model.params)
+    decay_flags = [p.decay for p in model.params]
+
+    def train_step(*args):
+        params = list(args[0:n])
+        m = list(args[n:2 * n])
+        v = list(args[2 * n:3 * n])
+        t, x, y, bits, widths, lr, wd = args[3 * n:3 * n + 7]
+
+        def loss_fn(ps):
+            logits = model.apply(ps, x, bits, widths, quant=True)
+            return cross_entropy(logits, y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        t1 = t + 1.0
+        bc1 = 1.0 - ADAM_B1 ** t1
+        bc2 = 1.0 - ADAM_B2 ** t1
+        new_p, new_m, new_v = [], [], []
+        for pi, mi, vi, gi, dec in zip(params, m, v, grads, decay_flags):
+            mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * gi
+            vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * gi * gi
+            step = mi / bc1 / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+            if dec:
+                step = step + wd * pi
+            new_p.append(pi - lr * step)
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    return train_step
+
+
+def build_eval_batch(model: Model):
+    n = len(model.params)
+
+    def eval_batch(*args):
+        params = list(args[0:n])
+        x, y, bits, widths = args[n:n + 4]
+        logits = model.apply(params, x, bits, widths, quant=True)
+        loss = cross_entropy(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return (correct, loss)
+
+    return eval_batch
+
+
+def build_hessian_trace(model: Model):
+    n = len(model.params)
+    decay_flags = [p.decay for p in model.params]
+    # Map each decayed kernel param to the quantized layer it belongs to, by
+    # construction order: layer metas and kernel params are appended in the
+    # same order in the builders.
+    kernel_param_ids = [i for i, d in enumerate(decay_flags) if d]
+    nl = model.num_layers
+    # fc bias excluded (decay=False); fc weight included -> len == num layers.
+    assert len(kernel_param_ids) == nl, (len(kernel_param_ids), nl)
+
+    def hessian_trace(*args):
+        params = list(args[0:n])
+        x, y, widths, seed = args[n:n + 4]
+
+        def loss_fn(ps):
+            logits = model.apply(ps, x, bits=jnp.full((nl,), 16.0),
+                                 widths=widths, quant=False)
+            return cross_entropy(logits, y)
+
+        key = jax.random.PRNGKey(seed.astype(jnp.int32))
+        keys = jax.random.split(key, len(kernel_param_ids))
+        tangents = [jnp.zeros_like(p) for p in params]
+        vs = {}
+        for kk, pid in zip(keys, kernel_param_ids):
+            rv = jax.random.rademacher(kk, params[pid].shape).astype(jnp.float32)
+            tangents[pid] = rv
+            vs[pid] = rv
+
+        grad_fn = jax.grad(loss_fn)
+        _, hv = jax.jvp(grad_fn, (params,), (tangents,))
+        ests = [jnp.sum(vs[pid] * hv[pid]) for pid in kernel_param_ids]
+        return (jnp.stack(ests),)
+
+    return hessian_trace

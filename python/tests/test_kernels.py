@@ -1,0 +1,157 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis-style sweep (seeded, exhaustive over the cross-product) of shapes,
+bit-widths and value ranges; `assert_allclose` against `ref.py`. This is the
+contract that makes the STE backward pass (which recomputes quantized operands
+with the ref formulas) exact w.r.t. the Pallas forward.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import fake_quant as fq
+from compile.kernels import qmatmul as qmm
+from compile.kernels import ref
+
+SHAPES = [(1,), (7,), (16,), (3, 5), (8, 8), (4, 3, 2), (2, 3, 3, 4), (128,)]
+BITS = [2.0, 3.0, 4.0, 6.0, 8.0, 16.0]
+SCALES = [0.01, 1.0, 37.5]
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.array(rng.randn(*shape).astype(np.float32) * scale)
+
+
+class TestFakeQuant:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("bits", BITS)
+    def test_matches_ref(self, shape, bits):
+        x = rand(shape, seed=hash((shape, bits)) % 2**31)
+        b = jnp.array([bits], dtype=jnp.float32)
+        np.testing.assert_allclose(fq.fake_quant(x, b), ref.fake_quant_ref(x, b),
+                                   rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("scale", SCALES)
+    def test_value_ranges(self, scale):
+        x = rand((16, 16), seed=3, scale=scale)
+        b = jnp.array([4.0], dtype=jnp.float32)
+        np.testing.assert_allclose(fq.fake_quant(x, b), ref.fake_quant_ref(x, b),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_zero_tensor(self):
+        x = jnp.zeros((8, 8), jnp.float32)
+        b = jnp.array([4.0], dtype=jnp.float32)
+        out = fq.fake_quant(x, b)
+        np.testing.assert_array_equal(np.array(out), np.zeros((8, 8), np.float32))
+
+    def test_level_count(self):
+        """b-bit symmetric quantization produces at most 2^b - 1 distinct values."""
+        for bits in [2.0, 3.0, 4.0]:
+            x = rand((4096,), seed=11)
+            out = np.array(fq.fake_quant(x, jnp.array([bits], jnp.float32)))
+            assert len(np.unique(out)) <= 2 ** int(bits) - 1
+
+    def test_idempotent(self):
+        """Quantizing an already-quantized tensor is a fixed point."""
+        x = rand((64,), seed=5)
+        b = jnp.array([3.0], dtype=jnp.float32)
+        once = fq.fake_quant(x, b)
+        twice = fq.fake_quant(once, b)
+        np.testing.assert_allclose(np.array(once), np.array(twice),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_high_bits_near_identity(self):
+        x = rand((32, 32), seed=7)
+        out = fq.fake_quant(x, jnp.array([16.0], jnp.float32))
+        np.testing.assert_allclose(np.array(out), np.array(x), rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_monotone_error_in_bits(self):
+        """Quantization error decreases (weakly) as bits increase."""
+        x = rand((1024,), seed=9)
+        errs = []
+        for bits in [2.0, 3.0, 4.0, 6.0, 8.0]:
+            out = fq.fake_quant(x, jnp.array([bits], jnp.float32))
+            errs.append(float(jnp.mean((out - x) ** 2)))
+        assert all(a >= b for a, b in zip(errs, errs[1:])), errs
+
+
+class TestQMatmul:
+    @pytest.mark.parametrize("mkn", [(4, 4, 4), (16, 12, 8), (32, 7, 10),
+                                     (256, 16, 128), (33, 5, 3), (512, 24, 20)])
+    @pytest.mark.parametrize("bits", [(2.0, 2.0), (4.0, 4.0), (8.0, 3.0),
+                                      (16.0, 16.0)])
+    def test_matches_ref(self, mkn, bits):
+        m, k, n = mkn
+        bx, bw = bits
+        x = rand((m, k), seed=m * 1000 + k)
+        w = rand((k, n), seed=n * 77 + k)
+        bxa = jnp.array(bx, jnp.float32)
+        bwa = jnp.array(bw, jnp.float32)
+        sx = ref.quant_scale(x, bxa)
+        sw = ref.quant_scale(w, bwa)
+        got = qmm.qmatmul(x, w, sx, sw, bxa, bwa)
+        want = ref.qmatmul_ref(x, w, sx, sw, bxa, bwa)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_tiling_invariance(self):
+        """Same numerics regardless of tile decomposition (scales are
+        per-tensor, computed outside the kernel)."""
+        m, k, n = 64, 16, 32
+        x = rand((m, k), seed=1)
+        w = rand((k, n), seed=2)
+        b = jnp.array(4.0, jnp.float32)
+        sx, sw = ref.quant_scale(x, b), ref.quant_scale(w, b)
+        full = qmm.qmatmul(x, w, sx, sw, b, b)
+        old_m, old_n = qmm.MAX_TILE_M, qmm.MAX_TILE_N
+        try:
+            qmm.MAX_TILE_M, qmm.MAX_TILE_N = 16, 8
+            tiled = qmm.qmatmul(x, w, sx, sw, b, b)
+        finally:
+            qmm.MAX_TILE_M, qmm.MAX_TILE_N = old_m, old_n
+        np.testing.assert_allclose(np.array(full), np.array(tiled), rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_vmem_estimate_positive(self):
+        assert qmm.qmatmul_vmem_bytes(256, 64, 128) > 0
+        assert qmm.qmatmul_mxu_passes(256, 256, 256) == 8
+
+
+class TestSTE:
+    def test_fake_quant_grad_identity(self):
+        from compile.qat import fake_quant_ste
+        x = rand((8, 8), seed=21)
+        b = jnp.array([4.0], jnp.float32)
+        g = jax.grad(lambda v: jnp.sum(fake_quant_ste(v, b) * 3.0))(x)
+        np.testing.assert_allclose(np.array(g), np.full((8, 8), 3.0, np.float32),
+                                   rtol=1e-6)
+
+    def test_qmatmul_grad_matches_ste_composition(self):
+        """grad of qmatmul_ste == grad of fq(x)@fq(w) built from fake_quant_ste."""
+        from compile.qat import fake_quant_ste, qmatmul_ste
+        x = rand((8, 4), seed=31)
+        w = rand((4, 6), seed=32)
+        b = jnp.array(3.0, jnp.float32)
+        b1 = jnp.reshape(b, (1,))
+
+        def f_fused(x, w):
+            return jnp.sum(qmatmul_ste(x, w, b, b) ** 2)
+
+        def f_composed(x, w):
+            return jnp.sum((fake_quant_ste(x, b1) @ fake_quant_ste(w, b1)) ** 2)
+
+        gx1, gw1 = jax.grad(f_fused, argnums=(0, 1))(x, w)
+        gx2, gw2 = jax.grad(f_composed, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(np.array(gx1), np.array(gx2), rtol=1e-4,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.array(gw1), np.array(gw2), rtol=1e-4,
+                                   atol=1e-5)

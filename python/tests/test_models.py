@@ -1,0 +1,184 @@
+"""L2 model correctness: shapes, masking invariants, training signal.
+
+The width-masking contract is what lets ONE artifact serve the whole search
+space, so it gets the heaviest testing: masked channels must be exactly zero,
+active-channel outputs must be invariant to the existence of masked slots,
+and every (model, width-config) pair must produce finite logits + gradients.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import registry
+from compile.models.common import cmax_of, WIDTH_MULTS
+from compile import train as T
+
+SMALL = ["resnet20", "resnet18", "mobilenetv1", "mobilenetv2", "resnet50s"]
+
+
+def init_params(model, seed=0):
+    rng = np.random.RandomState(seed)
+    out = []
+    for p in model.params:
+        if p.init == "he":
+            out.append(jnp.array(rng.randn(*p.shape).astype(np.float32)
+                                 * np.sqrt(2.0 / p.fan_in)))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, jnp.float32))
+        else:
+            out.append(jnp.zeros(p.shape, jnp.float32))
+    return out
+
+
+def base_widths(model, mult=1.0):
+    return jnp.array([round(l.out_base * mult) for l in model.layers],
+                     jnp.float32)
+
+
+def batch(model, bs=8, seed=0):
+    rng = np.random.RandomState(seed)
+    x = jnp.array(rng.randn(bs, model.image_hw, model.image_hw, 3)
+                  .astype(np.float32))
+    y = jnp.array(rng.randint(0, model.num_classes, bs).astype(np.int32))
+    return x, y
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_forward_shape_and_finite(name):
+    m = registry.BUILDERS[name]()
+    params = init_params(m)
+    x, _ = batch(m)
+    bits = jnp.full((m.num_layers,), 8.0)
+    logits = m.apply(params, x, bits, base_widths(m), quant=True)
+    assert logits.shape == (8, m.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ["resnet20", "mobilenetv1"])
+@pytest.mark.parametrize("mult", WIDTH_MULTS)
+def test_all_width_multipliers(name, mult):
+    m = registry.BUILDERS[name]()
+    params = init_params(m)
+    x, _ = batch(m)
+    bits = jnp.full((m.num_layers,), 6.0)
+    logits = m.apply(params, x, bits, base_widths(m, mult), quant=True)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_quant_fp_agree_at_16_bits():
+    """quant=True at 16 bits ~ the FP graph (hessian program consistency)."""
+    m = registry.resnet20()
+    params = init_params(m)
+    x, _ = batch(m)
+    bits = jnp.full((m.num_layers,), 16.0)
+    w = base_widths(m)
+    lq = m.apply(params, x, bits, w, quant=True)
+    lf = m.apply(params, x, bits, w, quant=False)
+    np.testing.assert_allclose(np.array(lq), np.array(lf), rtol=0.05, atol=0.05)
+
+
+def test_masked_channels_are_inert():
+    """Garbage written into weight channels beyond the active count must not
+    change the logits — the invariant that lets one artifact serve all
+    widths. Conv kernels are matched to layers by name prefix."""
+    m = registry.resnet20()
+    params = init_params(m)
+    x, _ = batch(m)
+    bits = jnp.full((m.num_layers,), 8.0)
+    mult = 0.75
+    w = base_widths(m, mult)
+    logits1 = m.apply(params, x, bits, w, quant=True)
+
+    active_by_layer = {}
+    for l in m.layers:
+        gov = m.layers[l.width_tie]
+        active_by_layer[l.name] = int(round(gov.out_base * mult))
+    rng = np.random.RandomState(7)
+    params2 = []
+    for spec, p in zip(m.params, params):
+        arr = np.array(p).copy()
+        lname = spec.name.rsplit(".", 1)[0]
+        if spec.name.endswith(".w") and lname in active_by_layer and arr.ndim == 4:
+            a = active_by_layer[lname]
+            if a < arr.shape[-1]:
+                arr[..., a:] += rng.randn(*arr[..., a:].shape).astype(np.float32)
+        params2.append(jnp.array(arr))
+    logits2 = m.apply(params2, x, bits, w, quant=True)
+    np.testing.assert_allclose(np.array(logits1), np.array(logits2), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_bits_change_output():
+    m = registry.resnet20()
+    params = init_params(m)
+    x, _ = batch(m)
+    w = base_widths(m)
+    l2 = m.apply(params, x, jnp.full((m.num_layers,), 2.0), w, quant=True)
+    l8 = m.apply(params, x, jnp.full((m.num_layers,), 8.0), w, quant=True)
+    assert float(jnp.max(jnp.abs(l2 - l8))) > 1e-3
+
+
+def test_train_step_reduces_loss():
+    m = registry.resnet20()
+    n = len(m.params)
+    params = init_params(m)
+    x, y = batch(m, bs=32)
+    bits = jnp.full((m.num_layers,), 8.0)
+    w = base_widths(m)
+    ts = jax.jit(T.build_train_step(m))
+    zeros = [jnp.zeros_like(p) for p in params]
+    args = params + zeros + zeros + [jnp.array(0.0), x, y, bits, w,
+                                     jnp.array(3e-3), jnp.array(1e-4)]
+    out = ts(*args)
+    first = float(out[-1])
+    for i in range(12):
+        out = ts(*out[:3 * n], jnp.array(float(i + 1)), x, y, bits, w,
+                 jnp.array(3e-3), jnp.array(1e-4))
+    last = float(out[-1])
+    assert last < first, (first, last)
+
+
+def test_eval_batch_counts():
+    m = registry.resnet20()
+    params = init_params(m)
+    x, y = batch(m, bs=8)
+    ev = jax.jit(T.build_eval_batch(m))
+    correct, loss = ev(*(params + [x, y, jnp.full((m.num_layers,), 8.0),
+                                   base_widths(m)]))
+    assert 0.0 <= float(correct) <= 8.0
+    assert float(loss) > 0.0
+
+
+def test_hessian_trace_shape_and_repeatability():
+    m = registry.resnet20()
+    params = init_params(m)
+    x, y = batch(m, bs=16)
+    hs = jax.jit(T.build_hessian_trace(m))
+    w = base_widths(m)
+    out1 = hs(*(params + [x, y, w, jnp.array(0, jnp.int32)]))[0]
+    out2 = hs(*(params + [x, y, w, jnp.array(0, jnp.int32)]))[0]
+    out3 = hs(*(params + [x, y, w, jnp.array(1, jnp.int32)]))[0]
+    assert out1.shape == (m.num_layers,)
+    np.testing.assert_allclose(np.array(out1), np.array(out2))
+    assert float(jnp.max(jnp.abs(out1 - out3))) > 0.0  # seed matters
+
+
+def test_layer_meta_consistency():
+    for name in SMALL:
+        m = registry.BUILDERS[name]()
+        for l in m.layers:
+            assert l.cmax_out >= l.out_base
+            assert 0 <= l.width_tie < m.num_layers
+            assert 0 <= l.bits_tie < m.num_layers
+            # a width governor must govern itself
+            tie = m.layers[l.width_tie]
+            assert tie.width_tie == tie.index, (name, l.name)
+            if l.kind != "fc":
+                assert l.cmax_out == cmax_of(l.out_base)

@@ -1,0 +1,164 @@
+//! EvoQ/EMQ-style evolutionary search over (bits, widths) genomes.
+//!
+//! Generational GA: tournament parent selection, uniform crossover,
+//! per-gene mutation, elitism of 1. The genome IS the config (one gene per
+//! search dimension), as in EvoQ's per-layer bit chromosome.
+
+use crate::search::{Config, History, Objective, Searcher};
+use crate::util::rng::Rng;
+use crate::util::Timer;
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvolutionaryParams {
+    pub population: usize,
+    pub tournament: usize,
+    pub mutation_rate: f64,
+    pub crossover_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for EvolutionaryParams {
+    fn default() -> Self {
+        EvolutionaryParams {
+            population: 12,
+            tournament: 3,
+            mutation_rate: 0.15,
+            crossover_rate: 0.9,
+            seed: 0,
+        }
+    }
+}
+
+pub struct Evolutionary {
+    pub params: EvolutionaryParams,
+}
+
+impl Evolutionary {
+    pub fn new(params: EvolutionaryParams) -> Evolutionary {
+        Evolutionary { params }
+    }
+}
+
+impl Searcher for Evolutionary {
+    fn name(&self) -> &'static str {
+        "evolutionary"
+    }
+
+    fn run(&mut self, obj: &mut dyn Objective, budget: usize) -> History {
+        let p = self.params;
+        let mut rng = Rng::new(p.seed ^ 0xE401);
+        let mut hist = History::new(self.name());
+        let space = obj.space().clone();
+        let mut evals = 0usize;
+
+        let eval = |cfg: Config, obj: &mut dyn Objective, hist: &mut History| -> f64 {
+            let t = Timer::start();
+            let v = obj.eval(&cfg);
+            hist.push(cfg, v, t.secs());
+            v
+        };
+
+        // Seed population.
+        let pop_n = p.population.min(budget.max(1));
+        let mut pop: Vec<(Config, f64)> = Vec::with_capacity(pop_n);
+        for _ in 0..pop_n {
+            let c = space.sample(&mut rng);
+            let v = eval(c.clone(), obj, &mut hist);
+            pop.push((c, v));
+            evals += 1;
+        }
+
+        while evals < budget {
+            // Elitism: keep the best.
+            let best_idx = (0..pop.len())
+                .max_by(|&a, &b| pop[a].1.partial_cmp(&pop[b].1).unwrap())
+                .unwrap();
+            let elite = pop[best_idx].clone();
+            let mut next = vec![elite];
+
+            while next.len() < pop.len() && evals + next.len() - 1 < budget + pop.len() {
+                // Tournament selection of two parents.
+                let pick = |rng: &mut Rng, pop: &[(Config, f64)]| -> Config {
+                    let mut best: Option<(f64, usize)> = None;
+                    for _ in 0..p.tournament {
+                        let i = rng.below(pop.len());
+                        if best.map_or(true, |(v, _)| pop[i].1 > v) {
+                            best = Some((pop[i].1, i));
+                        }
+                    }
+                    pop[best.unwrap().1].0.clone()
+                };
+                let pa = pick(&mut rng, &pop);
+                let pb = pick(&mut rng, &pop);
+                // Uniform crossover + mutation.
+                let mut child: Config = (0..pa.len())
+                    .map(|g| {
+                        if rng.bool(p.crossover_rate) && rng.bool(0.5) {
+                            pb[g]
+                        } else {
+                            pa[g]
+                        }
+                    })
+                    .collect();
+                for (g, gene) in child.iter_mut().enumerate() {
+                    if rng.bool(p.mutation_rate) {
+                        *gene = rng.below(space.dims[g].k());
+                    }
+                }
+                let v = eval(child.clone(), obj, &mut hist);
+                evals += 1;
+                next.push((child, v));
+                if evals >= budget {
+                    break;
+                }
+            }
+            pop = next;
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::space::{Dim, Space};
+
+    struct OneMax {
+        space: Space,
+    }
+
+    impl Objective for OneMax {
+        fn space(&self) -> &Space {
+            &self.space
+        }
+        fn eval(&mut self, c: &Config) -> f64 {
+            c.iter().filter(|&&g| g == 0).count() as f64
+        }
+    }
+
+    fn onemax(dims: usize) -> OneMax {
+        OneMax {
+            space: Space::new(
+                (0..dims).map(|d| Dim::new(format!("g{d}"), vec![0.0, 1.0, 2.0])).collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn improves_over_generations() {
+        let mut obj = onemax(12);
+        let h = Evolutionary::new(EvolutionaryParams { seed: 2, ..Default::default() })
+            .run(&mut obj, 120);
+        assert_eq!(h.len(), 120);
+        let early: f64 = h.values()[..12].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let late = h.best().unwrap().value;
+        assert!(late >= early + 2.0, "early {early} late {late}");
+    }
+
+    #[test]
+    fn budget_exact() {
+        let mut obj = onemax(4);
+        let h = Evolutionary::new(EvolutionaryParams::default()).run(&mut obj, 17);
+        assert_eq!(h.len(), 17);
+    }
+}

@@ -1,0 +1,222 @@
+//! BOMP-NAS-style Gaussian-process Bayesian optimization.
+//!
+//! BOMP-NAS couples BO with quantization-aware NAS; its search engine is a
+//! GP surrogate + acquisition over the joint (architecture, precision)
+//! space. This baseline reproduces that engine: an RBF-kernel GP over
+//! one-hot-encoded configs, Expected Improvement acquisition maximized over
+//! a random candidate pool, exact Cholesky inference. Its per-iteration cost
+//! is O(n^3) in observed trials — the Table III search-cost comparison
+//! (k-means TPE is ~10x cheaper per proposal at equal budgets) falls out of
+//! exactly this.
+
+use crate::search::{Config, History, Objective, Searcher};
+use crate::util::rng::Rng;
+use crate::util::Timer;
+
+#[derive(Debug, Clone, Copy)]
+pub struct GpBoParams {
+    pub n_startup: usize,
+    pub n_candidates: usize,
+    /// RBF length scale in one-hot Hamming space.
+    pub length_scale: f64,
+    /// Observation noise.
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for GpBoParams {
+    fn default() -> Self {
+        GpBoParams { n_startup: 10, n_candidates: 64, length_scale: 1.5, noise: 1e-4, seed: 0 }
+    }
+}
+
+pub struct GpBo {
+    pub params: GpBoParams,
+}
+
+impl GpBo {
+    pub fn new(params: GpBoParams) -> GpBo {
+        GpBo { params }
+    }
+}
+
+/// Squared Hamming-weighted distance between configs (one-hot L2^2 = 2 * #diff).
+fn sqdist(a: &Config, b: &Config) -> f64 {
+    2.0 * a.iter().zip(b).filter(|(x, y)| x != y).count() as f64
+}
+
+fn rbf(a: &Config, b: &Config, ls: f64) -> f64 {
+    (-sqdist(a, b) / (2.0 * ls * ls)).exp()
+}
+
+/// Cholesky decomposition (in place lower-triangular) of a PD matrix.
+fn cholesky(a: &mut [f64], n: usize) -> bool {
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return false;
+                }
+                a[i * n + j] = s.sqrt();
+            } else {
+                a[i * n + j] = s / a[j * n + j];
+            }
+        }
+        for j in (i + 1)..n {
+            a[i * n + j] = 0.0;
+        }
+    }
+    true
+}
+
+/// Solve L y = b, then L^T x = y.
+fn chol_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+fn normal_pdf(z: f64) -> f64 {
+    (-(z * z) / 2.0).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+fn normal_cdf(z: f64) -> f64 {
+    // Abramowitz-Stegun 7.1.26 erf approximation.
+    let x = z / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    0.5 * (1.0 + if x >= 0.0 { y } else { -y })
+}
+
+impl Searcher for GpBo {
+    fn name(&self) -> &'static str {
+        "gp-bo"
+    }
+
+    fn run(&mut self, obj: &mut dyn Objective, budget: usize) -> History {
+        let p = self.params;
+        let mut rng = Rng::new(p.seed ^ 0x6B0);
+        let mut hist = History::new(self.name());
+        let space = obj.space().clone();
+
+        for i in 0..budget {
+            let config: Config = if i < p.n_startup.min(budget) {
+                space.sample(&mut rng)
+            } else {
+                let n = hist.len();
+                let xs: Vec<&Config> = hist.trials.iter().map(|t| &t.config).collect();
+                let ys: Vec<f64> = hist.values();
+                let y_mean = ys.iter().sum::<f64>() / n as f64;
+                let yc: Vec<f64> = ys.iter().map(|y| y - y_mean).collect();
+                // K + noise I, Cholesky, alpha = K^-1 y.
+                let mut k = vec![0.0; n * n];
+                for a in 0..n {
+                    for b in 0..n {
+                        k[a * n + b] = rbf(xs[a], xs[b], p.length_scale)
+                            + if a == b { p.noise } else { 0.0 };
+                    }
+                }
+                if !cholesky(&mut k, n) {
+                    // Numerical trouble: fall back to random.
+                    space.sample(&mut rng)
+                } else {
+                    let alpha = chol_solve(&k, n, &yc);
+                    let best_y = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let mut best: Option<(f64, Config)> = None;
+                    for _ in 0..p.n_candidates {
+                        let cand = space.sample(&mut rng);
+                        let kx: Vec<f64> =
+                            xs.iter().map(|x| rbf(&cand, x, p.length_scale)).collect();
+                        let mu =
+                            y_mean + kx.iter().zip(&alpha).map(|(a, b)| a * b).sum::<f64>();
+                        let v = chol_solve(&k, n, &kx);
+                        let var = (1.0 + p.noise
+                            - kx.iter().zip(&v).map(|(a, b)| a * b).sum::<f64>())
+                        .max(1e-12);
+                        let sd = var.sqrt();
+                        let z = (mu - best_y) / sd;
+                        let ei = (mu - best_y) * normal_cdf(z) + sd * normal_pdf(z);
+                        if best.as_ref().map_or(true, |(b, _)| ei > *b) {
+                            best = Some((ei, cand));
+                        }
+                    }
+                    best.unwrap().1
+                }
+            };
+            let t = Timer::start();
+            let value = obj.eval(&config);
+            hist.push(config, value, t.secs());
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::space::{Dim, Space};
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = [[4,2],[2,3]], b = [1, 2] => x = [-1/8, 3/4]
+        let mut a = vec![4.0, 2.0, 2.0, 3.0];
+        assert!(cholesky(&mut a, 2));
+        let x = chol_solve(&a, 2, &[1.0, 2.0]);
+        assert!((x[0] + 0.125).abs() < 1e-10, "{x:?}");
+        assert!((x[1] - 0.75).abs() < 1e-10);
+    }
+
+    #[test]
+    fn cdf_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-6);
+        assert!(normal_cdf(3.0) > 0.99);
+        assert!(normal_cdf(-3.0) < 0.01);
+    }
+
+    struct Quad {
+        space: Space,
+    }
+
+    impl Objective for Quad {
+        fn space(&self) -> &Space {
+            &self.space
+        }
+        fn eval(&mut self, c: &Config) -> f64 {
+            -(c.iter().map(|&g| (g as f64 - 1.0).powi(2)).sum::<f64>())
+        }
+    }
+
+    #[test]
+    fn finds_quadratic_optimum() {
+        let mut obj = Quad {
+            space: Space::new(
+                (0..5).map(|d| Dim::new(format!("d{d}"), vec![0.0, 1.0, 2.0, 3.0])).collect(),
+            ),
+        };
+        let h = GpBo::new(GpBoParams { seed: 6, ..Default::default() }).run(&mut obj, 60);
+        assert!(h.best().unwrap().value >= -1.0, "best {}", h.best().unwrap().value);
+    }
+}

@@ -1,0 +1,28 @@
+//! Baseline search strategies the paper compares against (Table II/III).
+//!
+//! Each is a faithful *algorithmic* reimplementation of the published search
+//! rule, run against the same evaluator + hardware objective as k-means TPE
+//! so comparisons isolate the search strategy:
+//!
+//! * `random`      — uniform random search (the sanity floor).
+//! * `evolutionary`— EvoQ/EMQ-style: tournament selection + mutation +
+//!                   uniform crossover over (bits, widths) genomes.
+//! * `reinforce`   — HAQ/AutoQ/ReLeQ-style RL: a factorized categorical
+//!                   policy trained with REINFORCE + EMA baseline.
+//! * `gp_bo`       — BOMP-NAS-style Bayesian optimization: an RBF-kernel
+//!                   Gaussian process over one-hot configs with Expected
+//!                   Improvement acquisition.
+//! * `sensitivity` — HAWQ-style one-shot assignment: bits by Hessian-trace
+//!                   ranking under a size budget (no search loop at all).
+//! * `uniform`     — PACT/fixed-bit QAT config generators.
+
+pub mod random_search;
+pub mod evolutionary;
+pub mod reinforce;
+pub mod gp_bo;
+pub mod sensitivity;
+
+pub use evolutionary::{Evolutionary, EvolutionaryParams};
+pub use gp_bo::{GpBo, GpBoParams};
+pub use random_search::RandomSearch;
+pub use reinforce::{Reinforce, ReinforceParams};

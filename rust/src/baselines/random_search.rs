@@ -1,0 +1,66 @@
+//! Uniform random search.
+
+use crate::search::{History, Objective, Searcher};
+use crate::util::rng::Rng;
+use crate::util::Timer;
+
+pub struct RandomSearch {
+    pub seed: u64,
+}
+
+impl RandomSearch {
+    pub fn new(seed: u64) -> RandomSearch {
+        RandomSearch { seed }
+    }
+}
+
+impl Searcher for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn run(&mut self, obj: &mut dyn Objective, budget: usize) -> History {
+        let mut rng = Rng::new(self.seed ^ 0x7A4D);
+        let mut hist = History::new(self.name());
+        let space = obj.space().clone();
+        for _ in 0..budget {
+            let config = space.sample(&mut rng);
+            let t = Timer::start();
+            let value = obj.eval(&config);
+            hist.push(config, value, t.secs());
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::space::{Config, Dim, Space};
+
+    struct Count {
+        space: Space,
+        calls: usize,
+    }
+
+    impl Objective for Count {
+        fn space(&self) -> &Space {
+            &self.space
+        }
+        fn eval(&mut self, c: &Config) -> f64 {
+            self.calls += 1;
+            c[0] as f64
+        }
+    }
+
+    #[test]
+    fn explores_and_respects_budget() {
+        let mut obj = Count {
+            space: Space::new(vec![Dim::new("a", vec![0.0, 1.0, 2.0, 3.0])]),
+            calls: 0,
+        };
+        let h = RandomSearch::new(1).run(&mut obj, 40);
+        assert_eq!(obj.calls, 40);
+        assert_eq!(h.best().unwrap().value, 3.0); // 40 draws over 4 choices
+    }
+}

@@ -1,0 +1,133 @@
+//! HAQ/AutoQ/ReLeQ-style RL quantization search, distilled to its core:
+//! a factorized categorical policy π(config) = Π_d π_d(choice) trained with
+//! REINFORCE and an EMA reward baseline. (The cited works use DDPG/PPO
+//! agents over per-layer actions; the factorized policy-gradient agent keeps
+//! the same action space and reward signal while staying dependency-free.)
+//!
+//! This baseline demonstrates the paper's §II critique: RL needs many more
+//! environment interactions (= config trainings) to focus than model-based
+//! search needs.
+
+use crate::search::{Config, History, Objective, Searcher};
+use crate::util::rng::Rng;
+use crate::util::Timer;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ReinforceParams {
+    pub lr: f64,
+    /// EMA factor for the reward baseline.
+    pub baseline_decay: f64,
+    /// Entropy bonus to delay premature collapse.
+    pub entropy_beta: f64,
+    pub seed: u64,
+}
+
+impl Default for ReinforceParams {
+    fn default() -> Self {
+        ReinforceParams { lr: 0.25, baseline_decay: 0.9, entropy_beta: 0.01, seed: 0 }
+    }
+}
+
+pub struct Reinforce {
+    pub params: ReinforceParams,
+}
+
+impl Reinforce {
+    pub fn new(params: ReinforceParams) -> Reinforce {
+        Reinforce { params }
+    }
+}
+
+fn softmax(logits: &[f64]) -> Vec<f64> {
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+impl Searcher for Reinforce {
+    fn name(&self) -> &'static str {
+        "reinforce"
+    }
+
+    fn run(&mut self, obj: &mut dyn Objective, budget: usize) -> History {
+        let p = self.params;
+        let mut rng = Rng::new(p.seed ^ 0x5E1F);
+        let mut hist = History::new(self.name());
+        let space = obj.space().clone();
+        let mut logits: Vec<Vec<f64>> =
+            space.dims.iter().map(|d| vec![0.0; d.k()]).collect();
+        let mut baseline = 0.0;
+        let mut baseline_init = false;
+
+        for _ in 0..budget {
+            // Sample a config from the policy.
+            let probs: Vec<Vec<f64>> = logits.iter().map(|l| softmax(l)).collect();
+            let config: Config = probs.iter().map(|pd| rng.weighted(pd)).collect();
+            let t = Timer::start();
+            let reward = obj.eval(&config);
+            hist.push(config.clone(), reward, t.secs());
+
+            if !baseline_init {
+                baseline = reward;
+                baseline_init = true;
+            }
+            let advantage = reward - baseline;
+            baseline = p.baseline_decay * baseline + (1.0 - p.baseline_decay) * reward;
+
+            // ∇ log π = (1[chosen] - π) per dim; entropy grad = -π(logπ+H)…
+            // (approximated by a uniform pull, sufficient for the bonus role).
+            for (d, &choice) in config.iter().enumerate() {
+                let pd = &probs[d];
+                for c in 0..pd.len() {
+                    let indicator = if c == choice { 1.0 } else { 0.0 };
+                    let grad = advantage * (indicator - pd[c])
+                        + p.entropy_beta * (1.0 / pd.len() as f64 - pd[c]);
+                    logits[d][c] += p.lr * grad;
+                }
+            }
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::space::{Dim, Space};
+
+    struct Peak {
+        space: Space,
+    }
+
+    impl Objective for Peak {
+        fn space(&self) -> &Space {
+            &self.space
+        }
+        fn eval(&mut self, c: &Config) -> f64 {
+            c.iter().filter(|&&g| g == 1).count() as f64
+        }
+    }
+
+    #[test]
+    fn policy_concentrates_on_reward() {
+        let mut obj = Peak {
+            space: Space::new(
+                (0..6).map(|d| Dim::new(format!("d{d}"), vec![0.0, 1.0, 2.0])).collect(),
+            ),
+        };
+        let h = Reinforce::new(ReinforceParams { seed: 4, ..Default::default() })
+            .run(&mut obj, 150);
+        // Late samples should be markedly better than early ones.
+        let early: f64 = h.values()[..20].iter().sum::<f64>() / 20.0;
+        let late: f64 = h.values()[130..].iter().sum::<f64>() / 20.0;
+        assert!(late > early + 1.0, "early {early:.2} late {late:.2}");
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+}

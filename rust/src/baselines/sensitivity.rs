@@ -1,0 +1,109 @@
+//! HAWQ/HAWQ-V2-style sensitivity-ranked one-shot bit assignment, and the
+//! PACT-style uniform-precision configs.
+//!
+//! HAWQ ranks layers by (normalized) Hessian trace and assigns precision
+//! greedily — high-trace layers keep high bits — subject to a model-size
+//! budget. There is no search loop; the §II critique (no activation-aware
+//! feedback, gradients from the FP model only) is inherent to the method and
+//! shows up as a quality gap in Table II.
+
+use crate::hessian::pruner::FULL_BITS;
+
+/// Assign per-layer bits by sensitivity rank under a size budget.
+///
+/// * `normalized` — per-layer normalized Hessian traces (bits-free layers).
+/// * `weights`    — per-layer weight counts (same order).
+/// * `budget_bits`— total weight-storage budget in bits.
+///
+/// Greedy: start everyone at the lowest precision; repeatedly upgrade the
+/// most sensitive layer (by normalized trace x remaining headroom) that
+/// still fits the budget, until nothing fits.
+pub fn hawq_assign(normalized: &[f64], weights: &[u64], budget_bits: u64) -> Vec<f64> {
+    let n = normalized.len();
+    assert_eq!(n, weights.len());
+    // Bit ladder from lowest to highest.
+    let mut ladder: Vec<f64> = FULL_BITS.to_vec();
+    ladder.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut level = vec![0usize; n]; // index into ladder
+    let mut used: u64 = weights
+        .iter()
+        .map(|&w| w * ladder[0] as u64)
+        .sum();
+
+    loop {
+        // Candidate upgrades: (priority, layer, cost).
+        let mut best: Option<(f64, usize, u64)> = None;
+        for l in 0..n {
+            if level[l] + 1 >= ladder.len() {
+                continue;
+            }
+            let delta_bits = (ladder[level[l] + 1] - ladder[level[l]]) as u64;
+            let cost = weights[l] * delta_bits;
+            if used + cost > budget_bits {
+                continue;
+            }
+            // Priority: sensitivity per added bit of storage.
+            let prio = normalized[l] / cost.max(1) as f64;
+            if best.map_or(true, |(p, _, _)| prio > p) {
+                best = Some((prio, l, cost));
+            }
+        }
+        match best {
+            Some((_, l, cost)) => {
+                level[l] += 1;
+                used += cost;
+            }
+            None => break,
+        }
+    }
+    level.iter().map(|&i| ladder[i]).collect()
+}
+
+/// PACT-style uniform assignment: every layer at `bits`.
+pub fn uniform_assign(n_layers: usize, bits: f64) -> Vec<f64> {
+    vec![bits; n_layers]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sensitive_layers_upgraded_first() {
+        let normalized = [10.0, 0.1, 5.0];
+        let weights = [100u64, 100, 100];
+        // Budget: lowest (2b) for all = 600; allow ~2 upgrades worth.
+        let bits = hawq_assign(&normalized, &weights, 1100);
+        assert!(bits[0] > bits[1], "{bits:?}");
+        assert!(bits[2] > bits[1], "{bits:?}");
+        // Budget respected.
+        let used: u64 = bits.iter().zip(&weights).map(|(&b, &w)| w * b as u64).sum();
+        assert!(used <= 1100);
+    }
+
+    #[test]
+    fn tight_budget_keeps_everyone_low() {
+        let bits = hawq_assign(&[1.0, 1.0], &[1000, 1000], 4000);
+        assert_eq!(bits, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn loose_budget_maxes_out() {
+        let bits = hawq_assign(&[1.0, 2.0], &[10, 10], 1_000_000);
+        assert_eq!(bits, vec![8.0, 8.0]);
+    }
+
+    #[test]
+    fn big_layers_cost_more_to_upgrade() {
+        // Equal sensitivity, very different sizes: the small layer should be
+        // upgraded preferentially (better sensitivity-per-bit).
+        let bits = hawq_assign(&[1.0, 1.0], &[10_000, 10], 10_000 * 2 + 10 * 2 + 100);
+        assert!(bits[1] > bits[0], "{bits:?}");
+    }
+
+    #[test]
+    fn uniform_is_uniform() {
+        assert_eq!(uniform_assign(3, 4.0), vec![4.0, 4.0, 4.0]);
+    }
+}

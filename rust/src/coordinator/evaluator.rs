@@ -1,0 +1,322 @@
+//! DnnObjective: the hardware-aware composite objective of §III-C, evaluated
+//! by proxy QAT through the PJRT runtime.
+//!
+//! J(x) = acc(x) − λ_µ·max(0, size(x)/µ − 1) − λ_τ·max(0, lat(x)/τ − 1)
+//!
+//! (the Lagrangian relaxation of the paper's constrained maximization, with
+//! the model-size and latency constraints the paper focuses on). Accuracy
+//! comes from fine-tuning the shared pretrained snapshot for a few proxy
+//! "epochs" under the candidate (bits, widths); size and latency come from
+//! the analytic hardware model.
+
+use crate::hessian::pruner::{PrunedSpace, FULL_BITS};
+use crate::hw::latency::{baseline_latency_cycles, latency_cycles};
+use crate::hw::HwConfig;
+use crate::runtime::ModelMeta;
+use crate::search::space::{Config, Dim, Space};
+use crate::search::Objective;
+use crate::train::session::{ModelSession, ParamSnapshot};
+
+/// What each search dimension controls.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DimKind {
+    /// Bit-width of layer `l` (a bits-free layer).
+    Bits(usize),
+    /// Width multiplier of governor layer `l`.
+    Width(usize),
+}
+
+/// A built search space + its dimension mapping.
+#[derive(Debug, Clone)]
+pub struct SpaceBuild {
+    pub space: Space,
+    pub kinds: Vec<DimKind>,
+}
+
+/// Build the joint (bits, widths) space from layer metadata, optionally
+/// pruned by Hessian clustering (§III-A). Width dims always use the full S
+/// (the paper does not prune the width subspace — see footnote 1).
+pub fn build_space(meta: &ModelMeta, pruned: Option<&PrunedSpace>) -> SpaceBuild {
+    let mut dims = Vec::new();
+    let mut kinds = Vec::new();
+    for l in &meta.layers {
+        if l.bits_free {
+            let menu: Vec<f64> = match pruned {
+                Some(p) => p.menu_for_layer(l.index).to_vec(),
+                None => FULL_BITS.to_vec(),
+            };
+            dims.push(Dim::new(format!("bits:{}", l.name), menu));
+            kinds.push(DimKind::Bits(l.index));
+        }
+    }
+    for l in &meta.layers {
+        if l.width_free() {
+            dims.push(Dim::new(
+                format!("width:{}", l.name),
+                meta.width_mults.clone(),
+            ));
+            kinds.push(DimKind::Width(l.index));
+        }
+    }
+    SpaceBuild { space: Space::new(dims), kinds }
+}
+
+impl SpaceBuild {
+    /// Decode a config into full per-layer (bits, widths) runtime vectors.
+    pub fn decode(&self, meta: &ModelMeta, config: &Config) -> (Vec<f32>, Vec<f32>) {
+        let values = self.space.values(config);
+        let mut bits_of = vec![8.0f64; meta.num_layers];
+        let mut mult_of = vec![1.0f64; meta.num_layers];
+        for (i, kind) in self.kinds.iter().enumerate() {
+            match *kind {
+                DimKind::Bits(l) => bits_of[l] = values[i],
+                DimKind::Width(l) => mult_of[l] = values[i],
+            }
+        }
+        meta.resolve(|l| bits_of[l], |l| mult_of[l])
+    }
+}
+
+/// Evaluation knobs (proxy-training regime + constraint weights).
+#[derive(Debug, Clone, Copy)]
+pub struct ObjectiveCfg {
+    /// Fine-tune steps per configuration (the paper's "4 epochs" proxy).
+    pub steps_per_eval: usize,
+    /// Validation batches per accuracy estimate.
+    pub eval_batches: usize,
+    pub max_lr: f64,
+    /// Model-size budget µ in MB.
+    pub size_budget_mb: f64,
+    /// Latency budget τ in ms (f64::INFINITY disables).
+    pub latency_budget_ms: f64,
+    pub lambda_size: f64,
+    pub lambda_latency: f64,
+    /// Energy budget ε in uJ/image (INFINITY disables).
+    pub energy_budget_uj: f64,
+    pub lambda_energy: f64,
+    /// Throughput floor π in images/s (0 disables).
+    pub throughput_min: f64,
+    pub lambda_throughput: f64,
+}
+
+impl Default for ObjectiveCfg {
+    fn default() -> Self {
+        ObjectiveCfg {
+            steps_per_eval: 30,
+            eval_batches: 4,
+            max_lr: 3e-3,
+            size_budget_mb: f64::INFINITY,
+            latency_budget_ms: f64::INFINITY,
+            lambda_size: 2.0,
+            lambda_latency: 2.0,
+            energy_budget_uj: f64::INFINITY,
+            lambda_energy: 2.0,
+            throughput_min: 0.0,
+            lambda_throughput: 2.0,
+        }
+    }
+}
+
+/// One evaluated configuration with all its metrics (drives Fig. 4 and the
+/// tables).
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub config: Config,
+    pub accuracy: f64,
+    pub size_mb: f64,
+    pub latency_ms: f64,
+    pub speedup: f64,
+    pub value: f64,
+}
+
+pub struct DnnObjective<'a> {
+    pub session: &'a ModelSession,
+    pub pretrained: ParamSnapshot,
+    pub build: SpaceBuild,
+    pub hw: HwConfig,
+    pub cfg: ObjectiveCfg,
+    /// Every evaluation, in order (the search-space scatter of Fig. 4).
+    pub log: Vec<EvalRecord>,
+    /// FiP16 @ mult 1.0 baseline latency (cycles), computed once.
+    baseline_cycles: f64,
+}
+
+impl<'a> DnnObjective<'a> {
+    pub fn new(
+        session: &'a ModelSession,
+        pretrained: ParamSnapshot,
+        build: SpaceBuild,
+        hw: HwConfig,
+        cfg: ObjectiveCfg,
+    ) -> DnnObjective<'a> {
+        let meta = &session.meta;
+        let (b16, w10) = meta.resolve(|_| 16.0, |_| 1.0);
+        let baseline_cycles = baseline_latency_cycles(&hw, &meta.net_shape(&b16, &w10));
+        DnnObjective { session, pretrained, build, hw, cfg, log: Vec::new(), baseline_cycles }
+    }
+
+    /// Hardware metrics only (no training) — used by one-shot baselines too.
+    pub fn hw_metrics(&self, bits: &[f32], widths: &[f32]) -> (f64, f64, f64) {
+        let net = self.session.meta.net_shape(bits, widths);
+        let size_mb = net.model_size_mb();
+        let cycles = latency_cycles(&self.hw, &net);
+        let lat_ms = self.hw.cycles_to_ms(cycles);
+        let speedup = self.baseline_cycles / cycles;
+        (size_mb, lat_ms, speedup)
+    }
+
+    /// Energy (uJ/image) and throughput (images/s) under a configuration —
+    /// the ε and π terms of the paper's constrained formulation (§III-C).
+    pub fn hw_energy_throughput(&self, bits: &[f32], widths: &[f32]) -> (f64, f64) {
+        let net = self.session.meta.net_shape(bits, widths);
+        let energy = crate::hw::energy::energy_uj(&self.hw, &net).total_uj();
+        let lat_ms = self.hw.cycles_to_ms(latency_cycles(&self.hw, &net));
+        (energy, 1e3 / lat_ms.max(1e-9))
+    }
+
+    /// Proxy-QAT accuracy of a resolved configuration.
+    pub fn measure_accuracy(&self, bits: &[f32], widths: &[f32]) -> anyhow::Result<f64> {
+        let mut state = self.session.state_from_snapshot(&self.pretrained)?;
+        self.session
+            .train(&mut state, bits, widths, self.cfg.steps_per_eval, self.cfg.max_lr)?;
+        self.session.evaluate(&state, bits, widths, self.cfg.eval_batches)
+    }
+
+    pub fn composite(&self, acc: f64, size_mb: f64, lat_ms: f64) -> f64 {
+        let size_pen = if self.cfg.size_budget_mb.is_finite() {
+            self.cfg.lambda_size * (size_mb / self.cfg.size_budget_mb - 1.0).max(0.0)
+        } else {
+            0.0
+        };
+        let lat_pen = if self.cfg.latency_budget_ms.is_finite() {
+            self.cfg.lambda_latency * (lat_ms / self.cfg.latency_budget_ms - 1.0).max(0.0)
+        } else {
+            0.0
+        };
+        acc - size_pen - lat_pen
+    }
+
+    /// Full Lagrangian with all four paper constraints (µ, τ, ε, π).
+    pub fn composite_full(
+        &self,
+        acc: f64,
+        size_mb: f64,
+        lat_ms: f64,
+        energy_uj: f64,
+        throughput: f64,
+    ) -> f64 {
+        let mut j = self.composite(acc, size_mb, lat_ms);
+        if self.cfg.energy_budget_uj.is_finite() {
+            j -= self.cfg.lambda_energy
+                * (energy_uj / self.cfg.energy_budget_uj - 1.0).max(0.0);
+        }
+        if self.cfg.throughput_min > 0.0 {
+            j -= self.cfg.lambda_throughput
+                * (1.0 - throughput / self.cfg.throughput_min).max(0.0);
+        }
+        j
+    }
+}
+
+impl<'a> Objective for DnnObjective<'a> {
+    fn space(&self) -> &Space {
+        &self.build.space
+    }
+
+    fn eval(&mut self, config: &Config) -> f64 {
+        let meta = &self.session.meta;
+        let (bits, widths) = self.build.decode(meta, config);
+        let (size_mb, lat_ms, speedup) = self.hw_metrics(&bits, &widths);
+        let accuracy = match self.measure_accuracy(&bits, &widths) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("[objective] eval failed: {e:#}");
+                0.0
+            }
+        };
+        let value = if self.cfg.energy_budget_uj.is_finite() || self.cfg.throughput_min > 0.0 {
+            let (e, tput) = self.hw_energy_throughput(&bits, &widths);
+            self.composite_full(accuracy, size_mb, lat_ms, e, tput)
+        } else {
+            self.composite(accuracy, size_mb, lat_ms)
+        };
+        self.log.push(EvalRecord {
+            config: config.clone(),
+            accuracy,
+            size_mb,
+            latency_ms: lat_ms,
+            speedup,
+            value,
+        });
+        value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::meta::ModelMeta;
+
+    fn mini_meta() -> ModelMeta {
+        ModelMeta::parse(
+            r#"{
+          "model":"mini","dataset":"cifar10","num_classes":10,
+          "image_hw":16,"batch":32,"num_layers":3,
+          "width_mults":[0.75,1.0,1.25],
+          "params":[],
+          "layers":[
+            {"index":0,"name":"stem","kind":"conv","ksize":3,"stride":1,"in_base":3,
+             "out_base":8,"cmax_in":3,"cmax_out":10,"out_h":16,"out_w":16,
+             "width_tie":0,"bits_tie":0,"width_fixed":false,"bits_free":true},
+            {"index":1,"name":"c1","kind":"conv","ksize":3,"stride":1,"in_base":8,
+             "out_base":8,"cmax_in":10,"cmax_out":10,"out_h":16,"out_w":16,
+             "width_tie":0,"bits_tie":1,"width_fixed":false,"bits_free":true},
+            {"index":2,"name":"fc","kind":"fc","ksize":1,"stride":1,"in_base":8,
+             "out_base":10,"cmax_in":10,"cmax_out":10,"out_h":1,"out_w":1,
+             "width_tie":0,"bits_tie":2,"width_fixed":true,"bits_free":true}
+          ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn space_dims_respect_freedom() {
+        let meta = mini_meta();
+        let b = build_space(&meta, None);
+        // 3 bits dims + 1 width dim (only layer 0 is a free governor).
+        assert_eq!(b.space.num_dims(), 4);
+        assert_eq!(
+            b.kinds,
+            vec![DimKind::Bits(0), DimKind::Bits(1), DimKind::Bits(2), DimKind::Width(0)]
+        );
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        let meta = mini_meta();
+        let b = build_space(&meta, None);
+        // bits choices: FULL_BITS = [8,6,4,3,2]; widths: [0.75,1.0,1.25].
+        let cfg = vec![0usize, 2, 4, 2]; // 8, 4, 2 bits; width 1.25
+        let (bits, widths) = b.decode(&meta, &cfg);
+        assert_eq!(bits, vec![8.0, 4.0, 2.0]);
+        assert_eq!(widths[0], 10.0); // 1.25 * 8
+        assert_eq!(widths[1], 10.0); // tied to governor 0
+        assert_eq!(widths[2], 10.0); // fc fixed = out_base
+    }
+
+    #[test]
+    fn pruned_space_is_smaller() {
+        let meta = mini_meta();
+        let full = build_space(&meta, None);
+        let pruned = PrunedSpace {
+            cluster: vec![0, 1, 1],
+            menus: vec![vec![8.0, 6.0], vec![3.0, 2.0]],
+            normalized: vec![1.0, 0.1, 0.1],
+        };
+        let small = build_space(&meta, Some(&pruned));
+        assert!(small.space.cardinality() < full.space.cardinality());
+        // Layer 0 (cluster 0) keeps high bits.
+        assert_eq!(small.space.dims[0].choices, vec![8.0, 6.0]);
+    }
+}

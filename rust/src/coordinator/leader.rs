@@ -1,0 +1,254 @@
+//! Leader: the end-to-end pipeline of Alg. 1.
+//!
+//!   1. pretrain the FP16 model (bits=16, widths=1.0),
+//!   2. estimate per-layer Hessian traces (Hutchinson) + prune the space,
+//!   3. run the configured searcher over the pruned joint space,
+//!   4. train the winning configuration longer ("final training"),
+//!   5. emit a SearchReport (metrics for the tables + the full trial log).
+
+use anyhow::Result;
+
+use crate::baselines::{Evolutionary, EvolutionaryParams, GpBo, GpBoParams, RandomSearch,
+                       Reinforce, ReinforceParams};
+use crate::coordinator::evaluator::{build_space, DnnObjective, EvalRecord, ObjectiveCfg,
+                                    SpaceBuild};
+use crate::hessian::pruner::{prune_space, PrunedSpace};
+use crate::hw::HwConfig;
+use crate::search::{History, KmeansTpe, KmeansTpeParams, Searcher, Tpe, TpeParams};
+use crate::train::session::ModelSession;
+use crate::util::Timer;
+
+#[derive(Debug, Clone, Copy)]
+pub struct LeaderCfg {
+    pub seed: u64,
+    /// FP pretraining steps (the "pretrained model" the paper starts from).
+    pub pretrain_steps: usize,
+    pub pretrain_lr: f64,
+    /// Hutchinson samples for trace estimation.
+    pub hessian_samples: usize,
+    /// k for the §III-A sensitivity clustering.
+    pub sensitivity_clusters: usize,
+    /// Search budget n and startup n0 (Alg. 1).
+    pub n_evals: usize,
+    pub n_startup: usize,
+    /// Final-training steps for the winning config.
+    pub final_steps: usize,
+    pub final_lr: f64,
+    pub objective: ObjectiveCfg,
+    /// Skip Hessian pruning (ablation).
+    pub prune: bool,
+}
+
+impl Default for LeaderCfg {
+    fn default() -> Self {
+        LeaderCfg {
+            seed: 0,
+            pretrain_steps: 150,
+            pretrain_lr: 3e-3,
+            hessian_samples: 4,
+            sensitivity_clusters: 4,
+            n_evals: 40,
+            n_startup: 10,
+            final_steps: 300,
+            final_lr: 3e-3,
+            objective: ObjectiveCfg::default(),
+            prune: true,
+        }
+    }
+}
+
+/// Which search algorithm the leader drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    KmeansTpe,
+    Tpe,
+    Random,
+    Evolutionary,
+    Reinforce,
+    GpBo,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s {
+            "kmeans-tpe" | "kmeans_tpe" | "ours" => Some(Algo::KmeansTpe),
+            "tpe" => Some(Algo::Tpe),
+            "random" => Some(Algo::Random),
+            "evolutionary" | "evo" => Some(Algo::Evolutionary),
+            "reinforce" | "rl" => Some(Algo::Reinforce),
+            "gp-bo" | "gp_bo" | "bomp" => Some(Algo::GpBo),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::KmeansTpe => "kmeans-tpe",
+            Algo::Tpe => "tpe",
+            Algo::Random => "random",
+            Algo::Evolutionary => "evolutionary",
+            Algo::Reinforce => "reinforce",
+            Algo::GpBo => "gp-bo",
+        }
+    }
+}
+
+/// Everything the experiment drivers need.
+pub struct SearchReport {
+    pub tag: String,
+    pub algo: &'static str,
+    pub history: History,
+    pub records: Vec<EvalRecord>,
+    pub pruned: Option<PrunedSpace>,
+    pub build: SpaceBuild,
+    /// Best record by composite objective.
+    pub best: EvalRecord,
+    /// Best config retrained for final_steps: (accuracy, size, latency, speedup).
+    pub final_accuracy: f64,
+    pub final_size_mb: f64,
+    pub final_latency_ms: f64,
+    pub final_speedup: f64,
+    /// FiP16 baseline accuracy + size (trained for the same final budget).
+    pub baseline_accuracy: f64,
+    pub baseline_size_mb: f64,
+    /// Wall-clock costs (the Table III search-cost column).
+    pub pretrain_secs: f64,
+    pub search_secs: f64,
+    pub final_secs: f64,
+}
+
+pub struct Leader<'a> {
+    pub session: &'a ModelSession,
+    pub cfg: LeaderCfg,
+    pub hw: HwConfig,
+}
+
+impl<'a> Leader<'a> {
+    pub fn new(session: &'a ModelSession, cfg: LeaderCfg, hw: HwConfig) -> Leader<'a> {
+        Leader { session, cfg, hw }
+    }
+
+    fn make_searcher(&self, algo: Algo) -> Box<dyn Searcher> {
+        let seed = self.cfg.seed;
+        let n0 = self.cfg.n_startup;
+        match algo {
+            Algo::KmeansTpe => Box::new(KmeansTpe::new(KmeansTpeParams {
+                n_startup: n0,
+                seed,
+                ..Default::default()
+            })),
+            Algo::Tpe => {
+                Box::new(Tpe::new(TpeParams { n_startup: n0, seed, ..Default::default() }))
+            }
+            Algo::Random => Box::new(RandomSearch::new(seed)),
+            Algo::Evolutionary => Box::new(Evolutionary::new(EvolutionaryParams {
+                seed,
+                ..Default::default()
+            })),
+            Algo::Reinforce => {
+                Box::new(Reinforce::new(ReinforceParams { seed, ..Default::default() }))
+            }
+            Algo::GpBo => Box::new(GpBo::new(GpBoParams {
+                n_startup: n0,
+                seed,
+                ..Default::default()
+            })),
+        }
+    }
+
+    /// Run the full pipeline with the given algorithm.
+    pub fn run(&self, algo: Algo) -> Result<SearchReport> {
+        let sess = self.session;
+        let meta = &sess.meta;
+        let cfg = &self.cfg;
+
+        // 1. FP pretraining.
+        let t_pre = Timer::start();
+        let snap0 = sess.init_snapshot(cfg.seed);
+        let mut state = sess.state_from_snapshot(&snap0)?;
+        let bits16 = meta.uniform_bits(16.0);
+        let widths1 = meta.base_widths();
+        sess.train(&mut state, &bits16, &widths1, cfg.pretrain_steps, cfg.pretrain_lr)?;
+        let pretrained = sess.snapshot_of(&state)?;
+        let pretrain_secs = t_pre.secs();
+
+        // Baseline (FiP16) metrics: continue the FP model to the final budget.
+        let mut base_state = sess.state_from_snapshot(&pretrained)?;
+        sess.train(&mut base_state, &bits16, &widths1, cfg.final_steps, cfg.final_lr)?;
+        let baseline_accuracy = sess.evaluate(
+            &base_state,
+            &bits16,
+            &widths1,
+            cfg.objective.eval_batches.max(8),
+        )?;
+        let (b16, w10) = meta.resolve(|_| 16.0, |_| 1.0);
+        let baseline_size_mb = meta.net_shape(&b16, &w10).model_size_mb();
+
+        // 2. Sensitivity analysis + pruning (§III-A).
+        let pruned = if cfg.prune {
+            let traces = sess.hessian_traces(&state, &widths1, cfg.hessian_samples)?;
+            // Weight counts per layer from the hw shape at base width.
+            let net = meta.net_shape(&bits16, &widths1);
+            let counts: Vec<usize> =
+                net.layers.iter().map(|l| l.weights() as usize).collect();
+            Some(prune_space(&traces, &counts, cfg.sensitivity_clusters))
+        } else {
+            None
+        };
+
+        // 3. Search.
+        let build = build_space(meta, pruned.as_ref());
+        let mut objective = DnnObjective::new(
+            sess,
+            pretrained.clone(),
+            build.clone(),
+            self.hw,
+            cfg.objective,
+        );
+        let t_search = Timer::start();
+        let mut searcher = self.make_searcher(algo);
+        let history = searcher.run(&mut objective, cfg.n_evals);
+        let search_secs = t_search.secs();
+        let records = objective.log.clone();
+        let best_trial = history.best().expect("non-empty history");
+        let best = records
+            .iter()
+            .find(|r| r.config == best_trial.config)
+            .expect("best record")
+            .clone();
+
+        // 4. Final training of the winner.
+        let t_final = Timer::start();
+        let (bits, widths) = build.decode(meta, &best.config);
+        let mut final_state = sess.state_from_snapshot(&pretrained)?;
+        sess.train(&mut final_state, &bits, &widths, cfg.final_steps, cfg.final_lr)?;
+        let final_accuracy = sess.evaluate(
+            &final_state,
+            &bits,
+            &widths,
+            cfg.objective.eval_batches.max(8),
+        )?;
+        let final_secs = t_final.secs();
+        let (final_size_mb, final_latency_ms, final_speedup) =
+            objective.hw_metrics(&bits, &widths);
+
+        Ok(SearchReport {
+            tag: sess.tag.clone(),
+            algo: algo.name(),
+            history,
+            records,
+            pruned,
+            build,
+            best,
+            final_accuracy,
+            final_size_mb,
+            final_latency_ms,
+            final_speedup,
+            baseline_accuracy,
+            baseline_size_mb,
+            pretrain_secs,
+            search_secs,
+            final_secs,
+        })
+    }
+}

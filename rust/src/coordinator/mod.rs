@@ -1,0 +1,21 @@
+//! L3 coordinator — the paper's system glued together.
+//!
+//! `evaluator` turns (meta.json, pruned space, hardware model, proxy QAT
+//! runs) into a single `Objective` the searchers maximize; `leader` runs the
+//! full §Alg.1 pipeline (pretrain -> Hessian pruning -> k-means TPE search ->
+//! final training); `report` renders/dumps results for the experiment
+//! drivers in `exp/`.
+//!
+//! Evaluation is sequential on this single-core testbed: PJRT executables
+//! are not Send in the `xla` crate, so scale-out is process-level (one
+//! leader, N worker processes each owning a model session) — the leader/
+//! worker split is preserved in the CLI (`sammpq search --role worker` would
+//! shard trial ranges), while in-process evaluation stays on the hot path.
+
+pub mod evaluator;
+pub mod service;
+pub mod leader;
+pub mod report;
+
+pub use evaluator::{build_space, DimKind, DnnObjective, EvalRecord, ObjectiveCfg, SpaceBuild};
+pub use leader::{Algo, Leader, LeaderCfg, SearchReport};

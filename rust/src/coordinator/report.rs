@@ -1,0 +1,176 @@
+//! Rendering + persistence of experiment results: fixed-width text tables
+//! (what the benches print), CSV series (figures), and JSON dumps.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::{arr_f64, obj, Json};
+
+/// Fixed-width text table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String| {
+            for (i, w) in widths.iter().enumerate() {
+                let _ = write!(out, "+{}", "-".repeat(w + 2));
+                if i + 1 == ncol {
+                    out.push_str("+\n");
+                }
+            }
+        };
+        line(&mut out);
+        for (i, h) in self.headers.iter().enumerate() {
+            let _ = write!(out, "| {h:<w$} ", w = widths[i]);
+        }
+        out.push_str("|\n");
+        line(&mut out);
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                let _ = write!(out, "| {c:<w$} ", w = widths[i]);
+            }
+            out.push_str("|\n");
+        }
+        line(&mut out);
+        out
+    }
+}
+
+/// Simple CSV writer for figure series.
+pub fn write_csv(path: &Path, headers: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    let mut s = headers.join(",");
+    s.push('\n');
+    for r in rows {
+        let cells: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+        s.push_str(&cells.join(","));
+        s.push('\n');
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+/// ASCII line "plot" of one or more best-so-far curves (for terminal output
+/// of the figure benches).
+pub fn ascii_curves(title: &str, names: &[&str], curves: &[Vec<f64>], height: usize) -> String {
+    let width: usize = curves.iter().map(|c| c.len()).max().unwrap_or(0);
+    let lo = curves
+        .iter()
+        .flat_map(|c| c.iter().cloned())
+        .fold(f64::INFINITY, f64::min);
+    let hi = curves
+        .iter()
+        .flat_map(|c| c.iter().cloned())
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let marks = ['#', 'o', '+', 'x', '*'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (ci, curve) in curves.iter().enumerate() {
+        for (x, &v) in curve.iter().enumerate() {
+            let y = ((v - lo) / span * (height - 1) as f64).round() as usize;
+            let y = height - 1 - y.min(height - 1);
+            grid[y][x] = marks[ci % marks.len()];
+        }
+    }
+    let mut out = format!("-- {title} --\n");
+    let _ = writeln!(out, "   max {hi:.4}");
+    for row in grid {
+        out.push_str("   |");
+        out.extend(row);
+        out.push('\n');
+    }
+    let _ = writeln!(out, "   min {lo:.4}  ({} evals)", width);
+    for (ci, n) in names.iter().enumerate() {
+        let _ = writeln!(out, "   {} = {}", marks[ci % marks.len()], n);
+    }
+    out
+}
+
+/// Persist a search report's essentials as JSON.
+pub fn report_json(
+    algo: &str,
+    tag: &str,
+    curve: &[f64],
+    best_value: f64,
+    search_secs: f64,
+) -> Json {
+    obj(vec![
+        ("algo", Json::Str(algo.to_string())),
+        ("tag", Json::Str(tag.to_string())),
+        ("curve", arr_f64(curve)),
+        ("best_value", Json::Num(best_value)),
+        ("search_secs", Json::Num(search_secs)),
+    ])
+}
+
+pub fn save_json(path: &Path, j: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, j.to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["name", "value"]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["longer-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("longer-name"));
+        // All data lines have equal width.
+        let widths: Vec<usize> =
+            s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn ascii_curves_draws() {
+        let s = ascii_curves("conv", &["a", "b"], &[vec![0.0, 0.5, 1.0], vec![0.2, 0.2, 0.4]], 5);
+        assert!(s.contains('#') && s.contains('o'));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = std::env::temp_dir().join("sammpq_test.csv");
+        write_csv(&p, &["a", "b"], &[vec![1.0, 2.0], vec![3.0, 4.5]]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "a,b\n1,2\n3,4.5\n");
+        let _ = std::fs::remove_file(&p);
+    }
+}

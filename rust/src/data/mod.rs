@@ -1,0 +1,17 @@
+//! Datasets.
+//!
+//! The paper's image datasets (CIFAR-10/100, ImageNet) and tabular datasets
+//! (Iris, Titanic) are not available in this offline environment, so each is
+//! substituted with a synthetic generator that preserves the property the
+//! experiment depends on (DESIGN.md §2): a learnable, non-trivially-separable
+//! class structure producing a real accuracy landscape over (bits, widths)
+//! for the image sets, and the same dimensionality / objective shape for the
+//! tabular hyperparameter-tuning studies.
+
+pub mod synth;
+pub mod iris;
+pub mod titanic;
+pub mod tabular;
+
+pub use synth::{ImageDataset, SynthSpec};
+pub use tabular::TabularDataset;

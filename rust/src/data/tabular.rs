@@ -1,0 +1,84 @@
+//! Row-major tabular dataset used by the classic-ML substrate (`mlbase`).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TabularDataset {
+    /// Row-major: `features[row * num_features + col]`.
+    pub features: Vec<f64>,
+    /// Regression target or class label (as f64; classifiers round).
+    pub targets: Vec<f64>,
+    pub num_features: usize,
+    pub feature_names: Vec<String>,
+}
+
+impl TabularDataset {
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.features[i * self.num_features..(i + 1) * self.num_features]
+    }
+
+    /// Deterministic train/test split: shuffles indices with `seed` and
+    /// returns (train, test) with `test_frac` of rows in the test set.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (TabularDataset, TabularDataset) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let n_test = ((self.len() as f64) * test_frac).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        (self.subset(train_idx), self.subset(test_idx))
+    }
+
+    pub fn subset(&self, rows: &[usize]) -> TabularDataset {
+        let mut features = Vec::with_capacity(rows.len() * self.num_features);
+        let mut targets = Vec::with_capacity(rows.len());
+        for &r in rows {
+            features.extend_from_slice(self.row(r));
+            targets.push(self.targets[r]);
+        }
+        TabularDataset {
+            features,
+            targets,
+            num_features: self.num_features,
+            feature_names: self.feature_names.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> TabularDataset {
+        TabularDataset {
+            features: (0..20).map(|i| i as f64).collect(),
+            targets: (0..10).map(|i| (i % 2) as f64).collect(),
+            num_features: 2,
+            feature_names: vec!["a".into(), "b".into()],
+        }
+    }
+
+    #[test]
+    fn row_access() {
+        let d = toy();
+        assert_eq!(d.row(3), &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy();
+        let (tr, te) = d.split(0.3, 42);
+        assert_eq!(tr.len() + te.len(), d.len());
+        assert_eq!(te.len(), 3);
+        // Deterministic.
+        let (tr2, _) = d.split(0.3, 42);
+        assert_eq!(tr.features, tr2.features);
+    }
+}

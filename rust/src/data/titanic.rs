@@ -1,0 +1,126 @@
+//! Titanic-like dataset (Fig. 3b substrate).
+//!
+//! Synthetic survival-prediction task with the same schema and approximate
+//! joint structure as the Kaggle Titanic set (891 passengers): survival
+//! probability follows a logistic model in (sex, class, age, fare) with
+//! historically-plausible coefficients, and the features are correlated the
+//! way the real data is (fare with class, age mildly with class). Gradient
+//! boosting hyperparameter tuning over it behaves like the real thing: there
+//! is real signal, label noise, and diminishing returns to model capacity.
+
+use super::tabular::TabularDataset;
+use crate::util::rng::Rng;
+
+pub const N_PASSENGERS: usize = 891;
+
+pub fn load(seed: u64) -> TabularDataset {
+    let mut rng = Rng::new(seed ^ 0x7174_1912);
+    let mut features = Vec::with_capacity(N_PASSENGERS * 7);
+    let mut targets = Vec::with_capacity(N_PASSENGERS);
+    for _ in 0..N_PASSENGERS {
+        // pclass: 1..3 with historical proportions (~24%, 21%, 55%).
+        let u = rng.f64();
+        let pclass = if u < 0.24 {
+            1.0
+        } else if u < 0.45 {
+            2.0
+        } else {
+            3.0
+        };
+        // sex: ~35% female.
+        let female = if rng.bool(0.35) { 1.0 } else { 0.0 };
+        // age: class-correlated (1st class older).
+        let age = (38.0 - 4.0 * (pclass - 1.0) + 13.0 * rng.gauss()).clamp(0.5, 80.0);
+        let sibsp = rng.weighted(&[0.68, 0.23, 0.06, 0.02, 0.01]) as f64;
+        let parch = rng.weighted(&[0.76, 0.13, 0.09, 0.02]) as f64;
+        // fare: strongly class-dependent, log-normal-ish.
+        let base_fare = match pclass as u32 {
+            1 => 84.0,
+            2 => 20.0,
+            _ => 13.0,
+        };
+        let fare = (base_fare * (0.3 + 1.4 * rng.f64()) + 3.0 * rng.gauss().abs())
+            .max(0.0);
+        let embarked = rng.weighted(&[0.72, 0.19, 0.09]) as f64;
+
+        // Survival: logistic in the known drivers ("women and children
+        // first", class gradient, fare bonus).
+        let logit = -0.6 + 2.5 * female - 0.85 * (pclass - 1.0)
+            - 0.022 * (age - 30.0)
+            + 0.004 * fare.min(100.0)
+            - 0.25 * (sibsp + parch - 1.0).max(0.0);
+        let p = 1.0 / (1.0 + (-logit).exp());
+        let survived = if rng.bool(p) { 1.0 } else { 0.0 };
+
+        features.extend_from_slice(&[pclass, female, age, sibsp, parch, fare, embarked]);
+        targets.push(survived);
+    }
+    TabularDataset {
+        features,
+        targets,
+        num_features: 7,
+        feature_names: vec![
+            "pclass".into(),
+            "female".into(),
+            "age".into(),
+            "sibsp".into(),
+            "parch".into(),
+            "fare".into(),
+            "embarked".into(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape() {
+        let d = load(0);
+        assert_eq!(d.len(), N_PASSENGERS);
+        assert_eq!(d.num_features, 7);
+    }
+
+    #[test]
+    fn survival_rate_plausible() {
+        let d = load(0);
+        let rate = d.targets.iter().sum::<f64>() / d.len() as f64;
+        assert!((0.30..0.55).contains(&rate), "rate={rate}");
+    }
+
+    #[test]
+    fn women_survive_more() {
+        let d = load(0);
+        let (mut fs, mut fn_, mut ms, mut mn) = (0.0, 0.0, 0.0, 0.0);
+        for i in 0..d.len() {
+            let female = d.row(i)[1] == 1.0;
+            let s = d.targets[i];
+            if female {
+                fs += s;
+                fn_ += 1.0;
+            } else {
+                ms += s;
+                mn += 1.0;
+            }
+        }
+        assert!(fs / fn_ > ms / mn + 0.3, "female {} male {}", fs / fn_, ms / mn);
+    }
+
+    #[test]
+    fn first_class_survives_more_than_third() {
+        let d = load(0);
+        let rate = |cls: f64| {
+            let mut s = 0.0;
+            let mut n = 0.0;
+            for i in 0..d.len() {
+                if d.row(i)[0] == cls {
+                    s += d.targets[i];
+                    n += 1.0;
+                }
+            }
+            s / n
+        };
+        assert!(rate(1.0) > rate(3.0) + 0.2);
+    }
+}

@@ -1,0 +1,270 @@
+//! Fig. 3 — convergence of TPE vs k-means TPE on three workloads:
+//!   (a) random-forest regression hyperparameters on Iris,
+//!   (b) gradient-boosting classification hyperparameters on Titanic,
+//!   (c) ResNet-18 mixed-precision + width search on CIFAR-100-proxy.
+//!
+//! Protocol (paper §IV-A): (a,b) n0=20, n=100, k=4, α=0.98; (c) n0=40,
+//! n=160 (scaled to the effort level on this testbed). Reported: best-so-far
+//! curves averaged over seeds + evaluations-to-best ratio.
+
+use anyhow::Result;
+
+use crate::coordinator::report::{ascii_curves, write_csv, Table};
+use crate::coordinator::{build_space, DnnObjective, ObjectiveCfg};
+use crate::data::{iris, titanic, TabularDataset};
+use crate::exp::{results_dir, Effort};
+use crate::hw::HwConfig;
+use crate::mlbase::metrics::{accuracy, r2_score};
+use crate::mlbase::{GbmClassifier, GbmParams, RandomForestParams, RandomForestRegressor};
+use crate::search::space::{Config, Dim, Space};
+use crate::search::{KmeansTpe, KmeansTpeParams, Objective, Searcher, Tpe, TpeParams};
+use crate::train::ModelSession;
+use crate::util::stats;
+
+// ---------------------------------------------------------------------------
+// (a) Random forest on Iris
+// ---------------------------------------------------------------------------
+
+pub struct RfIrisObjective {
+    space: Space,
+    train: TabularDataset,
+    test: TabularDataset,
+}
+
+impl RfIrisObjective {
+    pub fn new(seed: u64) -> RfIrisObjective {
+        let d = iris::load(seed);
+        let (train, test) = d.split(0.3, seed ^ 1);
+        // Paper dims: number of trees, max depth, min samples split.
+        let space = Space::new(vec![
+            Dim::new("n_trees", vec![5.0, 10.0, 25.0, 50.0, 100.0, 200.0]),
+            Dim::new("max_depth", vec![1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0]),
+            Dim::new("min_samples_split", vec![2.0, 4.0, 8.0, 16.0, 32.0]),
+        ]);
+        RfIrisObjective { space, train, test }
+    }
+}
+
+impl Objective for RfIrisObjective {
+    fn space(&self) -> &Space {
+        &self.space
+    }
+
+    fn eval(&mut self, config: &Config) -> f64 {
+        let v = self.space.values(config);
+        let rf = RandomForestRegressor::fit(
+            &self.train,
+            RandomForestParams {
+                n_trees: v[0] as usize,
+                max_depth: v[1] as usize,
+                min_samples_split: v[2] as usize,
+                max_features: 2,
+                seed: 17,
+            },
+        );
+        r2_score(&self.test.targets, &rf.predict(&self.test))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) Gradient boosting on Titanic
+// ---------------------------------------------------------------------------
+
+pub struct GbmTitanicObjective {
+    space: Space,
+    train: TabularDataset,
+    test: TabularDataset,
+}
+
+impl GbmTitanicObjective {
+    pub fn new(seed: u64) -> GbmTitanicObjective {
+        let d = titanic::load(seed);
+        let (train, test) = d.split(0.25, seed ^ 1);
+        // Paper dims: lr, stages, max depth, min split, min leaf, max features.
+        let space = Space::new(vec![
+            Dim::new("learning_rate", vec![0.01, 0.03, 0.05, 0.1, 0.2, 0.3]),
+            Dim::new("n_stages", vec![10.0, 25.0, 50.0, 100.0, 150.0]),
+            Dim::new("max_depth", vec![1.0, 2.0, 3.0, 4.0, 5.0]),
+            Dim::new("min_samples_split", vec![2.0, 4.0, 8.0, 16.0]),
+            Dim::new("min_samples_leaf", vec![1.0, 2.0, 4.0, 8.0]),
+            Dim::new("max_features", vec![0.0, 2.0, 3.0, 5.0]),
+        ]);
+        GbmTitanicObjective { space, train, test }
+    }
+}
+
+impl Objective for GbmTitanicObjective {
+    fn space(&self) -> &Space {
+        &self.space
+    }
+
+    fn eval(&mut self, config: &Config) -> f64 {
+        let v = self.space.values(config);
+        let gbm = GbmClassifier::fit(
+            &self.train,
+            GbmParams {
+                learning_rate: v[0],
+                n_stages: v[1] as usize,
+                max_depth: v[2] as usize,
+                min_samples_split: v[3] as usize,
+                min_samples_leaf: v[4] as usize,
+                max_features: v[5] as usize,
+                subsample: 1.0,
+                seed: 23,
+            },
+        );
+        accuracy(&self.test.targets, &gbm.predict(&self.test))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runner
+// ---------------------------------------------------------------------------
+
+fn mean_curves(curves: &[Vec<f64>]) -> Vec<f64> {
+    let n = curves.iter().map(|c| c.len()).min().unwrap_or(0);
+    (0..n)
+        .map(|i| curves.iter().map(|c| c[i]).sum::<f64>() / curves.len() as f64)
+        .collect()
+}
+
+/// Median evaluations to reach within `eps` of each run's own final best.
+fn evals_to_conv(curves: &[Vec<f64>], eps: f64) -> f64 {
+    let per: Vec<f64> = curves
+        .iter()
+        .map(|c| {
+            let target = *c.last().unwrap() - eps;
+            stats::first_reach(c, target, 0.0).map(|i| (i + 1) as f64).unwrap_or(c.len() as f64)
+        })
+        .collect();
+    stats::quantile(&per, 0.5)
+}
+
+fn run_pair<F: Fn(u64) -> Box<dyn Objective>>(
+    make: F,
+    n0: usize,
+    budget: usize,
+    seeds: u64,
+) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let mut km = Vec::new();
+    let mut tp = Vec::new();
+    for seed in 0..seeds {
+        let mut obj = make(seed);
+        let h = KmeansTpe::new(KmeansTpeParams { n_startup: n0, seed, ..Default::default() })
+            .run(obj.as_mut(), budget);
+        km.push(h.convergence_curve());
+        let mut obj = make(seed);
+        let h = Tpe::new(TpeParams { n_startup: n0, seed, ..Default::default() })
+            .run(obj.as_mut(), budget);
+        tp.push(h.convergence_curve());
+    }
+    (km, tp)
+}
+
+/// Fig. 3a + 3b (tabular workloads, pure Rust substrate).
+pub fn run_tabular(effort: Effort) -> Result<String> {
+    let (budget, seeds) = match effort {
+        Effort::Quick => (60, 3),
+        Effort::Paper => (100, 5),
+    };
+    let mut out = String::new();
+    let mut table = Table::new(
+        "Fig. 3a/3b — convergence: evaluations to reach final best (median)",
+        &["workload", "kmeans-tpe", "tpe", "ratio (tpe/km)", "km best", "tpe best"],
+    );
+
+    for (name, eps, mk) in [
+        (
+            "rf-iris",
+            0.005,
+            Box::new(|s: u64| -> Box<dyn Objective> { Box::new(RfIrisObjective::new(s)) })
+                as Box<dyn Fn(u64) -> Box<dyn Objective>>,
+        ),
+        (
+            "gbm-titanic",
+            0.005,
+            Box::new(|s: u64| -> Box<dyn Objective> { Box::new(GbmTitanicObjective::new(s)) }),
+        ),
+    ] {
+        let (km, tp) = run_pair(&mk, 20, budget, seeds);
+        let km_mean = mean_curves(&km);
+        let tp_mean = mean_curves(&tp);
+        let km_conv = evals_to_conv(&km, eps);
+        let tp_conv = evals_to_conv(&tp, eps);
+        table.row(vec![
+            name.to_string(),
+            format!("{km_conv:.0}"),
+            format!("{tp_conv:.0}"),
+            format!("{:.2}x", tp_conv / km_conv.max(1.0)),
+            format!("{:.4}", km_mean.last().unwrap()),
+            format!("{:.4}", tp_mean.last().unwrap()),
+        ]);
+        out.push_str(&ascii_curves(
+            &format!("Fig3 {name}: best-so-far (mean over {seeds} seeds)"),
+            &["kmeans-tpe", "tpe"],
+            &[km_mean.clone(), tp_mean.clone()],
+            10,
+        ));
+        let rows: Vec<Vec<f64>> = (0..km_mean.len())
+            .map(|i| vec![i as f64 + 1.0, km_mean[i], tp_mean[i]])
+            .collect();
+        write_csv(
+            &results_dir().join(format!("fig3_{name}.csv")),
+            &["eval", "kmeans_tpe", "tpe"],
+            &rows,
+        )?;
+    }
+    out.push_str(&table.render());
+    Ok(out)
+}
+
+/// Fig. 3c (DNN workload through the PJRT runtime).
+pub fn run_dnn(sess: &ModelSession, effort: Effort) -> Result<String> {
+    let (budget, n0, steps) = match effort {
+        Effort::Quick => (24, 8, 16),
+        Effort::Paper => (160, 40, 30),
+    };
+    // Pretrain once; share the snapshot between both searchers.
+    let snap = sess.init_snapshot(3);
+    let mut state = sess.state_from_snapshot(&snap)?;
+    let bits16 = sess.meta.uniform_bits(16.0);
+    let widths1 = sess.meta.base_widths();
+    sess.train(&mut state, &bits16, &widths1, 120, 3e-3)?;
+    let pretrained = sess.snapshot_of(&state)?;
+
+    let build = build_space(&sess.meta, None);
+    let cfg = ObjectiveCfg {
+        steps_per_eval: steps,
+        eval_batches: 3,
+        size_budget_mb: sess.meta.net_shape(&bits16, &widths1).model_size_mb() * 0.2,
+        ..Default::default()
+    };
+    let mut curves = Vec::new();
+    for (_name, is_km) in [("kmeans-tpe", true), ("tpe", false)] {
+        let mut obj =
+            DnnObjective::new(sess, pretrained.clone(), build.clone(), HwConfig::default(), cfg);
+        let h = if is_km {
+            KmeansTpe::new(KmeansTpeParams { n_startup: n0, seed: 5, ..Default::default() })
+                .run(&mut obj, budget)
+        } else {
+            Tpe::new(TpeParams { n_startup: n0, seed: 5, ..Default::default() })
+                .run(&mut obj, budget)
+        };
+        curves.push(h.convergence_curve());
+    }
+    let out = ascii_curves(
+        &format!("Fig3c {}: best-so-far composite objective", sess.tag),
+        &["kmeans-tpe", "tpe"],
+        &curves,
+        10,
+    );
+    let rows: Vec<Vec<f64>> = (0..curves[0].len().min(curves[1].len()))
+        .map(|i| vec![i as f64 + 1.0, curves[0][i], curves[1][i]])
+        .collect();
+    write_csv(
+        &results_dir().join("fig3c_dnn.csv"),
+        &["eval", "kmeans_tpe", "tpe"],
+        &rows,
+    )?;
+    Ok(out)
+}

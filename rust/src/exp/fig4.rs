@@ -1,0 +1,89 @@
+//! Fig. 4 — the explored search space for ResNet-18 compression: every
+//! sampled configuration as an (accuracy, model-size) point, plus the best
+//! configuration the search returns.
+
+use anyhow::Result;
+
+use crate::coordinator::report::write_csv;
+use crate::coordinator::{Algo, Leader, LeaderCfg};
+use crate::exp::{results_dir, Effort};
+use crate::hw::HwConfig;
+use crate::train::ModelSession;
+
+pub fn run(sess: &ModelSession, effort: Effort) -> Result<String> {
+    let cfg = match effort {
+        Effort::Quick => LeaderCfg {
+            pretrain_steps: 100,
+            n_evals: 20,
+            n_startup: 8,
+            final_steps: 120,
+            objective: crate::coordinator::ObjectiveCfg {
+                steps_per_eval: 14,
+                eval_batches: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        Effort::Paper => LeaderCfg {
+            pretrain_steps: 200,
+            n_evals: 80,
+            n_startup: 20,
+            final_steps: 400,
+            ..Default::default()
+        },
+    };
+    let leader = Leader::new(sess, cfg, HwConfig::default());
+    let report = leader.run(Algo::KmeansTpe)?;
+
+    // Scatter: size (x) vs accuracy (y), ASCII.
+    let pts: Vec<(f64, f64)> =
+        report.records.iter().map(|r| (r.size_mb, r.accuracy)).collect();
+    let (w, h) = (56usize, 14usize);
+    let (xmin, xmax) = pts
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), p| (a.min(p.0), b.max(p.0)));
+    let (ymin, ymax) = pts
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), p| (a.min(p.1), b.max(p.1)));
+    let xs = (xmax - xmin).max(1e-9);
+    let ys = (ymax - ymin).max(1e-9);
+    let mut grid = vec![vec![' '; w]; h];
+    for &(x, y) in &pts {
+        let gx = (((x - xmin) / xs) * (w - 1) as f64).round() as usize;
+        let gy = h - 1 - (((y - ymin) / ys) * (h - 1) as f64).round() as usize;
+        grid[gy][gx] = 'o';
+    }
+    let bx = (((report.best.size_mb - xmin) / xs) * (w - 1) as f64).round() as usize;
+    let by = h - 1 - (((report.best.accuracy - ymin) / ys) * (h - 1) as f64).round() as usize;
+    grid[by][bx] = '*';
+
+    let mut out = format!(
+        "== Fig. 4 — search space explored ({}, kmeans-tpe, {} evals) ==\n\
+         acc {ymax:.3}\n",
+        sess.tag,
+        report.records.len()
+    );
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "  acc {ymin:.3}   size: {xmin:.3} MB .. {xmax:.3} MB\n\
+         * best: acc {:.3}, size {:.3} MB, speedup {:.2}x (final acc {:.3})\n",
+        report.best.accuracy, report.best.size_mb, report.best.speedup,
+        report.final_accuracy
+    ));
+
+    let rows: Vec<Vec<f64>> = report
+        .records
+        .iter()
+        .map(|r| vec![r.size_mb, r.accuracy, r.latency_ms, r.value])
+        .collect();
+    write_csv(
+        &results_dir().join("fig4_space.csv"),
+        &["size_mb", "accuracy", "latency_ms", "objective"],
+        &rows,
+    )?;
+    Ok(out)
+}

@@ -1,0 +1,37 @@
+//! Experiment drivers: one module per table/figure of the paper's evaluation
+//! (DESIGN.md §4 maps each to its bench target). Every driver returns the
+//! rendered text it printed and persists CSV/JSON series under `results/`.
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod ablations;
+
+use std::path::PathBuf;
+
+pub fn results_dir() -> PathBuf {
+    let p = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Effort scaling shared by drivers: "quick" (CI/bench default), "paper"
+/// (the full protocol scaled to this testbed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    Quick,
+    Paper,
+}
+
+impl Effort {
+    pub fn parse(s: &str) -> Effort {
+        match s {
+            "paper" | "full" => Effort::Paper,
+            _ => Effort::Quick,
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Table II — accuracy / model size / speedup across models, datasets and
+//! quantization approaches.
+//!
+//! Rows per (model, dataset) block:
+//!   Baseline  — FiP16 at width 1.0 (trained to the same final budget).
+//!   PACT-like — uniform 4-bit QAT (fixed precision, no search).
+//!   HAWQ-like — Hessian-ranked one-shot mixed precision under the size
+//!               budget our winner achieves (sensitivity-based, §II).
+//!   EvoQ-like — evolutionary search over the same space.
+//!   HAQ/ReLeQ-like — REINFORCE policy search over the same space.
+//!   Ours      — Hessian-pruned k-means TPE (full Alg. 1 pipeline).
+//!
+//! Shape expectation (not absolute numbers — different substrate): Ours
+//! matches baseline accuracy at the smallest size and best speedup; the
+//! one-shot/uniform baselines trade markedly worse.
+
+use anyhow::Result;
+
+use crate::baselines::sensitivity::{hawq_assign, uniform_assign};
+use crate::coordinator::evaluator::build_space;
+use crate::coordinator::report::Table;
+use crate::coordinator::{Algo, DnnObjective, Leader, LeaderCfg, ObjectiveCfg};
+use crate::exp::Effort;
+use crate::hw::HwConfig;
+use crate::runtime::Runtime;
+use crate::train::ModelSession;
+
+pub struct BlockCfg {
+    pub tag: &'static str,
+    pub steps_per_eval: usize,
+    pub n_evals: usize,
+    pub final_steps: usize,
+}
+
+pub fn blocks(effort: Effort) -> Vec<BlockCfg> {
+    let scale = |q: usize, p: usize| if effort == Effort::Quick { q } else { p };
+    // Quick effort covers three representative blocks (one per dataset
+    // family, incl. the depthwise MobileNet topology); --effort paper runs
+    // all six of Table II's model x dataset blocks.
+    let all = vec![
+        BlockCfg {
+            tag: "resnet20-cifar10",
+            steps_per_eval: scale(8, 20),
+            n_evals: scale(14, 40),
+            final_steps: scale(160, 400),
+        },
+        BlockCfg {
+            tag: "resnet18-cifar100",
+            steps_per_eval: scale(8, 20),
+            n_evals: scale(12, 40),
+            final_steps: scale(140, 400),
+        },
+        BlockCfg {
+            tag: "mobilenetv1-cifar100",
+            steps_per_eval: scale(6, 16),
+            n_evals: scale(10, 32),
+            final_steps: scale(120, 320),
+        },
+        BlockCfg {
+            tag: "resnet18-imagenet",
+            steps_per_eval: scale(6, 16),
+            n_evals: scale(10, 32),
+            final_steps: scale(120, 320),
+        },
+        BlockCfg {
+            tag: "mobilenetv2-imagenet",
+            steps_per_eval: scale(6, 16),
+            n_evals: scale(10, 32),
+            final_steps: scale(120, 320),
+        },
+        BlockCfg {
+            tag: "resnet50s-imagenet",
+            steps_per_eval: scale(5, 12),
+            n_evals: scale(8, 24),
+            final_steps: scale(100, 280),
+        },
+    ];
+    match effort {
+        Effort::Paper => all,
+        Effort::Quick => all
+            .into_iter()
+            .filter(|b| {
+                ["resnet20-cifar10", "resnet18-imagenet", "mobilenetv1-cifar100"]
+                    .contains(&b.tag)
+            })
+            .collect(),
+    }
+}
+
+/// Evaluate a FIXED bits assignment (one-shot baselines): fine-tune from the
+/// pretrained snapshot for the final budget and report metrics.
+fn eval_fixed(
+    obj: &DnnObjective,
+    sess: &ModelSession,
+    bits: &[f32],
+    widths: &[f32],
+    final_steps: usize,
+) -> Result<(f64, f64, f64, f64)> {
+    let mut state = sess.state_from_snapshot(&obj.pretrained)?;
+    sess.train(&mut state, bits, widths, final_steps, 3e-3)?;
+    let acc = sess.evaluate(&state, bits, widths, 8)?;
+    let (size, lat, speedup) = obj.hw_metrics(bits, widths);
+    Ok((acc, size, speedup, lat))
+}
+
+/// One (model, dataset) block: run every approach, return the rendered rows.
+pub fn run_block(rt: &Runtime, block: &BlockCfg, table: &mut Table) -> Result<()> {
+    let sess = ModelSession::open(rt, block.tag, 1024, 512)?;
+    let meta = &sess.meta;
+    // The paper's compression regime: search under a budget of ~20% of the
+    // FiP16 model size (Table II achieves 5-11x compression).
+    let (b16, w10) = meta.resolve(|_| 16.0, |_| 1.0);
+    let fp16_mb = meta.net_shape(&b16, &w10).model_size_mb();
+    let cfg = LeaderCfg {
+        pretrain_steps: 120,
+        n_evals: block.n_evals,
+        n_startup: (block.n_evals / 3).max(4),
+        final_steps: block.final_steps,
+        objective: ObjectiveCfg {
+            steps_per_eval: block.steps_per_eval,
+            eval_batches: 3,
+            size_budget_mb: fp16_mb * 0.2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let leader = Leader::new(&sess, cfg, HwConfig::default());
+
+    // Ours (also produces the shared pretrained snapshot + baseline row).
+    let ours = leader.run(Algo::KmeansTpe)?;
+    table.row(vec![
+        block.tag.to_string(),
+        "Baseline (FiP16)".to_string(),
+        format!("{:.3}", ours.baseline_accuracy),
+        format!("{:.4}", ours.baseline_size_mb),
+        "1.00x".to_string(),
+    ]);
+
+    // Shared objective helper for the one-shot baselines (reuses the same
+    // pretrained snapshot via a fresh leader-run? No — reuse ours' spaces).
+    let build = build_space(meta, None);
+    let pretrained = {
+        // Recover the pretrained snapshot: re-run the deterministic pretrain.
+        let snap = sess.init_snapshot(cfg.seed);
+        let mut st = sess.state_from_snapshot(&snap)?;
+        sess.train(
+            &mut st,
+            &meta.uniform_bits(16.0),
+            &meta.base_widths(),
+            cfg.pretrain_steps,
+            cfg.pretrain_lr,
+        )?;
+        sess.snapshot_of(&st)?
+    };
+    let obj = DnnObjective::new(&sess, pretrained, build, HwConfig::default(), cfg.objective);
+
+    // PACT-like uniform 4-bit.
+    {
+        let bits_vec = uniform_assign(meta.num_layers, 4.0);
+        let bits: Vec<f32> = bits_vec.iter().map(|&b| b as f32).collect();
+        let widths = meta.base_widths();
+        let (acc, size, speedup, _lat) =
+            eval_fixed(&obj, &sess, &bits, &widths, block.final_steps)?;
+        table.row(vec![
+            block.tag.to_string(),
+            "PACT-like (4/4)".to_string(),
+            format!("{acc:.3}"),
+            format!("{size:.4}"),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+
+    // HAWQ-like: sensitivity-ranked under ours' achieved size budget.
+    {
+        let state = sess.state_from_snapshot(&obj.pretrained)?;
+        let traces = sess.hessian_traces(&state, &meta.base_widths(), 3)?;
+        let net = meta.net_shape(&meta.uniform_bits(16.0), &meta.base_widths());
+        let weights: Vec<u64> = net.layers.iter().map(|l| l.weights()).collect();
+        let budget_bits = (ours.final_size_mb * 1e6 * 8.0) as u64;
+        let assigned = hawq_assign(&traces, &weights, budget_bits);
+        let bits: Vec<f32> = assigned.iter().map(|&b| b as f32).collect();
+        let widths = meta.base_widths();
+        let (acc, size, speedup, _lat) =
+            eval_fixed(&obj, &sess, &bits, &widths, block.final_steps)?;
+        table.row(vec![
+            block.tag.to_string(),
+            "HAWQ-like (MP)".to_string(),
+            format!("{acc:.3}"),
+            format!("{size:.4}"),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+
+    // Search baselines: evolutionary (EvoQ/EMQ), REINFORCE (HAQ/ReLeQ).
+    for (label, algo) in
+        [("EvoQ-like", Algo::Evolutionary), ("HAQ/ReLeQ-like (RL)", Algo::Reinforce)]
+    {
+        let r = leader.run(algo)?;
+        table.row(vec![
+            block.tag.to_string(),
+            label.to_string(),
+            format!("{:.3}", r.final_accuracy),
+            format!("{:.4}", r.final_size_mb),
+            format!("{:.2}x", r.final_speedup),
+        ]);
+    }
+
+    table.row(vec![
+        block.tag.to_string(),
+        "Ours (kmeans-TPE)".to_string(),
+        format!("{:.3}", ours.final_accuracy),
+        format!("{:.4}", ours.final_size_mb),
+        format!("{:.2}x", ours.final_speedup),
+    ]);
+    Ok(())
+}
+
+pub fn run(rt: &Runtime, effort: Effort, only: Option<&str>) -> Result<String> {
+    let mut table = Table::new(
+        "Table II — accuracy / model size / speedup across approaches",
+        &["model-dataset", "approach", "accuracy", "size (MB)", "speedup"],
+    );
+    for block in blocks(effort) {
+        if let Some(o) = only {
+            if o != block.tag {
+                continue;
+            }
+        }
+        run_block(rt, &block, &mut table)?;
+    }
+    Ok(table.render())
+}

@@ -1,0 +1,71 @@
+//! Table IV — the actual configurations returned by k-means TPE: per-layer
+//! bit-widths and layer-width multipliers for representative models.
+//!
+//! The qualitative signature to reproduce: the search occasionally WIDENS a
+//! layer (mult > 1) precisely where it quantizes aggressively (2-3 bits) —
+//! the joint-optimization trade the paper highlights.
+
+use anyhow::Result;
+
+use crate::coordinator::evaluator::DimKind;
+use crate::coordinator::{Algo, Leader, LeaderCfg, ObjectiveCfg, SearchReport};
+use crate::hw::HwConfig;
+use crate::runtime::Runtime;
+use crate::train::ModelSession;
+
+/// Render the winning config of a finished search as the paper does: the
+/// full per-layer bits row + per-layer width-multiplier row.
+pub fn render_config(report: &SearchReport, sess: &ModelSession) -> String {
+    let meta = &sess.meta;
+    let (bits, widths) = report.build.decode(meta, &report.best.config);
+    let mults: Vec<String> = meta
+        .layers
+        .iter()
+        .map(|l| format!("{:.3}", widths[l.index] as f64 / l.out_base.max(1) as f64))
+        .collect();
+    let bit_strs: Vec<String> = bits.iter().map(|b| format!("{b:.0}")).collect();
+    // Count joint-optimization events: width > 1 while bits <= 3.
+    let mut widen_and_quantize = 0;
+    for (i, kind) in report.build.kinds.iter().enumerate() {
+        if let DimKind::Width(l) = *kind {
+            let mult = report.build.space.values(&report.best.config)[i];
+            if mult > 1.0 && bits[l] <= 3.0 {
+                widen_and_quantize += 1;
+            }
+        }
+    }
+    format!(
+        "{} ({}):\n  bits : {}\n  width: {}\n  (layers widened while quantized <=3b: {})\n",
+        meta.model,
+        meta.dataset,
+        bit_strs.join(", "),
+        mults.join(", "),
+        widen_and_quantize
+    )
+}
+
+pub fn run(rt: &Runtime, tags: &[&str], n_evals: usize, steps_per_eval: usize) -> Result<String> {
+    let mut out =
+        String::from("== Table IV — configurations returned by k-means TPE ==\n");
+    for tag in tags {
+        let sess = ModelSession::open(rt, tag, 768, 384)?;
+        let (b16, w10) = sess.meta.resolve(|_| 16.0, |_| 1.0);
+        let fp16_mb = sess.meta.net_shape(&b16, &w10).model_size_mb();
+        let cfg = LeaderCfg {
+            pretrain_steps: 100,
+            n_evals,
+            n_startup: (n_evals / 3).max(4),
+            final_steps: 60,
+            objective: ObjectiveCfg {
+                steps_per_eval,
+                eval_batches: 3,
+                size_budget_mb: fp16_mb * 0.2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let report = Leader::new(&sess, cfg, HwConfig::default()).run(Algo::KmeansTpe)?;
+        out.push_str(&render_config(&report, &sess));
+    }
+    Ok(out)
+}

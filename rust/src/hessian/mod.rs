@@ -1,0 +1,20 @@
+//! Hessian-based search-space pruning (§III-A).
+//!
+//! Lemma 1: the loss perturbation from quantizing layer l is bounded by
+//! Tr(H_l)/2 — so layers with large normalized Hessian traces are sensitive
+//! and must keep high precision, while flat layers tolerate aggressive
+//! quantization. The pruner:
+//!   1. normalizes each layer's Hutchinson trace estimate by its parameter
+//!      count,
+//!   2. k-means-clusters the normalized values (k=4 by default),
+//!   3. sorts clusters by decreasing centroid, and
+//!   4. assigns each cluster a candidate bit-width MENU: a sliding window
+//!      over B = {8,6,4,3,2} — the paper's example: B1={8,6}, B2={6,4,3},
+//!      B3={4,3,2}, B4={3,2}.
+//!
+//! The exponential effect: a 20-layer space over 5 bit choices has 5^20 ≈
+//! 1e14 configurations; with 2-3 choice menus it shrinks to ~1e6-1e9.
+
+pub mod pruner;
+
+pub use pruner::{bit_menus, prune_space, PrunedSpace};

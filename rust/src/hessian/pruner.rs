@@ -1,0 +1,140 @@
+//! Trace-normalize -> cluster -> bit-menu assignment.
+
+use crate::kmeans::kmeans_1d;
+
+/// Full candidate bit-width set B of the paper.
+pub const FULL_BITS: [f64; 5] = [8.0, 6.0, 4.0, 3.0, 2.0];
+
+/// Result of pruning: per-layer candidate bit menus (for bits-free layers;
+/// tied layers inherit at resolve time).
+#[derive(Debug, Clone)]
+pub struct PrunedSpace {
+    /// Cluster id per input layer (0 = most sensitive).
+    pub cluster: Vec<usize>,
+    /// Menu per cluster (subset of FULL_BITS, descending).
+    pub menus: Vec<Vec<f64>>,
+    /// Normalized sensitivity per layer (input order).
+    pub normalized: Vec<f64>,
+}
+
+impl PrunedSpace {
+    pub fn menu_for_layer(&self, layer: usize) -> &[f64] {
+        &self.menus[self.cluster[layer]]
+    }
+
+    /// log10 of the bit-space cardinality before/after pruning.
+    pub fn log10_reduction(&self) -> (f64, f64) {
+        let before = self.cluster.len() as f64 * (FULL_BITS.len() as f64).log10();
+        let after: f64 = self
+            .cluster
+            .iter()
+            .map(|&c| (self.menus[c].len() as f64).log10())
+            .sum();
+        (before, after)
+    }
+}
+
+/// Sliding-window menus over FULL_BITS for k clusters.
+///
+/// Cluster 0 (most sensitive) gets the top of B; cluster k-1 the bottom.
+/// Window positions interpolate linearly; widths follow the paper's example
+/// (2 at the extremes, 3 in the middle) generalized as: width 2 for the
+/// first and last cluster, 3 otherwise, clipped to B's bounds.
+pub fn bit_menus(k: usize) -> Vec<Vec<f64>> {
+    assert!(k >= 1);
+    let nb = FULL_BITS.len();
+    (0..k)
+        .map(|c| {
+            let width = if c == 0 || c + 1 == k { 2usize } else { 3usize };
+            // Window start marches down B proportionally (floor(c*|B|/k)),
+            // clamped so the last window reaches B's bottom. For k=4 this
+            // reproduces the paper's example exactly.
+            let start = if c + 1 == k && k > 1 {
+                nb - width // least-sensitive cluster bottoms out B
+            } else {
+                ((c * nb) / k).min(nb - width)
+            };
+            FULL_BITS[start..start + width].to_vec()
+        })
+        .collect()
+}
+
+/// §III-A end-to-end: raw vHv per layer + parameter counts -> PrunedSpace.
+pub fn prune_space(raw_traces: &[f64], param_counts: &[usize], k: usize) -> PrunedSpace {
+    assert_eq!(raw_traces.len(), param_counts.len());
+    // Normalize per weight; sensitivity is magnitude-based (negative single
+    // -sample estimates are noise around small true traces).
+    let normalized: Vec<f64> = raw_traces
+        .iter()
+        .zip(param_counts)
+        .map(|(&t, &n)| t.abs() / n.max(1) as f64)
+        .collect();
+    let k = k.min(normalized.len()).max(1);
+    let clustering = kmeans_1d(&normalized, k);
+    let menus = bit_menus(clustering.k());
+    PrunedSpace { cluster: clustering.assignment, menus, normalized }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_menus_k4() {
+        let menus = bit_menus(4);
+        assert_eq!(menus[0], vec![8.0, 6.0]);
+        assert_eq!(menus[1], vec![6.0, 4.0, 3.0]);
+        assert_eq!(menus[2], vec![4.0, 3.0, 2.0]);
+        assert_eq!(menus[3], vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn menus_k1_k2() {
+        assert_eq!(bit_menus(1), vec![vec![8.0, 6.0]]);
+        let m2 = bit_menus(2);
+        assert_eq!(m2[0], vec![8.0, 6.0]);
+        assert_eq!(m2[1], vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn sensitive_layers_get_high_bits() {
+        // 8 layers: 2 very sensitive, 4 medium, 2 flat.
+        let traces = [900.0, 850.0, 40.0, 35.0, 30.0, 28.0, 0.5, 0.4];
+        let counts = [100usize; 8];
+        let p = prune_space(&traces, &counts, 3);
+        // Most sensitive layers in cluster 0 -> menu contains 8.
+        assert_eq!(p.cluster[0], 0);
+        assert!(p.menu_for_layer(0).contains(&8.0));
+        // Flattest layers in the last cluster -> menu has only low bits.
+        let last = p.cluster[7];
+        assert_eq!(last, p.menus.len() - 1);
+        assert!(p.menu_for_layer(7).iter().all(|&b| b <= 3.0));
+    }
+
+    #[test]
+    fn normalization_by_param_count() {
+        // Same raw trace, very different sizes => different sensitivity.
+        let traces = [100.0, 100.0];
+        let counts = [10usize, 100_000];
+        let p = prune_space(&traces, &counts, 2);
+        assert!(p.normalized[0] > p.normalized[1] * 100.0);
+        assert!(p.cluster[0] < p.cluster[1]);
+    }
+
+    #[test]
+    fn reduction_is_exponential() {
+        let traces: Vec<f64> = (0..20).map(|i| (i + 1) as f64 * 10.0).collect();
+        let counts = vec![1000usize; 20];
+        let p = prune_space(&traces, &counts, 4);
+        let (before, after) = p.log10_reduction();
+        assert!(before - after > 4.0, "before 10^{before:.1} after 10^{after:.1}");
+    }
+
+    #[test]
+    fn negative_traces_treated_as_magnitude() {
+        let traces = [-500.0, 1.0];
+        let counts = [10usize, 10];
+        let p = prune_space(&traces, &counts, 2);
+        assert_eq!(p.cluster[0], 0); // |−500| is the sensitive one
+    }
+}

@@ -1,0 +1,136 @@
+//! Analytic latency model of the systolic-array dataflow (§III-C).
+//!
+//! Dataflow per layer: sets of N input-patch entries are loaded into the
+//! first PE row and march down the M rows while being multiplied with the
+//! per-PE BRAM-resident weights; partial products accumulate in-PE and drain
+//! through one tree adder ("processing unit") per row. Covering the full
+//! patch takes ceil(N'/N) array invocations, covering all output channels
+//! takes ceil(M'/M) invocations, and HiKonv packing divides the patch
+//! coverage by `macs_per_dsp(bits)`.
+//!
+//!   passes(l)   = ceil(M'/M) * ceil(N'/(N * pack(b)))
+//!   cycles(l)   = passes * (P + M + N)            ; P pixels streamed,
+//!                                                    M+N pipeline fill/drain
+//!   stall(l)    = (1 - overlap) * weight_bytes / dram_bw
+//!
+//! Latency is per-image (batch 1), the paper's deployment scenario.
+
+use super::model::{LayerShape, NetShape};
+use super::packing::macs_per_dsp;
+use super::HwConfig;
+
+#[derive(Debug, Clone)]
+pub struct LayerLatency {
+    pub name: String,
+    pub compute_cycles: f64,
+    pub dram_stall_cycles: f64,
+    pub passes: u64,
+}
+
+impl LayerLatency {
+    pub fn total(&self) -> f64 {
+        self.compute_cycles + self.dram_stall_cycles
+    }
+}
+
+pub fn layer_latency(hw: &HwConfig, l: &LayerShape) -> LayerLatency {
+    let pack = macs_per_dsp(l.bits) as f64;
+    let n_eff = (hw.n as f64 * pack).max(1.0);
+    let m_passes = (l.cout as f64 / hw.m as f64).ceil();
+    let n_passes = (l.patch_len() as f64 / n_eff).ceil();
+    let passes = m_passes * n_passes;
+    let p = l.out_pixels() as f64;
+    let compute = passes * (p + (hw.m + hw.n) as f64);
+
+    let weight_bytes = l.weight_bits() as f64 / 8.0;
+    let dram_cycles = weight_bytes / hw.dram_bytes_per_cycle;
+    let stall = (1.0 - hw.dram_overlap) * dram_cycles;
+
+    LayerLatency {
+        name: l.name.clone(),
+        compute_cycles: compute,
+        dram_stall_cycles: stall,
+        passes: passes as u64,
+    }
+}
+
+/// End-to-end single-image latency in cycles.
+pub fn latency_cycles(hw: &HwConfig, net: &NetShape) -> f64 {
+    net.layers.iter().map(|l| layer_latency(hw, l).total()).sum()
+}
+
+/// Per-layer breakdown.
+pub fn latency_breakdown(hw: &HwConfig, net: &NetShape) -> Vec<LayerLatency> {
+    net.layers.iter().map(|l| layer_latency(hw, l)).collect()
+}
+
+/// FiP16 baseline: same network, all layers at 16 bits (packing = 1).
+pub fn baseline_latency_cycles(hw: &HwConfig, net: &NetShape) -> f64 {
+    let base = NetShape {
+        layers: net
+            .layers
+            .iter()
+            .map(|l| LayerShape { bits: 16, ..l.clone() })
+            .collect(),
+    };
+    latency_cycles(hw, &base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::model::LayerKind;
+
+    fn conv(cin: usize, cout: usize, hw_px: usize, bits: u32) -> LayerShape {
+        LayerShape {
+            name: "t".into(),
+            kind: LayerKind::Conv,
+            ksize: 3,
+            cin,
+            cout,
+            out_h: hw_px,
+            out_w: hw_px,
+            bits,
+        }
+    }
+
+    #[test]
+    fn packing_speeds_up() {
+        let hw = HwConfig::default();
+        let net16 = NetShape { layers: vec![conv(64, 64, 16, 16)] };
+        let net4 = NetShape { layers: vec![conv(64, 64, 16, 4)] };
+        let net2 = NetShape { layers: vec![conv(64, 64, 16, 2)] };
+        let l16 = latency_cycles(&hw, &net16);
+        let l4 = latency_cycles(&hw, &net4);
+        let l2 = latency_cycles(&hw, &net2);
+        assert!(l4 < l16 / 3.0, "4-bit {l4} vs 16-bit {l16}");
+        assert!(l2 < l4, "2-bit {l2} vs 4-bit {l4}");
+        // Speedup bounded by the packing factor.
+        assert!(l16 / l2 <= 15.0 + 1e-9);
+    }
+
+    #[test]
+    fn baseline_equals_16bit() {
+        let hw = HwConfig::default();
+        let net = NetShape { layers: vec![conv(32, 32, 8, 3)] };
+        let base = baseline_latency_cycles(&hw, &net);
+        let explicit = latency_cycles(&hw, &NetShape { layers: vec![conv(32, 32, 8, 16)] });
+        assert_eq!(base, explicit);
+    }
+
+    #[test]
+    fn wider_layers_cost_more() {
+        let hw = HwConfig::default();
+        let narrow = latency_cycles(&hw, &NetShape { layers: vec![conv(32, 24, 8, 4)] });
+        let wide = latency_cycles(&hw, &NetShape { layers: vec![conv(32, 40, 8, 4)] });
+        assert!(wide > narrow);
+    }
+
+    #[test]
+    fn stall_scales_with_bits() {
+        let hw = HwConfig { dram_overlap: 0.0, ..Default::default() };
+        let l8 = layer_latency(&hw, &conv(16, 16, 8, 8));
+        let l2 = layer_latency(&hw, &conv(16, 16, 8, 2));
+        assert!((l8.dram_stall_cycles / l2.dram_stall_cycles - 4.0).abs() < 1e-9);
+    }
+}

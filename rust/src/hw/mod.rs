@@ -1,0 +1,63 @@
+//! Hardware-aware performance models (§III-C of the paper).
+//!
+//! The paper's target is a Xilinx FPGA accelerator: an M x N systolic array
+//! of DSP+BRAM processing elements with a DRAM/URAM/BRAM memory hierarchy,
+//! where HiKonv-style operand packing executes multiple low-bit MACs per DSP
+//! per cycle. The paper derives model size and speedup *analytically* from
+//! this design ("the overall model size reduction and speedup can be easily
+//! calculated"); this module implements that analytic model — plus a
+//! cycle-level simulator (`sim`) that validates it.
+
+pub mod packing;
+pub mod model;
+pub mod latency;
+pub mod energy;
+pub mod sim;
+
+pub use latency::{baseline_latency_cycles, latency_cycles, LayerLatency};
+pub use model::{LayerKind, LayerShape, NetShape};
+pub use packing::{macs_per_dsp, PACK_TABLE};
+
+/// Accelerator configuration (defaults follow the paper's description:
+/// 2-D systolic array of DSP48E2-based PEs; each DSP does one 27x18 multiply
+/// + 48-bit accumulate per cycle at FiP16, more via packing at low bits).
+#[derive(Debug, Clone, Copy)]
+pub struct HwConfig {
+    /// Systolic array rows (output channels processed in parallel).
+    pub m: usize,
+    /// Systolic array columns (input-patch entries processed in parallel).
+    pub n: usize,
+    /// Clock in MHz (DSP48E2 conservatively at 300 MHz).
+    pub clock_mhz: f64,
+    /// DRAM bandwidth in bytes/cycle (e.g. 16 B/cyc ~ 4.8 GB/s @300MHz).
+    pub dram_bytes_per_cycle: f64,
+    /// Fraction of DRAM traffic overlapped with compute (double buffering).
+    pub dram_overlap: f64,
+    /// Energy per DSP MAC-cycle in pJ.
+    pub dsp_pj_per_cycle: f64,
+    /// Energy per BRAM access (one operand line) in pJ.
+    pub bram_pj_per_access: f64,
+    /// Energy per DRAM byte in pJ.
+    pub dram_pj_per_byte: f64,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig {
+            m: 16,
+            n: 16,
+            clock_mhz: 300.0,
+            dram_bytes_per_cycle: 16.0,
+            dram_overlap: 0.8,
+            dsp_pj_per_cycle: 4.5,
+            bram_pj_per_access: 2.5,
+            dram_pj_per_byte: 80.0,
+        }
+    }
+}
+
+impl HwConfig {
+    pub fn cycles_to_ms(&self, cycles: f64) -> f64 {
+        cycles / (self.clock_mhz * 1e3)
+    }
+}

@@ -1,0 +1,156 @@
+//! Network shape description under a concrete (bits, widths) configuration.
+//!
+//! The coordinator builds a `NetShape` from the artifact's layer metadata
+//! (meta.json) by resolving width ties to ACTIVE channel counts; every
+//! hardware metric (size, latency, energy, speedup) is a pure function of it.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    DwConv,
+    PwConv,
+    Fc,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> Option<LayerKind> {
+        match s {
+            "conv" => Some(LayerKind::Conv),
+            "dwconv" => Some(LayerKind::DwConv),
+            "pwconv" => Some(LayerKind::PwConv),
+            "fc" => Some(LayerKind::Fc),
+            _ => None,
+        }
+    }
+}
+
+/// One quantized layer with RESOLVED active channel counts and bit-width.
+#[derive(Debug, Clone)]
+pub struct LayerShape {
+    pub name: String,
+    pub kind: LayerKind,
+    pub ksize: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub bits: u32,
+}
+
+impl LayerShape {
+    /// Multiply-accumulates for one input image.
+    pub fn macs(&self) -> u64 {
+        let px = (self.out_h * self.out_w) as u64;
+        match self.kind {
+            LayerKind::Conv => {
+                px * self.cout as u64 * (self.ksize * self.ksize * self.cin) as u64
+            }
+            LayerKind::DwConv => px * self.cout as u64 * (self.ksize * self.ksize) as u64,
+            LayerKind::PwConv => px * self.cout as u64 * self.cin as u64,
+            LayerKind::Fc => (self.cin * self.cout) as u64,
+        }
+    }
+
+    /// Number of weight parameters.
+    pub fn weights(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv | LayerKind::PwConv => {
+                (self.ksize * self.ksize * self.cin * self.cout) as u64
+            }
+            LayerKind::DwConv => (self.ksize * self.ksize * self.cout) as u64,
+            LayerKind::Fc => (self.cin * self.cout) as u64,
+        }
+    }
+
+    /// Weight storage in bits under this layer's quantization.
+    pub fn weight_bits(&self) -> u64 {
+        self.weights() * self.bits as u64
+    }
+
+    /// Input-patch length N' of the systolic dataflow (§III-C): the number
+    /// of entries in the input feature patch reduced per output value.
+    pub fn patch_len(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv => self.ksize * self.ksize * self.cin,
+            LayerKind::DwConv => self.ksize * self.ksize,
+            LayerKind::PwConv => self.cin,
+            LayerKind::Fc => self.cin,
+        }
+    }
+
+    /// Output values ("pixels" x channels handled by the M dimension).
+    pub fn out_pixels(&self) -> usize {
+        match self.kind {
+            LayerKind::Fc => 1,
+            _ => self.out_h * self.out_w,
+        }
+    }
+}
+
+/// A whole network under one configuration.
+#[derive(Debug, Clone)]
+pub struct NetShape {
+    pub layers: Vec<LayerShape>,
+}
+
+impl NetShape {
+    /// Model size in megabytes (weights only, as the paper reports).
+    pub fn model_size_mb(&self) -> f64 {
+        let bits: u64 = self.layers.iter().map(|l| l.weight_bits()).sum();
+        bits as f64 / 8.0 / 1e6
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(cin: usize, cout: usize, hw: usize, k: usize, bits: u32) -> LayerShape {
+        LayerShape {
+            name: "t".into(),
+            kind: LayerKind::Conv,
+            ksize: k,
+            cin,
+            cout,
+            out_h: hw,
+            out_w: hw,
+            bits,
+        }
+    }
+
+    #[test]
+    fn conv_macs_and_weights() {
+        let l = conv(16, 32, 8, 3, 4);
+        assert_eq!(l.weights(), 3 * 3 * 16 * 32);
+        assert_eq!(l.macs(), 64 * 32 * (9 * 16));
+        assert_eq!(l.weight_bits(), l.weights() * 4);
+        assert_eq!(l.patch_len(), 144);
+    }
+
+    #[test]
+    fn dw_vs_pw() {
+        let dw = LayerShape { kind: LayerKind::DwConv, ..conv(32, 32, 8, 3, 8) };
+        assert_eq!(dw.weights(), 9 * 32);
+        assert_eq!(dw.macs(), 64 * 32 * 9);
+        let pw = LayerShape { kind: LayerKind::PwConv, ksize: 1, ..conv(32, 64, 8, 1, 8) };
+        assert_eq!(pw.weights(), 32 * 64);
+        assert_eq!(pw.macs(), 64 * 64 * 32);
+    }
+
+    #[test]
+    fn model_size_linear_in_bits(){
+        let n8 = NetShape { layers: vec![conv(16, 16, 8, 3, 8)] };
+        let n4 = NetShape { layers: vec![conv(16, 16, 8, 3, 4)] };
+        let n2 = NetShape { layers: vec![conv(16, 16, 8, 3, 2)] };
+        assert!((n8.model_size_mb() / n4.model_size_mb() - 2.0).abs() < 1e-9);
+        assert!((n8.model_size_mb() / n2.model_size_mb() - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,87 @@
+//! HiKonv-extended operand/operation packing (§III-C, Fig. 2).
+//!
+//! A DSP48E2 performs a 27x18-bit multiply + 48-bit accumulate each cycle.
+//! By packing multiple low-bit operands into each multiplier input (with
+//! guard bits so partial products don't collide), one DSP performs several
+//! low-bit MACs per cycle. The paper extends HiKonv's 1-D packing to 2-D
+//! convolution and reports:
+//!
+//!   8- or 6-bit operands -> 2 multiplications / DSP / cycle
+//!   4- or 3-bit operands -> 6 multiplications + 2 additions
+//!   2-bit operands       -> 15 multiplications + 8 additions
+//!
+//! FiP16 (the baseline) gets 1 multiplication per DSP per cycle.
+
+/// (bits, packed multiplications per DSP per cycle, packed additions).
+pub const PACK_TABLE: [(u32, u32, u32); 6] = [
+    (16, 1, 0),
+    (8, 2, 0),
+    (6, 2, 0),
+    (4, 6, 2),
+    (3, 6, 2),
+    (2, 15, 8),
+];
+
+/// Packed multiplications per DSP per cycle for a given operand bit-width.
+/// Unlisted widths round UP to the next supported width (conservative).
+pub fn macs_per_dsp(bits: u32) -> u32 {
+    if bits >= 9 {
+        return 1; // 9..16+ : no packing on a 27x18 DSP for two-operand MACs
+    }
+    let mut best = 1;
+    for &(b, mults, _) in PACK_TABLE.iter() {
+        if bits <= b {
+            best = mults;
+        }
+    }
+    best
+}
+
+/// Bonus additions folded into the same DSP pass (tree-adder savings).
+pub fn adds_per_dsp(bits: u32) -> u32 {
+    if bits >= 9 {
+        return 0;
+    }
+    let mut best = 0;
+    for &(b, _, adds) in PACK_TABLE.iter() {
+        if bits <= b {
+            best = adds;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table_values() {
+        assert_eq!(macs_per_dsp(16), 1);
+        assert_eq!(macs_per_dsp(8), 2);
+        assert_eq!(macs_per_dsp(6), 2);
+        assert_eq!(macs_per_dsp(4), 6);
+        assert_eq!(macs_per_dsp(3), 6);
+        assert_eq!(macs_per_dsp(2), 15);
+        assert_eq!(adds_per_dsp(2), 8);
+        assert_eq!(adds_per_dsp(4), 2);
+        assert_eq!(adds_per_dsp(8), 0);
+    }
+
+    #[test]
+    fn monotone_nonincreasing_in_bits() {
+        let mut prev = u32::MAX;
+        for bits in [2, 3, 4, 6, 8, 16] {
+            let m = macs_per_dsp(bits);
+            assert!(m <= prev, "packing should not grow with bits");
+            prev = m;
+        }
+    }
+
+    #[test]
+    fn intermediate_widths_round_up() {
+        assert_eq!(macs_per_dsp(5), 2); // treated as 6-bit
+        assert_eq!(macs_per_dsp(7), 2); // treated as 8-bit
+        assert_eq!(macs_per_dsp(12), 1);
+    }
+}

@@ -1,0 +1,172 @@
+//! Cycle-level simulator of the §III-C accelerator.
+//!
+//! Where `latency.rs` uses the paper's closed-form count, this simulator
+//! executes the dataflow schedule: per-layer DRAM weight prefetch (double
+//! buffered against the previous layer's compute), per-pass weight-segment
+//! staging into PE BRAMs, pixel streaming through the M-deep PE pipeline,
+//! and the tree-adder drain. It exists to validate the analytic model (an
+//! integration test asserts agreement within tolerance) and to expose
+//! utilization/bottleneck detail the closed form hides.
+
+use super::model::NetShape;
+use super::packing::macs_per_dsp;
+use super::HwConfig;
+
+#[derive(Debug, Clone, Default)]
+pub struct LayerSim {
+    pub name: String,
+    pub start_cycle: u64,
+    pub end_cycle: u64,
+    pub prefetch_wait: u64,
+    pub passes: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    pub total_cycles: u64,
+    pub layers: Vec<LayerSim>,
+    /// MAC utilization: useful MACs / (cycles * array MAC capacity at each
+    /// layer's packing factor).
+    pub utilization: f64,
+}
+
+/// Simulate one image through the network.
+pub fn simulate(hw: &HwConfig, net: &NetShape) -> SimResult {
+    let mut clock: u64 = 0; // global cycle counter
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let mut useful_capacity = 0f64;
+
+    // Prefetch of layer 0 cannot overlap anything.
+    let first_bytes = net.layers[0].weight_bits() as f64 / 8.0;
+    let first_cycles = (first_bytes / hw.dram_bytes_per_cycle).ceil() as u64;
+    // DRAM channel availability / first-layer weights arrival.
+    let mut prefetch_free_at: u64 = first_cycles;
+    let mut prefetch_done_at: u64 = first_cycles;
+
+    for (i, l) in net.layers.iter().enumerate() {
+        // Wait for this layer's weights.
+        let wait = prefetch_done_at.saturating_sub(clock);
+        clock = clock.max(prefetch_done_at);
+        let start = clock;
+
+        // Kick off the NEXT layer's prefetch now (double buffering): it
+        // shares the DRAM channel, serialized on prefetch_free_at.
+        if i + 1 < net.layers.len() {
+            let bytes = net.layers[i + 1].weight_bits() as f64 / 8.0;
+            let cycles = (bytes / hw.dram_bytes_per_cycle).ceil() as u64;
+            let begin = prefetch_free_at.max(clock);
+            prefetch_free_at = begin + cycles;
+            prefetch_done_at = begin + cycles;
+        }
+
+        // Compute: march every (m_pass, n_pass) tile.
+        let pack = macs_per_dsp(l.bits) as u64;
+        let n_eff = (hw.n as u64 * pack).max(1);
+        let m_passes = (l.cout as u64).div_ceil(hw.m as u64);
+        let n_passes = (l.patch_len() as u64).div_ceil(n_eff);
+        let p = l.out_pixels() as u64;
+        let tree_depth = (hw.n as f64).log2().ceil() as u64 + 1;
+        let mut passes = 0;
+        for _mp in 0..m_passes {
+            for _np in 0..n_passes {
+                // Stage this pass's weight segment from URAM into PE BRAMs
+                // (one row per cycle), then stream P pixels through the
+                // M-deep pipeline and drain the tree adder.
+                let staging = hw.m as u64;
+                let stream = p; // one pixel set enters per cycle
+                let fill_drain = hw.m as u64 + tree_depth;
+                clock += staging + stream + fill_drain;
+                passes += 1;
+            }
+        }
+        useful_capacity += (passes * (p + hw.m as u64 + hw.n as u64)) as f64
+            * (hw.m * hw.n) as f64
+            * pack as f64;
+
+        layers.push(LayerSim {
+            name: l.name.clone(),
+            start_cycle: start,
+            end_cycle: clock,
+            prefetch_wait: wait,
+            passes,
+        });
+    }
+
+    let total_macs: u64 = net.total_macs();
+    let utilization = if useful_capacity > 0.0 {
+        total_macs as f64 / useful_capacity
+    } else {
+        0.0
+    };
+    SimResult { total_cycles: clock, layers, utilization }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::latency::latency_cycles;
+    use crate::hw::model::{LayerKind, LayerShape};
+
+    fn small_net(bits: u32) -> NetShape {
+        let conv = |name: &str, cin, cout, hw_px, k, kind| LayerShape {
+            name: name.into(),
+            kind,
+            ksize: k,
+            cin,
+            cout,
+            out_h: hw_px,
+            out_w: hw_px,
+            bits,
+        };
+        NetShape {
+            layers: vec![
+                conv("stem", 3, 16, 16, 3, LayerKind::Conv),
+                conv("c1", 16, 16, 16, 3, LayerKind::Conv),
+                conv("c2", 16, 32, 8, 3, LayerKind::Conv),
+                conv("pw", 32, 64, 8, 1, LayerKind::PwConv),
+                conv("fc", 64, 10, 1, 1, LayerKind::Fc),
+            ],
+        }
+    }
+
+    #[test]
+    fn sim_matches_analytic_within_tolerance() {
+        let hw = HwConfig::default();
+        for bits in [16, 8, 4, 2] {
+            let net = small_net(bits);
+            let sim = simulate(&hw, &net).total_cycles as f64;
+            let analytic = latency_cycles(&hw, &net);
+            let ratio = sim / analytic;
+            assert!(
+                (0.6..1.6).contains(&ratio),
+                "bits={bits}: sim {sim} vs analytic {analytic} (ratio {ratio})"
+            );
+        }
+    }
+
+    #[test]
+    fn sim_preserves_packing_speedup_ordering() {
+        let hw = HwConfig::default();
+        let c16 = simulate(&hw, &small_net(16)).total_cycles;
+        let c8 = simulate(&hw, &small_net(8)).total_cycles;
+        let c4 = simulate(&hw, &small_net(4)).total_cycles;
+        let c2 = simulate(&hw, &small_net(2)).total_cycles;
+        assert!(c16 > c8 && c8 > c4 && c4 > c2, "{c16} {c8} {c4} {c2}");
+    }
+
+    #[test]
+    fn layers_execute_in_order() {
+        let hw = HwConfig::default();
+        let r = simulate(&hw, &small_net(8));
+        for w in r.layers.windows(2) {
+            assert!(w[0].end_cycle <= w[1].start_cycle);
+        }
+        assert_eq!(r.total_cycles, r.layers.last().unwrap().end_cycle);
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let r = simulate(&HwConfig::default(), &small_net(4));
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0, "{}", r.utilization);
+    }
+}

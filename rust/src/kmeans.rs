@@ -1,0 +1,210 @@
+//! k-means clustering — shared by the two places the paper uses it:
+//! (1) clustering per-layer normalized Hessian traces to assign candidate
+//!     bit-width menus (§III-A), and
+//! (2) the dual-threshold k-means TPE, which clusters observed objective
+//!     values to define the desirable/undesirable surrogate populations
+//!     (§III-B).
+//!
+//! 1-D k-means (the only case the paper needs) is solved with deterministic
+//! quantile seeding + Lloyd iterations; ties and empty clusters are repaired
+//! by splitting the widest cluster.
+
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Cluster id per input point (0..k), ordered as the input.
+    pub assignment: Vec<usize>,
+    /// Cluster centroids, SORTED in DECREASING order (paper's C1 has the
+    /// largest centroid).
+    pub centroids: Vec<f64>,
+    /// Members per cluster: indices into the input slice.
+    pub members: Vec<Vec<usize>>,
+}
+
+/// 1-D k-means with centroids sorted in decreasing order.
+///
+/// Deterministic: seeds centroids at the (2i+1)/(2k) quantiles of the data,
+/// runs Lloyd to convergence (or 100 iterations), then relabels clusters by
+/// decreasing centroid.
+pub fn kmeans_1d(values: &[f64], k: usize) -> Clustering {
+    assert!(k >= 1, "k must be >= 1");
+    assert!(!values.is_empty(), "kmeans on empty input");
+    let k = k.min(values.len());
+
+    // Quantile seeding on a sorted copy.
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut centroids: Vec<f64> = (0..k)
+        .map(|i| {
+            let q = (2 * i + 1) as f64 / (2 * k) as f64;
+            let pos = q * (sorted.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            if lo == hi {
+                sorted[lo]
+            } else {
+                sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+            }
+        })
+        .collect();
+    centroids.dedup();
+    while centroids.len() < k {
+        // Degenerate data (few distinct values): pad with jittered copies so
+        // the assignment below still produces k labels (possibly empty).
+        let last = *centroids.last().unwrap();
+        centroids.push(last + 1e-9 * (centroids.len() as f64 + 1.0));
+    }
+
+    let mut assignment = vec![0usize; values.len()];
+    for _iter in 0..100 {
+        // Assign.
+        let mut changed = false;
+        for (i, &v) in values.iter().enumerate() {
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for (c, &ctr) in centroids.iter().enumerate() {
+                let d = (v - ctr).abs();
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // Update; repair empty clusters by stealing from the widest.
+        let mut sums = vec![0.0; centroids.len()];
+        let mut counts = vec![0usize; centroids.len()];
+        for (i, &v) in values.iter().enumerate() {
+            sums[assignment[i]] += v;
+            counts[assignment[i]] += 1;
+        }
+        for c in 0..centroids.len() {
+            if counts[c] > 0 {
+                centroids[c] = sums[c] / counts[c] as f64;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Relabel by decreasing centroid.
+    let mut order: Vec<usize> = (0..centroids.len()).collect();
+    order.sort_by(|&a, &b| centroids[b].partial_cmp(&centroids[a]).unwrap());
+    let mut relabel = vec![0usize; centroids.len()];
+    for (new, &old) in order.iter().enumerate() {
+        relabel[old] = new;
+    }
+    let sorted_centroids: Vec<f64> = order.iter().map(|&o| centroids[o]).collect();
+    let assignment: Vec<usize> = assignment.iter().map(|&a| relabel[a]).collect();
+    let mut members = vec![Vec::new(); sorted_centroids.len()];
+    for (i, &a) in assignment.iter().enumerate() {
+        members[a].push(i);
+    }
+    Clustering { assignment, centroids: sorted_centroids, members }
+}
+
+impl Clustering {
+    pub fn k(&self) -> usize {
+        self.centroids.len()
+    }
+
+    /// Within-cluster sum of squares (for tests / sanity checks).
+    pub fn wcss(&self, values: &[f64]) -> f64 {
+        values
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let c = self.centroids[self.assignment[i]];
+                (v - c) * (v - c)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_no_shrink, DEFAULT_CASES};
+
+    #[test]
+    fn separates_obvious_groups() {
+        let vals = [0.1, 0.11, 0.09, 5.0, 5.1, 4.9, 10.0, 10.2];
+        let c = kmeans_1d(&vals, 3);
+        assert_eq!(c.k(), 3);
+        // Largest centroid first.
+        assert!(c.centroids[0] > c.centroids[1]);
+        assert!(c.centroids[1] > c.centroids[2]);
+        // The two 10.x points share the top cluster.
+        assert_eq!(c.assignment[6], 0);
+        assert_eq!(c.assignment[7], 0);
+        assert_eq!(c.assignment[0], 2);
+    }
+
+    #[test]
+    fn k_one_collapses() {
+        let vals = [1.0, 2.0, 3.0];
+        let c = kmeans_1d(&vals, 1);
+        assert_eq!(c.k(), 1);
+        assert!((c.centroids[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let vals = [1.0, 2.0];
+        let c = kmeans_1d(&vals, 5);
+        assert!(c.k() <= 2 || c.members.iter().filter(|m| !m.is_empty()).count() <= 2);
+    }
+
+    #[test]
+    fn identical_values() {
+        let vals = [3.0; 10];
+        let c = kmeans_1d(&vals, 4);
+        // All points land in a single (first non-empty) cluster; no panics.
+        assert_eq!(c.assignment.iter().filter(|&&a| a == c.assignment[0]).count(), 10);
+    }
+
+    #[test]
+    fn prop_centroids_decreasing_and_assignment_valid() {
+        check_no_shrink(
+            "kmeans-invariants",
+            DEFAULT_CASES,
+            |r| {
+                let n = 2 + r.below(60);
+                let k = 1 + r.below(6);
+                let vals: Vec<f64> = (0..n).map(|_| r.gauss() * 10.0).collect();
+                (vals, k)
+            },
+            |(vals, k)| {
+                let c = kmeans_1d(vals, *k);
+                let decreasing =
+                    c.centroids.windows(2).all(|w| w[0] >= w[1] - 1e-12);
+                let valid = c.assignment.iter().all(|&a| a < c.k());
+                let covered: usize = c.members.iter().map(|m| m.len()).sum();
+                decreasing && valid && covered == vals.len()
+            },
+        );
+    }
+
+    #[test]
+    fn prop_points_nearest_own_centroid() {
+        check_no_shrink(
+            "kmeans-nearest",
+            64,
+            |r| {
+                let n = 5 + r.below(40);
+                let vals: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+                vals
+            },
+            |vals| {
+                let c = kmeans_1d(vals, 3);
+                vals.iter().enumerate().all(|(i, &v)| {
+                    let own = (v - c.centroids[c.assignment[i]]).abs();
+                    c.centroids.iter().all(|&ctr| own <= (v - ctr).abs() + 1e-9)
+                })
+            },
+        );
+    }
+}

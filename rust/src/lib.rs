@@ -1,0 +1,29 @@
+//! # sammpq — Sensitivity-Aware Mixed-Precision Quantization & Width Optimization
+//!
+//! Rust + JAX + Pallas reproduction of *"Sensitivity-Aware Mixed-Precision
+//! Quantization and Width Optimization of Deep Neural Networks Through
+//! Cluster-Based Tree-Structured Parzen Estimation"* (Azizi et al., 2023).
+//!
+//! Layer 3 of the three-layer architecture: the coordinator owns the search
+//! (k-means TPE, Alg. 1 of the paper), the Hessian-based search-space pruner,
+//! the hardware-aware objective (FPGA systolic-array model with HiKonv-style
+//! operand packing), the baselines it is compared against, and every
+//! substrate (classic-ML models, datasets, PRNG/JSON/CLI utilities).
+//!
+//! Layers 2 (JAX models) and 1 (Pallas kernels) live in `python/compile/` and
+//! are AOT-lowered once to `artifacts/*.hlo.txt`; the [`runtime`] module
+//! loads and executes them through the PJRT C API — Python is never on the
+//! search path.
+
+pub mod util;
+pub mod kmeans;
+pub mod data;
+pub mod mlbase;
+pub mod hw;
+pub mod search;
+pub mod baselines;
+pub mod hessian;
+pub mod runtime;
+pub mod train;
+pub mod coordinator;
+pub mod exp;

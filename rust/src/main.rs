@@ -1,0 +1,294 @@
+//! sammpq CLI — leader entrypoint.
+//!
+//! Subcommands (see README for examples):
+//!   search      — full Alg. 1 pipeline on one model artifact
+//!   hessian     — sensitivity analysis + pruned-menu report only
+//!   hw          — hardware model report for a uniform-bits config
+//!   convergence — Fig. 3a/3b tabular convergence study (no artifacts needed)
+//!   exp         — run a named experiment (fig1|fig3|fig3c|fig4|table1|table2|
+//!                 table3|table4|ablations)
+//!   info        — list artifacts + platform
+
+use anyhow::Result;
+
+use sammpq::coordinator::report::Table;
+use sammpq::coordinator::{Algo, Leader, LeaderCfg, ObjectiveCfg};
+use sammpq::exp::{self, Effort};
+use sammpq::hessian::prune_space;
+use sammpq::hw::sim::simulate;
+use sammpq::hw::{baseline_latency_cycles, latency_cycles, HwConfig};
+use sammpq::runtime::Runtime;
+use sammpq::train::ModelSession;
+use sammpq::util::cli::Args;
+
+fn leader_cfg_from(args: &Args) -> LeaderCfg {
+    let mut cfg = LeaderCfg::default();
+    cfg.seed = args.get_u64("seed", 0);
+    cfg.pretrain_steps = args.get_usize("pretrain-steps", cfg.pretrain_steps);
+    cfg.n_evals = args.get_usize("n", cfg.n_evals);
+    cfg.n_startup = args.get_usize("n0", cfg.n_evals / 4);
+    cfg.final_steps = args.get_usize("final-steps", cfg.final_steps);
+    cfg.prune = !args.has_flag("no-prune");
+    cfg.objective = ObjectiveCfg {
+        steps_per_eval: args.get_usize("steps-per-eval", 16),
+        eval_batches: args.get_usize("eval-batches", 3),
+        max_lr: args.get_f64("max-lr", 3e-3),
+        size_budget_mb: args.get_f64("size-budget-mb", f64::INFINITY),
+        latency_budget_ms: args.get_f64("latency-budget-ms", f64::INFINITY),
+        lambda_size: args.get_f64("lambda-size", 2.0),
+        lambda_latency: args.get_f64("lambda-latency", 2.0),
+        energy_budget_uj: args.get_f64("energy-budget-uj", f64::INFINITY),
+        lambda_energy: args.get_f64("lambda-energy", 2.0),
+        throughput_min: args.get_f64("throughput-min", 0.0),
+        lambda_throughput: args.get_f64("lambda-throughput", 2.0),
+    };
+    cfg
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let tag = args.get_or("model", "resnet20-cifar10");
+    let algo = Algo::parse(&args.get_or("algo", "kmeans-tpe"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --algo"))?;
+    let rt = Runtime::new()?;
+    println!("platform: {}", rt.platform());
+    let sess = ModelSession::open(&rt, &tag, args.get_usize("train-n", 1024),
+                                  args.get_usize("val-n", 512))?;
+    let cfg = leader_cfg_from(args);
+    println!(
+        "searching {tag} with {} (n={}, n0={}, steps/eval={})",
+        algo.name(),
+        cfg.n_evals,
+        cfg.n_startup,
+        cfg.objective.steps_per_eval
+    );
+    let report = Leader::new(&sess, cfg, HwConfig::default()).run(algo)?;
+
+    let mut t = Table::new(
+        &format!("search result: {tag} / {}", algo.name()),
+        &["metric", "value"],
+    );
+    t.row(vec!["baseline accuracy (FiP16)".into(), format!("{:.3}", report.baseline_accuracy)]);
+    t.row(vec!["baseline size (MB)".into(), format!("{:.4}", report.baseline_size_mb)]);
+    t.row(vec!["final accuracy".into(), format!("{:.3}", report.final_accuracy)]);
+    t.row(vec!["final size (MB)".into(), format!("{:.4}", report.final_size_mb)]);
+    t.row(vec!["latency (ms)".into(), format!("{:.4}", report.final_latency_ms)]);
+    t.row(vec!["speedup vs FiP16".into(), format!("{:.2}x", report.final_speedup)]);
+    t.row(vec!["pretrain secs".into(), format!("{:.1}", report.pretrain_secs)]);
+    t.row(vec!["search secs".into(), format!("{:.1}", report.search_secs)]);
+    t.row(vec!["final-train secs".into(), format!("{:.1}", report.final_secs)]);
+    println!("{}", t.render());
+    println!("{}", exp::table4::render_config(&report, &sess));
+    Ok(())
+}
+
+fn cmd_hessian(args: &Args) -> Result<()> {
+    let tag = args.get_or("model", "resnet20-cifar10");
+    let rt = Runtime::new()?;
+    let sess = ModelSession::open(&rt, &tag, 512, 256)?;
+    let meta = &sess.meta;
+    let snap = sess.init_snapshot(args.get_u64("seed", 0));
+    let mut state = sess.state_from_snapshot(&snap)?;
+    let bits16 = meta.uniform_bits(16.0);
+    let widths1 = meta.base_widths();
+    sess.train(&mut state, &bits16, &widths1, args.get_usize("pretrain-steps", 120), 3e-3)?;
+    let traces = sess.hessian_traces(&state, &widths1, args.get_usize("samples", 4))?;
+    let net = meta.net_shape(&bits16, &widths1);
+    let counts: Vec<usize> = net.layers.iter().map(|l| l.weights() as usize).collect();
+    let pruned = prune_space(&traces, &counts, args.get_usize("k", 4));
+    let mut t = Table::new(
+        &format!("Hessian sensitivity — {tag}"),
+        &["layer", "raw vHv", "normalized", "cluster", "bit menu"],
+    );
+    for l in &meta.layers {
+        t.row(vec![
+            l.name.clone(),
+            format!("{:.2}", traces[l.index]),
+            format!("{:.3e}", pruned.normalized[l.index]),
+            format!("C{}", pruned.cluster[l.index] + 1),
+            format!("{:?}", pruned.menu_for_layer(l.index)),
+        ]);
+    }
+    println!("{}", t.render());
+    let (before, after) = pruned.log10_reduction();
+    println!("bit-space: 10^{before:.1} -> 10^{after:.1} configurations");
+    Ok(())
+}
+
+fn cmd_hw(args: &Args) -> Result<()> {
+    let tag = args.get_or("model", "resnet20-cifar10");
+    let bits = args.get_f64("bits", 4.0);
+    let mult = args.get_f64("mult", 1.0);
+    let meta = sammpq::runtime::client::load_meta(&tag)?;
+    let hw = HwConfig::default();
+    let (b, w) = meta.resolve(|_| bits, |_| mult);
+    let net = meta.net_shape(&b, &w);
+    let cycles = latency_cycles(&hw, &net);
+    let base = baseline_latency_cycles(&hw, &net);
+    let sim = simulate(&hw, &net);
+    let energy = sammpq::hw::energy::energy_uj(&hw, &net);
+    let mut t = Table::new(
+        &format!("hardware model — {tag} @ {bits:.0}b x{mult}"),
+        &["metric", "value"],
+    );
+    t.row(vec!["model size (MB)".into(), format!("{:.4}", net.model_size_mb())]);
+    t.row(vec!["MACs / image".into(), format!("{}", net.total_macs())]);
+    t.row(vec!["latency (analytic, ms)".into(), format!("{:.4}", hw.cycles_to_ms(cycles))]);
+    t.row(vec!["latency (simulated, ms)".into(),
+               format!("{:.4}", hw.cycles_to_ms(sim.total_cycles as f64))]);
+    t.row(vec!["speedup vs FiP16".into(), format!("{:.2}x", base / cycles)]);
+    t.row(vec!["energy (uJ/image)".into(), format!("{:.2}", energy.total_uj())]);
+    t.row(vec!["sim MAC utilization".into(), format!("{:.3}", sim.utilization)]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("fig3");
+    let effort = Effort::parse(&args.get_or("effort", "quick"));
+    let out = match name {
+        "fig1" => {
+            let rt = Runtime::new()?;
+            let sess = ModelSession::open(&rt, "mobilenetv1-cifar100", 768, 256)?;
+            exp::fig1::run(&sess, args.get_usize("steps", 150))?
+        }
+        "fig3" => exp::fig3::run_tabular(effort)?,
+        "fig3c" => {
+            let rt = Runtime::new()?;
+            let sess = ModelSession::open(&rt, "resnet18-cifar100", 1024, 512)?;
+            exp::fig3::run_dnn(&sess, effort)?
+        }
+        "fig4" => {
+            let rt = Runtime::new()?;
+            let sess = ModelSession::open(&rt, "resnet18-cifar100", 1024, 512)?;
+            exp::fig4::run(&sess, effort)?
+        }
+        "table1" => {
+            let rt = Runtime::new()?;
+            let sess = ModelSession::open(&rt, "resnet20-cifar10", 1024, 512)?;
+            exp::table1::run(&sess, effort)?
+        }
+        "table2" => {
+            let rt = Runtime::new()?;
+            exp::table2::run(&rt, effort, args.get("only"))?
+        }
+        "table3" => {
+            let rt = Runtime::new()?;
+            exp::table3::run(&rt, effort)?
+        }
+        "table4" => {
+            let rt = Runtime::new()?;
+            exp::table4::run(
+                &rt,
+                &["resnet20-cifar10", "mobilenetv1-cifar100"],
+                args.get_usize("n", 12),
+                args.get_usize("steps-per-eval", 8),
+            )?
+        }
+        "ablations" => {
+            let mut s = exp::ablations::run_surrogate_ablations(effort)?;
+            s.push_str(&exp::ablations::run_c0_sweep(effort)?);
+            let meta = sammpq::runtime::client::load_meta("resnet20-cifar10")?;
+            s.push_str(&exp::ablations::run_latency_validation(&meta)?);
+            if args.has_flag("with-dnn") {
+                let rt = Runtime::new()?;
+                let sess = ModelSession::open(&rt, "resnet20-cifar10", 1024, 512)?;
+                s.push_str(&exp::ablations::run_pruning_ablation(&sess, effort)?);
+            }
+            s
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+/// Worker process: own a ModelSession and serve objective evaluations to a
+/// remote leader (`sammpq search` on another core/host would connect here).
+fn cmd_worker(args: &Args) -> Result<()> {
+    use sammpq::coordinator::evaluator::{build_space, DnnObjective};
+    use sammpq::coordinator::service::serve_worker;
+    let tag = args.get_or("model", "resnet20-cifar10");
+    let addr = args.get_or("addr", "127.0.0.1:7447");
+    let rt = Runtime::new()?;
+    let sess = ModelSession::open(&rt, &tag, args.get_usize("train-n", 1024),
+                                  args.get_usize("val-n", 512))?;
+    let cfg = leader_cfg_from(args);
+    // Deterministic pretrain so every worker shares the same starting point.
+    let snap = sess.init_snapshot(cfg.seed);
+    let mut st = sess.state_from_snapshot(&snap)?;
+    sess.train(&mut st, &sess.meta.uniform_bits(16.0), &sess.meta.base_widths(),
+               cfg.pretrain_steps, cfg.pretrain_lr)?;
+    let pretrained = sess.snapshot_of(&st)?;
+    let build = build_space(&sess.meta, None);
+    let mut obj = DnnObjective::new(&sess, pretrained, build, HwConfig::default(),
+                                    cfg.objective);
+    println!("[worker] {tag} serving evaluations on {addr}");
+    let served = serve_worker(&addr, &mut obj)?;
+    println!("[worker] done, served {served} evaluations");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::new()?;
+    println!("platform: {}", rt.platform());
+    let root = Runtime::artifacts_root()?;
+    println!("artifacts: {}", root.display());
+    let mut tags: Vec<String> = std::fs::read_dir(&root)?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().join("meta.json").exists())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    tags.sort();
+    for t in tags {
+        let meta = sammpq::runtime::client::load_meta(&t)?;
+        println!(
+            "  {t}: {} quantized layers, {} params, {} classes",
+            meta.num_layers,
+            meta.params.len(),
+            meta.num_classes
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "search" => cmd_search(&args),
+        "hessian" => cmd_hessian(&args),
+        "hw" => cmd_hw(&args),
+        "convergence" => exp::fig3::run_tabular(Effort::parse(
+            &args.get_or("effort", "quick"),
+        ))
+        .map(|s| println!("{s}")),
+        "exp" => cmd_exp(&args),
+        "worker" => cmd_worker(&args),
+        "info" => cmd_info(),
+        _ => {
+            println!(
+                "sammpq — sensitivity-aware mixed-precision quantization via k-means TPE\n\
+                 \n\
+                 usage: sammpq <command> [--options]\n\
+                 \n\
+                 commands:\n\
+                 \x20 search      full pipeline: pretrain -> hessian prune -> search -> final train\n\
+                 \x20             --model <tag> --algo kmeans-tpe|tpe|random|evo|rl|gp-bo\n\
+                 \x20             --n <evals> --steps-per-eval <k> --size-budget-mb <m>\n\
+                 \x20 hessian     sensitivity report (--model, --k, --samples)\n\
+                 \x20 hw          hardware model report (--model, --bits, --mult)\n\
+                 \x20 convergence Fig. 3a/3b tabular study (no artifacts needed)\n\
+                 \x20 exp <name>  fig1|fig3|fig3c|fig4|table1|table2|table3|table4|ablations\n\
+                 \x20             [--effort quick|paper]\n\
+                 \x20 worker      serve objective evaluations to a remote leader\n\
+                 \x20             (--model <tag> --addr host:port)\n\
+                 \x20 info        list compiled artifacts"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Random-forest regressor: bootstrap-aggregated CART trees.
+//!
+//! Hyperparameters exposed = the Fig. 3a search dimensions: number of trees,
+//! max depth, min samples to split (plus max_features, fixed to sqrt in the
+//! experiment, as sklearn defaults for regression forests on small data).
+
+use super::tree::{RegressionTree, TreeParams};
+use crate::data::tabular::TabularDataset;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct RandomForestParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub max_features: usize, // 0 => all features
+    pub seed: u64,
+}
+
+impl Default for RandomForestParams {
+    fn default() -> Self {
+        RandomForestParams {
+            n_trees: 50,
+            max_depth: 8,
+            min_samples_split: 2,
+            max_features: 0,
+            seed: 0,
+        }
+    }
+}
+
+pub struct RandomForestRegressor {
+    trees: Vec<RegressionTree>,
+    pub params: RandomForestParams,
+}
+
+impl RandomForestRegressor {
+    pub fn fit(data: &TabularDataset, params: RandomForestParams) -> Self {
+        let mut rng = Rng::new(params.seed ^ 0xF0557);
+        let n = data.len();
+        let tp = TreeParams {
+            max_depth: params.max_depth,
+            min_samples_split: params.min_samples_split,
+            min_samples_leaf: 1,
+            max_features: params.max_features,
+        };
+        let trees = (0..params.n_trees)
+            .map(|_| {
+                // Bootstrap sample.
+                let rows: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
+                RegressionTree::fit(data, &data.targets, &rows, tp, &mut rng)
+            })
+            .collect();
+        RandomForestRegressor { trees, params }
+    }
+
+    pub fn predict_row(&self, row: &[f64]) -> f64 {
+        let s: f64 = self.trees.iter().map(|t| t.predict_row(row)).sum();
+        s / self.trees.len().max(1) as f64
+    }
+
+    pub fn predict(&self, data: &TabularDataset) -> Vec<f64> {
+        (0..data.len()).map(|i| self.predict_row(data.row(i))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::iris;
+    use crate::mlbase::metrics::r2_score;
+
+    #[test]
+    fn learns_iris_class_regression() {
+        let d = iris::load(0);
+        let (train, test) = d.split(0.3, 1);
+        let rf = RandomForestRegressor::fit(
+            &train,
+            RandomForestParams { n_trees: 40, max_depth: 6, ..Default::default() },
+        );
+        let preds = rf.predict(&test);
+        let r2 = r2_score(&test.targets, &preds);
+        assert!(r2 > 0.8, "r2={r2}");
+    }
+
+    #[test]
+    fn more_trees_not_worse() {
+        let d = iris::load(2);
+        let (train, test) = d.split(0.3, 3);
+        let r2_of = |n_trees| {
+            let rf = RandomForestRegressor::fit(
+                &train,
+                RandomForestParams { n_trees, max_depth: 5, seed: 5, ..Default::default() },
+            );
+            r2_score(&test.targets, &rf.predict(&test))
+        };
+        assert!(r2_of(50) >= r2_of(1) - 0.05);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = iris::load(0);
+        let p = RandomForestParams { n_trees: 10, seed: 9, ..Default::default() };
+        let a = RandomForestRegressor::fit(&d, p).predict(&d);
+        let b = RandomForestRegressor::fit(&d, p).predict(&d);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,53 @@
+//! Evaluation metrics for the classic-ML substrate.
+
+pub fn mse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(t, p)| (t - p) * (t - p))
+        .sum::<f64>()
+        / y_true.len().max(1) as f64
+}
+
+pub fn r2_score(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    let mean = y_true.iter().sum::<f64>() / y_true.len() as f64;
+    let ss_tot: f64 = y_true.iter().map(|t| (t - mean) * (t - mean)).sum();
+    let ss_res: f64 =
+        y_true.iter().zip(y_pred).map(|(t, p)| (t - p) * (t - p)).sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+pub fn accuracy(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    y_true.iter().zip(y_pred).filter(|(t, p)| t == p).count() as f64
+        / y_true.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_scores() {
+        let y = [1.0, 2.0, 3.0];
+        assert_eq!(mse(&y, &y), 0.0);
+        assert_eq!(r2_score(&y, &y), 1.0);
+        assert_eq!(accuracy(&y, &y), 1.0);
+    }
+
+    #[test]
+    fn mean_predictor_r2_zero() {
+        let y = [1.0, 2.0, 3.0];
+        let p = [2.0, 2.0, 2.0];
+        assert!(r2_score(&y, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        assert_eq!(accuracy(&[1.0, 0.0, 1.0, 1.0], &[1.0, 1.0, 1.0, 0.0]), 0.5);
+    }
+}

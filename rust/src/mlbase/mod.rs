@@ -1,0 +1,16 @@
+//! Classic-ML substrate: CART regression trees, random-forest regression and
+//! gradient-boosting classification, implemented from scratch.
+//!
+//! These are the models whose hyperparameters the Fig. 3a/3b convergence
+//! study tunes (the paper uses sklearn's RandomForestRegressor /
+//! GradientBoostingClassifier); the exposed hyperparameters match the
+//! paper's search dimensions.
+
+pub mod tree;
+pub mod forest;
+pub mod gbm;
+pub mod metrics;
+
+pub use forest::{RandomForestParams, RandomForestRegressor};
+pub use gbm::{GbmClassifier, GbmParams};
+pub use tree::{RegressionTree, TreeParams};

@@ -1,0 +1,82 @@
+//! PJRT client wrapper + artifact loading.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::program::Program;
+
+/// Owns the PJRT CPU client; programs are compiled against it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    ///
+    /// HLO text (not serialized proto) is the interchange format: jax >= 0.5
+    /// emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+    /// text parser reassigns ids (see aot.py / DESIGN.md).
+    pub fn load_program(&self, path: &Path) -> Result<Program> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "program".to_string());
+        Ok(Program::new(name, exe))
+    }
+
+    /// Locate the artifacts directory: `$SAMMPQ_ARTIFACTS`, else
+    /// `./artifacts`, else `../artifacts` (for tests run from rust/).
+    pub fn artifacts_root() -> Result<PathBuf> {
+        if let Ok(p) = std::env::var("SAMMPQ_ARTIFACTS") {
+            let p = PathBuf::from(p);
+            if p.is_dir() {
+                return Ok(p);
+            }
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.is_dir() {
+                return Ok(p);
+            }
+        }
+        anyhow::bail!(
+            "artifacts/ not found — run `make artifacts` (or set SAMMPQ_ARTIFACTS)"
+        )
+    }
+
+    /// Path to one model's artifact directory (e.g. "resnet20-cifar10").
+    pub fn model_dir(tag: &str) -> Result<PathBuf> {
+        let root = Self::artifacts_root()?;
+        let dir = root.join(tag);
+        if !dir.is_dir() {
+            anyhow::bail!("artifact dir {} missing — run `make artifacts`", dir.display());
+        }
+        Ok(dir)
+    }
+}
+
+/// Read + parse a model's meta.json.
+pub fn load_meta(tag: &str) -> Result<super::meta::ModelMeta> {
+    let dir = Runtime::model_dir(tag)?;
+    let text = std::fs::read_to_string(dir.join("meta.json"))
+        .with_context(|| format!("reading {}/meta.json", dir.display()))?;
+    super::meta::ModelMeta::parse(&text)
+}

@@ -1,0 +1,299 @@
+//! meta.json model: parameter specs, quantized-layer metadata, tie structure.
+//!
+//! Produced by `python/compile/aot.py`; this is the contract between the
+//! JAX model definition (L2) and the Rust coordinator (L3). The layer list
+//! drives three things: search-space construction (free dims), config
+//! resolution (tie expansion into full bits/widths vectors), and the
+//! hardware model (NetShape under a config).
+
+use anyhow::{Context, Result};
+
+use crate::hw::model::{LayerKind, LayerShape, NetShape};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamInit {
+    He,
+    Zeros,
+    Ones,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: ParamInit,
+    pub fan_in: usize,
+    pub decay: bool,
+}
+
+impl ParamMeta {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub index: usize,
+    pub name: String,
+    pub kind: LayerKind,
+    pub ksize: usize,
+    pub stride: usize,
+    pub in_base: usize,
+    pub out_base: usize,
+    pub cmax_in: usize,
+    pub cmax_out: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub width_tie: usize,
+    pub bits_tie: usize,
+    pub width_fixed: bool,
+    pub bits_free: bool,
+}
+
+impl LayerMeta {
+    /// This layer owns a width search dimension.
+    pub fn width_free(&self) -> bool {
+        self.width_tie == self.index && !self.width_fixed
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub model: String,
+    pub dataset: String,
+    pub num_classes: usize,
+    pub image_hw: usize,
+    pub batch: usize,
+    pub num_layers: usize,
+    pub width_mults: Vec<f64>,
+    pub params: Vec<ParamMeta>,
+    pub layers: Vec<LayerMeta>,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let params = j
+            .req("params")?
+            .as_arr()
+            .context("params not array")?
+            .iter()
+            .map(|p| {
+                let init = match p.req("init")?.as_str().unwrap_or("he") {
+                    "he" => ParamInit::He,
+                    "ones" => ParamInit::Ones,
+                    _ => ParamInit::Zeros,
+                };
+                Ok(ParamMeta {
+                    name: p.req("name")?.as_str().unwrap_or("").to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    init,
+                    fan_in: p.req("fan_in")?.as_usize().unwrap_or(1),
+                    decay: p.req("decay")?.as_bool().unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let layers = j
+            .req("layers")?
+            .as_arr()
+            .context("layers not array")?
+            .iter()
+            .map(|l| {
+                Ok(LayerMeta {
+                    index: l.req("index")?.as_usize().unwrap_or(0),
+                    name: l.req("name")?.as_str().unwrap_or("").to_string(),
+                    kind: LayerKind::parse(l.req("kind")?.as_str().unwrap_or("conv"))
+                        .context("bad layer kind")?,
+                    ksize: l.req("ksize")?.as_usize().unwrap_or(1),
+                    stride: l.req("stride")?.as_usize().unwrap_or(1),
+                    in_base: l.req("in_base")?.as_usize().unwrap_or(0),
+                    out_base: l.req("out_base")?.as_usize().unwrap_or(0),
+                    cmax_in: l.req("cmax_in")?.as_usize().unwrap_or(0),
+                    cmax_out: l.req("cmax_out")?.as_usize().unwrap_or(0),
+                    out_h: l.req("out_h")?.as_usize().unwrap_or(0),
+                    out_w: l.req("out_w")?.as_usize().unwrap_or(0),
+                    width_tie: l.req("width_tie")?.as_usize().unwrap_or(0),
+                    bits_tie: l.req("bits_tie")?.as_usize().unwrap_or(0),
+                    width_fixed: l.req("width_fixed")?.as_bool().unwrap_or(false),
+                    bits_free: l.req("bits_free")?.as_bool().unwrap_or(true),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelMeta {
+            model: j.req("model")?.as_str().unwrap_or("").to_string(),
+            dataset: j.req("dataset")?.as_str().unwrap_or("").to_string(),
+            num_classes: j.req("num_classes")?.as_usize().context("num_classes")?,
+            image_hw: j.req("image_hw")?.as_usize().context("image_hw")?,
+            batch: j.req("batch")?.as_usize().context("batch")?,
+            num_layers: j.req("num_layers")?.as_usize().context("num_layers")?,
+            width_mults: j
+                .req("width_mults")?
+                .as_arr()
+                .context("width_mults")?
+                .iter()
+                .map(|m| m.as_f64().unwrap_or(1.0))
+                .collect(),
+            params,
+            layers,
+        })
+    }
+
+    /// Baseline width counts: every layer at multiplier 1.0.
+    pub fn base_widths(&self) -> Vec<f32> {
+        self.layers.iter().map(|l| l.out_base as f32).collect()
+    }
+
+    /// Uniform bits vector.
+    pub fn uniform_bits(&self, bits: f32) -> Vec<f32> {
+        vec![bits; self.num_layers]
+    }
+
+    /// Resolve per-governor width multipliers + per-bits-owner bit choices
+    /// into the full runtime vectors the artifacts consume.
+    ///
+    /// `bits_of(l)`  — bit-width chosen for layer l (queried only for layers
+    ///                 with `bits_free`).
+    /// `mult_of(l)`  — width multiplier chosen for layer l (queried only for
+    ///                 width-free governors).
+    pub fn resolve<FB, FW>(&self, bits_of: FB, mult_of: FW) -> (Vec<f32>, Vec<f32>)
+    where
+        FB: Fn(usize) -> f64,
+        FW: Fn(usize) -> f64,
+    {
+        let mut bits = vec![0f32; self.num_layers];
+        let mut widths = vec![0f32; self.num_layers];
+        for l in &self.layers {
+            let owner = &self.layers[l.bits_tie];
+            debug_assert!(owner.bits_free, "bits tie target must be free");
+            bits[l.index] = bits_of(owner.index) as f32;
+
+            let gov = &self.layers[l.width_tie];
+            let mult = if gov.width_free() { mult_of(gov.index) } else { 1.0 };
+            widths[l.index] = if l.width_fixed {
+                l.out_base as f32
+            } else {
+                (mult * l.out_base as f64).round() as f32
+            };
+        }
+        (bits, widths)
+    }
+
+    /// Hardware-model shape under resolved (bits, widths) vectors.
+    ///
+    /// Active input channels of layer l = active output channels of its
+    /// producer, which the width vector already encodes at index
+    /// `width_tie`-resolved positions; here we recover cin from the layer
+    /// ordering: cin_active = widths value of the producing layer. meta
+    /// stores only base counts, so we scale: cin = round(in_base * width of
+    /// the layer feeding it / its base). To stay exact we track the ratio
+    /// via widths[l] / out_base — for the first conv (image input) cin = 3.
+    pub fn net_shape(&self, bits: &[f32], widths: &[f32]) -> NetShape {
+        // Map each layer to its active output count.
+        let active_out: Vec<usize> =
+            self.layers.iter().map(|l| widths[l.index].round() as usize).collect();
+        // Producer resolution: in_base==3 => image input; otherwise find the
+        // nearest earlier layer whose out_base == in_base AND whose active
+        // count we mirror. The builders guarantee in_base equals the
+        // producing layer's out_base, so scanning backwards is exact.
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            let cin = if i == 0 {
+                l.in_base // image input channels (3)
+            } else {
+                let mut found = l.in_base; // fallback: base count
+                for j in (0..i).rev() {
+                    if self.layers[j].out_base == l.in_base {
+                        found = active_out[j];
+                        break;
+                    }
+                }
+                found
+            };
+            layers.push(LayerShape {
+                name: l.name.clone(),
+                kind: l.kind,
+                ksize: l.ksize,
+                cin,
+                cout: active_out[i],
+                out_h: l.out_h,
+                out_w: l.out_w,
+                bits: bits[l.index].round() as u32,
+            });
+        }
+        NetShape { layers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI_META: &str = r#"{
+      "model": "mini", "dataset": "cifar10", "num_classes": 10,
+      "image_hw": 16, "batch": 32, "num_layers": 3,
+      "width_mults": [0.75, 1.0, 1.25],
+      "params": [
+        {"name": "stem.w", "shape": [3,3,3,10], "init": "he", "fan_in": 27, "decay": true},
+        {"name": "stem.bn.gamma", "shape": [10], "init": "ones", "fan_in": 10, "decay": false},
+        {"name": "fc.b", "shape": [10], "init": "zeros", "fan_in": 1, "decay": false}
+      ],
+      "layers": [
+        {"index":0,"name":"stem","kind":"conv","ksize":3,"stride":1,"in_base":8,"out_base":8,
+         "cmax_in":3,"cmax_out":10,"out_h":16,"out_w":16,"width_tie":0,"bits_tie":0,
+         "width_fixed":false,"bits_free":true},
+        {"index":1,"name":"conv1","kind":"conv","ksize":3,"stride":1,"in_base":8,"out_base":8,
+         "cmax_in":10,"cmax_out":10,"out_h":16,"out_w":16,"width_tie":0,"bits_tie":1,
+         "width_fixed":false,"bits_free":true},
+        {"index":2,"name":"fc","kind":"fc","ksize":1,"stride":1,"in_base":8,"out_base":10,
+         "cmax_in":10,"cmax_out":10,"out_h":1,"out_w":1,"width_tie":0,"bits_tie":2,
+         "width_fixed":true,"bits_free":true}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_mini_meta() {
+        let m = ModelMeta::parse(MINI_META).unwrap();
+        assert_eq!(m.model, "mini");
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[0].init, ParamInit::He);
+        assert_eq!(m.params[0].num_elements(), 270);
+        assert_eq!(m.layers.len(), 3);
+        assert!(m.layers[0].width_free());
+        assert!(!m.layers[1].width_free()); // tied to 0
+        assert!(!m.layers[2].width_free()); // width_fixed
+    }
+
+    #[test]
+    fn resolve_applies_ties() {
+        let m = ModelMeta::parse(MINI_META).unwrap();
+        let (bits, widths) = m.resolve(
+            |l| if l == 0 { 8.0 } else { 4.0 },
+            |l| {
+                assert_eq!(l, 0);
+                1.25
+            },
+        );
+        assert_eq!(bits, vec![8.0, 4.0, 4.0]);
+        assert_eq!(widths, vec![10.0, 10.0, 10.0]); // fc width_fixed => out_base
+    }
+
+    #[test]
+    fn net_shape_tracks_active_channels() {
+        let m = ModelMeta::parse(MINI_META).unwrap();
+        let (bits, widths) = m.resolve(|_| 4.0, |_| 0.75);
+        let net = m.net_shape(&bits, &widths);
+        assert_eq!(net.layers[0].cout, 6); // 0.75 * 8
+        assert_eq!(net.layers[1].cin, 6); // producer's active count
+        assert_eq!(net.layers[1].cout, 6);
+        assert_eq!(net.layers[2].cin, 6);
+        assert!(net.model_size_mb() > 0.0);
+    }
+}

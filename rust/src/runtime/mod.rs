@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-lowered HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via the
+//! `xla` crate. This is the ONLY place Python-produced bits enter the Rust
+//! process — and they enter as compiled executables, never as an interpreter.
+
+pub mod client;
+pub mod meta;
+pub mod program;
+
+pub use client::Runtime;
+pub use meta::{LayerMeta, ModelMeta, ParamInit, ParamMeta};
+pub use program::Program;

@@ -1,0 +1,69 @@
+//! A compiled PJRT executable + literal marshalling helpers.
+
+use anyhow::Result;
+
+/// One compiled program (train_step / eval_batch / hessian_trace / kernels).
+pub struct Program {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Program {
+    pub fn new(name: String, exe: xla::PjRtLoadedExecutable) -> Program {
+        Program { name, exe }
+    }
+
+    /// Execute with literal inputs; the AOT pipeline lowers every program
+    /// with `return_tuple=True`, so the single output buffer is a tuple that
+    /// we decompose into its element literals.
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("{}: execute: {e:?}", self.name))?;
+        let mut lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: to_literal: {e:?}", self.name))?;
+        lit.decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("{}: decompose: {e:?}", self.name))
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] as usize == data.len() {
+        return Ok(l);
+    }
+    l.reshape(dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal (labels, seeds).
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] as usize == data.len() {
+        return Ok(l);
+    }
+    l.reshape(dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Scalar literals.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+}
+
+/// Extract the single f32 value of a scalar literal.
+pub fn to_scalar_f32(l: &xla::Literal) -> Result<f32> {
+    let v = to_vec_f32(l)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}

@@ -1,0 +1,79 @@
+//! Trial history: configs, objective values, timings, convergence curves.
+
+use super::space::Config;
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub config: Config,
+    pub value: f64,
+    /// Wall-clock seconds spent evaluating this trial.
+    pub eval_secs: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub trials: Vec<Trial>,
+    pub searcher: String,
+}
+
+impl History {
+    pub fn new(searcher: &str) -> History {
+        History { trials: Vec::new(), searcher: searcher.to_string() }
+    }
+
+    pub fn push(&mut self, config: Config, value: f64, eval_secs: f64) {
+        self.trials.push(Trial { config, value, eval_secs });
+    }
+
+    pub fn len(&self) -> usize {
+        self.trials.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trials.is_empty()
+    }
+
+    pub fn values(&self) -> Vec<f64> {
+        self.trials.iter().map(|t| t.value).collect()
+    }
+
+    pub fn best(&self) -> Option<&Trial> {
+        self.trials
+            .iter()
+            .max_by(|a, b| a.value.partial_cmp(&b.value).unwrap())
+    }
+
+    /// Best-so-far curve (for Fig. 3 convergence plots).
+    pub fn convergence_curve(&self) -> Vec<f64> {
+        stats::cummax(&self.values())
+    }
+
+    /// Number of evaluations needed to reach `frac` of the final best
+    /// (the paper's "2-3x fewer evaluations" convergence metric).
+    pub fn evals_to_reach(&self, target: f64) -> Option<usize> {
+        stats::first_reach(&self.values(), target, 1e-12).map(|i| i + 1)
+    }
+
+    pub fn total_eval_secs(&self) -> f64 {
+        self.trials.iter().map(|t| t.eval_secs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_and_curve() {
+        let mut h = History::new("test");
+        h.push(vec![0], 0.1, 1.0);
+        h.push(vec![1], 0.5, 1.0);
+        h.push(vec![2], 0.3, 1.0);
+        assert_eq!(h.best().unwrap().value, 0.5);
+        assert_eq!(h.convergence_curve(), vec![0.1, 0.5, 0.5]);
+        assert_eq!(h.evals_to_reach(0.5), Some(2));
+        assert_eq!(h.evals_to_reach(0.9), None);
+        assert_eq!(h.total_eval_secs(), 3.0);
+    }
+}

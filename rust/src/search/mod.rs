@@ -1,0 +1,31 @@
+//! Sequential model-based search: the paper's k-means TPE (§III-B, Alg. 1),
+//! the vanilla TPE it is compared against, and the shared machinery
+//! (search space, Parzen surrogates, trial history).
+
+pub mod space;
+pub mod parzen;
+pub mod history;
+pub mod tpe;
+pub mod kmeans_tpe;
+
+pub use history::{History, Trial};
+pub use kmeans_tpe::{KmeansTpe, KmeansTpeParams};
+pub use space::{Config, Dim, Space};
+pub use tpe::{Tpe, TpeParams};
+
+/// A maximization objective over a categorical search space.
+///
+/// Implementations: the DNN config evaluator (proxy QAT + hardware model),
+/// the mlbase hyperparameter objectives (Fig. 3a/3b), and synthetic test
+/// functions.
+pub trait Objective {
+    fn space(&self) -> &Space;
+    /// Evaluate one configuration (indices into each dim's choices).
+    fn eval(&mut self, config: &Config) -> f64;
+}
+
+/// A search algorithm consuming `budget` objective evaluations.
+pub trait Searcher {
+    fn name(&self) -> &'static str;
+    fn run(&mut self, obj: &mut dyn Objective, budget: usize) -> History;
+}

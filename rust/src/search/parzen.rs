@@ -1,0 +1,153 @@
+//! Parzen surrogate over a categorical space (Bergstra-style smoothed
+//! categorical densities, factorized over dimensions).
+//!
+//! For dimension d with K_d choices and member counts n_(d,c):
+//!     p_d(c) = (n_(d,c) + w0) / (N + K_d * w0)
+//! where w0 is the prior pseudo-count. `l(x)` and `g(x)` are two instances
+//! fit on the desirable / undesirable populations; the TPE acquisition
+//! maximizes `log l(x) - log g(x)`.
+
+use super::space::{Config, Space};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Parzen {
+    /// Per-dim, per-choice probabilities (already normalized).
+    probs: Vec<Vec<f64>>,
+}
+
+impl Parzen {
+    /// Fit from a population of configs. `prior_weight` > 0 keeps every
+    /// choice reachable even with tiny populations.
+    pub fn fit(space: &Space, population: &[&Config], prior_weight: f64) -> Parzen {
+        assert!(prior_weight > 0.0);
+        let probs = space
+            .dims
+            .iter()
+            .enumerate()
+            .map(|(d, dim)| {
+                let k = dim.k();
+                let mut counts = vec![prior_weight; k];
+                for cfg in population {
+                    counts[cfg[d]] += 1.0;
+                }
+                let total: f64 = counts.iter().sum();
+                counts.iter().map(|c| c / total).collect()
+            })
+            .collect();
+        Parzen { probs }
+    }
+
+    pub fn log_pdf(&self, config: &Config) -> f64 {
+        config
+            .iter()
+            .enumerate()
+            .map(|(d, &c)| self.probs[d][c].ln())
+            .sum()
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Config {
+        self.probs.iter().map(|p| rng.weighted(p)).collect()
+    }
+
+    pub fn prob(&self, dim: usize, choice: usize) -> f64 {
+        self.probs[dim][choice]
+    }
+}
+
+/// Acquisition: draw `n_candidates` from `l`, return the one maximizing
+/// log l - log g (the l/g ratio of §III-B).
+pub fn propose(
+    l: &Parzen,
+    g: &Parzen,
+    rng: &mut Rng,
+    n_candidates: usize,
+) -> Config {
+    let mut best: Option<(f64, Config)> = None;
+    for _ in 0..n_candidates {
+        let cand = l.sample(rng);
+        let score = l.log_pdf(&cand) - g.log_pdf(&cand);
+        if best.as_ref().map_or(true, |(s, _)| score > *s) {
+            best = Some((score, cand));
+        }
+    }
+    best.unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::space::Dim;
+
+    fn space() -> Space {
+        Space::new(vec![
+            Dim::new("a", vec![0.0, 1.0, 2.0]),
+            Dim::new("b", vec![0.0, 1.0]),
+        ])
+    }
+
+    #[test]
+    fn fit_reflects_counts() {
+        let s = space();
+        let pop_owned: Vec<Config> = vec![vec![0, 0], vec![0, 1], vec![0, 0]];
+        let pop: Vec<&Config> = pop_owned.iter().collect();
+        let p = Parzen::fit(&s, &pop, 0.5);
+        assert!(p.prob(0, 0) > p.prob(0, 1));
+        assert!(p.prob(0, 1) > 0.0); // prior keeps it reachable
+        let total: f64 = (0..3).map(|c| p.prob(0, c)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_population_is_uniform() {
+        let s = space();
+        let p = Parzen::fit(&s, &[], 1.0);
+        for c in 0..3 {
+            assert!((p.prob(0, c) - 1.0 / 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn log_pdf_factorizes() {
+        let s = space();
+        let pop_owned: Vec<Config> = vec![vec![1, 1]];
+        let pop: Vec<&Config> = pop_owned.iter().collect();
+        let p = Parzen::fit(&s, &pop, 1.0);
+        let lp = p.log_pdf(&vec![1, 1]);
+        assert!((lp - (p.prob(0, 1).ln() + p.prob(1, 1).ln())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn propose_prefers_l_region() {
+        let s = space();
+        let l_pop_owned: Vec<Config> = vec![vec![2, 1]; 10];
+        let g_pop_owned: Vec<Config> = vec![vec![0, 0]; 10];
+        let l = Parzen::fit(&s, &l_pop_owned.iter().collect::<Vec<_>>(), 0.1);
+        let g = Parzen::fit(&s, &g_pop_owned.iter().collect::<Vec<_>>(), 0.1);
+        let mut rng = Rng::new(0);
+        let mut hits = 0;
+        for _ in 0..50 {
+            if propose(&l, &g, &mut rng, 16) == vec![2, 1] {
+                hits += 1;
+            }
+        }
+        assert!(hits > 40, "hits={hits}");
+    }
+
+    #[test]
+    fn sample_distribution_matches_probs() {
+        let s = space();
+        let pop_owned: Vec<Config> = vec![vec![2, 0]; 20];
+        let p = Parzen::fit(&s, &pop_owned.iter().collect::<Vec<_>>(), 0.5);
+        let mut rng = Rng::new(1);
+        let mut count2 = 0;
+        let n = 2_000;
+        for _ in 0..n {
+            if p.sample(&mut rng)[0] == 2 {
+                count2 += 1;
+            }
+        }
+        let freq = count2 as f64 / n as f64;
+        assert!((freq - p.prob(0, 2)).abs() < 0.05, "freq={freq}");
+    }
+}

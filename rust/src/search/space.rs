@@ -1,0 +1,99 @@
+//! Categorical search space.
+//!
+//! Every dimension is an ordered list of numeric choices (bit-widths, width
+//! multipliers, tree counts, learning rates...). TPE over quantized grids is
+//! exact for the Parzen ratio and matches the paper's spaces, which are all
+//! finite sets (B per cluster, S = {0.75..1.25}).
+
+use crate::util::rng::Rng;
+
+/// A configuration: one choice index per dimension.
+pub type Config = Vec<usize>;
+
+#[derive(Debug, Clone)]
+pub struct Dim {
+    pub name: String,
+    /// Numeric value of each choice (ordered as presented to the searcher).
+    pub choices: Vec<f64>,
+}
+
+impl Dim {
+    pub fn new(name: impl Into<String>, choices: Vec<f64>) -> Dim {
+        let d = Dim { name: name.into(), choices };
+        assert!(!d.choices.is_empty(), "dim {} has no choices", d.name);
+        d
+    }
+
+    pub fn k(&self) -> usize {
+        self.choices.len()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Space {
+    pub dims: Vec<Dim>,
+}
+
+impl Space {
+    pub fn new(dims: Vec<Dim>) -> Space {
+        Space { dims }
+    }
+
+    pub fn num_dims(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total number of configurations (saturating).
+    pub fn cardinality(&self) -> u128 {
+        self.dims.iter().fold(1u128, |acc, d| acc.saturating_mul(d.k() as u128))
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Config {
+        self.dims.iter().map(|d| rng.below(d.k())).collect()
+    }
+
+    /// Decode a config to the numeric value per dimension.
+    pub fn values(&self, config: &Config) -> Vec<f64> {
+        config
+            .iter()
+            .zip(&self.dims)
+            .map(|(&c, d)| d.choices[c])
+            .collect()
+    }
+
+    pub fn validate(&self, config: &Config) -> bool {
+        config.len() == self.dims.len()
+            && config.iter().zip(&self.dims).all(|(&c, d)| c < d.k())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_no_shrink;
+
+    fn space() -> Space {
+        Space::new(vec![
+            Dim::new("bits0", vec![8.0, 6.0]),
+            Dim::new("bits1", vec![4.0, 3.0, 2.0]),
+            Dim::new("width0", vec![0.75, 0.875, 1.0, 1.125, 1.25]),
+        ])
+    }
+
+    #[test]
+    fn cardinality() {
+        assert_eq!(space().cardinality(), 2 * 3 * 5);
+    }
+
+    #[test]
+    fn decode() {
+        let s = space();
+        assert_eq!(s.values(&vec![1, 2, 0]), vec![6.0, 2.0, 0.75]);
+    }
+
+    #[test]
+    fn prop_samples_valid() {
+        let s = space();
+        check_no_shrink("space-sample-valid", 256, |r| s.sample(r), |c| s.validate(c));
+    }
+}

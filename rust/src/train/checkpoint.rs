@@ -1,0 +1,147 @@
+//! Parameter checkpointing: save/load `ParamSnapshot`s in a simple versioned
+//! binary format (`.sqck`), so pretrained models are reused across CLI runs
+//! instead of re-pretraining per invocation.
+//!
+//! Layout (little-endian):
+//!   magic "SQCK" | u32 version | u32 n_tensors |
+//!   per tensor: u32 name_len | name bytes | u32 elem_count | f32 data...
+//! A trailing u64 XOR checksum over the data words guards truncation.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::session::ParamSnapshot;
+
+const MAGIC: &[u8; 4] = b"SQCK";
+const VERSION: u32 = 1;
+
+pub fn save(path: &Path, names: &[String], snap: &ParamSnapshot) -> Result<()> {
+    anyhow::ensure!(names.len() == snap.tensors.len(), "names/tensors mismatch");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(snap.tensors.len() as u32).to_le_bytes())?;
+    let mut checksum: u64 = 0;
+    for (name, t) in names.iter().zip(&snap.tensors) {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.len() as u32).to_le_bytes())?;
+        for &v in t {
+            let b = v.to_bits();
+            checksum ^= (b as u64).rotate_left((t.len() % 63) as u32);
+            f.write_all(&b.to_le_bytes())?;
+        }
+    }
+    f.write_all(&checksum.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<(Vec<String>, ParamSnapshot)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open checkpoint {}", path.display()))?;
+    let mut buf4 = [0u8; 4];
+    f.read_exact(&mut buf4)?;
+    anyhow::ensure!(&buf4 == MAGIC, "not a sammpq checkpoint");
+    f.read_exact(&mut buf4)?;
+    let version = u32::from_le_bytes(buf4);
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    f.read_exact(&mut buf4)?;
+    let n = u32::from_le_bytes(buf4) as usize;
+    anyhow::ensure!(n < 100_000, "implausible tensor count {n}");
+
+    let mut names = Vec::with_capacity(n);
+    let mut tensors = Vec::with_capacity(n);
+    let mut checksum: u64 = 0;
+    for _ in 0..n {
+        f.read_exact(&mut buf4)?;
+        let name_len = u32::from_le_bytes(buf4) as usize;
+        anyhow::ensure!(name_len < 4096, "implausible name length");
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        names.push(String::from_utf8(name).context("name utf8")?);
+        f.read_exact(&mut buf4)?;
+        let count = u32::from_le_bytes(buf4) as usize;
+        let mut bytes = vec![0u8; count * 4];
+        f.read_exact(&mut bytes)?;
+        let mut t = Vec::with_capacity(count);
+        for c in bytes.chunks_exact(4) {
+            let b = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            checksum ^= (b as u64).rotate_left((count % 63) as u32);
+            t.push(f32::from_bits(b));
+        }
+        tensors.push(t);
+    }
+    let mut buf8 = [0u8; 8];
+    f.read_exact(&mut buf8).context("missing checksum (truncated?)")?;
+    anyhow::ensure!(
+        u64::from_le_bytes(buf8) == checksum,
+        "checkpoint checksum mismatch (corrupted)"
+    );
+    Ok((names, ParamSnapshot { tensors }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sammpq_ck_{name}.sqck"))
+    }
+
+    fn snap() -> (Vec<String>, ParamSnapshot) {
+        (
+            vec!["a.w".into(), "b.bias".into()],
+            ParamSnapshot {
+                tensors: vec![vec![1.0, -2.5, 3.25], vec![0.0, f32::MIN_POSITIVE]],
+            },
+        )
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("rt");
+        let (names, s) = snap();
+        save(&p, &names, &s).unwrap();
+        let (n2, s2) = load(&p).unwrap();
+        assert_eq!(names, n2);
+        assert_eq!(s.tensors, s2.tensors);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let p = tmp("trunc");
+        let (names, s) = snap();
+        save(&p, &names, &s).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 6]).unwrap();
+        assert!(load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = tmp("corrupt");
+        let (names, s) = snap();
+        save(&p, &names, &s).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOPExxxxxxxxxxxx").unwrap();
+        assert!(load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,11 @@
+//! Training driver: QAT proxy-training and evaluation of configurations by
+//! executing the AOT-compiled train_step / eval_batch / hessian_trace
+//! programs. The OneCycleLR schedule the paper uses lives here too — the lr
+//! is a runtime input of train_step, so the schedule is pure Rust.
+
+pub mod checkpoint;
+pub mod schedule;
+pub mod session;
+
+pub use schedule::OneCycle;
+pub use session::{ModelSession, TrainOutcome, TrainState};

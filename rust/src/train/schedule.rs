@@ -1,0 +1,58 @@
+//! OneCycleLR (Smith, 2018) — the schedule the paper trains final models
+//! with (max lr 0.01). Linear warmup to `max_lr` over `pct_start` of the
+//! run, then cosine annealing down to `max_lr / final_div`.
+
+#[derive(Debug, Clone, Copy)]
+pub struct OneCycle {
+    pub max_lr: f64,
+    pub total_steps: usize,
+    pub pct_start: f64,
+    pub div_factor: f64,
+    pub final_div: f64,
+}
+
+impl OneCycle {
+    pub fn new(max_lr: f64, total_steps: usize) -> OneCycle {
+        OneCycle { max_lr, total_steps, pct_start: 0.3, div_factor: 25.0, final_div: 1e3 }
+    }
+
+    pub fn lr(&self, step: usize) -> f64 {
+        let total = self.total_steps.max(1) as f64;
+        let warm = (self.pct_start * total).max(1.0);
+        let s = step as f64;
+        if s < warm {
+            let lo = self.max_lr / self.div_factor;
+            lo + (self.max_lr - lo) * (s / warm)
+        } else {
+            let t = ((s - warm) / (total - warm).max(1.0)).clamp(0.0, 1.0);
+            let lo = self.max_lr / self.final_div;
+            lo + 0.5 * (self.max_lr - lo) * (1.0 + (std::f64::consts::PI * t).cos())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warms_up_peaks_and_decays() {
+        let s = OneCycle::new(0.01, 100);
+        assert!(s.lr(0) < s.lr(15));
+        assert!(s.lr(15) < s.lr(29));
+        let peak = s.lr(30);
+        assert!((peak - 0.01).abs() < 1e-3);
+        assert!(s.lr(99) < peak / 50.0);
+    }
+
+    #[test]
+    fn monotone_decay_after_peak() {
+        let s = OneCycle::new(0.01, 200);
+        let mut prev = f64::INFINITY;
+        for step in 60..200 {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+}

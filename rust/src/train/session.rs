@@ -1,0 +1,270 @@
+//! ModelSession: one model's compiled programs + data, and the QAT
+//! train/evaluate/hessian drivers on top of them.
+//!
+//! Input marshalling follows the flat program signatures documented in
+//! meta.json (`python/compile/train.py`):
+//!   train_step    : (*params, *m, *v, t, x, y, bits, widths, lr, wd)
+//!   eval_batch    : (*params, x, y, bits, widths)
+//!   hessian_trace : (*params, x, y, widths, seed)
+
+use anyhow::Result;
+
+use crate::data::synth::{ImageDataset, SynthSpec};
+use crate::runtime::client::load_meta;
+use crate::runtime::program::{
+    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_scalar_f32, to_vec_f32,
+};
+use crate::runtime::{ModelMeta, ParamInit, Program, Runtime};
+use crate::train::schedule::OneCycle;
+use crate::util::rng::Rng;
+
+/// Optimizer state: parameter + Adam moment literals, ready for execution.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    pub step: usize,
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub losses: Vec<f64>,
+    pub final_loss: f64,
+}
+
+/// Host-side snapshot of parameters (for cloning into fine-tune runs).
+#[derive(Clone)]
+pub struct ParamSnapshot {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+pub struct ModelSession {
+    pub meta: ModelMeta,
+    pub tag: String,
+    train_prog: Program,
+    eval_prog: Program,
+    hess_prog: Program,
+    pub train_data: ImageDataset,
+    pub val_data: ImageDataset,
+    /// Weight decay used in every run.
+    pub weight_decay: f32,
+}
+
+impl ModelSession {
+    /// Open artifacts for `tag` ("resnet20-cifar10") and generate its proxy
+    /// datasets (sizes tuned for single-core proxy training).
+    pub fn open(rt: &Runtime, tag: &str, train_n: usize, val_n: usize) -> Result<ModelSession> {
+        let meta = load_meta(tag)?;
+        let dir = Runtime::model_dir(tag)?;
+        let train_prog = rt.load_program(&dir.join("train_step.hlo.txt"))?;
+        let eval_prog = rt.load_program(&dir.join("eval_batch.hlo.txt"))?;
+        let hess_prog = rt.load_program(&dir.join("hessian_trace.hlo.txt"))?;
+        let spec = SynthSpec::by_name(&meta.dataset)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {}", meta.dataset))?;
+        anyhow::ensure!(
+            spec.classes == meta.num_classes,
+            "dataset classes {} != model classes {}",
+            spec.classes,
+            meta.num_classes
+        );
+        let train_data = ImageDataset::generate(spec, train_n, 1);
+        let val_data = ImageDataset::generate(spec, val_n, 2);
+        Ok(ModelSession {
+            meta,
+            tag: tag.to_string(),
+            train_prog,
+            eval_prog,
+            hess_prog,
+            train_data,
+            val_data,
+            weight_decay: 1e-4,
+        })
+    }
+
+    // -- parameters ---------------------------------------------------------
+
+    /// He / ones / zeros initialization per meta.json.
+    pub fn init_snapshot(&self, seed: u64) -> ParamSnapshot {
+        let mut rng = Rng::new(seed ^ 0x1A17);
+        let tensors = self
+            .meta
+            .params
+            .iter()
+            .map(|p| {
+                let n = p.num_elements();
+                match p.init {
+                    ParamInit::He => {
+                        let std = (2.0 / p.fan_in.max(1) as f64).sqrt();
+                        (0..n).map(|_| (rng.gauss() * std) as f32).collect()
+                    }
+                    ParamInit::Ones => vec![1f32; n],
+                    ParamInit::Zeros => vec![0f32; n],
+                }
+            })
+            .collect();
+        ParamSnapshot { tensors }
+    }
+
+    fn param_dims(&self, i: usize) -> Vec<i64> {
+        self.meta.params[i].shape.iter().map(|&d| d as i64).collect()
+    }
+
+    /// Upload a snapshot as a fresh TrainState (zero moments).
+    pub fn state_from_snapshot(&self, snap: &ParamSnapshot) -> Result<TrainState> {
+        let mut params = Vec::with_capacity(snap.tensors.len());
+        let mut m = Vec::with_capacity(snap.tensors.len());
+        let mut v = Vec::with_capacity(snap.tensors.len());
+        for (i, t) in snap.tensors.iter().enumerate() {
+            let dims = self.param_dims(i);
+            params.push(lit_f32(t, &dims)?);
+            m.push(lit_f32(&vec![0f32; t.len()], &dims)?);
+            v.push(lit_f32(&vec![0f32; t.len()], &dims)?);
+        }
+        Ok(TrainState { params, m, v, step: 0 })
+    }
+
+    /// Download the parameters of a state back to the host.
+    pub fn snapshot_of(&self, state: &TrainState) -> Result<ParamSnapshot> {
+        let tensors = state
+            .params
+            .iter()
+            .map(to_vec_f32)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamSnapshot { tensors })
+    }
+
+    // -- training -----------------------------------------------------------
+
+    fn batch_literals(&self, data: &ImageDataset, b: usize) -> Result<(xla::Literal, xla::Literal)> {
+        let bs = self.meta.batch;
+        let hw = self.meta.image_hw;
+        let px = data.pixels_per_image();
+        let mut x = vec![0f32; bs * px];
+        let mut y = vec![0i32; bs];
+        data.fill_batch(b, bs, &mut x, &mut y);
+        Ok((
+            lit_f32(&x, &[bs as i64, hw as i64, hw as i64, 3])?,
+            lit_i32(&y, &[bs as i64])?,
+        ))
+    }
+
+    /// Run `steps` QAT steps on `state` under the given (bits, widths)
+    /// vectors with a OneCycle schedule peaking at `max_lr`.
+    pub fn train(
+        &self,
+        state: &mut TrainState,
+        bits: &[f32],
+        widths: &[f32],
+        steps: usize,
+        max_lr: f64,
+    ) -> Result<TrainOutcome> {
+        let n = self.meta.params.len();
+        let nl = self.meta.num_layers as i64;
+        let bits_l = lit_f32(bits, &[nl])?;
+        let widths_l = lit_f32(widths, &[nl])?;
+        let wd = lit_scalar_f32(self.weight_decay);
+        let sched = OneCycle::new(max_lr, steps);
+        let mut losses = Vec::with_capacity(steps);
+
+        for s in 0..steps {
+            let (x, y) = self.batch_literals(&self.train_data, state.step + s)?;
+            let t = lit_scalar_f32((state.step + s) as f32);
+            let lr = lit_scalar_f32(sched.lr(s) as f32);
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 7);
+            args.extend(state.params.iter());
+            args.extend(state.m.iter());
+            args.extend(state.v.iter());
+            args.push(&t);
+            args.push(&x);
+            args.push(&y);
+            args.push(&bits_l);
+            args.push(&widths_l);
+            args.push(&lr);
+            args.push(&wd);
+            let mut out = self.train_prog.run(&args)?;
+            anyhow::ensure!(out.len() == 3 * n + 1, "train_step arity {}", out.len());
+            let loss = to_scalar_f32(&out[3 * n])? as f64;
+            losses.push(loss);
+            // Rotate state: outputs become next inputs (device literals are
+            // moved, never copied through host).
+            let vv: Vec<xla::Literal> = out.drain(2 * n..3 * n).collect();
+            let mm: Vec<xla::Literal> = out.drain(n..2 * n).collect();
+            let pp: Vec<xla::Literal> = out.drain(0..n).collect();
+            state.params = pp;
+            state.m = mm;
+            state.v = vv;
+        }
+        state.step += steps;
+        let final_loss = losses.last().copied().unwrap_or(f64::NAN);
+        Ok(TrainOutcome { losses, final_loss })
+    }
+
+    // -- evaluation ----------------------------------------------------------
+
+    /// Validation accuracy over `n_batches` batches (wraps the val set).
+    pub fn evaluate(
+        &self,
+        state: &TrainState,
+        bits: &[f32],
+        widths: &[f32],
+        n_batches: usize,
+    ) -> Result<f64> {
+        let nl = self.meta.num_layers as i64;
+        let bits_l = lit_f32(bits, &[nl])?;
+        let widths_l = lit_f32(widths, &[nl])?;
+        let mut correct = 0.0;
+        let mut total = 0.0;
+        for b in 0..n_batches {
+            let (x, y) = self.batch_literals(&self.val_data, b)?;
+            let mut args: Vec<&xla::Literal> =
+                Vec::with_capacity(self.meta.params.len() + 4);
+            args.extend(state.params.iter());
+            args.push(&x);
+            args.push(&y);
+            args.push(&bits_l);
+            args.push(&widths_l);
+            let out = self.eval_prog.run(&args)?;
+            correct += to_scalar_f32(&out[0])? as f64;
+            total += self.meta.batch as f64;
+        }
+        Ok(correct / total)
+    }
+
+    // -- sensitivity ----------------------------------------------------------
+
+    /// Hutchinson Hessian-trace estimates per quantized layer, averaged over
+    /// `n_samples` (seed, batch) draws. Returns RAW vHv sums; the pruner
+    /// normalizes by parameter counts (§III-A).
+    pub fn hessian_traces(
+        &self,
+        state: &TrainState,
+        widths: &[f32],
+        n_samples: usize,
+    ) -> Result<Vec<f64>> {
+        let nl = self.meta.num_layers;
+        let widths_l = lit_f32(widths, &[nl as i64])?;
+        let mut acc = vec![0f64; nl];
+        for s in 0..n_samples {
+            let (x, y) = self.batch_literals(&self.train_data, s)?;
+            let seed = lit_scalar_i32(s as i32 + 1);
+            let mut args: Vec<&xla::Literal> =
+                Vec::with_capacity(self.meta.params.len() + 4);
+            args.extend(state.params.iter());
+            args.push(&x);
+            args.push(&y);
+            args.push(&widths_l);
+            args.push(&seed);
+            let out = self.hess_prog.run(&args)?;
+            let est = to_vec_f32(&out[0])?;
+            anyhow::ensure!(est.len() == nl, "hessian arity {}", est.len());
+            for (a, e) in acc.iter_mut().zip(est) {
+                *a += e as f64;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a /= n_samples.max(1) as f64;
+        }
+        Ok(acc)
+    }
+}

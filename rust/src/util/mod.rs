@@ -1,0 +1,12 @@
+//! Substrate utilities implemented from scratch (the offline registry ships
+//! only the `xla` crate's dependency closure — no rand/serde/clap/criterion).
+
+pub mod rng;
+pub mod json;
+pub mod stats;
+pub mod cli;
+pub mod timer;
+pub mod proptest;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,112 @@
+//! Lightweight property-based-testing harness (proptest is not in the
+//! offline registry). Random-input generation with seeded reproducibility
+//! and a linear shrinking pass on failure.
+//!
+//! Used by the invariant tests on the coordinator (routing/batching/state),
+//! the search space, the hardware model, and k-means.
+
+use crate::util::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` over `cases` random inputs drawn by `gen`. On failure, attempts
+/// up to 64 shrink steps via `shrink` (return simpler candidates; first one
+/// that still fails is recursed on), then panics with the seed + the minimal
+/// failing input's Debug form.
+pub fn check<T, G, S, P>(name: &str, cases: usize, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let base_seed = 0xC0FFEE ^ name.len() as u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink.
+        let mut minimal = input.clone();
+        let mut budget = 64;
+        'outer: while budget > 0 {
+            for cand in shrink(&minimal) {
+                budget -= 1;
+                if !prop(&cand) {
+                    minimal = cand;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' falsified (case {case}, seed {seed:#x})\n\
+             original: {input:?}\nminimal:  {minimal:?}"
+        );
+    }
+}
+
+/// Convenience: no shrinking.
+pub fn check_no_shrink<T, G, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    check(name, cases, gen, |_| Vec::new(), prop);
+}
+
+/// Shrinker for vectors: halves, and single-element removals (first 8).
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        for i in 0..v.len().min(8) {
+            let mut c = v.to_vec();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check_no_shrink("tautology", 64, |r| r.below(100), |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn fails_false_property() {
+        check_no_shrink("contradiction", 8, |r| r.below(100), |&x| x > 1000);
+    }
+
+    #[test]
+    fn shrinks_to_small_case() {
+        // Property: sum < 50. Falsified by big vectors; shrinker should find
+        // a small one. We only assert the panic message contains "minimal".
+        let res = std::panic::catch_unwind(|| {
+            check(
+                "sum-small",
+                32,
+                |r| (0..20).map(|_| r.below(10) as u64).collect::<Vec<u64>>(),
+                |v| shrink_vec(v),
+                |v| v.iter().sum::<u64>() < 50,
+            );
+        });
+        if let Err(e) = res {
+            let msg = e.downcast_ref::<String>().cloned().unwrap_or_default();
+            assert!(msg.contains("minimal"), "{msg}");
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Small statistics helpers shared by the search, mlbase, and bench code.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// q-quantile (0 <= q <= 1) by linear interpolation on the sorted copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+pub fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+/// Running best-so-far transform (for convergence curves).
+pub fn cummax(xs: &[f64]) -> Vec<f64> {
+    let mut best = f64::NEG_INFINITY;
+    xs.iter()
+        .map(|&x| {
+            best = best.max(x);
+            best
+        })
+        .collect()
+}
+
+/// First index where the running best reaches `target` (within eps), if any.
+pub fn first_reach(xs: &[f64], target: f64, eps: f64) -> Option<usize> {
+    let mut best = f64::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        best = best.max(x);
+        if best >= target - eps {
+            return Some(i);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(argmax(&xs), 3);
+        assert_eq!(argmin(&xs), 0);
+        assert_eq!(max(&xs), 4.0);
+        assert_eq!(min(&xs), 1.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn cummax_works() {
+        assert_eq!(cummax(&[1.0, 3.0, 2.0, 5.0]), vec![1.0, 3.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn first_reach_works() {
+        assert_eq!(first_reach(&[0.1, 0.5, 0.4, 0.9], 0.9, 0.0), Some(3));
+        assert_eq!(first_reach(&[0.1, 0.2], 0.9, 0.0), None);
+    }
+}

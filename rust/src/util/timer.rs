@@ -1,0 +1,50 @@
+//! Wall-clock timing helpers used by the coordinator and the bench harness.
+
+use std::time::Instant;
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Measure `f` repeatedly: `warmup` unmeasured runs, then `iters` timed runs.
+/// Returns (mean_secs, min_secs, max_secs) per iteration.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len().max(1) as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    (mean, min, max)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn measure_counts() {
+        let mut n = 0;
+        let (mean, min, max) = super::measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert!(min <= mean && mean <= max);
+    }
+}

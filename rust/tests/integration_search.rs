@@ -1,0 +1,251 @@
+//! PJRT-free integration tests: search <-> hessian pruning <-> hardware model
+//! composition over a simulated accuracy landscape. Fast enough for every CI
+//! run (the PJRT-backed path is covered by integration_runtime.rs).
+
+use sammpq::coordinator::evaluator::{build_space, DimKind};
+use sammpq::hessian::pruner::prune_space;
+use sammpq::hw::{latency_cycles, HwConfig};
+use sammpq::runtime::meta::ModelMeta;
+use sammpq::search::space::Config;
+use sammpq::search::{KmeansTpe, KmeansTpeParams, Objective, Searcher, Space, Tpe, TpeParams};
+use sammpq::baselines::RandomSearch;
+use sammpq::util::proptest::check_no_shrink;
+use sammpq::util::rng::Rng;
+
+/// An 8-layer CNN-like meta (no artifacts involved).
+fn toy_meta() -> ModelMeta {
+    let mut layers = String::new();
+    let bases = [8usize, 8, 16, 16, 24, 24, 32, 10];
+    for i in 0..8 {
+        let kind = if i == 7 { "fc" } else { "conv" };
+        let (h, w) = (16 >> (i / 3).min(2), 16 >> (i / 3).min(2));
+        layers.push_str(&format!(
+            r#"{}{{"index":{i},"name":"l{i}","kind":"{kind}","ksize":3,"stride":1,
+              "in_base":{},"out_base":{},"cmax_in":{},"cmax_out":{},
+              "out_h":{h},"out_w":{w},"width_tie":{},"bits_tie":{i},
+              "width_fixed":{},"bits_free":true}}"#,
+            if i > 0 { "," } else { "" },
+            if i == 0 { 3 } else { bases[i - 1] },
+            bases[i],
+            if i == 0 { 3 } else { bases[i - 1] * 2 },
+            bases[i] * 2,
+            if i % 2 == 1 { i - 1 } else { i }, // odd layers tie to previous
+            i == 7,
+        ));
+    }
+    let meta = format!(
+        r#"{{"model":"toy","dataset":"cifar10","num_classes":10,"image_hw":16,
+           "batch":32,"num_layers":8,"width_mults":[0.75,0.875,1.0,1.125,1.25],
+           "params":[],"layers":[{layers}]}}"#
+    );
+    ModelMeta::parse(&meta).expect("toy meta")
+}
+
+/// Simulated accuracy landscape: accuracy falls when sensitive layers are
+/// quantized hard, recovers with width, saturates at high bits. Matches the
+/// qualitative structure the paper describes (flat plateaus included).
+struct SimulatedDnn {
+    meta: ModelMeta,
+    build: sammpq::coordinator::evaluator::SpaceBuild,
+    sensitivity: Vec<f64>,
+    hw: HwConfig,
+    budget_mb: f64,
+    pub evals: usize,
+}
+
+impl SimulatedDnn {
+    fn new(pruned: bool) -> SimulatedDnn {
+        let meta = toy_meta();
+        let sensitivity = vec![5.0, 0.3, 2.0, 0.2, 1.0, 0.1, 0.5, 3.0];
+        let build = if pruned {
+            let weights: Vec<usize> = meta
+                .net_shape(&meta.uniform_bits(16.0), &meta.base_widths())
+                .layers
+                .iter()
+                .map(|l| l.weights() as usize)
+                .collect();
+            let raw: Vec<f64> = sensitivity
+                .iter()
+                .zip(&weights)
+                .map(|(s, &w)| s * w as f64)
+                .collect();
+            let p = prune_space(&raw, &weights, 4);
+            build_space(&meta, Some(&p))
+        } else {
+            build_space(&meta, None)
+        };
+        SimulatedDnn {
+            meta,
+            build,
+            sensitivity,
+            hw: HwConfig::default(),
+            budget_mb: 0.008,
+            evals: 0,
+        }
+    }
+
+    fn accuracy(&self, bits: &[f32], widths: &[f32]) -> f64 {
+        let mut acc: f64 = 0.95;
+        for l in &self.meta.layers {
+            let b = bits[l.index] as f64;
+            let mult = widths[l.index] as f64 / l.out_base as f64;
+            // Quantization damage ~ sensitivity / 4^bits, softened by width.
+            let damage = self.sensitivity[l.index] * (4.0f64).powf(-(b - 2.0)) * 0.25;
+            acc -= damage / mult.max(0.5);
+        }
+        // Flat plateau structure.
+        (acc.max(0.1) * 50.0).round() / 50.0
+    }
+}
+
+impl Objective for SimulatedDnn {
+    fn space(&self) -> &Space {
+        &self.build.space
+    }
+
+    fn eval(&mut self, config: &Config) -> f64 {
+        self.evals += 1;
+        let (bits, widths) = self.build.decode(&self.meta, config);
+        let acc = self.accuracy(&bits, &widths);
+        let size = self.meta.net_shape(&bits, &widths).model_size_mb();
+        acc - 2.0 * (size / self.budget_mb - 1.0).max(0.0)
+    }
+}
+
+#[test]
+fn toy_meta_ties_resolve() {
+    let meta = toy_meta();
+    let build = build_space(&meta, None);
+    // 8 bits dims; width dims = even non-fc governors (0,2,4,6) = 4.
+    let n_bits = build.kinds.iter().filter(|k| matches!(k, DimKind::Bits(_))).count();
+    let n_width = build.kinds.iter().filter(|k| matches!(k, DimKind::Width(_))).count();
+    assert_eq!(n_bits, 8);
+    assert_eq!(n_width, 4);
+    // Odd layers inherit the previous layer's width.
+    let cfg: Config = build.space.dims.iter().map(|_| 0).collect();
+    let (_, widths) = build.decode(&meta, &cfg);
+    assert_eq!(widths[1], (0.75f64 * 8.0).round() as f32);
+}
+
+#[test]
+fn kmeans_tpe_beats_random_on_simulated_dnn() {
+    let budget = 80;
+    let mut km_sum = 0.0;
+    let mut rs_sum = 0.0;
+    for seed in 0..5 {
+        let mut obj = SimulatedDnn::new(true);
+        let h = KmeansTpe::new(KmeansTpeParams { n_startup: 15, seed, ..Default::default() })
+            .run(&mut obj, budget);
+        km_sum += h.best().unwrap().value;
+        let mut obj = SimulatedDnn::new(true);
+        let h = RandomSearch::new(seed).run(&mut obj, budget);
+        rs_sum += h.best().unwrap().value;
+    }
+    assert!(
+        km_sum >= rs_sum,
+        "kmeans-tpe mean {} vs random mean {}",
+        km_sum / 5.0,
+        rs_sum / 5.0
+    );
+}
+
+#[test]
+fn pruning_shrinks_space_and_does_not_hurt() {
+    let full = SimulatedDnn::new(false);
+    let pruned = SimulatedDnn::new(true);
+    assert!(pruned.build.space.cardinality() < full.build.space.cardinality());
+
+    let budget = 60;
+    let mut with_prune = 0.0;
+    let mut without = 0.0;
+    for seed in 0..5 {
+        let mut obj = SimulatedDnn::new(true);
+        with_prune += KmeansTpe::new(KmeansTpeParams { n_startup: 12, seed, ..Default::default() })
+            .run(&mut obj, budget)
+            .best()
+            .unwrap()
+            .value;
+        let mut obj = SimulatedDnn::new(false);
+        without += KmeansTpe::new(KmeansTpeParams { n_startup: 12, seed, ..Default::default() })
+            .run(&mut obj, budget)
+            .best()
+            .unwrap()
+            .value;
+    }
+    // Pruning must not lose quality at equal budget (usually it helps).
+    assert!(with_prune >= without - 0.15, "pruned {with_prune} vs full {without}");
+}
+
+#[test]
+fn kmeans_tpe_at_least_matches_tpe_on_flat_landscape() {
+    let budget = 80;
+    let mut km = Vec::new();
+    let mut tp = Vec::new();
+    for seed in 0..7 {
+        let mut obj = SimulatedDnn::new(true);
+        km.push(
+            KmeansTpe::new(KmeansTpeParams { n_startup: 15, seed, ..Default::default() })
+                .run(&mut obj, budget)
+                .best()
+                .unwrap()
+                .value,
+        );
+        let mut obj = SimulatedDnn::new(true);
+        tp.push(
+            Tpe::new(TpeParams { n_startup: 15, seed, ..Default::default() })
+                .run(&mut obj, budget)
+                .best()
+                .unwrap()
+                .value,
+        );
+    }
+    let km_mean: f64 = km.iter().sum::<f64>() / km.len() as f64;
+    let tp_mean: f64 = tp.iter().sum::<f64>() / tp.len() as f64;
+    assert!(km_mean >= tp_mean - 0.01, "km {km_mean} vs tpe {tp_mean}");
+}
+
+#[test]
+fn prop_decode_always_valid_and_hw_metrics_finite() {
+    let obj = SimulatedDnn::new(false);
+    let meta = toy_meta();
+    let hw = HwConfig::default();
+    check_no_shrink(
+        "decode-hw-finite",
+        256,
+        |r: &mut Rng| obj.build.space.sample(r),
+        |cfg| {
+            let (bits, widths) = obj.build.decode(&meta, cfg);
+            let ok_bits = bits.iter().all(|&b| (2.0..=8.0).contains(&b));
+            let ok_widths = meta
+                .layers
+                .iter()
+                .all(|l| widths[l.index] >= 1.0 && widths[l.index] <= l.cmax_out as f32);
+            let net = meta.net_shape(&bits, &widths);
+            let lat = latency_cycles(&hw, &net);
+            ok_bits && ok_widths && net.model_size_mb() > 0.0 && lat.is_finite() && lat > 0.0
+        },
+    );
+}
+
+#[test]
+fn prop_tied_layers_share_resolved_values() {
+    let meta = toy_meta();
+    let build = build_space(&meta, None);
+    check_no_shrink(
+        "ties-consistent",
+        128,
+        |r: &mut Rng| build.space.sample(r),
+        |cfg| {
+            let (bits, widths) = build.decode(&meta, cfg);
+            meta.layers.iter().all(|l| {
+                let gov = &meta.layers[l.width_tie];
+                let own_mult = widths[l.index] as f64 / l.out_base as f64;
+                let gov_mult = widths[gov.index] as f64 / gov.out_base as f64;
+                let width_ok =
+                    l.width_fixed || (own_mult - gov_mult).abs() < 0.13; // rounding slack
+                let bits_ok = bits[l.index] == bits[l.bits_tie];
+                width_ok && bits_ok
+            })
+        },
+    );
+}
