@@ -10,7 +10,11 @@
 //!
 //! Run: `cargo bench` (all) or `cargo bench -- fig3 table2 --effort quick`
 //! Filter names: fig1 fig3 fig3c fig4 table1 table2 table3 table4 ablations
-//!               kernels tpe hwmodel
+//!               kernels tpe tpe-hotpath hwmodel
+//!
+//! `tpe-hotpath` additionally records its proposals/sec numbers in
+//! `BENCH_tpe.json` at the workspace root, so the incremental-surrogate
+//! speedup is tracked across PRs.
 
 use sammpq::coordinator::report::Table;
 use sammpq::exp::{self, Effort};
@@ -138,6 +142,107 @@ fn bench_tpe() {
     }
 }
 
+/// Proposal hot path, incremental vs from-scratch, at fixed history sizes.
+///
+/// The incremental path is what `KmeansTpe` ships: warm-started 1-D k-means
+/// plus diff-maintained Parzens (`KmeansTpeState`). The baseline replicates
+/// the seed implementation's per-iteration cost: full quantile-seeded
+/// k-means over the value history plus two from-scratch `Parzen::fit`s.
+/// Both sides run with annealing off (constant k = 4) so the cost is purely
+/// a function of history size, and both only propose (no new observations
+/// between proposals), isolating the surrogate-maintenance cost.
+fn bench_tpe_hotpath() -> anyhow::Result<()> {
+    use sammpq::kmeans::kmeans_1d;
+    use sammpq::search::parzen::{propose, Parzen};
+    use sammpq::search::space::Config;
+    use sammpq::search::{KmeansTpeParams, KmeansTpeState};
+    use sammpq::util::json::{arr_f64, obj, Json};
+    use sammpq::util::rng::Rng;
+
+    section("tpe-hotpath (proposals/sec, incremental vs from-scratch)");
+    let dims = 20usize;
+    let choices = 5usize;
+    let space = Space::new(
+        (0..dims)
+            .map(|d| Dim::new(format!("d{d}"), (0..choices).map(|c| c as f64).collect()))
+            .collect(),
+    );
+    let params = KmeansTpeParams { anneal: false, ..Default::default() };
+
+    let sizes = [50usize, 200, 1000];
+    let mut inc_pps: Vec<f64> = Vec::new();
+    let mut scratch_pps: Vec<f64> = Vec::new();
+    for &n in &sizes {
+        // Synthetic history: random configs, smooth values + jitter.
+        let mut rng = Rng::new(42);
+        let configs: Vec<Config> = (0..n).map(|_| space.sample(&mut rng)).collect();
+        let values: Vec<f64> = configs
+            .iter()
+            .map(|c| -(c.iter().sum::<usize>() as f64) + 0.01 * rng.f64())
+            .collect();
+
+        // Incremental path (shipping implementation).
+        let mut state = KmeansTpeState::new(params, space.clone());
+        for (c, v) in configs.iter().zip(&values) {
+            state.observe(c.clone(), *v);
+        }
+        let mut prng = Rng::new(7);
+        let (inc_mean, _, _) = measure(10, 300, || {
+            let _ = state.propose(&mut prng);
+        });
+
+        // From-scratch refit baseline (the seed implementation's loop body).
+        let mut srng = Rng::new(7);
+        let (scr_mean, _, _) = measure(3, 300, || {
+            let k = ((1.0 / params.c0).ceil() as usize).max(3).min(n.max(3));
+            let clustering = kmeans_1d(&values, k);
+            let desirable: Vec<&Config> =
+                clustering.members[0].iter().map(|&t| &configs[t]).collect();
+            let undesirable: Vec<&Config> = clustering.members[clustering.k() - 1]
+                .iter()
+                .map(|&t| &configs[t])
+                .collect();
+            let l = Parzen::fit(&space, &desirable, params.prior_weight);
+            let g = Parzen::fit(&space, &undesirable, params.prior_weight);
+            let _ = propose(&l, &g, &mut srng, params.n_candidates);
+        });
+
+        let (ipps, spps) = (1.0 / inc_mean, 1.0 / scr_mean);
+        inc_pps.push(ipps);
+        scratch_pps.push(spps);
+        println!(
+            "history {n:>5}: incremental {:>9.0} prop/s | from-scratch {:>9.0} prop/s | {:.1}x",
+            ipps,
+            spps,
+            ipps / spps
+        );
+    }
+
+    let speedups: Vec<f64> =
+        inc_pps.iter().zip(&scratch_pps).map(|(i, s)| i / s).collect();
+    let record = obj(vec![
+        ("bench", Json::Str("tpe-hotpath".into())),
+        (
+            "space",
+            obj(vec![
+                ("dims", Json::Num(dims as f64)),
+                ("choices", Json::Num(choices as f64)),
+            ]),
+        ),
+        ("history_sizes", arr_f64(&sizes.iter().map(|&n| n as f64).collect::<Vec<_>>())),
+        ("incremental_proposals_per_sec", arr_f64(&inc_pps)),
+        ("from_scratch_proposals_per_sec", arr_f64(&scratch_pps)),
+        ("speedup", arr_f64(&speedups)),
+        (
+            "note",
+            Json::Str("regenerate with: cargo bench -- tpe-hotpath".into()),
+        ),
+    ]);
+    std::fs::write("BENCH_tpe.json", record.to_string_pretty() + "\n")?;
+    println!("recorded -> BENCH_tpe.json");
+    Ok(())
+}
+
 /// Hardware model + cycle simulator throughput.
 fn bench_hwmodel() -> anyhow::Result<()> {
     section("hardware model + simulator");
@@ -183,6 +288,9 @@ fn main() -> anyhow::Result<()> {
     }
     if should_run(&args, "tpe") {
         bench_tpe();
+    }
+    if should_run(&args, "tpe-hotpath") {
+        bench_tpe_hotpath()?;
     }
     if should_run(&args, "hwmodel") {
         bench_hwmodel()?;

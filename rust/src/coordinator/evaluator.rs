@@ -139,6 +139,12 @@ pub struct DnnObjective<'a> {
     pub log: Vec<EvalRecord>,
     /// FiP16 @ mult 1.0 baseline latency (cycles), computed once.
     baseline_cycles: f64,
+    /// Config-keyed eval cache: duplicate proposals (common on small pruned
+    /// spaces, and likelier still in batched constant-liar rounds) skip the
+    /// expensive proxy-QAT re-train and return the recorded metrics.
+    cache: std::collections::HashMap<Config, EvalRecord>,
+    /// Evaluations served from cache (the log still records every request).
+    pub cache_hits: usize,
 }
 
 impl<'a> DnnObjective<'a> {
@@ -152,7 +158,17 @@ impl<'a> DnnObjective<'a> {
         let meta = &session.meta;
         let (b16, w10) = meta.resolve(|_| 16.0, |_| 1.0);
         let baseline_cycles = baseline_latency_cycles(&hw, &meta.net_shape(&b16, &w10));
-        DnnObjective { session, pretrained, build, hw, cfg, log: Vec::new(), baseline_cycles }
+        DnnObjective {
+            session,
+            pretrained,
+            build,
+            hw,
+            cfg,
+            log: Vec::new(),
+            baseline_cycles,
+            cache: std::collections::HashMap::new(),
+            cache_hits: 0,
+        }
     }
 
     /// Hardware metrics only (no training) — used by one-shot baselines too.
@@ -224,14 +240,23 @@ impl<'a> Objective for DnnObjective<'a> {
     }
 
     fn eval(&mut self, config: &Config) -> f64 {
+        if let Some(rec) = self.cache.get(config) {
+            // Cache hit: identical metrics, no proxy-QAT re-train. The log
+            // still gains a row so trial-indexed analyses stay aligned.
+            let rec = rec.clone();
+            self.cache_hits += 1;
+            let value = rec.value;
+            self.log.push(rec);
+            return value;
+        }
         let meta = &self.session.meta;
         let (bits, widths) = self.build.decode(meta, config);
         let (size_mb, lat_ms, speedup) = self.hw_metrics(&bits, &widths);
-        let accuracy = match self.measure_accuracy(&bits, &widths) {
-            Ok(a) => a,
+        let (accuracy, acc_ok) = match self.measure_accuracy(&bits, &widths) {
+            Ok(a) => (a, true),
             Err(e) => {
                 eprintln!("[objective] eval failed: {e:#}");
-                0.0
+                (0.0, false)
             }
         };
         let value = if self.cfg.energy_budget_uj.is_finite() || self.cfg.throughput_min > 0.0 {
@@ -240,14 +265,20 @@ impl<'a> Objective for DnnObjective<'a> {
         } else {
             self.composite(accuracy, size_mb, lat_ms)
         };
-        self.log.push(EvalRecord {
+        let rec = EvalRecord {
             config: config.clone(),
             accuracy,
             size_mb,
             latency_ms: lat_ms,
             speedup,
             value,
-        });
+        };
+        if acc_ok {
+            // Failed evaluations are not cached — a transient runtime error
+            // should not pin a zero accuracy onto a config forever.
+            self.cache.insert(config.clone(), rec.clone());
+        }
+        self.log.push(rec);
         value
     }
 }

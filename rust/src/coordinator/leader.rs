@@ -14,7 +14,8 @@ use crate::coordinator::evaluator::{build_space, DnnObjective, EvalRecord, Objec
                                     SpaceBuild};
 use crate::hessian::pruner::{prune_space, PrunedSpace};
 use crate::hw::HwConfig;
-use crate::search::{History, KmeansTpe, KmeansTpeParams, Searcher, Tpe, TpeParams};
+use crate::search::{BatchSearcher, History, KmeansTpe, KmeansTpeParams, Searcher, Tpe,
+                    TpeParams};
 use crate::train::session::ModelSession;
 use crate::util::Timer;
 
@@ -37,6 +38,13 @@ pub struct LeaderCfg {
     pub objective: ObjectiveCfg,
     /// Skip Hessian pruning (ablation).
     pub prune: bool,
+    /// Proposals per search round (q). 1 = classic sequential loop; > 1
+    /// switches the TPE-family searchers to constant-liar batched rounds.
+    /// Rounds only pay off when the objective's `eval_batch` is actually
+    /// parallel (`RemoteObjective`, `ParallelObjective`); the in-process
+    /// `DnnObjective` the leader drives evaluates a round sequentially, so
+    /// q > 1 there trades surrogate freshness for no wall-clock gain.
+    pub batch_q: usize,
 }
 
 impl Default for LeaderCfg {
@@ -53,6 +61,7 @@ impl Default for LeaderCfg {
             final_lr: 3e-3,
             objective: ObjectiveCfg::default(),
             prune: true,
+            batch_q: 1,
         }
     }
 }
@@ -131,6 +140,25 @@ impl<'a> Leader<'a> {
     fn make_searcher(&self, algo: Algo) -> Box<dyn Searcher> {
         let seed = self.cfg.seed;
         let n0 = self.cfg.n_startup;
+        if self.cfg.batch_q > 1 {
+            // Batched rounds exist for the model-based TPE family; the other
+            // baselines keep their published sequential loops.
+            match algo {
+                Algo::KmeansTpe => {
+                    return Box::new(BatchSearcher::kmeans_tpe(
+                        KmeansTpeParams { n_startup: n0, seed, ..Default::default() },
+                        self.cfg.batch_q,
+                    ));
+                }
+                Algo::Tpe => {
+                    return Box::new(BatchSearcher::tpe(
+                        TpeParams { n_startup: n0, seed, ..Default::default() },
+                        self.cfg.batch_q,
+                    ));
+                }
+                _ => {}
+            }
+        }
         match algo {
             Algo::KmeansTpe => Box::new(KmeansTpe::new(KmeansTpeParams {
                 n_startup: n0,

@@ -6,11 +6,19 @@
 //! final training); `report` renders/dumps results for the experiment
 //! drivers in `exp/`.
 //!
-//! Evaluation is sequential on this single-core testbed: PJRT executables
-//! are not Send in the `xla` crate, so scale-out is process-level (one
-//! leader, N worker processes each owning a model session) — the leader/
-//! worker split is preserved in the CLI (`sammpq search --role worker` would
-//! shard trial ranges), while in-process evaluation stays on the hot path.
+//! In-process evaluation is single-threaded (PJRT executables are not Send
+//! in the `xla` crate), so scale-out is process-level: one leader, N worker
+//! processes each owning a model session (`sammpq worker`). The batch
+//! plumbing is layered: `LeaderCfg::batch_q > 1` switches the TPE-family
+//! searchers to constant-liar proposal rounds, and a batch-parallel
+//! `Objective` — `service::RemoteObjective` round-robinning a round across
+//! the worker pool, or `search::batch::ParallelObjective` for `Send`
+//! objectives — turns each round into concurrent evaluations. Note that
+//! `Leader::run` itself still evaluates through the in-process
+//! `DnnObjective` (sequential `eval_batch`, plus its eval cache); driving a
+//! remote pool from the leader CLI needs a space-sync + record-return
+//! protocol extension and is a ROADMAP open item. See `search::batch` and
+//! docs/ARCHITECTURE.md.
 
 pub mod evaluator;
 pub mod service;

@@ -14,10 +14,12 @@
 //!                        "size_mb": s, "latency_ms": l}
 //!   leader -> worker : {"shutdown": true}
 //!
-//! The searchers stay strictly sequential-model-based (TPE needs the full
-//! history before proposing), so the service parallelizes the RANDOM STARTUP
-//! phase (n0 independent evaluations) and batched proposals, which dominate
-//! wall-clock at paper-scale n0 = 40.
+//! Batching is first-class: `RemoteObjective::eval_batch` round-robins a
+//! whole proposal round across the pool, so a `BatchSearcher` (constant-liar
+//! proposals, `search::batch`) drives every worker concurrently — not just
+//! during random startup but for the entire search. Search wall-clock then
+//! scales with worker count while each worker keeps its own compiled
+//! artifacts warm.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -160,27 +162,57 @@ impl WorkerHandle {
 
 /// Evaluate a batch of configs across a pool of workers (round-robin
 /// dispatch, in-order collection per worker). Returns values in input order.
+///
+/// Degrades per worker: when one worker fails mid-round (dispatch or
+/// collect), only its uncollected share comes back as `NEG_INFINITY` —
+/// values already collected, and every other worker's share, survive. A
+/// sequential loop loses one evaluation per hiccup; a whole round of
+/// expensive proxy-QAT results should not be discarded for the same reason.
+/// Errors only when the pool is empty.
 pub fn evaluate_batch(workers: &mut [WorkerHandle], configs: &[Config]) -> Result<Vec<f64>> {
     anyhow::ensure!(!workers.is_empty(), "no workers");
-    let mut assignment: Vec<Vec<(usize, usize)>> = vec![Vec::new(); workers.len()];
+    let mut out = vec![f64::NAN; configs.len()];
+    let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
+    let mut dead = vec![false; workers.len()];
     for (i, cfg) in configs.iter().enumerate() {
         let w = i % workers.len();
-        workers[w].dispatch(i, cfg)?;
-        assignment[w].push((i, w));
+        if dead[w] {
+            out[i] = f64::NEG_INFINITY;
+            continue;
+        }
+        match workers[w].dispatch(i, cfg) {
+            Ok(()) => assignment[w].push(i),
+            Err(e) => {
+                eprintln!("[evaluate-batch] dispatch to worker {w} failed: {e:#}");
+                dead[w] = true;
+                out[i] = f64::NEG_INFINITY;
+            }
+        }
     }
-    let mut out = vec![f64::NAN; configs.len()];
     for (w, worker) in workers.iter_mut().enumerate() {
-        for _ in 0..assignment[w].len() {
-            let r = worker.collect()?;
-            out[r.id] = r.value;
+        for &id in &assignment[w] {
+            if dead[w] {
+                out[id] = f64::NEG_INFINITY;
+                continue;
+            }
+            match worker.collect() {
+                Ok(r) => out[r.id] = r.value,
+                Err(e) => {
+                    eprintln!("[evaluate-batch] worker {w} failed mid-round: {e:#}");
+                    dead[w] = true;
+                    out[id] = f64::NEG_INFINITY;
+                }
+            }
         }
     }
     Ok(out)
 }
 
 /// An `Objective` that evaluates remotely through a worker pool: lets any
-/// sequential searcher (TPE, k-means TPE, GP-BO...) run against worker
-/// processes without knowing about the wire. Single dispatch round-robin.
+/// searcher run against worker processes without knowing about the wire.
+/// Sequential `eval` round-robins single dispatches; `eval_batch` ships a
+/// whole proposal round across the pool at once, so batched searchers get
+/// process-level parallelism for free.
 pub struct RemoteObjective {
     space: crate::search::Space,
     workers: Vec<WorkerHandle>,
@@ -221,6 +253,23 @@ impl Objective for RemoteObjective {
             Err(e) => {
                 eprintln!("[remote-objective] worker {w} failed: {e:#}");
                 f64::NEG_INFINITY
+            }
+        }
+    }
+
+    /// Ship the whole batch across the pool: every worker gets ~|batch|/W
+    /// configs up front and evaluates them back-to-back, so batch wall-clock
+    /// is one worker's share instead of the sequential sum.
+    fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
+        if configs.is_empty() {
+            return Vec::new();
+        }
+        self.counter += configs.len();
+        match evaluate_batch(&mut self.workers, configs) {
+            Ok(values) => values,
+            Err(e) => {
+                eprintln!("[remote-objective] batch of {} failed: {e:#}", configs.len());
+                vec![f64::NEG_INFINITY; configs.len()]
             }
         }
     }
@@ -311,6 +360,56 @@ mod tests {
         assert!(h.best().unwrap().value >= 7.0, "best {}", h.best().unwrap().value);
         remote.shutdown().unwrap();
         assert_eq!(handle.join().unwrap(), 30);
+    }
+
+    #[test]
+    fn batch_searcher_drives_remote_pool() {
+        use crate::search::{BatchSearcher, KmeansTpeParams, Searcher};
+        let a1 = "127.0.0.1:47836";
+        let a2 = "127.0.0.1:47837";
+        let h1 = spawn_worker(a1);
+        let h2 = spawn_worker(a2);
+        let space = SumObj::new().space.clone();
+        let mut remote =
+            RemoteObjective::connect(space, &[a1.to_string(), a2.to_string()]).unwrap();
+        let p = KmeansTpeParams { n_startup: 8, seed: 1, ..Default::default() };
+        let h = BatchSearcher::kmeans_tpe(p, 4).run(&mut remote, 28);
+        assert_eq!(h.len(), 28);
+        // Optimum is 8; near-optimal suffices (transport under test).
+        assert!(h.best().unwrap().value >= 6.0, "best {}", h.best().unwrap().value);
+        remote.shutdown().unwrap();
+        // Both workers served work: the batch really was spread.
+        let (s1, s2) = (h1.join().unwrap(), h2.join().unwrap());
+        assert_eq!(s1 + s2, 28);
+        assert!(s1 > 0 && s2 > 0, "round-robin skipped a worker: {s1}/{s2}");
+    }
+
+    #[test]
+    fn batch_degrades_per_worker_on_failure() {
+        let good = "127.0.0.1:47838";
+        let bad = "127.0.0.1:47839";
+        let hg = spawn_worker(good);
+        // A "worker" that accepts the connection and immediately hangs up.
+        let hb = std::thread::spawn(move || {
+            let listener = TcpListener::bind(bad).unwrap();
+            let (stream, _) = listener.accept().unwrap();
+            drop(stream);
+        });
+        let mut pool = vec![
+            WorkerHandle::connect(good).unwrap(),
+            WorkerHandle::connect(bad).unwrap(),
+        ];
+        let configs: Vec<Config> =
+            vec![vec![0, 0, 0, 0], vec![1, 1, 1, 1], vec![2, 2, 2, 2]];
+        let values = evaluate_batch(&mut pool, &configs).unwrap();
+        // The healthy worker's share (ids 0 and 2) survives; only the dead
+        // worker's share is poisoned.
+        assert_eq!(values[0], 0.0);
+        assert_eq!(values[2], 8.0);
+        assert_eq!(values[1], f64::NEG_INFINITY);
+        pool[0].shutdown().unwrap();
+        assert_eq!(hg.join().unwrap(), 2);
+        hb.join().unwrap();
     }
 
     #[test]

@@ -26,26 +26,113 @@ pub struct Clustering {
 /// runs Lloyd to convergence (or 100 iterations), then relabels clusters by
 /// decreasing centroid.
 pub fn kmeans_1d(values: &[f64], k: usize) -> Clustering {
+    kmeans_1d_warm(values, k, None)
+}
+
+/// 1-D k-means with an optional warm start.
+///
+/// `warm` carries the previous iteration's converged centroids (any order).
+/// When provided they seed Lloyd directly — skipping the O(n log n) sort of
+/// quantile seeding — and, because the data typically changed by a single
+/// appended point, Lloyd converges in one or two assignment passes instead
+/// of a long migration from quantile seeds. If `warm`'s length differs from
+/// `k` (the k-means-TPE annealing schedule grows k over time), the seed set
+/// is repaired: the widest adjacent gap is split to add a centroid, the
+/// closest adjacent pair merged to drop one. Deterministic either way.
+pub fn kmeans_1d_warm(values: &[f64], k: usize, warm: Option<&[f64]>) -> Clustering {
     assert!(k >= 1, "k must be >= 1");
     assert!(!values.is_empty(), "kmeans on empty input");
     let k = k.min(values.len());
 
-    // Quantile seeding on a sorted copy.
-    let mut sorted = values.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mut centroids: Vec<f64> = (0..k)
-        .map(|i| {
-            let q = (2 * i + 1) as f64 / (2 * k) as f64;
-            let pos = q * (sorted.len() - 1) as f64;
-            let lo = pos.floor() as usize;
-            let hi = pos.ceil() as usize;
-            if lo == hi {
-                sorted[lo]
-            } else {
-                sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+    // Non-finite objective values (failure sentinels: -inf from a dead
+    // remote worker, NaN from a crashed eval) would poison centroid
+    // arithmetic — a NaN centroid panics the relabel sort, and an -inf
+    // centroid permanently disables the warm-start path. Cluster on a
+    // sanitized copy: -inf/NaN sink one spread below the finite minimum
+    // (so failures land in the bottom cluster, as the search intends) and
+    // +inf rises one spread above the maximum.
+    let sanitized: Vec<f64>;
+    let values: &[f64] = if values.iter().all(|v| v.is_finite()) {
+        values
+    } else {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in values {
+            if v.is_finite() {
+                lo = lo.min(v);
+                hi = hi.max(v);
             }
-        })
-        .collect();
+        }
+        let (lo, hi) = if lo <= hi { (lo, hi) } else { (0.0, 0.0) };
+        let gap = (hi - lo).max(1.0);
+        sanitized = values
+            .iter()
+            .map(|&v| {
+                if v.is_finite() {
+                    v
+                } else if v == f64::INFINITY {
+                    hi + gap
+                } else {
+                    lo - gap
+                }
+            })
+            .collect();
+        &sanitized
+    };
+
+    let mut centroids: Vec<f64> = match warm {
+        Some(w) if !w.is_empty() && w.iter().all(|c| c.is_finite()) => {
+            let mut c = w.to_vec();
+            c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            while c.len() > k {
+                // Merge the closest adjacent pair into its midpoint.
+                let (mut at, mut gap) = (0usize, f64::INFINITY);
+                for i in 0..c.len() - 1 {
+                    if c[i + 1] - c[i] < gap {
+                        gap = c[i + 1] - c[i];
+                        at = i;
+                    }
+                }
+                let mid = 0.5 * (c[at] + c[at + 1]);
+                c[at] = mid;
+                c.remove(at + 1);
+            }
+            while c.len() < k {
+                // Split the widest adjacent gap (degenerate data: jitter).
+                let (mut at, mut gap) = (0usize, -1.0);
+                for i in 0..c.len().saturating_sub(1) {
+                    if c[i + 1] - c[i] > gap {
+                        gap = c[i + 1] - c[i];
+                        at = i;
+                    }
+                }
+                if gap > 0.0 {
+                    c.insert(at + 1, 0.5 * (c[at] + c[at + 1]));
+                } else {
+                    let last = *c.last().unwrap();
+                    c.push(last + 1e-9 * (c.len() as f64 + 1.0));
+                }
+            }
+            c
+        }
+        _ => {
+            // Quantile seeding on a sorted copy.
+            let mut sorted = values.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (0..k)
+                .map(|i| {
+                    let q = (2 * i + 1) as f64 / (2 * k) as f64;
+                    let pos = q * (sorted.len() - 1) as f64;
+                    let lo = pos.floor() as usize;
+                    let hi = pos.ceil() as usize;
+                    if lo == hi {
+                        sorted[lo]
+                    } else {
+                        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+                    }
+                })
+                .collect()
+        }
+    };
     centroids.dedup();
     while centroids.len() < k {
         // Degenerate data (few distinct values): pad with jittered copies so
@@ -186,6 +273,54 @@ mod tests {
                 decreasing && valid && covered == vals.len()
             },
         );
+    }
+
+    #[test]
+    fn warm_start_valid_and_comparable_quality() {
+        let vals: Vec<f64> = (0..60).map(|i| (i % 7) as f64 + (i as f64) * 0.01).collect();
+        let cold = kmeans_1d(&vals, 4);
+        // Warm start from the cold solution on slightly grown data.
+        let mut grown = vals.clone();
+        grown.push(3.3);
+        let warm = kmeans_1d_warm(&grown, 4, Some(&cold.centroids));
+        assert_eq!(warm.k(), 4);
+        assert!(warm.centroids.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+        assert!(warm.assignment.iter().all(|&a| a < 4));
+        // Quality within a small factor of a cold solve on the same data.
+        let cold2 = kmeans_1d(&grown, 4);
+        assert!(warm.wcss(&grown) <= cold2.wcss(&grown) * 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn warm_start_repairs_k_mismatch() {
+        let vals: Vec<f64> = (0..40).map(|i| (i % 5) as f64 * 2.0).collect();
+        let c3 = kmeans_1d(&vals, 3);
+        // k grew (annealing) and shrank: both repaired deterministically.
+        let up = kmeans_1d_warm(&vals, 5, Some(&c3.centroids));
+        assert_eq!(up.k(), 5);
+        let down = kmeans_1d_warm(&vals, 2, Some(&c3.centroids));
+        assert_eq!(down.k(), 2);
+        let covered: usize = up.members.iter().map(|m| m.len()).sum();
+        assert_eq!(covered, vals.len());
+    }
+
+    #[test]
+    fn failure_sentinels_cluster_bottom_without_panicking() {
+        let mut vals: Vec<f64> = (0..20).map(|i| (i % 4) as f64).collect();
+        // Adjacent -inf sentinels used to make quantile interpolation
+        // produce NaN centroids and panic the relabel sort.
+        vals.push(f64::NEG_INFINITY);
+        vals.push(f64::NEG_INFINITY);
+        vals.push(f64::NAN);
+        let c = kmeans_1d(&vals, 4);
+        assert!(c.centroids.iter().all(|x| x.is_finite()), "{:?}", c.centroids);
+        let bottom = c.k() - 1;
+        assert_eq!(c.assignment[20], bottom);
+        assert_eq!(c.assignment[22], bottom);
+        // ...and the returned centroids keep the warm-start path alive.
+        let w = kmeans_1d_warm(&vals, 4, Some(&c.centroids));
+        assert!(w.centroids.iter().all(|x| x.is_finite()));
+        assert_eq!(w.assignment[21], w.k() - 1);
     }
 
     #[test]

@@ -29,6 +29,7 @@ fn leader_cfg_from(args: &Args) -> LeaderCfg {
     cfg.n_startup = args.get_usize("n0", cfg.n_evals / 4);
     cfg.final_steps = args.get_usize("final-steps", cfg.final_steps);
     cfg.prune = !args.has_flag("no-prune");
+    cfg.batch_q = args.get_usize("batch-q", 1).max(1);
     cfg.objective = ObjectiveCfg {
         steps_per_eval: args.get_usize("steps-per-eval", 16),
         eval_batches: args.get_usize("eval-batches", 3),
@@ -275,6 +276,7 @@ fn main() {
                  \x20 search      full pipeline: pretrain -> hessian prune -> search -> final train\n\
                  \x20             --model <tag> --algo kmeans-tpe|tpe|random|evo|rl|gp-bo\n\
                  \x20             --n <evals> --steps-per-eval <k> --size-budget-mb <m>\n\
+                 \x20             --batch-q <q>  (constant-liar batched rounds, q > 1)\n\
                  \x20 hessian     sensitivity report (--model, --k, --samples)\n\
                  \x20 hw          hardware model report (--model, --bits, --mult)\n\
                  \x20 convergence Fig. 3a/3b tabular study (no artifacts needed)\n\

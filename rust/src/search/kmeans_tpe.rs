@@ -12,12 +12,19 @@
 //! α per iteration, so k grows over time — cluster membership criteria
 //! tighten, move sizes shrink, and the search anneals from global exploration
 //! to local refinement.
+//!
+//! The proposal hot path is INCREMENTAL (see [`KmeansTpeState`]): k-means
+//! warm-starts from the previous iteration's centroids and the l/g Parzens
+//! are diff-maintained, so one proposal costs roughly O(n·k) for a 1–2 pass
+//! Lloyd refresh plus O(changed · dims) surrogate updates — instead of the
+//! from-scratch O(n log n + n·k·iters + n·dims) refit the seed implementation
+//! paid (the `tpe-hotpath` bench tracks the gap).
 
 use super::history::History;
-use super::parzen::{propose, Parzen};
-use super::space::Config;
+use super::parzen::{propose, SurrogatePair};
+use super::space::{Config, Space};
 use super::{Objective, Searcher};
-use crate::kmeans::kmeans_1d;
+use crate::kmeans::kmeans_1d_warm;
 use crate::util::rng::Rng;
 use crate::util::Timer;
 
@@ -55,12 +62,40 @@ impl Default for KmeansTpeParams {
     }
 }
 
+impl KmeansTpeParams {
+    /// Reject parameterizations that would panic or loop forever downstream.
+    /// Fuzz-guarded by a property test: any params accepted here must run.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_candidates == 0 {
+            return Err("n_candidates must be >= 1".to_string());
+        }
+        if !(self.c0.is_finite() && self.c0 > 0.0) {
+            return Err(format!("c0 must be positive and finite, got {}", self.c0));
+        }
+        if !(self.alpha.is_finite() && self.alpha > 0.0 && self.alpha <= 1.0) {
+            return Err(format!("alpha must be in (0, 1], got {}", self.alpha));
+        }
+        if !(self.prior_weight.is_finite() && self.prior_weight > 0.0) {
+            return Err(format!(
+                "prior_weight must be positive and finite, got {}",
+                self.prior_weight
+            ));
+        }
+        Ok(())
+    }
+}
+
 pub struct KmeansTpe {
     pub params: KmeansTpeParams,
 }
 
 impl KmeansTpe {
+    /// Panics on invalid params — use [`KmeansTpeParams::validate`] first
+    /// when the values come from user input.
     pub fn new(params: KmeansTpeParams) -> KmeansTpe {
+        if let Err(e) = params.validate() {
+            panic!("invalid KmeansTpeParams: {e}");
+        }
         KmeansTpe { params }
     }
 
@@ -69,13 +104,134 @@ impl KmeansTpe {
     /// requires k >= 3 so a non-trivial middle exists) and at most the
     /// number of observations.
     pub fn k_at(&self, iter: usize, n_obs: usize) -> usize {
-        let c = if self.params.anneal {
-            self.params.c0 * self.params.alpha.powi(iter as i32)
-        } else {
-            self.params.c0
-        };
-        let k = (1.0 / c).ceil() as usize;
-        k.max(3).min(n_obs.max(3))
+        k_schedule(&self.params, iter, n_obs)
+    }
+}
+
+fn k_schedule(params: &KmeansTpeParams, iter: usize, n_obs: usize) -> usize {
+    let c = if params.anneal {
+        params.c0 * params.alpha.powi(iter as i32)
+    } else {
+        params.c0
+    };
+    let k = (1.0 / c).ceil() as usize;
+    k.max(3).min(n_obs.max(3))
+}
+
+/// Incrementally maintained k-means-TPE surrogate state.
+///
+/// Owns the observed (config, value) history plus everything needed to make
+/// the next proposal cheap: the previous clustering's centroids (warm start
+/// for Lloyd) and a diff-maintained [`SurrogatePair`]. Drives both the
+/// sequential [`KmeansTpe`] searcher (q = 1) and the batched constant-liar
+/// path (`propose_batch`, used by `search::batch::BatchSearcher`).
+pub struct KmeansTpeState {
+    pub params: KmeansTpeParams,
+    space: Space,
+    configs: Vec<Config>,
+    values: Vec<f64>,
+    surr: SurrogatePair,
+    /// Proposal rounds made so far — drives the annealing schedule.
+    iter: usize,
+    /// Previous clustering's centroids (decreasing), for warm-started Lloyd.
+    warm: Vec<f64>,
+}
+
+impl KmeansTpeState {
+    pub fn new(params: KmeansTpeParams, space: Space) -> KmeansTpeState {
+        if let Err(e) = params.validate() {
+            panic!("invalid KmeansTpeParams: {e}");
+        }
+        let surr = SurrogatePair::new(&space, params.prior_weight);
+        KmeansTpeState {
+            params,
+            space,
+            configs: Vec::new(),
+            values: Vec::new(),
+            surr,
+            iter: 0,
+            warm: Vec::new(),
+        }
+    }
+
+    pub fn space(&self) -> &Space {
+        &self.space
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Record one completed trial: O(1) — surrogates refresh lazily on the
+    /// next proposal, via cluster-membership diffs.
+    pub fn observe(&mut self, config: Config, value: f64) {
+        self.configs.push(config);
+        self.values.push(value);
+    }
+
+    /// Recluster (warm-started) and re-point l/g at C1 / Ck via diffs.
+    fn refresh_surrogates(&mut self) {
+        let k = k_schedule(&self.params, self.iter, self.values.len());
+        let warm = if self.warm.is_empty() { None } else { Some(self.warm.as_slice()) };
+        let clustering = kmeans_1d_warm(&self.values, k, warm);
+        self.warm = clustering.centroids.clone();
+
+        let n = self.values.len();
+        let mut in_l = vec![false; n];
+        let mut in_g = vec![false; n];
+        let bottom = clustering.k() - 1;
+        for (i, &a) in clustering.assignment.iter().enumerate() {
+            // C1 = top-centroid cluster, Ck = bottom-centroid cluster
+            // (centroids are sorted decreasing).
+            if a == 0 {
+                in_l[i] = true;
+            } else if self.params.dual_threshold {
+                in_g[i] = a == bottom;
+            } else {
+                // Ablation: everything outside C1 feeds g(x).
+                in_g[i] = true;
+            }
+        }
+        self.surr.retarget(&self.configs, &in_l, &in_g);
+    }
+
+    /// Propose one config (sequential path). Falls back to a prior sample
+    /// while no observations exist.
+    pub fn propose(&mut self, rng: &mut Rng) -> Config {
+        if self.values.is_empty() {
+            return self.space.sample(rng);
+        }
+        self.refresh_surrogates();
+        self.iter += 1;
+        propose(&self.surr.l, &self.surr.g, rng, self.params.n_candidates)
+    }
+
+    /// Propose `q` configs for one evaluation round using the constant-liar
+    /// strategy: each pending proposal is pessimistically imputed into g(x)
+    /// (as if it had landed in the undesirable cluster) before the next one
+    /// is drawn, so the batch spreads over modes instead of collapsing onto
+    /// the single argmax of l/g. The liar entries are removed afterwards —
+    /// real values arrive through [`observe`](Self::observe).
+    pub fn propose_batch(&mut self, q: usize, rng: &mut Rng) -> Vec<Config> {
+        if self.values.is_empty() {
+            return (0..q).map(|_| self.space.sample(rng)).collect();
+        }
+        self.refresh_surrogates();
+        self.iter += 1; // one annealing step per round
+        let mut out: Vec<Config> = Vec::with_capacity(q);
+        for _ in 0..q {
+            let cand = propose(&self.surr.l, &self.surr.g, rng, self.params.n_candidates);
+            self.surr.g.add(&cand);
+            out.push(cand);
+        }
+        for cand in &out {
+            self.surr.g.remove(cand);
+        }
+        out
     }
 }
 
@@ -87,43 +243,18 @@ impl Searcher for KmeansTpe {
     fn run(&mut self, obj: &mut dyn Objective, budget: usize) -> History {
         let mut rng = Rng::new(self.params.seed ^ 0x6B7E);
         let mut hist = History::new(self.name());
-        let space = obj.space().clone();
+        let mut state = KmeansTpeState::new(self.params, obj.space().clone());
 
         for i in 0..budget {
             let config: Config = if i < self.params.n_startup.min(budget) {
-                space.sample(&mut rng)
+                state.space().sample(&mut rng)
             } else {
-                let values = hist.values();
-                let k = self.k_at(i - self.params.n_startup, values.len());
-                let clustering = kmeans_1d(&values, k);
-                // C1 = top-centroid cluster, Ck = bottom-centroid cluster
-                // (centroids are sorted decreasing).
-                let top_cluster = 0;
-                let bottom_cluster = clustering.k() - 1;
-                let desirable: Vec<&Config> = clustering.members[top_cluster]
-                    .iter()
-                    .map(|&t| &hist.trials[t].config)
-                    .collect();
-                let undesirable: Vec<&Config> = if self.params.dual_threshold {
-                    clustering.members[bottom_cluster]
-                        .iter()
-                        .map(|&t| &hist.trials[t].config)
-                        .collect()
-                } else {
-                    // Ablation: everything outside C1 feeds g(x).
-                    (0..clustering.k())
-                        .skip(1)
-                        .flat_map(|cl| clustering.members[cl].iter())
-                        .map(|&t| &hist.trials[t].config)
-                        .collect()
-                };
-                let l = Parzen::fit(&space, &desirable, self.params.prior_weight);
-                let g = Parzen::fit(&space, &undesirable, self.params.prior_weight);
-                propose(&l, &g, &mut rng, self.params.n_candidates)
+                state.propose(&mut rng)
             };
             let t = Timer::start();
             let value = obj.eval(&config);
-            hist.push(config, value, t.secs());
+            hist.push(config.clone(), value, t.secs());
+            state.observe(config, value);
         }
         hist
     }
@@ -134,6 +265,7 @@ mod tests {
     use super::*;
     use crate::search::space::{Dim, Space};
     use crate::search::tpe::{Tpe, TpeParams};
+    use crate::util::proptest::check_no_shrink;
 
     /// Flat-landscape objective modeling the paper's motivation: the value is
     /// a STEP function of the config quality (many configs share near-equal
@@ -227,6 +359,72 @@ mod tests {
         assert!(
             med(&km_evals) <= med(&tpe_evals),
             "kmeans-tpe {km_evals:?} vs tpe {tpe_evals:?}"
+        );
+    }
+
+    #[test]
+    fn state_propose_on_empty_history_is_prior_sample() {
+        let space = FlatPlateau::new(4).space.clone();
+        let mut state = KmeansTpeState::new(KmeansTpeParams::default(), space.clone());
+        let mut rng = Rng::new(0);
+        let c = state.propose(&mut rng);
+        assert!(space.validate(&c));
+        let batch = state.propose_batch(3, &mut rng);
+        assert_eq!(batch.len(), 3);
+        assert!(batch.iter().all(|c| space.validate(c)));
+    }
+
+    #[test]
+    fn propose_batch_cleans_up_liar_entries() {
+        // Constant-liar imputations must be fully removed after the round:
+        // with annealing off (constant k) a second surrogate refresh has no
+        // membership flips, so the g counts after a batch round must equal
+        // the pre-round counts exactly.
+        let space = Space::new(vec![
+            Dim::new("a", vec![0.0, 1.0, 2.0]),
+            Dim::new("b", vec![0.0, 1.0, 2.0]),
+        ]);
+        let params = KmeansTpeParams { n_startup: 0, anneal: false, ..Default::default() };
+        let mut state = KmeansTpeState::new(params, space.clone());
+        let mut rng = Rng::new(13);
+        for i in 0..12 {
+            let c = space.sample(&mut rng);
+            state.observe(c, (i % 5) as f64);
+        }
+        state.refresh_surrogates();
+        let l_before = state.surr.l.clone();
+        let g_before = state.surr.g.clone();
+        let batch = state.propose_batch(5, &mut rng);
+        assert_eq!(batch.len(), 5);
+        assert!(state.surr.l.same_counts(&l_before), "l drifted across a batch round");
+        assert!(state.surr.g.same_counts(&g_before), "g retained liar entries");
+    }
+
+    #[test]
+    fn prop_params_fuzz_valid_or_rejected() {
+        // Fuzz-guard: random (often garbage) params either fail validate()
+        // with a clear error, or drive a small search without panicking.
+        check_no_shrink(
+            "kmeans-tpe-params-fuzz",
+            96,
+            |r: &mut Rng| KmeansTpeParams {
+                n_startup: r.below(8),
+                c0: (r.f64() - 0.2) * 3.0,
+                alpha: r.f64() * 1.4,
+                n_candidates: r.below(6),
+                prior_weight: (r.f64() - 0.2) * 4.0,
+                seed: r.next_u64(),
+                anneal: r.bool(0.5),
+                dual_threshold: r.bool(0.5),
+            },
+            |p| match p.validate() {
+                Err(_) => true,
+                Ok(()) => {
+                    let mut obj = FlatPlateau::new(3);
+                    let h = KmeansTpe::new(*p).run(&mut obj, 12);
+                    h.len() == 12
+                }
+            },
         );
     }
 }

@@ -1,27 +1,41 @@
-//! Sequential model-based search: the paper's k-means TPE (§III-B, Alg. 1),
-//! the vanilla TPE it is compared against, and the shared machinery
-//! (search space, Parzen surrogates, trial history).
+//! Sequential + batched model-based search: the paper's k-means TPE
+//! (§III-B, Alg. 1), the vanilla TPE it is compared against, the shared
+//! machinery (search space, Parzen surrogates, trial history), and the
+//! batched-proposal / parallel-evaluation engine (`batch`).
 
 pub mod space;
 pub mod parzen;
 pub mod history;
 pub mod tpe;
 pub mod kmeans_tpe;
+pub mod batch;
 
+pub use batch::{eval_batch_parallel, BatchAlgo, BatchSearcher, CachedObjective, ParallelObjective};
 pub use history::{History, Trial};
-pub use kmeans_tpe::{KmeansTpe, KmeansTpeParams};
+pub use kmeans_tpe::{KmeansTpe, KmeansTpeParams, KmeansTpeState};
 pub use space::{Config, Dim, Space};
-pub use tpe::{Tpe, TpeParams};
+pub use tpe::{Tpe, TpeParams, TpeState};
 
 /// A maximization objective over a categorical search space.
 ///
 /// Implementations: the DNN config evaluator (proxy QAT + hardware model),
-/// the mlbase hyperparameter objectives (Fig. 3a/3b), and synthetic test
-/// functions.
+/// the mlbase hyperparameter objectives (Fig. 3a/3b), synthetic test
+/// functions, and the remote worker-pool objective.
 pub trait Objective {
     fn space(&self) -> &Space;
     /// Evaluate one configuration (indices into each dim's choices).
     fn eval(&mut self, config: &Config) -> f64;
+
+    /// Evaluate a whole proposal batch, returning values in input order.
+    ///
+    /// The default is a sequential loop, so every existing objective is
+    /// batch-capable unchanged. Override to exploit real parallelism:
+    /// [`batch::ParallelObjective`] fans a batch across thread-local
+    /// replicas, and the coordinator's `RemoteObjective` round-robins it
+    /// across worker processes.
+    fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
+        configs.iter().map(|c| self.eval(c)).collect()
+    }
 }
 
 /// A search algorithm consuming `budget` objective evaluations.

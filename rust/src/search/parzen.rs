@@ -6,57 +6,155 @@
 //! where w0 is the prior pseudo-count. `l(x)` and `g(x)` are two instances
 //! fit on the desirable / undesirable populations; the TPE acquisition
 //! maximizes `log l(x) - log g(x)`.
+//!
+//! The surrogate is maintained INCREMENTALLY: it stores per-dim pseudo-count
+//! vectors (prior included) plus per-dim totals, so adding or removing one
+//! config costs O(dims) instead of a refit over the whole population. Counts
+//! move by exactly 1.0, which f64 represents exactly below 2^52, so an
+//! incrementally maintained instance matches a from-scratch [`Parzen::fit`]
+//! bit-for-bit (covered by tests).
 
 use super::space::{Config, Space};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
 pub struct Parzen {
-    /// Per-dim, per-choice probabilities (already normalized).
-    probs: Vec<Vec<f64>>,
+    /// Per-dim, per-choice pseudo-counts (the prior weight is baked in).
+    counts: Vec<Vec<f64>>,
+    /// Per-dim count totals (sum over choices), maintained alongside.
+    totals: Vec<f64>,
 }
 
 impl Parzen {
+    /// An empty-population surrogate: every count is the prior pseudo-count,
+    /// i.e. the uniform prior over each dimension.
+    pub fn new_prior(space: &Space, prior_weight: f64) -> Parzen {
+        assert!(
+            prior_weight > 0.0 && prior_weight.is_finite(),
+            "prior_weight must be positive and finite, got {prior_weight}"
+        );
+        let counts: Vec<Vec<f64>> =
+            space.dims.iter().map(|dim| vec![prior_weight; dim.k()]).collect();
+        let totals = counts.iter().map(|c| prior_weight * c.len() as f64).collect();
+        Parzen { counts, totals }
+    }
+
     /// Fit from a population of configs. `prior_weight` > 0 keeps every
     /// choice reachable even with tiny populations.
     pub fn fit(space: &Space, population: &[&Config], prior_weight: f64) -> Parzen {
-        assert!(prior_weight > 0.0);
-        let probs = space
-            .dims
-            .iter()
-            .enumerate()
-            .map(|(d, dim)| {
-                let k = dim.k();
-                let mut counts = vec![prior_weight; k];
-                for cfg in population {
-                    counts[cfg[d]] += 1.0;
-                }
-                let total: f64 = counts.iter().sum();
-                counts.iter().map(|c| c / total).collect()
-            })
-            .collect();
-        Parzen { probs }
+        let mut p = Parzen::new_prior(space, prior_weight);
+        for cfg in population {
+            p.add(cfg);
+        }
+        p
+    }
+
+    /// Add one config to the population: O(dims).
+    pub fn add(&mut self, config: &Config) {
+        for (d, &c) in config.iter().enumerate() {
+            self.counts[d][c] += 1.0;
+            self.totals[d] += 1.0;
+        }
+    }
+
+    /// Remove one previously added config: O(dims). Exact inverse of [`add`].
+    pub fn remove(&mut self, config: &Config) {
+        for (d, &c) in config.iter().enumerate() {
+            self.counts[d][c] -= 1.0;
+            self.totals[d] -= 1.0;
+            debug_assert!(
+                self.counts[d][c] > 0.0,
+                "Parzen::remove of a config that was never added (dim {d})"
+            );
+        }
     }
 
     pub fn log_pdf(&self, config: &Config) -> f64 {
         config
             .iter()
             .enumerate()
-            .map(|(d, &c)| self.probs[d][c].ln())
+            .map(|(d, &c)| (self.counts[d][c] / self.totals[d]).ln())
             .sum()
     }
 
     pub fn sample(&self, rng: &mut Rng) -> Config {
-        self.probs.iter().map(|p| rng.weighted(p)).collect()
+        // `Rng::weighted` accepts unnormalized non-negative weights, so the
+        // raw pseudo-counts sample the same distribution as the probs.
+        self.counts.iter().map(|c| rng.weighted(c)).collect()
     }
 
     pub fn prob(&self, dim: usize, choice: usize) -> f64 {
-        self.probs[dim][choice]
+        self.counts[dim][choice] / self.totals[dim]
+    }
+
+    /// Raw pseudo-count (prior included) — used by the exactness tests.
+    pub fn count(&self, dim: usize, choice: usize) -> f64 {
+        self.counts[dim][choice]
+    }
+
+    /// Exact structural equality of counts (and therefore of all densities).
+    pub fn same_counts(&self, other: &Parzen) -> bool {
+        self.counts == other.counts && self.totals == other.totals
+    }
+}
+
+/// A diff-maintained l(x)/g(x) pair. Searchers re-point the desirable and
+/// undesirable populations every iteration (cluster membership and quantile
+/// membership both drift as history grows); `retarget` applies only the
+/// membership CHANGES to the two Parzens, so the per-iteration surrogate
+/// cost is O(changed · dims) instead of a full O(n · dims) refit — while
+/// staying exactly equal to a from-scratch fit of the same member sets.
+#[derive(Debug, Clone)]
+pub struct SurrogatePair {
+    pub l: Parzen,
+    pub g: Parzen,
+    in_l: Vec<bool>,
+    in_g: Vec<bool>,
+}
+
+impl SurrogatePair {
+    pub fn new(space: &Space, prior_weight: f64) -> SurrogatePair {
+        SurrogatePair {
+            l: Parzen::new_prior(space, prior_weight),
+            g: Parzen::new_prior(space, prior_weight),
+            in_l: Vec::new(),
+            in_g: Vec::new(),
+        }
+    }
+
+    /// Re-point the populations: `new_l[i]` / `new_g[i]` say whether trial
+    /// `i` (with config `configs[i]`) belongs to the desirable / undesirable
+    /// population. Only flips are applied to the Parzens.
+    pub fn retarget(&mut self, configs: &[Config], new_l: &[bool], new_g: &[bool]) {
+        debug_assert_eq!(configs.len(), new_l.len());
+        debug_assert_eq!(configs.len(), new_g.len());
+        self.in_l.resize(configs.len(), false);
+        self.in_g.resize(configs.len(), false);
+        for i in 0..configs.len() {
+            if new_l[i] != self.in_l[i] {
+                if new_l[i] {
+                    self.l.add(&configs[i]);
+                } else {
+                    self.l.remove(&configs[i]);
+                }
+                self.in_l[i] = new_l[i];
+            }
+            if new_g[i] != self.in_g[i] {
+                if new_g[i] {
+                    self.g.add(&configs[i]);
+                } else {
+                    self.g.remove(&configs[i]);
+                }
+                self.in_g[i] = new_g[i];
+            }
+        }
     }
 }
 
 /// Acquisition: draw `n_candidates` from `l`, return the one maximizing
-/// log l - log g (the l/g ratio of §III-B).
+/// log l - log g (the l/g ratio of §III-B). `n_candidates == 0` degrades to
+/// a single draw from `l` instead of panicking (see KmeansTpeParams
+/// validation for the strict guard).
 pub fn propose(
     l: &Parzen,
     g: &Parzen,
@@ -64,14 +162,14 @@ pub fn propose(
     n_candidates: usize,
 ) -> Config {
     let mut best: Option<(f64, Config)> = None;
-    for _ in 0..n_candidates {
+    for _ in 0..n_candidates.max(1) {
         let cand = l.sample(rng);
         let score = l.log_pdf(&cand) - g.log_pdf(&cand);
         if best.as_ref().map_or(true, |(s, _)| score > *s) {
             best = Some((score, cand));
         }
     }
-    best.unwrap().1
+    best.expect("propose: at least one candidate is always drawn").1
 }
 
 #[cfg(test)]
@@ -149,5 +247,60 @@ mod tests {
         }
         let freq = count2 as f64 / n as f64;
         assert!((freq - p.prob(0, 2)).abs() < 0.05, "freq={freq}");
+    }
+
+    #[test]
+    fn zero_candidates_does_not_panic() {
+        let s = space();
+        let l = Parzen::fit(&s, &[], 1.0);
+        let g = Parzen::fit(&s, &[], 1.0);
+        let mut rng = Rng::new(2);
+        let c = propose(&l, &g, &mut rng, 0);
+        assert!(s.validate(&c));
+    }
+
+    #[test]
+    fn incremental_add_remove_matches_fit_exactly() {
+        let s = space();
+        let mut rng = Rng::new(3);
+        let pop: Vec<Config> = (0..40).map(|_| s.sample(&mut rng)).collect();
+
+        // Add all, remove a scattered subset; compare with a fresh fit of
+        // the surviving population. Counts must match EXACTLY (no epsilon).
+        let mut inc = Parzen::new_prior(&s, 0.7);
+        for c in &pop {
+            inc.add(c);
+        }
+        let survivors: Vec<&Config> =
+            pop.iter().enumerate().filter(|(i, _)| i % 3 != 0).map(|(_, c)| c).collect();
+        for (i, c) in pop.iter().enumerate() {
+            if i % 3 == 0 {
+                inc.remove(c);
+            }
+        }
+        let fresh = Parzen::fit(&s, &survivors, 0.7);
+        assert!(inc.same_counts(&fresh));
+    }
+
+    #[test]
+    fn surrogate_pair_retarget_matches_fit() {
+        let s = space();
+        let mut rng = Rng::new(4);
+        let configs: Vec<Config> = (0..30).map(|_| s.sample(&mut rng)).collect();
+        let mut pair = SurrogatePair::new(&s, 1.0);
+
+        // Three successive re-targetings with overlapping member sets.
+        for round in 0..3 {
+            let in_l: Vec<bool> = (0..configs.len()).map(|i| (i + round) % 4 == 0).collect();
+            let in_g: Vec<bool> = (0..configs.len()).map(|i| (i + round) % 5 == 0).collect();
+            pair.retarget(&configs, &in_l, &in_g);
+
+            let l_pop: Vec<&Config> =
+                configs.iter().enumerate().filter(|(i, _)| in_l[*i]).map(|(_, c)| c).collect();
+            let g_pop: Vec<&Config> =
+                configs.iter().enumerate().filter(|(i, _)| in_g[*i]).map(|(_, c)| c).collect();
+            assert!(pair.l.same_counts(&Parzen::fit(&s, &l_pop, 1.0)), "round {round} l");
+            assert!(pair.g.same_counts(&Parzen::fit(&s, &g_pop, 1.0)), "round {round} g");
+        }
     }
 }

@@ -4,10 +4,15 @@
 //! Single quantile threshold: after n0 random startup trials, split observed
 //! objective values at the γ-quantile; l(x) fits the top γ fraction, g(x)
 //! the rest; propose argmax l/g among candidates sampled from l.
+//!
+//! Like [`KmeansTpeState`](super::kmeans_tpe::KmeansTpeState), the proposal
+//! path is incremental: [`TpeState`] keeps the trial indices sorted by value
+//! (one binary-search insert per observation instead of a full re-sort) and
+//! diff-maintains the l/g Parzens as the γ-quantile boundary drifts.
 
 use super::history::History;
-use super::parzen::{propose, Parzen};
-use super::space::Config;
+use super::parzen::{propose, SurrogatePair};
+use super::space::{Config, Space};
 use super::{Objective, Searcher};
 use crate::util::rng::Rng;
 use crate::util::Timer;
@@ -30,13 +35,146 @@ impl Default for TpeParams {
     }
 }
 
+impl TpeParams {
+    /// Reject parameterizations that would panic or degenerate downstream.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_candidates == 0 {
+            return Err("n_candidates must be >= 1".to_string());
+        }
+        if !(self.gamma.is_finite() && self.gamma > 0.0 && self.gamma <= 1.0) {
+            return Err(format!("gamma must be in (0, 1], got {}", self.gamma));
+        }
+        if !(self.prior_weight.is_finite() && self.prior_weight > 0.0) {
+            return Err(format!(
+                "prior_weight must be positive and finite, got {}",
+                self.prior_weight
+            ));
+        }
+        Ok(())
+    }
+}
+
 pub struct Tpe {
     pub params: TpeParams,
 }
 
 impl Tpe {
     pub fn new(params: TpeParams) -> Tpe {
+        if let Err(e) = params.validate() {
+            panic!("invalid TpeParams: {e}");
+        }
         Tpe { params }
+    }
+}
+
+/// Incrementally maintained vanilla-TPE surrogate state (see module docs).
+pub struct TpeState {
+    pub params: TpeParams,
+    space: Space,
+    configs: Vec<Config>,
+    values: Vec<f64>,
+    /// Trial indices sorted by DECREASING value (ties: insertion order),
+    /// maintained by binary-search insertion — never re-sorted.
+    order: Vec<usize>,
+    surr: SurrogatePair,
+}
+
+impl TpeState {
+    pub fn new(params: TpeParams, space: Space) -> TpeState {
+        if let Err(e) = params.validate() {
+            panic!("invalid TpeParams: {e}");
+        }
+        let surr = SurrogatePair::new(&space, params.prior_weight);
+        TpeState {
+            params,
+            space,
+            configs: Vec::new(),
+            values: Vec::new(),
+            order: Vec::new(),
+            surr,
+        }
+    }
+
+    pub fn space(&self) -> &Space {
+        &self.space
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Record one completed trial: a binary-search insert into the value
+    /// ordering (NaN values sort last).
+    pub fn observe(&mut self, config: Config, value: f64) {
+        let idx = self.values.len();
+        self.configs.push(config);
+        self.values.push(value);
+        let values = &self.values;
+        // First position whose value sorts strictly below `value`: equal
+        // values keep insertion order, matching a stable descending sort.
+        // NaN is ordered below every finite value (an incoming NaN goes to
+        // the end; a stored NaN never outranks a finite insert), keeping the
+        // sequence partitioned — `partial_cmp != Less` alone would leave
+        // stored NaNs "true" at the tail and silently corrupt the binary
+        // search.
+        let pos = if value.is_nan() {
+            self.order.len()
+        } else {
+            use std::cmp::Ordering::{Equal, Greater};
+            self.order.partition_point(|&t| {
+                matches!(values[t].partial_cmp(&value), Some(Greater) | Some(Equal))
+            })
+        };
+        self.order.insert(pos, idx);
+    }
+
+    /// Re-point l at the top-γ fraction and g at the rest, via diffs.
+    fn refresh_surrogates(&mut self) {
+        let n = self.values.len();
+        let n_top = (((n as f64) * self.params.gamma).ceil().max(1.0) as usize).min(n);
+        let mut in_l = vec![false; n];
+        let mut in_g = vec![false; n];
+        for (rank, &t) in self.order.iter().enumerate() {
+            if rank < n_top {
+                in_l[t] = true;
+            } else {
+                in_g[t] = true;
+            }
+        }
+        self.surr.retarget(&self.configs, &in_l, &in_g);
+    }
+
+    /// Propose one config; prior sample while no observations exist.
+    pub fn propose(&mut self, rng: &mut Rng) -> Config {
+        if self.values.is_empty() {
+            return self.space.sample(rng);
+        }
+        self.refresh_surrogates();
+        propose(&self.surr.l, &self.surr.g, rng, self.params.n_candidates)
+    }
+
+    /// Constant-liar batch proposal: pending proposals are imputed into g(x)
+    /// while the rest of the round is drawn, then removed (see
+    /// `KmeansTpeState::propose_batch` for the rationale).
+    pub fn propose_batch(&mut self, q: usize, rng: &mut Rng) -> Vec<Config> {
+        if self.values.is_empty() {
+            return (0..q).map(|_| self.space.sample(rng)).collect();
+        }
+        self.refresh_surrogates();
+        let mut out: Vec<Config> = Vec::with_capacity(q);
+        for _ in 0..q {
+            let cand = propose(&self.surr.l, &self.surr.g, rng, self.params.n_candidates);
+            self.surr.g.add(&cand);
+            out.push(cand);
+        }
+        for cand in &out {
+            self.surr.g.remove(cand);
+        }
+        out
     }
 }
 
@@ -48,35 +186,18 @@ impl Searcher for Tpe {
     fn run(&mut self, obj: &mut dyn Objective, budget: usize) -> History {
         let mut rng = Rng::new(self.params.seed ^ 0x79E);
         let mut hist = History::new(self.name());
-        let space = obj.space().clone();
+        let mut state = TpeState::new(self.params, obj.space().clone());
 
         for i in 0..budget {
             let config: Config = if i < self.params.n_startup {
-                space.sample(&mut rng)
+                state.space().sample(&mut rng)
             } else {
-                // Split at the gamma quantile (maximization: top gamma are
-                // desirable).
-                let mut order: Vec<usize> = (0..hist.len()).collect();
-                order.sort_by(|&a, &b| {
-                    hist.trials[b]
-                        .value
-                        .partial_cmp(&hist.trials[a].value)
-                        .unwrap()
-                });
-                let n_top = ((hist.len() as f64) * self.params.gamma)
-                    .ceil()
-                    .max(1.0) as usize;
-                let top: Vec<&Config> =
-                    order[..n_top].iter().map(|&i| &hist.trials[i].config).collect();
-                let rest: Vec<&Config> =
-                    order[n_top..].iter().map(|&i| &hist.trials[i].config).collect();
-                let l = Parzen::fit(&space, &top, self.params.prior_weight);
-                let g = Parzen::fit(&space, &rest, self.params.prior_weight);
-                propose(&l, &g, &mut rng, self.params.n_candidates)
+                state.propose(&mut rng)
             };
             let t = Timer::start();
             let value = obj.eval(&config);
-            hist.push(config, value, t.secs());
+            hist.push(config.clone(), value, t.secs());
+            state.observe(config, value);
         }
         hist
     }
@@ -153,5 +274,60 @@ mod tests {
         let mut tpe = Tpe::new(TpeParams::default());
         let hist = tpe.run(&mut obj, 25);
         assert_eq!(hist.len(), 25);
+    }
+
+    #[test]
+    fn incremental_order_matches_stable_sort() {
+        let space = Separable::new(2, 3).space.clone();
+        let mut state = TpeState::new(TpeParams::default(), space.clone());
+        let vals = [0.3, 0.9, 0.3, -1.0, 0.9, 0.0, 2.5];
+        let mut rng = Rng::new(11);
+        for &v in &vals {
+            state.observe(space.sample(&mut rng), v);
+        }
+        // Reference: the seed implementation's stable descending sort.
+        let mut expect: Vec<usize> = (0..vals.len()).collect();
+        expect.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
+        assert_eq!(state.order, expect);
+    }
+
+    #[test]
+    fn observe_tolerates_nan_values() {
+        let space = Separable::new(2, 3).space.clone();
+        let mut state = TpeState::new(TpeParams::default(), space.clone());
+        let mut rng = Rng::new(12);
+        for &v in &[0.5, f64::NAN, 0.9, f64::NAN, -0.2, 1.4] {
+            state.observe(space.sample(&mut rng), v);
+        }
+        // Finite values stay stably descending; NaNs sink to the end.
+        let ranked: Vec<f64> = state.order.iter().map(|&t| state.values[t]).collect();
+        assert_eq!(&ranked[..4], &[1.4, 0.9, 0.5, -0.2]);
+        assert!(ranked[4..].iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn surrogates_match_from_scratch_quantile_split() {
+        use crate::search::parzen::Parzen;
+        let space = Separable::new(3, 4).space.clone();
+        let params = TpeParams::default();
+        let mut state = TpeState::new(params, space.clone());
+        let mut rng = Rng::new(5);
+        for i in 0..37 {
+            let c = space.sample(&mut rng);
+            state.observe(c, (i % 9) as f64 * 0.1);
+        }
+        state.refresh_surrogates();
+
+        // From-scratch split, exactly as the seed implementation did it.
+        let n = state.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| state.values[b].partial_cmp(&state.values[a]).unwrap());
+        let n_top = ((n as f64) * params.gamma).ceil().max(1.0) as usize;
+        let top: Vec<&Config> = order[..n_top].iter().map(|&i| &state.configs[i]).collect();
+        let rest: Vec<&Config> = order[n_top..].iter().map(|&i| &state.configs[i]).collect();
+        let l = Parzen::fit(&space, &top, params.prior_weight);
+        let g = Parzen::fit(&space, &rest, params.prior_weight);
+        assert!(state.surr.l.same_counts(&l));
+        assert!(state.surr.g.same_counts(&g));
     }
 }
