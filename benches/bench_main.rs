@@ -10,7 +10,7 @@
 //!
 //! Run: `cargo bench` (all) or `cargo bench -- fig3 table2 --effort quick`
 //! Filter names: fig1 fig3 fig3c fig4 table1 table2 table3 table4 ablations
-//!               kernels tpe tpe-hotpath hwmodel
+//!               kernels tpe tpe-hotpath round-latency hwmodel
 //!
 //! `tpe-hotpath` additionally records its proposals/sec numbers in
 //! `BENCH_tpe.json` at the workspace root, so the incremental-surrogate
@@ -243,6 +243,124 @@ fn bench_tpe_hotpath() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Round latency under a straggler: 4 simulated TCP workers, one 10x
+/// slower, one 8-config batch round. Compares the blocking
+/// static-assignment collect (dispatch up front, collect per worker in
+/// order) against the async work-stealing pool, with an all-fast pool as
+/// the reference, and records the wall-clocks in BENCH_round_latency.json.
+/// The paper-level point: the blocking collect pays ~(straggler x share)
+/// per round, the pool pays ~one straggler deadline.
+fn bench_round_latency() -> anyhow::Result<()> {
+    use sammpq::coordinator::service::{
+        evaluate_batch_blocking, PoolCfg, WorkerHandle, WorkerPool,
+    };
+    use sammpq::search::space::Config;
+    use sammpq::search::SyntheticObjective;
+    use sammpq::util::json::{obj, Json};
+    use std::time::Duration;
+
+    section("round-latency (blocking vs async pool under a straggler)");
+    let fast = Duration::from_millis(30);
+    let slow = fast * 10;
+    let configs: Vec<Config> =
+        (0..8).map(|i| vec![i % 3, (i + 1) % 3, (i + 2) % 3, i % 2]).collect();
+    let expect: Vec<f64> = configs.iter().map(SyntheticObjective::expected_value).collect();
+
+    // Workers accept one connection each; spawn a fresh set per measurement.
+    type WorkerSet = (Vec<String>, Vec<std::thread::JoinHandle<usize>>);
+    fn spawn_set(sleeps: Vec<Duration>) -> anyhow::Result<WorkerSet> {
+        use sammpq::coordinator::service::serve_worker_on;
+        use sammpq::search::SyntheticObjective;
+        use std::net::TcpListener;
+        let mut addrs = Vec::new();
+        let mut joins = Vec::new();
+        for sleep in sleeps {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            addrs.push(listener.local_addr()?.to_string());
+            joins.push(std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                let mut o = SyntheticObjective::new(4, 3, sleep);
+                serve_worker_on(stream, &mut o).expect("bench worker")
+            }));
+        }
+        Ok((addrs, joins))
+    }
+    let one_slow = |i: usize| if i == 0 { slow } else { fast };
+
+    // (a) blocking static assignment, one straggler.
+    let (addrs, joins) = spawn_set((0..4).map(one_slow).collect())?;
+    let mut handles = addrs
+        .iter()
+        .map(|a| WorkerHandle::connect(a))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let t = Timer::start();
+    let got = evaluate_batch_blocking(&mut handles, &configs)?;
+    let blocking_secs = t.secs();
+    anyhow::ensure!(got == expect, "blocking values diverged");
+    for h in handles.iter_mut() {
+        h.shutdown()?;
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // (b) async pool, one straggler.
+    let (addrs, joins) = spawn_set((0..4).map(one_slow).collect())?;
+    let mut pool = WorkerPool::connect(&addrs, PoolCfg::default())?;
+    let t = Timer::start();
+    let got = pool.evaluate(&configs)?;
+    let async_secs = t.secs();
+    anyhow::ensure!(got == expect, "pool values diverged");
+    let stolen = pool.redispatched;
+    pool.shutdown()?;
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // (c) async pool, all workers fast (the straggler-free reference).
+    let (addrs, joins) = spawn_set(vec![fast; 4])?;
+    let mut pool = WorkerPool::connect(&addrs, PoolCfg::default())?;
+    let t = Timer::start();
+    let got = pool.evaluate(&configs)?;
+    let all_fast_secs = t.secs();
+    anyhow::ensure!(got == expect, "all-fast values diverged");
+    pool.shutdown()?;
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    println!(
+        "8-config round, 4 workers ({}ms evals, one at {}ms):",
+        fast.as_millis(),
+        slow.as_millis()
+    );
+    println!("  blocking collect : {:.1} ms", blocking_secs * 1e3);
+    println!("  async pool       : {:.1} ms ({stolen} straggler re-dispatches)", async_secs * 1e3);
+    println!("  all-fast pool    : {:.1} ms", all_fast_secs * 1e3);
+    println!(
+        "  async vs all-fast: {:.2}x (target < 2x) | async vs blocking: {:.2}x",
+        async_secs / all_fast_secs,
+        async_secs / blocking_secs
+    );
+
+    let record = obj(vec![
+        ("bench", Json::Str("round-latency".into())),
+        ("workers", Json::Num(4.0)),
+        ("round_size", Json::Num(configs.len() as f64)),
+        ("fast_eval_ms", Json::Num(fast.as_secs_f64() * 1e3)),
+        ("slow_eval_ms", Json::Num(slow.as_secs_f64() * 1e3)),
+        ("blocking_round_ms", Json::Num(blocking_secs * 1e3)),
+        ("async_round_ms", Json::Num(async_secs * 1e3)),
+        ("all_fast_round_ms", Json::Num(all_fast_secs * 1e3)),
+        ("async_over_all_fast", Json::Num(async_secs / all_fast_secs)),
+        ("straggler_redispatches", Json::Num(stolen as f64)),
+        ("note", Json::Str("regenerate with: cargo bench -- round-latency".into())),
+    ]);
+    std::fs::write("BENCH_round_latency.json", record.to_string_pretty() + "\n")?;
+    println!("recorded -> BENCH_round_latency.json");
+    Ok(())
+}
+
 /// Hardware model + cycle simulator throughput.
 fn bench_hwmodel() -> anyhow::Result<()> {
     section("hardware model + simulator");
@@ -291,6 +409,9 @@ fn main() -> anyhow::Result<()> {
     }
     if should_run(&args, "tpe-hotpath") {
         bench_tpe_hotpath()?;
+    }
+    if should_run(&args, "round-latency") {
+        bench_round_latency()?;
     }
     if should_run(&args, "hwmodel") {
         bench_hwmodel()?;

@@ -1,0 +1,69 @@
+//! Async straggler-tolerant worker pool, in-process edition: four TCP
+//! worker threads serve the synthetic objective — one of them 10x slower —
+//! and an adaptive-q batched k-means TPE search runs through the pool.
+//! Watch the round log: rounds keep near-all-fast wall-clock because the
+//! straggler's configs are re-dispatched to idle workers (first result
+//! wins), and q tracks the eval/proposal cost ratio.
+//!
+//! The multi-process equivalent is `sammpq worker --synthetic` plus
+//! `sammpq pool` (see the CLI help).
+//!
+//! Run: `cargo run --release --example async_pool [budget]`
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use sammpq::coordinator::service::{serve_worker_on, PoolCfg, RemoteObjective};
+use sammpq::search::{BatchSearcher, KmeansTpeParams, Objective, Searcher, SyntheticObjective};
+use sammpq::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let budget: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48).max(1);
+    let sleeps_ms = [200u64, 20, 20, 20]; // worker 0 is the straggler
+
+    let mut addrs = Vec::new();
+    let mut joins = Vec::new();
+    for &ms in &sleeps_ms {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(listener.local_addr()?.to_string());
+        joins.push(std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut obj = SyntheticObjective::new(8, 4, Duration::from_millis(ms));
+            serve_worker_on(stream, &mut obj).expect("worker")
+        }));
+    }
+    println!("pool: {} workers, per-eval sleeps {sleeps_ms:?} ms", addrs.len());
+
+    let space = SyntheticObjective::new(8, 4, Duration::ZERO).space().clone();
+    let mut remote = RemoteObjective::connect_with(space, &addrs, PoolCfg::default())?;
+    let params = KmeansTpeParams { n_startup: 12, seed: 0, ..Default::default() };
+    let mut searcher = BatchSearcher::kmeans_tpe_auto(params);
+    let t = Timer::start();
+    let h = searcher.run(&mut remote, budget);
+    let wall = t.secs();
+    remote.shutdown()?;
+    for (w, j) in joins.into_iter().enumerate() {
+        println!("worker {w} served {} evaluations", j.join().unwrap());
+    }
+
+    println!(
+        "best {:.1} after {} evals in {wall:.2}s — {} rounds, {} straggler \
+         re-dispatches, {} requeues",
+        h.best().unwrap().value,
+        h.len(),
+        searcher.rounds.len(),
+        remote.pool.redispatched,
+        remote.pool.requeued,
+    );
+    for (i, r) in searcher.rounds.iter().enumerate() {
+        println!(
+            "round {i:>2}: q={} distinct={} eval {:>5.0} ms{}",
+            r.q,
+            r.distinct,
+            r.eval_secs * 1e3,
+            if r.startup { " (startup)" } else { "" },
+        );
+    }
+    Ok(())
+}

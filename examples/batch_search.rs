@@ -15,8 +15,9 @@ use sammpq::search::{
 use sammpq::util::Timer;
 
 fn main() {
-    let q: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
-    let budget: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(80);
+    let q: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let budget: usize =
+        std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(80).max(1);
     let params = KmeansTpeParams { n_startup: 20, seed: 0, ..Default::default() };
 
     // Sequential baseline: one proposal, one evaluation, repeat.
@@ -52,6 +53,22 @@ fn main() {
     );
     println!(
         "rounds: sequential {budget} (one eval each) vs batched {} (q evals each)",
-        (budget + q - 1) / q.max(1),
+        budget.div_ceil(q.max(1)),
+    );
+
+    // Adaptive q: the controller reads the observed eval/proposal cost
+    // ratio (and the constant-liar diversification) and picks q per round.
+    let replicas: Vec<GbmTitanicObjective> =
+        (0..q).map(|_| GbmTitanicObjective::new(0)).collect();
+    let mut auto_obj = CachedObjective::new(ParallelObjective::new(replicas));
+    let mut auto = BatchSearcher::kmeans_tpe_auto(params);
+    let t = Timer::start();
+    let h = auto.run(&mut auto_obj, budget);
+    let auto_secs = t.secs();
+    let qs: Vec<usize> = auto.rounds.iter().map(|r| r.q).collect();
+    println!(
+        "adaptive q           : best {:.4}  wall {:6.2}s  q per round {qs:?}",
+        h.best().unwrap().value,
+        auto_secs,
     );
 }

@@ -14,8 +14,8 @@ use crate::coordinator::evaluator::{build_space, DnnObjective, EvalRecord, Objec
                                     SpaceBuild};
 use crate::hessian::pruner::{prune_space, PrunedSpace};
 use crate::hw::HwConfig;
-use crate::search::{BatchSearcher, History, KmeansTpe, KmeansTpeParams, Searcher, Tpe,
-                    TpeParams};
+use crate::search::{BatchSearcher, History, KmeansTpe, KmeansTpeParams, QPolicy, Searcher,
+                    Tpe, TpeParams};
 use crate::train::session::ModelSession;
 use crate::util::Timer;
 
@@ -38,13 +38,17 @@ pub struct LeaderCfg {
     pub objective: ObjectiveCfg,
     /// Skip Hessian pruning (ablation).
     pub prune: bool,
-    /// Proposals per search round (q). 1 = classic sequential loop; > 1
-    /// switches the TPE-family searchers to constant-liar batched rounds.
-    /// Rounds only pay off when the objective's `eval_batch` is actually
-    /// parallel (`RemoteObjective`, `ParallelObjective`); the in-process
-    /// `DnnObjective` the leader drives evaluates a round sequentially, so
-    /// q > 1 there trades surrogate freshness for no wall-clock gain.
-    pub batch_q: usize,
+    /// Proposals per search round (q), as parsed from `--batch-q <q>|auto`.
+    /// `Fixed(1)` = classic sequential loop; `Fixed(q > 1)` switches the
+    /// TPE-family searchers to constant-liar batched rounds; `Auto` tunes q
+    /// online between 1 and the objective's parallelism from the observed
+    /// eval/proposal cost ratio. Rounds only pay off when the objective's
+    /// `eval_batch` is actually parallel (`RemoteObjective`,
+    /// `ParallelObjective`); the in-process `DnnObjective` the leader
+    /// drives evaluates a round sequentially, so fixed q > 1 there trades
+    /// surrogate freshness for no wall-clock gain — and `Auto` correctly
+    /// collapses to q = 1 on it.
+    pub batch_q: QPolicy,
 }
 
 impl Default for LeaderCfg {
@@ -61,7 +65,7 @@ impl Default for LeaderCfg {
             final_lr: 3e-3,
             objective: ObjectiveCfg::default(),
             prune: true,
-            batch_q: 1,
+            batch_q: QPolicy::Fixed(1),
         }
     }
 }
@@ -126,6 +130,65 @@ pub struct SearchReport {
     pub final_secs: f64,
 }
 
+/// Build the searcher a `LeaderCfg` asks for. Separated from [`Leader`]
+/// (which needs a live `ModelSession`) so the `batch_q` -> searcher
+/// plumbing is testable without PJRT artifacts.
+fn searcher_for(cfg: &LeaderCfg, algo: Algo) -> Box<dyn Searcher> {
+    let seed = cfg.seed;
+    let n0 = cfg.n_startup;
+    if cfg.batch_q.batched() {
+        // Batched rounds exist for the model-based TPE family; the other
+        // baselines keep their published sequential loops.
+        let policy = cfg.batch_q;
+        match algo {
+            Algo::KmeansTpe => {
+                return Box::new(BatchSearcher::new(
+                    crate::search::BatchAlgo::KmeansTpe(KmeansTpeParams {
+                        n_startup: n0,
+                        seed,
+                        ..Default::default()
+                    }),
+                    policy,
+                ));
+            }
+            Algo::Tpe => {
+                return Box::new(BatchSearcher::new(
+                    crate::search::BatchAlgo::Tpe(TpeParams {
+                        n_startup: n0,
+                        seed,
+                        ..Default::default()
+                    }),
+                    policy,
+                ));
+            }
+            _ => {}
+        }
+    }
+    match algo {
+        Algo::KmeansTpe => Box::new(KmeansTpe::new(KmeansTpeParams {
+            n_startup: n0,
+            seed,
+            ..Default::default()
+        })),
+        Algo::Tpe => {
+            Box::new(Tpe::new(TpeParams { n_startup: n0, seed, ..Default::default() }))
+        }
+        Algo::Random => Box::new(RandomSearch::new(seed)),
+        Algo::Evolutionary => Box::new(Evolutionary::new(EvolutionaryParams {
+            seed,
+            ..Default::default()
+        })),
+        Algo::Reinforce => {
+            Box::new(Reinforce::new(ReinforceParams { seed, ..Default::default() }))
+        }
+        Algo::GpBo => Box::new(GpBo::new(GpBoParams {
+            n_startup: n0,
+            seed,
+            ..Default::default()
+        })),
+    }
+}
+
 pub struct Leader<'a> {
     pub session: &'a ModelSession,
     pub cfg: LeaderCfg,
@@ -138,50 +201,7 @@ impl<'a> Leader<'a> {
     }
 
     fn make_searcher(&self, algo: Algo) -> Box<dyn Searcher> {
-        let seed = self.cfg.seed;
-        let n0 = self.cfg.n_startup;
-        if self.cfg.batch_q > 1 {
-            // Batched rounds exist for the model-based TPE family; the other
-            // baselines keep their published sequential loops.
-            match algo {
-                Algo::KmeansTpe => {
-                    return Box::new(BatchSearcher::kmeans_tpe(
-                        KmeansTpeParams { n_startup: n0, seed, ..Default::default() },
-                        self.cfg.batch_q,
-                    ));
-                }
-                Algo::Tpe => {
-                    return Box::new(BatchSearcher::tpe(
-                        TpeParams { n_startup: n0, seed, ..Default::default() },
-                        self.cfg.batch_q,
-                    ));
-                }
-                _ => {}
-            }
-        }
-        match algo {
-            Algo::KmeansTpe => Box::new(KmeansTpe::new(KmeansTpeParams {
-                n_startup: n0,
-                seed,
-                ..Default::default()
-            })),
-            Algo::Tpe => {
-                Box::new(Tpe::new(TpeParams { n_startup: n0, seed, ..Default::default() }))
-            }
-            Algo::Random => Box::new(RandomSearch::new(seed)),
-            Algo::Evolutionary => Box::new(Evolutionary::new(EvolutionaryParams {
-                seed,
-                ..Default::default()
-            })),
-            Algo::Reinforce => {
-                Box::new(Reinforce::new(ReinforceParams { seed, ..Default::default() }))
-            }
-            Algo::GpBo => Box::new(GpBo::new(GpBoParams {
-                n_startup: n0,
-                seed,
-                ..Default::default()
-            })),
-        }
+        searcher_for(&self.cfg, algo)
     }
 
     /// Run the full pipeline with the given algorithm.
@@ -278,5 +298,40 @@ impl<'a> Leader<'a> {
             search_secs,
             final_secs,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_q_parses_fixed_and_auto() {
+        assert_eq!(QPolicy::parse("auto"), Some(QPolicy::Auto));
+        assert_eq!(QPolicy::parse("AUTO"), Some(QPolicy::Auto));
+        assert_eq!(QPolicy::parse("4"), Some(QPolicy::Fixed(4)));
+        // 0 is clamped to the sequential loop, garbage is rejected.
+        assert_eq!(QPolicy::parse("0"), Some(QPolicy::Fixed(1)));
+        assert_eq!(QPolicy::parse("q"), None);
+        assert!(!QPolicy::Fixed(1).batched());
+        assert!(QPolicy::Fixed(2).batched());
+        assert!(QPolicy::Auto.batched());
+    }
+
+    #[test]
+    fn batch_q_reaches_the_searcher() {
+        // The --batch-q plumbing must actually change which searcher the
+        // leader runs: fixed q > 1 and auto select the batched TPE family,
+        // q = 1 keeps the sequential loops, baselines are never batched.
+        let mut cfg = LeaderCfg::default();
+        assert_eq!(searcher_for(&cfg, Algo::KmeansTpe).name(), "kmeans-tpe");
+        assert_eq!(searcher_for(&cfg, Algo::Tpe).name(), "tpe");
+        cfg.batch_q = QPolicy::Fixed(4);
+        assert_eq!(searcher_for(&cfg, Algo::KmeansTpe).name(), "batch-kmeans-tpe");
+        assert_eq!(searcher_for(&cfg, Algo::Tpe).name(), "batch-tpe");
+        cfg.batch_q = QPolicy::Auto;
+        assert_eq!(searcher_for(&cfg, Algo::KmeansTpe).name(), "batch-kmeans-tpe");
+        assert_eq!(searcher_for(&cfg, Algo::Random).name(), "random");
+        assert_eq!(searcher_for(&cfg, Algo::GpBo).name(), "gp-bo");
     }
 }

@@ -9,15 +9,18 @@
 //! In-process evaluation is single-threaded (PJRT executables are not Send
 //! in the `xla` crate), so scale-out is process-level: one leader, N worker
 //! processes each owning a model session (`sammpq worker`). The batch
-//! plumbing is layered: `LeaderCfg::batch_q > 1` switches the TPE-family
-//! searchers to constant-liar proposal rounds, and a batch-parallel
-//! `Objective` — `service::RemoteObjective` round-robinning a round across
-//! the worker pool, or `search::batch::ParallelObjective` for `Send`
-//! objectives — turns each round into concurrent evaluations. Note that
-//! `Leader::run` itself still evaluates through the in-process
-//! `DnnObjective` (sequential `eval_batch`, plus its eval cache); driving a
-//! remote pool from the leader CLI needs a space-sync + record-return
-//! protocol extension and is a ROADMAP open item. See `search::batch` and
+//! plumbing is layered: `LeaderCfg::batch_q` (fixed q > 1, or `auto` for
+//! the online q tuner) switches the TPE-family searchers to constant-liar
+//! proposal rounds, and a batch-parallel `Objective` —
+//! `service::RemoteObjective` work-stealing a round across the async
+//! straggler-tolerant `service::WorkerPool`, or
+//! `search::batch::ParallelObjective` for `Send` objectives — turns each
+//! round into concurrent evaluations. Note that `Leader::run` itself still
+//! evaluates through the in-process `DnnObjective` (sequential
+//! `eval_batch`, plus its eval cache); driving a remote pool from the
+//! leader CLI needs a space-sync + record-return protocol extension and is
+//! a ROADMAP open item (`sammpq pool` demos the pool end-to-end on the
+//! synthetic objective meanwhile). See `search::batch` and
 //! docs/ARCHITECTURE.md.
 
 pub mod evaluator;
@@ -27,3 +30,4 @@ pub mod report;
 
 pub use evaluator::{build_space, DimKind, DnnObjective, EvalRecord, ObjectiveCfg, SpaceBuild};
 pub use leader::{Algo, Leader, LeaderCfg, SearchReport};
+pub use service::{PoolCfg, RemoteObjective, WorkerPool};

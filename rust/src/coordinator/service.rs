@@ -6,29 +6,41 @@
 //! like the multi-GPU search farms the paper's baselines use. Each worker
 //! process owns a full `ModelSession` (its own compiled artifacts + data)
 //! and serves objective evaluations over TCP; the leader distributes trial
-//! configs round-robin and collects (J, accuracy, size, latency) records.
+//! configs and collects (id, J) records.
 //!
 //! Wire protocol: JSON-lines over TCP.
 //!   leader -> worker : {"id": n, "config": [..]}            one per line
-//!   worker -> leader : {"id": n, "value": J, "accuracy": a,
-//!                        "size_mb": s, "latency_ms": l}
+//!   worker -> leader : {"id": n, "value": J}
+//!                    | {"id": n, "error": "..."}  per-eval failure; the
+//!                      connection stays up, the leader records -inf for
+//!                      that evaluation only
 //!   leader -> worker : {"shutdown": true}
 //!
-//! Batching is first-class: `RemoteObjective::eval_batch` round-robins a
-//! whole proposal round across the pool, so a `BatchSearcher` (constant-liar
-//! proposals, `search::batch`) drives every worker concurrently — not just
-//! during random startup but for the entire search. Search wall-clock then
-//! scales with worker count while each worker keeps its own compiled
-//! artifacts warm.
+//! The leader side is an **async, straggler-tolerant worker pool**
+//! ([`WorkerPool`]): one reader thread per connection feeds completions into
+//! an mpsc channel, configs are pulled from a shared round queue by whichever
+//! worker goes idle first (work stealing, not a static round-robin split),
+//! outstanding evaluations whose age exceeds a deadline derived from the
+//! pool's EWMA eval time are re-dispatched to idle workers (first result
+//! wins, duplicates are discarded by dispatch id), and a worker that dies
+//! mid-round has its outstanding configs requeued — not poisoned with
+//! `-inf` — while the pool attempts a bounded reconnection. The previous
+//! static dispatch/in-order collect is retained as
+//! [`evaluate_batch_blocking`], the baseline the `round-latency` bench
+//! measures the pool against.
 
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::search::space::Config;
 use crate::search::Objective;
 use crate::util::json::{obj, Json};
+use crate::util::timer::Ewma;
 
 /// One evaluation result as shipped over the wire.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,6 +49,11 @@ pub struct RemoteEval {
     pub value: f64,
 }
 
+/// Upper bound on one wire message. A config line is a few bytes per
+/// dimension, so anything near this is a protocol violation (or garbage on
+/// the port) — better to fail the connection than to buffer unboundedly.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
 fn write_line(stream: &mut TcpStream, j: &Json) -> Result<()> {
     let mut s = j.to_string_compact();
     s.push('\n');
@@ -44,50 +61,152 @@ fn write_line(stream: &mut TcpStream, j: &Json) -> Result<()> {
     Ok(())
 }
 
-fn read_line(reader: &mut BufReader<TcpStream>) -> Result<Option<Json>> {
-    let mut line = String::new();
-    let n = reader.read_line(&mut line)?;
-    if n == 0 {
-        return Ok(None);
-    }
-    Ok(Some(Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad line: {e}"))?))
-}
-
-/// Worker: serve evaluations of `objective` until shutdown (or disconnect).
-/// Returns the number of evaluations served.
-pub fn serve_worker(addr: &str, objective: &mut dyn Objective) -> Result<usize> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    let (stream, _) = listener.accept()?;
-    serve_worker_on(stream, objective)
-}
-
-/// Worker loop on an accepted connection (separated for tests).
-pub fn serve_worker_on(stream: TcpStream, objective: &mut dyn Objective) -> Result<usize> {
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut served = 0;
+/// Read one JSON-lines message. `Ok(None)` is a CLEAN end-of-stream — the
+/// peer closed at a message boundary (finished / shut down). A connection
+/// that drops mid-message, a line over [`MAX_LINE_BYTES`], or unparseable
+/// JSON are all `Err` — the reconnect logic treats those as a crashed peer,
+/// whereas a clean EOF retires the connection without retrying.
+fn read_json_line<R: BufRead>(reader: &mut R) -> Result<Option<Json>> {
+    let mut line: Vec<u8> = Vec::new();
     loop {
-        let Some(msg) = read_line(&mut reader)? else {
-            break;
+        let (found_newline, used) = {
+            let buf = match reader.fill_buf() {
+                Ok(b) => b,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            };
+            if buf.is_empty() {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                anyhow::bail!("mid-message disconnect after {} bytes", line.len());
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(nl) => {
+                    line.extend_from_slice(&buf[..nl]);
+                    (true, nl + 1)
+                }
+                None => {
+                    line.extend_from_slice(buf);
+                    (false, buf.len())
+                }
+            }
         };
-        if msg.get("shutdown").and_then(|j| j.as_bool()).unwrap_or(false) {
+        reader.consume(used);
+        // Checked on BOTH paths: a newline found inside the current chunk
+        // must not smuggle an oversized line past the cap.
+        anyhow::ensure!(
+            line.len() <= MAX_LINE_BYTES,
+            "line exceeds {MAX_LINE_BYTES} bytes — dropping connection"
+        );
+        if found_newline {
             break;
         }
+    }
+    let text = std::str::from_utf8(&line).context("non-utf8 line")?;
+    Ok(Some(Json::parse(text.trim()).map_err(|e| anyhow::anyhow!("bad line: {e}"))?))
+}
+
+fn parse_eval(msg: &Json) -> Result<RemoteEval> {
+    let id = msg.req("id")?.as_usize().context("id")?;
+    // A per-evaluation error reply ({"id": n, "error": "..."}): the worker
+    // is healthy and keeps its connection — only this evaluation failed
+    // (e.g. a config outside the worker's space, a leader-side bug). It
+    // surfaces as -inf for that slot, not as a dead worker.
+    if let Some(err) = msg.get("error").and_then(|j| j.as_str()) {
+        eprintln!("[pool] evaluation {id} failed on the worker: {err}");
+        return Ok(RemoteEval { id, value: f64::NEG_INFINITY });
+    }
+    Ok(RemoteEval { id, value: msg.req("value")?.as_f64().context("value")? })
+}
+
+/// Worker: serve evaluations of `objective` until an explicit shutdown
+/// message. Leader connections are served one at a time; a dropped
+/// connection — clean EOF or mid-message crash — sends the worker back to
+/// `accept`, so a leader pool's reconnect finds the worker process still
+/// alive (the pool-side reconnect budget is pointless if the worker exits
+/// on the first blip). Returns the total evaluations served.
+pub fn serve_worker(addr: &str, objective: &mut dyn Objective) -> Result<usize> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let mut served = 0;
+    loop {
+        let (stream, _) = listener.accept()?;
+        match serve_conn(stream, objective, &mut served) {
+            Ok(true) => return Ok(served),
+            Ok(false) => {
+                eprintln!(
+                    "[worker] leader disconnected ({served} evals so far); awaiting reconnect"
+                );
+            }
+            Err(e) => {
+                eprintln!(
+                    "[worker] connection failed: {e:#} ({served} evals so far); \
+                     awaiting reconnect"
+                );
+            }
+        }
+    }
+}
+
+/// Worker loop on one accepted connection (separated for tests).
+///
+/// A clean leader EOF ends the loop with `Ok`; a mid-message disconnect (the
+/// leader crashed while writing) surfaces as `Err`, so process supervisors
+/// can tell the two apart.
+pub fn serve_worker_on(stream: TcpStream, objective: &mut dyn Objective) -> Result<usize> {
+    let mut served = 0;
+    serve_conn(stream, objective, &mut served)?;
+    Ok(served)
+}
+
+/// One connection's serve loop. Increments `served` per evaluation as it
+/// goes (so counts survive a connection that later errors) and returns
+/// whether an explicit shutdown message ended it.
+///
+/// An invalid config gets an `{"id": n, "error": "..."}` reply and the loop
+/// CONTINUES: the request was bad, not the connection — dropping the socket
+/// here would read as a clean EOF on the leader and retire a healthy worker.
+fn serve_conn(
+    stream: TcpStream,
+    objective: &mut dyn Objective,
+    served: &mut usize,
+) -> Result<bool> {
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let Some(msg) = read_json_line(&mut reader)? else {
+            return Ok(false);
+        };
+        if msg.get("shutdown").and_then(|j| j.as_bool()).unwrap_or(false) {
+            return Ok(true);
+        }
         let id = msg.req("id")?.as_usize().context("id")?;
-        let config: Config = msg
-            .req("config")?
-            .as_arr()
-            .context("config")?
-            .iter()
-            .map(|v| v.as_usize().unwrap_or(0))
-            .collect();
-        anyhow::ensure!(
-            objective.space().validate(&config),
-            "invalid config for space ({} dims)",
-            objective.space().num_dims()
-        );
+        // Non-numeric elements must NOT coerce to choice 0 (always a valid
+        // index — the search would silently fold a wrong config's value
+        // into its surrogate); they take the same error-reply path as an
+        // out-of-range config.
+        let parsed: Option<Config> =
+            msg.req("config")?.as_arr().context("config")?.iter().map(|v| v.as_usize()).collect();
+        let config = match parsed {
+            Some(c) if objective.space().validate(&c) => c,
+            _ => {
+                let detail = format!(
+                    "invalid config for space ({} dims)",
+                    objective.space().num_dims()
+                );
+                eprintln!("[worker] rejecting evaluation {id}: {detail}");
+                write_line(
+                    &mut writer,
+                    &obj(vec![
+                        ("id", Json::Num(id as f64)),
+                        ("error", Json::Str(detail)),
+                    ]),
+                )?;
+                continue;
+            }
+        };
         let value = objective.eval(&config);
-        served += 1;
+        *served += 1;
         write_line(
             &mut writer,
             &obj(vec![
@@ -96,10 +215,29 @@ pub fn serve_worker_on(stream: TcpStream, objective: &mut dyn Objective) -> Resu
             ]),
         )?;
     }
-    Ok(served)
 }
 
-/// Leader-side handle to one worker connection.
+/// Retrying TCP connect — workers may still be compiling artifacts.
+fn connect_with_retry(addr: &str) -> Result<TcpStream> {
+    let mut delay = Duration::from_millis(50);
+    for attempt in 0..60 {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) if attempt < 59 => {
+                let _ = e;
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_secs(2));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    unreachable!()
+}
+
+/// Leader-side handle to one worker connection — the simple synchronous
+/// dispatch/collect pair. [`WorkerPool`] supersedes it for round execution;
+/// it remains the transport for the blocking baseline
+/// ([`evaluate_batch_blocking`]) and for protocol-level tests.
 pub struct WorkerHandle {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
@@ -109,27 +247,9 @@ pub struct WorkerHandle {
 
 impl WorkerHandle {
     pub fn connect(addr: &str) -> Result<WorkerHandle> {
-        // Workers may still be compiling artifacts: retry with backoff.
-        let mut delay = std::time::Duration::from_millis(50);
-        for attempt in 0..60 {
-            match TcpStream::connect(addr) {
-                Ok(stream) => {
-                    let writer = stream.try_clone()?;
-                    return Ok(WorkerHandle {
-                        writer,
-                        reader: BufReader::new(stream),
-                        dispatched: 0,
-                    });
-                }
-                Err(e) if attempt < 59 => {
-                    let _ = e;
-                    std::thread::sleep(delay);
-                    delay = (delay * 2).min(std::time::Duration::from_secs(2));
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
-        unreachable!()
+        let stream = connect_with_retry(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(WorkerHandle { writer, reader: BufReader::new(stream), dispatched: 0 })
     }
 
     pub fn dispatch(&mut self, id: usize, config: &Config) -> Result<()> {
@@ -147,12 +267,9 @@ impl WorkerHandle {
     }
 
     pub fn collect(&mut self) -> Result<RemoteEval> {
-        let msg = read_line(&mut self.reader)?
+        let msg = read_json_line(&mut self.reader)?
             .ok_or_else(|| anyhow::anyhow!("worker disconnected"))?;
-        Ok(RemoteEval {
-            id: msg.req("id")?.as_usize().context("id")?,
-            value: msg.req("value")?.as_f64().context("value")?,
-        })
+        parse_eval(&msg)
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
@@ -160,16 +277,19 @@ impl WorkerHandle {
     }
 }
 
-/// Evaluate a batch of configs across a pool of workers (round-robin
-/// dispatch, in-order collection per worker). Returns values in input order.
+/// Static-assignment baseline: dispatch the whole round up front (config i
+/// to worker i mod W) and collect per worker, IN ORDER. One slow worker
+/// stalls the round tail — with W workers and one 10x straggler, the round
+/// takes ~10x the all-fast wall-clock. Retained for the `round-latency`
+/// bench and as the degraded-mode reference: a worker failing mid-round
+/// poisons only its own uncollected share with `NEG_INFINITY`.
 ///
-/// Degrades per worker: when one worker fails mid-round (dispatch or
-/// collect), only its uncollected share comes back as `NEG_INFINITY` —
-/// values already collected, and every other worker's share, survive. A
-/// sequential loop loses one evaluation per hiccup; a whole round of
-/// expensive proxy-QAT results should not be discarded for the same reason.
-/// Errors only when the pool is empty.
-pub fn evaluate_batch(workers: &mut [WorkerHandle], configs: &[Config]) -> Result<Vec<f64>> {
+/// New code should use [`WorkerPool::evaluate`], which work-steals the
+/// queue, re-dispatches stragglers, and requeues instead of poisoning.
+pub fn evaluate_batch_blocking(
+    workers: &mut [WorkerHandle],
+    configs: &[Config],
+) -> Result<Vec<f64>> {
     anyhow::ensure!(!workers.is_empty(), "no workers");
     let mut out = vec![f64::NAN; configs.len()];
     let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
@@ -208,33 +328,557 @@ pub fn evaluate_batch(workers: &mut [WorkerHandle], configs: &[Config]) -> Resul
     Ok(out)
 }
 
-/// An `Objective` that evaluates remotely through a worker pool: lets any
-/// searcher run against worker processes without knowing about the wire.
-/// Sequential `eval` round-robins single dispatches; `eval_batch` ships a
-/// whole proposal round across the pool at once, so batched searchers get
-/// process-level parallelism for free.
+// ---------------------------------------------------------------------------
+// Async straggler-tolerant worker pool
+// ---------------------------------------------------------------------------
+
+/// Tuning for the async pool's straggler and failure handling.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolCfg {
+    /// An outstanding evaluation is eligible for re-dispatch to an idle
+    /// worker once its age exceeds `straggler_factor` x (pool EWMA eval
+    /// time). Re-dispatch only ever uses workers that would otherwise sit
+    /// idle, so an aggressive factor wastes no capacity — duplicates lose
+    /// the first-result-wins race and are discarded.
+    pub straggler_factor: f64,
+    /// Deadline floor, so near-instant objectives don't thrash.
+    pub min_straggle: Duration,
+    /// Reconnection attempts per crash before a worker is retired; the
+    /// budget refills once a reconnected worker completes an evaluation
+    /// (transient blips don't accumulate, crash loops still retire).
+    /// Clean EOFs never reconnect — a peer that closes at a message
+    /// boundary left on purpose.
+    pub reconnect_attempts: usize,
+    /// Initial reconnect backoff (doubles per attempt).
+    pub reconnect_backoff: Duration,
+    /// Poll granularity of the collect loop (straggler checks, reconnects).
+    pub tick: Duration,
+}
+
+impl Default for PoolCfg {
+    fn default() -> Self {
+        PoolCfg {
+            straggler_factor: 2.0,
+            min_straggle: Duration::from_millis(25),
+            reconnect_attempts: 3,
+            reconnect_backoff: Duration::from_millis(100),
+            tick: Duration::from_millis(5),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Outstanding {
+    round: u64,
+    slot: usize,
+    at: Instant,
+}
+
+enum PoolEvent {
+    Result { worker: usize, generation: u64, eval: RemoteEval },
+    Down { worker: usize, generation: u64, clean: bool, error: String },
+}
+
+struct PoolWorker {
+    /// Remote address, for reconnection. `None` for adopted raw streams
+    /// (tests) — those cannot reconnect.
+    addr: Option<String>,
+    writer: Option<TcpStream>,
+    /// Bumped on every failure/reconnect; events from readers of older
+    /// generations are stale and discarded.
+    generation: u64,
+    alive: bool,
+    /// Permanently out of the pool (clean EOF or reconnect budget spent).
+    retired: bool,
+    reconnects_left: usize,
+    next_reconnect: Option<Instant>,
+    backoff: Duration,
+    /// Completions on the current connection — a connection that served
+    /// work refills the reconnect budget when it later drops (see
+    /// `fail_worker`).
+    evals_since_connect: usize,
+    /// dispatch id -> what it is computing.
+    outstanding: HashMap<usize, Outstanding>,
+    /// Evaluations dispatched to this worker so far (stats).
+    dispatched: usize,
+}
+
+/// Per-round working state of [`WorkerPool::evaluate`].
+struct Round<'c> {
+    configs: &'c [Config],
+    /// Slots not yet dispatched (or requeued after a worker failure).
+    queue: VecDeque<usize>,
+    done: Vec<bool>,
+    out: Vec<f64>,
+    remaining: usize,
+}
+
+/// Async straggler-tolerant worker pool (see module docs).
+///
+/// One reader thread per connection turns the blocking sockets into a
+/// non-blocking event stream; the pool itself stays single-threaded and
+/// deterministic in its bookkeeping. Pipeline depth is one outstanding
+/// evaluation per worker: "busy" is then exactly "has one eval in flight",
+/// which keeps straggler re-dispatch and failure requeue unambiguous. The
+/// extra round-trip per eval is noise against proxy-QAT evaluation costs
+/// (and cheap objectives should run with small q anyway — see the adaptive
+/// controller in `search::batch`).
+pub struct WorkerPool {
+    workers: Vec<PoolWorker>,
+    tx: Sender<PoolEvent>,
+    rx: Receiver<PoolEvent>,
+    cfg: PoolCfg,
+    /// Monotone dispatch-id source; ids are never reused, so a late or
+    /// duplicate result can always be attributed (then discarded).
+    next_id: usize,
+    /// Current `evaluate` call; results for older rounds update the EWMA
+    /// but never touch the current round's slots.
+    round: u64,
+    eval_ewma: Ewma,
+    /// Completed evaluations (duplicates included).
+    pub completed: usize,
+    /// Straggler re-dispatches issued.
+    pub redispatched: usize,
+    /// Slots requeued after a worker failure.
+    pub requeued: usize,
+    /// Successful reconnections.
+    pub reconnects: usize,
+}
+
+impl WorkerPool {
+    pub fn connect(addrs: &[String], cfg: PoolCfg) -> Result<WorkerPool> {
+        anyhow::ensure!(!addrs.is_empty(), "no worker addresses");
+        let mut pool = WorkerPool::empty(cfg);
+        for addr in addrs {
+            let stream = connect_with_retry(addr)?;
+            pool.push_worker(Some(addr.clone()), stream)?;
+        }
+        Ok(pool)
+    }
+
+    /// Adopt already-connected streams (tests, in-process demos). These
+    /// workers cannot reconnect — no address to dial.
+    pub fn from_streams(streams: Vec<TcpStream>, cfg: PoolCfg) -> Result<WorkerPool> {
+        anyhow::ensure!(!streams.is_empty(), "no worker streams");
+        let mut pool = WorkerPool::empty(cfg);
+        for stream in streams {
+            pool.push_worker(None, stream)?;
+        }
+        Ok(pool)
+    }
+
+    fn empty(cfg: PoolCfg) -> WorkerPool {
+        let (tx, rx) = mpsc::channel();
+        WorkerPool {
+            workers: Vec::new(),
+            tx,
+            rx,
+            cfg,
+            next_id: 0,
+            round: 0,
+            // Alpha 0.5: adapt within a couple of observations, but one
+            // straggler completion doesn't dominate the deadline.
+            eval_ewma: Ewma::new(0.5),
+            completed: 0,
+            redispatched: 0,
+            requeued: 0,
+            reconnects: 0,
+        }
+    }
+
+    fn push_worker(&mut self, addr: Option<String>, stream: TcpStream) -> Result<()> {
+        let reader = stream.try_clone()?;
+        let w = self.workers.len();
+        self.workers.push(PoolWorker {
+            addr,
+            writer: Some(stream),
+            generation: 0,
+            alive: true,
+            retired: false,
+            reconnects_left: self.cfg.reconnect_attempts,
+            next_reconnect: None,
+            backoff: self.cfg.reconnect_backoff,
+            evals_since_connect: 0,
+            outstanding: HashMap::new(),
+            dispatched: 0,
+        });
+        spawn_reader(self.tx.clone(), w, 0, reader);
+        Ok(())
+    }
+
+    /// Live workers — the parallel capacity an adaptive batch size should
+    /// saturate.
+    pub fn capacity(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// Evaluations dispatched per worker (stats; includes re-dispatches).
+    pub fn dispatched(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.dispatched).collect()
+    }
+
+    /// Best-effort shutdown notification to every live worker.
+    pub fn shutdown(&mut self) -> Result<()> {
+        for pw in self.workers.iter_mut() {
+            if let Some(stream) = pw.writer.as_mut() {
+                let _ = write_line(stream, &obj(vec![("shutdown", Json::Bool(true))]));
+            }
+            pw.writer = None;
+            pw.alive = false;
+            pw.retired = true;
+        }
+        Ok(())
+    }
+
+    /// Evaluate a round of configs across the pool. Returns values in input
+    /// order. Errors only when every worker is dead (reconnect budget
+    /// included) with work still unfinished — individual worker failures
+    /// requeue their configs onto the surviving workers instead.
+    pub fn evaluate(&mut self, configs: &[Config]) -> Result<Vec<f64>> {
+        if configs.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.round += 1;
+        let mut r = Round {
+            configs,
+            queue: (0..configs.len()).collect(),
+            done: vec![false; configs.len()],
+            out: vec![f64::NAN; configs.len()],
+            remaining: configs.len(),
+        };
+        while r.remaining > 0 {
+            self.try_reconnect();
+            self.fill_idle(&mut r);
+            self.steal_stragglers(&mut r);
+            if r.remaining == 0 {
+                break;
+            }
+            if self.workers.iter().all(|pw| !pw.alive) && !self.reconnect_possible() {
+                anyhow::bail!(
+                    "worker pool exhausted with {} evaluations unfinished",
+                    r.remaining
+                );
+            }
+            match self.rx.recv_timeout(self.cfg.tick) {
+                Ok(ev) => {
+                    self.handle_event(ev, &mut r);
+                    // Drain everything already queued before re-dispatching,
+                    // so one pass of fill_idle sees all freed workers.
+                    while let Ok(ev) = self.rx.try_recv() {
+                        self.handle_event(ev, &mut r);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    unreachable!("pool holds its own event sender")
+                }
+            }
+        }
+        Ok(r.out)
+    }
+
+    fn reconnect_possible(&self) -> bool {
+        self.workers
+            .iter()
+            .any(|pw| !pw.alive && !pw.retired && pw.reconnects_left > 0 && pw.addr.is_some())
+    }
+
+    /// Hand queued slots to idle live workers (one in flight per worker).
+    fn fill_idle(&mut self, r: &mut Round) {
+        for w in 0..self.workers.len() {
+            if !self.workers[w].alive || !self.workers[w].outstanding.is_empty() {
+                continue;
+            }
+            while let Some(slot) = r.queue.pop_front() {
+                if r.done[slot] {
+                    // Requeued after a failure, then finished by a
+                    // re-dispatched duplicate — nothing left to do.
+                    continue;
+                }
+                if !self.dispatch_to(w, slot, r) {
+                    // Write failed; the worker is down now and the slot
+                    // still needs a home.
+                    r.queue.push_front(slot);
+                }
+                break;
+            }
+        }
+    }
+
+    fn dispatch_to(&mut self, w: usize, slot: usize, r: &mut Round) -> bool {
+        let id = self.next_id;
+        self.next_id += 1;
+        let msg = obj(vec![
+            ("id", Json::Num(id as f64)),
+            (
+                "config",
+                Json::Arr(r.configs[slot].iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+        ]);
+        let wrote = match self.workers[w].writer.as_mut() {
+            Some(stream) => write_line(stream, &msg).is_ok(),
+            None => false,
+        };
+        if wrote {
+            let pw = &mut self.workers[w];
+            pw.dispatched += 1;
+            pw.outstanding
+                .insert(id, Outstanding { round: self.round, slot, at: Instant::now() });
+            true
+        } else {
+            self.fail_worker(w, "dispatch write failed", false, r);
+            false
+        }
+    }
+
+    /// Take a worker out of rotation: bump its generation (stale reader
+    /// events get discarded), requeue this round's outstanding work, and
+    /// schedule a bounded reconnection unless the disconnect was clean.
+    fn fail_worker(&mut self, w: usize, reason: &str, clean: bool, r: &mut Round) {
+        let round = self.round;
+        let (lost, can_reconnect) = {
+            let pw = &mut self.workers[w];
+            pw.alive = false;
+            pw.generation += 1;
+            pw.writer = None;
+            if clean {
+                pw.retired = true;
+            }
+            // `reconnect_attempts` bounds retries per CRASH, not per worker
+            // lifetime: a connection that proved itself (served at least one
+            // eval) refills the budget, so transient blips hours apart never
+            // accumulate into permanent retirement — while a crash loop
+            // (reconnects that never serve anything) still burns the budget
+            // monotonically and retires.
+            if pw.evals_since_connect > 0 {
+                pw.reconnects_left = self.cfg.reconnect_attempts;
+                pw.backoff = self.cfg.reconnect_backoff;
+                pw.evals_since_connect = 0;
+            }
+            let mut lost: Vec<usize> = pw
+                .outstanding
+                .drain()
+                .filter(|(_, o)| o.round == round && !r.done[o.slot])
+                .map(|(_, o)| o.slot)
+                .collect();
+            lost.sort_unstable();
+            let can_reconnect =
+                !pw.retired && pw.reconnects_left > 0 && pw.addr.is_some();
+            if can_reconnect {
+                pw.next_reconnect = Some(Instant::now() + pw.backoff);
+            } else {
+                pw.retired = true;
+            }
+            (lost, can_reconnect)
+        };
+        // A slot still in flight on another worker (straggler duplicate)
+        // does not need requeueing — its other copy is the retry.
+        for &slot in lost.iter().rev() {
+            let in_flight_elsewhere = self.workers.iter().enumerate().any(|(i, pw)| {
+                i != w
+                    && pw
+                        .outstanding
+                        .values()
+                        .any(|o| o.round == round && o.slot == slot)
+            });
+            if !in_flight_elsewhere {
+                r.queue.push_front(slot);
+                self.requeued += 1;
+            }
+        }
+        eprintln!(
+            "[pool] worker {w} down ({}{reason}); {}",
+            if clean { "clean EOF: " } else { "" },
+            if can_reconnect { "will attempt reconnect" } else { "retired" }
+        );
+    }
+
+    /// Re-dispatch over-deadline outstanding evaluations to idle workers.
+    /// Only idle workers are used, so stealing never displaces fresh work;
+    /// the youngest in-flight copy of a slot must itself be over deadline
+    /// before another copy is launched (no re-steal thrash).
+    fn steal_stragglers(&mut self, r: &mut Round) {
+        if r.remaining == 0 {
+            return;
+        }
+        // No deadline until at least one completed eval has set the scale.
+        let Some(mean) = self.eval_ewma.value() else { return };
+        let deadline =
+            (mean * self.cfg.straggler_factor).max(self.cfg.min_straggle.as_secs_f64());
+        loop {
+            let Some(wi) = self
+                .workers
+                .iter()
+                .position(|pw| pw.alive && pw.outstanding.is_empty())
+            else {
+                break;
+            };
+            let mut youngest: HashMap<usize, f64> = HashMap::new();
+            for pw in &self.workers {
+                for o in pw.outstanding.values() {
+                    if o.round == self.round && !r.done[o.slot] {
+                        let age = o.at.elapsed().as_secs_f64();
+                        let y = youngest.entry(o.slot).or_insert(f64::INFINITY);
+                        *y = y.min(age);
+                    }
+                }
+            }
+            let Some((&slot, _)) = youngest
+                .iter()
+                .filter(|(_, &age)| age >= deadline)
+                .max_by(|a, b| a.1.partial_cmp(b.1).expect("ages are finite"))
+            else {
+                break;
+            };
+            if self.dispatch_to(wi, slot, r) {
+                self.redispatched += 1;
+            }
+        }
+    }
+
+    fn handle_event(&mut self, ev: PoolEvent, r: &mut Round) {
+        match ev {
+            PoolEvent::Result { worker: w, generation, eval } => {
+                if generation != self.workers[w].generation {
+                    return; // stale reader from before a reconnect
+                }
+                let Some(o) = self.workers[w].outstanding.remove(&eval.id) else {
+                    return; // id already cleared (failure path) — discard
+                };
+                self.eval_ewma.observe(o.at.elapsed().as_secs_f64());
+                self.completed += 1;
+                self.workers[w].evals_since_connect += 1;
+                if o.round == self.round && !r.done[o.slot] {
+                    r.done[o.slot] = true;
+                    r.out[o.slot] = eval.value;
+                    r.remaining -= 1;
+                }
+                // else: first-result-wins duplicate, or a previous round's
+                // straggler finally reporting — measured, then discarded.
+            }
+            PoolEvent::Down { worker: w, generation, clean, error } => {
+                if generation != self.workers[w].generation {
+                    return;
+                }
+                self.fail_worker(w, &error, clean, r);
+            }
+        }
+    }
+
+    fn try_reconnect(&mut self) {
+        for w in 0..self.workers.len() {
+            let due = {
+                let pw = &self.workers[w];
+                !pw.alive
+                    && !pw.retired
+                    && pw.reconnects_left > 0
+                    && pw.addr.is_some()
+                    && pw.next_reconnect.is_some_and(|t| Instant::now() >= t)
+            };
+            if !due {
+                continue;
+            }
+            let addr = self.workers[w].addr.clone().expect("checked above");
+            self.workers[w].reconnects_left -= 1;
+            match TcpStream::connect(&addr).and_then(|s| {
+                let reader = s.try_clone()?;
+                Ok((s, reader))
+            }) {
+                Ok((writer, reader)) => {
+                    let pw = &mut self.workers[w];
+                    pw.generation += 1;
+                    pw.writer = Some(writer);
+                    pw.alive = true;
+                    pw.next_reconnect = None;
+                    pw.evals_since_connect = 0;
+                    spawn_reader(self.tx.clone(), w, pw.generation, reader);
+                    self.reconnects += 1;
+                    eprintln!("[pool] worker {w} reconnected to {addr}");
+                }
+                Err(e) => {
+                    let pw = &mut self.workers[w];
+                    if pw.reconnects_left == 0 {
+                        pw.retired = true;
+                        eprintln!("[pool] worker {w} retired (reconnect failed: {e})");
+                    } else {
+                        pw.backoff *= 2;
+                        pw.next_reconnect = Some(Instant::now() + pw.backoff);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn spawn_reader(tx: Sender<PoolEvent>, worker: usize, generation: u64, stream: TcpStream) {
+    std::thread::spawn(move || {
+        let mut reader = BufReader::new(stream);
+        loop {
+            match read_json_line(&mut reader) {
+                Ok(Some(msg)) => match parse_eval(&msg) {
+                    Ok(eval) => {
+                        if tx.send(PoolEvent::Result { worker, generation, eval }).is_err() {
+                            return; // pool dropped
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(PoolEvent::Down {
+                            worker,
+                            generation,
+                            clean: false,
+                            error: format!("bad reply: {e:#}"),
+                        });
+                        return;
+                    }
+                },
+                Ok(None) => {
+                    let _ = tx.send(PoolEvent::Down {
+                        worker,
+                        generation,
+                        clean: true,
+                        error: "connection closed".into(),
+                    });
+                    return;
+                }
+                Err(e) => {
+                    let _ = tx.send(PoolEvent::Down {
+                        worker,
+                        generation,
+                        clean: false,
+                        error: format!("{e:#}"),
+                    });
+                    return;
+                }
+            }
+        }
+    });
+}
+
+/// An `Objective` that evaluates remotely through the async worker pool:
+/// lets any searcher run against worker processes without knowing about the
+/// wire. Sequential `eval` is a one-config round; `eval_batch` ships a whole
+/// proposal round, which the pool work-steals across workers, re-dispatching
+/// stragglers and requeueing failures.
 pub struct RemoteObjective {
     space: crate::search::Space,
-    workers: Vec<WorkerHandle>,
-    next: usize,
-    counter: usize,
+    pub pool: WorkerPool,
 }
 
 impl RemoteObjective {
     pub fn connect(space: crate::search::Space, addrs: &[String]) -> Result<RemoteObjective> {
-        anyhow::ensure!(!addrs.is_empty(), "no worker addresses");
-        let workers = addrs
-            .iter()
-            .map(|a| WorkerHandle::connect(a))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(RemoteObjective { space, workers, next: 0, counter: 0 })
+        RemoteObjective::connect_with(space, addrs, PoolCfg::default())
+    }
+
+    pub fn connect_with(
+        space: crate::search::Space,
+        addrs: &[String],
+        cfg: PoolCfg,
+    ) -> Result<RemoteObjective> {
+        Ok(RemoteObjective { space, pool: WorkerPool::connect(addrs, cfg)? })
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
-        for w in self.workers.iter_mut() {
-            w.shutdown()?;
-        }
-        Ok(())
+        self.pool.shutdown()
     }
 }
 
@@ -244,28 +888,17 @@ impl Objective for RemoteObjective {
     }
 
     fn eval(&mut self, config: &Config) -> f64 {
-        let w = self.next;
-        self.next = (self.next + 1) % self.workers.len();
-        let id = self.counter;
-        self.counter += 1;
-        match self.workers[w].dispatch(id, config).and_then(|()| self.workers[w].collect()) {
-            Ok(r) => r.value,
+        match self.pool.evaluate(std::slice::from_ref(config)) {
+            Ok(values) => values[0],
             Err(e) => {
-                eprintln!("[remote-objective] worker {w} failed: {e:#}");
+                eprintln!("[remote-objective] eval failed: {e:#}");
                 f64::NEG_INFINITY
             }
         }
     }
 
-    /// Ship the whole batch across the pool: every worker gets ~|batch|/W
-    /// configs up front and evaluates them back-to-back, so batch wall-clock
-    /// is one worker's share instead of the sequential sum.
     fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
-        if configs.is_empty() {
-            return Vec::new();
-        }
-        self.counter += configs.len();
-        match evaluate_batch(&mut self.workers, configs) {
+        match self.pool.evaluate(configs) {
             Ok(values) => values,
             Err(e) => {
                 eprintln!("[remote-objective] batch of {} failed: {e:#}", configs.len());
@@ -273,12 +906,17 @@ impl Objective for RemoteObjective {
             }
         }
     }
+
+    fn parallelism(&self) -> usize {
+        self.pool.capacity().max(1)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::search::space::{Dim, Space};
+    use crate::search::SyntheticObjective;
 
     struct SumObj {
         space: Space,
@@ -306,18 +944,35 @@ mod tests {
         }
     }
 
-    fn spawn_worker(addr: &'static str) -> std::thread::JoinHandle<usize> {
-        std::thread::spawn(move || {
+    /// Bind port 0 and serve one accepted connection with a SumObj.
+    fn spawn_sum_worker() -> (String, std::thread::JoinHandle<usize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
             let mut obj = SumObj::new();
-            serve_worker(addr, &mut obj).expect("worker")
-        })
+            serve_worker_on(stream, &mut obj).expect("worker")
+        });
+        (addr, h)
+    }
+
+    /// Synthetic worker (4 dims x 3 choices) with a per-eval sleep.
+    fn spawn_synth_worker(sleep_ms: u64) -> (String, std::thread::JoinHandle<usize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut obj =
+                SyntheticObjective::new(4, 3, std::time::Duration::from_millis(sleep_ms));
+            serve_worker_on(stream, &mut obj).expect("worker")
+        });
+        (addr, h)
     }
 
     #[test]
     fn roundtrip_single_worker() {
-        let addr = "127.0.0.1:47831";
-        let handle = spawn_worker(addr);
-        let mut w = WorkerHandle::connect(addr).unwrap();
+        let (addr, handle) = spawn_sum_worker();
+        let mut w = WorkerHandle::connect(&addr).unwrap();
         w.dispatch(0, &vec![1, 2, 0, 2]).unwrap();
         let r = w.collect().unwrap();
         assert_eq!(r, RemoteEval { id: 0, value: 5.0 });
@@ -326,18 +981,57 @@ mod tests {
     }
 
     #[test]
-    fn batch_across_two_workers_preserves_order() {
-        let a1 = "127.0.0.1:47832";
-        let a2 = "127.0.0.1:47833";
-        let h1 = spawn_worker(a1);
-        let h2 = spawn_worker(a2);
+    fn read_json_line_distinguishes_clean_eof_from_partial() {
+        use std::io::Cursor;
+        // Clean EOF at a message boundary.
+        let mut r = Cursor::new(b"{\"id\": 1, \"value\": 2}\n".to_vec());
+        assert!(read_json_line(&mut r).unwrap().is_some());
+        assert!(read_json_line(&mut r).unwrap().is_none());
+        // Mid-message disconnect: bytes but no newline before EOF.
+        let mut r = Cursor::new(b"{\"id\": 1, \"val".to_vec());
+        let err = read_json_line(&mut r).unwrap_err();
+        assert!(err.to_string().contains("mid-message"), "{err}");
+        // Oversized line is rejected rather than buffered unboundedly.
+        let mut big = vec![b'x'; MAX_LINE_BYTES + 2];
+        big.push(b'\n');
+        let mut r = Cursor::new(big);
+        let err = read_json_line(&mut r).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    /// A pool config whose straggler deadline can't fire during a test of
+    /// instant objectives — keeps exact served-count asserts deterministic
+    /// even when a CI scheduler stalls one worker thread for a while.
+    fn no_steal_cfg() -> PoolCfg {
+        PoolCfg { min_straggle: Duration::from_secs(30), ..Default::default() }
+    }
+
+    #[test]
+    fn pool_batch_across_two_workers_preserves_order() {
+        let (a1, h1) = spawn_sum_worker();
+        let (a2, h2) = spawn_sum_worker();
+        let mut pool = WorkerPool::connect(&[a1, a2], no_steal_cfg()).unwrap();
+        let configs: Vec<Config> =
+            vec![vec![0, 0, 0, 0], vec![1, 1, 1, 1], vec![2, 2, 2, 2], vec![2, 0, 0, 0]];
+        let values = pool.evaluate(&configs).unwrap();
+        assert_eq!(values, vec![0.0, 4.0, 8.0, 2.0]);
+        pool.shutdown().unwrap();
+        let (s1, s2) = (h1.join().unwrap(), h2.join().unwrap());
+        assert_eq!(s1 + s2, 4);
+        assert!(s1 > 0 && s2 > 0, "work stealing skipped a worker: {s1}/{s2}");
+    }
+
+    #[test]
+    fn blocking_baseline_across_two_workers_preserves_order() {
+        let (a1, h1) = spawn_sum_worker();
+        let (a2, h2) = spawn_sum_worker();
         let mut pool = vec![
-            WorkerHandle::connect(a1).unwrap(),
-            WorkerHandle::connect(a2).unwrap(),
+            WorkerHandle::connect(&a1).unwrap(),
+            WorkerHandle::connect(&a2).unwrap(),
         ];
         let configs: Vec<Config> =
             vec![vec![0, 0, 0, 0], vec![1, 1, 1, 1], vec![2, 2, 2, 2], vec![2, 0, 0, 0]];
-        let values = evaluate_batch(&mut pool, &configs).unwrap();
+        let values = evaluate_batch_blocking(&mut pool, &configs).unwrap();
         assert_eq!(values, vec![0.0, 4.0, 8.0, 2.0]);
         for w in pool.iter_mut() {
             w.shutdown().unwrap();
@@ -348,10 +1042,9 @@ mod tests {
     #[test]
     fn remote_objective_drives_searcher() {
         use crate::search::{KmeansTpe, KmeansTpeParams, Searcher};
-        let addr = "127.0.0.1:47835";
-        let handle = spawn_worker(addr);
+        let (addr, handle) = spawn_sum_worker();
         let space = SumObj::new().space.clone();
-        let mut remote = RemoteObjective::connect(space, &[addr.to_string()]).unwrap();
+        let mut remote = RemoteObjective::connect(space, &[addr]).unwrap();
         let h = KmeansTpe::new(KmeansTpeParams { n_startup: 10, ..Default::default() })
             .run(&mut remote, 30);
         assert_eq!(h.len(), 30);
@@ -365,45 +1058,254 @@ mod tests {
     #[test]
     fn batch_searcher_drives_remote_pool() {
         use crate::search::{BatchSearcher, KmeansTpeParams, Searcher};
-        let a1 = "127.0.0.1:47836";
-        let a2 = "127.0.0.1:47837";
-        let h1 = spawn_worker(a1);
-        let h2 = spawn_worker(a2);
+        let (a1, h1) = spawn_sum_worker();
+        let (a2, h2) = spawn_sum_worker();
         let space = SumObj::new().space.clone();
         let mut remote =
-            RemoteObjective::connect(space, &[a1.to_string(), a2.to_string()]).unwrap();
+            RemoteObjective::connect_with(space, &[a1, a2], no_steal_cfg()).unwrap();
+        assert_eq!(remote.parallelism(), 2);
         let p = KmeansTpeParams { n_startup: 8, seed: 1, ..Default::default() };
         let h = BatchSearcher::kmeans_tpe(p, 4).run(&mut remote, 28);
         assert_eq!(h.len(), 28);
         // Optimum is 8; near-optimal suffices (transport under test).
         assert!(h.best().unwrap().value >= 6.0, "best {}", h.best().unwrap().value);
         remote.shutdown().unwrap();
-        // Both workers served work: the batch really was spread.
+        // Stealing is deadline-disabled, so no duplicates: served counts add
+        // up exactly and both workers pulled from the shared queue.
         let (s1, s2) = (h1.join().unwrap(), h2.join().unwrap());
         assert_eq!(s1 + s2, 28);
-        assert!(s1 > 0 && s2 > 0, "round-robin skipped a worker: {s1}/{s2}");
+        assert!(s1 > 0 && s2 > 0, "queue starvation: {s1}/{s2}");
     }
 
     #[test]
-    fn batch_degrades_per_worker_on_failure() {
-        let good = "127.0.0.1:47838";
-        let bad = "127.0.0.1:47839";
-        let hg = spawn_worker(good);
-        // A "worker" that accepts the connection and immediately hangs up.
+    fn pool_straggler_redispatch_is_duplicate_free_and_in_order() {
+        // Two fast workers, one 60x slower. The slow worker's config must be
+        // stolen by an idle fast worker; its eventual duplicate result is
+        // discarded (first wins), and the output stays in input order.
+        let (a1, h1) = spawn_synth_worker(5);
+        let (a2, h2) = spawn_synth_worker(5);
+        let (a3, h3) = spawn_synth_worker(400);
+        let cfg = PoolCfg {
+            straggler_factor: 2.0,
+            min_straggle: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let mut pool = WorkerPool::connect(&[a1, a2, a3], cfg).unwrap();
+        let configs: Vec<Config> = vec![
+            vec![0, 0, 0, 0],
+            vec![1, 0, 0, 0],
+            vec![1, 1, 0, 0],
+            vec![1, 1, 1, 0],
+            vec![1, 1, 1, 1],
+            vec![2, 1, 1, 1],
+        ];
+        let t = Instant::now();
+        let values = pool.evaluate(&configs).unwrap();
+        let wall = t.elapsed();
+        let expect: Vec<f64> =
+            configs.iter().map(SyntheticObjective::expected_value).collect();
+        assert_eq!(values, expect);
+        assert!(pool.redispatched >= 1, "no straggler re-dispatch happened");
+        // The slow worker (400ms/eval) held one config; had the round waited
+        // for it to finish its share in-order it would take >= 400ms. The
+        // expected wall is tens of ms — 250ms leaves plenty of scheduler
+        // slack on a loaded CI runner.
+        assert!(wall < Duration::from_millis(250), "round stalled on straggler: {wall:?}");
+        pool.shutdown().unwrap();
+        let served = h1.join().unwrap() + h2.join().unwrap() + h3.join().unwrap();
+        // Stolen duplicates mean served can exceed the round size.
+        assert!(served >= configs.len(), "served {served}");
+    }
+
+    #[test]
+    fn pool_requeues_dead_workers_share_instead_of_poisoning() {
+        // Worker B accepts, reads one request, replies with HALF a line and
+        // drops — a mid-message disconnect. Its config must be requeued onto
+        // the healthy worker, so every value is real (no -inf).
+        let (a1, h1) = spawn_sum_worker();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a2 = listener.local_addr().unwrap().to_string();
         let hb = std::thread::spawn(move || {
-            let listener = TcpListener::bind(bad).unwrap();
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let _ = read_json_line(&mut reader); // swallow one dispatch
+            let mut s = stream;
+            s.write_all(b"{\"id\": 0, \"va").unwrap(); // partial reply
+            // drop: mid-message disconnect
+        });
+        let cfg = PoolCfg { reconnect_attempts: 0, ..Default::default() };
+        let mut pool = WorkerPool::connect(&[a1, a2], cfg).unwrap();
+        let configs: Vec<Config> =
+            vec![vec![0, 0, 0, 0], vec![1, 1, 1, 1], vec![2, 2, 2, 2], vec![0, 1, 2, 0]];
+        let values = pool.evaluate(&configs).unwrap();
+        assert_eq!(values, vec![0.0, 4.0, 8.0, 3.0]);
+        assert!(pool.requeued >= 1, "dead worker's config was not requeued");
+        assert!(values.iter().all(|v| v.is_finite()), "poisoned values: {values:?}");
+        pool.shutdown().unwrap();
+        assert_eq!(h1.join().unwrap(), 4);
+        hb.join().unwrap();
+    }
+
+    #[test]
+    fn pool_reconnects_after_unclean_disconnect() {
+        // One worker address. First connection dies mid-message; the pool
+        // must reconnect (bounded) and finish the round on the second
+        // connection.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            // Connection 1: crash mid-message.
+            {
+                let (stream, _) = listener.accept().unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let _ = read_json_line(&mut reader);
+                let mut s = stream;
+                s.write_all(b"{\"id\": 0,").unwrap();
+            }
+            // Connection 2: behave.
+            let (stream, _) = listener.accept().unwrap();
+            let mut obj = SumObj::new();
+            serve_worker_on(stream, &mut obj).expect("worker")
+        });
+        let cfg = PoolCfg {
+            reconnect_attempts: 3,
+            reconnect_backoff: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let mut pool = WorkerPool::connect(std::slice::from_ref(&addr), cfg).unwrap();
+        let configs: Vec<Config> = vec![vec![1, 0, 0, 0], vec![2, 2, 0, 0]];
+        let values = pool.evaluate(&configs).unwrap();
+        assert_eq!(values, vec![1.0, 4.0]);
+        assert!(pool.reconnects >= 1, "no reconnection recorded");
+        pool.shutdown().unwrap();
+        assert_eq!(h.join().unwrap(), 2);
+    }
+
+    #[test]
+    fn serve_worker_survives_disconnect_until_shutdown() {
+        // The worker process must outlive a leader blip: connection drops
+        // send it back to accept; only an explicit shutdown ends it.
+        let addr = "127.0.0.1:47891";
+        let h = std::thread::spawn(move || {
+            let mut obj = SumObj::new();
+            serve_worker(addr, &mut obj).expect("worker")
+        });
+        {
+            let mut w = WorkerHandle::connect(addr).unwrap();
+            w.dispatch(0, &vec![1, 0, 0, 0]).unwrap();
+            assert_eq!(w.collect().unwrap().value, 1.0);
+        } // dropped without shutdown — worker must keep listening
+        let mut w = WorkerHandle::connect(addr).unwrap();
+        w.dispatch(1, &vec![2, 0, 0, 0]).unwrap();
+        assert_eq!(w.collect().unwrap().value, 2.0);
+        w.shutdown().unwrap();
+        assert_eq!(h.join().unwrap(), 2);
+    }
+
+    #[test]
+    fn pool_errors_only_when_every_worker_is_gone() {
+        // A single worker that dies unrecoverably mid-round: evaluate must
+        // return an error (callers map it), not fabricated values.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let _ = read_json_line(&mut reader);
+            let mut s = stream;
+            s.write_all(b"{\"partial").unwrap();
+        });
+        let cfg = PoolCfg { reconnect_attempts: 0, ..Default::default() };
+        let mut pool = WorkerPool::connect(std::slice::from_ref(&addr), cfg).unwrap();
+        let err = pool.evaluate(&[vec![0, 0, 0, 0]]).unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn straggler_tolerant_round_wallclock_near_all_fast() {
+        // Acceptance: with 4 workers where one is 10x slower, the async pool
+        // finishes a round in < 2x the all-fast wall-clock (the blocking
+        // collect took ~10x). Both measurements are sleep-bound, not
+        // CPU-bound, so load inflates them roughly proportionally; sleeps
+        // are tens of ms and the assert carries an absolute slack on top so
+        // a loaded 2-core CI runner doesn't flake it.
+        let fast_ms = 60u64;
+        let configs: Vec<Config> = (0..8)
+            .map(|i| vec![i % 3, (i + 1) % 3, (i + 2) % 3, i % 2])
+            .collect();
+        let expect: Vec<f64> =
+            configs.iter().map(SyntheticObjective::expected_value).collect();
+
+        // Reference: all four workers fast.
+        let mut addrs = Vec::new();
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let (a, h) = spawn_synth_worker(fast_ms);
+            addrs.push(a);
+            joins.push(h);
+        }
+        let mut pool = WorkerPool::connect(&addrs, PoolCfg::default()).unwrap();
+        let t = Instant::now();
+        assert_eq!(pool.evaluate(&configs).unwrap(), expect);
+        let all_fast = t.elapsed();
+        pool.shutdown().unwrap();
+        for h in joins {
+            h.join().unwrap();
+        }
+
+        // One 10x straggler.
+        let mut addrs = Vec::new();
+        let mut joins = Vec::new();
+        for w in 0..4 {
+            let (a, h) = spawn_synth_worker(if w == 0 { fast_ms * 10 } else { fast_ms });
+            addrs.push(a);
+            joins.push(h);
+        }
+        let mut pool = WorkerPool::connect(&addrs, PoolCfg::default()).unwrap();
+        let t = Instant::now();
+        assert_eq!(pool.evaluate(&configs).unwrap(), expect);
+        let one_slow = t.elapsed();
+        pool.shutdown().unwrap();
+        for h in joins {
+            h.join().unwrap();
+        }
+
+        // Blocking baseline would wait for the slow worker's 2-config share:
+        // >= 2 * 10 * fast_ms = 1200ms. The pool must stay well under it
+        // and within 2x of the all-fast reference (expected ~1.5x; the gap
+        // to 2.0x plus the 100ms absolute slack is the scheduler-jitter
+        // margin).
+        assert!(
+            one_slow < Duration::from_millis(2 * 10 * fast_ms),
+            "pool did not dodge the straggler: {one_slow:?}"
+        );
+        assert!(
+            one_slow.as_secs_f64() < 2.0 * all_fast.as_secs_f64() + 0.1,
+            "one-slow {one_slow:?} vs all-fast {all_fast:?}"
+        );
+    }
+
+    #[test]
+    fn blocking_baseline_degrades_per_worker_on_failure() {
+        let (good, hg) = spawn_sum_worker();
+        // A "worker" that accepts the connection and immediately hangs up.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let bad = listener.local_addr().unwrap().to_string();
+        let hb = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
             drop(stream);
         });
         let mut pool = vec![
-            WorkerHandle::connect(good).unwrap(),
-            WorkerHandle::connect(bad).unwrap(),
+            WorkerHandle::connect(&good).unwrap(),
+            WorkerHandle::connect(&bad).unwrap(),
         ];
         let configs: Vec<Config> =
             vec![vec![0, 0, 0, 0], vec![1, 1, 1, 1], vec![2, 2, 2, 2]];
-        let values = evaluate_batch(&mut pool, &configs).unwrap();
+        let values = evaluate_batch_blocking(&mut pool, &configs).unwrap();
         // The healthy worker's share (ids 0 and 2) survives; only the dead
-        // worker's share is poisoned.
+        // worker's share is poisoned — the baseline semantics the pool's
+        // requeue replaces.
         assert_eq!(values[0], 0.0);
         assert_eq!(values[2], 8.0);
         assert_eq!(values[1], f64::NEG_INFINITY);
@@ -413,14 +1315,26 @@ mod tests {
     }
 
     #[test]
-    fn worker_rejects_invalid_config() {
-        let addr = "127.0.0.1:47834";
+    fn worker_rejects_invalid_config_but_stays_alive() {
+        // A bad request gets an error reply (surfacing as -inf), and the
+        // SAME connection keeps serving — dropping it would read as a clean
+        // EOF and retire a healthy worker on the leader.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
         let handle = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
             let mut obj = SumObj::new();
-            serve_worker(addr, &mut obj)
+            serve_worker_on(stream, &mut obj)
         });
-        let mut w = WorkerHandle::connect(addr).unwrap();
+        let mut w = WorkerHandle::connect(&addr).unwrap();
         w.dispatch(0, &vec![9, 9, 9, 9]).unwrap(); // out of range
-        assert!(w.collect().is_err() || handle.join().unwrap().is_err());
+        let r = w.collect().unwrap();
+        assert_eq!(r.id, 0);
+        assert_eq!(r.value, f64::NEG_INFINITY);
+        // The connection survived the rejection.
+        w.dispatch(1, &vec![2, 2, 2, 2]).unwrap();
+        assert_eq!(w.collect().unwrap(), RemoteEval { id: 1, value: 8.0 });
+        w.shutdown().unwrap();
+        assert_eq!(handle.join().unwrap(), 1); // only the valid eval counted
     }
 }

@@ -9,10 +9,13 @@
 //!                 table3|table4|ablations)
 //!   info        — list artifacts + platform
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 
 use sammpq::coordinator::report::Table;
-use sammpq::coordinator::{Algo, Leader, LeaderCfg, ObjectiveCfg};
+use sammpq::coordinator::{Algo, Leader, LeaderCfg, ObjectiveCfg, PoolCfg};
+use sammpq::search::QPolicy;
 use sammpq::exp::{self, Effort};
 use sammpq::hessian::prune_space;
 use sammpq::hw::sim::simulate;
@@ -21,7 +24,7 @@ use sammpq::runtime::Runtime;
 use sammpq::train::ModelSession;
 use sammpq::util::cli::Args;
 
-fn leader_cfg_from(args: &Args) -> LeaderCfg {
+fn leader_cfg_from(args: &Args) -> Result<LeaderCfg> {
     let mut cfg = LeaderCfg::default();
     cfg.seed = args.get_u64("seed", 0);
     cfg.pretrain_steps = args.get_usize("pretrain-steps", cfg.pretrain_steps);
@@ -29,7 +32,19 @@ fn leader_cfg_from(args: &Args) -> LeaderCfg {
     cfg.n_startup = args.get_usize("n0", cfg.n_evals / 4);
     cfg.final_steps = args.get_usize("final-steps", cfg.final_steps);
     cfg.prune = !args.has_flag("no-prune");
-    cfg.batch_q = args.get_usize("batch-q", 1).max(1);
+    // A typo here would otherwise silently run an hours-long search
+    // sequentially — reject instead of defaulting when the flag is present.
+    // A valueless `--batch-q` lands in `flags`, not `options`: reject that
+    // too rather than quietly falling back to the sequential loop.
+    anyhow::ensure!(
+        !args.has_flag("batch-q"),
+        "--batch-q needs a value: a number or 'auto'"
+    );
+    cfg.batch_q = match args.get("batch-q") {
+        None => QPolicy::Fixed(1),
+        Some(s) => QPolicy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--batch-q expects a number or 'auto', got '{s}'"))?,
+    };
     cfg.objective = ObjectiveCfg {
         steps_per_eval: args.get_usize("steps-per-eval", 16),
         eval_batches: args.get_usize("eval-batches", 3),
@@ -43,7 +58,7 @@ fn leader_cfg_from(args: &Args) -> LeaderCfg {
         throughput_min: args.get_f64("throughput-min", 0.0),
         lambda_throughput: args.get_f64("lambda-throughput", 2.0),
     };
-    cfg
+    Ok(cfg)
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
@@ -54,7 +69,7 @@ fn cmd_search(args: &Args) -> Result<()> {
     println!("platform: {}", rt.platform());
     let sess = ModelSession::open(&rt, &tag, args.get_usize("train-n", 1024),
                                   args.get_usize("val-n", 512))?;
-    let cfg = leader_cfg_from(args);
+    let cfg = leader_cfg_from(args)?;
     println!(
         "searching {tag} with {} (n={}, n0={}, steps/eval={})",
         algo.name(),
@@ -203,17 +218,60 @@ fn cmd_exp(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `<dims>x<choices>` synthetic-space spec (e.g. `8x4`).
+fn parse_synthetic(spec: &str) -> Result<(usize, usize)> {
+    let (d, c) = spec
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("--synthetic expects <dims>x<choices>, got '{spec}'"))?;
+    let dims: usize = d.parse().map_err(|_| anyhow::anyhow!("bad dims '{d}'"))?;
+    let choices: usize = c.parse().map_err(|_| anyhow::anyhow!("bad choices '{c}'"))?;
+    anyhow::ensure!(dims > 0 && choices > 0, "--synthetic space must be non-empty");
+    Ok((dims, choices))
+}
+
+fn pool_cfg_from(args: &Args) -> Result<PoolCfg> {
+    let mut cfg = PoolCfg::default();
+    // Same loud-rejection rule as --batch-q: a present-but-bad value must
+    // not silently become the default.
+    if let Some(s) = args.get("straggler-factor") {
+        let f: f64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--straggler-factor expects a number, got '{s}'"))?;
+        anyhow::ensure!(
+            f.is_finite() && f >= 1.0,
+            "--straggler-factor must be >= 1.0 (got {f}): re-dispatching before the mean \
+             eval time has even elapsed duplicates every evaluation"
+        );
+        cfg.straggler_factor = f;
+    }
+    Ok(cfg)
+}
+
 /// Worker process: own a ModelSession and serve objective evaluations to a
 /// remote leader (`sammpq search` on another core/host would connect here).
+/// With `--synthetic <dims>x<choices>` it instead serves the synthetic
+/// objective (optionally `--sleep-ms <f>` per eval) — no artifacts needed,
+/// which is how the `sammpq pool` demo exercises the async pool.
 fn cmd_worker(args: &Args) -> Result<()> {
     use sammpq::coordinator::evaluator::{build_space, DnnObjective};
     use sammpq::coordinator::service::serve_worker;
-    let tag = args.get_or("model", "resnet20-cifar10");
     let addr = args.get_or("addr", "127.0.0.1:7447");
+    if let Some(spec) = args.get("synthetic") {
+        let (dims, choices) = parse_synthetic(spec)?;
+        let sleep = std::time::Duration::from_secs_f64(
+            args.get_f64("sleep-ms", 0.0).max(0.0) / 1e3,
+        );
+        let mut obj = sammpq::search::SyntheticObjective::new(dims, choices, sleep);
+        println!("[worker] synthetic {dims}x{choices} (sleep {sleep:?}) on {addr}");
+        let served = serve_worker(&addr, &mut obj)?;
+        println!("[worker] done, served {served} evaluations");
+        return Ok(());
+    }
+    let tag = args.get_or("model", "resnet20-cifar10");
     let rt = Runtime::new()?;
     let sess = ModelSession::open(&rt, &tag, args.get_usize("train-n", 1024),
                                   args.get_usize("val-n", 512))?;
-    let cfg = leader_cfg_from(args);
+    let cfg = leader_cfg_from(args)?;
     // Deterministic pretrain so every worker shares the same starting point.
     let snap = sess.init_snapshot(cfg.seed);
     let mut st = sess.state_from_snapshot(&snap)?;
@@ -226,6 +284,77 @@ fn cmd_worker(args: &Args) -> Result<()> {
     println!("[worker] {tag} serving evaluations on {addr}");
     let served = serve_worker(&addr, &mut obj)?;
     println!("[worker] done, served {served} evaluations");
+    Ok(())
+}
+
+/// Drive a synthetic search over a remote worker pool — the end-to-end demo
+/// of the async straggler-tolerant pool + adaptive batch sizing, with no
+/// artifacts required on either side. Workers must be started first with
+/// matching `--synthetic` specs, e.g.:
+///
+///   sammpq worker --synthetic 8x4 --sleep-ms 50 --addr 127.0.0.1:7447
+///   sammpq worker --synthetic 8x4 --sleep-ms 500 --addr 127.0.0.1:7448
+///   sammpq pool --addrs 127.0.0.1:7447,127.0.0.1:7448 --batch-q auto --n 64
+fn cmd_pool(args: &Args) -> Result<()> {
+    use sammpq::coordinator::RemoteObjective;
+    use sammpq::search::{BatchAlgo, BatchSearcher, KmeansTpeParams, Objective, Searcher,
+                         SyntheticObjective, TpeParams};
+    use sammpq::util::Timer;
+
+    let addrs: Vec<String> = args
+        .get_or("addrs", "127.0.0.1:7447")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let (dims, choices) = parse_synthetic(&args.get_or("synthetic", "8x4"))?;
+    let budget = args.get_usize("n", 64).max(1);
+    let n0 = args.get_usize("n0", (budget / 4).max(1));
+    let seed = args.get_u64("seed", 0);
+    let batch_q = QPolicy::parse(&args.get_or("batch-q", "auto"))
+        .ok_or_else(|| anyhow::anyhow!("--batch-q expects a number or 'auto'"))?;
+    let algo = match args.get_or("algo", "kmeans-tpe").as_str() {
+        "kmeans-tpe" | "kmeans_tpe" | "ours" => BatchAlgo::KmeansTpe(KmeansTpeParams {
+            n_startup: n0,
+            seed,
+            ..Default::default()
+        }),
+        "tpe" => BatchAlgo::Tpe(TpeParams { n_startup: n0, seed, ..Default::default() }),
+        other => anyhow::bail!("pool mode drives the TPE family, not '{other}'"),
+    };
+
+    let space =
+        SyntheticObjective::new(dims, choices, std::time::Duration::ZERO).space().clone();
+    println!("[pool] connecting {} workers ({dims}x{choices} space)", addrs.len());
+    let mut remote = RemoteObjective::connect_with(space, &addrs, pool_cfg_from(args)?)?;
+    let mut searcher = BatchSearcher::new(algo, batch_q);
+    let t = Timer::start();
+    let h = searcher.run(&mut remote, budget);
+    let wall = t.secs();
+    let capacity = remote.pool.capacity();
+    remote.shutdown()?;
+
+    println!("round |   q | distinct | propose(ms) | eval(ms) | phase");
+    for (i, r) in searcher.rounds.iter().enumerate() {
+        println!(
+            "{i:>5} | {:>3} | {:>8} | {:>11.3} | {:>8.1} | {}",
+            r.q,
+            r.distinct,
+            r.propose_secs * 1e3,
+            r.eval_secs * 1e3,
+            if r.startup { "startup" } else { "model" }
+        );
+    }
+    let mut t2 = Table::new("pool search result", &["metric", "value"]);
+    t2.row(vec!["best value".into(), format!("{:.4}", h.best().unwrap().value)]);
+    t2.row(vec!["evaluations".into(), format!("{}", h.len())]);
+    t2.row(vec!["rounds".into(), format!("{}", searcher.rounds.len())]);
+    t2.row(vec!["wall-clock (s)".into(), format!("{wall:.2}")]);
+    t2.row(vec!["pool capacity (end)".into(), format!("{capacity}")]);
+    t2.row(vec!["straggler re-dispatches".into(), format!("{}", remote.pool.redispatched)]);
+    t2.row(vec!["failure requeues".into(), format!("{}", remote.pool.requeued)]);
+    t2.row(vec!["reconnections".into(), format!("{}", remote.pool.reconnects)]);
+    println!("{}", t2.render());
     Ok(())
 }
 
@@ -265,6 +394,7 @@ fn main() {
         .map(|s| println!("{s}")),
         "exp" => cmd_exp(&args),
         "worker" => cmd_worker(&args),
+        "pool" => cmd_pool(&args),
         "info" => cmd_info(),
         _ => {
             println!(
@@ -276,14 +406,20 @@ fn main() {
                  \x20 search      full pipeline: pretrain -> hessian prune -> search -> final train\n\
                  \x20             --model <tag> --algo kmeans-tpe|tpe|random|evo|rl|gp-bo\n\
                  \x20             --n <evals> --steps-per-eval <k> --size-budget-mb <m>\n\
-                 \x20             --batch-q <q>  (constant-liar batched rounds, q > 1)\n\
+                 \x20             --batch-q <q>|auto  (constant-liar batched rounds;\n\
+                 \x20             auto tunes q from the eval/proposal cost ratio)\n\
                  \x20 hessian     sensitivity report (--model, --k, --samples)\n\
                  \x20 hw          hardware model report (--model, --bits, --mult)\n\
                  \x20 convergence Fig. 3a/3b tabular study (no artifacts needed)\n\
                  \x20 exp <name>  fig1|fig3|fig3c|fig4|table1|table2|table3|table4|ablations\n\
                  \x20             [--effort quick|paper]\n\
                  \x20 worker      serve objective evaluations to a remote leader\n\
-                 \x20             (--model <tag> --addr host:port)\n\
+                 \x20             (--model <tag> --addr host:port, or artifact-free:\n\
+                 \x20             --synthetic <dims>x<choices> [--sleep-ms <f>])\n\
+                 \x20 pool        drive a synthetic search over a worker pool (async\n\
+                 \x20             straggler-tolerant demo): --addrs a,b,c\n\
+                 \x20             --synthetic <dims>x<choices> --batch-q auto|<q>\n\
+                 \x20             --straggler-factor <f> --n <evals>\n\
                  \x20 info        list compiled artifacts"
             );
             Ok(())

@@ -10,7 +10,9 @@
 //! [`Objective::eval_batch`] — which a parallel or remote objective spreads
 //! across threads / worker processes. Search wall-clock then scales with
 //! worker count while the *evaluation-count* convergence stays comparable
-//! to the sequential searcher (see tests).
+//! to the sequential searcher (see tests). With [`QPolicy::Auto`] the batch
+//! size itself is tuned online between 1 and the objective's parallelism
+//! from the observed eval/proposal cost ratio (see [`QController`] docs).
 //!
 //! Also here:
 //! * [`eval_batch_parallel`] / [`ParallelObjective`] — thread-parallel batch
@@ -59,23 +61,161 @@ impl ProposerState {
     }
 }
 
+/// Batch-size policy of a [`BatchSearcher`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QPolicy {
+    /// Always propose `q` per round (q = 1 is the sequential loop).
+    Fixed(usize),
+    /// Tune q online in [1, `Objective::parallelism()`]: track the observed
+    /// eval-time / proposal-time ratio and the constant-liar
+    /// diversification, so cheap objectives degrade to sequential TPE
+    /// (maximal surrogate freshness) and expensive ones keep the pool
+    /// saturated. See [`QController`].
+    Auto,
+}
+
+impl QPolicy {
+    /// Parse a `--batch-q` style setting: a number, or `auto`. Zero is
+    /// clamped to the sequential loop.
+    pub fn parse(s: &str) -> Option<QPolicy> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Some(QPolicy::Auto);
+        }
+        s.parse::<usize>().ok().map(|q| QPolicy::Fixed(q.max(1)))
+    }
+
+    /// Does this setting ask for batched rounds at all?
+    pub fn batched(self) -> bool {
+        !matches!(self, QPolicy::Fixed(0) | QPolicy::Fixed(1))
+    }
+}
+
+/// One evaluation round as logged by [`BatchSearcher`] — q decisions are
+/// verified against this by the adaptive-q tests.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundStat {
+    /// Proposals this round actually made (<= chosen q at the budget tail).
+    pub q: usize,
+    /// Distinct configs among them (constant-liar diversification).
+    pub distinct: usize,
+    /// Wall-clock spent proposing the round.
+    pub propose_secs: f64,
+    /// Wall-clock spent in `eval_batch`.
+    pub eval_secs: f64,
+    /// Whether this was a random-startup round.
+    pub startup: bool,
+}
+
+/// Online q tuner. The tradeoff it walks: larger q amortizes proposal
+/// overhead and fills parallel evaluators, but each constant-liar round is
+/// proposed from a STALE surrogate, so q should only grow while (a)
+/// evaluations dominate proposals and (b) the liar still diversifies.
+///
+///   q* = clamp(floor(secs_per_EVALUATION / secs_per_PROPOSAL),
+///              1, parallelism)
+///
+/// both sides EWMA-smoothed, then capped by the smoothed distinct-per-round
+/// FRACTION of capacity (proposing more copies of the same argmax than the
+/// liar can spread wastes evaluations — and a fraction, unlike an absolute
+/// count, lets q recover after a throttled phase, since distinct/q is 1.0
+/// at q = 1). Per-evaluation cost is the round wall-clock divided
+/// by the number of evaluation *waves* (`ceil(q / parallelism)`), so the
+/// measurement is independent of the q the controller itself chose — see
+/// `observe`. An instant objective drives the ratio below 2 and q settles
+/// at 1; an objective that costs even a few ms against a sub-ms proposal
+/// path drives q to the pool capacity.
+struct QController {
+    eval_per: crate::util::timer::Ewma,
+    prop_per: crate::util::timer::Ewma,
+    /// EWMA of distinct/q per round — a FRACTION, not an absolute count:
+    /// distinct is bounded by q, so an absolute EWMA would ratchet q
+    /// downward with no way back (rounds at small q can only report small
+    /// distinct counts). The fraction is 1.0 at q = 1, so a throttled
+    /// controller re-earns its capacity as soon as rounds diversify again.
+    distinct_frac: crate::util::timer::Ewma,
+}
+
+impl QController {
+    fn new() -> QController {
+        QController {
+            eval_per: crate::util::timer::Ewma::new(0.5),
+            prop_per: crate::util::timer::Ewma::new(0.5),
+            distinct_frac: crate::util::timer::Ewma::new(0.5),
+        }
+    }
+
+    fn observe(&mut self, stat: &RoundStat, cap: usize) {
+        let m = stat.q.max(1);
+        // Per-EVALUATION cost, not per-config-of-round: a parallel backend
+        // runs the round in ceil(m / cap) waves, so dividing the wall-clock
+        // by m would shrink the measurement by the controller's own q choice
+        // (feedback loop: big q -> "cheap evals" -> small q -> "expensive
+        // evals" -> oscillation around sqrt of the true ratio). Dividing by
+        // the wave count recovers the q-independent per-eval cost.
+        let waves = m.div_ceil(cap.max(1)).max(1);
+        self.eval_per.observe(stat.eval_secs / waves as f64);
+        // Startup rounds sample at random — far cheaper than a TPE
+        // proposal — and would make proposals look free; only model-based
+        // rounds inform the proposal-cost side. Proposals are sequential,
+        // so per-proposal cost divides by m.
+        if !stat.startup {
+            self.prop_per.observe(stat.propose_secs / m as f64);
+        }
+        self.distinct_frac.observe(stat.distinct as f64 / m as f64);
+    }
+
+    fn next_q(&self, cap: usize) -> usize {
+        let cap = cap.max(1);
+        let (Some(eval), Some(prop)) = (self.eval_per.value(), self.prop_per.value())
+        else {
+            // No model-based round measured yet: stay saturated, the
+            // startup phase is embarrassingly parallel anyway.
+            return cap;
+        };
+        let ratio = eval / prop.max(1e-9);
+        let mut q = if ratio.is_finite() { ratio.floor().max(1.0) as usize } else { cap };
+        q = q.min(cap);
+        // Diversification cap: no point proposing more of the round than
+        // the liar has been spreading (fraction of cap, see field docs).
+        let spread =
+            (self.distinct_frac.value_or(1.0) * cap as f64).ceil().max(1.0) as usize;
+        q.min(spread)
+    }
+}
+
 /// Round-based searcher: proposes `q` configs per round (constant liar),
 /// evaluates them through [`Objective::eval_batch`], then folds the real
 /// values back into the surrogate state. With q = 1 it degenerates to the
-/// sequential searcher (modulo RNG stream).
+/// sequential searcher (modulo RNG stream). `QPolicy::Auto` re-tunes q
+/// between rounds; every round is appended to [`rounds`](Self::rounds).
 pub struct BatchSearcher {
     pub algo: BatchAlgo,
-    /// Proposals per round (the paper-style "q" of batched BO).
-    pub q: usize,
+    /// Batch-size policy (the paper-style "q" of batched BO).
+    pub q: QPolicy,
+    /// Round log of the last `run` (cleared at the start of each run).
+    pub rounds: Vec<RoundStat>,
 }
 
 impl BatchSearcher {
+    pub fn new(algo: BatchAlgo, q: QPolicy) -> BatchSearcher {
+        BatchSearcher { algo, q, rounds: Vec::new() }
+    }
+
     pub fn kmeans_tpe(params: KmeansTpeParams, q: usize) -> BatchSearcher {
-        BatchSearcher { algo: BatchAlgo::KmeansTpe(params), q }
+        BatchSearcher::new(BatchAlgo::KmeansTpe(params), QPolicy::Fixed(q))
     }
 
     pub fn tpe(params: TpeParams, q: usize) -> BatchSearcher {
-        BatchSearcher { algo: BatchAlgo::Tpe(params), q }
+        BatchSearcher::new(BatchAlgo::Tpe(params), QPolicy::Fixed(q))
+    }
+
+    /// Adaptive-q flavors: q tracks the objective's cost and parallelism.
+    pub fn kmeans_tpe_auto(params: KmeansTpeParams) -> BatchSearcher {
+        BatchSearcher::new(BatchAlgo::KmeansTpe(params), QPolicy::Auto)
+    }
+
+    pub fn tpe_auto(params: TpeParams) -> BatchSearcher {
+        BatchSearcher::new(BatchAlgo::Tpe(params), QPolicy::Auto)
     }
 
     fn seed_and_startup(&self) -> (u64, usize) {
@@ -95,7 +235,6 @@ impl Searcher for BatchSearcher {
     }
 
     fn run(&mut self, obj: &mut dyn Objective, budget: usize) -> History {
-        let q = self.q.max(1);
         let (seed, n_startup) = self.seed_and_startup();
         let mut rng = Rng::new(seed ^ 0xBA7C4);
         let space = obj.space().clone();
@@ -104,27 +243,58 @@ impl Searcher for BatchSearcher {
             BatchAlgo::Tpe(p) => ProposerState::Tpe(TpeState::new(p, space.clone())),
         };
         let mut hist = History::new(self.name());
+        self.rounds.clear();
+        let mut ctl = QController::new();
+        // Auto starts saturated: until the first model-based round is
+        // measured there is no reason to leave evaluators idle.
+        let mut q = match self.q {
+            QPolicy::Fixed(q) => q.max(1),
+            QPolicy::Auto => obj.parallelism().max(1),
+        };
 
         // Startup rounds use random configs but still go through eval_batch,
         // so a parallel objective saturates its workers from round one.
         let n0 = n_startup.min(budget);
         while hist.len() < budget {
             let m = q.min(budget - hist.len());
-            let batch: Vec<Config> = if hist.len() < n0 {
+            let startup = hist.len() < n0;
+            let t_prop = Timer::start();
+            let batch: Vec<Config> = if startup {
                 let m0 = m.min(n0 - hist.len());
                 (0..m0).map(|_| space.sample(&mut rng)).collect()
             } else {
                 state.propose_batch(m, &mut rng)
             };
+            let propose_secs = t_prop.secs();
+            let distinct =
+                batch.iter().collect::<std::collections::HashSet<&Config>>().len();
             let t = Timer::start();
             let values = obj.eval_batch(&batch);
+            let eval_secs = t.secs();
             debug_assert_eq!(values.len(), batch.len(), "eval_batch length mismatch");
             // Per-trial timing is the round's wall-clock amortized over the
             // batch: total_eval_secs stays the true wall-clock spent.
-            let per = t.secs() / batch.len().max(1) as f64;
+            let per = eval_secs / batch.len().max(1) as f64;
+            let stat = RoundStat {
+                q: batch.len(),
+                distinct,
+                propose_secs,
+                eval_secs,
+                startup,
+            };
             for (config, value) in batch.into_iter().zip(values) {
                 hist.push(config.clone(), value, per);
                 state.observe(config, value);
+            }
+            // Re-read capacity every round: a remote pool can lose (or
+            // regain) workers mid-search, and both the wave math and the
+            // clamp must track the LIVE count — a stale snapshot would keep
+            // q pinned above what the pool can actually run.
+            let cap = obj.parallelism().max(1);
+            ctl.observe(&stat, cap);
+            self.rounds.push(stat);
+            if self.q == QPolicy::Auto {
+                q = ctl.next_q(cap);
             }
         }
         hist
@@ -203,6 +373,10 @@ impl<O: Objective + Send> Objective for ParallelObjective<O> {
 
     fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
         eval_batch_parallel(&mut self.replicas, configs)
+    }
+
+    fn parallelism(&self) -> usize {
+        self.replicas.len()
     }
 }
 
@@ -290,13 +464,17 @@ impl<O: Objective> Objective for CachedObjective<O> {
         }
         out
     }
+
+    fn parallelism(&self) -> usize {
+        self.inner.parallelism()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::search::space::Dim;
-    use crate::search::{KmeansTpe, Tpe};
+    use crate::search::{KmeansTpe, SyntheticObjective, Tpe};
 
     /// Deterministic separable objective counting its evaluations.
     struct Sep {
@@ -508,7 +686,7 @@ mod tests {
 
             let hb = BatchSearcher::kmeans_tpe(p, q).run(&mut FlatPlateau::new(8), budget);
             let reach = hb.evals_to_reach(target).unwrap_or(budget + 1);
-            batch_rounds.push(((reach + q - 1) / q) as f64);
+            batch_rounds.push(reach.div_ceil(q) as f64);
         }
         let med = |v: &[f64]| crate::util::stats::quantile(v, 0.5);
         assert!(
@@ -538,6 +716,87 @@ mod tests {
                 .fold(f64::NEG_INFINITY, f64::max);
         }
         assert!(batch_sum >= rand_sum, "batch {batch_sum} vs random {rand_sum}");
+    }
+
+    /// Advertises parallel capacity without thread overhead: isolates the
+    /// adaptive-q controller's reaction to an instant objective from
+    /// thread-spawn wall-clock, which would otherwise be measured as
+    /// "evaluation cost".
+    struct FakeParallel {
+        inner: SyntheticObjective,
+        cap: usize,
+    }
+
+    impl Objective for FakeParallel {
+        fn space(&self) -> &Space {
+            self.inner.space()
+        }
+        fn eval(&mut self, c: &Config) -> f64 {
+            self.inner.eval(c)
+        }
+        fn parallelism(&self) -> usize {
+            self.cap
+        }
+    }
+
+    #[test]
+    fn adaptive_q_converges_to_one_on_instant_objective() {
+        // 4-way parallel capacity, but evaluations are instant: parallel
+        // rounds buy nothing and cost surrogate freshness, so the
+        // controller must settle at q = 1 once model-based rounds start.
+        let p = TpeParams { n_startup: 8, seed: 2, ..Default::default() };
+        let mut searcher = BatchSearcher::tpe_auto(p);
+        let mut obj = FakeParallel {
+            inner: SyntheticObjective::new(6, 4, std::time::Duration::ZERO),
+            cap: 4,
+        };
+        let h = searcher.run(&mut obj, 48);
+        assert_eq!(h.len(), 48);
+        let model_rounds: Vec<&RoundStat> =
+            searcher.rounds.iter().filter(|r| !r.startup).collect();
+        assert!(model_rounds.len() >= 4, "too few model rounds: {}", model_rounds.len());
+        // The first model-based round may still run at the saturated q (the
+        // proposal cost is unmeasured until then); later rounds must be
+        // dominated by q = 1 — a lone scheduler spike inside one timed eval
+        // can legitimately bump a single EWMA decision, so demand a heavy
+        // majority rather than unanimity.
+        let tail = &model_rounds[1..];
+        let sequential = tail.iter().filter(|r| r.q == 1).count();
+        assert!(
+            sequential * 4 >= tail.len() * 3 && sequential >= 1,
+            "q=1 in {sequential}/{} model rounds — round log: {:?}",
+            tail.len(),
+            searcher.rounds
+        );
+    }
+
+    #[test]
+    fn adaptive_q_saturates_pool_on_slow_objective() {
+        // Evaluations cost ~8ms against a microsecond proposal path: the
+        // controller must keep the 4-replica pool saturated (q = capacity).
+        let p = TpeParams { n_startup: 8, seed: 2, ..Default::default() };
+        let mut searcher = BatchSearcher::tpe_auto(p);
+        let mut obj = ParallelObjective::new(
+            (0..4)
+                .map(|_| SyntheticObjective::new(8, 4, std::time::Duration::from_millis(8)))
+                .collect(),
+        );
+        let h = searcher.run(&mut obj, 40);
+        assert_eq!(h.len(), 40);
+        let model_rounds: Vec<&RoundStat> =
+            searcher.rounds.iter().filter(|r| !r.startup).collect();
+        assert!(model_rounds.len() >= 3, "round log: {:?}", searcher.rounds);
+        // Drop the budget-tail round (clipped to the remainder); of the
+        // rest, the pool must be saturated in the (heavy) majority of
+        // rounds — a lone scheduler hiccup may dent one EWMA decision.
+        let full = &model_rounds[..model_rounds.len() - 1];
+        let saturated = full.iter().filter(|r| r.q == 4).count();
+        assert!(
+            saturated * 3 >= full.len() * 2 && saturated >= 1,
+            "saturated {saturated}/{} — round log: {:?}",
+            full.len(),
+            searcher.rounds
+        );
     }
 
     #[test]

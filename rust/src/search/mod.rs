@@ -9,8 +9,11 @@ pub mod history;
 pub mod tpe;
 pub mod kmeans_tpe;
 pub mod batch;
+pub mod synthetic;
 
-pub use batch::{eval_batch_parallel, BatchAlgo, BatchSearcher, CachedObjective, ParallelObjective};
+pub use batch::{eval_batch_parallel, BatchAlgo, BatchSearcher, CachedObjective,
+                ParallelObjective, QPolicy, RoundStat};
+pub use synthetic::SyntheticObjective;
 pub use history::{History, Trial};
 pub use kmeans_tpe::{KmeansTpe, KmeansTpeParams, KmeansTpeState};
 pub use space::{Config, Dim, Space};
@@ -31,10 +34,19 @@ pub trait Objective {
     /// The default is a sequential loop, so every existing objective is
     /// batch-capable unchanged. Override to exploit real parallelism:
     /// [`batch::ParallelObjective`] fans a batch across thread-local
-    /// replicas, and the coordinator's `RemoteObjective` round-robins it
-    /// across worker processes.
+    /// replicas, and the coordinator's `RemoteObjective` work-steals it
+    /// across its async worker pool.
     fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
         configs.iter().map(|c| self.eval(c)).collect()
+    }
+
+    /// How many evaluations this objective can usefully run concurrently —
+    /// the upper bound an adaptive batch-size controller should saturate.
+    /// The default (1) is right for in-process sequential objectives;
+    /// `ParallelObjective` reports its replica count and the coordinator's
+    /// `RemoteObjective` its live worker count.
+    fn parallelism(&self) -> usize {
+        1
     }
 }
 

@@ -83,6 +83,15 @@ impl Parzen {
         self.counts.iter().map(|c| rng.weighted(c)).collect()
     }
 
+    /// Sample into an existing buffer — the proposal hot path draws tens of
+    /// candidates per call and reuses one scratch `Config` across them
+    /// instead of allocating a fresh `Vec` per draw. Draws the same RNG
+    /// sequence as [`sample`](Self::sample).
+    pub fn sample_into(&self, out: &mut Config, rng: &mut Rng) {
+        out.clear();
+        out.extend(self.counts.iter().map(|c| rng.weighted(c)));
+    }
+
     pub fn prob(&self, dim: usize, choice: usize) -> f64 {
         self.counts[dim][choice] / self.totals[dim]
     }
@@ -151,25 +160,50 @@ impl SurrogatePair {
     }
 }
 
+/// The acquisition score log l(x) − log g(x), computed in a single pass
+/// over the dimensions (one division + one `ln` per surrogate per dim,
+/// instead of two separate `log_pdf` traversals).
+pub fn log_ratio(l: &Parzen, g: &Parzen, config: &Config) -> f64 {
+    config
+        .iter()
+        .enumerate()
+        .map(|(d, &c)| {
+            (l.counts[d][c] / l.totals[d]).ln() - (g.counts[d][c] / g.totals[d]).ln()
+        })
+        .sum()
+}
+
 /// Acquisition: draw `n_candidates` from `l`, return the one maximizing
 /// log l - log g (the l/g ratio of §III-B). `n_candidates == 0` degrades to
 /// a single draw from `l` instead of panicking (see KmeansTpeParams
 /// validation for the strict guard).
+///
+/// Called tens of times per proposal round, so candidates are drawn into a
+/// reused scratch buffer ([`Parzen::sample_into`]) and scored in one pass
+/// ([`log_ratio`]) — the only per-call allocations are the scratch and the
+/// returned winner. The RNG stream and the kept candidate (first maximum
+/// wins ties) are identical to the allocating version this replaced.
 pub fn propose(
     l: &Parzen,
     g: &Parzen,
     rng: &mut Rng,
     n_candidates: usize,
 ) -> Config {
-    let mut best: Option<(f64, Config)> = None;
+    let mut scratch = Config::new();
+    let mut best = Config::new();
+    let mut best_score = f64::NEG_INFINITY;
     for _ in 0..n_candidates.max(1) {
-        let cand = l.sample(rng);
-        let score = l.log_pdf(&cand) - g.log_pdf(&cand);
-        if best.as_ref().map_or(true, |(s, _)| score > *s) {
-            best = Some((score, cand));
+        l.sample_into(&mut scratch, rng);
+        let score = log_ratio(l, g, &scratch);
+        // Pseudo-counts are >= prior_weight > 0 with finite totals, so the
+        // score is always finite and the first candidate always replaces the
+        // empty initial `best`.
+        if score > best_score {
+            best_score = score;
+            std::mem::swap(&mut best, &mut scratch);
         }
     }
-    best.expect("propose: at least one candidate is always drawn").1
+    best
 }
 
 #[cfg(test)]
@@ -257,6 +291,26 @@ mod tests {
         let mut rng = Rng::new(2);
         let c = propose(&l, &g, &mut rng, 0);
         assert!(s.validate(&c));
+    }
+
+    #[test]
+    fn sample_into_matches_sample_and_log_ratio_matches_pdfs() {
+        let s = space();
+        let pop_owned: Vec<Config> = vec![vec![2, 1], vec![0, 0], vec![2, 0]];
+        let l = Parzen::fit(&s, &pop_owned.iter().collect::<Vec<_>>(), 0.5);
+        let g = Parzen::fit(&s, &pop_owned[..1].iter().collect::<Vec<_>>(), 0.5);
+
+        // Same seed => sample and sample_into draw identical sequences.
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let mut buf = Config::new();
+        for _ in 0..20 {
+            let a = l.sample(&mut r1);
+            l.sample_into(&mut buf, &mut r2);
+            assert_eq!(a, buf);
+            let lr = log_ratio(&l, &g, &a);
+            assert!((lr - (l.log_pdf(&a) - g.log_pdf(&a))).abs() < 1e-12);
+        }
     }
 
     #[test]

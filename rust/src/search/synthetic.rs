@@ -1,0 +1,73 @@
+//! Synthetic objectives with a controllable evaluation cost.
+//!
+//! The async worker pool and the adaptive-q controller are exercised against
+//! objectives whose *wall-clock* behavior is the variable under test, not
+//! their landscape. [`SyntheticObjective`] evaluates the separable
+//! `-(sum of choice indices)` landscape (optimum: all dims at choice 0) and
+//! optionally sleeps per evaluation, simulating an expensive proxy-QAT run —
+//! or a deliberately slow straggler worker. It backs `sammpq worker
+//! --synthetic`, the `sammpq pool` demo, the `round-latency` bench, and the
+//! pool/adaptive-q tests, so all of them agree on the expected values.
+
+use std::time::Duration;
+
+use super::space::{Config, Dim, Space};
+use super::Objective;
+
+/// Separable synthetic objective: value = -(sum of chosen indices), with an
+/// optional per-eval sleep to emulate evaluation cost.
+pub struct SyntheticObjective {
+    space: Space,
+    sleep: Duration,
+    /// Evaluations served (workers report this at shutdown).
+    pub evals: usize,
+}
+
+impl SyntheticObjective {
+    /// `dims` dimensions with `choices` ordered choices each.
+    pub fn new(dims: usize, choices: usize, sleep: Duration) -> SyntheticObjective {
+        assert!(dims > 0 && choices > 0, "synthetic space must be non-empty");
+        let space = Space::new(
+            (0..dims)
+                .map(|d| Dim::new(format!("d{d}"), (0..choices).map(|c| c as f64).collect()))
+                .collect(),
+        );
+        SyntheticObjective { space, sleep, evals: 0 }
+    }
+
+    /// The value `eval` returns for `config` — lets tests and remote
+    /// leaders check results without an objective instance of their own.
+    pub fn expected_value(config: &Config) -> f64 {
+        -(config.iter().sum::<usize>() as f64)
+    }
+}
+
+impl Objective for SyntheticObjective {
+    fn space(&self) -> &Space {
+        &self.space
+    }
+
+    fn eval(&mut self, config: &Config) -> f64 {
+        if !self.sleep.is_zero() {
+            std::thread::sleep(self.sleep);
+        }
+        self.evals += 1;
+        Self::expected_value(config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_match_expected_and_optimum_is_zero() {
+        let mut obj = SyntheticObjective::new(3, 4, Duration::ZERO);
+        assert_eq!(obj.eval(&vec![0, 0, 0]), 0.0);
+        assert_eq!(obj.eval(&vec![3, 2, 1]), -6.0);
+        assert_eq!(obj.evals, 2);
+        assert_eq!(SyntheticObjective::expected_value(&vec![1, 1, 1]), -3.0);
+        assert!(obj.space().validate(&vec![3, 3, 3]));
+        assert!(!obj.space().validate(&vec![4, 0, 0]));
+    }
+}

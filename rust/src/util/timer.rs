@@ -20,6 +20,41 @@ impl Timer {
     }
 }
 
+/// Exponentially weighted moving average of a wall-clock quantity (eval
+/// latencies, proposal costs). Used by the coordinator's worker pool to set
+/// straggler deadlines and by the adaptive-q controller in `search::batch`.
+///
+/// `alpha` is the weight of the newest observation; `value()` is `None`
+/// until the first observation, so consumers can distinguish "no data yet"
+/// from a measured zero and avoid acting on a made-up prior.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Ewma {
+        assert!(alpha > 0.0 && alpha <= 1.0, "Ewma alpha must be in (0, 1], got {alpha}");
+        Ewma { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            Some(v) => v + self.alpha * (x - v),
+            None => x,
+        });
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn value_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+}
+
 /// Measure `f` repeatedly: `warmup` unmeasured runs, then `iters` timed runs.
 /// Returns (mean_secs, min_secs, max_secs) per iteration.
 pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
@@ -40,6 +75,19 @@ pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, 
 
 #[cfg(test)]
 mod tests {
+    #[test]
+    fn ewma_tracks_and_starts_empty() {
+        let mut e = super::Ewma::new(0.5);
+        assert_eq!(e.value(), None);
+        assert_eq!(e.value_or(7.0), 7.0);
+        e.observe(4.0);
+        assert_eq!(e.value(), Some(4.0)); // first observation is taken whole
+        e.observe(8.0);
+        assert_eq!(e.value(), Some(6.0));
+        e.observe(6.0);
+        assert_eq!(e.value(), Some(6.0));
+    }
+
     #[test]
     fn measure_counts() {
         let mut n = 0;
