@@ -10,7 +10,7 @@
 //!
 //! Run: `cargo bench` (all) or `cargo bench -- fig3 table2 --effort quick`
 //! Filter names: fig1 fig3 fig3c fig4 table1 table2 table3 table4 ablations
-//!               kernels tpe tpe-hotpath round-latency hwmodel
+//!               kernels tpe tpe-hotpath round-latency remote-search hwmodel
 //!
 //! `tpe-hotpath` additionally records its proposals/sec numbers in
 //! `BENCH_tpe.json` at the workspace root, so the incremental-surrogate
@@ -269,8 +269,7 @@ fn bench_round_latency() -> anyhow::Result<()> {
     // Workers accept one connection each; spawn a fresh set per measurement.
     type WorkerSet = (Vec<String>, Vec<std::thread::JoinHandle<usize>>);
     fn spawn_set(sleeps: Vec<Duration>) -> anyhow::Result<WorkerSet> {
-        use sammpq::coordinator::service::serve_worker_on;
-        use sammpq::search::SyntheticObjective;
+        use sammpq::coordinator::service::{serve_worker_on, SyntheticBackend};
         use std::net::TcpListener;
         let mut addrs = Vec::new();
         let mut joins = Vec::new();
@@ -279,8 +278,8 @@ fn bench_round_latency() -> anyhow::Result<()> {
             addrs.push(listener.local_addr()?.to_string());
             joins.push(std::thread::spawn(move || {
                 let (stream, _) = listener.accept().unwrap();
-                let mut o = SyntheticObjective::new(4, 3, sleep);
-                serve_worker_on(stream, &mut o).expect("bench worker")
+                let mut backend = SyntheticBackend::new(4, 3, sleep);
+                serve_worker_on(stream, &mut backend).expect("bench worker")
             }));
         }
         Ok((addrs, joins))
@@ -361,6 +360,83 @@ fn bench_round_latency() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Remote search sessions: the same batched k-means TPE search to a fixed
+/// budget, evaluated in-process (sequential eval_batch) vs across 4
+/// space-synced synthetic workers over localhost TCP — the search-time
+/// trajectory the paper's 12x headline is about, tracked per-PR in
+/// BENCH_remote_search.json.
+fn bench_remote_search() -> anyhow::Result<()> {
+    use sammpq::coordinator::service::{serve_on_listener, SyntheticBackend};
+    use sammpq::coordinator::{PoolCfg, RemoteObjective, SessionSpec};
+    use sammpq::search::{BatchSearcher, KmeansTpeParams, Objective, Searcher,
+                         SyntheticObjective};
+    use sammpq::util::json::{obj, Json};
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    section("remote-search (in-process vs 4 space-synced workers)");
+    let budget = 48usize;
+    let workers = 4usize;
+    let eval_ms = 20u64;
+    let params = KmeansTpeParams { n_startup: 12, seed: 0, ..Default::default() };
+    let space = SyntheticObjective::new(8, 4, Duration::ZERO).space().clone();
+
+    // (a) In-process: one synthetic objective, sequential eval_batch.
+    let mut local =
+        SyntheticObjective::with_space(space.clone(), Duration::from_millis(eval_ms));
+    let t = Timer::start();
+    let h_local = BatchSearcher::kmeans_tpe(params, workers).run(&mut local, budget);
+    let local_secs = t.secs();
+    anyhow::ensure!(h_local.len() == budget, "local budget");
+
+    // (b) Remote: 4 workers, space-sync handshake, record-return replies.
+    let mut addrs = Vec::new();
+    let mut joins = Vec::new();
+    for _ in 0..workers {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(listener.local_addr()?.to_string());
+        joins.push(std::thread::spawn(move || {
+            let mut backend =
+                SyntheticBackend::new(8, 4, Duration::from_millis(eval_ms));
+            serve_on_listener(listener, &mut backend).expect("bench worker")
+        }));
+    }
+    let mut remote = RemoteObjective::connect_session(
+        SessionSpec::synthetic(space),
+        &addrs,
+        PoolCfg::default(),
+    )?;
+    let t = Timer::start();
+    let h_remote = BatchSearcher::kmeans_tpe(params, workers).run(&mut remote, budget);
+    let remote_secs = t.secs();
+    anyhow::ensure!(h_remote.len() == budget, "remote budget");
+    anyhow::ensure!(remote.log.len() == budget, "remote record log");
+    remote.shutdown()?;
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let speedup = local_secs / remote_secs;
+    println!(
+        "{budget}-eval batched search, {eval_ms}ms evals: in-process {:.2}s | \
+         {workers} workers {:.2}s | {speedup:.2}x",
+        local_secs, remote_secs
+    );
+    let record = obj(vec![
+        ("bench", Json::Str("remote-search".into())),
+        ("budget", Json::Num(budget as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("eval_ms", Json::Num(eval_ms as f64)),
+        ("in_process_secs", Json::Num(local_secs)),
+        ("remote_secs", Json::Num(remote_secs)),
+        ("speedup", Json::Num(speedup)),
+        ("note", Json::Str("regenerate with: cargo bench -- remote-search".into())),
+    ]);
+    std::fs::write("BENCH_remote_search.json", record.to_string_pretty() + "\n")?;
+    println!("recorded -> BENCH_remote_search.json");
+    Ok(())
+}
+
 /// Hardware model + cycle simulator throughput.
 fn bench_hwmodel() -> anyhow::Result<()> {
     section("hardware model + simulator");
@@ -412,6 +488,9 @@ fn main() -> anyhow::Result<()> {
     }
     if should_run(&args, "round-latency") {
         bench_round_latency()?;
+    }
+    if should_run(&args, "remote-search") {
+        bench_remote_search()?;
     }
     if should_run(&args, "hwmodel") {
         bench_hwmodel()?;

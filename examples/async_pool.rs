@@ -13,7 +13,8 @@
 use std::net::TcpListener;
 use std::time::Duration;
 
-use sammpq::coordinator::service::{serve_worker_on, PoolCfg, RemoteObjective};
+use sammpq::coordinator::service::{serve_worker_on, PoolCfg, RemoteObjective, SessionSpec,
+                                   SyntheticBackend};
 use sammpq::search::{BatchSearcher, KmeansTpeParams, Objective, Searcher, SyntheticObjective};
 use sammpq::util::Timer;
 
@@ -29,14 +30,18 @@ fn main() -> anyhow::Result<()> {
         addrs.push(listener.local_addr()?.to_string());
         joins.push(std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            let mut obj = SyntheticObjective::new(8, 4, Duration::from_millis(ms));
-            serve_worker_on(stream, &mut obj).expect("worker")
+            let mut backend = SyntheticBackend::new(8, 4, Duration::from_millis(ms));
+            serve_worker_on(stream, &mut backend).expect("worker")
         }));
     }
     println!("pool: {} workers, per-eval sleeps {sleeps_ms:?} ms", addrs.len());
 
     let space = SyntheticObjective::new(8, 4, Duration::ZERO).space().clone();
-    let mut remote = RemoteObjective::connect_with(space, &addrs, PoolCfg::default())?;
+    let mut remote = RemoteObjective::connect_session(
+        SessionSpec::synthetic(space),
+        &addrs,
+        PoolCfg::default(),
+    )?;
     let params = KmeansTpeParams { n_startup: 12, seed: 0, ..Default::default() };
     let mut searcher = BatchSearcher::kmeans_tpe_auto(params);
     let t = Timer::start();

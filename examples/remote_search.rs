@@ -1,0 +1,109 @@
+//! Distributed search sessions end-to-end, no artifacts needed: two TCP
+//! worker threads serve the synthetic objective, the leader opens a
+//! versioned session (space-sync handshake + snapshot digest), runs a
+//! batched k-means TPE search collecting full record-return replies,
+//! checkpoints every round — then "crashes", and resumes from the
+//! checkpoint to a history identical to an uninterrupted run.
+//!
+//! The multi-process equivalent:
+//!
+//!   sammpq worker --synthetic 6x4 --addr 127.0.0.1:7447
+//!   sammpq worker --synthetic 6x4 --addr 127.0.0.1:7448
+//!   sammpq search --workers 127.0.0.1:7447,127.0.0.1:7448 \
+//!       --checkpoint search.ckpt ...     # and later: --resume search.ckpt
+//!
+//! Run: `cargo run --release --example remote_search`
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use sammpq::coordinator::service::{serve_on_listener, SyntheticBackend};
+use sammpq::coordinator::{PoolCfg, RemoteObjective, SessionSpec};
+use sammpq::search::{BatchSearcher, KmeansTpeParams, Objective, SearchCheckpoint,
+                     SyntheticObjective};
+use sammpq::util::json::Json;
+
+fn spawn_worker() -> anyhow::Result<(String, std::thread::JoinHandle<usize>)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let handle = std::thread::spawn(move || {
+        // Workers start on a DIFFERENT default space (8x4); the session
+        // handshake rebuilds them onto the leader's 6x4 space.
+        let mut backend = SyntheticBackend::new(8, 4, Duration::from_millis(5));
+        serve_on_listener(listener, &mut backend).expect("worker")
+    });
+    Ok((addr, handle))
+}
+
+fn main() -> anyhow::Result<()> {
+    let budget = 36;
+    let space = SyntheticObjective::new(6, 4, Duration::ZERO).space().clone();
+    let params = KmeansTpeParams { n_startup: 12, seed: 0, ..Default::default() };
+    let searcher = BatchSearcher::kmeans_tpe(params, 4);
+
+    // --- Session 1: search until the "crash", checkpointing every round.
+    let (a1, h1) = spawn_worker()?;
+    let (a2, h2) = spawn_worker()?;
+    let mut remote = RemoteObjective::connect_session(
+        SessionSpec::synthetic(space.clone()),
+        &[a1, a2],
+        PoolCfg::default(),
+    )?;
+    println!("session 1: 2 workers space-synced to {} dims", space.num_dims());
+
+    let mut run = searcher.start(space.clone(), budget, None)?;
+    let mut checkpoint_json = String::new();
+    while run.history().len() < budget / 2 {
+        run.step(&mut remote);
+        checkpoint_json = run.checkpoint().to_json().to_string_pretty();
+        println!(
+            "  round done: {} / {budget} trials (checkpoint {} bytes)",
+            run.history().len(),
+            checkpoint_json.len()
+        );
+    }
+    drop(run); // the crash: searcher state is gone...
+    remote.shutdown()?;
+    println!("session 1 'crashed' — workers served {} + {}", h1.join().unwrap(), h2.join().unwrap());
+
+    // --- Session 2: fresh workers, resume from the serialized checkpoint.
+    let ck = SearchCheckpoint::from_json(&Json::parse(&checkpoint_json).unwrap())?;
+    let (a3, h3) = spawn_worker()?;
+    let mut remote = RemoteObjective::connect_session(
+        SessionSpec::synthetic(space.clone()),
+        std::slice::from_ref(&a3),
+        PoolCfg::default(),
+    )?;
+    let mut resumed = searcher.start(space.clone(), budget, Some(&ck))?;
+    while !resumed.done() {
+        resumed.step(&mut remote);
+    }
+    let resumed_hist = resumed.finish().0;
+    remote.shutdown()?;
+    println!("session 2 resumed {} -> {} trials ({} served)", ck.history.len(), resumed_hist.len(), h3.join().unwrap());
+    println!(
+        "records collected remotely: {} (all values worker-computed)",
+        remote.log.len()
+    );
+
+    // --- Reference: the uninterrupted run (in-process) matches exactly.
+    let mut local = SyntheticObjective::with_space(space.clone(), Duration::ZERO);
+    let mut full = searcher.start(space, budget, None)?;
+    while !full.done() {
+        full.step(&mut local);
+    }
+    let full_hist = full.finish().0;
+    let identical = full_hist.values() == resumed_hist.values()
+        && full_hist
+            .trials
+            .iter()
+            .zip(&resumed_hist.trials)
+            .all(|(a, b)| a.config == b.config);
+    println!(
+        "resumed history identical to uninterrupted run: {identical} \
+         (best {:.1})",
+        resumed_hist.best().unwrap().value
+    );
+    anyhow::ensure!(identical, "resume diverged");
+    Ok(())
+}

@@ -19,12 +19,24 @@ pub struct ReinforceParams {
     pub baseline_decay: f64,
     /// Entropy bonus to delay premature collapse.
     pub entropy_beta: f64,
+    /// Configs sampled i.i.d. from the policy per update. 1 reproduces the
+    /// published per-sample update exactly; larger populations evaluate as
+    /// one `Objective::eval_batch` round (parallel/remote objectives spread
+    /// it across workers) and apply the MEAN per-sample gradient — the
+    /// classic batch REINFORCE estimator.
+    pub population: usize,
     pub seed: u64,
 }
 
 impl Default for ReinforceParams {
     fn default() -> Self {
-        ReinforceParams { lr: 0.25, baseline_decay: 0.9, entropy_beta: 0.01, seed: 0 }
+        ReinforceParams {
+            lr: 0.25,
+            baseline_decay: 0.9,
+            entropy_beta: 0.01,
+            population: 1,
+            seed: 0,
+        }
     }
 }
 
@@ -60,30 +72,46 @@ impl Searcher for Reinforce {
         let mut baseline = 0.0;
         let mut baseline_init = false;
 
-        for _ in 0..budget {
-            // Sample a config from the policy.
+        while hist.len() < budget {
+            let b = p.population.max(1).min(budget - hist.len());
+            // Sample the whole population i.i.d. from the CURRENT policy,
+            // then evaluate it as one batch.
             let probs: Vec<Vec<f64>> = logits.iter().map(|l| softmax(l)).collect();
-            let config: Config = probs.iter().map(|pd| rng.weighted(pd)).collect();
+            let configs: Vec<Config> = (0..b)
+                .map(|_| probs.iter().map(|pd| rng.weighted(pd)).collect())
+                .collect();
             let t = Timer::start();
-            let reward = obj.eval(&config);
-            hist.push(config.clone(), reward, t.secs());
+            let rewards = obj.eval_batch(&configs);
+            let per = t.secs() / b as f64;
 
-            if !baseline_init {
-                baseline = reward;
-                baseline_init = true;
+            // Mean per-sample gradient (population 1 degenerates to the
+            // published per-sample update: mean of one = the one).
+            let mut grad: Vec<Vec<f64>> =
+                probs.iter().map(|pd| vec![0.0; pd.len()]).collect();
+            for (config, &reward) in configs.iter().zip(&rewards) {
+                hist.push(config.clone(), reward, per);
+                if !baseline_init {
+                    baseline = reward;
+                    baseline_init = true;
+                }
+                let advantage = reward - baseline;
+                baseline = p.baseline_decay * baseline + (1.0 - p.baseline_decay) * reward;
+
+                // ∇ log π = (1[chosen] - π) per dim; entropy grad =
+                // -π(logπ+H)… (approximated by a uniform pull, sufficient
+                // for the bonus role).
+                for (d, &choice) in config.iter().enumerate() {
+                    let pd = &probs[d];
+                    for c in 0..pd.len() {
+                        let indicator = if c == choice { 1.0 } else { 0.0 };
+                        grad[d][c] += advantage * (indicator - pd[c])
+                            + p.entropy_beta * (1.0 / pd.len() as f64 - pd[c]);
+                    }
+                }
             }
-            let advantage = reward - baseline;
-            baseline = p.baseline_decay * baseline + (1.0 - p.baseline_decay) * reward;
-
-            // ∇ log π = (1[chosen] - π) per dim; entropy grad = -π(logπ+H)…
-            // (approximated by a uniform pull, sufficient for the bonus role).
-            for (d, &choice) in config.iter().enumerate() {
-                let pd = &probs[d];
-                for c in 0..pd.len() {
-                    let indicator = if c == choice { 1.0 } else { 0.0 };
-                    let grad = advantage * (indicator - pd[c])
-                        + p.entropy_beta * (1.0 / pd.len() as f64 - pd[c]);
-                    logits[d][c] += p.lr * grad;
+            for (d, gd) in grad.iter().enumerate() {
+                for (c, &g) in gd.iter().enumerate() {
+                    logits[d][c] += p.lr * g / b as f64;
                 }
             }
         }
@@ -122,6 +150,45 @@ mod tests {
         let early: f64 = h.values()[..20].iter().sum::<f64>() / 20.0;
         let late: f64 = h.values()[130..].iter().sum::<f64>() / 20.0;
         assert!(late > early + 1.0, "early {early:.2} late {late:.2}");
+    }
+
+    /// Probe objective: counts eval_batch rounds and their sizes.
+    struct BatchProbe {
+        inner: Peak,
+        batch_sizes: Vec<usize>,
+    }
+
+    impl Objective for BatchProbe {
+        fn space(&self) -> &Space {
+            self.inner.space()
+        }
+        fn eval(&mut self, c: &Config) -> f64 {
+            self.inner.eval(c)
+        }
+        fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
+            self.batch_sizes.push(configs.len());
+            configs.iter().map(|c| self.inner.eval(c)).collect()
+        }
+    }
+
+    #[test]
+    fn population_mode_batches_and_still_learns() {
+        let space = Space::new(
+            (0..6).map(|d| Dim::new(format!("d{d}"), vec![0.0, 1.0, 2.0])).collect(),
+        );
+        let mut probe = BatchProbe { inner: Peak { space }, batch_sizes: Vec::new() };
+        let p = ReinforceParams { population: 5, seed: 4, ..Default::default() };
+        let h = Reinforce::new(p).run(&mut probe, 303);
+        assert_eq!(h.len(), 303);
+        // Populations of 5 with a clipped tail of 3: every policy update saw
+        // one eval_batch round.
+        assert!(probe.batch_sizes[..probe.batch_sizes.len() - 1].iter().all(|&s| s == 5));
+        assert_eq!(*probe.batch_sizes.last().unwrap(), 3);
+        assert_eq!(probe.batch_sizes.iter().sum::<usize>(), 303);
+        // Averaged-gradient updates still concentrate the policy.
+        let early: f64 = h.values()[..50].iter().sum::<f64>() / 50.0;
+        let late: f64 = h.values()[253..].iter().sum::<f64>() / 50.0;
+        assert!(late > early + 0.5, "early {early:.2} late {late:.2}");
     }
 
     #[test]

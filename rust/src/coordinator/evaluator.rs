@@ -9,13 +9,16 @@
 //! "epochs" under the candidate (bits, widths); size and latency come from
 //! the analytic hardware model.
 
+use anyhow::Context;
+
 use crate::hessian::pruner::{PrunedSpace, FULL_BITS};
 use crate::hw::latency::{baseline_latency_cycles, latency_cycles};
 use crate::hw::HwConfig;
 use crate::runtime::ModelMeta;
-use crate::search::space::{Config, Dim, Space};
+use crate::search::space::{config_from_json, config_to_json, Config, Dim, Space};
 use crate::search::Objective;
 use crate::train::session::{ModelSession, ParamSnapshot};
+use crate::util::json::{dec_f64, enc_f64, obj, Json};
 
 /// What each search dimension controls.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,6 +27,25 @@ pub enum DimKind {
     Bits(usize),
     /// Width multiplier of governor layer `l`.
     Width(usize),
+}
+
+impl DimKind {
+    pub fn to_json(&self) -> Json {
+        match *self {
+            DimKind::Bits(l) => obj(vec![("bits", Json::Num(l as f64))]),
+            DimKind::Width(l) => obj(vec![("width", Json::Num(l as f64))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<DimKind> {
+        if let Some(l) = j.get("bits").and_then(|v| v.as_usize()) {
+            return Ok(DimKind::Bits(l));
+        }
+        if let Some(l) = j.get("width").and_then(|v| v.as_usize()) {
+            return Ok(DimKind::Width(l));
+        }
+        anyhow::bail!("dim kind must be {{\"bits\": l}} or {{\"width\": l}}")
+    }
 }
 
 /// A built search space + its dimension mapping.
@@ -62,6 +84,34 @@ pub fn build_space(meta: &ModelMeta, pruned: Option<&PrunedSpace>) -> SpaceBuild
 }
 
 impl SpaceBuild {
+    /// Wire encoding for the session handshake: the full per-dim menus plus
+    /// the dimension mapping, so a worker rebuilds the leader's PRUNED space
+    /// instead of the unpruned default it would build from meta.json alone.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("space", self.space.to_json()),
+            ("kinds", Json::Arr(self.kinds.iter().map(|k| k.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SpaceBuild> {
+        let space = Space::from_json(j.req("space")?)?;
+        let kinds: Vec<DimKind> = j
+            .req("kinds")?
+            .as_arr()
+            .context("kinds")?
+            .iter()
+            .map(DimKind::from_json)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            kinds.is_empty() || kinds.len() == space.num_dims(),
+            "kinds ({}) must be empty or match the space dims ({})",
+            kinds.len(),
+            space.num_dims()
+        );
+        Ok(SpaceBuild { space, kinds })
+    }
+
     /// Decode a config into full per-layer (bits, widths) runtime vectors.
     pub fn decode(&self, meta: &ModelMeta, config: &Config) -> (Vec<f32>, Vec<f32>) {
         let values = self.space.values(config);
@@ -117,9 +167,49 @@ impl Default for ObjectiveCfg {
     }
 }
 
+impl ObjectiveCfg {
+    /// Wire encoding for the session handshake. Budgets default to INFINITY
+    /// (= disabled), which JSON cannot express as a number — `enc_f64`
+    /// carries non-finite values as strings.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("steps_per_eval", Json::Num(self.steps_per_eval as f64)),
+            ("eval_batches", Json::Num(self.eval_batches as f64)),
+            ("max_lr", enc_f64(self.max_lr)),
+            ("size_budget_mb", enc_f64(self.size_budget_mb)),
+            ("latency_budget_ms", enc_f64(self.latency_budget_ms)),
+            ("lambda_size", enc_f64(self.lambda_size)),
+            ("lambda_latency", enc_f64(self.lambda_latency)),
+            ("energy_budget_uj", enc_f64(self.energy_budget_uj)),
+            ("lambda_energy", enc_f64(self.lambda_energy)),
+            ("throughput_min", enc_f64(self.throughput_min)),
+            ("lambda_throughput", enc_f64(self.lambda_throughput)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ObjectiveCfg> {
+        let f = |k: &str| -> anyhow::Result<f64> {
+            dec_f64(j.req(k)?).with_context(|| format!("objective field '{k}'"))
+        };
+        Ok(ObjectiveCfg {
+            steps_per_eval: j.req("steps_per_eval")?.as_usize().context("steps_per_eval")?,
+            eval_batches: j.req("eval_batches")?.as_usize().context("eval_batches")?,
+            max_lr: f("max_lr")?,
+            size_budget_mb: f("size_budget_mb")?,
+            latency_budget_ms: f("latency_budget_ms")?,
+            lambda_size: f("lambda_size")?,
+            lambda_latency: f("lambda_latency")?,
+            energy_budget_uj: f("energy_budget_uj")?,
+            lambda_energy: f("lambda_energy")?,
+            throughput_min: f("throughput_min")?,
+            lambda_throughput: f("lambda_throughput")?,
+        })
+    }
+}
+
 /// One evaluated configuration with all its metrics (drives Fig. 4 and the
 /// tables).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EvalRecord {
     pub config: Config,
     pub accuracy: f64,
@@ -127,6 +217,51 @@ pub struct EvalRecord {
     pub latency_ms: f64,
     pub speedup: f64,
     pub value: f64,
+}
+
+impl EvalRecord {
+    /// Wire/checkpoint encoding — what a worker's record-return reply
+    /// carries, so the leader assembles its `SearchReport` from full remote
+    /// metrics instead of bare J values. Values can be -inf (failed evals),
+    /// hence `enc_f64`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("config", config_to_json(&self.config)),
+            ("accuracy", enc_f64(self.accuracy)),
+            ("size_mb", enc_f64(self.size_mb)),
+            ("latency_ms", enc_f64(self.latency_ms)),
+            ("speedup", enc_f64(self.speedup)),
+            ("value", enc_f64(self.value)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<EvalRecord> {
+        let f = |k: &str| -> anyhow::Result<f64> {
+            dec_f64(j.req(k)?).with_context(|| format!("record field '{k}'"))
+        };
+        Ok(EvalRecord {
+            config: config_from_json(j.req("config")?)?,
+            accuracy: f("accuracy")?,
+            size_mb: f("size_mb")?,
+            latency_ms: f("latency_ms")?,
+            speedup: f("speedup")?,
+            value: f("value")?,
+        })
+    }
+
+    /// A record for an evaluation that produced only an objective value (a
+    /// plain worker without hardware metrics, or a failed remote eval): the
+    /// value doubles as accuracy, the hardware columns are zeroed.
+    pub fn value_only(config: Config, value: f64) -> EvalRecord {
+        EvalRecord {
+            config,
+            accuracy: value,
+            size_mb: 0.0,
+            latency_ms: 0.0,
+            speedup: 1.0,
+            value,
+        }
+    }
 }
 
 pub struct DnnObjective<'a> {
@@ -283,6 +418,91 @@ impl<'a> Objective for DnnObjective<'a> {
     }
 }
 
+/// Worker-process backend for `sammpq worker`: owns the deterministic
+/// pretrained snapshot and rebuilds its [`DnnObjective`] from each leader's
+/// `SyncSpace` handshake — pruned space, objective knobs, and hardware model
+/// all come from the LEADER, so the worker evaluates exactly the objective
+/// the leader's report assumes. A pretrained-snapshot digest mismatch
+/// (different model/seed/steps on either side) rejects the session with an
+/// explicit error instead of silently searching skewed objectives.
+///
+/// Before any handshake arrives the backend serves the unpruned default
+/// space (legacy leaders and the protocol-level tests).
+pub struct DnnBackend<'a> {
+    session: &'a ModelSession,
+    pretrained: ParamSnapshot,
+    digest: String,
+    objective: DnnObjective<'a>,
+}
+
+impl<'a> DnnBackend<'a> {
+    pub fn new(
+        session: &'a ModelSession,
+        pretrained: ParamSnapshot,
+        hw: HwConfig,
+        cfg: ObjectiveCfg,
+    ) -> DnnBackend<'a> {
+        let digest = pretrained.digest();
+        let build = build_space(&session.meta, None);
+        let objective = DnnObjective::new(session, pretrained.clone(), build, hw, cfg);
+        DnnBackend { session, pretrained, digest, objective }
+    }
+
+    /// The digest a leader must present (its own pretrained snapshot's).
+    pub fn digest(&self) -> &str {
+        &self.digest
+    }
+}
+
+impl crate::coordinator::service::WorkerBackend for DnnBackend<'_> {
+    fn space(&self) -> &Space {
+        &self.objective.build.space
+    }
+
+    fn sync(&mut self, spec: &crate::coordinator::service::SessionSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            spec.digest == self.digest,
+            "pretrained-snapshot digest mismatch: leader has {}, this worker has {} \
+             (same --model/--seed/--pretrain-steps on both sides?)",
+            spec.digest,
+            self.digest
+        );
+        let num_layers = self.session.meta.num_layers;
+        anyhow::ensure!(
+            spec.build.kinds.len() == spec.build.space.num_dims(),
+            "space sync needs one dim kind per dimension ({} kinds, {} dims)",
+            spec.build.kinds.len(),
+            spec.build.space.num_dims()
+        );
+        for kind in &spec.build.kinds {
+            let l = match *kind {
+                DimKind::Bits(l) | DimKind::Width(l) => l,
+            };
+            anyhow::ensure!(
+                l < num_layers,
+                "space sync references layer {l}, model has {num_layers}"
+            );
+        }
+        self.objective = DnnObjective::new(
+            self.session,
+            self.pretrained.clone(),
+            spec.build.clone(),
+            spec.hw,
+            spec.objective,
+        );
+        Ok(())
+    }
+
+    fn eval_record(&mut self, config: &Config) -> EvalRecord {
+        let value = self.objective.eval(config);
+        self.objective
+            .log
+            .last()
+            .cloned()
+            .unwrap_or_else(|| EvalRecord::value_only(config.clone(), value))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,6 +554,57 @@ mod tests {
         assert_eq!(widths[0], 10.0); // 1.25 * 8
         assert_eq!(widths[1], 10.0); // tied to governor 0
         assert_eq!(widths[2], 10.0); // fc fixed = out_base
+    }
+
+    #[test]
+    fn build_and_cfg_serde_roundtrip_is_byte_identical() {
+        let meta = mini_meta();
+        let b = build_space(&meta, None);
+        let text = b.to_json().to_string_pretty();
+        let back = SpaceBuild::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        assert_eq!(back.kinds, b.kinds);
+        assert_eq!(back.space.num_dims(), b.space.num_dims());
+        assert_eq!(back.space.dims[3].choices, b.space.dims[3].choices);
+
+        // ObjectiveCfg: the default carries three INFINITY budgets.
+        let cfg = ObjectiveCfg::default();
+        let text = cfg.to_json().to_string_pretty();
+        let back = ObjectiveCfg::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        assert!(back.size_budget_mb.is_infinite());
+        assert_eq!(back.steps_per_eval, cfg.steps_per_eval);
+
+        // A kinds/dims mismatch is rejected at decode time.
+        let mut j = b.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("kinds".into(), Json::Arr(vec![DimKind::Bits(0).to_json()]));
+        }
+        assert!(SpaceBuild::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn eval_record_serde_roundtrip_is_byte_identical() {
+        let rec = EvalRecord {
+            config: vec![0, 2, 1, 4],
+            accuracy: 0.91,
+            size_mb: 1.25,
+            latency_ms: 0.75,
+            speedup: 3.5,
+            value: 0.91,
+        };
+        let text = rec.to_json().to_string_pretty();
+        let back = EvalRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        assert_eq!(back, rec);
+        // Failed evaluations carry -inf values through the wire.
+        let failed = EvalRecord::value_only(vec![1, 1], f64::NEG_INFINITY);
+        let back = EvalRecord::from_json(
+            &Json::parse(&failed.to_json().to_string_compact()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.value, f64::NEG_INFINITY);
+        assert_eq!(back.accuracy, f64::NEG_INFINITY);
     }
 
     #[test]

@@ -1,22 +1,38 @@
-//! Leader: the end-to-end pipeline of Alg. 1.
+//! Leader: the end-to-end pipeline of Alg. 1, split into explicit stages
+//! over a pluggable evaluation backend.
 //!
-//!   1. pretrain the FP16 model (bits=16, widths=1.0),
-//!   2. estimate per-layer Hessian traces (Hutchinson) + prune the space,
-//!   3. run the configured searcher over the pruned joint space,
-//!   4. train the winning configuration longer ("final training"),
-//!   5. emit a SearchReport (metrics for the tables + the full trial log).
+//!   1. [`Leader::pretrain`] — FP16 pretraining (bits=16, widths=1.0) plus
+//!      the FiP16 baseline metrics,
+//!   2. [`Leader::prune`] — Hutchinson Hessian traces + §III-A space prune,
+//!   3. [`Leader::search`] — the configured searcher over the pruned joint
+//!      space, evaluated either in-process ([`EvalBackend::InProcess`]) or
+//!      across a worker pool ([`EvalBackend::Remote`]) whose session
+//!      handshake ships the pruned space, objective knobs, hardware model,
+//!      and pretrained-snapshot digest — and whose workers answer with full
+//!      `EvalRecord`s, so the report is identical either way,
+//!   4. [`Leader::finalize`] — final training of the winner + SearchReport.
+//!
+//! With [`SessionOpts::checkpoint`] the search stage writes a
+//! [`SessionCheckpoint`] after every round; [`SessionOpts::resume`]
+//! warm-starts the surrogates, history, records, and RNG cursor from one, so
+//! a killed search (local or distributed) continues instead of restarting
+//! cold — which also covers cross-run warm-starting onto a tighter budget.
 
-use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
 
 use crate::baselines::{Evolutionary, EvolutionaryParams, GpBo, GpBoParams, RandomSearch,
                        Reinforce, ReinforceParams};
 use crate::coordinator::evaluator::{build_space, DnnObjective, EvalRecord, ObjectiveCfg,
                                     SpaceBuild};
+use crate::coordinator::service::{PoolCfg, RemoteObjective, SessionSpec};
 use crate::hessian::pruner::{prune_space, PrunedSpace};
 use crate::hw::HwConfig;
-use crate::search::{BatchSearcher, History, KmeansTpe, KmeansTpeParams, QPolicy, Searcher,
-                    Tpe, TpeParams};
-use crate::train::session::ModelSession;
+use crate::search::{BatchAlgo, BatchSearcher, History, KmeansTpe, KmeansTpeParams, Objective,
+                    QPolicy, SearchCheckpoint, Searcher, Tpe, TpeParams};
+use crate::train::session::{ModelSession, ParamSnapshot};
+use crate::util::json::{obj, Json};
 use crate::util::Timer;
 
 #[derive(Debug, Clone, Copy)]
@@ -106,6 +122,127 @@ impl Algo {
     }
 }
 
+/// Where the search stage's evaluations run.
+#[derive(Debug, Clone, Default)]
+pub enum EvalBackend {
+    /// The leader's own `DnnObjective` (sequential proxy-QAT).
+    #[default]
+    InProcess,
+    /// A `sammpq worker` pool: the session handshake syncs the pruned
+    /// space + objective + hardware model + snapshot digest, and every
+    /// trial's `EvalRecord` comes back over the wire.
+    Remote { addrs: Vec<String>, pool: PoolCfg },
+}
+
+/// Per-run session options (backend + checkpoint/resume paths).
+#[derive(Debug, Clone, Default)]
+pub struct SessionOpts {
+    pub backend: EvalBackend,
+    /// Write a [`SessionCheckpoint`] here after every search round.
+    pub checkpoint: Option<PathBuf>,
+    /// Warm-start the search from this checkpoint.
+    pub resume: Option<PathBuf>,
+}
+
+/// An objective whose evaluations produce full [`EvalRecord`]s, in eval
+/// order — what the search stage needs to assemble a report and write
+/// session checkpoints regardless of backend.
+pub trait RecordedObjective: Objective {
+    fn records(&self) -> &[EvalRecord];
+}
+
+impl RecordedObjective for DnnObjective<'_> {
+    fn records(&self) -> &[EvalRecord] {
+        &self.log
+    }
+}
+
+impl RecordedObjective for RemoteObjective {
+    fn records(&self) -> &[EvalRecord] {
+        &self.log
+    }
+}
+
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// A search session frozen at a round boundary: the searcher state (history
+/// + surrogate cursors + RNG) plus the full record log and enough leader
+/// metadata to refuse a mismatched resume.
+#[derive(Debug, Clone)]
+pub struct SessionCheckpoint {
+    pub algo: String,
+    pub seed: u64,
+    pub n_evals: usize,
+    pub search: SearchCheckpoint,
+    pub records: Vec<EvalRecord>,
+}
+
+impl SessionCheckpoint {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", Json::Num(CHECKPOINT_VERSION as f64)),
+            ("algo", Json::Str(self.algo.clone())),
+            ("seed", Json::Str(format!("{:016x}", self.seed))),
+            ("n_evals", Json::Num(self.n_evals as f64)),
+            ("search", self.search.to_json()),
+            ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionCheckpoint> {
+        let version = j.req("version")?.as_usize().context("version")?;
+        anyhow::ensure!(
+            version as u64 == CHECKPOINT_VERSION,
+            "checkpoint version {version} (this build writes {CHECKPOINT_VERSION})"
+        );
+        let seed_hex = j.req("seed")?.as_str().context("seed")?;
+        let ck = SessionCheckpoint {
+            algo: j.req("algo")?.as_str().context("algo")?.to_string(),
+            seed: u64::from_str_radix(seed_hex, 16)
+                .with_context(|| format!("bad seed '{seed_hex}'"))?,
+            n_evals: j.req("n_evals")?.as_usize().context("n_evals")?,
+            search: SearchCheckpoint::from_json(j.req("search")?)?,
+            records: j
+                .req("records")?
+                .as_arr()
+                .context("records")?
+                .iter()
+                .map(EvalRecord::from_json)
+                .collect::<Result<_>>()?,
+        };
+        anyhow::ensure!(
+            ck.records.len() == ck.search.history.len(),
+            "checkpoint has {} records for {} trials",
+            ck.records.len(),
+            ck.search.history.len()
+        );
+        Ok(ck)
+    }
+
+    /// Atomic write (temp file + rename): a crash mid-write must never
+    /// leave a torn checkpoint where a valid one stood.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json().to_string_pretty() + "\n")?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("commit checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<SessionCheckpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read checkpoint {}", path.display()))?;
+        let j = Json::parse(text.trim())
+            .map_err(|e| anyhow::anyhow!("parse checkpoint {}: {e}", path.display()))?;
+        SessionCheckpoint::from_json(&j)
+    }
+}
+
 /// Everything the experiment drivers need.
 pub struct SearchReport {
     pub tag: String,
@@ -189,6 +326,22 @@ fn searcher_for(cfg: &LeaderCfg, algo: Algo) -> Box<dyn Searcher> {
     }
 }
 
+/// Stage-1 output: the shared pretrained snapshot + FiP16 baseline metrics.
+pub struct Pretrained {
+    pub snapshot: ParamSnapshot,
+    pub baseline_accuracy: f64,
+    pub baseline_size_mb: f64,
+    pub pretrain_secs: f64,
+}
+
+/// Stage-3 output: everything the search produced.
+pub struct SearchOutcome {
+    pub build: SpaceBuild,
+    pub history: History,
+    pub records: Vec<EvalRecord>,
+    pub search_secs: f64,
+}
+
 pub struct Leader<'a> {
     pub session: &'a ModelSession,
     pub cfg: LeaderCfg,
@@ -204,24 +357,36 @@ impl<'a> Leader<'a> {
         searcher_for(&self.cfg, algo)
     }
 
-    /// Run the full pipeline with the given algorithm.
+    /// Run the full pipeline in-process (the classic single-machine path).
     pub fn run(&self, algo: Algo) -> Result<SearchReport> {
+        self.run_session(algo, &SessionOpts::default())
+    }
+
+    /// Run the full pipeline: pretrain -> prune -> search -> finalize, over
+    /// whichever backend and checkpoint policy `opts` selects.
+    pub fn run_session(&self, algo: Algo, opts: &SessionOpts) -> Result<SearchReport> {
+        let pre = self.pretrain()?;
+        let pruned = self.prune(&pre)?;
+        let search = self.search(algo, &pre, pruned.as_ref(), opts)?;
+        self.finalize(algo, pre, pruned, search)
+    }
+
+    /// Stage 1: FP16 pretraining, plus the FiP16 baseline continued to the
+    /// final budget (the comparison column of the tables).
+    pub fn pretrain(&self) -> Result<Pretrained> {
         let sess = self.session;
         let meta = &sess.meta;
         let cfg = &self.cfg;
-
-        // 1. FP pretraining.
         let t_pre = Timer::start();
         let snap0 = sess.init_snapshot(cfg.seed);
         let mut state = sess.state_from_snapshot(&snap0)?;
         let bits16 = meta.uniform_bits(16.0);
         let widths1 = meta.base_widths();
         sess.train(&mut state, &bits16, &widths1, cfg.pretrain_steps, cfg.pretrain_lr)?;
-        let pretrained = sess.snapshot_of(&state)?;
+        let snapshot = sess.snapshot_of(&state)?;
         let pretrain_secs = t_pre.secs();
 
-        // Baseline (FiP16) metrics: continue the FP model to the final budget.
-        let mut base_state = sess.state_from_snapshot(&pretrained)?;
+        let mut base_state = sess.state_from_snapshot(&snapshot)?;
         sess.train(&mut base_state, &bits16, &widths1, cfg.final_steps, cfg.final_lr)?;
         let baseline_accuracy = sess.evaluate(
             &base_state,
@@ -231,33 +396,164 @@ impl<'a> Leader<'a> {
         )?;
         let (b16, w10) = meta.resolve(|_| 16.0, |_| 1.0);
         let baseline_size_mb = meta.net_shape(&b16, &w10).model_size_mb();
+        Ok(Pretrained { snapshot, baseline_accuracy, baseline_size_mb, pretrain_secs })
+    }
 
-        // 2. Sensitivity analysis + pruning (§III-A).
-        let pruned = if cfg.prune {
-            let traces = sess.hessian_traces(&state, &widths1, cfg.hessian_samples)?;
-            // Weight counts per layer from the hw shape at base width.
-            let net = meta.net_shape(&bits16, &widths1);
-            let counts: Vec<usize> =
-                net.layers.iter().map(|l| l.weights() as usize).collect();
-            Some(prune_space(&traces, &counts, cfg.sensitivity_clusters))
-        } else {
-            None
-        };
+    /// Stage 2: Hutchinson sensitivity analysis + §III-A space pruning
+    /// (`None` when pruning is disabled for an ablation).
+    pub fn prune(&self, pre: &Pretrained) -> Result<Option<PrunedSpace>> {
+        if !self.cfg.prune {
+            return Ok(None);
+        }
+        let sess = self.session;
+        let meta = &sess.meta;
+        let state = sess.state_from_snapshot(&pre.snapshot)?;
+        let bits16 = meta.uniform_bits(16.0);
+        let widths1 = meta.base_widths();
+        let traces = sess.hessian_traces(&state, &widths1, self.cfg.hessian_samples)?;
+        // Weight counts per layer from the hw shape at base width.
+        let net = meta.net_shape(&bits16, &widths1);
+        let counts: Vec<usize> = net.layers.iter().map(|l| l.weights() as usize).collect();
+        Ok(Some(prune_space(&traces, &counts, self.cfg.sensitivity_clusters)))
+    }
 
-        // 3. Search.
-        let build = build_space(meta, pruned.as_ref());
-        let mut objective = DnnObjective::new(
-            sess,
-            pretrained.clone(),
-            build.clone(),
-            self.hw,
-            cfg.objective,
-        );
+    /// Stage 3: run the searcher over the pruned space, through the chosen
+    /// evaluation backend. In remote mode every worker is space-synced (and
+    /// digest-checked) before the first config ships, and the record log is
+    /// assembled from the workers' `EvalRecord` replies.
+    pub fn search(
+        &self,
+        algo: Algo,
+        pre: &Pretrained,
+        pruned: Option<&PrunedSpace>,
+        opts: &SessionOpts,
+    ) -> Result<SearchOutcome> {
+        let sess = self.session;
+        let build = build_space(&sess.meta, pruned);
         let t_search = Timer::start();
-        let mut searcher = self.make_searcher(algo);
-        let history = searcher.run(&mut objective, cfg.n_evals);
-        let search_secs = t_search.secs();
-        let records = objective.log.clone();
+        let (history, records) = match &opts.backend {
+            EvalBackend::InProcess => {
+                let mut objective = DnnObjective::new(
+                    sess,
+                    pre.snapshot.clone(),
+                    build.clone(),
+                    self.hw,
+                    self.cfg.objective,
+                );
+                self.drive(algo, &mut objective, opts)?
+            }
+            EvalBackend::Remote { addrs, pool } => {
+                let spec = SessionSpec {
+                    build: build.clone(),
+                    objective: self.cfg.objective,
+                    hw: self.hw,
+                    digest: pre.snapshot.digest(),
+                };
+                let mut objective = RemoteObjective::connect_session(spec, addrs, *pool)?;
+                let out = self.drive(algo, &mut objective, opts);
+                // Best-effort: workers outlive a failed search for the next
+                // session, but a clean end releases them promptly.
+                let _ = objective.shutdown();
+                out?
+            }
+        };
+        Ok(SearchOutcome { build, history, records, search_secs: t_search.secs() })
+    }
+
+    /// Search-loop driver shared by both backends. Without checkpointing
+    /// this is a plain `Searcher::run`; with `--checkpoint`/`--resume` the
+    /// TPE-family searcher runs STEPWISE, so the session (history, records,
+    /// surrogate cursors, RNG) is frozen at every round boundary and a
+    /// killed search resumes instead of restarting cold.
+    fn drive<O: RecordedObjective>(
+        &self,
+        algo: Algo,
+        objective: &mut O,
+        opts: &SessionOpts,
+    ) -> Result<(History, Vec<EvalRecord>)> {
+        let budget = self.cfg.n_evals;
+        if opts.checkpoint.is_none() && opts.resume.is_none() {
+            let mut searcher = self.make_searcher(algo);
+            let history = searcher.run(objective, budget);
+            let records = objective.records().to_vec();
+            return Ok((history, records));
+        }
+
+        let batch_algo = match algo {
+            Algo::KmeansTpe => BatchAlgo::KmeansTpe(KmeansTpeParams {
+                n_startup: self.cfg.n_startup,
+                seed: self.cfg.seed,
+                ..Default::default()
+            }),
+            Algo::Tpe => BatchAlgo::Tpe(TpeParams {
+                n_startup: self.cfg.n_startup,
+                seed: self.cfg.seed,
+                ..Default::default()
+            }),
+            other => anyhow::bail!(
+                "--checkpoint/--resume need a TPE-family --algo (kmeans-tpe or tpe), \
+                 got '{}'",
+                other.name()
+            ),
+        };
+        let searcher = BatchSearcher::new(batch_algo, self.cfg.batch_q);
+        let resumed = opts.resume.as_deref().map(SessionCheckpoint::load).transpose()?;
+        let mut prior: Vec<EvalRecord> = Vec::new();
+        if let Some(ck) = &resumed {
+            anyhow::ensure!(
+                ck.algo == algo.name(),
+                "checkpoint holds a '{}' search, this run is '{}'",
+                ck.algo,
+                algo.name()
+            );
+            anyhow::ensure!(
+                ck.seed == self.cfg.seed,
+                "checkpoint seed {:#x} != --seed {:#x}: resuming would splice two \
+                 different random streams",
+                ck.seed,
+                self.cfg.seed
+            );
+            prior = ck.records.clone();
+        }
+        let mut run = searcher.start(
+            objective.space().clone(),
+            budget,
+            resumed.as_ref().map(|c| &c.search),
+        )?;
+        while !run.done() {
+            run.step(objective);
+            if let Some(path) = &opts.checkpoint {
+                let mut records = prior.clone();
+                records.extend(objective.records().iter().cloned());
+                SessionCheckpoint {
+                    algo: algo.name().to_string(),
+                    seed: self.cfg.seed,
+                    n_evals: budget,
+                    search: run.checkpoint(),
+                    records,
+                }
+                .save(path)?;
+            }
+        }
+        let (history, _rounds) = run.finish();
+        let mut records = prior;
+        records.extend(objective.records().iter().cloned());
+        Ok((history, records))
+    }
+
+    /// Stage 4: final training of the winner + report assembly. Works from
+    /// records alone, so it is backend-agnostic — remote searches finalize
+    /// exactly like in-process ones.
+    pub fn finalize(
+        &self,
+        algo: Algo,
+        pre: Pretrained,
+        pruned: Option<PrunedSpace>,
+        search: SearchOutcome,
+    ) -> Result<SearchReport> {
+        let sess = self.session;
+        let cfg = &self.cfg;
+        let SearchOutcome { build, history, records, search_secs } = search;
         let best_trial = history.best().expect("non-empty history");
         let best = records
             .iter()
@@ -265,10 +561,9 @@ impl<'a> Leader<'a> {
             .expect("best record")
             .clone();
 
-        // 4. Final training of the winner.
         let t_final = Timer::start();
-        let (bits, widths) = build.decode(meta, &best.config);
-        let mut final_state = sess.state_from_snapshot(&pretrained)?;
+        let (bits, widths) = build.decode(&sess.meta, &best.config);
+        let mut final_state = sess.state_from_snapshot(&pre.snapshot)?;
         sess.train(&mut final_state, &bits, &widths, cfg.final_steps, cfg.final_lr)?;
         let final_accuracy = sess.evaluate(
             &final_state,
@@ -277,8 +572,17 @@ impl<'a> Leader<'a> {
             cfg.objective.eval_batches.max(8),
         )?;
         let final_secs = t_final.secs();
-        let (final_size_mb, final_latency_ms, final_speedup) =
-            objective.hw_metrics(&bits, &widths);
+        // Hardware metrics are analytic (no training, no snapshot) —
+        // computed leader-side for every backend, same formulas as
+        // `DnnObjective::hw_metrics`.
+        let meta = &sess.meta;
+        let net = meta.net_shape(&bits, &widths);
+        let final_size_mb = net.model_size_mb();
+        let cycles = crate::hw::latency_cycles(&self.hw, &net);
+        let final_latency_ms = self.hw.cycles_to_ms(cycles);
+        let (b16, w10) = meta.resolve(|_| 16.0, |_| 1.0);
+        let final_speedup =
+            crate::hw::baseline_latency_cycles(&self.hw, &meta.net_shape(&b16, &w10)) / cycles;
 
         Ok(SearchReport {
             tag: sess.tag.clone(),
@@ -292,9 +596,9 @@ impl<'a> Leader<'a> {
             final_size_mb,
             final_latency_ms,
             final_speedup,
-            baseline_accuracy,
-            baseline_size_mb,
-            pretrain_secs,
+            baseline_accuracy: pre.baseline_accuracy,
+            baseline_size_mb: pre.baseline_size_mb,
+            pretrain_secs: pre.pretrain_secs,
             search_secs,
             final_secs,
         })
@@ -316,6 +620,73 @@ mod tests {
         assert!(!QPolicy::Fixed(1).batched());
         assert!(QPolicy::Fixed(2).batched());
         assert!(QPolicy::Auto.batched());
+    }
+
+    #[test]
+    fn session_checkpoint_serde_and_atomic_save_load() {
+        use crate::search::{RngState, SearchCheckpoint};
+        use crate::util::rng::Rng;
+        let mut history = History::new("batch-kmeans-tpe");
+        history.push(vec![0, 1], 0.5, 0.1);
+        history.push(vec![1, 0], f64::NEG_INFINITY, 0.2);
+        let ck = SessionCheckpoint {
+            algo: "kmeans-tpe".to_string(),
+            // A seed above 2^53 would corrupt through a JSON number — the
+            // hex encoding must carry it exactly.
+            seed: 0xDEAD_BEEF_CAFE_F00D,
+            n_evals: 40,
+            search: SearchCheckpoint {
+                algo: "batch-kmeans-tpe".to_string(),
+                dims: 2,
+                history,
+                iter: 3,
+                centroids: vec![0.5, -1.0],
+                rng: RngState::of(&Rng::new(7)),
+            },
+            records: vec![
+                EvalRecord::value_only(vec![0, 1], 0.5),
+                EvalRecord::value_only(vec![1, 0], f64::NEG_INFINITY),
+            ],
+        };
+        let text = ck.to_json().to_string_pretty();
+        let back = SessionCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        assert_eq!(back.seed, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(back.records.len(), 2);
+
+        let path = std::env::temp_dir().join("sammpq_ckpt_test.json");
+        ck.save(&path).unwrap();
+        let loaded = SessionCheckpoint::load(&path).unwrap();
+        assert_eq!(loaded.to_json().to_string_pretty(), text);
+        // No torn temp file left behind.
+        assert!(!path.with_extension("tmp").exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn session_checkpoint_rejects_record_history_skew() {
+        use crate::search::{RngState, SearchCheckpoint};
+        use crate::util::rng::Rng;
+        let mut history = History::new("batch-tpe");
+        history.push(vec![0], 1.0, 0.0);
+        let ck = SessionCheckpoint {
+            algo: "tpe".to_string(),
+            seed: 1,
+            n_evals: 8,
+            search: SearchCheckpoint {
+                algo: "batch-tpe".to_string(),
+                dims: 1,
+                history,
+                iter: 0,
+                centroids: Vec::new(),
+                rng: RngState::of(&Rng::new(1)),
+            },
+            records: Vec::new(), // one trial, zero records
+        };
+        let err =
+            SessionCheckpoint::from_json(&Json::parse(&ck.to_json().to_string_compact()).unwrap())
+                .unwrap_err();
+        assert!(err.to_string().contains("records"), "{err}");
     }
 
     #[test]

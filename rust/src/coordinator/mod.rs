@@ -15,19 +15,26 @@
 //! `service::RemoteObjective` work-stealing a round across the async
 //! straggler-tolerant `service::WorkerPool`, or
 //! `search::batch::ParallelObjective` for `Send` objectives — turns each
-//! round into concurrent evaluations. Note that `Leader::run` itself still
-//! evaluates through the in-process `DnnObjective` (sequential
-//! `eval_batch`, plus its eval cache); driving a remote pool from the
-//! leader CLI needs a space-sync + record-return protocol extension and is
-//! a ROADMAP open item (`sammpq pool` demos the pool end-to-end on the
-//! synthetic objective meanwhile). See `search::batch` and
-//! docs/ARCHITECTURE.md.
+//! round into concurrent evaluations.
+//!
+//! `Leader::run_session` drives the whole Alg. 1 pipeline over a pluggable
+//! `EvalBackend`: in-process, or a worker pool opened with a versioned
+//! space-sync handshake (`sammpq search --workers a,b,c`) whose workers
+//! reply with full `EvalRecord`s — so the report is assembled identically
+//! either way. Sessions checkpoint after every round (`--checkpoint`) and
+//! resume (`--resume`), warm-starting surrogates, records, and the RNG
+//! cursor. See `search::batch`, `search::checkpoint`, and
+//! docs/ARCHITECTURE.md for the protocol state machine and formats.
 
 pub mod evaluator;
 pub mod service;
 pub mod leader;
 pub mod report;
 
-pub use evaluator::{build_space, DimKind, DnnObjective, EvalRecord, ObjectiveCfg, SpaceBuild};
-pub use leader::{Algo, Leader, LeaderCfg, SearchReport};
-pub use service::{PoolCfg, RemoteObjective, WorkerPool};
+pub use evaluator::{build_space, DimKind, DnnBackend, DnnObjective, EvalRecord, ObjectiveCfg,
+                    SpaceBuild};
+pub use leader::{Algo, EvalBackend, Leader, LeaderCfg, RecordedObjective, SearchReport,
+                 SessionCheckpoint, SessionOpts};
+pub use service::{serve_on_listener, serve_worker, serve_worker_on, PlainBackend, PoolCfg,
+                  RemoteObjective, SessionSpec, SyntheticBackend, WorkerBackend, WorkerPool,
+                  PROTOCOL_VERSION};

@@ -8,13 +8,30 @@
 //! and serves objective evaluations over TCP; the leader distributes trial
 //! configs and collects (id, J) records.
 //!
-//! Wire protocol: JSON-lines over TCP.
+//! Wire protocol (version [`PROTOCOL_VERSION`]): JSON-lines over TCP,
+//! opened by a space-sync handshake and answered with full records.
+//!
+//!   leader -> worker : {"hello": {"proto": 2, "session": {...}}}
+//!       The session spec ([`SessionSpec`]) carries the serialized
+//!       (possibly Hessian-PRUNED) space + dim kinds, the objective knobs,
+//!       the hardware model, and the leader's pretrained-snapshot digest —
+//!       so a worker evaluates the leader's exact objective or refuses.
+//!   worker -> leader : {"hello_ack": {"proto": 2, "dims": n}}
+//!                    | {"error": "...", "kind": "proto"|"session", "proto": 2}
 //!   leader -> worker : {"id": n, "config": [..]}            one per line
-//!   worker -> leader : {"id": n, "value": J}
+//!   worker -> leader : {"id": n, "value": J, "record": {...}}
+//!                      (the full `EvalRecord`, so the leader's report is
+//!                      assembled from remote metrics, not bare J)
 //!                    | {"id": n, "error": "..."}  per-eval failure; the
 //!                      connection stays up, the leader records -inf for
 //!                      that evaluation only
 //!   leader -> worker : {"shutdown": true}
+//!
+//! Skew behavior: a worker that receives an unknown message type or a
+//! mismatched protocol version replies with a structured
+//! `{"error", "kind", "proto"}` line and KEEPS SERVING the connection —
+//! version skew must be diagnosable from the reply, not from a dropped
+//! socket that is indistinguishable from a crash.
 //!
 //! The leader side is an **async, straggler-tolerant worker pool**
 //! ([`WorkerPool`]): one reader thread per connection feeds completions into
@@ -37,16 +54,183 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::search::space::Config;
-use crate::search::Objective;
+use crate::coordinator::evaluator::{EvalRecord, ObjectiveCfg, SpaceBuild};
+use crate::hw::HwConfig;
+use crate::search::space::{Config, Space};
+use crate::search::{Objective, SyntheticObjective};
 use crate::util::json::{obj, Json};
 use crate::util::timer::Ewma;
+
+/// Wire protocol version. Bumped when a message shape changes; a worker
+/// answering a different version replies with a structured error (and keeps
+/// serving) instead of undefined behavior.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// How long a connect-time handshake may take before the worker is treated
+/// as unresponsive (it only has to parse one line and maybe rebuild a
+/// space, not train anything).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// One evaluation result as shipped over the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RemoteEval {
     pub id: usize,
     pub value: f64,
+    /// Full metrics from a record-return reply; `None` for per-eval error
+    /// replies (the -inf path).
+    pub record: Option<EvalRecord>,
+}
+
+/// Everything a worker needs to evaluate the leader's exact objective: the
+/// (pruned) space + dim mapping, objective knobs, hardware model, and the
+/// pretrained-snapshot digest both sides must share.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    pub build: SpaceBuild,
+    pub objective: ObjectiveCfg,
+    pub hw: HwConfig,
+    pub digest: String,
+}
+
+impl SessionSpec {
+    /// The digest synthetic sessions use (there is no snapshot to hash).
+    pub const SYNTHETIC_DIGEST: &'static str = "synthetic";
+
+    /// Spec for a synthetic-objective session over `space`.
+    pub fn synthetic(space: Space) -> SessionSpec {
+        SessionSpec {
+            build: SpaceBuild { space, kinds: Vec::new() },
+            objective: ObjectiveCfg::default(),
+            hw: HwConfig::default(),
+            digest: SessionSpec::SYNTHETIC_DIGEST.to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("build", self.build.to_json()),
+            ("objective", self.objective.to_json()),
+            ("hw", self.hw.to_json()),
+            ("digest", Json::Str(self.digest.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionSpec> {
+        Ok(SessionSpec {
+            build: SpaceBuild::from_json(j.req("build")?)?,
+            objective: ObjectiveCfg::from_json(j.req("objective")?)?,
+            hw: HwConfig::from_json(j.req("hw")?)?,
+            digest: j.req("digest")?.as_str().context("digest")?.to_string(),
+        })
+    }
+}
+
+/// What a worker process serves: a space to validate configs against, a
+/// session-sync hook, and record-producing evaluation. The three shipped
+/// backends are [`DnnBackend`](crate::coordinator::evaluator::DnnBackend)
+/// (proxy-QAT sessions), [`SyntheticBackend`] (artifact-free synthetic
+/// landscapes over any synced space), and [`PlainBackend`] (adapts any
+/// `Objective`; cannot re-sync).
+pub trait WorkerBackend {
+    /// The space incoming configs are validated against.
+    fn space(&self) -> &Space;
+    /// Apply a `SyncSpace` handshake. Errors are reported to the leader as
+    /// a structured session rejection; the connection stays up.
+    fn sync(&mut self, spec: &SessionSpec) -> Result<()>;
+    /// Evaluate one (validated) config and return its full record.
+    fn eval_record(&mut self, config: &Config) -> EvalRecord;
+}
+
+/// Serves the separable synthetic landscape over whatever space a leader
+/// syncs (the landscape is a pure function of choice indices, so ANY
+/// categorical space works). Powers `sammpq worker --synthetic`, the
+/// distributed smoke tests, and the `remote-search` bench.
+pub struct SyntheticBackend {
+    obj: SyntheticObjective,
+    sleep: Duration,
+}
+
+impl SyntheticBackend {
+    pub fn new(dims: usize, choices: usize, sleep: Duration) -> SyntheticBackend {
+        SyntheticBackend { obj: SyntheticObjective::new(dims, choices, sleep), sleep }
+    }
+
+    /// Evaluations served so far.
+    pub fn evals(&self) -> usize {
+        self.obj.evals
+    }
+}
+
+impl WorkerBackend for SyntheticBackend {
+    fn space(&self) -> &Space {
+        self.obj.space()
+    }
+
+    fn sync(&mut self, spec: &SessionSpec) -> Result<()> {
+        // The digest check is real even here: a leader presenting a DNN
+        // snapshot digest expects proxy-QAT semantics this backend cannot
+        // provide — failing loud beats returning plausible-looking numbers.
+        anyhow::ensure!(
+            spec.digest == SessionSpec::SYNTHETIC_DIGEST,
+            "pretrained-snapshot digest mismatch: leader has '{}', synthetic workers \
+             serve only '{}' sessions",
+            spec.digest,
+            SessionSpec::SYNTHETIC_DIGEST
+        );
+        let evals = self.obj.evals;
+        self.obj = SyntheticObjective::with_space(spec.build.space.clone(), self.sleep);
+        self.obj.evals = evals;
+        Ok(())
+    }
+
+    fn eval_record(&mut self, config: &Config) -> EvalRecord {
+        let value = self.obj.eval(config);
+        EvalRecord::value_only(config.clone(), value)
+    }
+}
+
+/// Adapts any plain [`Objective`] into a backend: records carry only the
+/// objective value, and a space sync is accepted only when it matches the
+/// objective's own space exactly (a generic objective cannot rebuild
+/// itself over a different space).
+pub struct PlainBackend<'a> {
+    obj: &'a mut dyn Objective,
+}
+
+impl<'a> PlainBackend<'a> {
+    pub fn new(obj: &'a mut dyn Objective) -> PlainBackend<'a> {
+        PlainBackend { obj }
+    }
+}
+
+impl WorkerBackend for PlainBackend<'_> {
+    fn space(&self) -> &Space {
+        self.obj.space()
+    }
+
+    fn sync(&mut self, spec: &SessionSpec) -> Result<()> {
+        let mine = self.obj.space();
+        let theirs = &spec.build.space;
+        let same = mine.num_dims() == theirs.num_dims()
+            && mine
+                .dims
+                .iter()
+                .zip(&theirs.dims)
+                .all(|(a, b)| a.choices == b.choices);
+        anyhow::ensure!(
+            same,
+            "this worker's objective is fixed to a {}-dim space and cannot rebuild \
+             the leader's {}-dim space",
+            mine.num_dims(),
+            theirs.num_dims()
+        );
+        Ok(())
+    }
+
+    fn eval_record(&mut self, config: &Config) -> EvalRecord {
+        let value = self.obj.eval(config);
+        EvalRecord::value_only(config.clone(), value)
+    }
 }
 
 /// Upper bound on one wire message. A config line is a few bytes per
@@ -115,23 +299,48 @@ fn parse_eval(msg: &Json) -> Result<RemoteEval> {
     // surfaces as -inf for that slot, not as a dead worker.
     if let Some(err) = msg.get("error").and_then(|j| j.as_str()) {
         eprintln!("[pool] evaluation {id} failed on the worker: {err}");
-        return Ok(RemoteEval { id, value: f64::NEG_INFINITY });
+        return Ok(RemoteEval { id, value: f64::NEG_INFINITY, record: None });
     }
-    Ok(RemoteEval { id, value: msg.req("value")?.as_f64().context("value")? })
+    let record = match msg.get("record") {
+        Some(r) => Some(EvalRecord::from_json(r).context("record")?),
+        None => None,
+    };
+    let value = crate::util::json::dec_f64(msg.req("value")?).context("value")?;
+    Ok(RemoteEval { id, value, record })
 }
 
-/// Worker: serve evaluations of `objective` until an explicit shutdown
+/// Structured skew/rejection reply: machine-readable kind + the version the
+/// worker actually speaks, so a leader can tell "upgrade me" from "wrong
+/// session" without parsing prose.
+fn error_reply(kind: &str, detail: String) -> Json {
+    obj(vec![
+        ("error", Json::Str(detail)),
+        ("kind", Json::Str(kind.to_string())),
+        ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+    ])
+}
+
+/// Worker: serve evaluations of `backend` until an explicit shutdown
 /// message. Leader connections are served one at a time; a dropped
 /// connection — clean EOF or mid-message crash — sends the worker back to
 /// `accept`, so a leader pool's reconnect finds the worker process still
 /// alive (the pool-side reconnect budget is pointless if the worker exits
 /// on the first blip). Returns the total evaluations served.
-pub fn serve_worker(addr: &str, objective: &mut dyn Objective) -> Result<usize> {
+pub fn serve_worker(addr: &str, backend: &mut dyn WorkerBackend) -> Result<usize> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    serve_on_listener(listener, backend)
+}
+
+/// [`serve_worker`] over an already-bound listener — lets tests and demos
+/// bind port 0 and learn the real address before serving.
+pub fn serve_on_listener(
+    listener: TcpListener,
+    backend: &mut dyn WorkerBackend,
+) -> Result<usize> {
     let mut served = 0;
     loop {
         let (stream, _) = listener.accept()?;
-        match serve_conn(stream, objective, &mut served) {
+        match serve_conn(stream, backend, &mut served) {
             Ok(true) => return Ok(served),
             Ok(false) => {
                 eprintln!(
@@ -153,9 +362,9 @@ pub fn serve_worker(addr: &str, objective: &mut dyn Objective) -> Result<usize> 
 /// A clean leader EOF ends the loop with `Ok`; a mid-message disconnect (the
 /// leader crashed while writing) surfaces as `Err`, so process supervisors
 /// can tell the two apart.
-pub fn serve_worker_on(stream: TcpStream, objective: &mut dyn Objective) -> Result<usize> {
+pub fn serve_worker_on(stream: TcpStream, backend: &mut dyn WorkerBackend) -> Result<usize> {
     let mut served = 0;
-    serve_conn(stream, objective, &mut served)?;
+    serve_conn(stream, backend, &mut served)?;
     Ok(served)
 }
 
@@ -163,12 +372,15 @@ pub fn serve_worker_on(stream: TcpStream, objective: &mut dyn Objective) -> Resu
 /// goes (so counts survive a connection that later errors) and returns
 /// whether an explicit shutdown message ended it.
 ///
-/// An invalid config gets an `{"id": n, "error": "..."}` reply and the loop
-/// CONTINUES: the request was bad, not the connection — dropping the socket
-/// here would read as a clean EOF on the leader and retire a healthy worker.
+/// Recoverable protocol trouble never drops the socket — dropping it would
+/// read as a clean EOF on the leader and retire a healthy worker:
+/// * an invalid config gets an `{"id": n, "error": "..."}` reply;
+/// * a version-skewed hello, a rejected session sync (digest/space
+///   mismatch), or an UNKNOWN message type gets a structured
+///   `{"error", "kind", "proto"}` reply — and the loop keeps serving.
 fn serve_conn(
     stream: TcpStream,
-    objective: &mut dyn Objective,
+    backend: &mut dyn WorkerBackend,
     served: &mut usize,
 ) -> Result<bool> {
     let mut writer = stream.try_clone()?;
@@ -180,19 +392,69 @@ fn serve_conn(
         if msg.get("shutdown").and_then(|j| j.as_bool()).unwrap_or(false) {
             return Ok(true);
         }
-        let id = msg.req("id")?.as_usize().context("id")?;
+        if let Some(hello) = msg.get("hello") {
+            let proto = hello.get("proto").and_then(|v| v.as_i64());
+            if proto != Some(PROTOCOL_VERSION as i64) {
+                let detail = format!(
+                    "protocol version mismatch: leader speaks {:?}, worker speaks \
+                     {PROTOCOL_VERSION}",
+                    proto
+                );
+                eprintln!("[worker] rejecting hello: {detail}");
+                write_line(&mut writer, &error_reply("proto", detail))?;
+                continue;
+            }
+            let outcome = hello
+                .req("session")
+                .and_then(SessionSpec::from_json)
+                .and_then(|spec| backend.sync(&spec));
+            match outcome {
+                Ok(()) => {
+                    write_line(
+                        &mut writer,
+                        &obj(vec![(
+                            "hello_ack",
+                            obj(vec![
+                                ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+                                ("dims", Json::Num(backend.space().num_dims() as f64)),
+                            ]),
+                        )]),
+                    )?;
+                }
+                Err(e) => {
+                    eprintln!("[worker] rejecting session: {e:#}");
+                    write_line(&mut writer, &error_reply("session", format!("{e:#}")))?;
+                }
+            }
+            continue;
+        }
+        let Some(id) = msg.get("id").and_then(|v| v.as_usize()) else {
+            // Unknown message type: a future leader talking past us. Reply
+            // structured and keep serving — today's behavior for this used
+            // to be an Err that tore the connection down.
+            let keys: Vec<&str> = match &msg {
+                Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+                _ => Vec::new(),
+            };
+            let detail = format!("unknown message type (keys {keys:?})");
+            eprintln!("[worker] {detail}");
+            write_line(&mut writer, &error_reply("unknown", detail))?;
+            continue;
+        };
         // Non-numeric elements must NOT coerce to choice 0 (always a valid
         // index — the search would silently fold a wrong config's value
         // into its surrogate); they take the same error-reply path as an
-        // out-of-range config.
-        let parsed: Option<Config> =
-            msg.req("config")?.as_arr().context("config")?.iter().map(|v| v.as_usize()).collect();
+        // out-of-range or missing config.
+        let parsed: Option<Config> = msg
+            .get("config")
+            .and_then(|c| c.as_arr())
+            .and_then(|arr| arr.iter().map(|v| v.as_usize()).collect());
         let config = match parsed {
-            Some(c) if objective.space().validate(&c) => c,
+            Some(c) if backend.space().validate(&c) => c,
             _ => {
                 let detail = format!(
                     "invalid config for space ({} dims)",
-                    objective.space().num_dims()
+                    backend.space().num_dims()
                 );
                 eprintln!("[worker] rejecting evaluation {id}: {detail}");
                 write_line(
@@ -205,16 +467,57 @@ fn serve_conn(
                 continue;
             }
         };
-        let value = objective.eval(&config);
+        let record = backend.eval_record(&config);
         *served += 1;
         write_line(
             &mut writer,
             &obj(vec![
                 ("id", Json::Num(id as f64)),
-                ("value", Json::Num(value)),
+                ("value", crate::util::json::enc_f64(record.value)),
+                ("record", record.to_json()),
             ]),
         )?;
     }
+}
+
+/// Leader side of the Hello/SyncSpace handshake: send the session spec,
+/// block (bounded) for the ack. A structured rejection from the worker —
+/// version skew, digest mismatch, space the backend cannot rebuild —
+/// surfaces as an error naming the kind, so a session never silently runs
+/// over a skewed space.
+fn client_handshake(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    spec: &SessionSpec,
+) -> Result<()> {
+    write_line(
+        writer,
+        &obj(vec![(
+            "hello",
+            obj(vec![
+                ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+                ("session", spec.to_json()),
+            ]),
+        )]),
+    )?;
+    reader.get_ref().set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let reply = read_json_line(reader);
+    reader.get_ref().set_read_timeout(None)?;
+    let msg = reply
+        .context("worker did not answer the session handshake")?
+        .ok_or_else(|| anyhow::anyhow!("worker closed during the session handshake"))?;
+    if let Some(ack) = msg.get("hello_ack") {
+        let dims = ack.get("dims").and_then(|v| v.as_usize());
+        anyhow::ensure!(
+            dims == Some(spec.build.space.num_dims()),
+            "worker acked a {dims:?}-dim space, leader synced {} dims",
+            spec.build.space.num_dims()
+        );
+        return Ok(());
+    }
+    let kind = msg.get("kind").and_then(|v| v.as_str()).unwrap_or("?");
+    let detail = msg.get("error").and_then(|v| v.as_str()).unwrap_or("unparseable reply");
+    anyhow::bail!("worker rejected the session ({kind}): {detail}")
 }
 
 /// Retrying TCP connect — workers may still be compiling artifacts.
@@ -250,6 +553,22 @@ impl WorkerHandle {
         let stream = connect_with_retry(addr)?;
         let writer = stream.try_clone()?;
         Ok(WorkerHandle { writer, reader: BufReader::new(stream), dispatched: 0 })
+    }
+
+    /// Run the session handshake on this connection (protocol-level tests
+    /// and the blocking baseline; [`WorkerPool`] handshakes automatically).
+    pub fn hello(&mut self, spec: &SessionSpec) -> Result<()> {
+        client_handshake(&mut self.writer, &mut self.reader, spec)
+    }
+
+    /// Send one raw line (protocol skew tests).
+    pub fn send_raw(&mut self, msg: &Json) -> Result<()> {
+        write_line(&mut self.writer, msg)
+    }
+
+    /// Read one raw reply line (protocol skew tests).
+    pub fn recv_raw(&mut self) -> Result<Option<Json>> {
+        read_json_line(&mut self.reader)
     }
 
     pub fn dispatch(&mut self, id: usize, config: &Config) -> Result<()> {
@@ -410,6 +729,8 @@ struct Round<'c> {
     queue: VecDeque<usize>,
     done: Vec<bool>,
     out: Vec<f64>,
+    /// Record-return payloads, first result wins (None: error reply).
+    records: Vec<Option<EvalRecord>>,
     remaining: usize,
 }
 
@@ -428,6 +749,9 @@ pub struct WorkerPool {
     tx: Sender<PoolEvent>,
     rx: Receiver<PoolEvent>,
     cfg: PoolCfg,
+    /// Session spec handshaken on every (re)connection; `None` runs the
+    /// legacy no-handshake flow over the workers' own spaces.
+    session: Option<SessionSpec>,
     /// Monotone dispatch-id source; ids are never reused, so a late or
     /// duplicate result can always be attributed (then discarded).
     next_id: usize,
@@ -447,11 +771,25 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     pub fn connect(addrs: &[String], cfg: PoolCfg) -> Result<WorkerPool> {
+        WorkerPool::connect_session(addrs, cfg, None)
+    }
+
+    /// Connect and (when `session` is given) run the Hello/SyncSpace
+    /// handshake on every worker — and again on every reconnection, so a
+    /// worker that crashed and lost its synced space is re-synced before it
+    /// sees a single config.
+    pub fn connect_session(
+        addrs: &[String],
+        cfg: PoolCfg,
+        session: Option<SessionSpec>,
+    ) -> Result<WorkerPool> {
         anyhow::ensure!(!addrs.is_empty(), "no worker addresses");
         let mut pool = WorkerPool::empty(cfg);
+        pool.session = session;
         for addr in addrs {
             let stream = connect_with_retry(addr)?;
-            pool.push_worker(Some(addr.clone()), stream)?;
+            pool.push_worker(Some(addr.clone()), stream)
+                .with_context(|| format!("worker {addr}"))?;
         }
         Ok(pool)
     }
@@ -474,6 +812,7 @@ impl WorkerPool {
             tx,
             rx,
             cfg,
+            session: None,
             next_id: 0,
             round: 0,
             // Alpha 0.5: adapt within a couple of observations, but one
@@ -487,11 +826,18 @@ impl WorkerPool {
     }
 
     fn push_worker(&mut self, addr: Option<String>, stream: TcpStream) -> Result<()> {
-        let reader = stream.try_clone()?;
+        let mut writer = stream;
+        let mut reader = BufReader::new(writer.try_clone()?);
+        // Handshake BEFORE the reader thread exists: the ack is read
+        // synchronously off the same buffered reader that is then handed to
+        // the thread, so no reply bytes can be lost in a discarded buffer.
+        if let Some(spec) = &self.session {
+            client_handshake(&mut writer, &mut reader, spec)?;
+        }
         let w = self.workers.len();
         self.workers.push(PoolWorker {
             addr,
-            writer: Some(stream),
+            writer: Some(writer),
             generation: 0,
             alive: true,
             retired: false,
@@ -535,8 +881,17 @@ impl WorkerPool {
     /// included) with work still unfinished — individual worker failures
     /// requeue their configs onto the surviving workers instead.
     pub fn evaluate(&mut self, configs: &[Config]) -> Result<Vec<f64>> {
+        Ok(self.evaluate_records(configs)?.0)
+    }
+
+    /// [`evaluate`](Self::evaluate), plus each slot's record-return payload
+    /// (`None` where the worker answered with a per-eval error).
+    pub fn evaluate_records(
+        &mut self,
+        configs: &[Config],
+    ) -> Result<(Vec<f64>, Vec<Option<EvalRecord>>)> {
         if configs.is_empty() {
-            return Ok(Vec::new());
+            return Ok((Vec::new(), Vec::new()));
         }
         self.round += 1;
         let mut r = Round {
@@ -544,6 +899,7 @@ impl WorkerPool {
             queue: (0..configs.len()).collect(),
             done: vec![false; configs.len()],
             out: vec![f64::NAN; configs.len()],
+            records: vec![None; configs.len()],
             remaining: configs.len(),
         };
         while r.remaining > 0 {
@@ -574,7 +930,7 @@ impl WorkerPool {
                 }
             }
         }
-        Ok(r.out)
+        Ok((r.out, r.records))
     }
 
     fn reconnect_possible(&self) -> bool {
@@ -751,6 +1107,7 @@ impl WorkerPool {
                 if o.round == self.round && !r.done[o.slot] {
                     r.done[o.slot] = true;
                     r.out[o.slot] = eval.value;
+                    r.records[o.slot] = eval.record;
                     r.remaining -= 1;
                 }
                 // else: first-result-wins duplicate, or a previous round's
@@ -780,9 +1137,18 @@ impl WorkerPool {
             }
             let addr = self.workers[w].addr.clone().expect("checked above");
             self.workers[w].reconnects_left -= 1;
-            match TcpStream::connect(&addr).and_then(|s| {
-                let reader = s.try_clone()?;
-                Ok((s, reader))
+            // A fresh connection to a session pool must re-handshake: the
+            // worker process may have restarted and be back on its default
+            // space. A failed handshake burns the attempt like a failed
+            // dial.
+            let session = &self.session;
+            match TcpStream::connect(&addr).map_err(anyhow::Error::from).and_then(|s| {
+                let mut writer = s;
+                let mut reader = BufReader::new(writer.try_clone()?);
+                if let Some(spec) = session {
+                    client_handshake(&mut writer, &mut reader, spec)?;
+                }
+                Ok((writer, reader))
             }) {
                 Ok((writer, reader)) => {
                     let pw = &mut self.workers[w];
@@ -810,9 +1176,15 @@ impl WorkerPool {
     }
 }
 
-fn spawn_reader(tx: Sender<PoolEvent>, worker: usize, generation: u64, stream: TcpStream) {
+/// Reader thread: takes the (possibly handshake-consumed) buffered reader,
+/// so no bytes the handshake left in the buffer are lost.
+fn spawn_reader(
+    tx: Sender<PoolEvent>,
+    worker: usize,
+    generation: u64,
+    mut reader: BufReader<TcpStream>,
+) {
     std::thread::spawn(move || {
-        let mut reader = BufReader::new(stream);
         loop {
             match read_json_line(&mut reader) {
                 Ok(Some(msg)) => match parse_eval(&msg) {
@@ -859,9 +1231,17 @@ fn spawn_reader(tx: Sender<PoolEvent>, worker: usize, generation: u64, stream: T
 /// wire. Sequential `eval` is a one-config round; `eval_batch` ships a whole
 /// proposal round, which the pool work-steals across workers, re-dispatching
 /// stragglers and requeueing failures.
+///
+/// Like `DnnObjective`, it keeps a full [`EvalRecord`] log — one entry per
+/// evaluation, in order, built from the workers' record-return replies — so
+/// a leader can assemble its `SearchReport` from remote evaluations. Slots
+/// whose worker answered with an error (or whose round failed outright) get
+/// a value-only sentinel record carrying -inf.
 pub struct RemoteObjective {
     space: crate::search::Space,
     pub pool: WorkerPool,
+    /// Every evaluation's record, in evaluation order.
+    pub log: Vec<EvalRecord>,
 }
 
 impl RemoteObjective {
@@ -874,7 +1254,20 @@ impl RemoteObjective {
         addrs: &[String],
         cfg: PoolCfg,
     ) -> Result<RemoteObjective> {
-        Ok(RemoteObjective { space, pool: WorkerPool::connect(addrs, cfg)? })
+        Ok(RemoteObjective { space, pool: WorkerPool::connect(addrs, cfg)?, log: Vec::new() })
+    }
+
+    /// Connect with a space-sync handshake: every worker rebuilds the
+    /// session's (pruned) space before the first config is dispatched, and
+    /// the search runs over exactly that space.
+    pub fn connect_session(
+        spec: SessionSpec,
+        addrs: &[String],
+        cfg: PoolCfg,
+    ) -> Result<RemoteObjective> {
+        let space = spec.build.space.clone();
+        let pool = WorkerPool::connect_session(addrs, cfg, Some(spec))?;
+        Ok(RemoteObjective { space, pool, log: Vec::new() })
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
@@ -888,20 +1281,27 @@ impl Objective for RemoteObjective {
     }
 
     fn eval(&mut self, config: &Config) -> f64 {
-        match self.pool.evaluate(std::slice::from_ref(config)) {
-            Ok(values) => values[0],
-            Err(e) => {
-                eprintln!("[remote-objective] eval failed: {e:#}");
-                f64::NEG_INFINITY
-            }
-        }
+        self.eval_batch(std::slice::from_ref(config))[0]
     }
 
     fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
-        match self.pool.evaluate(configs) {
-            Ok(values) => values,
+        match self.pool.evaluate_records(configs) {
+            Ok((values, records)) => {
+                for ((config, &value), record) in
+                    configs.iter().zip(&values).zip(records)
+                {
+                    self.log.push(record.unwrap_or_else(|| {
+                        EvalRecord::value_only(config.clone(), value)
+                    }));
+                }
+                values
+            }
             Err(e) => {
                 eprintln!("[remote-objective] batch of {} failed: {e:#}", configs.len());
+                for config in configs {
+                    self.log
+                        .push(EvalRecord::value_only(config.clone(), f64::NEG_INFINITY));
+                }
                 vec![f64::NEG_INFINITY; configs.len()]
             }
         }
@@ -951,7 +1351,7 @@ mod tests {
         let h = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
             let mut obj = SumObj::new();
-            serve_worker_on(stream, &mut obj).expect("worker")
+            serve_worker_on(stream, &mut PlainBackend::new(&mut obj)).expect("worker")
         });
         (addr, h)
     }
@@ -962,9 +1362,9 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         let h = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            let mut obj =
-                SyntheticObjective::new(4, 3, std::time::Duration::from_millis(sleep_ms));
-            serve_worker_on(stream, &mut obj).expect("worker")
+            let mut backend =
+                SyntheticBackend::new(4, 3, std::time::Duration::from_millis(sleep_ms));
+            serve_worker_on(stream, &mut backend).expect("worker")
         });
         (addr, h)
     }
@@ -975,8 +1375,117 @@ mod tests {
         let mut w = WorkerHandle::connect(&addr).unwrap();
         w.dispatch(0, &vec![1, 2, 0, 2]).unwrap();
         let r = w.collect().unwrap();
-        assert_eq!(r, RemoteEval { id: 0, value: 5.0 });
+        assert_eq!(r.id, 0);
+        assert_eq!(r.value, 5.0);
+        // Record-return: the reply carries the full record, not bare J.
+        let rec = r.record.expect("v2 workers reply with records");
+        assert_eq!(rec.value, 5.0);
+        assert_eq!(rec.config, vec![1, 2, 0, 2]);
         w.shutdown().unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn version_skew_and_unknown_types_get_structured_errors_and_keep_serving() {
+        // Regression (protocol-skew fix): neither a future-versioned hello
+        // nor an unknown message type may kill the connection — both get a
+        // structured {"error","kind","proto"} reply and the SAME connection
+        // keeps evaluating afterwards.
+        let (addr, handle) = spawn_sum_worker();
+        let mut w = WorkerHandle::connect(&addr).unwrap();
+
+        // Version skew.
+        w.send_raw(&obj(vec![(
+            "hello",
+            obj(vec![("proto", Json::Num(99.0)), ("session", Json::Null)]),
+        )]))
+        .unwrap();
+        let reply = w.recv_raw().unwrap().expect("reply");
+        assert_eq!(reply.get("kind").and_then(|k| k.as_str()), Some("proto"));
+        assert_eq!(
+            reply.get("proto").and_then(|p| p.as_usize()),
+            Some(PROTOCOL_VERSION as usize)
+        );
+        assert!(reply.get("error").and_then(|e| e.as_str()).unwrap().contains("version"));
+
+        // Unknown message type.
+        w.send_raw(&obj(vec![("wat", Json::Num(1.0))])).unwrap();
+        let reply = w.recv_raw().unwrap().expect("reply");
+        assert_eq!(reply.get("kind").and_then(|k| k.as_str()), Some("unknown"));
+
+        // The connection survived both and still evaluates.
+        w.dispatch(7, &vec![2, 2, 2, 2]).unwrap();
+        let r = w.collect().unwrap();
+        assert_eq!((r.id, r.value), (7, 8.0));
+        w.shutdown().unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn space_sync_rebuilds_worker_space_and_digest_mismatch_is_explicit() {
+        // Worker starts on a 4x3 space; the leader syncs a 6-dim space with
+        // asymmetric menus. Post-handshake, configs valid only in the SYNCED
+        // space must evaluate (they would be rejected on the default).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut backend = SyntheticBackend::new(4, 3, Duration::ZERO);
+            serve_worker_on(stream, &mut backend).expect("worker")
+        });
+        let pruned = Space::new(
+            (0..6usize)
+                .map(|d| {
+                    Dim::new(format!("p{d}"), (0..d + 2).map(|c| c as f64).collect())
+                })
+                .collect(),
+        );
+        let mut w = WorkerHandle::connect(&addr).unwrap();
+
+        // Wrong digest first: explicit rejection, connection stays up.
+        let mut bad = SessionSpec::synthetic(pruned.clone());
+        bad.digest = "deadbeef00000000".to_string();
+        let err = w.hello(&bad).unwrap_err();
+        assert!(err.to_string().contains("digest"), "{err}");
+
+        // Correct digest: sync succeeds and the synced space serves.
+        w.hello(&SessionSpec::synthetic(pruned)).unwrap();
+        let config = vec![1, 2, 3, 4, 5, 6]; // invalid on 4x3, valid post-sync
+        w.dispatch(0, &config).unwrap();
+        let r = w.collect().unwrap();
+        assert_eq!(r.value, -21.0);
+        assert_eq!(r.record.unwrap().config, config);
+        w.shutdown().unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn pool_connect_session_fails_loud_on_digest_mismatch() {
+        // Multi-connection worker (serve_on_listener): the rejected session
+        // drops its connection, the corrected one redials.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let mut backend = SyntheticBackend::new(4, 3, Duration::ZERO);
+            serve_on_listener(listener, &mut backend).expect("worker")
+        });
+        let mut spec = SessionSpec::synthetic(
+            SyntheticObjective::new(4, 3, Duration::ZERO).space().clone(),
+        );
+        spec.digest = "0123456789abcdef".to_string();
+        let err = WorkerPool::connect_session(&[addr.clone()], no_steal_cfg(), Some(spec))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("digest"), "{err:#}");
+        // The worker survived the rejection; a correct session completes.
+        let spec = SessionSpec::synthetic(
+            SyntheticObjective::new(4, 3, Duration::ZERO).space().clone(),
+        );
+        let mut pool =
+            WorkerPool::connect_session(&[addr], no_steal_cfg(), Some(spec)).unwrap();
+        let (values, records) = pool.evaluate_records(&[vec![1, 1, 0, 2]]).unwrap();
+        assert_eq!(values, vec![-4.0]);
+        assert_eq!(records[0].as_ref().unwrap().value, -4.0);
+        pool.shutdown().unwrap();
         assert_eq!(handle.join().unwrap(), 1);
     }
 
@@ -1165,7 +1674,7 @@ mod tests {
             // Connection 2: behave.
             let (stream, _) = listener.accept().unwrap();
             let mut obj = SumObj::new();
-            serve_worker_on(stream, &mut obj).expect("worker")
+            serve_worker_on(stream, &mut PlainBackend::new(&mut obj)).expect("worker")
         });
         let cfg = PoolCfg {
             reconnect_attempts: 3,
@@ -1188,7 +1697,7 @@ mod tests {
         let addr = "127.0.0.1:47891";
         let h = std::thread::spawn(move || {
             let mut obj = SumObj::new();
-            serve_worker(addr, &mut obj).expect("worker")
+            serve_worker(addr, &mut PlainBackend::new(&mut obj)).expect("worker")
         });
         {
             let mut w = WorkerHandle::connect(addr).unwrap();
@@ -1324,16 +1833,18 @@ mod tests {
         let handle = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
             let mut obj = SumObj::new();
-            serve_worker_on(stream, &mut obj)
+            serve_worker_on(stream, &mut PlainBackend::new(&mut obj))
         });
         let mut w = WorkerHandle::connect(&addr).unwrap();
         w.dispatch(0, &vec![9, 9, 9, 9]).unwrap(); // out of range
         let r = w.collect().unwrap();
         assert_eq!(r.id, 0);
         assert_eq!(r.value, f64::NEG_INFINITY);
+        assert_eq!(r.record, None); // error replies carry no record
         // The connection survived the rejection.
         w.dispatch(1, &vec![2, 2, 2, 2]).unwrap();
-        assert_eq!(w.collect().unwrap(), RemoteEval { id: 1, value: 8.0 });
+        let r = w.collect().unwrap();
+        assert_eq!((r.id, r.value), (1, 8.0));
         w.shutdown().unwrap();
         assert_eq!(handle.join().unwrap(), 1); // only the valid eval counted
     }

@@ -60,4 +60,54 @@ impl HwConfig {
     pub fn cycles_to_ms(&self, cycles: f64) -> f64 {
         cycles / (self.clock_mhz * 1e3)
     }
+
+    /// Wire encoding for the search-session handshake: workers must compute
+    /// size/latency with the LEADER's accelerator model, or the J values they
+    /// return silently disagree with the report the leader assembles.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj(vec![
+            ("m", Json::Num(self.m as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("clock_mhz", Json::Num(self.clock_mhz)),
+            ("dram_bytes_per_cycle", Json::Num(self.dram_bytes_per_cycle)),
+            ("dram_overlap", Json::Num(self.dram_overlap)),
+            ("dsp_pj_per_cycle", Json::Num(self.dsp_pj_per_cycle)),
+            ("bram_pj_per_access", Json::Num(self.bram_pj_per_access)),
+            ("dram_pj_per_byte", Json::Num(self.dram_pj_per_byte)),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<HwConfig> {
+        use anyhow::Context;
+        let f = |k: &str| -> anyhow::Result<f64> {
+            j.req(k)?.as_f64().with_context(|| format!("hw field '{k}' must be numeric"))
+        };
+        Ok(HwConfig {
+            m: f("m")? as usize,
+            n: f("n")? as usize,
+            clock_mhz: f("clock_mhz")?,
+            dram_bytes_per_cycle: f("dram_bytes_per_cycle")?,
+            dram_overlap: f("dram_overlap")?,
+            dsp_pj_per_cycle: f("dsp_pj_per_cycle")?,
+            bram_pj_per_access: f("bram_pj_per_access")?,
+            dram_pj_per_byte: f("dram_pj_per_byte")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hw_config_serde_roundtrip_is_byte_identical() {
+        let hw = HwConfig { m: 32, dram_overlap: 0.75, ..Default::default() };
+        let text = hw.to_json().to_string_pretty();
+        let back =
+            HwConfig::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        assert_eq!(back.m, 32);
+        assert_eq!(back.dram_overlap, 0.75);
+    }
 }

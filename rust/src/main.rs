@@ -14,7 +14,8 @@
 use anyhow::Result;
 
 use sammpq::coordinator::report::Table;
-use sammpq::coordinator::{Algo, Leader, LeaderCfg, ObjectiveCfg, PoolCfg};
+use sammpq::coordinator::{Algo, EvalBackend, Leader, LeaderCfg, ObjectiveCfg, PoolCfg,
+                          SessionOpts};
 use sammpq::search::QPolicy;
 use sammpq::exp::{self, Effort};
 use sammpq::hessian::prune_space;
@@ -61,6 +62,27 @@ fn leader_cfg_from(args: &Args) -> Result<LeaderCfg> {
     Ok(cfg)
 }
 
+/// Parse a `--workers a,b,c` / `--addrs a,b,c` style address list.
+fn parse_addr_list(list: &str) -> Vec<String> {
+    list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+}
+
+fn session_opts_from(args: &Args) -> Result<SessionOpts> {
+    let backend = match args.get("workers") {
+        Some(list) => {
+            let addrs = parse_addr_list(list);
+            anyhow::ensure!(!addrs.is_empty(), "--workers needs at least one host:port");
+            EvalBackend::Remote { addrs, pool: pool_cfg_from(args)? }
+        }
+        None => EvalBackend::InProcess,
+    };
+    Ok(SessionOpts {
+        backend,
+        checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
+        resume: args.get("resume").map(std::path::PathBuf::from),
+    })
+}
+
 fn cmd_search(args: &Args) -> Result<()> {
     let tag = args.get_or("model", "resnet20-cifar10");
     let algo = Algo::parse(&args.get_or("algo", "kmeans-tpe"))
@@ -70,14 +92,27 @@ fn cmd_search(args: &Args) -> Result<()> {
     let sess = ModelSession::open(&rt, &tag, args.get_usize("train-n", 1024),
                                   args.get_usize("val-n", 512))?;
     let cfg = leader_cfg_from(args)?;
-    println!(
-        "searching {tag} with {} (n={}, n0={}, steps/eval={})",
-        algo.name(),
-        cfg.n_evals,
-        cfg.n_startup,
-        cfg.objective.steps_per_eval
-    );
-    let report = Leader::new(&sess, cfg, HwConfig::default()).run(algo)?;
+    let opts = session_opts_from(args)?;
+    match &opts.backend {
+        EvalBackend::InProcess => println!(
+            "searching {tag} with {} (n={}, n0={}, steps/eval={})",
+            algo.name(),
+            cfg.n_evals,
+            cfg.n_startup,
+            cfg.objective.steps_per_eval
+        ),
+        EvalBackend::Remote { addrs, .. } => println!(
+            "searching {tag} with {} over {} workers (n={}, n0={})",
+            algo.name(),
+            addrs.len(),
+            cfg.n_evals,
+            cfg.n_startup
+        ),
+    }
+    if let Some(ck) = &opts.resume {
+        println!("resuming from {}", ck.display());
+    }
+    let report = Leader::new(&sess, cfg, HwConfig::default()).run_session(algo, &opts)?;
 
     let mut t = Table::new(
         &format!("search result: {tag} / {}", algo.name()),
@@ -247,23 +282,22 @@ fn pool_cfg_from(args: &Args) -> Result<PoolCfg> {
     Ok(cfg)
 }
 
-/// Worker process: own a ModelSession and serve objective evaluations to a
-/// remote leader (`sammpq search` on another core/host would connect here).
+/// Worker process: own a ModelSession and serve record-returning objective
+/// evaluations to a remote leader (`sammpq search --workers ...` connects
+/// here, syncing its pruned space/objective/hw + snapshot digest first).
 /// With `--synthetic <dims>x<choices>` it instead serves the synthetic
-/// objective (optionally `--sleep-ms <f>` per eval) — no artifacts needed,
-/// which is how the `sammpq pool` demo exercises the async pool.
+/// objective (optionally `--sleep-ms <f>` per eval) — no artifacts needed.
 fn cmd_worker(args: &Args) -> Result<()> {
-    use sammpq::coordinator::evaluator::{build_space, DnnObjective};
-    use sammpq::coordinator::service::serve_worker;
+    use sammpq::coordinator::{serve_worker, DnnBackend, SyntheticBackend};
     let addr = args.get_or("addr", "127.0.0.1:7447");
     if let Some(spec) = args.get("synthetic") {
         let (dims, choices) = parse_synthetic(spec)?;
         let sleep = std::time::Duration::from_secs_f64(
             args.get_f64("sleep-ms", 0.0).max(0.0) / 1e3,
         );
-        let mut obj = sammpq::search::SyntheticObjective::new(dims, choices, sleep);
+        let mut backend = SyntheticBackend::new(dims, choices, sleep);
         println!("[worker] synthetic {dims}x{choices} (sleep {sleep:?}) on {addr}");
-        let served = serve_worker(&addr, &mut obj)?;
+        let served = serve_worker(&addr, &mut backend)?;
         println!("[worker] done, served {served} evaluations");
         return Ok(());
     }
@@ -272,17 +306,20 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let sess = ModelSession::open(&rt, &tag, args.get_usize("train-n", 1024),
                                   args.get_usize("val-n", 512))?;
     let cfg = leader_cfg_from(args)?;
-    // Deterministic pretrain so every worker shares the same starting point.
+    // Deterministic pretrain so every worker shares the leader's starting
+    // point — the session handshake verifies this via the snapshot digest.
     let snap = sess.init_snapshot(cfg.seed);
     let mut st = sess.state_from_snapshot(&snap)?;
     sess.train(&mut st, &sess.meta.uniform_bits(16.0), &sess.meta.base_widths(),
                cfg.pretrain_steps, cfg.pretrain_lr)?;
     let pretrained = sess.snapshot_of(&st)?;
-    let build = build_space(&sess.meta, None);
-    let mut obj = DnnObjective::new(&sess, pretrained, build, HwConfig::default(),
-                                    cfg.objective);
-    println!("[worker] {tag} serving evaluations on {addr}");
-    let served = serve_worker(&addr, &mut obj)?;
+    let mut backend = DnnBackend::new(&sess, pretrained, HwConfig::default(),
+                                      cfg.objective);
+    println!(
+        "[worker] {tag} serving evaluations on {addr} (snapshot digest {})",
+        backend.digest()
+    );
+    let served = serve_worker(&addr, &mut backend)?;
     println!("[worker] done, served {served} evaluations");
     Ok(())
 }
@@ -296,17 +333,12 @@ fn cmd_worker(args: &Args) -> Result<()> {
 ///   sammpq worker --synthetic 8x4 --sleep-ms 500 --addr 127.0.0.1:7448
 ///   sammpq pool --addrs 127.0.0.1:7447,127.0.0.1:7448 --batch-q auto --n 64
 fn cmd_pool(args: &Args) -> Result<()> {
-    use sammpq::coordinator::RemoteObjective;
+    use sammpq::coordinator::{RemoteObjective, SessionSpec};
     use sammpq::search::{BatchAlgo, BatchSearcher, KmeansTpeParams, Objective, Searcher,
                          SyntheticObjective, TpeParams};
     use sammpq::util::Timer;
 
-    let addrs: Vec<String> = args
-        .get_or("addrs", "127.0.0.1:7447")
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
+    let addrs: Vec<String> = parse_addr_list(&args.get_or("addrs", "127.0.0.1:7447"));
     let (dims, choices) = parse_synthetic(&args.get_or("synthetic", "8x4"))?;
     let budget = args.get_usize("n", 64).max(1);
     let n0 = args.get_usize("n0", (budget / 4).max(1));
@@ -325,8 +357,15 @@ fn cmd_pool(args: &Args) -> Result<()> {
 
     let space =
         SyntheticObjective::new(dims, choices, std::time::Duration::ZERO).space().clone();
-    println!("[pool] connecting {} workers ({dims}x{choices} space)", addrs.len());
-    let mut remote = RemoteObjective::connect_with(space, &addrs, pool_cfg_from(args)?)?;
+    println!(
+        "[pool] connecting {} workers ({dims}x{choices} space, space-sync handshake)",
+        addrs.len()
+    );
+    let mut remote = RemoteObjective::connect_session(
+        SessionSpec::synthetic(space),
+        &addrs,
+        pool_cfg_from(args)?,
+    )?;
     let mut searcher = BatchSearcher::new(algo, batch_q);
     let t = Timer::start();
     let h = searcher.run(&mut remote, budget);
@@ -408,6 +447,11 @@ fn main() {
                  \x20             --n <evals> --steps-per-eval <k> --size-budget-mb <m>\n\
                  \x20             --batch-q <q>|auto  (constant-liar batched rounds;\n\
                  \x20             auto tunes q from the eval/proposal cost ratio)\n\
+                 \x20             --workers a,b,c     evaluate on a `sammpq worker` pool\n\
+                 \x20             (space-sync handshake + record-return; same --model\n\
+                 \x20             and --seed on both sides — digests are checked)\n\
+                 \x20             --checkpoint <f>    write a session checkpoint per round\n\
+                 \x20             --resume <f>        continue a checkpointed search\n\
                  \x20 hessian     sensitivity report (--model, --k, --samples)\n\
                  \x20 hw          hardware model report (--model, --bits, --mult)\n\
                  \x20 convergence Fig. 3a/3b tabular study (no artifacts needed)\n\

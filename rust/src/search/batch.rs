@@ -25,6 +25,7 @@
 
 use std::collections::HashMap;
 
+use super::checkpoint::{RngState, SearchCheckpoint};
 use super::history::History;
 use super::kmeans_tpe::{KmeansTpeParams, KmeansTpeState};
 use super::space::{Config, Space};
@@ -57,6 +58,38 @@ impl ProposerState {
         match self {
             ProposerState::Km(s) => s.propose_batch(q, rng),
             ProposerState::Tpe(s) => s.propose_batch(q, rng),
+        }
+    }
+
+    /// (annealing rounds, warm centroids) for a checkpoint. TPE's ordering
+    /// is replayable from the history alone, so it contributes nothing.
+    fn snapshot(&self) -> (usize, Vec<f64>) {
+        match self {
+            ProposerState::Km(s) => (s.rounds(), s.warm_centroids().to_vec()),
+            ProposerState::Tpe(_) => (0, Vec::new()),
+        }
+    }
+
+    fn restore(
+        algo: BatchAlgo,
+        space: Space,
+        ck: &SearchCheckpoint,
+    ) -> ProposerState {
+        let configs: Vec<Config> =
+            ck.history.trials.iter().map(|t| t.config.clone()).collect();
+        let values: Vec<f64> = ck.history.trials.iter().map(|t| t.value).collect();
+        match algo {
+            BatchAlgo::KmeansTpe(p) => ProposerState::Km(KmeansTpeState::restore(
+                p,
+                space,
+                configs,
+                values,
+                ck.iter,
+                ck.centroids.clone(),
+            )),
+            BatchAlgo::Tpe(p) => {
+                ProposerState::Tpe(TpeState::restore(p, space, configs, values))
+            }
         }
     }
 }
@@ -224,79 +257,189 @@ impl BatchSearcher {
             BatchAlgo::Tpe(p) => (p.seed, p.n_startup),
         }
     }
-}
 
-impl Searcher for BatchSearcher {
-    fn name(&self) -> &'static str {
+    fn algo_name(&self) -> &'static str {
         match self.algo {
             BatchAlgo::KmeansTpe(_) => "batch-kmeans-tpe",
             BatchAlgo::Tpe(_) => "batch-tpe",
         }
     }
 
-    fn run(&mut self, obj: &mut dyn Objective, budget: usize) -> History {
+    /// Open a stepwise run: [`BatchRun::step`] executes one proposal round
+    /// at a time, so a caller can act BETWEEN rounds — write a session
+    /// checkpoint, read the objective's record log — without aliasing the
+    /// objective borrow a closed `run` loop would hold. With
+    /// `resume: Some(ck)` the run continues a checkpointed search: restored
+    /// history counts toward `budget`, the proposer warm-starts from the
+    /// checkpointed (annealing round, centroids), and the RNG cursor picks
+    /// up mid-stream — for fixed-q policies the remaining trials are exactly
+    /// the ones the interrupted run would have produced. Errors when the
+    /// checkpoint belongs to a different proposer or space width.
+    pub fn start(
+        &self,
+        space: Space,
+        budget: usize,
+        resume: Option<&SearchCheckpoint>,
+    ) -> anyhow::Result<BatchRun> {
         let (seed, n_startup) = self.seed_and_startup();
-        let mut rng = Rng::new(seed ^ 0xBA7C4);
-        let space = obj.space().clone();
-        let mut state = match self.algo {
-            BatchAlgo::KmeansTpe(p) => ProposerState::Km(KmeansTpeState::new(p, space.clone())),
-            BatchAlgo::Tpe(p) => ProposerState::Tpe(TpeState::new(p, space.clone())),
+        let name = self.algo_name();
+        let (state, rng, hist) = match resume {
+            None => {
+                let state = match self.algo {
+                    BatchAlgo::KmeansTpe(p) => {
+                        ProposerState::Km(KmeansTpeState::new(p, space.clone()))
+                    }
+                    BatchAlgo::Tpe(p) => ProposerState::Tpe(TpeState::new(p, space.clone())),
+                };
+                (state, Rng::new(seed ^ 0xBA7C4), History::new(name))
+            }
+            Some(ck) => {
+                anyhow::ensure!(
+                    ck.algo == name,
+                    "checkpoint was taken by '{}', this searcher is '{name}'",
+                    ck.algo
+                );
+                anyhow::ensure!(
+                    ck.dims == space.num_dims(),
+                    "checkpoint space has {} dims, objective space has {}",
+                    ck.dims,
+                    space.num_dims()
+                );
+                let state = ProposerState::restore(self.algo, space.clone(), ck);
+                (state, ck.rng.to_rng(), ck.history.clone())
+            }
         };
-        let mut hist = History::new(self.name());
-        self.rounds.clear();
-        let mut ctl = QController::new();
-        // Auto starts saturated: until the first model-based round is
-        // measured there is no reason to leave evaluators idle.
-        let mut q = match self.q {
-            QPolicy::Fixed(q) => q.max(1),
-            QPolicy::Auto => obj.parallelism().max(1),
-        };
+        Ok(BatchRun {
+            algo_name: name,
+            policy: self.q,
+            space,
+            state,
+            rng,
+            hist,
+            ctl: QController::new(),
+            q: None,
+            n0: n_startup.min(budget),
+            budget,
+            rounds: Vec::new(),
+        })
+    }
+}
 
-        // Startup rounds use random configs but still go through eval_batch,
-        // so a parallel objective saturates its workers from round one.
-        let n0 = n_startup.min(budget);
-        while hist.len() < budget {
-            let m = q.min(budget - hist.len());
-            let startup = hist.len() < n0;
-            let t_prop = Timer::start();
-            let batch: Vec<Config> = if startup {
-                let m0 = m.min(n0 - hist.len());
-                (0..m0).map(|_| space.sample(&mut rng)).collect()
-            } else {
-                state.propose_batch(m, &mut rng)
-            };
-            let propose_secs = t_prop.secs();
-            let distinct =
-                batch.iter().collect::<std::collections::HashSet<&Config>>().len();
-            let t = Timer::start();
-            let values = obj.eval_batch(&batch);
-            let eval_secs = t.secs();
-            debug_assert_eq!(values.len(), batch.len(), "eval_batch length mismatch");
-            // Per-trial timing is the round's wall-clock amortized over the
-            // batch: total_eval_secs stays the true wall-clock spent.
-            let per = eval_secs / batch.len().max(1) as f64;
-            let stat = RoundStat {
-                q: batch.len(),
-                distinct,
-                propose_secs,
-                eval_secs,
-                startup,
-            };
-            for (config, value) in batch.into_iter().zip(values) {
-                hist.push(config.clone(), value, per);
-                state.observe(config, value);
-            }
-            // Re-read capacity every round: a remote pool can lose (or
-            // regain) workers mid-search, and both the wave math and the
-            // clamp must track the LIVE count — a stale snapshot would keep
-            // q pinned above what the pool can actually run.
-            let cap = obj.parallelism().max(1);
-            ctl.observe(&stat, cap);
-            self.rounds.push(stat);
-            if self.q == QPolicy::Auto {
-                q = ctl.next_q(cap);
-            }
+/// An in-flight batched search (see [`BatchSearcher::start`]).
+pub struct BatchRun {
+    algo_name: &'static str,
+    policy: QPolicy,
+    space: Space,
+    state: ProposerState,
+    rng: Rng,
+    hist: History,
+    ctl: QController,
+    /// Next round's batch size; `None` until the first step reads the
+    /// objective's parallelism (Auto starts saturated: until the first
+    /// model-based round is measured there is no reason to idle evaluators).
+    q: Option<usize>,
+    n0: usize,
+    budget: usize,
+    /// Round log so far (becomes `BatchSearcher::rounds` after a closed run).
+    pub rounds: Vec<RoundStat>,
+}
+
+impl BatchRun {
+    pub fn done(&self) -> bool {
+        self.hist.len() >= self.budget
+    }
+
+    pub fn history(&self) -> &History {
+        &self.hist
+    }
+
+    /// Execute one proposal + evaluation round; no-op once the budget is
+    /// spent. Startup rounds use random configs but still go through
+    /// `eval_batch`, so a parallel objective saturates its workers from
+    /// round one.
+    pub fn step(&mut self, obj: &mut dyn Objective) -> Option<RoundStat> {
+        if self.done() {
+            return None;
         }
+        let q = match self.q {
+            Some(q) => q,
+            None => {
+                let q = match self.policy {
+                    QPolicy::Fixed(q) => q.max(1),
+                    QPolicy::Auto => obj.parallelism().max(1),
+                };
+                self.q = Some(q);
+                q
+            }
+        };
+        let m = q.min(self.budget - self.hist.len());
+        let startup = self.hist.len() < self.n0;
+        let t_prop = Timer::start();
+        let batch: Vec<Config> = if startup {
+            let m0 = m.min(self.n0 - self.hist.len());
+            (0..m0).map(|_| self.space.sample(&mut self.rng)).collect()
+        } else {
+            self.state.propose_batch(m, &mut self.rng)
+        };
+        let propose_secs = t_prop.secs();
+        let distinct = batch.iter().collect::<std::collections::HashSet<&Config>>().len();
+        let t = Timer::start();
+        let values = obj.eval_batch(&batch);
+        let eval_secs = t.secs();
+        debug_assert_eq!(values.len(), batch.len(), "eval_batch length mismatch");
+        // Per-trial timing is the round's wall-clock amortized over the
+        // batch: total_eval_secs stays the true wall-clock spent.
+        let per = eval_secs / batch.len().max(1) as f64;
+        let stat = RoundStat { q: batch.len(), distinct, propose_secs, eval_secs, startup };
+        for (config, value) in batch.into_iter().zip(values) {
+            self.hist.push(config.clone(), value, per);
+            self.state.observe(config, value);
+        }
+        // Re-read capacity every round: a remote pool can lose (or
+        // regain) workers mid-search, and both the wave math and the
+        // clamp must track the LIVE count — a stale snapshot would keep
+        // q pinned above what the pool can actually run.
+        let cap = obj.parallelism().max(1);
+        self.ctl.observe(&stat, cap);
+        self.rounds.push(stat);
+        if self.policy == QPolicy::Auto {
+            self.q = Some(self.ctl.next_q(cap));
+        }
+        Some(stat)
+    }
+
+    /// Freeze the run at the current round boundary.
+    pub fn checkpoint(&self) -> SearchCheckpoint {
+        let (iter, centroids) = self.state.snapshot();
+        SearchCheckpoint {
+            algo: self.algo_name.to_string(),
+            dims: self.space.num_dims(),
+            history: self.hist.clone(),
+            iter,
+            centroids,
+            rng: RngState::of(&self.rng),
+        }
+    }
+
+    pub fn finish(self) -> (History, Vec<RoundStat>) {
+        (self.hist, self.rounds)
+    }
+}
+
+impl Searcher for BatchSearcher {
+    fn name(&self) -> &'static str {
+        self.algo_name()
+    }
+
+    fn run(&mut self, obj: &mut dyn Objective, budget: usize) -> History {
+        let mut run = self
+            .start(obj.space().clone(), budget, None)
+            .expect("a fresh batch run has no checkpoint to mismatch");
+        while !run.done() {
+            run.step(obj);
+        }
+        let (hist, rounds) = run.finish();
+        self.rounds = rounds;
         hist
     }
 }
@@ -797,6 +940,96 @@ mod tests {
             full.len(),
             searcher.rounds
         );
+    }
+
+    /// Mid-run checkpoint + resume must reproduce the uninterrupted run's
+    /// history EXACTLY (configs and values), including a serde round-trip of
+    /// the checkpoint — the acceptance criterion for resumable sessions.
+    #[test]
+    fn checkpoint_resume_reproduces_uninterrupted_history_exactly() {
+        use crate::util::json::Json;
+        for (label, searcher) in [
+            (
+                "kmeans",
+                BatchSearcher::kmeans_tpe(
+                    KmeansTpeParams { n_startup: 6, seed: 9, ..Default::default() },
+                    3,
+                ),
+            ),
+            (
+                "tpe",
+                BatchSearcher::tpe(
+                    crate::search::TpeParams { n_startup: 6, seed: 9, ..Default::default() },
+                    3,
+                ),
+            ),
+        ] {
+            let budget = 30;
+            let mut obj = SyntheticObjective::new(5, 4, std::time::Duration::ZERO);
+            let space = obj.space().clone();
+            let full = {
+                let mut run = searcher.start(space.clone(), budget, None).unwrap();
+                while !run.done() {
+                    run.step(&mut obj);
+                }
+                run.finish().0
+            };
+
+            // Interrupted run: stop somewhere past startup, checkpoint,
+            // round-trip the checkpoint through JSON, resume to completion.
+            let mut run = searcher.start(space.clone(), budget, None).unwrap();
+            while run.history().len() < 12 {
+                run.step(&mut obj);
+            }
+            let ck = run.checkpoint();
+            drop(run); // the "kill"
+            let ck = SearchCheckpoint::from_json(
+                &Json::parse(&ck.to_json().to_string_pretty()).unwrap(),
+            )
+            .unwrap();
+            let mut resumed = searcher.start(space, budget, Some(&ck)).unwrap();
+            while !resumed.done() {
+                resumed.step(&mut obj);
+            }
+            let res = resumed.finish().0;
+
+            assert_eq!(res.len(), full.len(), "{label}: budget mismatch");
+            assert_eq!(res.values(), full.values(), "{label}: values diverged");
+            for (i, (a, b)) in res.trials.iter().zip(&full.trials).enumerate() {
+                assert_eq!(a.config, b.config, "{label}: trial {i} config diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_checkpoints() {
+        let km = BatchSearcher::kmeans_tpe(KmeansTpeParams::default(), 2);
+        let space = SyntheticObjective::new(4, 3, std::time::Duration::ZERO)
+            .space()
+            .clone();
+        let mut obj = SyntheticObjective::new(4, 3, std::time::Duration::ZERO);
+        let mut run = km.start(space.clone(), 8, None).unwrap();
+        run.step(&mut obj);
+        let ck = run.checkpoint();
+        // Wrong proposer family.
+        let tp = BatchSearcher::tpe(crate::search::TpeParams::default(), 2);
+        let err = tp.start(space, 8, Some(&ck)).unwrap_err();
+        assert!(err.to_string().contains("batch-kmeans-tpe"), "{err}");
+        // Wrong space width.
+        let other = SyntheticObjective::new(6, 3, std::time::Duration::ZERO)
+            .space()
+            .clone();
+        let err = km.start(other, 8, Some(&ck)).unwrap_err();
+        assert!(err.to_string().contains("dims"), "{err}");
+        // A resume whose budget is already spent finishes immediately.
+        let done = km
+            .start(
+                SyntheticObjective::new(4, 3, std::time::Duration::ZERO).space().clone(),
+                ck.history.len(),
+                Some(&ck),
+            )
+            .unwrap();
+        assert!(done.done());
     }
 
     #[test]

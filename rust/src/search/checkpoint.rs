@@ -1,0 +1,243 @@
+//! Resumable search state — the searcher half of session checkpointing.
+//!
+//! A [`SearchCheckpoint`] captures everything a batched TPE-family run needs
+//! to continue as if it had never stopped: the trial history (configs,
+//! values, timings), the proposer's annealing round counter and warm-start
+//! centroids, and the RNG cursor. Restoring is EXACT for fixed-q policies:
+//! the surrogate Parzens are pure functions of (history, clustering), the
+//! clustering warm-starts from the checkpointed centroids, and the restored
+//! RNG draws the identical stream — so a resumed run's remaining trials are
+//! bit-for-bit the trials the interrupted run would have produced (tested in
+//! `search::batch`). Adaptive q (`QPolicy::Auto`) re-tunes from scratch
+//! after a resume; its decisions are wall-clock-driven and were never
+//! reproducible across runs in the first place.
+//!
+//! The coordinator wraps this in its own session checkpoint (which adds the
+//! full `EvalRecord` log and leader metadata) — see `coordinator::leader`.
+
+use anyhow::Context;
+
+use super::history::{History, Trial};
+use super::space::{config_from_json, config_to_json, Config};
+use crate::util::json::{dec_f64, dec_f64_arr, enc_f64, enc_f64_arr, obj, Json};
+use crate::util::rng::Rng;
+
+/// Serializable RNG cursor (xoshiro256** words + the pending Box-Muller
+/// spare). The 64-bit words are hex strings: JSON numbers are f64 and would
+/// corrupt anything above 2^53.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RngState {
+    pub s: [u64; 4],
+    pub gauss_spare: Option<f64>,
+}
+
+impl RngState {
+    pub fn of(rng: &Rng) -> RngState {
+        let (s, gauss_spare) = rng.state();
+        RngState { s, gauss_spare }
+    }
+
+    pub fn to_rng(&self) -> Rng {
+        Rng::from_state(self.s, self.gauss_spare)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "s",
+                Json::Arr(self.s.iter().map(|w| Json::Str(format!("{w:016x}"))).collect()),
+            ),
+            (
+                "gauss_spare",
+                match self.gauss_spare {
+                    Some(g) => enc_f64(g),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<RngState> {
+        let words = j.req("s")?.as_arr().context("rng words")?;
+        anyhow::ensure!(words.len() == 4, "rng state needs 4 words, got {}", words.len());
+        let mut s = [0u64; 4];
+        for (i, w) in words.iter().enumerate() {
+            let hex = w.as_str().context("rng word must be a hex string")?;
+            s[i] = u64::from_str_radix(hex, 16)
+                .with_context(|| format!("bad rng word '{hex}'"))?;
+        }
+        let gauss_spare = match j.req("gauss_spare")? {
+            Json::Null => None,
+            g => Some(dec_f64(g).context("gauss_spare")?),
+        };
+        Ok(RngState { s, gauss_spare })
+    }
+}
+
+/// One batched search run, frozen at a round boundary.
+#[derive(Debug, Clone)]
+pub struct SearchCheckpoint {
+    /// Searcher name ("batch-kmeans-tpe" | "batch-tpe") — resume refuses a
+    /// checkpoint taken by a different proposer.
+    pub algo: String,
+    /// Space width, as a cheap skew guard (the coordinator checkpoint
+    /// carries the full space; at this layer the caller provides it).
+    pub dims: usize,
+    /// Completed trials, in evaluation order.
+    pub history: History,
+    /// Proposer annealing rounds taken so far (k-means TPE; 0 for TPE).
+    pub iter: usize,
+    /// k-means warm-start centroids (decreasing; empty for TPE).
+    pub centroids: Vec<f64>,
+    /// RNG cursor at the round boundary.
+    pub rng: RngState,
+}
+
+impl SearchCheckpoint {
+    pub fn to_json(&self) -> Json {
+        let configs: Vec<Json> =
+            self.history.trials.iter().map(|t| config_to_json(&t.config)).collect();
+        let values: Vec<f64> = self.history.trials.iter().map(|t| t.value).collect();
+        let eval_secs: Vec<f64> =
+            self.history.trials.iter().map(|t| t.eval_secs).collect();
+        obj(vec![
+            ("algo", Json::Str(self.algo.clone())),
+            ("dims", Json::Num(self.dims as f64)),
+            (
+                "history",
+                obj(vec![
+                    ("searcher", Json::Str(self.history.searcher.clone())),
+                    ("configs", Json::Arr(configs)),
+                    ("values", enc_f64_arr(&values)),
+                    ("eval_secs", enc_f64_arr(&eval_secs)),
+                ]),
+            ),
+            ("iter", Json::Num(self.iter as f64)),
+            ("centroids", enc_f64_arr(&self.centroids)),
+            ("rng", self.rng.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SearchCheckpoint> {
+        let algo = j.req("algo")?.as_str().context("algo")?.to_string();
+        let dims = j.req("dims")?.as_usize().context("dims")?;
+        let h = j.req("history")?;
+        let searcher = h.req("searcher")?.as_str().context("searcher")?.to_string();
+        let configs: Vec<Config> = h
+            .req("configs")?
+            .as_arr()
+            .context("configs")?
+            .iter()
+            .map(config_from_json)
+            .collect::<anyhow::Result<_>>()?;
+        let values = dec_f64_arr(h.req("values")?).context("values")?;
+        let eval_secs = dec_f64_arr(h.req("eval_secs")?).context("eval_secs")?;
+        anyhow::ensure!(
+            configs.len() == values.len() && values.len() == eval_secs.len(),
+            "checkpoint history arrays disagree: {} configs, {} values, {} timings",
+            configs.len(),
+            values.len(),
+            eval_secs.len()
+        );
+        for (i, c) in configs.iter().enumerate() {
+            anyhow::ensure!(
+                c.len() == dims,
+                "checkpoint trial {i} has {} dims, space has {dims}",
+                c.len()
+            );
+        }
+        let trials = configs
+            .into_iter()
+            .zip(values)
+            .zip(eval_secs)
+            .map(|((config, value), eval_secs)| Trial { config, value, eval_secs })
+            .collect();
+        Ok(SearchCheckpoint {
+            algo,
+            dims,
+            history: History { trials, searcher },
+            iter: j.req("iter")?.as_usize().context("iter")?,
+            centroids: dec_f64_arr(j.req("centroids")?).context("centroids")?,
+            rng: RngState::from_json(j.req("rng")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_checkpoint() -> SearchCheckpoint {
+        let mut history = History::new("batch-kmeans-tpe");
+        history.push(vec![0, 2, 1], 0.75, 0.01);
+        history.push(vec![1, 1, 1], f64::NEG_INFINITY, 0.02); // failed eval
+        history.push(vec![2, 0, 0], -1.5, 0.0);
+        let mut rng = Rng::new(1234);
+        rng.next_u64();
+        rng.gauss(); // leave a spare pending
+        SearchCheckpoint {
+            algo: "batch-kmeans-tpe".to_string(),
+            dims: 3,
+            history,
+            iter: 5,
+            centroids: vec![0.75, -0.4, -1.5],
+            rng: RngState::of(&rng),
+        }
+    }
+
+    #[test]
+    fn serde_roundtrip_is_byte_identical() {
+        let ck = sample_checkpoint();
+        let text = ck.to_json().to_string_pretty();
+        let back = SearchCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        assert_eq!(back.algo, ck.algo);
+        assert_eq!(back.iter, 5);
+        assert_eq!(back.centroids, ck.centroids);
+        assert_eq!(back.history.len(), 3);
+        assert_eq!(back.history.trials[1].value, f64::NEG_INFINITY);
+        assert_eq!(back.history.trials[0].config, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn rng_cursor_survives_serde_exactly() {
+        let ck = sample_checkpoint();
+        let back =
+            SearchCheckpoint::from_json(&Json::parse(&ck.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.rng, ck.rng);
+        let mut a = ck.rng.to_rng();
+        let mut b = back.rng.to_rng();
+        assert_eq!(a.gauss(), b.gauss());
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn malformed_checkpoints_are_rejected() {
+        let ck = sample_checkpoint();
+        // Mismatched array lengths.
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(h)) = m.get_mut("history") {
+                h.insert("values".into(), enc_f64_arr(&[1.0]));
+            }
+        }
+        assert!(SearchCheckpoint::from_json(&j).unwrap_err().to_string().contains("disagree"));
+        // Trial width disagrees with dims.
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("dims".into(), Json::Num(7.0));
+        }
+        assert!(SearchCheckpoint::from_json(&j).is_err());
+        // Bad rng word.
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(r)) = m.get_mut("rng") {
+                r.insert("s".into(), Json::Arr(vec![Json::Str("zz".into()); 4]));
+            }
+        }
+        assert!(SearchCheckpoint::from_json(&j).is_err());
+    }
+}

@@ -154,6 +154,32 @@ impl KmeansTpeState {
         }
     }
 
+    /// Rebuild a state frozen at a round boundary (search checkpointing).
+    /// `iter` and `warm` come from [`rounds`](Self::rounds) /
+    /// [`warm_centroids`](Self::warm_centroids) of the interrupted state:
+    /// replaying observations alone would reset the annealing schedule to
+    /// k(0) and drop the Lloyd warm start, silently changing every
+    /// subsequent clustering. The surrogates start from the prior and
+    /// re-point on the next proposal — exactly the fit of the restored
+    /// membership, since Parzen counts are order-independent (+1.0 adds are
+    /// exact in f64).
+    pub fn restore(
+        params: KmeansTpeParams,
+        space: Space,
+        configs: Vec<Config>,
+        values: Vec<f64>,
+        iter: usize,
+        warm: Vec<f64>,
+    ) -> KmeansTpeState {
+        assert_eq!(configs.len(), values.len(), "restore: configs/values disagree");
+        let mut state = KmeansTpeState::new(params, space);
+        state.configs = configs;
+        state.values = values;
+        state.iter = iter;
+        state.warm = warm;
+        state
+    }
+
     pub fn space(&self) -> &Space {
         &self.space
     }
@@ -164,6 +190,16 @@ impl KmeansTpeState {
 
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
+    }
+
+    /// Proposal rounds taken so far (drives the annealing schedule).
+    pub fn rounds(&self) -> usize {
+        self.iter
+    }
+
+    /// Previous clustering's centroids (the Lloyd warm start).
+    pub fn warm_centroids(&self) -> &[f64] {
+        &self.warm
     }
 
     /// Record one completed trial: O(1) — surrogates refresh lazily on the

@@ -9,10 +9,12 @@ pub mod history;
 pub mod tpe;
 pub mod kmeans_tpe;
 pub mod batch;
+pub mod checkpoint;
 pub mod synthetic;
 
-pub use batch::{eval_batch_parallel, BatchAlgo, BatchSearcher, CachedObjective,
+pub use batch::{eval_batch_parallel, BatchAlgo, BatchRun, BatchSearcher, CachedObjective,
                 ParallelObjective, QPolicy, RoundStat};
+pub use checkpoint::{RngState, SearchCheckpoint};
 pub use synthetic::SyntheticObjective;
 pub use history::{History, Trial};
 pub use kmeans_tpe::{KmeansTpe, KmeansTpeParams, KmeansTpeState};

@@ -5,10 +5,24 @@
 //! exact for the Parzen ratio and matches the paper's spaces, which are all
 //! finite sets (B per cluster, S = {0.75..1.25}).
 
+use crate::util::json::{arr_f64, obj, Json};
 use crate::util::rng::Rng;
 
 /// A configuration: one choice index per dimension.
 pub type Config = Vec<usize>;
+
+/// Wire/checkpoint encoding of a config: a plain index array.
+pub fn config_to_json(config: &Config) -> Json {
+    Json::Arr(config.iter().map(|&c| Json::Num(c as f64)).collect())
+}
+
+pub fn config_from_json(j: &Json) -> anyhow::Result<Config> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("config must be an array"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("config entries must be indices")))
+        .collect()
+}
 
 #[derive(Debug, Clone)]
 pub struct Dim {
@@ -26,6 +40,26 @@ impl Dim {
 
     pub fn k(&self) -> usize {
         self.choices.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("choices", arr_f64(&self.choices)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Dim> {
+        let name = j.req("name")?.as_str().ok_or_else(|| anyhow::anyhow!("dim name"))?;
+        let choices: Vec<f64> = j
+            .req("choices")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("dim choices"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("dim choice must be numeric")))
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!choices.is_empty(), "dim '{name}' has no choices");
+        Ok(Dim { name: name.to_string(), choices })
     }
 }
 
@@ -65,6 +99,26 @@ impl Space {
         config.len() == self.dims.len()
             && config.iter().zip(&self.dims).all(|(&c, d)| c < d.k())
     }
+
+    /// Wire/checkpoint encoding: the full menu per dimension, so a worker
+    /// rebuilds the *pruned* space the leader searched, not the default.
+    pub fn to_json(&self) -> Json {
+        obj(vec![(
+            "dims",
+            Json::Arr(self.dims.iter().map(|d| d.to_json()).collect()),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Space> {
+        let dims: Vec<Dim> = j
+            .req("dims")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("space dims must be an array"))?
+            .iter()
+            .map(Dim::from_json)
+            .collect::<anyhow::Result<_>>()?;
+        Ok(Space { dims })
+    }
 }
 
 #[cfg(test)]
@@ -89,6 +143,27 @@ mod tests {
     fn decode() {
         let s = space();
         assert_eq!(s.values(&vec![1, 2, 0]), vec![6.0, 2.0, 0.75]);
+    }
+
+    #[test]
+    fn serde_roundtrip_is_byte_identical() {
+        let s = space();
+        let text = s.to_json().to_string_pretty();
+        let back = Space::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        assert_eq!(back.num_dims(), s.num_dims());
+        assert_eq!(back.dims[2].choices, s.dims[2].choices);
+        assert_eq!(back.dims[0].name, "bits0");
+
+        let c: Config = vec![1, 2, 4];
+        let ctext = config_to_json(&c).to_string_compact();
+        let cback =
+            config_from_json(&crate::util::json::Json::parse(&ctext).unwrap()).unwrap();
+        assert_eq!(cback, c);
+        assert_eq!(config_to_json(&cback).to_string_compact(), ctext);
+        // Malformed configs are rejected, not coerced.
+        assert!(config_from_json(&crate::util::json::Json::parse("[1,\"x\"]").unwrap())
+            .is_err());
     }
 
     #[test]

@@ -32,6 +32,15 @@ impl SyntheticObjective {
                 .map(|d| Dim::new(format!("d{d}"), (0..choices).map(|c| c as f64).collect()))
                 .collect(),
         );
+        SyntheticObjective::with_space(space, sleep)
+    }
+
+    /// Serve an arbitrary (e.g. leader-synced) space: the landscape is a
+    /// pure function of the choice INDICES, so any categorical space works —
+    /// which is what lets a synthetic worker rebuild whatever pruned space a
+    /// leader hands it in the session handshake.
+    pub fn with_space(space: Space, sleep: Duration) -> SyntheticObjective {
+        assert!(space.num_dims() > 0, "synthetic space must be non-empty");
         SyntheticObjective { space, sleep, evals: 0 }
     }
 

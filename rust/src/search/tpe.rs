@@ -95,6 +95,24 @@ impl TpeState {
         }
     }
 
+    /// Rebuild a state from checkpointed trials by replaying them: the value
+    /// ordering is a pure, deterministic function of the observation
+    /// sequence, so unlike `KmeansTpeState` there is no extra cursor to
+    /// carry.
+    pub fn restore(
+        params: TpeParams,
+        space: Space,
+        configs: Vec<Config>,
+        values: Vec<f64>,
+    ) -> TpeState {
+        assert_eq!(configs.len(), values.len(), "restore: configs/values disagree");
+        let mut state = TpeState::new(params, space);
+        for (config, value) in configs.into_iter().zip(values) {
+            state.observe(config, value);
+        }
+        state
+    }
+
     pub fn space(&self) -> &Space {
         &self.space
     }

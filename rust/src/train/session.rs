@@ -39,6 +39,33 @@ pub struct ParamSnapshot {
     pub tensors: Vec<Vec<f32>>,
 }
 
+impl ParamSnapshot {
+    /// Content digest (FNV-1a over the raw f32 bits, tensor order included).
+    /// A distributed search session's handshake compares the leader's and
+    /// each worker's pretrained-snapshot digest: both sides pretrain
+    /// deterministically from the same seed, so a mismatch means divergent
+    /// starting points (different model, seed, or step count) and the
+    /// session is rejected instead of silently searching skewed objectives.
+    pub fn digest(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |bytes: &[u8]| {
+            for &b in bytes {
+                h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        for t in &self.tensors {
+            // Length-prefix each tensor: without a boundary marker the
+            // flattened byte streams of [[1,2],[3]] and [[1],[2,3]] would
+            // collide, hiding a layer-structure mismatch.
+            mix(&(t.len() as u64).to_le_bytes());
+            for &x in t {
+                mix(&x.to_bits().to_le_bytes());
+            }
+        }
+        format!("{h:016x}")
+    }
+}
+
 pub struct ModelSession {
     pub meta: ModelMeta,
     pub tag: String,
@@ -266,5 +293,24 @@ impl ModelSession {
             *a /= n_samples.max(1) as f64;
         }
         Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_digest_is_content_sensitive() {
+        let a = ParamSnapshot { tensors: vec![vec![1.0, 2.0], vec![-0.5]] };
+        let b = ParamSnapshot { tensors: vec![vec![1.0, 2.0], vec![-0.5]] };
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.digest().len(), 16);
+        // One flipped bit anywhere changes the digest.
+        let c = ParamSnapshot { tensors: vec![vec![1.0, 2.0], vec![-0.5000001]] };
+        assert_ne!(a.digest(), c.digest());
+        // Tensor boundaries matter: [[1,2],[]] != [[1],[2]].
+        let d = ParamSnapshot { tensors: vec![vec![1.0], vec![2.0, -0.5]] };
+        assert_ne!(a.digest(), d.digest());
     }
 }

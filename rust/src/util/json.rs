@@ -185,6 +185,47 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Encode an f64 for wire messages and checkpoints. JSON has no
+/// representation for non-finite values (the writer would emit the invalid
+/// tokens `inf`/`NaN`), and objective values legitimately reach -inf (failed
+/// evaluations), so those are carried as the strings "inf" / "-inf" / "nan".
+pub fn enc_f64(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("nan".to_string())
+    } else if x > 0.0 {
+        Json::Str("inf".to_string())
+    } else {
+        Json::Str("-inf".to_string())
+    }
+}
+
+/// Inverse of [`enc_f64`]: numbers pass through, the non-finite sentinel
+/// strings decode back. Anything else is `None`.
+pub fn dec_f64(j: &Json) -> Option<f64> {
+    match j {
+        Json::Num(n) => Some(*n),
+        Json::Str(s) => match s.as_str() {
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            "nan" => Some(f64::NAN),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Encode a slice with [`enc_f64`] (non-finite-safe `arr_f64`).
+pub fn enc_f64_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| enc_f64(x)).collect())
+}
+
+/// Decode an array of [`enc_f64`]-encoded values.
+pub fn dec_f64_arr(j: &Json) -> Option<Vec<f64>> {
+    j.as_arr()?.iter().map(dec_f64).collect()
+}
+
 pub fn arr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
@@ -424,6 +465,25 @@ mod tests {
     fn unicode_escape() {
         let j = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(j.as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn enc_dec_f64_covers_non_finite() {
+        for &x in &[0.0, -1.5, 1e300, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = enc_f64(x);
+            // The encoding must survive an actual serialize/parse cycle.
+            let j2 = Json::parse(&j.to_string_compact()).unwrap();
+            let back = dec_f64(&j2).unwrap();
+            assert_eq!(back, x, "{x} came back as {back}");
+        }
+        assert!(dec_f64(&Json::parse(&enc_f64(f64::NAN).to_string_compact()).unwrap())
+            .unwrap()
+            .is_nan());
+        assert_eq!(dec_f64(&Json::Str("garbage".into())), None);
+        assert_eq!(dec_f64(&Json::Bool(true)), None);
+        let xs = [1.0, f64::NEG_INFINITY, 2.5];
+        let back = dec_f64_arr(&enc_f64_arr(&xs)).unwrap();
+        assert_eq!(back, xs);
     }
 
     #[test]

@@ -36,6 +36,19 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Snapshot the generator state — the "rng cursor" a search checkpoint
+    /// stores so a resumed run draws the exact sequence the interrupted run
+    /// would have drawn. The Box-Muller spare is part of the state: dropping
+    /// it would desync any consumer that was mid-pair.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from a [`state`](Self::state) snapshot.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Rng {
+        Rng { s, gauss_spare }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -214,6 +227,22 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), 8);
+    }
+
+    #[test]
+    fn state_restore_continues_the_stream() {
+        let mut a = Rng::new(21);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        a.gauss(); // leave a Box-Muller spare pending
+        let (s, spare) = a.state();
+        let mut b = Rng::from_state(s, spare);
+        assert_eq!(a.gauss(), b.gauss()); // spare consumed identically
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        assert_eq!(a.below(7), b.below(7));
     }
 
     #[test]

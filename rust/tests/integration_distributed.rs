@@ -1,0 +1,195 @@
+//! Distributed search-session smoke tests: a leader-side searcher driving
+//! real `sammpq worker`-equivalent services over localhost TCP — space-sync
+//! handshake, record-return replies, and checkpoint/resume — with no PJRT
+//! artifacts required (synthetic objective on both sides).
+//!
+//! Every test body runs under an explicit wall-clock bound: a wedged
+//! handshake or a stuck pool must FAIL the suite, not hang CI.
+
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use sammpq::coordinator::{serve_on_listener, PoolCfg, RemoteObjective, SessionSpec,
+                          SyntheticBackend};
+use sammpq::search::{BatchSearcher, KmeansTpeParams, Objective, Searcher,
+                     SyntheticObjective};
+
+/// A pool config whose straggler deadline cannot fire on instant
+/// objectives — keeps exact served-count asserts deterministic on a loaded
+/// CI runner.
+fn no_steal_cfg() -> PoolCfg {
+    PoolCfg { min_straggle: Duration::from_secs(30), ..Default::default() }
+}
+
+/// Hard timeout harness: run `f` on a worker thread and fail loudly if it
+/// does not finish in `secs`.
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            handle.join().expect("test thread panicked");
+            v
+        }
+        Err(_) => {
+            if handle.is_finished() {
+                // The body panicked (channel dropped without a send):
+                // propagate the real failure, not a bogus timeout.
+                handle.join().expect("test thread panicked");
+                unreachable!("test thread finished without sending a result");
+            }
+            panic!("distributed smoke test exceeded its {secs}s bound");
+        }
+    }
+}
+
+/// A synthetic worker service: binds port 0, serves connections (multiple,
+/// like the real `sammpq worker` process) until an explicit shutdown.
+fn spawn_worker(
+    dims: usize,
+    choices: usize,
+    sleep_ms: u64,
+) -> (String, std::thread::JoinHandle<usize>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let handle = std::thread::spawn(move || {
+        let mut backend =
+            SyntheticBackend::new(dims, choices, Duration::from_millis(sleep_ms));
+        serve_on_listener(listener, &mut backend).expect("worker service")
+    });
+    (addr, handle)
+}
+
+/// The leader's "pruned" space: deliberately DIFFERENT from the workers'
+/// default (5 dims of 3 choices vs their 8x4), so results can only be right
+/// if the space-sync handshake actually rebuilt the workers' spaces.
+fn pruned_space() -> sammpq::search::Space {
+    SyntheticObjective::new(5, 3, Duration::ZERO).space().clone()
+}
+
+#[test]
+fn distributed_search_returns_records_over_synced_space() {
+    with_timeout(120, || {
+        let (a1, h1) = spawn_worker(8, 4, 0);
+        let (a2, h2) = spawn_worker(8, 4, 0);
+        let spec = SessionSpec::synthetic(pruned_space());
+        let mut remote = RemoteObjective::connect_session(spec, &[a1, a2], no_steal_cfg())
+            .expect("session connect");
+        assert_eq!(remote.parallelism(), 2);
+
+        let budget = 24;
+        let params = KmeansTpeParams { n_startup: 8, seed: 3, ..Default::default() };
+        let mut searcher = BatchSearcher::kmeans_tpe(params, 4);
+        let history = searcher.run(&mut remote, budget);
+
+        // Every trial has a record-return payload, aligned with the history,
+        // evaluated over the SYNCED 5x3 space (workers default to 8x4).
+        assert_eq!(history.len(), budget);
+        assert_eq!(remote.log.len(), budget);
+        for (trial, record) in history.trials.iter().zip(&remote.log) {
+            assert_eq!(trial.config.len(), 5, "config from the unsynced space");
+            assert_eq!(record.config, trial.config);
+            assert_eq!(record.value, trial.value);
+            assert_eq!(trial.value, SyntheticObjective::expected_value(&trial.config));
+        }
+        remote.shutdown().expect("shutdown");
+        let served = h1.join().unwrap() + h2.join().unwrap();
+        assert_eq!(served, budget);
+    });
+}
+
+#[test]
+fn killed_distributed_search_resumes_to_the_uninterrupted_history() {
+    with_timeout(180, || {
+        // Reference: the uninterrupted run, in-process (values of the
+        // synthetic objective are transport-independent, and fixed-q batch
+        // proposals are deterministic per seed).
+        let budget = 27;
+        let params = KmeansTpeParams { n_startup: 9, seed: 11, ..Default::default() };
+        let searcher = BatchSearcher::kmeans_tpe(params, 3);
+        let mut local = SyntheticObjective::with_space(pruned_space(), Duration::ZERO);
+        let full = {
+            let mut run = searcher.start(pruned_space(), budget, None).unwrap();
+            while !run.done() {
+                run.step(&mut local);
+            }
+            run.finish().0
+        };
+
+        // Distributed run, killed mid-search: checkpoint at a round
+        // boundary, drop the run AND the pool (the "kill"), then resume on
+        // a FRESH pool of fresh workers.
+        let (a1, h1) = spawn_worker(8, 4, 0);
+        let (a2, h2) = spawn_worker(8, 4, 0);
+        let mut remote = RemoteObjective::connect_session(
+            SessionSpec::synthetic(pruned_space()),
+            &[a1, a2],
+            no_steal_cfg(),
+        )
+        .expect("session connect");
+        let mut run = searcher.start(pruned_space(), budget, None).unwrap();
+        while run.history().len() < 12 {
+            run.step(&mut remote);
+        }
+        let ck = run.checkpoint();
+        drop(run);
+        remote.shutdown().expect("shutdown");
+        h1.join().unwrap();
+        h2.join().unwrap();
+
+        let (a3, h3) = spawn_worker(8, 4, 0);
+        let mut remote = RemoteObjective::connect_session(
+            SessionSpec::synthetic(pruned_space()),
+            std::slice::from_ref(&a3),
+            no_steal_cfg(),
+        )
+        .expect("reconnect");
+        let mut resumed = searcher.start(pruned_space(), budget, Some(&ck)).unwrap();
+        while !resumed.done() {
+            resumed.step(&mut remote);
+        }
+        let res = resumed.finish().0;
+        remote.shutdown().expect("shutdown");
+        h3.join().unwrap();
+
+        // Acceptance: the kill + resume is invisible in the history.
+        assert_eq!(res.len(), full.len());
+        assert_eq!(res.values(), full.values());
+        for (a, b) in res.trials.iter().zip(&full.trials) {
+            assert_eq!(a.config, b.config);
+        }
+    });
+}
+
+#[test]
+fn straggler_workers_do_not_change_session_results() {
+    with_timeout(180, || {
+        // One worker 20x slower: work stealing + re-dispatch must keep the
+        // session's VALUES identical to an all-fast pool (order and results
+        // are config-deterministic even when scheduling is not).
+        let (a1, h1) = spawn_worker(8, 4, 2);
+        let (a2, h2) = spawn_worker(8, 4, 40);
+        let spec = SessionSpec::synthetic(pruned_space());
+        let cfg = PoolCfg {
+            straggler_factor: 2.0,
+            min_straggle: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let mut remote =
+            RemoteObjective::connect_session(spec, &[a1, a2], cfg).expect("connect");
+        let budget = 18;
+        let params = KmeansTpeParams { n_startup: 6, seed: 2, ..Default::default() };
+        let mut searcher = BatchSearcher::kmeans_tpe(params, 3);
+        let history = searcher.run(&mut remote, budget);
+        assert_eq!(history.len(), budget);
+        for trial in &history.trials {
+            assert_eq!(trial.value, SyntheticObjective::expected_value(&trial.config));
+        }
+        remote.shutdown().expect("shutdown");
+        // Duplicated straggler evals mean served >= budget.
+        assert!(h1.join().unwrap() + h2.join().unwrap() >= budget);
+    });
+}
