@@ -10,7 +10,8 @@
 //!
 //! Run: `cargo bench` (all) or `cargo bench -- fig3 table2 --effort quick`
 //! Filter names: fig1 fig3 fig3c fig4 table1 table2 table3 table4 ablations
-//!               kernels tpe tpe-hotpath round-latency remote-search hwmodel
+//!               kernels tpe tpe-hotpath round-latency pipeline-depth
+//!               remote-search hwmodel
 //!
 //! `tpe-hotpath` additionally records its proposals/sec numbers in
 //! `BENCH_tpe.json` at the workspace root, so the incremental-surrogate
@@ -360,6 +361,100 @@ fn bench_round_latency() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Pipelined dispatch: the same 128-config round over 4 workers with
+/// sub-ms (500us) evals at pipeline depth 1 vs 2 vs 4. Depth 1 pays the
+/// leader round-trip per eval (the worker idles between reply and next
+/// config); depth >= 2 keeps the next config queued on the worker, so the
+/// objective never idles. Acceptance: depth 2 beats depth 1 wall-clock,
+/// with values exact (straggler machinery duplicate-free) at every depth.
+/// Records BENCH_pipeline_depth.json.
+fn bench_pipeline_depth() -> anyhow::Result<()> {
+    use sammpq::coordinator::service::{serve_worker_on, PoolCfg, SyntheticBackend, WorkerPool};
+    use sammpq::search::space::Config;
+    use sammpq::search::SyntheticObjective;
+    use sammpq::util::json::{arr_f64, obj, Json};
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    section("pipeline-depth (outstanding evals per worker connection)");
+    let workers = 4usize;
+    let eval = Duration::from_micros(500);
+    let configs: Vec<Config> =
+        (0..128).map(|i| vec![i % 3, (i + 1) % 3, (i + 2) % 3, i % 2]).collect();
+    let expect: Vec<f64> = configs.iter().map(SyntheticObjective::expected_value).collect();
+
+    // Fresh single-connection worker set per measurement (same pattern as
+    // round-latency): spawn, connect, evaluate, shutdown, join.
+    type WorkerSet = (Vec<String>, Vec<std::thread::JoinHandle<usize>>);
+    let spawn_set = |n: usize| -> anyhow::Result<WorkerSet> {
+        let mut addrs = Vec::new();
+        let mut joins = Vec::new();
+        for _ in 0..n {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            addrs.push(listener.local_addr()?.to_string());
+            joins.push(std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                let mut backend = SyntheticBackend::new(4, 3, eval);
+                serve_worker_on(stream, &mut backend).expect("bench worker")
+            }));
+        }
+        Ok((addrs, joins))
+    };
+
+    let depths = [1usize, 2, 4];
+    let mut best_ms = Vec::new();
+    for &depth in &depths {
+        let mut min_secs = f64::INFINITY;
+        for _ in 0..3 {
+            let (addrs, joins) = spawn_set(workers)?;
+            let cfg = PoolCfg {
+                pipeline_depth: depth,
+                // Pure pipelining measurement: a steal would duplicate
+                // work and muddy the comparison.
+                min_straggle: Duration::from_secs(30),
+                ..Default::default()
+            };
+            let mut pool = WorkerPool::connect(&addrs, cfg)?;
+            let t = Timer::start();
+            let got = pool.evaluate(&configs)?;
+            let secs = t.secs();
+            anyhow::ensure!(got == expect, "depth {depth} values diverged");
+            pool.shutdown()?;
+            for j in joins {
+                j.join().unwrap();
+            }
+            min_secs = min_secs.min(secs);
+        }
+        best_ms.push(min_secs * 1e3);
+        println!("  depth {depth}: {:.1} ms (min of 3)", min_secs * 1e3);
+    }
+    println!(
+        "  depth-1/depth-2 speedup: {:.2}x | depth-1/depth-4: {:.2}x",
+        best_ms[0] / best_ms[1],
+        best_ms[0] / best_ms[2]
+    );
+    anyhow::ensure!(
+        best_ms[1] < best_ms[0],
+        "pipelining regressed: depth 2 ({:.1} ms) did not beat depth 1 ({:.1} ms)",
+        best_ms[1],
+        best_ms[0]
+    );
+
+    let record = obj(vec![
+        ("bench", Json::Str("pipeline-depth".into())),
+        ("workers", Json::Num(workers as f64)),
+        ("round_size", Json::Num(configs.len() as f64)),
+        ("eval_us", Json::Num(eval.as_secs_f64() * 1e6)),
+        ("depths", arr_f64(&depths.iter().map(|&d| d as f64).collect::<Vec<_>>())),
+        ("round_ms", arr_f64(&best_ms)),
+        ("speedup_depth2", Json::Num(best_ms[0] / best_ms[1])),
+        ("note", Json::Str("regenerate with: cargo bench -- pipeline-depth".into())),
+    ]);
+    std::fs::write("BENCH_pipeline_depth.json", record.to_string_pretty() + "\n")?;
+    println!("recorded -> BENCH_pipeline_depth.json");
+    Ok(())
+}
+
 /// Remote search sessions: the same batched k-means TPE search to a fixed
 /// budget, evaluated in-process (sequential eval_batch) vs across 4
 /// space-synced synthetic workers over localhost TCP — the search-time
@@ -488,6 +583,9 @@ fn main() -> anyhow::Result<()> {
     }
     if should_run(&args, "round-latency") {
         bench_round_latency()?;
+    }
+    if should_run(&args, "pipeline-depth") {
+        bench_pipeline_depth()?;
     }
     if should_run(&args, "remote-search") {
         bench_remote_search()?;

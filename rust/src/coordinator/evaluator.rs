@@ -454,6 +454,45 @@ impl<'a> DnnBackend<'a> {
     }
 }
 
+/// Multi-tenant worker factory: one fresh [`DnnBackend`] per synced
+/// session, all sharing the process's deterministic pretrained snapshot
+/// (the expensive part), so several leaders can search different pruned
+/// spaces / objective knobs / hardware models through one worker process —
+/// every tenant still digest-checked against this worker's snapshot.
+pub struct DnnFactory<'a> {
+    session: &'a ModelSession,
+    pretrained: ParamSnapshot,
+    digest: String,
+}
+
+impl<'a> DnnFactory<'a> {
+    pub fn new(session: &'a ModelSession, pretrained: ParamSnapshot) -> DnnFactory<'a> {
+        let digest = pretrained.digest();
+        DnnFactory { session, pretrained, digest }
+    }
+
+    /// The digest every leader must present (this worker's snapshot's).
+    pub fn digest(&self) -> &str {
+        &self.digest
+    }
+}
+
+impl crate::coordinator::service::BackendFactory for DnnFactory<'_> {
+    fn open(
+        &self,
+        spec: &crate::coordinator::service::SessionSpec,
+    ) -> anyhow::Result<Box<dyn crate::coordinator::service::WorkerBackend + '_>> {
+        let mut backend = DnnBackend::new(
+            self.session,
+            self.pretrained.clone(),
+            spec.hw,
+            spec.objective,
+        );
+        crate::coordinator::service::WorkerBackend::sync(&mut backend, spec)?;
+        Ok(Box::new(backend))
+    }
+}
+
 impl crate::coordinator::service::WorkerBackend for DnnBackend<'_> {
     fn space(&self) -> &Space {
         &self.objective.build.space

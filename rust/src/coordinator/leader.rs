@@ -138,10 +138,23 @@ pub enum EvalBackend {
 #[derive(Debug, Clone, Default)]
 pub struct SessionOpts {
     pub backend: EvalBackend,
-    /// Write a [`SessionCheckpoint`] here after every search round.
+    /// Write a [`SessionCheckpoint`] after every search round: a single
+    /// atomically-rewritten file, or — with [`checkpoint_keep`] set — a
+    /// ROTATION DIRECTORY of per-round checkpoints plus a `manifest.json`
+    /// naming the newest (crash forensics; see [`CheckpointStore`]).
+    ///
+    /// [`checkpoint_keep`]: Self::checkpoint_keep
     pub checkpoint: Option<PathBuf>,
-    /// Warm-start the search from this checkpoint.
+    /// `--checkpoint-keep N`: treat [`checkpoint`](Self::checkpoint) as a
+    /// directory, keep the N newest per-round checkpoints, GC the rest.
+    pub checkpoint_keep: Option<usize>,
+    /// Warm-start the search from this checkpoint — a file, or a rotation
+    /// directory (the manifest picks the newest valid one automatically).
     pub resume: Option<PathBuf>,
+    /// Leave the worker processes serving after the search (`bye` the
+    /// session instead of shutting the farm down) — the multi-tenant
+    /// deployment mode, where one farm backs many leaders.
+    pub keep_workers: bool,
 }
 
 /// An objective whose evaluations produce full [`EvalRecord`]s, in eval
@@ -240,6 +253,119 @@ impl SessionCheckpoint {
         let j = Json::parse(text.trim())
             .map_err(|e| anyhow::anyhow!("parse checkpoint {}: {e}", path.display()))?;
         SessionCheckpoint::from_json(&j)
+    }
+
+    /// `--resume` accepts either a single checkpoint file or a rotation
+    /// directory — a directory resolves through its manifest to the newest
+    /// VALID checkpoint ([`CheckpointStore::load_latest`]).
+    pub fn load_auto(path: &Path) -> Result<SessionCheckpoint> {
+        if path.is_dir() {
+            CheckpointStore::load_latest(path)
+        } else {
+            SessionCheckpoint::load(path)
+        }
+    }
+}
+
+/// File name of a rotation directory's manifest.
+pub const MANIFEST_NAME: &str = "manifest.json";
+
+/// Rotated per-round session checkpoints (`--checkpoint <dir>
+/// --checkpoint-keep N`): every round writes a fresh `ckpt-<trials>.json`
+/// instead of rewriting one file, a `manifest.json` names the newest valid
+/// one, and files beyond the newest N are garbage-collected. Rotation buys
+/// crash forensics (the last rounds before a failure stay inspectable) and
+/// a fallback chain: if the newest file is torn — the crash landed
+/// mid-rotation — resume walks back to the one before it.
+pub struct CheckpointStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointStore {
+    /// Store over `dir`, keeping the `keep.max(1)` newest checkpoints.
+    pub fn new(dir: PathBuf, keep: usize) -> CheckpointStore {
+        CheckpointStore { dir, keep: keep.max(1) }
+    }
+
+    /// Zero-padded so lexicographic order == trial order.
+    fn file_name(trials: usize) -> String {
+        format!("ckpt-{trials:08}.json")
+    }
+
+    /// Rotated checkpoint file names in `dir`, ascending by trial count.
+    fn rotated(dir: &Path) -> Result<Vec<String>> {
+        let mut names: Vec<String> = std::fs::read_dir(dir)
+            .with_context(|| format!("list checkpoint dir {}", dir.display()))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("ckpt-") && n.ends_with(".json"))
+            .collect();
+        names.sort();
+        Ok(names)
+    }
+
+    /// Write `ck` as a fresh rotated file, GC rotated files beyond `keep`
+    /// (oldest first, never the file just written), then repoint the
+    /// manifest. Ordering matters twice over: the manifest must never
+    /// name a file that is not yet durable (checkpoint first) and its
+    /// `kept` list must only name files that survive (GC before
+    /// manifest). A crash in the window after GC but before the manifest
+    /// rename can leave the manifest pointing at a deleted PREVIOUS
+    /// latest — `load_latest`'s newest-first scan fallback heals exactly
+    /// that. Returns the checkpoint's path.
+    pub fn save(&self, ck: &SessionCheckpoint) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)?;
+        let name = CheckpointStore::file_name(ck.search.history.len());
+        let path = self.dir.join(&name);
+        ck.save(&path)?;
+        let rotated = CheckpointStore::rotated(&self.dir)?;
+        if rotated.len() > self.keep {
+            for stale in &rotated[..rotated.len() - self.keep] {
+                if stale != &name {
+                    let _ = std::fs::remove_file(self.dir.join(stale));
+                }
+            }
+        }
+        let kept = CheckpointStore::rotated(&self.dir)?;
+        let manifest = obj(vec![
+            ("version", Json::Num(CHECKPOINT_VERSION as f64)),
+            ("latest", Json::Str(name.clone())),
+            ("kept", Json::Arr(kept.iter().map(|n| Json::Str(n.clone())).collect())),
+        ]);
+        let tmp = self.dir.join("manifest.tmp");
+        std::fs::write(&tmp, manifest.to_string_pretty() + "\n")?;
+        std::fs::rename(&tmp, self.dir.join(MANIFEST_NAME))
+            .with_context(|| format!("commit manifest in {}", self.dir.display()))?;
+        Ok(path)
+    }
+
+    /// Newest VALID checkpoint under `dir`: the manifest's `latest` when
+    /// it loads, else a newest-first scan over the rotated files (a torn
+    /// newest file falls back to the round before it).
+    pub fn load_latest(dir: &Path) -> Result<SessionCheckpoint> {
+        if let Ok(text) = std::fs::read_to_string(dir.join(MANIFEST_NAME)) {
+            if let Ok(m) = Json::parse(text.trim()) {
+                if let Some(latest) = m.get("latest").and_then(|v| v.as_str()) {
+                    match SessionCheckpoint::load(&dir.join(latest)) {
+                        Ok(ck) => return Ok(ck),
+                        Err(e) => eprintln!(
+                            "[resume] manifest names '{latest}' but it fails to load \
+                             ({e:#}); scanning older checkpoints"
+                        ),
+                    }
+                }
+            }
+        }
+        let mut names = CheckpointStore::rotated(dir)?;
+        names.reverse();
+        for name in &names {
+            match SessionCheckpoint::load(&dir.join(name)) {
+                Ok(ck) => return Ok(ck),
+                Err(e) => eprintln!("[resume] skipping invalid checkpoint '{name}': {e:#}"),
+            }
+        }
+        anyhow::bail!("no valid checkpoint under {}", dir.display())
     }
 }
 
@@ -451,9 +577,15 @@ impl<'a> Leader<'a> {
                 };
                 let mut objective = RemoteObjective::connect_session(spec, addrs, *pool)?;
                 let out = self.drive(algo, &mut objective, opts);
-                // Best-effort: workers outlive a failed search for the next
-                // session, but a clean end releases them promptly.
-                let _ = objective.shutdown();
+                // Best-effort either way (workers outlive a failed search
+                // for the next session): on a shared farm, `bye` only this
+                // session and leave the processes serving other tenants;
+                // otherwise shut the farm down with the search.
+                if opts.keep_workers {
+                    let _ = objective.release();
+                } else {
+                    let _ = objective.shutdown();
+                }
                 out?
             }
         };
@@ -497,7 +629,7 @@ impl<'a> Leader<'a> {
             ),
         };
         let searcher = BatchSearcher::new(batch_algo, self.cfg.batch_q);
-        let resumed = opts.resume.as_deref().map(SessionCheckpoint::load).transpose()?;
+        let resumed = opts.resume.as_deref().map(SessionCheckpoint::load_auto).transpose()?;
         let mut prior: Vec<EvalRecord> = Vec::new();
         if let Some(ck) = &resumed {
             anyhow::ensure!(
@@ -520,19 +652,28 @@ impl<'a> Leader<'a> {
             budget,
             resumed.as_ref().map(|c| &c.search),
         )?;
+        let store = match (&opts.checkpoint, opts.checkpoint_keep) {
+            (Some(dir), Some(keep)) => Some(CheckpointStore::new(dir.clone(), keep)),
+            _ => None,
+        };
         while !run.done() {
             run.step(objective);
             if let Some(path) = &opts.checkpoint {
                 let mut records = prior.clone();
                 records.extend(objective.records().iter().cloned());
-                SessionCheckpoint {
+                let ck = SessionCheckpoint {
                     algo: algo.name().to_string(),
                     seed: self.cfg.seed,
                     n_evals: budget,
                     search: run.checkpoint(),
                     records,
+                };
+                match &store {
+                    Some(store) => {
+                        store.save(&ck)?;
+                    }
+                    None => ck.save(path)?,
                 }
-                .save(path)?;
             }
         }
         let (history, _rounds) = run.finish();
@@ -687,6 +828,79 @@ mod tests {
             SessionCheckpoint::from_json(&Json::parse(&ck.to_json().to_string_compact()).unwrap())
                 .unwrap_err();
         assert!(err.to_string().contains("records"), "{err}");
+    }
+
+    fn ck_with_trials(n: usize) -> SessionCheckpoint {
+        use crate::search::{RngState, SearchCheckpoint};
+        use crate::util::rng::Rng;
+        let mut history = History::new("batch-tpe");
+        let mut records = Vec::new();
+        for i in 0..n {
+            history.push(vec![i % 3, 0], i as f64, 0.0);
+            records.push(EvalRecord::value_only(vec![i % 3, 0], i as f64));
+        }
+        SessionCheckpoint {
+            algo: "tpe".to_string(),
+            seed: 7,
+            n_evals: 40,
+            search: SearchCheckpoint {
+                algo: "batch-tpe".to_string(),
+                dims: 2,
+                history,
+                iter: 0,
+                centroids: Vec::new(),
+                rng: RngState::of(&Rng::new(3)),
+            },
+            records,
+        }
+    }
+
+    #[test]
+    fn checkpoint_rotation_gc_manifest_and_torn_file_fallback() {
+        use crate::coordinator::leader::MANIFEST_NAME;
+        let dir = std::env::temp_dir().join(format!("sammpq_rot_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = CheckpointStore::new(dir.clone(), 2);
+        for n in [3usize, 6, 9] {
+            store.save(&ck_with_trials(n)).unwrap();
+        }
+        // GC kept exactly the 2 newest rotated files.
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("ckpt-"))
+            .collect();
+        names.sort();
+        assert_eq!(names, vec!["ckpt-00000006.json", "ckpt-00000009.json"]);
+        // The manifest names the newest, and its kept list matches the
+        // post-GC disk contents exactly (no dangling names).
+        let manifest =
+            Json::parse(&std::fs::read_to_string(dir.join(MANIFEST_NAME)).unwrap()).unwrap();
+        assert_eq!(
+            manifest.get("latest").and_then(|v| v.as_str()),
+            Some("ckpt-00000009.json")
+        );
+        let kept: Vec<&str> = manifest
+            .get("kept")
+            .and_then(|k| k.as_arr())
+            .unwrap()
+            .iter()
+            .filter_map(|v| v.as_str())
+            .collect();
+        assert_eq!(kept, names.iter().map(String::as_str).collect::<Vec<_>>());
+        assert_eq!(SessionCheckpoint::load_auto(&dir).unwrap().search.history.len(), 9);
+        // A torn newest file (crash mid-rotation) falls back to the round
+        // before it — "newest VALID", not "newest named".
+        std::fs::write(dir.join("ckpt-00000009.json"), "{torn").unwrap();
+        assert_eq!(CheckpointStore::load_latest(&dir).unwrap().search.history.len(), 6);
+        // A plain file path still resumes directly (no directory needed).
+        let single = dir.join("single.json");
+        ck_with_trials(4).save(&single).unwrap();
+        assert_eq!(
+            SessionCheckpoint::load_auto(&single).unwrap().search.history.len(),
+            4
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -21,20 +21,26 @@
 //! `EvalBackend`: in-process, or a worker pool opened with a versioned
 //! space-sync handshake (`sammpq search --workers a,b,c`) whose workers
 //! reply with full `EvalRecord`s — so the report is assembled identically
-//! either way. Sessions checkpoint after every round (`--checkpoint`) and
-//! resume (`--resume`), warm-starting surrogates, records, and the RNG
-//! cursor. See `search::batch`, `search::checkpoint`, and
-//! docs/ARCHITECTURE.md for the protocol state machine and formats.
+//! either way. Workers are MULTI-TENANT (protocol v3): `serve_sessions`
+//! keeps a `SessionTable` of per-leader backends, so one farm backs many
+//! concurrent searches; a leader leaves with `bye` (`--keep-workers`)
+//! without touching the other tenants. Sessions checkpoint after every
+//! round (`--checkpoint`, rotated + manifested with `--checkpoint-keep`)
+//! and resume (`--resume`, file or rotation dir), warm-starting
+//! surrogates, records, and the RNG cursor. See `search::batch`,
+//! `search::checkpoint`, `search::costmodel`, and docs/ARCHITECTURE.md for
+//! the protocol state machine and formats.
 
 pub mod evaluator;
 pub mod service;
 pub mod leader;
 pub mod report;
 
-pub use evaluator::{build_space, DimKind, DnnBackend, DnnObjective, EvalRecord, ObjectiveCfg,
-                    SpaceBuild};
-pub use leader::{Algo, EvalBackend, Leader, LeaderCfg, RecordedObjective, SearchReport,
-                 SessionCheckpoint, SessionOpts};
-pub use service::{serve_on_listener, serve_worker, serve_worker_on, PlainBackend, PoolCfg,
-                  RemoteObjective, SessionSpec, SyntheticBackend, WorkerBackend, WorkerPool,
-                  PROTOCOL_VERSION};
+pub use evaluator::{build_space, DimKind, DnnBackend, DnnFactory, DnnObjective, EvalRecord,
+                    ObjectiveCfg, SpaceBuild};
+pub use leader::{Algo, CheckpointStore, EvalBackend, Leader, LeaderCfg, RecordedObjective,
+                 SearchReport, SessionCheckpoint, SessionOpts};
+pub use service::{serve_on_listener, serve_sessions, serve_sessions_on, serve_worker,
+                  serve_worker_on, BackendFactory, PlainBackend, PoolCfg, RemoteObjective,
+                  RoundEvals, ServeOpts, SessionSpec, SessionTable, SyntheticBackend,
+                  SyntheticFactory, WorkerBackend, WorkerPool, PROTOCOL_VERSION};

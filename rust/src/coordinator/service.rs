@@ -8,43 +8,69 @@
 //! and serves objective evaluations over TCP; the leader distributes trial
 //! configs and collects (id, J) records.
 //!
-//! Wire protocol (version [`PROTOCOL_VERSION`]): JSON-lines over TCP,
-//! opened by a space-sync handshake and answered with full records.
+//! Wire protocol (version [`PROTOCOL_VERSION`], **multi-tenant**):
+//! JSON-lines over TCP. A `hello` opens a named *session*; every frame
+//! after it carries the session id, so one worker process concurrently
+//! serves several leaders — each tenant with its own synced
+//! space/objective/digest in the worker's [`SessionTable`].
 //!
-//!   leader -> worker : {"hello": {"proto": 2, "session": {...}}}
-//!       The session spec ([`SessionSpec`]) carries the serialized
-//!       (possibly Hessian-PRUNED) space + dim kinds, the objective knobs,
-//!       the hardware model, and the leader's pretrained-snapshot digest —
-//!       so a worker evaluates the leader's exact objective or refuses.
-//!   worker -> leader : {"hello_ack": {"proto": 2, "dims": n}}
-//!                    | {"error": "...", "kind": "proto"|"session", "proto": 2}
-//!   leader -> worker : {"id": n, "config": [..]}            one per line
-//!   worker -> leader : {"id": n, "value": J, "record": {...}}
+//!   leader -> worker : {"hello": {"proto": 3, "session": "<sid>",
+//!                                 "spec": {...}}}
+//!       The spec ([`SessionSpec`]) carries the serialized (possibly
+//!       Hessian-PRUNED) space + dim kinds, the objective knobs, the
+//!       hardware model, and the leader's pretrained-snapshot digest — so
+//!       a worker evaluates the leader's exact objective or refuses.
+//!   worker -> leader : {"hello_ack": {"proto": 3, "session": "<sid>",
+//!                                     "dims": n}}
+//!                    | {"error": "...", "kind": "proto"|"session", "proto": 3}
+//!   leader -> worker : {"session": "<sid>", "id": n, "config": [..]}
+//!   worker -> leader : {"session": "<sid>", "id": n, "value": J,
+//!                       "record": {...}}
 //!                      (the full `EvalRecord`, so the leader's report is
 //!                      assembled from remote metrics, not bare J)
-//!                    | {"id": n, "error": "..."}  per-eval failure; the
-//!                      connection stays up, the leader records -inf for
-//!                      that evaluation only
-//!   leader -> worker : {"shutdown": true}
+//!                    | {"session": "<sid>", "id": n, "error": "..."}
+//!                      per-eval failure; the connection stays up, the
+//!                      leader records -inf for that evaluation only
+//!   leader -> worker : {"bye": "<sid>"}       session teardown: frees that
+//!                      tenant's backend, other tenants keep serving
+//!   worker -> leader : {"bye_ack": "<sid>"}
+//!   leader -> worker : {"shutdown": true}     administrative: stop the
+//!                      whole worker process (demos/tests; a tenant leaving
+//!                      a shared farm sends `bye`, never this)
 //!
 //! Skew behavior: a worker that receives an unknown message type or a
-//! mismatched protocol version replies with a structured
+//! mismatched protocol version (e.g. a PR 3-era v2 client whose hello
+//! carries the spec under `"session"`) replies with a structured
 //! `{"error", "kind", "proto"}` line and KEEPS SERVING the connection —
 //! version skew must be diagnosable from the reply, not from a dropped
-//! socket that is indistinguishable from a crash.
+//! socket that is indistinguishable from a crash. An eval naming an
+//! unknown/expired session gets `{"error", "kind": "session"}`; the
+//! leader-side reader cannot attribute it, recycles the connection, and
+//! the reconnect re-handshakes every open session (self-healing).
+//!
+//! Two worker serve loops share the protocol: [`serve_sessions`] is the
+//! multi-tenant runtime (concurrent connections, [`SessionTable`], idle
+//! sweeps — what `sammpq worker` runs), while [`serve_worker`] /
+//! [`serve_on_listener`] remain the single-tenant loop (one connection at
+//! a time, one backend) used by protocol-level tests and adapters for
+//! objectives that cannot be re-instantiated per session
+//! ([`PlainBackend`]).
 //!
 //! The leader side is an **async, straggler-tolerant worker pool**
 //! ([`WorkerPool`]): one reader thread per connection feeds completions into
 //! an mpsc channel, configs are pulled from a shared round queue by whichever
-//! worker goes idle first (work stealing, not a static round-robin split),
-//! outstanding evaluations whose age exceeds a deadline derived from the
-//! pool's EWMA eval time are re-dispatched to idle workers (first result
+//! worker has spare pipeline capacity ([`PoolCfg::pipeline_depth`]
+//! outstanding evals per connection — work stealing, not a static
+//! round-robin split), the round queue is ordered longest-job-first by a
+//! per-session [`CostModel`] fit from observed eval latencies, outstanding
+//! evaluations whose age exceeds a deadline derived from the pool's EWMA
+//! eval time are re-dispatched to workers with spare capacity (first result
 //! wins, duplicates are discarded by dispatch id), and a worker that dies
 //! mid-round has its outstanding configs requeued — not poisoned with
-//! `-inf` — while the pool attempts a bounded reconnection. The previous
-//! static dispatch/in-order collect is retained as
-//! [`evaluate_batch_blocking`], the baseline the `round-latency` bench
-//! measures the pool against.
+//! `-inf` — while the pool attempts a bounded reconnection that
+//! re-handshakes EVERY open session. The previous static dispatch/in-order
+//! collect is retained as [`evaluate_batch_blocking`], the baseline the
+//! `round-latency` bench measures the pool against.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
@@ -54,22 +80,28 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::evaluator::{EvalRecord, ObjectiveCfg, SpaceBuild};
+use crate::coordinator::evaluator::{DimKind, EvalRecord, ObjectiveCfg, SpaceBuild};
 use crate::hw::HwConfig;
 use crate::search::space::{Config, Space};
-use crate::search::{Objective, SyntheticObjective};
+use crate::search::{CostModel, Objective, SyntheticObjective};
 use crate::util::json::{obj, Json};
 use crate::util::timer::Ewma;
 
 /// Wire protocol version. Bumped when a message shape changes; a worker
 /// answering a different version replies with a structured error (and keeps
-/// serving) instead of undefined behavior.
-pub const PROTOCOL_VERSION: u64 = 2;
+/// serving) instead of undefined behavior. v3 made sessions first-class:
+/// hellos name a session id, eval frames carry it, and `bye` tears one
+/// down — the multi-tenant worker runtime.
+pub const PROTOCOL_VERSION: u64 = 3;
 
 /// How long a connect-time handshake may take before the worker is treated
-/// as unresponsive (it only has to parse one line and maybe rebuild a
-/// space, not train anything).
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+/// as unresponsive. Parsing the hello and rebuilding a space is
+/// milliseconds — the budget exists because a multi-tenant worker handles
+/// frames on ONE thread (one accelerator), so a hello can legitimately
+/// queue behind another tenant's in-flight evaluation; the timeout must
+/// outlast a worst-case proxy-QAT eval, not the handshake itself. A worker
+/// whose single evals exceed even this is mis-sized for sharing.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// One evaluation result as shipped over the wire.
 #[derive(Debug, Clone, PartialEq)]
@@ -404,8 +436,16 @@ fn serve_conn(
                 write_line(&mut writer, &error_reply("proto", detail))?;
                 continue;
             }
+            // Single-tenant loop: one backend, so the session id is echoed
+            // for protocol symmetry but every hello re-syncs the same
+            // backend (true multi-tenancy lives in `serve_sessions`).
+            let sid = hello
+                .get("session")
+                .and_then(|v| v.as_str())
+                .unwrap_or("default")
+                .to_string();
             let outcome = hello
-                .req("session")
+                .req("spec")
                 .and_then(SessionSpec::from_json)
                 .and_then(|spec| backend.sync(&spec));
             match outcome {
@@ -416,6 +456,7 @@ fn serve_conn(
                             "hello_ack",
                             obj(vec![
                                 ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+                                ("session", Json::Str(sid)),
                                 ("dims", Json::Num(backend.space().num_dims() as f64)),
                             ]),
                         )]),
@@ -428,19 +469,28 @@ fn serve_conn(
             }
             continue;
         }
+        if let Some(sid) = msg.get("bye") {
+            // Nothing to free in the single-backend loop, but the ack keeps
+            // a session-scoped leader teardown from hanging.
+            write_line(&mut writer, &obj(vec![("bye_ack", sid.clone())]))?;
+            continue;
+        }
         let Some(id) = msg.get("id").and_then(|v| v.as_usize()) else {
             // Unknown message type: a future leader talking past us. Reply
             // structured and keep serving — today's behavior for this used
             // to be an Err that tore the connection down.
-            let keys: Vec<&str> = match &msg {
-                Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
-                _ => Vec::new(),
-            };
+            let keys: Vec<&str> = msg
+                .as_obj()
+                .map(|m| m.keys().map(|k| k.as_str()).collect())
+                .unwrap_or_default();
             let detail = format!("unknown message type (keys {keys:?})");
             eprintln!("[worker] {detail}");
             write_line(&mut writer, &error_reply("unknown", detail))?;
             continue;
         };
+        // The session the eval names is echoed into every reply so a
+        // multi-session leader can attribute it.
+        let session = msg.get("session").cloned();
         // Non-numeric elements must NOT coerce to choice 0 (always a valid
         // index — the search would silently fold a wrong config's value
         // into its surrogate); they take the same error-reply path as an
@@ -457,37 +507,453 @@ fn serve_conn(
                     backend.space().num_dims()
                 );
                 eprintln!("[worker] rejecting evaluation {id}: {detail}");
-                write_line(
-                    &mut writer,
-                    &obj(vec![
-                        ("id", Json::Num(id as f64)),
-                        ("error", Json::Str(detail)),
-                    ]),
-                )?;
+                let mut fields = vec![
+                    ("id", Json::Num(id as f64)),
+                    ("error", Json::Str(detail)),
+                ];
+                if let Some(s) = session {
+                    fields.push(("session", s));
+                }
+                write_line(&mut writer, &obj(fields))?;
                 continue;
             }
         };
         let record = backend.eval_record(&config);
         *served += 1;
+        let mut fields = vec![
+            ("id", Json::Num(id as f64)),
+            ("value", crate::util::json::enc_f64(record.value)),
+            ("record", record.to_json()),
+        ];
+        if let Some(s) = session {
+            fields.push(("session", s));
+        }
+        write_line(&mut writer, &obj(fields))?;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenant session runtime (worker side)
+// ---------------------------------------------------------------------------
+
+/// Tuning for [`serve_sessions`], the multi-tenant worker runtime.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    /// Sessions untouched for this long are torn down by the idle sweep —
+    /// their leader vanished without a `bye`, and a parked backend holds a
+    /// synced space (and, for DNN sessions, evaluator state) hostage. A
+    /// leader pool that outlives the sweep recovers transparently: its
+    /// next eval draws a structured session error its reader cannot
+    /// attribute, the connection is recycled, and the reconnect
+    /// re-handshakes every open session.
+    pub idle_timeout: Duration,
+    /// Event-loop poll granularity (idle sweeps, shutdown checks).
+    pub tick: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            idle_timeout: Duration::from_secs(900),
+            tick: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Builds a fresh backend per synced session — the worker-process half of
+/// multi-tenancy. Each tenant gets its OWN backend instance, so syncing
+/// one leader's pruned space can never clobber another's.
+/// [`SyntheticFactory`] and `DnnFactory` (in `coordinator::evaluator`) are
+/// the shipped implementations.
+pub trait BackendFactory {
+    /// Open a backend for `spec`. Errors surface to the leader as
+    /// structured session rejections; the connection keeps serving.
+    fn open(&self, spec: &SessionSpec) -> Result<Box<dyn WorkerBackend + '_>>;
+}
+
+/// Factory for artifact-free synthetic sessions: one independent
+/// [`SyntheticBackend`] per tenant, each rebuilt onto that tenant's synced
+/// space. Powers `sammpq worker --synthetic` and the multi-tenant tests.
+pub struct SyntheticFactory {
+    pub sleep: Duration,
+}
+
+impl BackendFactory for SyntheticFactory {
+    fn open(&self, spec: &SessionSpec) -> Result<Box<dyn WorkerBackend + '_>> {
+        // Placeholder 1x1 space; `sync` performs the digest check and
+        // rebuilds onto the leader's space, exactly like the single-tenant
+        // flow.
+        let mut backend = SyntheticBackend::new(1, 1, self.sleep);
+        backend.sync(spec)?;
+        Ok(Box::new(backend))
+    }
+}
+
+struct SessionEntry<'f> {
+    backend: Box<dyn WorkerBackend + 'f>,
+    /// Canonical serialization of the spec this session was opened with —
+    /// the ownership check: a re-hello with the SAME spec is a harmless
+    /// re-sync (leader reconnect), a re-hello with a DIFFERENT spec is a
+    /// second leader colliding on the id and is rejected.
+    spec_fingerprint: String,
+    last_used: Instant,
+    evals: usize,
+}
+
+/// The worker-side session table: session id -> live backend. One worker
+/// process serves several leaders concurrently; each tenant's synced
+/// space/objective/digest lives in its own entry, and teardown (`bye` or
+/// idle timeout) frees that entry without touching the others — or the
+/// connection it arrived on.
+pub struct SessionTable<'f> {
+    entries: HashMap<String, SessionEntry<'f>>,
+}
+
+impl<'f> SessionTable<'f> {
+    pub fn new() -> SessionTable<'f> {
+        SessionTable { entries: HashMap::new() }
+    }
+
+    /// Open a session. A re-handshake with the same spec REPLACES the
+    /// entry (a reconnecting leader re-syncing); a different spec under an
+    /// existing id is a COLLISION — two leaders picked the same explicit
+    /// session id — and is refused, otherwise the second leader would
+    /// silently hijack the first's backend and the first's evals would run
+    /// under the wrong objective.
+    fn open(
+        &mut self,
+        sid: String,
+        spec_fingerprint: String,
+        backend: Box<dyn WorkerBackend + 'f>,
+    ) -> Result<()> {
+        if let Some(existing) = self.entries.get(&sid) {
+            anyhow::ensure!(
+                existing.spec_fingerprint == spec_fingerprint,
+                "session id '{sid}' is already open with a different spec — two leaders \
+                 collided on one id; pick a unique session id"
+            );
+        }
+        self.entries.insert(
+            sid,
+            SessionEntry {
+                backend,
+                spec_fingerprint,
+                last_used: Instant::now(),
+                evals: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// Close a session, returning how many evals it served (None: unknown).
+    fn close(&mut self, sid: &str) -> Option<usize> {
+        self.entries.remove(sid).map(|e| e.evals)
+    }
+
+    /// Drop sessions idle past `timeout`; returns (id, evals served) pairs.
+    fn sweep(&mut self, timeout: Duration) -> Vec<(String, usize)> {
+        let dead: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.last_used.elapsed() > timeout)
+            .map(|(sid, _)| sid.clone())
+            .collect();
+        dead.into_iter()
+            .map(|sid| {
+                let evals = self.close(&sid).unwrap_or(0);
+                (sid, evals)
+            })
+            .collect()
+    }
+
+    /// Open session count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+enum MuxEvent {
+    Conn(TcpStream),
+    Msg { conn: usize, msg: Json },
+    Gone { conn: usize, clean: bool, error: String },
+}
+
+/// Multi-tenant worker: bind `addr` and serve sessions until an explicit
+/// shutdown frame. Returns the total evaluations served across all
+/// sessions.
+pub fn serve_sessions(
+    addr: &str,
+    factory: &dyn BackendFactory,
+    opts: ServeOpts,
+) -> Result<usize> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    serve_sessions_on(listener, factory, opts)
+}
+
+/// [`serve_sessions`] over an already-bound listener (tests bind port 0).
+///
+/// Concurrency model: reader threads turn each connection into events on
+/// one channel; the single main thread owns every backend and evaluates
+/// serially. That is deliberate — a worker process fronts ONE accelerator
+/// (PJRT executables are not even `Send`), so tenant evals must serialize
+/// anyway; multiplexing buys farm-level sharing, not intra-worker
+/// parallelism. Connections may come and go freely (the leader pool
+/// redials after blips); sessions outlive their connections and die only
+/// by `bye` or idle timeout.
+pub fn serve_sessions_on(
+    listener: TcpListener,
+    factory: &dyn BackendFactory,
+    opts: ServeOpts,
+) -> Result<usize> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<MuxEvent>();
+    {
+        // Accept thread: non-blocking accept + stop-flag polling, so an
+        // administrative shutdown actually terminates the process instead
+        // of leaking a thread wedged in accept().
+        let tx = tx.clone();
+        let stop = Arc::clone(&stop);
+        let tick = opts.tick;
+        listener.set_nonblocking(true)?;
+        std::thread::spawn(move || loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // The non-blocking flag must not leak onto the
+                    // accepted socket (platform-dependent inheritance).
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    if tx.send(MuxEvent::Conn(stream)).is_err() {
+                        return; // runtime exited
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(tick);
+                }
+                Err(e) => {
+                    eprintln!("[worker] accept failed: {e}");
+                    std::thread::sleep(tick);
+                }
+            }
+        });
+    }
+
+    let mut table = SessionTable::new();
+    let mut conns: HashMap<usize, TcpStream> = HashMap::new();
+    let mut next_conn = 0usize;
+    let mut served = 0usize;
+    loop {
+        match rx.recv_timeout(opts.tick) {
+            Ok(MuxEvent::Conn(stream)) => match stream.try_clone() {
+                Ok(writer) => {
+                    let conn = next_conn;
+                    next_conn += 1;
+                    conns.insert(conn, writer);
+                    spawn_mux_reader(tx.clone(), conn, BufReader::new(stream));
+                }
+                Err(e) => eprintln!("[worker] connection rejected: {e}"),
+            },
+            Ok(MuxEvent::Msg { conn, msg }) => {
+                if msg.get("shutdown").and_then(|j| j.as_bool()).unwrap_or(false) {
+                    stop.store(true, Ordering::Relaxed);
+                    return Ok(served);
+                }
+                if let Some(writer) = conns.get_mut(&conn) {
+                    if serve_mux_msg(factory, &mut table, writer, &msg, &mut served)
+                        .is_err()
+                    {
+                        // Reply write failed: the peer is gone; its
+                        // sessions stay (it may redial).
+                        conns.remove(&conn);
+                    }
+                }
+            }
+            Ok(MuxEvent::Gone { conn, clean, error }) => {
+                if !clean {
+                    eprintln!("[worker] connection {conn} dropped: {error}");
+                }
+                conns.remove(&conn);
+                // Sessions deliberately survive their connection: the
+                // leader pool redials and re-handshakes; only bye / idle
+                // timeout frees a backend.
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                unreachable!("serve_sessions holds its own sender")
+            }
+        }
+        for (sid, evals) in table.sweep(opts.idle_timeout) {
+            eprintln!("[worker] session '{sid}' idle-expired after {evals} evals; freed");
+        }
+    }
+}
+
+/// Handle one frame in the multiplexed runtime. `Err` means the REPLY
+/// write failed (peer gone); protocol trouble is answered structurally and
+/// returns `Ok`.
+fn serve_mux_msg<'f>(
+    factory: &'f dyn BackendFactory,
+    table: &mut SessionTable<'f>,
+    writer: &mut TcpStream,
+    msg: &Json,
+    served: &mut usize,
+) -> Result<()> {
+    if let Some(hello) = msg.get("hello") {
+        let proto = hello.get("proto").and_then(|v| v.as_i64());
+        if proto != Some(PROTOCOL_VERSION as i64) {
+            let detail = format!(
+                "protocol version mismatch: leader speaks {proto:?}, worker speaks \
+                 {PROTOCOL_VERSION}"
+            );
+            eprintln!("[worker] rejecting hello: {detail}");
+            return write_line(writer, &error_reply("proto", detail));
+        }
+        let Some(sid) = hello.get("session").and_then(|v| v.as_str()) else {
+            let detail = "v3 hello names no session id".to_string();
+            eprintln!("[worker] rejecting hello: {detail}");
+            return write_line(writer, &error_reply("proto", detail));
+        };
+        let outcome = hello
+            .req("spec")
+            .and_then(SessionSpec::from_json)
+            .and_then(|spec| {
+                let backend = factory.open(&spec)?;
+                let dims = backend.space().num_dims();
+                table.open(sid.to_string(), spec.to_json().to_string_compact(), backend)?;
+                Ok(dims)
+            });
+        match outcome {
+            Ok(dims) => write_line(
+                writer,
+                &obj(vec![(
+                    "hello_ack",
+                    obj(vec![
+                        ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+                        ("session", Json::Str(sid.to_string())),
+                        ("dims", Json::Num(dims as f64)),
+                    ]),
+                )]),
+            ),
+            Err(e) => {
+                eprintln!("[worker] rejecting session '{sid}': {e:#}");
+                write_line(writer, &error_reply("session", format!("{e:#}")))
+            }
+        }
+    } else if let Some(sid) = msg.get("bye") {
+        if let Some(s) = sid.as_str() {
+            if let Some(evals) = table.close(s) {
+                eprintln!("[worker] session '{s}' closed by its leader ({evals} evals)");
+            }
+        }
+        write_line(writer, &obj(vec![("bye_ack", sid.clone())]))
+    } else if let Some(id) = msg.get("id").and_then(|v| v.as_usize()) {
+        let Some(sid) = msg.get("session").and_then(|v| v.as_str()) else {
+            // A sessionless eval cannot be served by a multiplexed worker.
+            // The structured (id-free) reply makes the leader's reader
+            // recycle the connection and re-handshake its sessions.
+            return write_line(
+                writer,
+                &error_reply("session", format!("evaluation {id} names no session")),
+            );
+        };
+        let Some(entry) = table.entries.get_mut(sid) else {
+            // Unknown (never opened, closed, or idle-swept) session: the
+            // same self-healing recycle path as above.
+            return write_line(
+                writer,
+                &error_reply("session", format!("unknown session '{sid}'")),
+            );
+        };
+        let parsed: Option<Config> = msg
+            .get("config")
+            .and_then(|c| c.as_arr())
+            .and_then(|arr| arr.iter().map(|v| v.as_usize()).collect());
+        let config = match parsed {
+            Some(c) if entry.backend.space().validate(&c) => c,
+            _ => {
+                let detail = format!(
+                    "invalid config for space ({} dims)",
+                    entry.backend.space().num_dims()
+                );
+                eprintln!("[worker] rejecting evaluation {id} ('{sid}'): {detail}");
+                return write_line(
+                    writer,
+                    &obj(vec![
+                        ("session", Json::Str(sid.to_string())),
+                        ("id", Json::Num(id as f64)),
+                        ("error", Json::Str(detail)),
+                    ]),
+                );
+            }
+        };
+        let record = entry.backend.eval_record(&config);
+        entry.last_used = Instant::now();
+        entry.evals += 1;
+        *served += 1;
         write_line(
-            &mut writer,
+            writer,
             &obj(vec![
+                ("session", Json::Str(sid.to_string())),
                 ("id", Json::Num(id as f64)),
                 ("value", crate::util::json::enc_f64(record.value)),
                 ("record", record.to_json()),
             ]),
-        )?;
+        )
+    } else {
+        let keys: Vec<&str> = msg
+            .as_obj()
+            .map(|m| m.keys().map(|k| k.as_str()).collect())
+            .unwrap_or_default();
+        let detail = format!("unknown message type (keys {keys:?})");
+        eprintln!("[worker] {detail}");
+        write_line(writer, &error_reply("unknown", detail))
     }
 }
 
-/// Leader side of the Hello/SyncSpace handshake: send the session spec,
-/// block (bounded) for the ack. A structured rejection from the worker —
-/// version skew, digest mismatch, space the backend cannot rebuild —
-/// surfaces as an error naming the kind, so a session never silently runs
-/// over a skewed space.
+/// Reader thread of the multiplexed runtime: raw frames in, events out.
+fn spawn_mux_reader(tx: Sender<MuxEvent>, conn: usize, mut reader: BufReader<TcpStream>) {
+    std::thread::spawn(move || loop {
+        match read_json_line(&mut reader) {
+            Ok(Some(msg)) => {
+                if tx.send(MuxEvent::Msg { conn, msg }).is_err() {
+                    return; // runtime exited
+                }
+            }
+            Ok(None) => {
+                let _ = tx.send(MuxEvent::Gone {
+                    conn,
+                    clean: true,
+                    error: "connection closed".into(),
+                });
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(MuxEvent::Gone {
+                    conn,
+                    clean: false,
+                    error: format!("{e:#}"),
+                });
+                return;
+            }
+        }
+    });
+}
+
+/// Leader side of the Hello/SyncSpace handshake: open session `sid` with
+/// its spec, block (bounded) for the ack. A structured rejection from the
+/// worker — version skew, digest mismatch, space the backend cannot
+/// rebuild — surfaces as an error naming the kind, so a session never
+/// silently runs over a skewed space.
 fn client_handshake(
     writer: &mut TcpStream,
     reader: &mut BufReader<TcpStream>,
+    sid: &str,
     spec: &SessionSpec,
 ) -> Result<()> {
     write_line(
@@ -496,7 +962,8 @@ fn client_handshake(
             "hello",
             obj(vec![
                 ("proto", Json::Num(PROTOCOL_VERSION as f64)),
-                ("session", spec.to_json()),
+                ("session", Json::Str(sid.to_string())),
+                ("spec", spec.to_json()),
             ]),
         )]),
     )?;
@@ -512,6 +979,11 @@ fn client_handshake(
             dims == Some(spec.build.space.num_dims()),
             "worker acked a {dims:?}-dim space, leader synced {} dims",
             spec.build.space.num_dims()
+        );
+        let acked = ack.get("session").and_then(|v| v.as_str());
+        anyhow::ensure!(
+            acked == Some(sid),
+            "worker acked session {acked:?}, leader opened '{sid}'"
         );
         return Ok(());
     }
@@ -558,7 +1030,13 @@ impl WorkerHandle {
     /// Run the session handshake on this connection (protocol-level tests
     /// and the blocking baseline; [`WorkerPool`] handshakes automatically).
     pub fn hello(&mut self, spec: &SessionSpec) -> Result<()> {
-        client_handshake(&mut self.writer, &mut self.reader, spec)
+        self.hello_as("solo", spec)
+    }
+
+    /// [`hello`](Self::hello) under an explicit session id — drives
+    /// multi-tenant workers from protocol-level tests.
+    pub fn hello_as(&mut self, sid: &str, spec: &SessionSpec) -> Result<()> {
+        client_handshake(&mut self.writer, &mut self.reader, sid, spec)
     }
 
     /// Send one raw line (protocol skew tests).
@@ -576,6 +1054,22 @@ impl WorkerHandle {
         write_line(
             &mut self.writer,
             &obj(vec![
+                ("id", Json::Num(id as f64)),
+                (
+                    "config",
+                    Json::Arr(config.iter().map(|&c| Json::Num(c as f64)).collect()),
+                ),
+            ]),
+        )
+    }
+
+    /// Dispatch under an explicit session id (multi-tenant workers).
+    pub fn dispatch_in(&mut self, sid: &str, id: usize, config: &Config) -> Result<()> {
+        self.dispatched += 1;
+        write_line(
+            &mut self.writer,
+            &obj(vec![
+                ("session", Json::Str(sid.to_string())),
                 ("id", Json::Num(id as f64)),
                 (
                     "config",
@@ -672,6 +1166,15 @@ pub struct PoolCfg {
     pub reconnect_backoff: Duration,
     /// Poll granularity of the collect loop (straggler checks, reconnects).
     pub tick: Duration,
+    /// Outstanding evaluations per worker connection (`--pipeline-depth`).
+    /// Depth 1 is the classic one-in-flight pool; depth D > 1 keeps the
+    /// next config(s) queued ON the worker, so its objective never idles
+    /// during the leader round-trip — worth roughly the RTT per eval,
+    /// which dominates for sub-ms objectives. Straggler accounting stays
+    /// per dispatch id; note the latency EWMA then measures queue +
+    /// service time (up to D x the service time), which only makes
+    /// re-dispatch deadlines MORE conservative, never thrashy.
+    pub pipeline_depth: usize,
 }
 
 impl Default for PoolCfg {
@@ -682,6 +1185,7 @@ impl Default for PoolCfg {
             reconnect_attempts: 3,
             reconnect_backoff: Duration::from_millis(100),
             tick: Duration::from_millis(5),
+            pipeline_depth: 2,
         }
     }
 }
@@ -722,36 +1226,113 @@ struct PoolWorker {
     dispatched: usize,
 }
 
-/// Per-round working state of [`WorkerPool::evaluate`].
+/// Per-round working state of [`WorkerPool::evaluate_full`].
 struct Round<'c> {
     configs: &'c [Config],
-    /// Slots not yet dispatched (or requeued after a worker failure).
+    /// Index into the pool's open sessions this round evaluates under
+    /// (None: legacy sessionless flow against single-tenant workers).
+    session: Option<usize>,
+    /// Slots not yet dispatched (or requeued after a worker failure) —
+    /// longest-predicted-job-first when the session's cost model is fitted.
     queue: VecDeque<usize>,
     done: Vec<bool>,
     out: Vec<f64>,
     /// Record-return payloads, first result wins (None: error reply).
     records: Vec<Option<EvalRecord>>,
+    /// Per-slot dispatch->first-result latency (0.0 until done).
+    secs: Vec<f64>,
     remaining: usize,
+}
+
+/// One open session on the pool. Its spec is re-handshaken on EVERY
+/// (re)connection of every worker — a revived worker process lost its
+/// whole session table, and re-syncing only the most recent tenant would
+/// leave the older tenants' evals failing on an unknown session.
+struct PoolSession {
+    id: String,
+    spec: SessionSpec,
+    /// Per-config cost model fit from this session's observed eval
+    /// latencies; orders the shared round queue longest-job-first.
+    cost: CostModel,
+}
+
+impl PoolSession {
+    fn new(id: String, spec: SessionSpec) -> PoolSession {
+        let cost = cost_model_for(&spec);
+        PoolSession { id, spec, cost }
+    }
+}
+
+/// Cost-model featureization for a session: with a full `DimKind` mapping
+/// the dims split into a total-bits group and a total-width group (the
+/// features the eval cost actually depends on); otherwise one group over
+/// every dim (total decoded value).
+fn cost_model_for(spec: &SessionSpec) -> CostModel {
+    let space = &spec.build.space;
+    if !spec.build.kinds.is_empty() && spec.build.kinds.len() == space.num_dims() {
+        let mut bits = Vec::new();
+        let mut width = Vec::new();
+        for (d, kind) in spec.build.kinds.iter().enumerate() {
+            match kind {
+                DimKind::Bits(_) => bits.push(d),
+                DimKind::Width(_) => width.push(d),
+            }
+        }
+        let groups: Vec<Vec<usize>> =
+            [bits, width].into_iter().filter(|g| !g.is_empty()).collect();
+        CostModel::with_groups(space, groups)
+    } else {
+        CostModel::for_space(space)
+    }
+}
+
+/// One evaluated round, in input order: the values, the record-return
+/// payloads (None where the worker answered a per-eval error), and each
+/// slot's observed dispatch->result latency (what the scheduler's cost
+/// models eat).
+pub struct RoundEvals {
+    pub values: Vec<f64>,
+    pub records: Vec<Option<EvalRecord>>,
+    pub secs: Vec<f64>,
+}
+
+/// Globally unique session id for auto-opened sessions: distinct leaders
+/// (separate processes OR threads in one test binary) sharing a worker
+/// farm must never collide in a worker's session table.
+fn auto_session_id() -> String {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos() as u64 ^ (d.as_secs() << 20))
+        .unwrap_or(0);
+    format!(
+        "s{:x}-{:x}-{:x}",
+        std::process::id(),
+        nanos,
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    )
 }
 
 /// Async straggler-tolerant worker pool (see module docs).
 ///
 /// One reader thread per connection turns the blocking sockets into a
 /// non-blocking event stream; the pool itself stays single-threaded and
-/// deterministic in its bookkeeping. Pipeline depth is one outstanding
-/// evaluation per worker: "busy" is then exactly "has one eval in flight",
-/// which keeps straggler re-dispatch and failure requeue unambiguous. The
-/// extra round-trip per eval is noise against proxy-QAT evaluation costs
-/// (and cheap objectives should run with small q anyway — see the adaptive
-/// controller in `search::batch`).
+/// deterministic in its bookkeeping. Each worker carries up to
+/// [`PoolCfg::pipeline_depth`] outstanding evaluations — "busy" is "at
+/// capacity", and straggler re-dispatch / failure requeue stay unambiguous
+/// because every dispatch id maps to its (round, slot). The pool can hold
+/// several OPEN SESSIONS at once (multi-tenant leaders); every session is
+/// handshaken on every (re)connection, and each `evaluate_full` round runs
+/// under exactly one of them.
 pub struct WorkerPool {
     workers: Vec<PoolWorker>,
     tx: Sender<PoolEvent>,
     rx: Receiver<PoolEvent>,
     cfg: PoolCfg,
-    /// Session spec handshaken on every (re)connection; `None` runs the
-    /// legacy no-handshake flow over the workers' own spaces.
-    session: Option<SessionSpec>,
+    /// Open sessions, ALL handshaken on every (re)connection; empty runs
+    /// the legacy no-handshake flow over the workers' own spaces.
+    sessions: Vec<PoolSession>,
     /// Monotone dispatch-id source; ids are never reused, so a late or
     /// duplicate result can always be attributed (then discarded).
     next_id: usize,
@@ -774,18 +1355,41 @@ impl WorkerPool {
         WorkerPool::connect_session(addrs, cfg, None)
     }
 
-    /// Connect and (when `session` is given) run the Hello/SyncSpace
-    /// handshake on every worker — and again on every reconnection, so a
-    /// worker that crashed and lost its synced space is re-synced before it
-    /// sees a single config.
+    /// Connect and (when `session` is given) open one auto-named session:
+    /// the Hello/SyncSpace handshake runs on every worker — and again on
+    /// every reconnection, so a worker that crashed and lost its synced
+    /// space is re-synced before it sees a single config.
     pub fn connect_session(
         addrs: &[String],
         cfg: PoolCfg,
         session: Option<SessionSpec>,
     ) -> Result<WorkerPool> {
+        let sessions = session
+            .map(|spec| vec![(auto_session_id(), spec)])
+            .unwrap_or_default();
+        WorkerPool::connect_sessions(addrs, cfg, sessions)
+    }
+
+    /// Connect with several named sessions open from the start (one leader
+    /// process multiplexing multiple searches over one farm). Every
+    /// session is handshaken on every worker connection — including
+    /// reconnections after a blip, so a revived worker serves ALL tenants
+    /// again, not just the most recent.
+    pub fn connect_sessions(
+        addrs: &[String],
+        cfg: PoolCfg,
+        sessions: Vec<(String, SessionSpec)>,
+    ) -> Result<WorkerPool> {
         anyhow::ensure!(!addrs.is_empty(), "no worker addresses");
+        for (i, (id, _)) in sessions.iter().enumerate() {
+            anyhow::ensure!(
+                !sessions[..i].iter().any(|(other, _)| other == id),
+                "duplicate session id '{id}'"
+            );
+        }
         let mut pool = WorkerPool::empty(cfg);
-        pool.session = session;
+        pool.sessions =
+            sessions.into_iter().map(|(id, spec)| PoolSession::new(id, spec)).collect();
         for addr in addrs {
             let stream = connect_with_retry(addr)?;
             pool.push_worker(Some(addr.clone()), stream)
@@ -812,7 +1416,7 @@ impl WorkerPool {
             tx,
             rx,
             cfg,
-            session: None,
+            sessions: Vec::new(),
             next_id: 0,
             round: 0,
             // Alpha 0.5: adapt within a couple of observations, but one
@@ -828,11 +1432,12 @@ impl WorkerPool {
     fn push_worker(&mut self, addr: Option<String>, stream: TcpStream) -> Result<()> {
         let mut writer = stream;
         let mut reader = BufReader::new(writer.try_clone()?);
-        // Handshake BEFORE the reader thread exists: the ack is read
+        // Handshake BEFORE the reader thread exists: the acks are read
         // synchronously off the same buffered reader that is then handed to
         // the thread, so no reply bytes can be lost in a discarded buffer.
-        if let Some(spec) = &self.session {
-            client_handshake(&mut writer, &mut reader, spec)?;
+        // EVERY open session handshakes, in open order.
+        for sess in &self.sessions {
+            client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
         }
         let w = self.workers.len();
         self.workers.push(PoolWorker {
@@ -863,7 +1468,9 @@ impl WorkerPool {
         self.workers.iter().map(|w| w.dispatched).collect()
     }
 
-    /// Best-effort shutdown notification to every live worker.
+    /// Best-effort shutdown notification to every live worker. This stops
+    /// WORKER PROCESSES — a tenant leaving a shared farm calls
+    /// [`close_session`](Self::close_session) instead.
     pub fn shutdown(&mut self) -> Result<()> {
         for pw in self.workers.iter_mut() {
             if let Some(stream) = pw.writer.as_mut() {
@@ -876,12 +1483,37 @@ impl WorkerPool {
         Ok(())
     }
 
-    /// Evaluate a round of configs across the pool. Returns values in input
-    /// order. Errors only when every worker is dead (reconnect budget
-    /// included) with work still unfinished — individual worker failures
-    /// requeue their configs onto the surviving workers instead.
+    /// Ids of the pool's open sessions, in open order.
+    pub fn session_ids(&self) -> Vec<String> {
+        self.sessions.iter().map(|s| s.id.clone()).collect()
+    }
+
+    /// Session-scoped teardown: tell every live worker to free `sid`'s
+    /// backend (`{"bye": sid}`) and forget the session pool-side.
+    /// Connections stay up and other sessions keep serving — this is how
+    /// one tenant leaves a shared farm without touching the others.
+    pub fn close_session(&mut self, sid: &str) -> Result<()> {
+        let Some(at) = self.sessions.iter().position(|s| s.id == sid) else {
+            anyhow::bail!("no open session '{sid}'");
+        };
+        self.sessions.remove(at);
+        for pw in self.workers.iter_mut() {
+            if let Some(stream) = pw.writer.as_mut() {
+                // Best-effort: a dead connection's worker will drop the
+                // session by idle timeout instead.
+                let _ = write_line(stream, &obj(vec![("bye", Json::Str(sid.to_string()))]));
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate a round of configs across the pool (under the pool's first
+    /// open session, if any). Returns values in input order. Errors only
+    /// when every worker is dead (reconnect budget included) with work
+    /// still unfinished — individual worker failures requeue their configs
+    /// onto the surviving workers instead.
     pub fn evaluate(&mut self, configs: &[Config]) -> Result<Vec<f64>> {
-        Ok(self.evaluate_records(configs)?.0)
+        Ok(self.evaluate_full(None, configs)?.values)
     }
 
     /// [`evaluate`](Self::evaluate), plus each slot's record-return payload
@@ -890,16 +1522,68 @@ impl WorkerPool {
         &mut self,
         configs: &[Config],
     ) -> Result<(Vec<f64>, Vec<Option<EvalRecord>>)> {
+        let out = self.evaluate_full(None, configs)?;
+        Ok((out.values, out.records))
+    }
+
+    /// Evaluate a round under a specific open session (multi-tenant pools).
+    pub fn evaluate_records_in(&mut self, sid: &str, configs: &[Config]) -> Result<RoundEvals> {
+        self.evaluate_full(Some(sid), configs)
+    }
+
+    /// Core round loop. `session`: `Some(sid)` targets that open session;
+    /// `None` uses the pool's first session, or the legacy sessionless
+    /// flow when the pool was opened without any.
+    pub fn evaluate_full(
+        &mut self,
+        session: Option<&str>,
+        configs: &[Config],
+    ) -> Result<RoundEvals> {
         if configs.is_empty() {
-            return Ok((Vec::new(), Vec::new()));
+            return Ok(RoundEvals { values: Vec::new(), records: Vec::new(), secs: Vec::new() });
         }
+        let session_idx = match session {
+            Some(sid) => Some(
+                self.sessions
+                    .iter()
+                    .position(|s| s.id == sid)
+                    .ok_or_else(|| anyhow::anyhow!("no open session '{sid}'"))?,
+            ),
+            None if self.sessions.is_empty() => None,
+            None => Some(0),
+        };
         self.round += 1;
+        // Longest-job-first: with a fitted cost model, the predicted-
+        // expensive configs enter the queue first, so they start first and
+        // the cheap ones backfill spare capacity — an expensive config
+        // dispatched LAST is the one pathology work stealing cannot fix
+        // (nobody can help until it finishes). Output stays in input order
+        // regardless; only scheduling changes. Deliberate layering with
+        // BatchRun's reorder (search/batch.rs): THIS model covers fixed-q
+        // rounds and any multi-session caller, while BatchRun's covers
+        // in-process parallel objectives that have no pool; under
+        // adaptive-q remote runs both fire, but they are fit from the same
+        // per-slot latencies and agree — re-sorting a sorted queue is a
+        // no-op, not a conflict.
+        let mut queue: VecDeque<usize> = (0..configs.len()).collect();
+        if let Some(si) = session_idx {
+            let cost = &self.sessions[si].cost;
+            if cost.ready() {
+                let pred: Vec<f64> =
+                    configs.iter().map(|c| cost.predict(c).unwrap_or(0.0)).collect();
+                let mut order: Vec<usize> = (0..configs.len()).collect();
+                order.sort_by(|&a, &b| pred[b].total_cmp(&pred[a]).then(a.cmp(&b)));
+                queue = order.into();
+            }
+        }
         let mut r = Round {
             configs,
-            queue: (0..configs.len()).collect(),
+            session: session_idx,
+            queue,
             done: vec![false; configs.len()],
             out: vec![f64::NAN; configs.len()],
             records: vec![None; configs.len()],
+            secs: vec![0.0; configs.len()],
             remaining: configs.len(),
         };
         while r.remaining > 0 {
@@ -930,7 +1614,7 @@ impl WorkerPool {
                 }
             }
         }
-        Ok((r.out, r.records))
+        Ok(RoundEvals { values: r.out, records: r.records, secs: r.secs })
     }
 
     fn reconnect_possible(&self) -> bool {
@@ -939,24 +1623,44 @@ impl WorkerPool {
             .any(|pw| !pw.alive && !pw.retired && pw.reconnects_left > 0 && pw.addr.is_some())
     }
 
-    /// Hand queued slots to idle live workers (one in flight per worker).
+    /// Hand queued slots to live workers with spare pipeline capacity (up
+    /// to `pipeline_depth` in flight per worker), BREADTH-FIRST: every
+    /// pass gives each worker at most one slot, so a round smaller than
+    /// depth x workers spreads across the whole pool (parallelism first)
+    /// instead of filling worker 0's pipeline while workers 2..N idle —
+    /// pipelining must never cost the parallelism it exists to protect.
     fn fill_idle(&mut self, r: &mut Round) {
-        for w in 0..self.workers.len() {
-            if !self.workers[w].alive || !self.workers[w].outstanding.is_empty() {
-                continue;
-            }
-            while let Some(slot) = r.queue.pop_front() {
-                if r.done[slot] {
-                    // Requeued after a failure, then finished by a
-                    // re-dispatched duplicate — nothing left to do.
+        let depth = self.cfg.pipeline_depth.max(1);
+        loop {
+            let mut dispatched_any = false;
+            for w in 0..self.workers.len() {
+                if !self.workers[w].alive || self.workers[w].outstanding.len() >= depth {
                     continue;
                 }
-                if !self.dispatch_to(w, slot, r) {
+                let mut next = None;
+                while let Some(slot) = r.queue.pop_front() {
+                    if r.done[slot] {
+                        // Requeued after a failure, then finished by a
+                        // re-dispatched duplicate — nothing left to do.
+                        continue;
+                    }
+                    next = Some(slot);
+                    break;
+                }
+                let Some(slot) = next else {
+                    return; // queue drained entirely
+                };
+                if self.dispatch_to(w, slot, r) {
+                    dispatched_any = true;
+                } else {
                     // Write failed; the worker is down now and the slot
-                    // still needs a home.
+                    // still needs a home — let another worker take it on
+                    // this same pass.
                     r.queue.push_front(slot);
                 }
-                break;
+            }
+            if !dispatched_any {
+                return; // every live worker is at capacity (or none are)
             }
         }
     }
@@ -964,13 +1668,17 @@ impl WorkerPool {
     fn dispatch_to(&mut self, w: usize, slot: usize, r: &mut Round) -> bool {
         let id = self.next_id;
         self.next_id += 1;
-        let msg = obj(vec![
+        let mut fields = vec![
             ("id", Json::Num(id as f64)),
             (
                 "config",
                 Json::Arr(r.configs[slot].iter().map(|&c| Json::Num(c as f64)).collect()),
             ),
-        ]);
+        ];
+        if let Some(si) = r.session {
+            fields.push(("session", Json::Str(self.sessions[si].id.clone())));
+        }
+        let msg = obj(fields);
         let wrote = match self.workers[w].writer.as_mut() {
             Some(stream) => write_line(stream, &msg).is_ok(),
             None => false,
@@ -1049,23 +1757,28 @@ impl WorkerPool {
         );
     }
 
-    /// Re-dispatch over-deadline outstanding evaluations to idle workers.
-    /// Only idle workers are used, so stealing never displaces fresh work;
-    /// the youngest in-flight copy of a slot must itself be over deadline
-    /// before another copy is launched (no re-steal thrash).
+    /// Re-dispatch over-deadline outstanding evaluations to workers with
+    /// spare pipeline capacity. `fill_idle` runs first each tick, so spare
+    /// capacity implies the round queue is empty — stealing never
+    /// displaces fresh work; the youngest in-flight copy of a slot must
+    /// itself be over deadline before another copy is launched (no
+    /// re-steal thrash). Among candidates, the least-loaded worker takes
+    /// the copy (its pipeline reaches the stolen eval soonest).
     fn steal_stragglers(&mut self, r: &mut Round) {
         if r.remaining == 0 {
             return;
         }
+        let depth = self.cfg.pipeline_depth.max(1);
         // No deadline until at least one completed eval has set the scale.
         let Some(mean) = self.eval_ewma.value() else { return };
         let deadline =
             (mean * self.cfg.straggler_factor).max(self.cfg.min_straggle.as_secs_f64());
         loop {
-            let Some(wi) = self
-                .workers
-                .iter()
-                .position(|pw| pw.alive && pw.outstanding.is_empty())
+            let Some(wi) = (0..self.workers.len())
+                .filter(|&w| {
+                    self.workers[w].alive && self.workers[w].outstanding.len() < depth
+                })
+                .min_by_key(|&w| self.workers[w].outstanding.len())
             else {
                 break;
             };
@@ -1082,6 +1795,15 @@ impl WorkerPool {
             let Some((&slot, _)) = youngest
                 .iter()
                 .filter(|(_, &age)| age >= deadline)
+                // At depth > 1 the stealing worker may itself hold a copy
+                // of the slot (queued behind its own straggler) — handing
+                // it another copy would rescue nothing.
+                .filter(|(&slot, _)| {
+                    !self.workers[wi]
+                        .outstanding
+                        .values()
+                        .any(|o| o.round == self.round && o.slot == slot)
+                })
                 .max_by(|a, b| a.1.partial_cmp(b.1).expect("ages are finite"))
             else {
                 break;
@@ -1101,13 +1823,22 @@ impl WorkerPool {
                 let Some(o) = self.workers[w].outstanding.remove(&eval.id) else {
                     return; // id already cleared (failure path) — discard
                 };
-                self.eval_ewma.observe(o.at.elapsed().as_secs_f64());
+                let elapsed = o.at.elapsed().as_secs_f64();
+                self.eval_ewma.observe(elapsed);
                 self.completed += 1;
                 self.workers[w].evals_since_connect += 1;
                 if o.round == self.round && !r.done[o.slot] {
                     r.done[o.slot] = true;
                     r.out[o.slot] = eval.value;
                     r.records[o.slot] = eval.record;
+                    r.secs[o.slot] = elapsed;
+                    if let Some(si) = r.session {
+                        // Feed the session's cost model with the winning
+                        // copy's dispatch->result latency. At depth > 1
+                        // this includes worker-side queueing — noisier,
+                        // but unbiased ordering-wise.
+                        self.sessions[si].cost.observe(&r.configs[o.slot], elapsed);
+                    }
                     r.remaining -= 1;
                 }
                 // else: first-result-wins duplicate, or a previous round's
@@ -1137,16 +1868,18 @@ impl WorkerPool {
             }
             let addr = self.workers[w].addr.clone().expect("checked above");
             self.workers[w].reconnects_left -= 1;
-            // A fresh connection to a session pool must re-handshake: the
-            // worker process may have restarted and be back on its default
-            // space. A failed handshake burns the attempt like a failed
-            // dial.
-            let session = &self.session;
+            // A fresh connection must re-handshake EVERY open session —
+            // not just the latest: the worker process may have restarted
+            // with an empty session table, and a multi-tenant worker that
+            // only re-learned the newest tenant would silently error every
+            // older tenant's evals (regression-tested). A failed handshake
+            // burns the attempt like a failed dial.
+            let sessions = &self.sessions;
             match TcpStream::connect(&addr).map_err(anyhow::Error::from).and_then(|s| {
                 let mut writer = s;
                 let mut reader = BufReader::new(writer.try_clone()?);
-                if let Some(spec) = session {
-                    client_handshake(&mut writer, &mut reader, spec)?;
+                for sess in sessions {
+                    client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
                 }
                 Ok((writer, reader))
             }) {
@@ -1187,22 +1920,32 @@ fn spawn_reader(
     std::thread::spawn(move || {
         loop {
             match read_json_line(&mut reader) {
-                Ok(Some(msg)) => match parse_eval(&msg) {
-                    Ok(eval) => {
-                        if tx.send(PoolEvent::Result { worker, generation, eval }).is_err() {
-                            return; // pool dropped
+                Ok(Some(msg)) => {
+                    if msg.get("bye_ack").is_some() {
+                        // Session-teardown ack (close_session) — pure
+                        // bookkeeping, nothing to attribute.
+                        continue;
+                    }
+                    match parse_eval(&msg) {
+                        Ok(eval) => {
+                            if tx
+                                .send(PoolEvent::Result { worker, generation, eval })
+                                .is_err()
+                            {
+                                return; // pool dropped
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send(PoolEvent::Down {
+                                worker,
+                                generation,
+                                clean: false,
+                                error: format!("bad reply: {e:#}"),
+                            });
+                            return;
                         }
                     }
-                    Err(e) => {
-                        let _ = tx.send(PoolEvent::Down {
-                            worker,
-                            generation,
-                            clean: false,
-                            error: format!("bad reply: {e:#}"),
-                        });
-                        return;
-                    }
-                },
+                }
                 Ok(None) => {
                     let _ = tx.send(PoolEvent::Down {
                         worker,
@@ -1240,6 +1983,9 @@ fn spawn_reader(
 pub struct RemoteObjective {
     space: crate::search::Space,
     pub pool: WorkerPool,
+    /// This objective's session id on the pool (None: legacy sessionless
+    /// flow against single-tenant workers).
+    sid: Option<String>,
     /// Every evaluation's record, in evaluation order.
     pub log: Vec<EvalRecord>,
 }
@@ -1254,7 +2000,12 @@ impl RemoteObjective {
         addrs: &[String],
         cfg: PoolCfg,
     ) -> Result<RemoteObjective> {
-        Ok(RemoteObjective { space, pool: WorkerPool::connect(addrs, cfg)?, log: Vec::new() })
+        Ok(RemoteObjective {
+            space,
+            pool: WorkerPool::connect(addrs, cfg)?,
+            sid: None,
+            log: Vec::new(),
+        })
     }
 
     /// Connect with a space-sync handshake: every worker rebuilds the
@@ -1267,9 +2018,26 @@ impl RemoteObjective {
     ) -> Result<RemoteObjective> {
         let space = spec.build.space.clone();
         let pool = WorkerPool::connect_session(addrs, cfg, Some(spec))?;
-        Ok(RemoteObjective { space, pool, log: Vec::new() })
+        let sid = pool.session_ids().pop();
+        Ok(RemoteObjective { space, pool, sid, log: Vec::new() })
     }
 
+    /// The session this objective evaluates under, if any.
+    pub fn session_id(&self) -> Option<&str> {
+        self.sid.as_deref()
+    }
+
+    /// Leave a shared farm politely: close THIS session (`bye` to every
+    /// worker) and keep the worker processes serving their other tenants.
+    pub fn release(&mut self) -> Result<()> {
+        match self.sid.take() {
+            Some(sid) => self.pool.close_session(&sid),
+            None => Ok(()),
+        }
+    }
+
+    /// Stop the worker PROCESSES. Single-tenant demos and tests only — a
+    /// tenant on a shared farm wants [`release`](Self::release).
     pub fn shutdown(&mut self) -> Result<()> {
         self.pool.shutdown()
     }
@@ -1285,16 +2053,18 @@ impl Objective for RemoteObjective {
     }
 
     fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
-        match self.pool.evaluate_records(configs) {
-            Ok((values, records)) => {
-                for ((config, &value), record) in
-                    configs.iter().zip(&values).zip(records)
-                {
+        self.eval_batch_timed(configs).0
+    }
+
+    fn eval_batch_timed(&mut self, configs: &[Config]) -> (Vec<f64>, Vec<f64>) {
+        match self.pool.evaluate_full(self.sid.as_deref(), configs) {
+            Ok(RoundEvals { values, records, secs }) => {
+                for ((config, &value), record) in configs.iter().zip(&values).zip(records) {
                     self.log.push(record.unwrap_or_else(|| {
                         EvalRecord::value_only(config.clone(), value)
                     }));
                 }
-                values
+                (values, secs)
             }
             Err(e) => {
                 eprintln!("[remote-objective] batch of {} failed: {e:#}", configs.len());
@@ -1302,7 +2072,7 @@ impl Objective for RemoteObjective {
                     self.log
                         .push(EvalRecord::value_only(config.clone(), f64::NEG_INFINITY));
                 }
-                vec![f64::NEG_INFINITY; configs.len()]
+                (vec![f64::NEG_INFINITY; configs.len()], vec![0.0; configs.len()])
             }
         }
     }
@@ -1847,5 +2617,373 @@ mod tests {
         assert_eq!((r.id, r.value), (1, 8.0));
         w.shutdown().unwrap();
         assert_eq!(handle.join().unwrap(), 1); // only the valid eval counted
+    }
+
+    // -- protocol v3 / multi-tenant session runtime -------------------------
+
+    /// Spawn a multiplexed session worker (the `sammpq worker` runtime).
+    fn spawn_mux_worker(opts: ServeOpts) -> (String, std::thread::JoinHandle<usize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let factory = SyntheticFactory { sleep: Duration::ZERO };
+            serve_sessions_on(listener, &factory, opts).expect("session worker")
+        });
+        (addr, h)
+    }
+
+    fn synth_spec(dims: usize, choices: usize) -> SessionSpec {
+        SessionSpec::synthetic(
+            SyntheticObjective::new(dims, choices, Duration::ZERO).space().clone(),
+        )
+    }
+
+    #[test]
+    fn session_table_multiplexes_tenants_and_bye_frees_only_one() {
+        // Two tenants with DIFFERENT spaces on ONE connection of one
+        // worker process: each eval runs over its own session's space, and
+        // closing tenant A leaves tenant B serving.
+        let (addr, handle) = spawn_mux_worker(ServeOpts::default());
+        let mut w = WorkerHandle::connect(&addr).unwrap();
+        w.hello_as("tenant-a", &synth_spec(4, 3)).unwrap();
+        w.hello_as("tenant-b", &synth_spec(2, 5)).unwrap();
+
+        // A config valid only in A's 4x3 space...
+        w.dispatch_in("tenant-a", 0, &vec![2, 2, 2, 2]).unwrap();
+        assert_eq!(w.collect().unwrap().value, -8.0);
+        // ...and one valid only in B's 2x5 space.
+        w.dispatch_in("tenant-b", 1, &vec![4, 4]).unwrap();
+        assert_eq!(w.collect().unwrap().value, -8.0);
+
+        // A colliding hello — an open id with a DIFFERENT spec — is
+        // refused (no hijack), and the original session is untouched.
+        let err = w.hello_as("tenant-a", &synth_spec(6, 2)).unwrap_err();
+        assert!(format!("{err:#}").contains("different spec"), "{err:#}");
+        w.dispatch_in("tenant-a", 9, &vec![1, 0, 0, 0]).unwrap();
+        assert_eq!(w.collect().unwrap().value, -1.0);
+
+        // bye(A): A's backend is freed, B keeps serving.
+        w.send_raw(&obj(vec![("bye", Json::Str("tenant-a".into()))])).unwrap();
+        let ack = w.recv_raw().unwrap().expect("bye_ack");
+        assert_eq!(ack.get("bye_ack").and_then(|v| v.as_str()), Some("tenant-a"));
+        w.dispatch_in("tenant-a", 2, &vec![0, 0, 0, 0]).unwrap();
+        let reply = w.recv_raw().unwrap().expect("reply");
+        assert_eq!(reply.get("kind").and_then(|v| v.as_str()), Some("session"));
+        w.dispatch_in("tenant-b", 3, &vec![0, 1]).unwrap();
+        assert_eq!(w.collect().unwrap().value, -1.0);
+
+        w.shutdown().unwrap();
+        assert_eq!(handle.join().unwrap(), 4);
+    }
+
+    #[test]
+    fn idle_sessions_are_swept_and_rehandshake_recovers() {
+        let (addr, handle) = spawn_mux_worker(ServeOpts {
+            idle_timeout: Duration::from_millis(100),
+            tick: Duration::from_millis(10),
+        });
+        let mut w = WorkerHandle::connect(&addr).unwrap();
+        let spec = synth_spec(3, 3);
+        w.hello_as("sleepy", &spec).unwrap();
+        w.dispatch_in("sleepy", 0, &vec![1, 1, 1]).unwrap();
+        assert_eq!(w.collect().unwrap().value, -3.0);
+        // Abandon the session past the idle timeout: the worker frees it.
+        std::thread::sleep(Duration::from_millis(400));
+        w.dispatch_in("sleepy", 1, &vec![1, 1, 1]).unwrap();
+        let reply = w.recv_raw().unwrap().expect("reply");
+        assert_eq!(reply.get("kind").and_then(|v| v.as_str()), Some("session"));
+        // A re-handshake (what the pool's reconnect does) recovers.
+        w.hello_as("sleepy", &spec).unwrap();
+        w.dispatch_in("sleepy", 2, &vec![2, 0, 2]).unwrap();
+        assert_eq!(w.collect().unwrap().value, -4.0);
+        w.shutdown().unwrap();
+        assert_eq!(handle.join().unwrap(), 2);
+    }
+
+    #[test]
+    fn v2_hello_gets_structured_proto_error_never_a_hang() {
+        // A PR 3-era v2 client frames its hello as {"proto": 2, "session":
+        // {spec...}}. Both serve loops must answer kind="proto" naming v3
+        // and keep the connection serving — protocol hygiene beside the
+        // PR 3 skew tests.
+        let spec = synth_spec(4, 3);
+        let v2_hello = obj(vec![(
+            "hello",
+            obj(vec![("proto", Json::Num(2.0)), ("session", spec.to_json())]),
+        )]);
+
+        // Single-tenant loop.
+        let (addr, handle) = spawn_sum_worker();
+        let mut w = WorkerHandle::connect(&addr).unwrap();
+        w.send_raw(&v2_hello).unwrap();
+        let reply = w.recv_raw().unwrap().expect("reply");
+        assert_eq!(reply.get("kind").and_then(|k| k.as_str()), Some("proto"));
+        assert_eq!(reply.get("proto").and_then(|p| p.as_usize()), Some(3));
+        w.dispatch(0, &vec![1, 1, 1, 1]).unwrap(); // still serving
+        assert_eq!(w.collect().unwrap().value, 4.0);
+        w.shutdown().unwrap();
+        handle.join().unwrap();
+
+        // Multiplexed session runtime: same reply, and the SAME connection
+        // can then open a correct v3 session.
+        let (addr, handle) = spawn_mux_worker(ServeOpts::default());
+        let mut w = WorkerHandle::connect(&addr).unwrap();
+        w.send_raw(&v2_hello).unwrap();
+        let reply = w.recv_raw().unwrap().expect("reply");
+        assert_eq!(reply.get("kind").and_then(|k| k.as_str()), Some("proto"));
+        assert_eq!(reply.get("proto").and_then(|p| p.as_usize()), Some(3));
+        w.hello_as("upgraded", &synth_spec(3, 4)).unwrap();
+        w.dispatch_in("upgraded", 0, &vec![3, 3, 3]).unwrap();
+        assert_eq!(w.collect().unwrap().value, -9.0);
+        w.shutdown().unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn pool_reconnect_rehandshakes_every_open_session() {
+        // Regression (multi-tenant reconnection): a pool holding TWO open
+        // sessions loses its worker to a crash; the revived worker process
+        // has an empty session table, so the reconnect must re-handshake
+        // BOTH sessions — re-syncing only the latest would silently break
+        // the older tenant.
+        use std::sync::{Arc, Mutex};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let rehandshaken: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let seen = Arc::clone(&rehandshaken);
+
+        fn hello_sid(msg: &Json) -> String {
+            msg.get("hello")
+                .and_then(|h| h.get("session"))
+                .and_then(|v| v.as_str())
+                .expect("hello with session id")
+                .to_string()
+        }
+        fn ack_hello(writer: &mut TcpStream, msg: &Json) {
+            let hello = msg.get("hello").expect("hello frame");
+            let sid = hello_sid(msg);
+            let dims = SessionSpec::from_json(hello.req("spec").unwrap())
+                .unwrap()
+                .build
+                .space
+                .num_dims();
+            write_line(
+                writer,
+                &obj(vec![(
+                    "hello_ack",
+                    obj(vec![
+                        ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+                        ("session", Json::Str(sid)),
+                        ("dims", Json::Num(dims as f64)),
+                    ]),
+                )]),
+            )
+            .unwrap();
+        }
+
+        let h = std::thread::spawn(move || {
+            // Connection 1: fresh worker — two session hellos, then a
+            // crash mid-reply on the first eval (unclean disconnect).
+            {
+                let (stream, _) = listener.accept().unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                for _ in 0..2 {
+                    let msg = read_json_line(&mut reader).unwrap().unwrap();
+                    ack_hello(&mut writer, &msg);
+                }
+                let _ = read_json_line(&mut reader); // swallow one dispatch
+                writer.write_all(b"{\"id\": 0, \"val").unwrap(); // torn reply
+            } // drop: the crash
+            // Connection 2: the REVIVED worker, session table empty. It
+            // must receive BOTH session hellos again before any eval.
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            for _ in 0..2 {
+                let msg = read_json_line(&mut reader).unwrap().unwrap();
+                seen.lock().unwrap().push(hello_sid(&msg));
+                ack_hello(&mut writer, &msg);
+            }
+            // Then serve synthetic evals, echoing the session, until the
+            // pool shuts down.
+            loop {
+                let Ok(Some(msg)) = read_json_line(&mut reader) else { return };
+                if msg.get("shutdown").is_some() {
+                    return;
+                }
+                if let Some(sid) = msg.get("bye") {
+                    write_line(&mut writer, &obj(vec![("bye_ack", sid.clone())])).unwrap();
+                    continue;
+                }
+                let id = msg.req("id").unwrap().as_usize().unwrap();
+                let config: Config = msg
+                    .get("config")
+                    .and_then(|c| c.as_arr())
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_usize().unwrap())
+                    .collect();
+                let value = -(config.iter().sum::<usize>() as f64);
+                let mut fields = vec![
+                    ("id", Json::Num(id as f64)),
+                    ("value", crate::util::json::enc_f64(value)),
+                    ("record", EvalRecord::value_only(config, value).to_json()),
+                ];
+                if let Some(s) = msg.get("session") {
+                    fields.push(("session", s.clone()));
+                }
+                write_line(&mut writer, &obj(fields)).unwrap();
+            }
+        });
+
+        let cfg = PoolCfg {
+            reconnect_attempts: 3,
+            reconnect_backoff: Duration::from_millis(20),
+            ..no_steal_cfg()
+        };
+        let mut pool = WorkerPool::connect_sessions(
+            std::slice::from_ref(&addr),
+            cfg,
+            vec![
+                ("tenant-a".to_string(), synth_spec(4, 3)),
+                ("tenant-b".to_string(), synth_spec(6, 2)),
+            ],
+        )
+        .unwrap();
+        // The crash lands on tenant A's first round; the pool must
+        // reconnect, re-handshake both tenants, and finish the round.
+        let out = pool.evaluate_records_in("tenant-a", &[vec![1, 1, 0, 2]]).unwrap();
+        assert_eq!(out.values, vec![-4.0]);
+        assert!(pool.reconnects >= 1, "no reconnection recorded");
+        // The OLDER tenant still works on the revived worker...
+        let out = pool.evaluate_records_in("tenant-b", &[vec![1, 0, 1, 0, 1, 0]]).unwrap();
+        assert_eq!(out.values, vec![-3.0]);
+        // ...because the reconnect re-handshook BOTH sessions, in order.
+        assert_eq!(
+            rehandshaken.lock().unwrap().clone(),
+            vec!["tenant-a".to_string(), "tenant-b".to_string()]
+        );
+        pool.shutdown().unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn pipeline_depth_pipelines_and_straggler_redispatch_stays_duplicate_free() {
+        // Depth 3, two instant workers, no stealing: exact served counts
+        // prove no duplicates, and both workers pull from the shared queue.
+        let (a1, h1) = spawn_sum_worker();
+        let (a2, h2) = spawn_sum_worker();
+        let cfg = PoolCfg { pipeline_depth: 3, ..no_steal_cfg() };
+        let mut pool = WorkerPool::connect(&[a1, a2], cfg).unwrap();
+        let configs: Vec<Config> = (0..6).map(|i| vec![i % 3, 0, i % 2, 1]).collect();
+        let expect: Vec<f64> =
+            configs.iter().map(|c| c.iter().sum::<usize>() as f64).collect();
+        assert_eq!(pool.evaluate(&configs).unwrap(), expect);
+        pool.shutdown().unwrap();
+        let (s1, s2) = (h1.join().unwrap(), h2.join().unwrap());
+        assert_eq!(s1 + s2, 6);
+        assert!(s1 > 0 && s2 > 0, "pipelined queue starved a worker: {s1}/{s2}");
+
+        // Acceptance: straggler re-dispatch stays duplicate-free at
+        // depth > 1 — one 80x-slow worker, values exact and in order, the
+        // round never waits for the straggler's pipeline.
+        let (a1, h1) = spawn_synth_worker(5);
+        let (a2, h2) = spawn_synth_worker(5);
+        let (a3, h3) = spawn_synth_worker(400);
+        let cfg = PoolCfg {
+            straggler_factor: 2.0,
+            min_straggle: Duration::from_millis(10),
+            pipeline_depth: 2,
+            ..Default::default()
+        };
+        let mut pool = WorkerPool::connect(&[a1, a2, a3], cfg).unwrap();
+        let configs: Vec<Config> = (0..8)
+            .map(|i| vec![i % 3, (i + 1) % 3, (i + 2) % 3, i % 2])
+            .collect();
+        let expect: Vec<f64> =
+            configs.iter().map(SyntheticObjective::expected_value).collect();
+        let t = Instant::now();
+        let values = pool.evaluate(&configs).unwrap();
+        let wall = t.elapsed();
+        assert_eq!(values, expect, "duplicate or misattributed result at depth 2");
+        assert!(pool.redispatched >= 1, "no straggler re-dispatch at depth 2");
+        assert!(wall < Duration::from_millis(400), "round stalled on straggler: {wall:?}");
+        pool.shutdown().unwrap();
+        assert!(h1.join().unwrap() + h2.join().unwrap() + h3.join().unwrap() >= 8);
+    }
+
+    #[test]
+    fn pool_cost_model_orders_the_round_queue_longest_job_first() {
+        // A session pool against one worker whose eval cost genuinely
+        // depends on the config (sleep = 3ms per unit of summed index):
+        // the session's model learns that gradient from observed
+        // latencies, and the next round must be DISPATCHED in
+        // predicted-cost-descending order. With ONE worker at depth 1 and
+        // no stealing, dispatch order == the worker's served order, so
+        // the assertion is exact.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let served_order: std::sync::Arc<std::sync::Mutex<Vec<Config>>> =
+            std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let order = std::sync::Arc::clone(&served_order);
+        let h = std::thread::spawn(move || {
+            struct Recording {
+                inner: SyntheticBackend,
+                order: std::sync::Arc<std::sync::Mutex<Vec<Config>>>,
+            }
+            impl WorkerBackend for Recording {
+                fn space(&self) -> &Space {
+                    self.inner.space()
+                }
+                fn sync(&mut self, spec: &SessionSpec) -> Result<()> {
+                    self.inner.sync(spec)
+                }
+                fn eval_record(&mut self, config: &Config) -> EvalRecord {
+                    self.order.lock().unwrap().push(config.clone());
+                    // Config-dependent service time: 3ms per summed index
+                    // — the signal the cost model must recover.
+                    let units = config.iter().sum::<usize>() as u64;
+                    std::thread::sleep(Duration::from_millis(3 * units));
+                    self.inner.eval_record(config)
+                }
+            }
+            let mut backend = Recording {
+                inner: SyntheticBackend::new(4, 3, Duration::ZERO),
+                order,
+            };
+            serve_on_listener(listener, &mut backend).expect("worker")
+        });
+        let spec = synth_spec(4, 3);
+        let cfg = PoolCfg { pipeline_depth: 1, ..no_steal_cfg() };
+        let mut pool =
+            WorkerPool::connect_session(std::slice::from_ref(&addr), cfg, Some(spec))
+                .unwrap();
+        let sid = pool.session_ids().pop().unwrap();
+        // Feed the model past readiness (k = 3 features for a kind-less
+        // synthetic space -> ready at 6 observations) with varied sums.
+        let warm: Vec<Config> = (0..8).map(|i| vec![i % 3, (i + 1) % 3, 0, 0]).collect();
+        pool.evaluate_records_in(&sid, &warm).unwrap();
+        served_order.lock().unwrap().clear();
+        // Distinct total costs (sums 0, 8, 2, 6): the fitted slope (~3ms
+        // per unit, far above scheduler jitter) must order the queue by
+        // sum DESCENDING regardless of input order.
+        let round: Vec<Config> = vec![
+            vec![0, 0, 0, 0],
+            vec![2, 2, 2, 2],
+            vec![1, 0, 1, 0],
+            vec![2, 1, 2, 1],
+        ];
+        let out = pool.evaluate_records_in(&sid, &round).unwrap();
+        // Output in INPUT order no matter how the queue was permuted.
+        let expect: Vec<f64> = round.iter().map(SyntheticObjective::expected_value).collect();
+        assert_eq!(out.values, expect);
+        // ...but the worker must have SERVED it longest-job-first.
+        let served = served_order.lock().unwrap().clone();
+        let mut want = round.clone();
+        want.sort_by_key(|c| std::cmp::Reverse(c.iter().sum::<usize>()));
+        assert_eq!(served, want, "round queue was not ordered by predicted cost");
+        pool.shutdown().unwrap();
+        h.join().unwrap();
     }
 }

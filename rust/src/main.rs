@@ -76,10 +76,33 @@ fn session_opts_from(args: &Args) -> Result<SessionOpts> {
         }
         None => EvalBackend::InProcess,
     };
+    let checkpoint = args.get("checkpoint").map(std::path::PathBuf::from);
+    let checkpoint_keep = match args.get("checkpoint-keep") {
+        None => {
+            anyhow::ensure!(
+                !args.has_flag("checkpoint-keep"),
+                "--checkpoint-keep needs a value: how many rotated checkpoints to keep"
+            );
+            None
+        }
+        Some(s) => {
+            let n: usize = s.parse().map_err(|_| {
+                anyhow::anyhow!("--checkpoint-keep expects a positive integer, got '{s}'")
+            })?;
+            anyhow::ensure!(n >= 1, "--checkpoint-keep must keep at least 1 checkpoint");
+            anyhow::ensure!(
+                checkpoint.is_some(),
+                "--checkpoint-keep needs --checkpoint <dir> (the rotation directory)"
+            );
+            Some(n)
+        }
+    };
     Ok(SessionOpts {
         backend,
-        checkpoint: args.get("checkpoint").map(std::path::PathBuf::from),
+        checkpoint,
+        checkpoint_keep,
         resume: args.get("resume").map(std::path::PathBuf::from),
+        keep_workers: args.has_flag("keep-workers"),
     })
 }
 
@@ -279,25 +302,54 @@ fn pool_cfg_from(args: &Args) -> Result<PoolCfg> {
         );
         cfg.straggler_factor = f;
     }
+    if let Some(s) = args.get("pipeline-depth") {
+        let d: usize = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--pipeline-depth expects an integer, got '{s}'"))?;
+        anyhow::ensure!(
+            d >= 1,
+            "--pipeline-depth must be >= 1 (1 = one eval in flight per connection)"
+        );
+        cfg.pipeline_depth = d;
+    }
     Ok(cfg)
 }
 
-/// Worker process: own a ModelSession and serve record-returning objective
-/// evaluations to a remote leader (`sammpq search --workers ...` connects
-/// here, syncing its pruned space/objective/hw + snapshot digest first).
-/// With `--synthetic <dims>x<choices>` it instead serves the synthetic
-/// objective (optionally `--sleep-ms <f>` per eval) — no artifacts needed.
+/// Worker process: a MULTI-TENANT session runtime — several leaders can
+/// hold concurrent sessions on one worker (`sammpq search --workers ...`
+/// opens a session here, syncing its pruned space/objective/hw + snapshot
+/// digest; `bye` or the idle timeout frees it without touching other
+/// tenants). With `--synthetic <dims>x<choices>` it serves synthetic
+/// sessions (optionally `--sleep-ms <f>` per eval) — no artifacts needed.
+/// DNN mode pretrains once and serves every tenant from that snapshot.
 fn cmd_worker(args: &Args) -> Result<()> {
-    use sammpq::coordinator::{serve_worker, DnnBackend, SyntheticBackend};
+    use sammpq::coordinator::{serve_sessions, DnnFactory, ServeOpts, SyntheticFactory};
     let addr = args.get_or("addr", "127.0.0.1:7447");
-    if let Some(spec) = args.get("synthetic") {
-        let (dims, choices) = parse_synthetic(spec)?;
+    let mut opts = ServeOpts::default();
+    let idle = args.get_f64("session-idle-secs", opts.idle_timeout.as_secs_f64());
+    anyhow::ensure!(
+        idle.is_finite() && idle > 0.0,
+        "--session-idle-secs must be a positive number of seconds"
+    );
+    opts.idle_timeout = std::time::Duration::from_secs_f64(idle);
+    if args.get("synthetic").is_some() || args.has_flag("synthetic") {
+        // Sessions always adopt each LEADER's synced space, so a
+        // `<dims>x<choices>` value no longer picks anything — it is still
+        // validated when given (typo-catching + script compat), but a bare
+        // `--synthetic` works too.
+        if let Some(spec) = args.get("synthetic") {
+            parse_synthetic(spec)?;
+        }
         let sleep = std::time::Duration::from_secs_f64(
             args.get_f64("sleep-ms", 0.0).max(0.0) / 1e3,
         );
-        let mut backend = SyntheticBackend::new(dims, choices, sleep);
-        println!("[worker] synthetic {dims}x{choices} (sleep {sleep:?}) on {addr}");
-        let served = serve_worker(&addr, &mut backend)?;
+        let factory = SyntheticFactory { sleep };
+        println!(
+            "[worker] synthetic sessions on {addr} (space synced per tenant, sleep \
+             {sleep:?}, multi-tenant, idle timeout {:?})",
+            opts.idle_timeout
+        );
+        let served = serve_sessions(&addr, &factory, opts)?;
         println!("[worker] done, served {served} evaluations");
         return Ok(());
     }
@@ -307,19 +359,20 @@ fn cmd_worker(args: &Args) -> Result<()> {
                                   args.get_usize("val-n", 512))?;
     let cfg = leader_cfg_from(args)?;
     // Deterministic pretrain so every worker shares the leader's starting
-    // point — the session handshake verifies this via the snapshot digest.
+    // point — each session handshake verifies this via the snapshot digest.
     let snap = sess.init_snapshot(cfg.seed);
     let mut st = sess.state_from_snapshot(&snap)?;
     sess.train(&mut st, &sess.meta.uniform_bits(16.0), &sess.meta.base_widths(),
                cfg.pretrain_steps, cfg.pretrain_lr)?;
     let pretrained = sess.snapshot_of(&st)?;
-    let mut backend = DnnBackend::new(&sess, pretrained, HwConfig::default(),
-                                      cfg.objective);
+    let factory = DnnFactory::new(&sess, pretrained);
     println!(
-        "[worker] {tag} serving evaluations on {addr} (snapshot digest {})",
-        backend.digest()
+        "[worker] {tag} serving sessions on {addr} (snapshot digest {}, multi-tenant, \
+         idle timeout {:?})",
+        factory.digest(),
+        opts.idle_timeout
     );
-    let served = serve_worker(&addr, &mut backend)?;
+    let served = serve_sessions(&addr, &factory, opts)?;
     println!("[worker] done, served {served} evaluations");
     Ok(())
 }
@@ -371,7 +424,13 @@ fn cmd_pool(args: &Args) -> Result<()> {
     let h = searcher.run(&mut remote, budget);
     let wall = t.secs();
     let capacity = remote.pool.capacity();
-    remote.shutdown()?;
+    if args.has_flag("keep-workers") {
+        // Multi-tenant farm: close only this session, leave the workers
+        // serving other leaders.
+        remote.release()?;
+    } else {
+        remote.shutdown()?;
+    }
 
     println!("round |   q | distinct | propose(ms) | eval(ms) | phase");
     for (i, r) in searcher.rounds.iter().enumerate() {
@@ -450,20 +509,28 @@ fn main() {
                  \x20             --workers a,b,c     evaluate on a `sammpq worker` pool\n\
                  \x20             (space-sync handshake + record-return; same --model\n\
                  \x20             and --seed on both sides — digests are checked)\n\
+                 \x20             --pipeline-depth d  outstanding evals per worker conn (2)\n\
+                 \x20             --keep-workers      bye the session, leave the farm up\n\
                  \x20             --checkpoint <f>    write a session checkpoint per round\n\
-                 \x20             --resume <f>        continue a checkpointed search\n\
+                 \x20             --checkpoint-keep n rotate per-round checkpoints in the\n\
+                 \x20             --checkpoint dir, keep the n newest + manifest.json\n\
+                 \x20             --resume <f|dir>    continue a checkpointed search (a dir\n\
+                 \x20             picks its newest valid checkpoint automatically)\n\
                  \x20 hessian     sensitivity report (--model, --k, --samples)\n\
                  \x20 hw          hardware model report (--model, --bits, --mult)\n\
                  \x20 convergence Fig. 3a/3b tabular study (no artifacts needed)\n\
                  \x20 exp <name>  fig1|fig3|fig3c|fig4|table1|table2|table3|table4|ablations\n\
                  \x20             [--effort quick|paper]\n\
-                 \x20 worker      serve objective evaluations to a remote leader\n\
+                 \x20 worker      serve evaluation sessions to remote leaders — multi-\n\
+                 \x20             tenant: several leaders share one worker concurrently\n\
                  \x20             (--model <tag> --addr host:port, or artifact-free:\n\
-                 \x20             --synthetic <dims>x<choices> [--sleep-ms <f>])\n\
+                 \x20             --synthetic [--sleep-ms <f>] — every session adopts\n\
+                 \x20             its leader's synced space;\n\
+                 \x20             --session-idle-secs <s> frees abandoned sessions)\n\
                  \x20 pool        drive a synthetic search over a worker pool (async\n\
                  \x20             straggler-tolerant demo): --addrs a,b,c\n\
                  \x20             --synthetic <dims>x<choices> --batch-q auto|<q>\n\
-                 \x20             --straggler-factor <f> --n <evals>\n\
+                 \x20             --straggler-factor <f> --pipeline-depth <d> --n <evals>\n\
                  \x20 info        list compiled artifacts"
             );
             Ok(())

@@ -26,6 +26,7 @@
 use std::collections::HashMap;
 
 use super::checkpoint::{RngState, SearchCheckpoint};
+use super::costmodel::CostModel;
 use super::history::History;
 use super::kmeans_tpe::{KmeansTpeParams, KmeansTpeState};
 use super::space::{Config, Space};
@@ -144,21 +145,25 @@ pub struct RoundStat {
 /// proposed from a STALE surrogate, so q should only grow while (a)
 /// evaluations dominate proposals and (b) the liar still diversifies.
 ///
-///   q* = clamp(floor(secs_per_EVALUATION / secs_per_PROPOSAL),
+///   q* = clamp(floor(predicted_secs_per_EVALUATION / secs_per_PROPOSAL),
 ///              1, parallelism)
 ///
-/// both sides EWMA-smoothed, then capped by the smoothed distinct-per-round
-/// FRACTION of capacity (proposing more copies of the same argmax than the
-/// liar can spread wastes evaluations — and a fraction, unlike an absolute
-/// count, lets q recover after a throttled phase, since distinct/q is 1.0
-/// at q = 1). Per-evaluation cost is the round wall-clock divided
-/// by the number of evaluation *waves* (`ceil(q / parallelism)`), so the
-/// measurement is independent of the q the controller itself chose — see
-/// `observe`. An instant objective drives the ratio below 2 and q settles
-/// at 1; an objective that costs even a few ms against a sub-ms proposal
-/// path drives q to the pool capacity.
+/// The evaluation side is PROACTIVE: it comes from the per-config linear
+/// [`CostModel`] the run fits from `eval_batch_timed` observations,
+/// evaluated at the feature mean of the region the search currently
+/// occupies — not from a reactive EWMA of whatever the last rounds
+/// happened to cost (the PR 2 controller this replaces; the wave-count
+/// normalization that controller needed is gone too, because per-config
+/// timings are already independent of the controller's own q choice). The
+/// proposal side stays an EWMA of measured per-proposal cost, and the
+/// result is capped by the smoothed distinct-per-round FRACTION of
+/// capacity (proposing more copies of the same argmax than the liar can
+/// spread wastes evaluations — and a fraction, unlike an absolute count,
+/// lets q recover after a throttled phase, since distinct/q is 1.0 at
+/// q = 1). An instant objective drives the ratio below 1 and q settles at
+/// 1; an objective that costs even a few ms against a sub-ms proposal path
+/// drives q to the pool capacity.
 struct QController {
-    eval_per: crate::util::timer::Ewma,
     prop_per: crate::util::timer::Ewma,
     /// EWMA of distinct/q per round — a FRACTION, not an absolute count:
     /// distinct is bounded by q, so an absolute EWMA would ratchet q
@@ -171,22 +176,13 @@ struct QController {
 impl QController {
     fn new() -> QController {
         QController {
-            eval_per: crate::util::timer::Ewma::new(0.5),
             prop_per: crate::util::timer::Ewma::new(0.5),
             distinct_frac: crate::util::timer::Ewma::new(0.5),
         }
     }
 
-    fn observe(&mut self, stat: &RoundStat, cap: usize) {
+    fn observe(&mut self, stat: &RoundStat) {
         let m = stat.q.max(1);
-        // Per-EVALUATION cost, not per-config-of-round: a parallel backend
-        // runs the round in ceil(m / cap) waves, so dividing the wall-clock
-        // by m would shrink the measurement by the controller's own q choice
-        // (feedback loop: big q -> "cheap evals" -> small q -> "expensive
-        // evals" -> oscillation around sqrt of the true ratio). Dividing by
-        // the wave count recovers the q-independent per-eval cost.
-        let waves = m.div_ceil(cap.max(1)).max(1);
-        self.eval_per.observe(stat.eval_secs / waves as f64);
         // Startup rounds sample at random — far cheaper than a TPE
         // proposal — and would make proposals look free; only model-based
         // rounds inform the proposal-cost side. Proposals are sequential,
@@ -197,12 +193,13 @@ impl QController {
         self.distinct_frac.observe(stat.distinct as f64 / m as f64);
     }
 
-    fn next_q(&self, cap: usize) -> usize {
+    fn next_q(&self, cap: usize, cost: &CostModel) -> usize {
         let cap = cap.max(1);
-        let (Some(eval), Some(prop)) = (self.eval_per.value(), self.prop_per.value())
+        let (Some(eval), Some(prop)) = (cost.predicted_mean(), self.prop_per.value())
         else {
-            // No model-based round measured yet: stay saturated, the
-            // startup phase is embarrassingly parallel anyway.
+            // No fitted cost model or no model-based round measured yet:
+            // stay saturated, the startup phase is embarrassingly parallel
+            // anyway.
             return cap;
         };
         let ratio = eval / prop.max(1e-9);
@@ -309,6 +306,12 @@ impl BatchSearcher {
                 (state, ck.rng.to_rng(), ck.history.clone())
             }
         };
+        // The cost model always starts cold — even on resume. Its
+        // observations are wall-clock measurements of THIS machine's
+        // evaluator, which a checkpoint from another run (or another pool)
+        // has no authority over; like adaptive q itself, scheduling is
+        // re-learned in a couple of rounds.
+        let cost = CostModel::for_space(&space);
         Ok(BatchRun {
             algo_name: name,
             policy: self.q,
@@ -317,6 +320,7 @@ impl BatchSearcher {
             rng,
             hist,
             ctl: QController::new(),
+            cost,
             q: None,
             n0: n_startup.min(budget),
             budget,
@@ -334,6 +338,9 @@ pub struct BatchRun {
     rng: Rng,
     hist: History,
     ctl: QController,
+    /// Per-config eval-cost model fit from `eval_batch_timed` observations;
+    /// drives proactive q and the longest-job-first round ordering.
+    cost: CostModel,
     /// Next round's batch size; `None` until the first step reads the
     /// objective's parallelism (Auto starts saturated: until the first
     /// model-based round is measured there is no reason to idle evaluators).
@@ -375,37 +382,66 @@ impl BatchRun {
         let m = q.min(self.budget - self.hist.len());
         let startup = self.hist.len() < self.n0;
         let t_prop = Timer::start();
-        let batch: Vec<Config> = if startup {
+        let mut batch: Vec<Config> = if startup {
             let m0 = m.min(self.n0 - self.hist.len());
             (0..m0).map(|_| self.space.sample(&mut self.rng)).collect()
         } else {
             self.state.propose_batch(m, &mut self.rng)
         };
+        // Longest-job-first: once the cost model is fitted, hand the round
+        // to the evaluator ordered by predicted cost DESCENDING, so under
+        // work stealing the expensive evaluations start first and the cheap
+        // ones backfill idle workers — instead of an expensive config
+        // starting last and stalling the round tail alone. Only the
+        // adaptive policy reorders: its schedule is wall-clock-driven and
+        // was never replay-reproducible, while fixed-q runs promise
+        // bit-identical histories (determinism + checkpoint-resume tests).
+        // A remote pool additionally orders its own shared queue from its
+        // per-session model (covering fixed-q and multi-tenant callers);
+        // both models learn the same latencies, so the two sorts agree —
+        // this one exists for in-process parallel objectives that have no
+        // pool underneath.
+        if self.policy == QPolicy::Auto && self.cost.ready() && batch.len() > 1 {
+            let pred: Vec<f64> =
+                batch.iter().map(|c| self.cost.predict(c).unwrap_or(0.0)).collect();
+            let mut idx: Vec<usize> = (0..batch.len()).collect();
+            idx.sort_by(|&a, &b| pred[b].total_cmp(&pred[a]).then(a.cmp(&b)));
+            batch = idx.into_iter().map(|i| std::mem::take(&mut batch[i])).collect();
+        }
         let propose_secs = t_prop.secs();
         let distinct = batch.iter().collect::<std::collections::HashSet<&Config>>().len();
         let t = Timer::start();
-        let values = obj.eval_batch(&batch);
+        let (values, eval_times) = obj.eval_batch_timed(&batch);
         let eval_secs = t.secs();
-        debug_assert_eq!(values.len(), batch.len(), "eval_batch length mismatch");
+        debug_assert_eq!(values.len(), batch.len(), "eval_batch_timed length mismatch");
+        debug_assert_eq!(eval_times.len(), batch.len(), "eval_batch_timed times mismatch");
         // Per-trial timing is the round's wall-clock amortized over the
-        // batch: total_eval_secs stays the true wall-clock spent.
+        // batch: total_eval_secs stays the true wall-clock spent. The
+        // per-config timings go to the cost model instead, which wants
+        // worker-side service time, not leader wall.
         let per = eval_secs / batch.len().max(1) as f64;
         let stat = RoundStat { q: batch.len(), distinct, propose_secs, eval_secs, startup };
-        for (config, value) in batch.into_iter().zip(values) {
+        for ((config, value), secs) in batch.into_iter().zip(values).zip(eval_times) {
+            self.cost.observe(&config, secs);
             self.hist.push(config.clone(), value, per);
             self.state.observe(config, value);
         }
         // Re-read capacity every round: a remote pool can lose (or
-        // regain) workers mid-search, and both the wave math and the
-        // clamp must track the LIVE count — a stale snapshot would keep
-        // q pinned above what the pool can actually run.
+        // regain) workers mid-search, and the clamp must track the LIVE
+        // count — a stale snapshot would keep q pinned above what the pool
+        // can actually run.
         let cap = obj.parallelism().max(1);
-        self.ctl.observe(&stat, cap);
+        self.ctl.observe(&stat);
         self.rounds.push(stat);
         if self.policy == QPolicy::Auto {
-            self.q = Some(self.ctl.next_q(cap));
+            self.q = Some(self.ctl.next_q(cap, &self.cost));
         }
         Some(stat)
+    }
+
+    /// The run's fitted per-config cost model (scheduling introspection).
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
     }
 
     /// Freeze the run at the current round boundary.
@@ -460,15 +496,27 @@ pub fn eval_batch_parallel<O: Objective + Send>(
     replicas: &mut [O],
     configs: &[Config],
 ) -> Vec<f64> {
+    eval_batch_parallel_timed(replicas, configs).0
+}
+
+/// [`eval_batch_parallel`] plus each config's own evaluation wall-clock,
+/// measured inside its worker thread — true per-config service time, not
+/// the round wall amortized (which would shrink with the thread count and
+/// blind the scheduler's cost model to config-dependent costs).
+pub fn eval_batch_parallel_timed<O: Objective + Send>(
+    replicas: &mut [O],
+    configs: &[Config],
+) -> (Vec<f64>, Vec<f64>) {
     assert!(!replicas.is_empty(), "eval_batch_parallel: no objective replicas");
     if configs.is_empty() {
-        return Vec::new();
+        return (Vec::new(), Vec::new());
     }
     let workers = replicas.len().min(configs.len());
     if workers == 1 {
-        return replicas[0].eval_batch(configs);
+        return replicas[0].eval_batch_timed(configs);
     }
     let mut out = vec![f64::NAN; configs.len()];
+    let mut secs = vec![0.0; configs.len()];
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
         for (w, replica) in replicas.iter_mut().take(workers).enumerate() {
@@ -478,17 +526,22 @@ pub fn eval_batch_parallel<O: Objective + Send>(
                     .enumerate()
                     .skip(w)
                     .step_by(workers)
-                    .map(|(i, c)| (i, replica.eval(c)))
-                    .collect::<Vec<(usize, f64)>>()
+                    .map(|(i, c)| {
+                        let t = std::time::Instant::now();
+                        let v = replica.eval(c);
+                        (i, v, t.elapsed().as_secs_f64())
+                    })
+                    .collect::<Vec<(usize, f64, f64)>>()
             }));
         }
         for handle in handles {
-            for (i, v) in handle.join().expect("evaluation thread panicked") {
+            for (i, v, s) in handle.join().expect("evaluation thread panicked") {
                 out[i] = v;
+                secs[i] = s;
             }
         }
     });
-    out
+    (out, secs)
 }
 
 /// An [`Objective`] whose `eval_batch` fans out over thread-local replicas.
@@ -516,6 +569,10 @@ impl<O: Objective + Send> Objective for ParallelObjective<O> {
 
     fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
         eval_batch_parallel(&mut self.replicas, configs)
+    }
+
+    fn eval_batch_timed(&mut self, configs: &[Config]) -> (Vec<f64>, Vec<f64>) {
+        eval_batch_parallel_timed(&mut self.replicas, configs)
     }
 
     fn parallelism(&self) -> usize {
@@ -567,11 +624,18 @@ impl<O: Objective> Objective for CachedObjective<O> {
     }
 
     fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
+        self.eval_batch_timed(configs).0
+    }
+
+    fn eval_batch_timed(&mut self, configs: &[Config]) -> (Vec<f64>, Vec<f64>) {
         // Evaluate only the unique cache misses through the inner batch path
         // (so a parallel/remote inner objective still sees one batch), then
         // fill every slot — including intra-batch duplicates — from this
-        // round's values.
+        // round's values. Cache hits report a zero cost — truthfully: a hit
+        // IS free, and a cost model that learns hits are free correctly
+        // stops budgeting wall-clock for repeat proposals.
         let mut out = vec![f64::NAN; configs.len()];
+        let mut secs = vec![0.0; configs.len()];
         let mut pending: Vec<usize> = Vec::new();
         let mut miss_cfg: Vec<Config> = Vec::new();
         // Config -> position in miss_cfg, for intra-batch duplicates.
@@ -593,7 +657,7 @@ impl<O: Objective> Objective for CachedObjective<O> {
             }
         }
         if !miss_cfg.is_empty() {
-            let values = self.inner.eval_batch(&miss_cfg);
+            let (values, times) = self.inner.eval_batch_timed(&miss_cfg);
             debug_assert_eq!(values.len(), miss_cfg.len(), "eval_batch length mismatch");
             for (c, &v) in miss_cfg.iter().zip(&values) {
                 // As in eval(): non-finite results are not cached.
@@ -602,10 +666,12 @@ impl<O: Objective> Objective for CachedObjective<O> {
                 }
             }
             for i in pending {
-                out[i] = values[miss_at[&configs[i]]];
+                let at = miss_at[&configs[i]];
+                out[i] = values[at];
+                secs[i] = times[at];
             }
         }
-        out
+        (out, secs)
     }
 
     fn parallelism(&self) -> usize {
@@ -1030,6 +1096,156 @@ mod tests {
             )
             .unwrap();
         assert!(done.done());
+    }
+
+    /// Reports fabricated, strongly config-dependent per-eval timings
+    /// through `eval_batch_timed` WITHOUT sleeping: the cost model sees a
+    /// clean linear cost while the test stays instant and deterministic.
+    /// `invert` flips the cost landscape (expensive <-> cheap), which a
+    /// cost-ORDERED schedule would visibly react to.
+    struct FakeCost {
+        inner: SyntheticObjective,
+        cap: usize,
+        invert: bool,
+    }
+
+    impl FakeCost {
+        fn new(dims: usize, choices: usize, cap: usize) -> FakeCost {
+            FakeCost {
+                inner: SyntheticObjective::new(dims, choices, std::time::Duration::ZERO),
+                cap,
+                invert: false,
+            }
+        }
+
+        /// 5ms base + 2ms per unit of summed choice index — linear in the
+        /// synthetic space's menu values (choice value == index there).
+        fn fake_cost(c: &Config) -> f64 {
+            0.005 + 0.002 * c.iter().sum::<usize>() as f64
+        }
+    }
+
+    impl Objective for FakeCost {
+        fn space(&self) -> &Space {
+            self.inner.space()
+        }
+        fn eval(&mut self, c: &Config) -> f64 {
+            self.inner.eval(c)
+        }
+        fn eval_batch_timed(&mut self, configs: &[Config]) -> (Vec<f64>, Vec<f64>) {
+            let values = configs.iter().map(|c| self.inner.eval(c)).collect();
+            let secs = configs
+                .iter()
+                .map(|c| {
+                    let cost = FakeCost::fake_cost(c);
+                    if self.invert {
+                        0.100 - cost
+                    } else {
+                        cost
+                    }
+                })
+                .collect();
+            (values, secs)
+        }
+        fn parallelism(&self) -> usize {
+            self.cap
+        }
+    }
+
+    #[test]
+    fn auto_rounds_are_longest_job_first_and_q_is_proactive() {
+        // Acceptance (cost-model scheduler): under QPolicy::Auto the round
+        // queue handed to the evaluator is ordered by predicted cost
+        // DESCENDING, and q is sized from the fitted model — fabricated
+        // multi-ms evals against a microsecond proposal path must saturate
+        // the advertised capacity.
+        let p = TpeParams { n_startup: 8, seed: 5, ..Default::default() };
+        let mut searcher = BatchSearcher::tpe_auto(p);
+        let mut obj = FakeCost::new(6, 4, 4);
+        let h = searcher.run(&mut obj, 48);
+        assert_eq!(h.len(), 48);
+
+        // History order IS dispatch order; segment it by round and demand
+        // non-increasing true cost inside every multi-config model round
+        // after the first (the model is ready after 2*k = 6 observations,
+        // i.e. within the 8-trial startup phase). Prediction order equals
+        // true-cost order because the fabricated cost is exactly linear in
+        // the model's features.
+        let mut off = 0;
+        let mut checked = 0;
+        let mut model_rounds = 0;
+        for r in &searcher.rounds {
+            let seg = &h.trials[off..off + r.q];
+            if !r.startup {
+                model_rounds += 1;
+                if model_rounds > 1 && r.q >= 2 {
+                    for w in seg.windows(2) {
+                        let (a, b) = (
+                            FakeCost::fake_cost(&w[0].config),
+                            FakeCost::fake_cost(&w[1].config),
+                        );
+                        assert!(
+                            a >= b,
+                            "round not longest-job-first: {:?} ({a:.3}s) before {:?} ({b:.3}s)",
+                            w[0].config,
+                            w[1].config
+                        );
+                    }
+                    checked += 1;
+                }
+            }
+            off += r.q;
+        }
+        assert!(checked >= 1, "no multi-config model rounds: {:?}", searcher.rounds);
+
+        // Proactive q: the model predicts ~10ms evals, proposals cost
+        // microseconds — model rounds must saturate capacity.
+        let saturated =
+            searcher.rounds.iter().filter(|r| !r.startup && r.q == 4).count();
+        assert!(saturated >= 1, "q never saturated: {:?}", searcher.rounds);
+    }
+
+    #[test]
+    fn cost_model_converges_through_a_batched_run() {
+        // Acceptance (cost-model scheduler): the run's model, fit purely
+        // from eval_batch_timed observations, converges to the synthetic
+        // objective's true linear cost.
+        let p = TpeParams { n_startup: 8, seed: 2, ..Default::default() };
+        let searcher = BatchSearcher::tpe_auto(p);
+        let mut obj = FakeCost::new(6, 4, 4);
+        let mut run = searcher.start(obj.space().clone(), 40, None).unwrap();
+        while !run.done() {
+            run.step(&mut obj);
+        }
+        let model = run.cost_model();
+        assert!(model.ready());
+        for c in [vec![0, 0, 0, 0, 0, 0], vec![3, 3, 3, 3, 3, 3], vec![1, 0, 2, 3, 0, 1]] {
+            let pred = model.predict(&c).unwrap();
+            let truth = FakeCost::fake_cost(&c);
+            assert!(
+                (pred - truth).abs() < 1e-6 + 1e-4 * truth,
+                "cost model diverged: pred {pred} vs truth {truth} for {c:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_q_rounds_are_never_reordered() {
+        // The determinism contract: fixed-q histories are bit-identical
+        // even when the two runs' observed eval COSTS disagree completely
+        // (the second run inverts the cost landscape, which would permute
+        // every round if the LJF reorder applied) — the reorder is
+        // adaptive-policy-only.
+        let p = TpeParams { n_startup: 6, seed: 8, ..Default::default() };
+        let mut plain = FakeCost::new(5, 4, 4);
+        let mut inverted = FakeCost::new(5, 4, 4);
+        inverted.invert = true;
+        let h1 = BatchSearcher::tpe(p, 4).run(&mut plain, 28);
+        let h2 = BatchSearcher::tpe(p, 4).run(&mut inverted, 28);
+        assert_eq!(h1.values(), h2.values());
+        for (a, b) in h1.trials.iter().zip(&h2.trials) {
+            assert_eq!(a.config, b.config);
+        }
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Per-config evaluation-cost model for proactive scheduling.
+//!
+//! The adaptive-q controller of PR 2 was purely reactive: an EWMA of the
+//! previous rounds' wall-clock, blind to WHICH configs were in them. But the
+//! cost of a proxy-QAT evaluation is strongly structured — it grows with the
+//! total bit budget and the total width multiplier of the candidate (bigger
+//! matrices to train, more packing work in the hardware model) — so a tiny
+//! linear model over per-config features predicts the cost of a config
+//! BEFORE it is evaluated. The scheduler uses that two ways:
+//!
+//!   (a) *proactive q*: the eval/proposal cost ratio that sizes a batched
+//!       round is computed from the model's prediction for the region the
+//!       search currently occupies, not from whatever the last round
+//!       happened to cost;
+//!   (b) *longest-job-first ordering*: a round queue sorted by predicted
+//!       cost descending packs well under work stealing — the expensive
+//!       evaluations start first and the cheap ones backfill idle workers,
+//!       instead of an expensive straggler starting last and stalling the
+//!       round tail alone.
+//!
+//! Features are φ(x) = [1, Σ values of group₀, Σ values of group₁, …, d]:
+//! an intercept, the summed *menu values* of each dimension group, and the
+//! dimension count d. The coordinator splits dims into a total-bits group
+//! and a total-width group via its `DimKind` mapping; callers without a
+//! mapping use one group holding every dimension (the total decoded value).
+//! Within a single space d is constant and collinear with the intercept —
+//! it is carried so a model's weights remain meaningful if checkpoint
+//! tooling ever compares fits across (pruned) spaces, and the ridge term
+//! keeps the normal equations well-posed despite the collinearity.
+//!
+//! The fit is online ridge regression on accumulated normal equations
+//! (XᵀX + λI)w = Xᵀy: `observe` is O(k²) and re-solves the k×k system
+//! (k ≤ 4 here) by Gaussian elimination — microseconds against evaluations
+//! that cost milliseconds to minutes.
+
+use super::space::{Config, Space};
+
+/// Ridge strength. Features are O(1)–O(10³) sums and costs are seconds, so
+/// an absolute 1e-6 on the Gram diagonal is far below any informative
+/// curvature while still bounding the collinear intercept/dim-count pair.
+const RIDGE: f64 = 1e-6;
+
+/// Per-observation weight of the feature-mean EWMA: an effective window of
+/// ~10 evaluations (2–3 batched rounds), so `predicted_mean` tracks the
+/// region the search is narrowing into within a couple of rounds.
+const MEAN_ALPHA: f64 = 0.1;
+
+/// Online linear model of per-config evaluation cost (see module docs).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    space: Space,
+    /// Dimension index groups whose summed menu values become one feature
+    /// each (e.g. the bits dims and the width dims).
+    groups: Vec<Vec<usize>>,
+    /// Feature count: 1 (intercept) + groups + 1 (dim count).
+    k: usize,
+    /// Accumulated Gram matrix XᵀX, row-major k×k.
+    xtx: Vec<f64>,
+    /// Accumulated Xᵀy.
+    xty: Vec<f64>,
+    /// RECENCY-WEIGHTED mean of the observed feature vectors (per-obs EWMA,
+    /// [`MEAN_ALPHA`]) — the "region the search currently occupies" that
+    /// the proactive-q prediction is evaluated at. A cumulative mean would
+    /// move by only 1/n per observation and keep quoting the cost of a
+    /// region the search left hundreds of evals ago.
+    mean_x: Vec<f64>,
+    n: usize,
+    /// Solved weights, refreshed on every `observe`.
+    weights: Option<Vec<f64>>,
+}
+
+impl CostModel {
+    /// Model over `space` with explicit feature groups. Group indices must
+    /// be valid dims of `space`; dims outside every group contribute to no
+    /// sum feature (only to the constant dim count).
+    pub fn with_groups(space: &Space, groups: Vec<Vec<usize>>) -> CostModel {
+        let nd = space.num_dims();
+        assert!(
+            groups.iter().flatten().all(|&d| d < nd),
+            "cost-model feature group references a dim outside the space"
+        );
+        let k = 2 + groups.len();
+        CostModel {
+            space: space.clone(),
+            groups,
+            k,
+            xtx: vec![0.0; k * k],
+            xty: vec![0.0; k],
+            mean_x: vec![0.0; k],
+            n: 0,
+            weights: None,
+        }
+    }
+
+    /// Model with a single group holding every dimension — the featureization
+    /// available when no bits/width mapping is known (plain `Space`).
+    pub fn for_space(space: &Space) -> CostModel {
+        let all: Vec<usize> = (0..space.num_dims()).collect();
+        CostModel::with_groups(space, vec![all])
+    }
+
+    /// φ(config): [1, per-group value sums..., dim count].
+    pub fn features(&self, config: &Config) -> Vec<f64> {
+        let values = self.space.values(config);
+        let mut phi = Vec::with_capacity(self.k);
+        phi.push(1.0);
+        for group in &self.groups {
+            phi.push(group.iter().map(|&d| values[d]).sum());
+        }
+        phi.push(self.space.num_dims() as f64);
+        phi
+    }
+
+    /// Fold one observed (config, seconds) pair into the fit. Non-finite or
+    /// negative timings (failed evals, clock skew) are ignored — they carry
+    /// no cost information and would poison the normal equations.
+    pub fn observe(&mut self, config: &Config, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 || !self.space.validate(config) {
+            return;
+        }
+        let phi = self.features(config);
+        for i in 0..self.k {
+            for j in 0..self.k {
+                self.xtx[i * self.k + j] += phi[i] * phi[j];
+            }
+            self.xty[i] += phi[i] * secs;
+        }
+        self.n += 1;
+        // First observation seeds the mean whole; later ones fold in with
+        // the recency weight.
+        let w = if self.n == 1 { 1.0 } else { MEAN_ALPHA };
+        for i in 0..self.k {
+            self.mean_x[i] += w * (phi[i] - self.mean_x[i]);
+        }
+        self.weights = self.solve();
+    }
+
+    /// Observations folded in so far.
+    pub fn n_obs(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the fit has seen enough data to schedule by: a couple of
+    /// observations per weight. Before this, callers should fall back to
+    /// their no-model behavior (saturate q, FIFO queue order).
+    pub fn ready(&self) -> bool {
+        self.n >= 2 * self.k
+    }
+
+    /// Predicted cost of `config`, clamped non-negative (a cost model that
+    /// extrapolates below zero must not order queues or size rounds with a
+    /// negative duration). `None` until [`ready`](Self::ready).
+    pub fn predict(&self, config: &Config) -> Option<f64> {
+        if !self.ready() {
+            return None;
+        }
+        let w = self.weights.as_ref()?;
+        let phi = self.features(config);
+        Some(phi.iter().zip(w).map(|(x, w)| x * w).sum::<f64>().max(0.0))
+    }
+
+    /// Prediction at the recency-weighted mean feature vector — the
+    /// proactive per-eval cost of "the region the search is currently
+    /// proposing in", tracking drift within a couple of rounds as the
+    /// search narrows (see [`MEAN_ALPHA`]).
+    pub fn predicted_mean(&self) -> Option<f64> {
+        if !self.ready() {
+            return None;
+        }
+        let w = self.weights.as_ref()?;
+        Some(self.mean_x.iter().zip(w).map(|(x, w)| x * w).sum::<f64>().max(0.0))
+    }
+
+    /// Solve (XᵀX + λI)w = Xᵀy by Gaussian elimination with partial
+    /// pivoting. k ≤ ~4, so this is a few dozen flops.
+    fn solve(&self) -> Option<Vec<f64>> {
+        let k = self.k;
+        let mut a = self.xtx.clone();
+        for i in 0..k {
+            a[i * k + i] += RIDGE;
+        }
+        let mut b = self.xty.clone();
+        for col in 0..k {
+            let pivot = (col..k)
+                .max_by(|&p, &q| {
+                    a[p * k + col].abs().total_cmp(&a[q * k + col].abs())
+                })
+                .expect("non-empty pivot range");
+            if a[pivot * k + col].abs() < 1e-300 {
+                return None; // numerically singular despite the ridge
+            }
+            if pivot != col {
+                for j in 0..k {
+                    a.swap(col * k + j, pivot * k + j);
+                }
+                b.swap(col, pivot);
+            }
+            let d = a[col * k + col];
+            for row in (col + 1)..k {
+                let f = a[row * k + col] / d;
+                if f == 0.0 {
+                    continue;
+                }
+                for j in col..k {
+                    a[row * k + j] -= f * a[col * k + j];
+                }
+                b[row] -= f * b[col];
+            }
+        }
+        let mut w = vec![0.0; k];
+        for row in (0..k).rev() {
+            let mut acc = b[row];
+            for j in (row + 1)..k {
+                acc -= a[row * k + j] * w[j];
+            }
+            w[row] = acc / a[row * k + row];
+        }
+        if w.iter().all(|x| x.is_finite()) {
+            Some(w)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::space::Dim;
+    use crate::util::rng::Rng;
+
+    fn space(dims: usize) -> Space {
+        Space::new(
+            (0..dims)
+                .map(|d| Dim::new(format!("d{d}"), vec![2.0, 3.0, 4.0, 6.0, 8.0]))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn converges_exactly_on_a_linear_cost() {
+        // True cost: 2ms + 0.5ms per unit of total value. The fit must
+        // recover it to numerical precision (the data IS linear).
+        let s = space(6);
+        let mut model = CostModel::for_space(&s);
+        let mut rng = Rng::new(3);
+        let cost = |c: &Config| 0.002 + 0.0005 * s.values(c).iter().sum::<f64>();
+        for _ in 0..40 {
+            let c = s.sample(&mut rng);
+            model.observe(&c, cost(&c));
+        }
+        assert!(model.ready());
+        for _ in 0..20 {
+            let c = s.sample(&mut rng);
+            let pred = model.predict(&c).unwrap();
+            let truth = cost(&c);
+            assert!(
+                (pred - truth).abs() < 1e-6 * truth.max(1e-9) + 1e-9,
+                "pred {pred} vs truth {truth}"
+            );
+        }
+        // predicted_mean tracks the mean of observed costs.
+        let pm = model.predicted_mean().unwrap();
+        assert!(pm > 0.002 && pm < 0.002 + 0.0005 * 8.0 * 6.0, "mean pred {pm}");
+    }
+
+    #[test]
+    fn grouped_features_separate_bits_from_width_costs() {
+        // Dims 0..3 are "bits" (cheap), 3..6 are "width" (expensive):
+        // cost = 1e-4·Σbits + 1e-2·Σwidth. A grouped model recovers both
+        // slopes; predictions order configs by true cost.
+        let s = space(6);
+        let groups = vec![vec![0, 1, 2], vec![3, 4, 5]];
+        let mut model = CostModel::with_groups(&s, groups);
+        let mut rng = Rng::new(9);
+        let cost = |c: &Config| {
+            let v = s.values(c);
+            1e-4 * (v[0] + v[1] + v[2]) + 1e-2 * (v[3] + v[4] + v[5])
+        };
+        for _ in 0..60 {
+            let c = s.sample(&mut rng);
+            model.observe(&c, cost(&c));
+        }
+        let cheap: Config = vec![4, 4, 4, 0, 0, 0]; // max bits, min width
+        let dear: Config = vec![0, 0, 0, 4, 4, 4]; // min bits, max width
+        let (pc, pd) =
+            (model.predict(&cheap).unwrap(), model.predict(&dear).unwrap());
+        assert!(pd > pc, "grouped model lost the width slope: {pc} vs {pd}");
+        assert!((pc - cost(&cheap)).abs() < 1e-6, "cheap pred {pc}");
+        assert!((pd - cost(&dear)).abs() < 1e-6, "dear pred {pd}");
+    }
+
+    #[test]
+    fn not_ready_until_enough_observations_and_ignores_garbage() {
+        let s = space(3);
+        let mut model = CostModel::for_space(&s);
+        assert_eq!(model.predict(&vec![0, 0, 0]), None);
+        // Non-finite / negative timings and invalid configs are dropped.
+        model.observe(&vec![0, 0, 0], f64::NAN);
+        model.observe(&vec![0, 0, 0], -1.0);
+        model.observe(&vec![9, 9, 9], 0.5);
+        assert_eq!(model.n_obs(), 0);
+        let mut rng = Rng::new(1);
+        for i in 0..(2 * 3) {
+            assert!(!model.ready(), "ready after only {i} observations");
+            let c = s.sample(&mut rng);
+            model.observe(&c, 0.001);
+        }
+        assert!(model.ready());
+        // Constant cost fits as a pure intercept: every prediction ~0.001.
+        let p = model.predict(&vec![2, 2, 2]).unwrap();
+        assert!((p - 0.001).abs() < 1e-6, "constant-cost prediction {p}");
+    }
+}

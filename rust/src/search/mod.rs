@@ -10,11 +10,13 @@ pub mod tpe;
 pub mod kmeans_tpe;
 pub mod batch;
 pub mod checkpoint;
+pub mod costmodel;
 pub mod synthetic;
 
 pub use batch::{eval_batch_parallel, BatchAlgo, BatchRun, BatchSearcher, CachedObjective,
                 ParallelObjective, QPolicy, RoundStat};
 pub use checkpoint::{RngState, SearchCheckpoint};
+pub use costmodel::CostModel;
 pub use synthetic::SyntheticObjective;
 pub use history::{History, Trial};
 pub use kmeans_tpe::{KmeansTpe, KmeansTpeParams, KmeansTpeState};
@@ -40,6 +42,28 @@ pub trait Objective {
     /// across its async worker pool.
     fn eval_batch(&mut self, configs: &[Config]) -> Vec<f64> {
         configs.iter().map(|c| self.eval(c)).collect()
+    }
+
+    /// [`eval_batch`](Self::eval_batch), additionally reporting each
+    /// config's own evaluation wall-clock — the observations the
+    /// scheduler's per-config cost model ([`costmodel::CostModel`]) fits.
+    /// The default times each sequential `eval` individually, which is
+    /// exact for any objective that keeps the default `eval_batch`.
+    ///
+    /// IMPORTANT: an objective that overrides `eval_batch` must override
+    /// this too (returning the same values), or callers on the timed path
+    /// silently lose the override's parallelism/caching — see
+    /// `ParallelObjective`, `CachedObjective`, and the coordinator's
+    /// `RemoteObjective` for the three shipped pairings.
+    fn eval_batch_timed(&mut self, configs: &[Config]) -> (Vec<f64>, Vec<f64>) {
+        let mut values = Vec::with_capacity(configs.len());
+        let mut secs = Vec::with_capacity(configs.len());
+        for c in configs {
+            let t = std::time::Instant::now();
+            values.push(self.eval(c));
+            secs.push(t.elapsed().as_secs_f64());
+        }
+        (values, secs)
     }
 
     /// How many evaluations this objective can usefully run concurrently —

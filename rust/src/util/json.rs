@@ -96,6 +96,16 @@ impl Json {
         }
     }
 
+    /// Borrow the key->value map of an object (None for non-objects) —
+    /// lets protocol code enumerate a frame's keys without re-matching the
+    /// enum at every call site.
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
     /// `obj.req("key")?` — required-field access with a useful error.
     pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
         self.get(key)

@@ -10,9 +10,10 @@ use std::net::TcpListener;
 use std::sync::mpsc;
 use std::time::Duration;
 
-use sammpq::coordinator::{serve_on_listener, PoolCfg, RemoteObjective, SessionSpec,
-                          SyntheticBackend};
-use sammpq::search::{BatchSearcher, KmeansTpeParams, Objective, Searcher,
+use sammpq::coordinator::service::WorkerHandle;
+use sammpq::coordinator::{serve_on_listener, serve_sessions_on, PoolCfg, RemoteObjective,
+                          ServeOpts, SessionSpec, SyntheticBackend, SyntheticFactory};
+use sammpq::search::{BatchSearcher, KmeansTpeParams, Objective, Searcher, Space,
                      SyntheticObjective};
 
 /// A pool config whose straggler deadline cannot fire on instant
@@ -161,6 +162,97 @@ fn killed_distributed_search_resumes_to_the_uninterrupted_history() {
         for (a, b) in res.trials.iter().zip(&full.trials) {
             assert_eq!(a.config, b.config);
         }
+    });
+}
+
+/// A multi-tenant farm worker: the `serve_sessions` runtime (concurrent
+/// connections, per-session backends) that `sammpq worker` runs.
+fn spawn_farm_worker() -> (String, std::thread::JoinHandle<usize>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let handle = std::thread::spawn(move || {
+        let factory = SyntheticFactory { sleep: Duration::ZERO };
+        serve_sessions_on(listener, &factory, ServeOpts::default()).expect("farm worker")
+    });
+    (addr, handle)
+}
+
+/// One tenant's distributed search over the shared farm: own session, own
+/// space, fixed-q batched k-means TPE (deterministic per seed).
+fn run_tenant(
+    space: Space,
+    params: KmeansTpeParams,
+    q: usize,
+    budget: usize,
+    addrs: Vec<String>,
+) -> sammpq::search::History {
+    let mut remote = RemoteObjective::connect_session(
+        SessionSpec::synthetic(space),
+        &addrs,
+        no_steal_cfg(),
+    )
+    .expect("tenant connect");
+    let h = BatchSearcher::kmeans_tpe(params, q).run(&mut remote, budget);
+    // Leave politely: bye this session only — the farm keeps serving the
+    // other tenant.
+    remote.release().expect("release session");
+    h
+}
+
+#[test]
+fn concurrent_leaders_share_one_farm_bit_identically() {
+    with_timeout(240, || {
+        // Acceptance (multi-tenancy): two leaders searching CONCURRENTLY
+        // against one shared two-worker farm — different spaces, seeds,
+        // batch sizes, budgets — each produce a history bit-identical to
+        // their isolated single-tenant (in-process) run. The synthetic
+        // value is a pure function of the config and fixed-q proposals are
+        // deterministic per seed, so any cross-tenant state leakage on the
+        // worker (a clobbered space, a misrouted eval) shows up as a
+        // diverged config or value.
+        let (a1, h1) = spawn_farm_worker();
+        let (a2, h2) = spawn_farm_worker();
+        let addrs = vec![a1.clone(), a2.clone()];
+
+        let space_a = SyntheticObjective::new(5, 3, Duration::ZERO).space().clone();
+        let space_b = SyntheticObjective::new(6, 4, Duration::ZERO).space().clone();
+        let params_a = KmeansTpeParams { n_startup: 7, seed: 7, ..Default::default() };
+        let params_b = KmeansTpeParams { n_startup: 8, seed: 9, ..Default::default() };
+        let (budget_a, budget_b) = (21, 24);
+
+        // Isolated references, in-process.
+        let run_local = |space: &Space, p: KmeansTpeParams, q: usize, budget: usize| {
+            let mut obj = SyntheticObjective::with_space(space.clone(), Duration::ZERO);
+            BatchSearcher::kmeans_tpe(p, q).run(&mut obj, budget)
+        };
+        let ref_a = run_local(&space_a, params_a, 3, budget_a);
+        let ref_b = run_local(&space_b, params_b, 4, budget_b);
+
+        // Both tenants live on the farm at once.
+        let (sa, aa) = (space_a.clone(), addrs.clone());
+        let ta = std::thread::spawn(move || run_tenant(sa, params_a, 3, budget_a, aa));
+        let (sb, ab) = (space_b.clone(), addrs.clone());
+        let tb = std::thread::spawn(move || run_tenant(sb, params_b, 4, budget_b, ab));
+        let got_a = ta.join().expect("tenant A");
+        let got_b = tb.join().expect("tenant B");
+
+        for (got, want, label) in [(&got_a, &ref_a, "A"), (&got_b, &ref_b, "B")] {
+            assert_eq!(got.len(), want.len(), "tenant {label}: budget");
+            assert_eq!(got.values(), want.values(), "tenant {label}: values diverged");
+            for (i, (x, y)) in got.trials.iter().zip(&want.trials).enumerate() {
+                assert_eq!(x.config, y.config, "tenant {label}: trial {i} config");
+            }
+        }
+
+        // Administrative farm teardown; total farm-wide evals must equal
+        // the two budgets exactly (no stealing -> no duplicates, and the
+        // per-tenant sessions never cross-served).
+        for addr in [&a1, &a2] {
+            let mut admin = WorkerHandle::connect(addr).expect("admin connect");
+            admin.shutdown().expect("farm shutdown");
+        }
+        let served = h1.join().unwrap() + h2.join().unwrap();
+        assert_eq!(served, budget_a + budget_b);
     });
 }
 
