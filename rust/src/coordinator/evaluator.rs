@@ -306,6 +306,17 @@ impl<'a> DnnObjective<'a> {
         }
     }
 
+    /// Adopt a re-pruned `SpaceBuild` at a round boundary
+    /// (`--reprune-every`). The eval cache is keyed by choice INDICES,
+    /// which decode to different (bits, widths) under the new menus — a
+    /// stale entry would serve the wrong config's metrics — so it drops
+    /// with the old space. The record log stays: the leader projects it
+    /// alongside the search history.
+    pub fn adopt_build(&mut self, build: SpaceBuild) {
+        self.build = build;
+        self.cache.clear();
+    }
+
     /// Hardware metrics only (no training) — used by one-shot baselines too.
     pub fn hw_metrics(&self, bits: &[f32], widths: &[f32]) -> (f64, f64, f64) {
         let net = self.session.meta.net_shape(bits, widths);

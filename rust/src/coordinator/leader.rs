@@ -29,8 +29,9 @@ use crate::coordinator::evaluator::{build_space, DnnObjective, EvalRecord, Objec
 use crate::coordinator::service::{PoolCfg, RemoteObjective, SessionSpec};
 use crate::hessian::pruner::{prune_space, PrunedSpace};
 use crate::hw::HwConfig;
-use crate::search::{BatchAlgo, BatchSearcher, History, KmeansTpe, KmeansTpeParams, Objective,
-                    QPolicy, SearchCheckpoint, Searcher, Tpe, TpeParams};
+use crate::search::{BatchAlgo, BatchSearcher, Config, History, KmeansTpe, KmeansTpeParams,
+                    Objective, ProjectPolicy, ProjectionReport, QPolicy, SearchCheckpoint,
+                    Searcher, Space, SpaceProjection, Tpe, TpeParams};
 use crate::train::session::{ModelSession, ParamSnapshot};
 use crate::util::json::{obj, Json};
 use crate::util::Timer;
@@ -151,6 +152,19 @@ pub struct SessionOpts {
     /// Warm-start the search from this checkpoint — a file, or a rotation
     /// directory (the manifest picks the newest valid one automatically).
     pub resume: Option<PathBuf>,
+    /// `--resume-project nearest|strict`: when the resumed checkpoint's
+    /// space fingerprint differs from this run's (the Hessian pruning
+    /// produced different menus), project the history onto the new space
+    /// instead of refusing — `nearest` snaps pruned-away choices to the
+    /// closest surviving value, `strict` drops those trials. Without this,
+    /// a fingerprint mismatch is a hard error (never a silent resume).
+    pub resume_project: Option<ProjectPolicy>,
+    /// `--reprune-every R`: every R search rounds, tighten the session's
+    /// own menus — re-cluster the stored layer sensitivities with a larger
+    /// k (`hessian::reprune`), project the in-flight history onto the new
+    /// space (policy: [`resume_project`](Self::resume_project), default
+    /// `nearest`), and re-sync remote farms over the v3 handshake.
+    pub reprune_every: Option<usize>,
     /// Leave the worker processes serving after the search (`bye` the
     /// session instead of shutting the farm down) — the multi-tenant
     /// deployment mode, where one farm backs many leaders.
@@ -162,11 +176,23 @@ pub struct SessionOpts {
 /// session checkpoints regardless of backend.
 pub trait RecordedObjective: Objective {
     fn records(&self) -> &[EvalRecord];
+
+    /// Adopt a re-pruned `SpaceBuild` at a round boundary
+    /// (`--reprune-every`): rebuild whatever this objective derived from
+    /// the old build. The in-process objective swaps its build and drops
+    /// its index-keyed cache; the remote objective re-syncs the whole
+    /// worker farm over the v3 handshake.
+    fn resync(&mut self, build: &SpaceBuild) -> Result<()>;
 }
 
 impl RecordedObjective for DnnObjective<'_> {
     fn records(&self) -> &[EvalRecord] {
         &self.log
+    }
+
+    fn resync(&mut self, build: &SpaceBuild) -> Result<()> {
+        self.adopt_build(build.clone());
+        Ok(())
     }
 }
 
@@ -174,9 +200,17 @@ impl RecordedObjective for RemoteObjective {
     fn records(&self) -> &[EvalRecord] {
         &self.log
     }
+
+    fn resync(&mut self, build: &SpaceBuild) -> Result<()> {
+        self.resync_build(build)
+    }
 }
 
-pub const CHECKPOINT_VERSION: u64 = 1;
+/// Version 2: the search checkpoint carries the full SPACE it was taken on
+/// (menus + a verified fingerprint), replacing the dim-count-only `dims`
+/// field — the cross-space resume guard and the projection path both need
+/// the menus. v1 files are rejected with a version error, not misread.
+pub const CHECKPOINT_VERSION: u64 = 2;
 
 /// A search session frozen at a round boundary: the searcher state (history
 /// + surrogate cursors + RNG) plus the full record log and enough leader
@@ -267,6 +301,64 @@ impl SessionCheckpoint {
     }
 }
 
+/// Filter + remap a history-aligned record log through a projection's
+/// per-trial map: dropped trials lose their record, surviving records adopt
+/// the projected config (indices into the NEW menus), keeping the
+/// records-match-history invariant every checkpoint enforces.
+fn project_records(records: Vec<EvalRecord>, map: &[Option<Config>]) -> Vec<EvalRecord> {
+    debug_assert_eq!(records.len(), map.len(), "records/map skew");
+    records
+        .into_iter()
+        .zip(map)
+        .filter_map(|(mut r, m)| {
+            m.as_ref().map(|c| {
+                r.config = c.clone();
+                r
+            })
+        })
+        .collect()
+}
+
+/// Cross-space resume gate, extracted from [`Leader`]'s search driver so it
+/// is testable without PJRT artifacts. Compares the checkpoint's space
+/// fingerprint against the space the objective now searches:
+///
+/// * equal — `Ok(None)`, resume proceeds verbatim;
+/// * different, no policy — a hard structured error naming both
+///   fingerprints and the `--resume-project` escape hatch (NEVER a silent
+///   resume: the stored choice indices mean different values under the new
+///   menus);
+/// * different, policy given — the checkpoint is projected in place
+///   (history, annealing cursor, centroids, AND the record log, kept
+///   aligned) and the report is returned for logging.
+pub fn project_session_checkpoint(
+    ck: &mut SessionCheckpoint,
+    space: &Space,
+    policy: Option<ProjectPolicy>,
+) -> Result<Option<ProjectionReport>> {
+    let (ck_fp, fp) = (ck.search.space.fingerprint(), space.fingerprint());
+    if ck_fp == fp {
+        return Ok(None);
+    }
+    let Some(policy) = policy else {
+        anyhow::bail!(
+            "checkpoint was taken on a DIFFERENT search space (fingerprint {ck_fp}, {} \
+             dims) than this run searches (fingerprint {fp}, {} dims): the pruned menus \
+             differ, and resuming would reinterpret every stored choice index against \
+             the wrong values. Pass --resume-project nearest (snap pruned choices to \
+             the closest surviving value) or --resume-project strict (drop trials whose \
+             choices were pruned) to project the history onto the new space",
+            ck.search.space.num_dims(),
+            space.num_dims()
+        );
+    };
+    let proj = SpaceProjection::between(&ck.search.space, space);
+    let out = proj.project_checkpoint(&ck.search, space.clone(), policy);
+    ck.records = project_records(std::mem::take(&mut ck.records), &out.map);
+    ck.search = out.search;
+    Ok(Some(out.report))
+}
+
 /// File name of a rotation directory's manifest.
 pub const MANIFEST_NAME: &str = "manifest.json";
 
@@ -280,29 +372,59 @@ pub const MANIFEST_NAME: &str = "manifest.json";
 pub struct CheckpointStore {
     dir: PathBuf,
     keep: usize,
+    /// Trial count of this store's most recent save. Truncating
+    /// numerically-later rotated files (the abandoned timeline left when a
+    /// strict re-prune projection shrank the history) triggers only on an
+    /// IN-SESSION backward move — never against files a PREVIOUS run left
+    /// in a reused directory, where "lower count" just means the operator
+    /// forgot `--resume` and the old checkpoints are the recoverable data.
+    last_count: std::cell::Cell<Option<usize>>,
 }
 
 impl CheckpointStore {
     /// Store over `dir`, keeping the `keep.max(1)` newest checkpoints.
     pub fn new(dir: PathBuf, keep: usize) -> CheckpointStore {
-        CheckpointStore { dir, keep: keep.max(1) }
+        CheckpointStore { dir, keep: keep.max(1), last_count: std::cell::Cell::new(None) }
     }
 
-    /// Zero-padded so lexicographic order == trial order.
+    /// Seed the in-session shrink detector with the trial count of the
+    /// checkpoint this run RESUMED from (PRE-projection). A projected
+    /// strict resume legitimately saves below the directory's on-disk
+    /// maximum; without the seed those pre-projection files would
+    /// permanently outrank the live timeline — pinning the GC keep-window
+    /// and winning a manifest-less newest-first resume scan.
+    pub fn seed_resume_count(&self, trials: usize) {
+        self.last_count.set(Some(trials));
+    }
+
+    /// Zero-padded for tidy listings; ORDER comes from parsing the count
+    /// back out ([`trial_count`](Self::trial_count)), never from the string
+    /// — an 8-digit pad breaks lexicographic order at 10^8 trials
+    /// (`ckpt-100000000` sorts before `ckpt-99999999`), which would make
+    /// rotation GC the newest file and resume pick a stale one.
     fn file_name(trials: usize) -> String {
         format!("ckpt-{trials:08}.json")
     }
 
-    /// Rotated checkpoint file names in `dir`, ascending by trial count.
+    /// Parse the trial count out of a rotated checkpoint file name.
+    fn trial_count(name: &str) -> Option<usize> {
+        name.strip_prefix("ckpt-")?.strip_suffix(".json")?.parse().ok()
+    }
+
+    /// Rotated checkpoint file names in `dir`, ascending by NUMERIC trial
+    /// count (names that don't parse are not rotated checkpoints and are
+    /// ignored). Ties — impossible from one store, conceivable from manual
+    /// copies like `ckpt-9.json` beside `ckpt-00000009.json` — break
+    /// lexicographically for determinism.
     fn rotated(dir: &Path) -> Result<Vec<String>> {
-        let mut names: Vec<String> = std::fs::read_dir(dir)
+        let mut names: Vec<(usize, String)> = std::fs::read_dir(dir)
             .with_context(|| format!("list checkpoint dir {}", dir.display()))?
             .filter_map(|e| e.ok())
             .map(|e| e.file_name().to_string_lossy().into_owned())
-            .filter(|n| n.starts_with("ckpt-") && n.ends_with(".json"))
+            .filter_map(|n| CheckpointStore::trial_count(&n).map(|c| (c, n)))
             .collect();
         names.sort();
-        Ok(names)
+        Ok(names.into_iter().map(|(_, n)| n).collect())
     }
 
     /// Write `ck` as a fresh rotated file, GC rotated files beyond `keep`
@@ -316,9 +438,27 @@ impl CheckpointStore {
     /// that. Returns the checkpoint's path.
     pub fn save(&self, ck: &SessionCheckpoint) -> Result<PathBuf> {
         std::fs::create_dir_all(&self.dir)?;
-        let name = CheckpointStore::file_name(ck.search.history.len());
+        let count = ck.search.history.len();
+        let name = CheckpointStore::file_name(count);
         let path = self.dir.join(&name);
         ck.save(&path)?;
+        // An IN-SESSION save whose trial count moved BACKWARD (a strict
+        // re-prune projection dropped trials) supersedes every
+        // numerically-later rotated file: those describe the abandoned
+        // timeline on the old space, and leaving them would make both GC
+        // and a manifest-less resume treat a stale pre-re-prune checkpoint
+        // as "newest". Gated on this store's own previous save so a fresh
+        // run pointed at a reused directory never bulldozes an earlier
+        // session's checkpoints (see `last_count`).
+        let shrunk = self.last_count.get().is_some_and(|prev| count < prev);
+        self.last_count.set(Some(count));
+        if shrunk {
+            for stale in CheckpointStore::rotated(&self.dir)? {
+                if CheckpointStore::trial_count(&stale).is_some_and(|c| c > count) {
+                    let _ = std::fs::remove_file(self.dir.join(&stale));
+                }
+            }
+        }
         let rotated = CheckpointStore::rotated(&self.dir)?;
         if rotated.len() > self.keep {
             for stale in &rotated[..rotated.len() - self.keep] {
@@ -465,6 +605,11 @@ pub struct SearchOutcome {
     pub build: SpaceBuild,
     pub history: History,
     pub records: Vec<EvalRecord>,
+    /// The pruning behind `build` when `--reprune-every` tightened it
+    /// mid-session (`None`: the stage-2 pruning still describes `build`).
+    /// Finalize prefers this, so the report's per-layer menu table always
+    /// matches the space the winner was actually searched on.
+    pub repruned: Option<PrunedSpace>,
     pub search_secs: f64,
 }
 
@@ -557,7 +702,7 @@ impl<'a> Leader<'a> {
         let sess = self.session;
         let build = build_space(&sess.meta, pruned);
         let t_search = Timer::start();
-        let (history, records) = match &opts.backend {
+        let (history, records, repruned_build) = match &opts.backend {
             EvalBackend::InProcess => {
                 let mut objective = DnnObjective::new(
                     sess,
@@ -566,7 +711,7 @@ impl<'a> Leader<'a> {
                     self.hw,
                     self.cfg.objective,
                 );
-                self.drive(algo, &mut objective, opts)?
+                self.drive(algo, &mut objective, opts, pruned)?
             }
             EvalBackend::Remote { addrs, pool } => {
                 let spec = SessionSpec {
@@ -576,7 +721,7 @@ impl<'a> Leader<'a> {
                     digest: pre.snapshot.digest(),
                 };
                 let mut objective = RemoteObjective::connect_session(spec, addrs, *pool)?;
-                let out = self.drive(algo, &mut objective, opts);
+                let out = self.drive(algo, &mut objective, opts, pruned);
                 // Best-effort either way (workers outlive a failed search
                 // for the next session): on a shared farm, `bye` only this
                 // session and leave the processes serving other tenants;
@@ -589,26 +734,41 @@ impl<'a> Leader<'a> {
                 out?
             }
         };
-        Ok(SearchOutcome { build, history, records, search_secs: t_search.secs() })
+        // `--reprune-every` may have tightened the menus mid-session; the
+        // report must decode the winner against the build it was ACTUALLY
+        // evaluated under — and describe it with the pruning that produced
+        // it — not the ones the search started from.
+        let (build, repruned) = match repruned_build {
+            Some((b, p)) => (b, Some(p)),
+            None => (build, None),
+        };
+        Ok(SearchOutcome { build, history, records, repruned, search_secs: t_search.secs() })
     }
 
-    /// Search-loop driver shared by both backends. Without checkpointing
-    /// this is a plain `Searcher::run`; with `--checkpoint`/`--resume` the
-    /// TPE-family searcher runs STEPWISE, so the session (history, records,
-    /// surrogate cursors, RNG) is frozen at every round boundary and a
-    /// killed search resumes instead of restarting cold.
+    /// Search-loop driver shared by both backends. Without checkpointing or
+    /// re-pruning this is a plain `Searcher::run`; with
+    /// `--checkpoint`/`--resume`/`--reprune-every` the TPE-family searcher
+    /// runs STEPWISE, so the session (history, records, surrogate cursors,
+    /// RNG) is frozen at every round boundary — a killed search resumes
+    /// instead of restarting cold, a resumed checkpoint whose space changed
+    /// is PROJECTED (never silently reinterpreted), and a round boundary
+    /// can tighten the menus and continue through the same projection path.
+    /// Returns the final `(SpaceBuild, PrunedSpace)` when re-pruning
+    /// changed the space.
     fn drive<O: RecordedObjective>(
         &self,
         algo: Algo,
         objective: &mut O,
         opts: &SessionOpts,
-    ) -> Result<(History, Vec<EvalRecord>)> {
+        pruned: Option<&PrunedSpace>,
+    ) -> Result<(History, Vec<EvalRecord>, Option<(SpaceBuild, PrunedSpace)>)> {
         let budget = self.cfg.n_evals;
-        if opts.checkpoint.is_none() && opts.resume.is_none() {
+        if opts.checkpoint.is_none() && opts.resume.is_none() && opts.reprune_every.is_none()
+        {
             let mut searcher = self.make_searcher(algo);
             let history = searcher.run(objective, budget);
             let records = objective.records().to_vec();
-            return Ok((history, records));
+            return Ok((history, records, None));
         }
 
         let batch_algo = match algo {
@@ -623,15 +783,21 @@ impl<'a> Leader<'a> {
                 ..Default::default()
             }),
             other => anyhow::bail!(
-                "--checkpoint/--resume need a TPE-family --algo (kmeans-tpe or tpe), \
-                 got '{}'",
+                "--checkpoint/--resume/--reprune-every need a TPE-family --algo \
+                 (kmeans-tpe or tpe), got '{}'",
                 other.name()
             ),
         };
         let searcher = BatchSearcher::new(batch_algo, self.cfg.batch_q);
-        let resumed = opts.resume.as_deref().map(SessionCheckpoint::load_auto).transpose()?;
+        let mut resumed =
+            opts.resume.as_deref().map(SessionCheckpoint::load_auto).transpose()?;
+        // PRE-projection trial count of the resumed checkpoint — seeds the
+        // rotation store's shrink detector, so a projected (strict) resume
+        // that saves below the directory's on-disk maximum truncates the
+        // superseded timeline instead of being outranked by it.
+        let resumed_pre_trials = resumed.as_ref().map(|c| c.search.history.len());
         let mut prior: Vec<EvalRecord> = Vec::new();
-        if let Some(ck) = &resumed {
+        if let Some(ck) = &mut resumed {
             anyhow::ensure!(
                 ck.algo == algo.name(),
                 "checkpoint holds a '{}' search, this run is '{}'",
@@ -645,6 +811,15 @@ impl<'a> Leader<'a> {
                 ck.seed,
                 self.cfg.seed
             );
+            // Cross-space gate: this run's pruning may legitimately differ
+            // from the checkpoint's (fresh sensitivity estimates). With a
+            // projection policy the history is remapped and logged; without
+            // one a fingerprint mismatch is a hard error.
+            if let Some(report) =
+                project_session_checkpoint(ck, objective.space(), opts.resume_project)?
+            {
+                eprintln!("{}", report.render());
+            }
             prior = ck.records.clone();
         }
         let mut run = searcher.start(
@@ -653,14 +828,38 @@ impl<'a> Leader<'a> {
             resumed.as_ref().map(|c| &c.search),
         )?;
         let store = match (&opts.checkpoint, opts.checkpoint_keep) {
-            (Some(dir), Some(keep)) => Some(CheckpointStore::new(dir.clone(), keep)),
+            (Some(dir), Some(keep)) => {
+                let store = CheckpointStore::new(dir.clone(), keep);
+                // Seed the shrink detector ONLY when the resume source and
+                // the checkpoint directory are the same timeline (the dir
+                // itself, or a file inside it): a resume from elsewhere
+                // says nothing about THIS directory's files, and seeding
+                // anyway would bulldoze an unrelated session's later
+                // checkpoints in a reused dir.
+                let same_timeline = opts.resume.as_deref().is_some_and(|r| {
+                    r == dir.as_path() || r.parent() == Some(dir.as_path())
+                });
+                if let (true, Some(trials)) = (same_timeline, resumed_pre_trials) {
+                    store.seed_resume_count(trials);
+                }
+                Some(store)
+            }
             _ => None,
         };
+        // Re-prune state: the current pruning (k grows per re-prune), how
+        // many records `prior` has already absorbed, and the latest build
+        // paired with the pruning that produced it.
+        let mut cur_pruned = pruned.cloned();
+        let mut taken = 0usize;
+        let mut rebuilt: Option<(SpaceBuild, PrunedSpace)> = None;
+        let mut reprunes = 0usize;
+        let mut rounds_since = 0usize;
         while !run.done() {
             run.step(objective);
+            rounds_since += 1;
             if let Some(path) = &opts.checkpoint {
                 let mut records = prior.clone();
-                records.extend(objective.records().iter().cloned());
+                records.extend(objective.records()[taken..].iter().cloned());
                 let ck = SessionCheckpoint {
                     algo: algo.name().to_string(),
                     seed: self.cfg.seed,
@@ -675,11 +874,69 @@ impl<'a> Leader<'a> {
                     None => ck.save(path)?,
                 }
             }
+            let due = opts.reprune_every.is_some_and(|every| rounds_since >= every.max(1));
+            if !due || run.done() {
+                continue;
+            }
+            rounds_since = 0;
+            let Some(p) = &cur_pruned else {
+                // --no-prune ablations have no sensitivities to re-cluster.
+                continue;
+            };
+            reprunes += 1;
+            let k = self.cfg.sensitivity_clusters + reprunes;
+            let next = p.reprune(k);
+            let build = build_space(&self.session.meta, Some(&next));
+            if build.space.fingerprint() == objective.space().fingerprint() {
+                eprintln!("[reprune] k={k}: menus unchanged; continuing on the same space");
+                cur_pruned = Some(next);
+                continue;
+            }
+            // Re-sync -> freeze -> project -> restart from the projection.
+            // Re-sync goes FIRST and is non-fatal: a refused or blipped
+            // farm re-sync (open_session rolls the new session back, the
+            // current one keeps serving) downgrades to "skip this
+            // re-prune and continue on the current space" — a transient
+            // farm hiccup must not kill an hours-long search, and nothing
+            // of the run's state has been touched yet at that point.
+            eprintln!("[reprune] k={k}: re-pruned menus after round boundary");
+            if let Err(e) = objective.resync(&build) {
+                eprintln!(
+                    "[reprune] k={k}: backend re-sync failed ({e:#}); continuing on \
+                     the current space"
+                );
+                continue;
+            }
+            // The freeze is a full SessionCheckpoint so the SAME gate that
+            // handles --resume projects history and records in lockstep —
+            // the invariant lives in one function, not two.
+            let mut frozen = SessionCheckpoint {
+                algo: algo.name().to_string(),
+                seed: self.cfg.seed,
+                n_evals: budget,
+                search: run.checkpoint(),
+                records: {
+                    let mut all = std::mem::take(&mut prior);
+                    all.extend(objective.records()[taken..].iter().cloned());
+                    all
+                },
+            };
+            let policy = opts.resume_project.unwrap_or(ProjectPolicy::Nearest);
+            if let Some(report) =
+                project_session_checkpoint(&mut frozen, &build.space, Some(policy))?
+            {
+                eprintln!("{}", report.render());
+            }
+            prior = frozen.records;
+            taken = objective.records().len();
+            run = searcher.start(build.space.clone(), budget, Some(&frozen.search))?;
+            cur_pruned = Some(next.clone());
+            rebuilt = Some((build, next));
         }
         let (history, _rounds) = run.finish();
         let mut records = prior;
-        records.extend(objective.records().iter().cloned());
-        Ok((history, records))
+        records.extend(objective.records()[taken..].iter().cloned());
+        Ok((history, records, rebuilt))
     }
 
     /// Stage 4: final training of the winner + report assembly. Works from
@@ -694,11 +951,20 @@ impl<'a> Leader<'a> {
     ) -> Result<SearchReport> {
         let sess = self.session;
         let cfg = &self.cfg;
-        let SearchOutcome { build, history, records, search_secs } = search;
+        let SearchOutcome { build, history, records, repruned, search_secs } = search;
+        // `--reprune-every` superseded the stage-2 pruning mid-session: the
+        // report's per-layer menu table must describe the build the winner
+        // was actually searched on.
+        let pruned = repruned.or(pruned);
         let best_trial = history.best().expect("non-empty history");
+        // Match on (config, value), then config alone: a projected history
+        // can hold two trials SNAPPED onto the same config with different
+        // measured values, and the winner's record is the one that shares
+        // its value, not merely its coordinates.
         let best = records
             .iter()
-            .find(|r| r.config == best_trial.config)
+            .find(|r| r.config == best_trial.config && r.value == best_trial.value)
+            .or_else(|| records.iter().find(|r| r.config == best_trial.config))
             .expect("best record")
             .clone();
 
@@ -763,6 +1029,15 @@ mod tests {
         assert!(QPolicy::Auto.batched());
     }
 
+    /// A 2-dim space matching the test trials below.
+    fn test_space() -> Space {
+        use crate::search::Dim;
+        Space::new(vec![
+            Dim::new("bits:a", vec![8.0, 6.0, 4.0]),
+            Dim::new("width:w", vec![0.75, 1.0]),
+        ])
+    }
+
     #[test]
     fn session_checkpoint_serde_and_atomic_save_load() {
         use crate::search::{RngState, SearchCheckpoint};
@@ -778,7 +1053,7 @@ mod tests {
             n_evals: 40,
             search: SearchCheckpoint {
                 algo: "batch-kmeans-tpe".to_string(),
-                dims: 2,
+                space: test_space(),
                 history,
                 iter: 3,
                 centroids: vec![0.5, -1.0],
@@ -816,7 +1091,7 @@ mod tests {
             n_evals: 8,
             search: SearchCheckpoint {
                 algo: "batch-tpe".to_string(),
-                dims: 1,
+                space: Space::new(vec![crate::search::Dim::new("d0", vec![0.0, 1.0])]),
                 history,
                 iter: 0,
                 centroids: Vec::new(),
@@ -845,7 +1120,7 @@ mod tests {
             n_evals: 40,
             search: SearchCheckpoint {
                 algo: "batch-tpe".to_string(),
-                dims: 2,
+                space: test_space(),
                 history,
                 iter: 0,
                 centroids: Vec::new(),
@@ -901,6 +1176,121 @@ mod tests {
             4
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_rotation_orders_numerically_past_eight_digits() {
+        // `ckpt-100000000.json` (10^8 trials, 9 digits) sorts BEFORE
+        // `ckpt-99999999.json` lexicographically but AFTER it numerically —
+        // the old string sort made resume pick a stale checkpoint and GC
+        // delete the newest one.
+        let dir =
+            std::env::temp_dir().join(format!("sammpq_rot9_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        ck_with_trials(6).save(&dir.join("ckpt-100000000.json")).unwrap();
+        ck_with_trials(3).save(&dir.join("ckpt-99999999.json")).unwrap();
+        // Unparseable names are not rotated checkpoints and are ignored.
+        std::fs::write(dir.join("ckpt-abc.json"), "{}").unwrap();
+        // No manifest: the newest-first scan must pick the NUMERIC newest.
+        assert_eq!(CheckpointStore::load_latest(&dir).unwrap().search.history.len(), 6);
+        // GC with keep=1 must evict the numerically-oldest file — under the
+        // string sort it would have deleted ckpt-100000000.json instead.
+        let store = CheckpointStore::new(dir.clone(), 1);
+        store.save(&ck_with_trials(4)).unwrap();
+        assert!(dir.join("ckpt-100000000.json").exists(), "GC deleted the newest");
+        assert!(!dir.join("ckpt-99999999.json").exists(), "GC kept a stale file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_save_truncates_abandoned_timeline_after_history_shrink() {
+        // A strict re-prune projection can DROP trials, so the next save's
+        // trial count moves backward. The numerically-later rotated files
+        // describe the abandoned pre-re-prune timeline; leaving them would
+        // make GC and a manifest-less resume treat a stale checkpoint as
+        // newest.
+        let dir = std::env::temp_dir()
+            .join(format!("sammpq_rot_shrink_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = CheckpointStore::new(dir.clone(), 3);
+        store.save(&ck_with_trials(6)).unwrap();
+        store.save(&ck_with_trials(9)).unwrap();
+        store.save(&ck_with_trials(4)).unwrap();
+        assert!(!dir.join("ckpt-00000006.json").exists(), "abandoned file survived");
+        assert!(!dir.join("ckpt-00000009.json").exists(), "abandoned file survived");
+        assert_eq!(SessionCheckpoint::load_auto(&dir).unwrap().search.history.len(), 4);
+        // The manifest-less scan agrees — nothing stale outranks the save.
+        std::fs::remove_file(dir.join(MANIFEST_NAME)).unwrap();
+        assert_eq!(CheckpointStore::load_latest(&dir).unwrap().search.history.len(), 4);
+        // A FRESH store on a reused directory (operator forgot --resume)
+        // must NOT bulldoze the previous session's checkpoints: truncation
+        // is gated on an in-session shrink, and "lower count than some old
+        // file" is not one.
+        let fresh = CheckpointStore::new(dir.clone(), 3);
+        fresh.save(&ck_with_trials(2)).unwrap();
+        assert!(
+            dir.join("ckpt-00000004.json").exists(),
+            "fresh store destroyed a previous run's checkpoint"
+        );
+        // A store seeded with the RESUMED checkpoint's pre-projection count
+        // treats the shrink as in-session: a projected strict resume's
+        // first save truncates the superseded pre-projection files instead
+        // of being forever outranked by them.
+        let seeded = CheckpointStore::new(dir.clone(), 3);
+        seeded.seed_resume_count(4);
+        seeded.save(&ck_with_trials(3)).unwrap();
+        assert!(
+            !dir.join("ckpt-00000004.json").exists(),
+            "seeded store left the superseded timeline outranking the live one"
+        );
+        assert_eq!(SessionCheckpoint::load_auto(&dir).unwrap().search.history.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_gate_projects_records_in_lockstep_or_fails_structured() {
+        // Same space: the gate is a no-op.
+        let mut ck = ck_with_trials(5);
+        assert!(project_session_checkpoint(&mut ck, &test_space(), None)
+            .unwrap()
+            .is_none());
+        // Re-pruned space — same dim count and widths, one menu shrunk
+        // (bits:a loses 4.0). Without a policy: hard structured error.
+        let mut repruned = test_space();
+        repruned.dims[0].choices = vec![8.0, 6.0];
+        let err = project_session_checkpoint(&mut ck, &repruned, None).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        assert!(err.to_string().contains("--resume-project"), "{err}");
+        // Nearest: every trial survives; records track the history config
+        // for config, so the checkpoint invariant still holds end-to-end.
+        let report =
+            project_session_checkpoint(&mut ck, &repruned, Some(ProjectPolicy::Nearest))
+                .unwrap()
+                .expect("projection must have run");
+        assert_eq!(report.total(), 5);
+        assert_eq!(report.dropped, 0);
+        assert!(report.snapped > 0, "trials at the pruned choice must snap");
+        assert_eq!(ck.records.len(), ck.search.history.len());
+        for (r, t) in ck.records.iter().zip(&ck.search.history.trials) {
+            assert_eq!(r.config, t.config);
+            assert!(repruned.validate(&r.config));
+        }
+        let back =
+            SessionCheckpoint::from_json(&Json::parse(&ck.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.records.len(), back.search.history.len());
+        // Strict: trials whose bits:a sat on the pruned 4.0 drop, and their
+        // records drop with them.
+        let mut ck2 = ck_with_trials(7);
+        let report =
+            project_session_checkpoint(&mut ck2, &repruned, Some(ProjectPolicy::Strict))
+                .unwrap()
+                .expect("projection must have run");
+        assert_eq!(report.total(), 7);
+        assert_eq!(report.dropped, 2); // i = 2 and 5 used choice index 2
+        assert_eq!(ck2.search.history.len(), report.kept);
+        assert_eq!(ck2.records.len(), ck2.search.history.len());
     }
 
     #[test]

@@ -27,9 +27,15 @@
 //! without touching the other tenants. Sessions checkpoint after every
 //! round (`--checkpoint`, rotated + manifested with `--checkpoint-keep`)
 //! and resume (`--resume`, file or rotation dir), warm-starting
-//! surrogates, records, and the RNG cursor. See `search::batch`,
-//! `search::checkpoint`, `search::costmodel`, and docs/ARCHITECTURE.md for
-//! the protocol state machine and formats.
+//! surrogates, records, and the RNG cursor. Checkpoints carry the exact
+//! searched space + a fingerprint: resuming onto a DIFFERENT (re-pruned)
+//! space is a hard error unless `--resume-project nearest|strict`
+//! projects the history through `search::project`, and
+//! `--reprune-every R` tightens a live session's menus at round
+//! boundaries, re-syncing remote farms over the same v3 handshake. See
+//! `search::batch`, `search::checkpoint`, `search::project`,
+//! `search::costmodel`, and docs/ARCHITECTURE.md for the protocol state
+//! machine and formats.
 
 pub mod evaluator;
 pub mod service;
@@ -38,8 +44,8 @@ pub mod report;
 
 pub use evaluator::{build_space, DimKind, DnnBackend, DnnFactory, DnnObjective, EvalRecord,
                     ObjectiveCfg, SpaceBuild};
-pub use leader::{Algo, CheckpointStore, EvalBackend, Leader, LeaderCfg, RecordedObjective,
-                 SearchReport, SessionCheckpoint, SessionOpts};
+pub use leader::{project_session_checkpoint, Algo, CheckpointStore, EvalBackend, Leader,
+                 LeaderCfg, RecordedObjective, SearchReport, SessionCheckpoint, SessionOpts};
 pub use service::{serve_on_listener, serve_sessions, serve_sessions_on, serve_worker,
                   serve_worker_on, BackendFactory, PlainBackend, PoolCfg, RemoteObjective,
                   RoundEvals, ServeOpts, SessionSpec, SessionTable, SyntheticBackend,

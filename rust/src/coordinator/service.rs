@@ -265,10 +265,27 @@ impl WorkerBackend for PlainBackend<'_> {
     }
 }
 
-/// Upper bound on one wire message. A config line is a few bytes per
-/// dimension, so anything near this is a protocol violation (or garbage on
-/// the port) — better to fail the connection than to buffer unboundedly.
+/// Upper bound on one CONTROL-SIZED wire message (handshake acks,
+/// structured errors — frames whose size does not grow with the space).
+/// Anything near this on those paths is a protocol violation (or garbage
+/// on the port) — better to fail the connection than to buffer
+/// unboundedly. Space-scaled frames read under
+/// [`MAX_HELLO_LINE_BYTES`] instead.
 const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Upper bound on a line that may carry a SPACE-SCALED frame: a v3 `hello`
+/// (its spec serializes the ENTIRE — possibly re-pruned — `SpaceBuild`,
+/// per-dim names and full menus) or a record-return eval reply (the
+/// `EvalRecord` embeds the full config, a few bytes per dim). For
+/// thousand-layer models both overrun the 1 MiB control cap by orders of
+/// magnitude; the old single cap killed such handshakes as "garbage on the
+/// port", and capping only the hello would just move the same failure to
+/// the first reply. The cap is per ENDPOINT ROLE, the only place the
+/// message type is known before parsing: worker-side readers (hellos can
+/// arrive at any time — connect-time sync AND round-boundary re-sync) and
+/// leader-side record-reply readers use this cap; the synchronous
+/// handshake-ack read keeps the tight one.
+const MAX_HELLO_LINE_BYTES: usize = 32 << 20;
 
 fn write_line(stream: &mut TcpStream, j: &Json) -> Result<()> {
     let mut s = j.to_string_compact();
@@ -283,6 +300,13 @@ fn write_line(stream: &mut TcpStream, j: &Json) -> Result<()> {
 /// JSON are all `Err` — the reconnect logic treats those as a crashed peer,
 /// whereas a clean EOF retires the connection without retrying.
 fn read_json_line<R: BufRead>(reader: &mut R) -> Result<Option<Json>> {
+    read_json_line_capped(reader, MAX_LINE_BYTES)
+}
+
+/// [`read_json_line`] under an explicit byte cap — worker-side readers pass
+/// [`MAX_HELLO_LINE_BYTES`] because a hello carrying a large serialized
+/// space is legitimate there (see the cap docs).
+fn read_json_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> Result<Option<Json>> {
     let mut line: Vec<u8> = Vec::new();
     loop {
         let (found_newline, used) = {
@@ -312,8 +336,8 @@ fn read_json_line<R: BufRead>(reader: &mut R) -> Result<Option<Json>> {
         // Checked on BOTH paths: a newline found inside the current chunk
         // must not smuggle an oversized line past the cap.
         anyhow::ensure!(
-            line.len() <= MAX_LINE_BYTES,
-            "line exceeds {MAX_LINE_BYTES} bytes — dropping connection"
+            line.len() <= cap,
+            "line exceeds {cap} bytes — dropping connection"
         );
         if found_newline {
             break;
@@ -418,7 +442,9 @@ fn serve_conn(
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     loop {
-        let Some(msg) = read_json_line(&mut reader)? else {
+        // Worker side: any frame may be a hello carrying a big serialized
+        // space, so read under the handshake cap.
+        let Some(msg) = read_json_line_capped(&mut reader, MAX_HELLO_LINE_BYTES)? else {
             return Ok(false);
         };
         if msg.get("shutdown").and_then(|j| j.as_bool()).unwrap_or(false) {
@@ -917,9 +943,11 @@ fn serve_mux_msg<'f>(
 }
 
 /// Reader thread of the multiplexed runtime: raw frames in, events out.
+/// Reads under the handshake cap — any connection may carry a (large)
+/// hello at any time.
 fn spawn_mux_reader(tx: Sender<MuxEvent>, conn: usize, mut reader: BufReader<TcpStream>) {
     std::thread::spawn(move || loop {
-        match read_json_line(&mut reader) {
+        match read_json_line_capped(&mut reader, MAX_HELLO_LINE_BYTES) {
             Ok(Some(msg)) => {
                 if tx.send(MuxEvent::Msg { conn, msg }).is_err() {
                     return; // runtime exited
@@ -945,6 +973,20 @@ fn spawn_mux_reader(tx: Sender<MuxEvent>, conn: usize, mut reader: BufReader<Tcp
     });
 }
 
+/// The v3 hello frame opening session `sid` with `spec` — shared by the
+/// connect-time handshake and the pool's mid-stream re-sync
+/// ([`WorkerPool::open_session`]).
+fn hello_frame(sid: &str, spec: &SessionSpec) -> Json {
+    obj(vec![(
+        "hello",
+        obj(vec![
+            ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+            ("session", Json::Str(sid.to_string())),
+            ("spec", spec.to_json()),
+        ]),
+    )])
+}
+
 /// Leader side of the Hello/SyncSpace handshake: open session `sid` with
 /// its spec, block (bounded) for the ack. A structured rejection from the
 /// worker — version skew, digest mismatch, space the backend cannot
@@ -956,17 +998,7 @@ fn client_handshake(
     sid: &str,
     spec: &SessionSpec,
 ) -> Result<()> {
-    write_line(
-        writer,
-        &obj(vec![(
-            "hello",
-            obj(vec![
-                ("proto", Json::Num(PROTOCOL_VERSION as f64)),
-                ("session", Json::Str(sid.to_string())),
-                ("spec", spec.to_json()),
-            ]),
-        )]),
-    )?;
+    write_line(writer, &hello_frame(sid, spec))?;
     reader.get_ref().set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
     let reply = read_json_line(reader);
     reader.get_ref().set_read_timeout(None)?;
@@ -1044,9 +1076,10 @@ impl WorkerHandle {
         write_line(&mut self.writer, msg)
     }
 
-    /// Read one raw reply line (protocol skew tests).
+    /// Read one raw reply line (protocol skew tests). Record replies scale
+    /// with the synced space, hence the space cap.
     pub fn recv_raw(&mut self) -> Result<Option<Json>> {
-        read_json_line(&mut self.reader)
+        read_json_line_capped(&mut self.reader, MAX_HELLO_LINE_BYTES)
     }
 
     pub fn dispatch(&mut self, id: usize, config: &Config) -> Result<()> {
@@ -1080,7 +1113,9 @@ impl WorkerHandle {
     }
 
     pub fn collect(&mut self) -> Result<RemoteEval> {
-        let msg = read_json_line(&mut self.reader)?
+        // Record-return replies embed the full config — space-scaled, so
+        // they read under the same cap as the hello that synced the space.
+        let msg = read_json_line_capped(&mut self.reader, MAX_HELLO_LINE_BYTES)?
             .ok_or_else(|| anyhow::anyhow!("worker disconnected"))?;
         parse_eval(&msg)
     }
@@ -1200,6 +1235,16 @@ struct Outstanding {
 enum PoolEvent {
     Result { worker: usize, generation: u64, eval: RemoteEval },
     Down { worker: usize, generation: u64, clean: bool, error: String },
+    /// A `hello_ack` arriving MID-STREAM — the reply to a round-boundary
+    /// re-sync hello ([`WorkerPool::open_session`]); connect-time acks are
+    /// read synchronously before the reader thread exists and never come
+    /// through here.
+    Ack { worker: usize, generation: u64, session: String, dims: Option<usize> },
+    /// An id-free structured error ({"error","kind",...}): a rejected
+    /// mid-stream hello, or an eval naming a session the worker no longer
+    /// knows. Either way the connection is recycled and its reconnect
+    /// re-handshakes every open session (self-healing).
+    Reject { worker: usize, generation: u64, detail: String },
 }
 
 struct PoolWorker {
@@ -1488,6 +1533,102 @@ impl WorkerPool {
         self.sessions.iter().map(|s| s.id.clone()).collect()
     }
 
+    /// Spec an open session was synced with (re-sync flows clone + edit it).
+    pub fn session_spec(&self, sid: &str) -> Option<&SessionSpec> {
+        self.sessions.iter().find(|s| s.id == sid).map(|s| &s.spec)
+    }
+
+    /// Open an ADDITIONAL auto-named session on the live farm mid-stream —
+    /// the round-boundary re-sync path: a re-pruned `SpaceBuild` rides the
+    /// same v3 hello the connect-time sync uses, on the already-open pooled
+    /// connections (frames are FIFO per connection, so the hello lands
+    /// between rounds, never inside one). The ack comes back through the
+    /// reader threads as a [`PoolEvent::Ack`]; a structured rejection
+    /// recycles that connection exactly like an unknown-session eval
+    /// would. STRICT on success: unless at least one worker positively
+    /// acked, the session is rolled back out of the table and this errors
+    /// — a rejected/blipped farm must leave the CALLER's previous session
+    /// as the one still standing (resync_build closes the old session only
+    /// after this returns Ok). Workers that were merely down during an
+    /// acked open still pick the session up through the reconnect
+    /// re-handshake (every open session is re-handshaken there).
+    pub fn open_session(&mut self, spec: SessionSpec) -> Result<String> {
+        let sid = auto_session_id();
+        let frame = hello_frame(&sid, &spec);
+        let expect_dims = spec.build.space.num_dims();
+        // Register FIRST: a reconnect racing this call must already see the
+        // session in its re-handshake list.
+        self.sessions.push(PoolSession::new(sid.clone(), spec));
+        let mut pending: Vec<(usize, u64)> = Vec::new();
+        for w in 0..self.workers.len() {
+            if !self.workers[w].alive {
+                continue;
+            }
+            let wrote = match self.workers[w].writer.as_mut() {
+                Some(stream) => write_line(stream, &frame).is_ok(),
+                None => false,
+            };
+            if wrote {
+                pending.push((w, self.workers[w].generation));
+            } else {
+                self.fail_worker(w, "re-sync hello write failed", false, None);
+            }
+        }
+        if pending.is_empty() {
+            self.sessions.retain(|s| s.id != sid);
+            anyhow::bail!("no live worker to open session '{sid}' on");
+        }
+        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        let mut acked = 0usize;
+        while !pending.is_empty() && Instant::now() < deadline {
+            match self.rx.recv_timeout(self.cfg.tick) {
+                Ok(PoolEvent::Ack { worker, generation, session, dims }) => {
+                    let Some(at) = pending
+                        .iter()
+                        .position(|&(w, g)| w == worker && g == generation)
+                    else {
+                        continue; // stale or foreign ack — ignore
+                    };
+                    if session != sid {
+                        continue;
+                    }
+                    if dims != Some(expect_dims) {
+                        eprintln!(
+                            "[pool] worker {worker} acked session '{sid}' over \
+                             {dims:?} dims, leader synced {expect_dims}; recycling"
+                        );
+                        self.fail_worker(worker, "re-sync dim mismatch", false, None);
+                    } else {
+                        acked += 1;
+                    }
+                    pending.remove(at);
+                }
+                Ok(ev) => self.handle_event(ev, None),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    unreachable!("pool holds its own event sender")
+                }
+            }
+            // A worker that died while we waited resolves its pending slot.
+            pending.retain(|&(w, g)| {
+                self.workers[w].alive && self.workers[w].generation == g
+            });
+        }
+        if acked == 0 {
+            // No positive ack — rejection, blip, or timeout. Roll the
+            // session back so the caller's CURRENT session stays the farm's
+            // truth; retrying through reconnects would re-send a hello the
+            // farm just refused (and resync_build would meanwhile tear
+            // down the one session that still works).
+            self.sessions.retain(|s| s.id != sid);
+            anyhow::bail!(
+                "no worker acknowledged the re-synced session '{sid}' within {:?}",
+                HANDSHAKE_TIMEOUT
+            );
+        }
+        Ok(sid)
+    }
+
     /// Session-scoped teardown: tell every live worker to free `sid`'s
     /// backend (`{"bye": sid}`) and forget the session pool-side.
     /// Connections stay up and other sessions keep serving — this is how
@@ -1601,11 +1742,11 @@ impl WorkerPool {
             }
             match self.rx.recv_timeout(self.cfg.tick) {
                 Ok(ev) => {
-                    self.handle_event(ev, &mut r);
+                    self.handle_event(ev, Some(&mut r));
                     // Drain everything already queued before re-dispatching,
                     // so one pass of fill_idle sees all freed workers.
                     while let Ok(ev) = self.rx.try_recv() {
-                        self.handle_event(ev, &mut r);
+                        self.handle_event(ev, Some(&mut r));
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -1690,15 +1831,17 @@ impl WorkerPool {
                 .insert(id, Outstanding { round: self.round, slot, at: Instant::now() });
             true
         } else {
-            self.fail_worker(w, "dispatch write failed", false, r);
+            self.fail_worker(w, "dispatch write failed", false, Some(r));
             false
         }
     }
 
     /// Take a worker out of rotation: bump its generation (stale reader
-    /// events get discarded), requeue this round's outstanding work, and
+    /// events get discarded), requeue the active round's outstanding work
+    /// (`None` between rounds — open_session — where any outstanding
+    /// entries are stale straggler copies with nothing to requeue), and
     /// schedule a bounded reconnection unless the disconnect was clean.
-    fn fail_worker(&mut self, w: usize, reason: &str, clean: bool, r: &mut Round) {
+    fn fail_worker(&mut self, w: usize, reason: &str, clean: bool, r: Option<&mut Round>) {
         let round = self.round;
         let (lost, can_reconnect) = {
             let pw = &mut self.workers[w];
@@ -1719,12 +1862,18 @@ impl WorkerPool {
                 pw.backoff = self.cfg.reconnect_backoff;
                 pw.evals_since_connect = 0;
             }
-            let mut lost: Vec<usize> = pw
-                .outstanding
-                .drain()
-                .filter(|(_, o)| o.round == round && !r.done[o.slot])
-                .map(|(_, o)| o.slot)
-                .collect();
+            let mut lost: Vec<usize> = match &r {
+                Some(r) => pw
+                    .outstanding
+                    .drain()
+                    .filter(|(_, o)| o.round == round && !r.done[o.slot])
+                    .map(|(_, o)| o.slot)
+                    .collect(),
+                None => {
+                    pw.outstanding.clear();
+                    Vec::new()
+                }
+            };
             lost.sort_unstable();
             let can_reconnect =
                 !pw.retired && pw.reconnects_left > 0 && pw.addr.is_some();
@@ -1737,17 +1886,19 @@ impl WorkerPool {
         };
         // A slot still in flight on another worker (straggler duplicate)
         // does not need requeueing — its other copy is the retry.
-        for &slot in lost.iter().rev() {
-            let in_flight_elsewhere = self.workers.iter().enumerate().any(|(i, pw)| {
-                i != w
-                    && pw
-                        .outstanding
-                        .values()
-                        .any(|o| o.round == round && o.slot == slot)
-            });
-            if !in_flight_elsewhere {
-                r.queue.push_front(slot);
-                self.requeued += 1;
+        if let Some(r) = r {
+            for &slot in lost.iter().rev() {
+                let in_flight_elsewhere = self.workers.iter().enumerate().any(|(i, pw)| {
+                    i != w
+                        && pw
+                            .outstanding
+                            .values()
+                            .any(|o| o.round == round && o.slot == slot)
+                });
+                if !in_flight_elsewhere {
+                    r.queue.push_front(slot);
+                    self.requeued += 1;
+                }
             }
         }
         eprintln!(
@@ -1814,7 +1965,11 @@ impl WorkerPool {
         }
     }
 
-    fn handle_event(&mut self, ev: PoolEvent, r: &mut Round) {
+    /// Process one pool event. `r` is `None` between rounds (the
+    /// open_session ack wait): results still feed the EWMA and free
+    /// pipeline slots, failures still recycle workers — there is just no
+    /// round state to update.
+    fn handle_event(&mut self, ev: PoolEvent, r: Option<&mut Round>) {
         match ev {
             PoolEvent::Result { worker: w, generation, eval } => {
                 if generation != self.workers[w].generation {
@@ -1827,6 +1982,7 @@ impl WorkerPool {
                 self.eval_ewma.observe(elapsed);
                 self.completed += 1;
                 self.workers[w].evals_since_connect += 1;
+                let Some(r) = r else { return };
                 if o.round == self.round && !r.done[o.slot] {
                     r.done[o.slot] = true;
                     r.out[o.slot] = eval.value;
@@ -1849,6 +2005,16 @@ impl WorkerPool {
                     return;
                 }
                 self.fail_worker(w, &error, clean, r);
+            }
+            PoolEvent::Ack { .. } => {
+                // Outside open_session's wait loop an ack is pure
+                // bookkeeping noise (e.g. it raced the loop's deadline).
+            }
+            PoolEvent::Reject { worker: w, generation, detail } => {
+                if generation != self.workers[w].generation {
+                    return;
+                }
+                self.fail_worker(w, &detail, false, r);
             }
         }
     }
@@ -1919,12 +2085,46 @@ fn spawn_reader(
 ) {
     std::thread::spawn(move || {
         loop {
-            match read_json_line(&mut reader) {
+            // Record-return replies embed the full config, so on a big
+            // synced space they are as space-scaled as the hello was —
+            // reading them under the 1 MiB control cap would re-create
+            // the exact "garbage on the port" kill the hello cap fixed,
+            // one frame later.
+            match read_json_line_capped(&mut reader, MAX_HELLO_LINE_BYTES) {
                 Ok(Some(msg)) => {
                     if msg.get("bye_ack").is_some() {
                         // Session-teardown ack (close_session) — pure
                         // bookkeeping, nothing to attribute.
                         continue;
+                    }
+                    if let Some(ack) = msg.get("hello_ack") {
+                        // Mid-stream re-sync ack (open_session): forward,
+                        // keep reading — the connection stays in rotation.
+                        let session = ack
+                            .get("session")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("")
+                            .to_string();
+                        let dims = ack.get("dims").and_then(|v| v.as_usize());
+                        if tx
+                            .send(PoolEvent::Ack { worker, generation, session, dims })
+                            .is_err()
+                        {
+                            return;
+                        }
+                        continue;
+                    }
+                    if msg.get("id").is_none() && msg.get("kind").is_some() {
+                        // Id-free structured error: rejected re-sync hello
+                        // or unknown-session eval — unattributable, so the
+                        // connection is recycled (reconnect re-handshakes).
+                        let detail = msg
+                            .get("error")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("structured error")
+                            .to_string();
+                        let _ = tx.send(PoolEvent::Reject { worker, generation, detail });
+                        return;
                     }
                     match parse_eval(&msg) {
                         Ok(eval) => {
@@ -2034,6 +2234,33 @@ impl RemoteObjective {
             Some(sid) => self.pool.close_session(&sid),
             None => Ok(()),
         }
+    }
+
+    /// Re-sync the farm onto a re-pruned `SpaceBuild` at a round boundary
+    /// (`--reprune-every`): open a FRESH session carrying the new build —
+    /// same objective knobs, hardware model, and snapshot digest as the
+    /// current one — then `bye` the old session. Open-before-close, so a
+    /// failed re-sync leaves the old session fully usable; a fresh auto id
+    /// (rather than a re-hello on the old one) sidesteps the worker-side
+    /// spec-collision guard by construction.
+    pub fn resync_build(&mut self, build: &SpaceBuild) -> Result<()> {
+        let Some(old_sid) = self.sid.clone() else {
+            anyhow::bail!(
+                "sessionless remote objective cannot re-sync a new space (connect with \
+                 connect_session)"
+            );
+        };
+        let mut spec = self
+            .pool
+            .session_spec(&old_sid)
+            .ok_or_else(|| anyhow::anyhow!("session '{old_sid}' not open on the pool"))?
+            .clone();
+        spec.build = build.clone();
+        let new_sid = self.pool.open_session(spec)?;
+        self.pool.close_session(&old_sid)?;
+        self.space = build.space.clone();
+        self.sid = Some(new_sid);
+        Ok(())
     }
 
     /// Stop the worker PROCESSES. Single-tenant demos and tests only — a
@@ -2985,5 +3212,107 @@ mod tests {
         assert_eq!(served, want, "round queue was not ordered by predicted cost");
         pool.shutdown().unwrap();
         h.join().unwrap();
+    }
+
+    #[test]
+    fn big_space_hello_roundtrips_past_the_eval_line_cap() {
+        // Satellite (MAX_LINE_BYTES): a v3 hello carries the FULL serialized
+        // SpaceBuild; for a many-thousand-layer model that overruns the
+        // 1 MiB eval cap, which predates the v2/v3 handshake and used to
+        // kill the connection as "garbage on the port". Worker-side reads
+        // now run under the handshake cap — the big hello must ack and the
+        // session must evaluate.
+        let dims = 30_000;
+        let space = Space::new(
+            (0..dims)
+                .map(|d| {
+                    Dim::new(format!("bits:layer-{d:06}"), vec![8.0, 6.0, 4.0, 3.0, 2.0])
+                })
+                .collect(),
+        );
+        let spec = SessionSpec::synthetic(space);
+        let hello_bytes = spec.to_json().to_string_compact().len();
+        assert!(
+            hello_bytes > MAX_LINE_BYTES,
+            "test space too small to exercise the cap: {hello_bytes} bytes"
+        );
+        assert!(
+            hello_bytes <= MAX_HELLO_LINE_BYTES,
+            "test space overruns even the handshake cap: {hello_bytes} bytes"
+        );
+
+        // Single-tenant loop.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut backend = SyntheticBackend::new(1, 1, Duration::ZERO);
+            serve_worker_on(stream, &mut backend).expect("worker")
+        });
+        let mut w = WorkerHandle::connect(&addr).unwrap();
+        w.hello(&spec).unwrap();
+        let config: Config = vec![0; dims];
+        w.dispatch(0, &config).unwrap();
+        let r = w.collect().unwrap();
+        assert_eq!((r.id, r.value), (0, 0.0));
+        w.shutdown().unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+
+        // Multiplexed runtime (what `sammpq worker` actually runs).
+        let (addr, handle) = spawn_mux_worker(ServeOpts::default());
+        let mut w = WorkerHandle::connect(&addr).unwrap();
+        w.hello_as("big", &spec).unwrap();
+        let mut config: Config = vec![0; dims];
+        config[0] = 4;
+        w.dispatch_in("big", 1, &config).unwrap();
+        let r = w.collect().unwrap();
+        assert_eq!((r.id, r.value), (1, -4.0));
+        w.shutdown().unwrap();
+        assert_eq!(handle.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn open_session_resyncs_a_repruned_space_mid_stream() {
+        // The --reprune-every transport: a pool with an open session pushes
+        // a NEW session (re-pruned space) over the SAME live connections —
+        // the hello_ack comes back through the reader threads — then closes
+        // the old session. Evals under the new sid run over the new space;
+        // the old sid is gone from the worker's table.
+        let (addr, handle) = spawn_mux_worker(ServeOpts::default());
+        let spec_a = synth_spec(4, 5);
+        let mut pool = WorkerPool::connect_session(
+            std::slice::from_ref(&addr),
+            no_steal_cfg(),
+            Some(spec_a),
+        )
+        .unwrap();
+        let old_sid = pool.session_ids().pop().unwrap();
+        let out = pool.evaluate_records_in(&old_sid, &[vec![4, 4, 4, 4]]).unwrap();
+        assert_eq!(out.values, vec![-16.0]);
+
+        // "Re-prune" to a tighter space and re-sync without reconnecting.
+        let mut spec_b = pool.session_spec(&old_sid).unwrap().clone();
+        spec_b.build.space =
+            SyntheticObjective::new(4, 2, Duration::ZERO).space().clone();
+        let new_sid = pool.open_session(spec_b).unwrap();
+        assert_ne!(new_sid, old_sid);
+        pool.close_session(&old_sid).unwrap();
+
+        // The new session serves (a 4x2-space config)...
+        let out = pool.evaluate_records_in(&new_sid, &[vec![1, 1, 0, 1]]).unwrap();
+        assert_eq!(out.values, vec![-3.0]);
+        // ...and no reconnection was needed: the hello rode the open
+        // connection.
+        assert_eq!(pool.reconnects, 0, "re-sync should not recycle connections");
+
+        // The worker really dropped the old tenant: a raw probe naming it
+        // draws a structured session error.
+        let mut probe = WorkerHandle::connect(&addr).unwrap();
+        probe.dispatch_in(&old_sid, 7, &vec![0, 0, 0, 0]).unwrap();
+        let reply = probe.recv_raw().unwrap().expect("reply");
+        assert_eq!(reply.get("kind").and_then(|v| v.as_str()), Some("session"));
+
+        pool.shutdown().unwrap();
+        assert_eq!(handle.join().unwrap(), 2);
     }
 }

@@ -17,4 +17,4 @@
 
 pub mod pruner;
 
-pub use pruner::{bit_menus, prune_space, PrunedSpace};
+pub use pruner::{bit_menus, prune_space, reprune, PrunedSpace};

@@ -69,10 +69,33 @@ pub fn prune_space(raw_traces: &[f64], param_counts: &[usize], k: usize) -> Prun
         .zip(param_counts)
         .map(|(&t, &n)| t.abs() / n.max(1) as f64)
         .collect();
+    reprune(&normalized, k)
+}
+
+/// Prune from ALREADY-NORMALIZED per-weight sensitivities — §III-A steps
+/// 2-4 without the normalization step. This is the round-boundary re-prune
+/// entry point (`--reprune-every R`): a live session re-clusters the
+/// sensitivities it holds under a larger `k`, tightening cluster membership
+/// the way learned layer-importance methods re-estimate mid-training, and
+/// continues over the new menus via the config-projection path. Fresh
+/// Hutchinson traces (normalized per weight) slot in the same way.
+pub fn reprune(traces: &[f64], k: usize) -> PrunedSpace {
+    assert!(!traces.is_empty(), "reprune with no layer sensitivities");
+    let normalized: Vec<f64> = traces.iter().map(|t| t.abs()).collect();
     let k = k.min(normalized.len()).max(1);
     let clustering = kmeans_1d(&normalized, k);
     let menus = bit_menus(clustering.k());
     PrunedSpace { cluster: clustering.assignment, menus, normalized }
+}
+
+impl PrunedSpace {
+    /// Tighten this pruning in place of fresh traces: re-cluster the stored
+    /// normalized sensitivities with `k` clusters (typically larger than
+    /// before — the `--reprune-every` schedule grows k over time, so menus
+    /// narrow as the search matures).
+    pub fn reprune(&self, k: usize) -> PrunedSpace {
+        reprune(&self.normalized, k)
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +151,33 @@ mod tests {
         let p = prune_space(&traces, &counts, 4);
         let (before, after) = p.log10_reduction();
         assert!(before - after > 4.0, "before 10^{before:.1} after 10^{after:.1}");
+    }
+
+    #[test]
+    fn reprune_matches_prune_space_on_normalized_input() {
+        let traces = [900.0, 850.0, 40.0, 35.0, 30.0, 28.0, 0.5, 0.4];
+        let counts = [100usize; 8];
+        let a = prune_space(&traces, &counts, 3);
+        let b = reprune(&a.normalized, 3);
+        assert_eq!(a.cluster, b.cluster);
+        assert_eq!(a.menus, b.menus);
+    }
+
+    #[test]
+    fn reprune_with_larger_k_tightens_membership() {
+        let traces: Vec<f64> = (0..16).map(|i| ((i + 1) * (i + 1)) as f64).collect();
+        let counts = vec![100usize; 16];
+        let p3 = prune_space(&traces, &counts, 3);
+        let p5 = p3.reprune(5);
+        assert_eq!(p5.menus.len(), 5);
+        assert_eq!(p5.normalized, p3.normalized);
+        // Ordering invariants survive the re-prune: the most sensitive
+        // layer keeps the top of B, the flattest bottoms out.
+        assert!(p5.menu_for_layer(15).contains(&8.0));
+        assert!(p5.menu_for_layer(0).iter().all(|&b| b <= 3.0));
+        // k is clamped to the layer count.
+        let tiny = reprune(&[1.0, 2.0], 7);
+        assert!(tiny.menus.len() <= 2);
     }
 
     #[test]

@@ -97,11 +97,49 @@ fn session_opts_from(args: &Args) -> Result<SessionOpts> {
             Some(n)
         }
     };
+    let resume = args.get("resume").map(std::path::PathBuf::from);
+    let resume_project = match args.get("resume-project") {
+        None => {
+            anyhow::ensure!(
+                !args.has_flag("resume-project"),
+                "--resume-project needs a value: 'nearest' or 'strict'"
+            );
+            None
+        }
+        Some(s) => {
+            let policy = sammpq::search::ProjectPolicy::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("--resume-project expects 'nearest' or 'strict', got '{s}'")
+            })?;
+            anyhow::ensure!(
+                resume.is_some() || args.get("reprune-every").is_some(),
+                "--resume-project only applies with --resume or --reprune-every"
+            );
+            Some(policy)
+        }
+    };
+    let reprune_every = match args.get("reprune-every") {
+        None => {
+            anyhow::ensure!(
+                !args.has_flag("reprune-every"),
+                "--reprune-every needs a value: re-prune after every R search rounds"
+            );
+            None
+        }
+        Some(s) => {
+            let r: usize = s.parse().map_err(|_| {
+                anyhow::anyhow!("--reprune-every expects a positive integer, got '{s}'")
+            })?;
+            anyhow::ensure!(r >= 1, "--reprune-every must be at least 1 round");
+            Some(r)
+        }
+    };
     Ok(SessionOpts {
         backend,
         checkpoint,
         checkpoint_keep,
-        resume: args.get("resume").map(std::path::PathBuf::from),
+        resume,
+        resume_project,
+        reprune_every,
         keep_workers: args.has_flag("keep-workers"),
     })
 }
@@ -515,7 +553,15 @@ fn main() {
                  \x20             --checkpoint-keep n rotate per-round checkpoints in the\n\
                  \x20             --checkpoint dir, keep the n newest + manifest.json\n\
                  \x20             --resume <f|dir>    continue a checkpointed search (a dir\n\
-                 \x20             picks its newest valid checkpoint automatically)\n\
+                 \x20             picks its newest valid checkpoint automatically;\n\
+                 \x20             a checkpoint from a DIFFERENT pruned space is refused\n\
+                 \x20             unless --resume-project projects it)\n\
+                 \x20             --resume-project nearest|strict  remap a checkpoint\n\
+                 \x20             onto this run's re-pruned menus: snap pruned choices\n\
+                 \x20             to the nearest survivor, or drop those trials\n\
+                 \x20             --reprune-every r   tighten the menus every r rounds\n\
+                 \x20             (re-cluster sensitivities, project the history, and\n\
+                 \x20             re-sync the worker farm onto the new space)\n\
                  \x20 hessian     sensitivity report (--model, --k, --samples)\n\
                  \x20 hw          hardware model report (--model, --bits, --mult)\n\
                  \x20 convergence Fig. 3a/3b tabular study (no artifacts needed)\n\

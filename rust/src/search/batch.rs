@@ -296,10 +296,21 @@ impl BatchSearcher {
                     "checkpoint was taken by '{}', this searcher is '{name}'",
                     ck.algo
                 );
+                // Fingerprints, not dim counts: a re-pruned space with the
+                // SAME width presents different menus, and replaying stored
+                // choice indices against them silently reinterprets every
+                // trial (the bug the old `ck.dims == num_dims()` guard let
+                // through). A mismatched checkpoint must be projected first
+                // — see `search::project::SpaceProjection`.
+                let (ck_fp, fp) = (ck.space.fingerprint(), space.fingerprint());
                 anyhow::ensure!(
-                    ck.dims == space.num_dims(),
-                    "checkpoint space has {} dims, objective space has {}",
-                    ck.dims,
+                    ck_fp == fp,
+                    "checkpoint space (fingerprint {ck_fp}, {} dims) does not match this \
+                     run's space (fingerprint {fp}, {} dims): the menus differ, and the \
+                     checkpoint's choice indices would be reinterpreted against the wrong \
+                     values — project the history onto the new space first \
+                     (--resume-project nearest|strict)",
+                    ck.space.num_dims(),
                     space.num_dims()
                 );
                 let state = ProposerState::restore(self.algo, space.clone(), ck);
@@ -444,12 +455,15 @@ impl BatchRun {
         &self.cost
     }
 
-    /// Freeze the run at the current round boundary.
+    /// Freeze the run at the current round boundary. The checkpoint carries
+    /// the full space (menus included), so resume can verify fingerprints —
+    /// and projection can remap the history when the space legitimately
+    /// changed.
     pub fn checkpoint(&self) -> SearchCheckpoint {
         let (iter, centroids) = self.state.snapshot();
         SearchCheckpoint {
             algo: self.algo_name.to_string(),
-            dims: self.space.num_dims(),
+            space: self.space.clone(),
             history: self.hist.clone(),
             iter,
             centroids,
@@ -1079,14 +1093,24 @@ mod tests {
         let ck = run.checkpoint();
         // Wrong proposer family.
         let tp = BatchSearcher::tpe(crate::search::TpeParams::default(), 2);
-        let err = tp.start(space, 8, Some(&ck)).unwrap_err();
+        let err = tp.start(space.clone(), 8, Some(&ck)).unwrap_err();
         assert!(err.to_string().contains("batch-kmeans-tpe"), "{err}");
         // Wrong space width.
         let other = SyntheticObjective::new(6, 3, std::time::Duration::ZERO)
             .space()
             .clone();
         let err = km.start(other, 8, Some(&ck)).unwrap_err();
-        assert!(err.to_string().contains("dims"), "{err}");
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        // REGRESSION (the silent-corruption bug): same dim count, same
+        // widths, DIFFERENT menus — the old dim-count guard resumed this
+        // and reinterpreted every stored index against the wrong values.
+        // Now it is a hard structured error pointing at projection.
+        let mut repruned = space;
+        repruned.dims[0].choices = vec![8.0, 6.0, 4.0];
+        assert_eq!(repruned.num_dims(), ck.space.num_dims());
+        let err = km.start(repruned, 8, Some(&ck)).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        assert!(err.to_string().contains("resume-project"), "{err}");
         // A resume whose budget is already spent finishes immediately.
         let done = km
             .start(
@@ -1096,6 +1120,157 @@ mod tests {
             )
             .unwrap();
         assert!(done.done());
+    }
+
+    /// A fixed-q session checkpointed on space A and resumed (projected)
+    /// onto a re-pruned space B must complete without error, with every
+    /// projected trial valid in B, the report's counts summing to the
+    /// checkpointed trial count, and a final incumbent matching a cold run
+    /// on B within tolerance — the cross-space resume acceptance criterion.
+    #[test]
+    fn projected_resume_onto_repruned_space_matches_cold_run_incumbent() {
+        use crate::search::project::{ProjectPolicy, SpaceProjection};
+        use crate::search::space::Dim;
+
+        // Menus whose values equal their indices, so the synthetic
+        // landscape is identical under both spaces' decodings.
+        let space_a = Space::new(
+            (0..4).map(|d| Dim::new(format!("d{d}"), vec![0.0, 1.0, 2.0, 3.0])).collect(),
+        );
+        // Re-pruned: every dim loses its worst choice (same names).
+        let space_b = Space::new(
+            (0..4).map(|d| Dim::new(format!("d{d}"), vec![0.0, 1.0, 2.0])).collect(),
+        );
+        let budget = 60;
+        let zero = std::time::Duration::ZERO;
+        let p = KmeansTpeParams { n_startup: 10, seed: 21, ..Default::default() };
+        let searcher = BatchSearcher::kmeans_tpe(p, 3);
+
+        // Checkpoint mid-run on A.
+        let mut obj_a = SyntheticObjective::with_space(space_a.clone(), zero);
+        let mut run = searcher.start(space_a.clone(), budget, None).unwrap();
+        while run.history().len() < 24 {
+            run.step(&mut obj_a);
+        }
+        let ck = run.checkpoint();
+        drop(run);
+
+        // Project onto B and resume there.
+        let proj = SpaceProjection::between(&space_a, &space_b);
+        let out = proj.project_checkpoint(&ck, space_b.clone(), ProjectPolicy::Nearest);
+        assert_eq!(out.report.total(), ck.history.len());
+        assert_eq!(out.report.dropped, 0, "nearest never drops");
+        assert!(out.report.snapped > 0, "startup sampling must have hit pruned choices");
+        let mut obj_b = SyntheticObjective::with_space(space_b.clone(), zero);
+        let mut resumed =
+            searcher.start(space_b.clone(), budget, Some(&out.search)).unwrap();
+        while !resumed.done() {
+            resumed.step(&mut obj_b);
+        }
+        let resumed = resumed.finish().0;
+        assert_eq!(resumed.len(), budget);
+        for t in &resumed.trials {
+            assert!(space_b.validate(&t.config), "trial escaped space B: {:?}", t.config);
+        }
+
+        // Cold reference on B.
+        let mut obj_cold = SyntheticObjective::with_space(space_b.clone(), zero);
+        let cold = {
+            let mut run = searcher.start(space_b.clone(), budget, None).unwrap();
+            while !run.done() {
+                run.step(&mut obj_cold);
+            }
+            run.finish().0
+        };
+        let (rb, cb) = (resumed.best().unwrap().value, cold.best().unwrap().value);
+        assert!(
+            (rb - cb).abs() <= 2.0,
+            "projected resume incumbent {rb} vs cold run {cb} diverged beyond tolerance"
+        );
+
+        // Strict flavor completes too; dropped trials re-earn budget.
+        let strict = proj.project_checkpoint(&ck, space_b.clone(), ProjectPolicy::Strict);
+        assert_eq!(strict.report.total(), ck.history.len());
+        assert_eq!(
+            strict.search.history.len(),
+            strict.report.kept,
+            "strict keeps only exact trials"
+        );
+        let mut obj_s = SyntheticObjective::with_space(space_b.clone(), zero);
+        let mut srun =
+            searcher.start(space_b.clone(), budget, Some(&strict.search)).unwrap();
+        while !srun.done() {
+            srun.step(&mut obj_s);
+        }
+        assert_eq!(srun.finish().0.len(), budget);
+    }
+
+    /// Failed (-inf) trials must ride through projection without poisoning
+    /// the warm-started clustering or the resumed proposals.
+    #[test]
+    fn projected_resume_survives_neg_inf_trials() {
+        use crate::search::project::{ProjectPolicy, SpaceProjection};
+        use crate::search::space::Dim;
+
+        /// -inf whenever dim 0 picks its upper half — covering both a
+        /// choice that survives the re-prune (2) and one that does not (3).
+        struct FailTail {
+            space: Space,
+        }
+        impl Objective for FailTail {
+            fn space(&self) -> &Space {
+                &self.space
+            }
+            fn eval(&mut self, c: &Config) -> f64 {
+                if c[0] >= 2 {
+                    f64::NEG_INFINITY
+                } else {
+                    -(c.iter().sum::<usize>() as f64)
+                }
+            }
+        }
+
+        let space_a = Space::new(
+            (0..3).map(|d| Dim::new(format!("d{d}"), vec![0.0, 1.0, 2.0, 3.0])).collect(),
+        );
+        let space_b = Space::new(
+            (0..3).map(|d| Dim::new(format!("d{d}"), vec![0.0, 1.0, 2.0])).collect(),
+        );
+        let p = KmeansTpeParams { n_startup: 12, seed: 4, ..Default::default() };
+        let searcher = BatchSearcher::kmeans_tpe(p, 3);
+        let mut obj = FailTail { space: space_a.clone() };
+        let mut run = searcher.start(space_a.clone(), 40, None).unwrap();
+        while run.history().len() < 21 {
+            run.step(&mut obj);
+        }
+        let ck = run.checkpoint();
+        drop(run);
+        assert!(
+            ck.history.trials.iter().any(|t| t.value == f64::NEG_INFINITY),
+            "seed must produce failed trials for this test to bite"
+        );
+
+        let proj = SpaceProjection::between(&space_a, &space_b);
+        let out = proj.project_checkpoint(&ck, space_b.clone(), ProjectPolicy::Nearest);
+        assert!(out.search.centroids.iter().all(|c| c.is_finite()));
+        // The -inf trials survive as evidence...
+        assert!(out
+            .search
+            .history
+            .trials
+            .iter()
+            .any(|t| t.value == f64::NEG_INFINITY));
+        // ...and the resumed run completes with valid proposals throughout.
+        let mut obj_b = SyntheticObjective::with_space(space_b.clone(), std::time::Duration::ZERO);
+        let mut resumed = searcher.start(space_b.clone(), 40, Some(&out.search)).unwrap();
+        while !resumed.done() {
+            resumed.step(&mut obj_b);
+        }
+        let hist = resumed.finish().0;
+        assert_eq!(hist.len(), 40);
+        for t in &hist.trials {
+            assert!(space_b.validate(&t.config));
+        }
     }
 
     /// Reports fabricated, strongly config-dependent per-eval timings

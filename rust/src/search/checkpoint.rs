@@ -18,7 +18,7 @@
 use anyhow::Context;
 
 use super::history::{History, Trial};
-use super::space::{config_from_json, config_to_json, Config};
+use super::space::{config_from_json, config_to_json, Config, Space};
 use crate::util::json::{dec_f64, dec_f64_arr, enc_f64, enc_f64_arr, obj, Json};
 use crate::util::rng::Rng;
 
@@ -80,9 +80,13 @@ pub struct SearchCheckpoint {
     /// Searcher name ("batch-kmeans-tpe" | "batch-tpe") — resume refuses a
     /// checkpoint taken by a different proposer.
     pub algo: String,
-    /// Space width, as a cheap skew guard (the coordinator checkpoint
-    /// carries the full space; at this layer the caller provides it).
-    pub dims: usize,
+    /// The EXACT space the run searched — full per-dim menus, not just a
+    /// width. Stored configs are choice indices, meaningless against any
+    /// other menus; resume compares this space's fingerprint against the
+    /// new run's, and `search::project::SpaceProjection` uses the menus to
+    /// remap the history when the spaces legitimately differ (a re-pruned
+    /// search space).
+    pub space: Space,
     /// Completed trials, in evaluation order.
     pub history: History,
     /// Proposer annealing rounds taken so far (k-means TPE; 0 for TPE).
@@ -102,7 +106,11 @@ impl SearchCheckpoint {
             self.history.trials.iter().map(|t| t.eval_secs).collect();
         obj(vec![
             ("algo", Json::Str(self.algo.clone())),
-            ("dims", Json::Num(self.dims as f64)),
+            ("space", self.space.to_json()),
+            // Redundant with `space` by construction, and VERIFIED against
+            // it on load: a hand-edited space that kept a stale fingerprint
+            // is rejected instead of silently resuming onto wrong menus.
+            ("fingerprint", Json::Str(self.space.fingerprint())),
             (
                 "history",
                 obj(vec![
@@ -120,7 +128,14 @@ impl SearchCheckpoint {
 
     pub fn from_json(j: &Json) -> anyhow::Result<SearchCheckpoint> {
         let algo = j.req("algo")?.as_str().context("algo")?.to_string();
-        let dims = j.req("dims")?.as_usize().context("dims")?;
+        let space = Space::from_json(j.req("space")?).context("checkpoint space")?;
+        let fp = j.req("fingerprint")?.as_str().context("fingerprint")?;
+        anyhow::ensure!(
+            fp == space.fingerprint(),
+            "checkpoint fingerprint '{fp}' does not match its own space ('{}'): the file \
+             was edited or corrupted",
+            space.fingerprint()
+        );
         let h = j.req("history")?;
         let searcher = h.req("searcher")?.as_str().context("searcher")?.to_string();
         let configs: Vec<Config> = h
@@ -141,9 +156,10 @@ impl SearchCheckpoint {
         );
         for (i, c) in configs.iter().enumerate() {
             anyhow::ensure!(
-                c.len() == dims,
-                "checkpoint trial {i} has {} dims, space has {dims}",
-                c.len()
+                space.validate(c),
+                "checkpoint trial {i} ({c:?}) is invalid for the checkpoint's own \
+                 {}-dim space",
+                space.num_dims()
             );
         }
         let trials = configs
@@ -154,7 +170,7 @@ impl SearchCheckpoint {
             .collect();
         Ok(SearchCheckpoint {
             algo,
-            dims,
+            space,
             history: History { trials, searcher },
             iter: j.req("iter")?.as_usize().context("iter")?,
             centroids: dec_f64_arr(j.req("centroids")?).context("centroids")?,
@@ -167,6 +183,15 @@ impl SearchCheckpoint {
 mod tests {
     use super::*;
 
+    fn sample_space() -> Space {
+        use super::super::space::Dim;
+        Space::new(vec![
+            Dim::new("bits0", vec![8.0, 6.0, 4.0]),
+            Dim::new("bits1", vec![4.0, 3.0, 2.0]),
+            Dim::new("width0", vec![0.75, 1.0]),
+        ])
+    }
+
     fn sample_checkpoint() -> SearchCheckpoint {
         let mut history = History::new("batch-kmeans-tpe");
         history.push(vec![0, 2, 1], 0.75, 0.01);
@@ -177,7 +202,7 @@ mod tests {
         rng.gauss(); // leave a spare pending
         SearchCheckpoint {
             algo: "batch-kmeans-tpe".to_string(),
-            dims: 3,
+            space: sample_space(),
             history,
             iter: 5,
             centroids: vec![0.75, -0.4, -1.5],
@@ -225,12 +250,30 @@ mod tests {
             }
         }
         assert!(SearchCheckpoint::from_json(&j).unwrap_err().to_string().contains("disagree"));
-        // Trial width disagrees with dims.
+        // A tampered space whose fingerprint was not updated is rejected —
+        // the fingerprint is verified against the space it travels with.
         let mut j = ck.to_json();
         if let Json::Obj(m) = &mut j {
-            m.insert("dims".into(), Json::Num(7.0));
+            m.insert("space", sample_space().to_json());
+            m.insert("fingerprint", Json::Str("0000000000000000".into()));
         }
-        assert!(SearchCheckpoint::from_json(&j).is_err());
+        let err = SearchCheckpoint::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        // A trial whose index overruns its dim's menu is rejected.
+        let mut j = ck.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(h)) = m.get_mut("history") {
+                if let Some(Json::Arr(cfgs)) = h.get_mut("configs") {
+                    cfgs[0] = Json::Arr(vec![
+                        Json::Num(9.0),
+                        Json::Num(0.0),
+                        Json::Num(0.0),
+                    ]);
+                }
+            }
+        }
+        let err = SearchCheckpoint::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("invalid"), "{err}");
         // Bad rng word.
         let mut j = ck.to_json();
         if let Json::Obj(m) = &mut j {

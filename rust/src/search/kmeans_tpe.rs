@@ -172,6 +172,16 @@ impl KmeansTpeState {
         warm: Vec<f64>,
     ) -> KmeansTpeState {
         assert_eq!(configs.len(), values.len(), "restore: configs/values disagree");
+        for (i, c) in configs.iter().enumerate() {
+            // A config outside the space means the caller skipped the
+            // fingerprint guard / projection step — refitting surrogates
+            // from it would silently corrupt every later proposal.
+            assert!(
+                space.validate(c),
+                "restore: trial {i} ({c:?}) is invalid for this space — project the \
+                 checkpoint onto it first"
+            );
+        }
         let mut state = KmeansTpeState::new(params, space);
         state.configs = configs;
         state.values = values;

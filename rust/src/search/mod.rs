@@ -11,11 +11,13 @@ pub mod kmeans_tpe;
 pub mod batch;
 pub mod checkpoint;
 pub mod costmodel;
+pub mod project;
 pub mod synthetic;
 
 pub use batch::{eval_batch_parallel, BatchAlgo, BatchRun, BatchSearcher, CachedObjective,
                 ParallelObjective, QPolicy, RoundStat};
 pub use checkpoint::{RngState, SearchCheckpoint};
+pub use project::{ProjectPolicy, ProjectionOutcome, ProjectionReport, SpaceProjection};
 pub use costmodel::CostModel;
 pub use synthetic::SyntheticObjective;
 pub use history::{History, Trial};

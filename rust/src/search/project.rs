@@ -1,0 +1,618 @@
+//! Config projection between overlapping search spaces — the machinery that
+//! makes CROSS-SPACE resume safe and useful.
+//!
+//! The paper's search space is *produced* by Hessian-based pruning, so the
+//! menus a leader searches are a function of sensitivity estimates that can
+//! legitimately change between runs (or, with `--reprune-every`, within
+//! one): a fresh trace estimate moves a layer across a cluster boundary and
+//! its bit menu changes. A checkpoint stores choice INDICES; replaying them
+//! against different menus silently reinterprets every trial (index 1 that
+//! meant 6 bits now means 3) and corrupts the warm-started surrogates. The
+//! fingerprint guard in `BatchSearcher::start` refuses that resume; this
+//! module is the constructive half — [`SpaceProjection::between`] matches
+//! dims by NAME and choices by VALUE, remapping each checkpointed trial onto
+//! the new space:
+//!
+//! * a choice that survived pruning keeps its (re-indexed) slot exactly;
+//! * a pruned-away choice is SNAPPED to the nearest surviving value
+//!   ([`ProjectPolicy::Nearest`]) or the trial is DROPPED
+//!   ([`ProjectPolicy::Strict`]);
+//! * an old dim absent from the new space is marginalized out (the product
+//!   Parzen simply loses that factor);
+//! * a new dim absent from the old space is filled from the prior — a
+//!   deterministic seeded sample, so projecting the same checkpoint twice
+//!   yields byte-identical results.
+//!
+//! The per-trial outcomes are tallied in a [`ProjectionReport`]
+//! (kept + snapped + dropped always sums to the checkpointed trial count)
+//! that the leader logs before resuming.
+
+use super::checkpoint::SearchCheckpoint;
+use super::history::History;
+use super::space::{Config, Space};
+use crate::util::rng::Rng;
+
+/// What to do with a checkpointed trial whose choice was pruned away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProjectPolicy {
+    /// Snap the coordinate to the surviving choice with the nearest value
+    /// (ties break to the lower index). Keeps the whole history — the
+    /// snapped trials are approximate evidence, which is still far better
+    /// than a cold start on flat DNN landscapes.
+    Nearest,
+    /// Drop any trial touching a pruned choice. The surviving history is
+    /// exact — every kept trial's values are unchanged under the new menus.
+    Strict,
+}
+
+impl ProjectPolicy {
+    /// Parse a `--resume-project` setting.
+    pub fn parse(s: &str) -> Option<ProjectPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "nearest" => Some(ProjectPolicy::Nearest),
+            "strict" => Some(ProjectPolicy::Strict),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ProjectPolicy::Nearest => "nearest",
+            ProjectPolicy::Strict => "strict",
+        }
+    }
+}
+
+/// Where one OLD choice lands in the new menu.
+#[derive(Debug, Clone, Copy)]
+struct ChoiceTarget {
+    /// New index holding the bit-identical value, if the choice survived.
+    exact: Option<usize>,
+    /// New index with the nearest value (always defined — menus are
+    /// non-empty; ties break to the lower index).
+    nearest: usize,
+}
+
+/// Source of one NEW dim: the old dim it matched (by name) and where each
+/// old choice lands.
+#[derive(Debug, Clone)]
+struct DimSource {
+    old_dim: usize,
+    /// Indexed by OLD choice index.
+    targets: Vec<ChoiceTarget>,
+}
+
+/// Per-(new, matched) dim tallies for the report.
+#[derive(Debug, Clone)]
+pub struct DimReport {
+    pub name: String,
+    /// Trials whose coordinate in this dim was snapped (nearest policy).
+    pub snapped: usize,
+    /// Trials dropped because this dim's choice was pruned (strict policy;
+    /// a trial failing in several dims counts in each).
+    pub dropped: usize,
+}
+
+/// What happened to a projected history, trial by trial and dim by dim.
+#[derive(Debug, Clone)]
+pub struct ProjectionReport {
+    pub policy: ProjectPolicy,
+    /// Trials carried over with every coordinate exactly preserved.
+    pub kept: usize,
+    /// Trials carried over with at least one snapped (or prior-filled)
+    /// coordinate.
+    pub snapped: usize,
+    /// Trials dropped (strict policy only).
+    pub dropped: usize,
+    pub per_dim: Vec<DimReport>,
+    /// Old dims with no counterpart in the new space (marginalized out).
+    pub dropped_dims: Vec<String>,
+    /// New dims with no counterpart in the old space (prior-filled).
+    pub new_dims: Vec<String>,
+    pub old_fingerprint: String,
+    pub new_fingerprint: String,
+}
+
+impl ProjectionReport {
+    /// Invariant the acceptance tests pin: every checkpointed trial is
+    /// accounted for exactly once.
+    pub fn total(&self) -> usize {
+        self.kept + self.snapped + self.dropped
+    }
+
+    /// Human-readable multi-line summary (the leader logs this on resume).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "[project] space {} -> {} ({} policy): {} kept, {} snapped, {} dropped \
+             of {} trials",
+            self.old_fingerprint,
+            self.new_fingerprint,
+            self.policy.name(),
+            self.kept,
+            self.snapped,
+            self.dropped,
+            self.total()
+        );
+        for d in &self.per_dim {
+            if d.snapped > 0 || d.dropped > 0 {
+                s.push_str(&format!(
+                    "\n[project]   dim '{}': {} snapped, {} dropped",
+                    d.name, d.snapped, d.dropped
+                ));
+            }
+        }
+        if !self.dropped_dims.is_empty() {
+            s.push_str(&format!(
+                "\n[project]   dims marginalized out: {:?}",
+                self.dropped_dims
+            ));
+        }
+        if !self.new_dims.is_empty() {
+            s.push_str(&format!(
+                "\n[project]   new dims filled from the prior: {:?}",
+                self.new_dims
+            ));
+        }
+        s
+    }
+}
+
+/// A projected checkpoint plus the per-trial map the caller needs to keep
+/// any history-aligned side data (the leader's `EvalRecord` log) in sync.
+#[derive(Debug, Clone)]
+pub struct ProjectionOutcome {
+    /// The checkpoint rewritten onto the new space: remapped history, same
+    /// annealing cursor, finite warm centroids, same RNG cursor.
+    pub search: SearchCheckpoint,
+    /// Per OLD trial, in order: its projected config (`None` = dropped).
+    pub map: Vec<Option<Config>>,
+    pub report: ProjectionReport,
+}
+
+/// A dim-name/choice-value matching between two spaces (see module docs).
+#[derive(Debug, Clone)]
+pub struct SpaceProjection {
+    /// Per NEW dim: its old-space source (`None` = brand-new dim).
+    sources: Vec<Option<DimSource>>,
+    new_dim_names: Vec<String>,
+    dropped_dims: Vec<String>,
+    new_dims: Vec<String>,
+    old_fingerprint: String,
+    new_fingerprint: String,
+    /// Seed for deterministic prior fills, derived from both fingerprints.
+    fill_seed: u64,
+}
+
+impl SpaceProjection {
+    /// Match `old` against `new`: dims pair up by name, choices by value.
+    /// O(dims) in the dimension count — a linear name scan per dim would
+    /// be quadratic, a real stall at the thousand-layer spaces the big
+    /// hello cap exists for (menus themselves are tiny, so the per-choice
+    /// scans stay negligible).
+    pub fn between(old: &Space, new: &Space) -> SpaceProjection {
+        let mut old_by_name =
+            std::collections::HashMap::with_capacity(old.num_dims());
+        for (i, od) in old.dims.iter().enumerate() {
+            // First occurrence wins, matching what a linear scan would do
+            // (duplicate names don't occur in built spaces, but stay
+            // deterministic if they ever did).
+            old_by_name.entry(od.name.as_str()).or_insert(i);
+        }
+        let mut matched = vec![false; old.num_dims()];
+        let mut sources = Vec::with_capacity(new.num_dims());
+        let mut new_dims = Vec::new();
+        for nd in &new.dims {
+            let Some(&old_dim) = old_by_name.get(nd.name.as_str()) else {
+                new_dims.push(nd.name.clone());
+                sources.push(None);
+                continue;
+            };
+            matched[old_dim] = true;
+            let targets = old.dims[old_dim]
+                .choices
+                .iter()
+                .map(|&v| {
+                    let exact = nd.choices.iter().position(|&c| c == v);
+                    let nearest = nd
+                        .choices
+                        .iter()
+                        .enumerate()
+                        .min_by(|(_, a), (_, b)| {
+                            (*a - v).abs().total_cmp(&(*b - v).abs())
+                        })
+                        .map(|(i, _)| i)
+                        .expect("dims are never empty");
+                    ChoiceTarget { exact, nearest }
+                })
+                .collect();
+            sources.push(Some(DimSource { old_dim, targets }));
+        }
+        let dropped_dims = old
+            .dims
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !matched[*i])
+            .map(|(_, d)| d.name.clone())
+            .collect();
+        let (old_fp, new_fp) = (old.fingerprint(), new.fingerprint());
+        let fill_seed = u64::from_str_radix(&old_fp, 16).unwrap_or(0)
+            ^ u64::from_str_radix(&new_fp, 16).unwrap_or(0).rotate_left(17);
+        SpaceProjection {
+            sources,
+            new_dim_names: new.dims.iter().map(|d| d.name.clone()).collect(),
+            dropped_dims,
+            new_dims,
+            old_fingerprint: old_fp,
+            new_fingerprint: new_fp,
+            fill_seed,
+        }
+    }
+
+    /// Project one config. `Some((config, inexact))` carries the new
+    /// config and whether any coordinate was snapped or prior-filled;
+    /// `None` means the trial is dropped under the strict policy. `fill`
+    /// draws prior samples for brand-new dims.
+    fn project_config(
+        &self,
+        old: &Config,
+        policy: ProjectPolicy,
+        fill: &mut Rng,
+        new_space: &Space,
+        snapped_dims: &mut [bool],
+        dropped_dims: &mut [bool],
+    ) -> Option<(Config, bool)> {
+        let mut out = Vec::with_capacity(self.sources.len());
+        let mut inexact = false;
+        let mut keep = true;
+        for (d, src) in self.sources.iter().enumerate() {
+            let Some(src) = src else {
+                // Brand-new dim: the checkpoint holds no evidence — fill
+                // from the (uniform) prior. Drawn even for trials that end
+                // up dropped, so the fill stream is policy-independent.
+                out.push(fill.below(new_space.dims[d].k()));
+                inexact = true;
+                continue;
+            };
+            let t = src.targets[old[src.old_dim]];
+            match (t.exact, policy) {
+                (Some(i), _) => out.push(i),
+                (None, ProjectPolicy::Nearest) => {
+                    out.push(t.nearest);
+                    inexact = true;
+                    snapped_dims[d] = true;
+                }
+                (None, ProjectPolicy::Strict) => {
+                    dropped_dims[d] = true;
+                    keep = false;
+                    // Keep scanning so the report blames EVERY offending
+                    // dim, not just the first.
+                    out.push(t.nearest);
+                }
+            }
+        }
+        if keep {
+            Some((out, inexact))
+        } else {
+            None
+        }
+    }
+
+    /// Project a trial list. Returns the per-trial map (`None` = dropped)
+    /// and the tally. `kept + snapped + dropped == configs.len()` always.
+    pub fn project_trials(
+        &self,
+        configs: &[Config],
+        new_space: &Space,
+        policy: ProjectPolicy,
+    ) -> (Vec<Option<Config>>, ProjectionReport) {
+        let nd = self.sources.len();
+        let mut fill = Rng::new(self.fill_seed ^ 0x9E37_79B9_7F4A_7C15);
+        let mut per_dim: Vec<DimReport> = self
+            .new_dim_names
+            .iter()
+            .map(|n| DimReport { name: n.clone(), snapped: 0, dropped: 0 })
+            .collect();
+        let (mut kept, mut snapped, mut dropped) = (0usize, 0usize, 0usize);
+        let mut map = Vec::with_capacity(configs.len());
+        for c in configs {
+            let mut sd = vec![false; nd];
+            let mut dd = vec![false; nd];
+            match self.project_config(c, policy, &mut fill, new_space, &mut sd, &mut dd) {
+                Some((nc, inexact)) => {
+                    debug_assert!(new_space.validate(&nc), "projected config invalid");
+                    if inexact {
+                        snapped += 1;
+                    } else {
+                        kept += 1;
+                    }
+                    for (d, &s) in sd.iter().enumerate() {
+                        if s {
+                            per_dim[d].snapped += 1;
+                        }
+                    }
+                    map.push(Some(nc));
+                }
+                None => {
+                    dropped += 1;
+                    for (d, &x) in dd.iter().enumerate() {
+                        if x {
+                            per_dim[d].dropped += 1;
+                        }
+                    }
+                    map.push(None);
+                }
+            }
+        }
+        let report = ProjectionReport {
+            policy,
+            kept,
+            snapped,
+            dropped,
+            per_dim,
+            dropped_dims: self.dropped_dims.clone(),
+            new_dims: self.new_dims.clone(),
+            old_fingerprint: self.old_fingerprint.clone(),
+            new_fingerprint: self.new_fingerprint.clone(),
+        };
+        (map, report)
+    }
+
+    /// Project a whole [`SearchCheckpoint`] onto `new_space`. The surviving
+    /// trials keep their values and timings (a snapped config's measured
+    /// value is approximate evidence — the surrogates re-fit from it, they
+    /// never re-trust it as exact); the annealing round counter and the RNG
+    /// cursor carry over unchanged, and the warm centroids are filtered to
+    /// finite values (failed-trial sentinels must not disable the warm
+    /// start downstream).
+    pub fn project_checkpoint(
+        &self,
+        ck: &SearchCheckpoint,
+        new_space: Space,
+        policy: ProjectPolicy,
+    ) -> ProjectionOutcome {
+        let configs: Vec<Config> =
+            ck.history.trials.iter().map(|t| t.config.clone()).collect();
+        let (map, report) = self.project_trials(&configs, &new_space, policy);
+        let mut history = History::new(&ck.history.searcher);
+        for (t, m) in ck.history.trials.iter().zip(&map) {
+            if let Some(nc) = m {
+                history.push(nc.clone(), t.value, t.eval_secs);
+            }
+        }
+        let centroids: Vec<f64> =
+            ck.centroids.iter().copied().filter(|c| c.is_finite()).collect();
+        let search = SearchCheckpoint {
+            algo: ck.algo.clone(),
+            space: new_space,
+            history,
+            iter: ck.iter,
+            centroids,
+            rng: ck.rng.clone(),
+        };
+        ProjectionOutcome { search, map, report }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::checkpoint::RngState;
+    use crate::search::space::Dim;
+
+    fn old_space() -> Space {
+        Space::new(vec![
+            Dim::new("bits:a", vec![8.0, 6.0, 4.0, 3.0, 2.0]),
+            Dim::new("bits:b", vec![6.0, 4.0, 3.0]),
+            Dim::new("width:w", vec![0.75, 1.0, 1.25]),
+        ])
+    }
+
+    /// bits:a pruned to its top half, bits:b re-windowed, width unchanged.
+    fn repruned_space() -> Space {
+        Space::new(vec![
+            Dim::new("bits:a", vec![8.0, 6.0]),
+            Dim::new("bits:b", vec![4.0, 3.0, 2.0]),
+            Dim::new("width:w", vec![0.75, 1.0, 1.25]),
+        ])
+    }
+
+    fn ck_of(space: Space, trials: Vec<(Config, f64)>) -> SearchCheckpoint {
+        let mut history = History::new("batch-kmeans-tpe");
+        for (c, v) in trials {
+            history.push(c, v, 0.01);
+        }
+        SearchCheckpoint {
+            algo: "batch-kmeans-tpe".to_string(),
+            space,
+            history,
+            iter: 4,
+            centroids: vec![0.9, 0.1],
+            rng: RngState::of(&Rng::new(5)),
+        }
+    }
+
+    #[test]
+    fn identical_spaces_keep_everything_exactly() {
+        let proj = SpaceProjection::between(&old_space(), &old_space());
+        let configs = vec![vec![0, 0, 0], vec![4, 2, 2], vec![2, 1, 1]];
+        for policy in [ProjectPolicy::Nearest, ProjectPolicy::Strict] {
+            let (map, rep) = proj.project_trials(&configs, &old_space(), policy);
+            assert_eq!(rep.kept, 3);
+            assert_eq!(rep.snapped + rep.dropped, 0);
+            assert_eq!(rep.total(), configs.len());
+            for (m, c) in map.iter().zip(&configs) {
+                assert_eq!(m.as_ref().unwrap(), c);
+            }
+        }
+    }
+
+    #[test]
+    fn surviving_choices_reindex_and_pruned_ones_snap_or_drop() {
+        let (old, new) = (old_space(), repruned_space());
+        let proj = SpaceProjection::between(&old, &new);
+        // bits:a=6.0 (old idx 1 -> new idx 1), bits:b=4.0 (old 1 -> new 0),
+        // width 1.0 (unchanged idx 1): fully exact.
+        // bits:a=2.0 was pruned; nearest survivor is 6.0 (new idx 1).
+        // bits:b=6.0 was pruned; nearest survivor is 4.0 (new idx 0).
+        let configs = vec![vec![1, 1, 1], vec![4, 0, 2]];
+        let (map, rep) =
+            proj.project_trials(&configs, &new, ProjectPolicy::Nearest);
+        assert_eq!((rep.kept, rep.snapped, rep.dropped), (1, 1, 0));
+        assert_eq!(map[0].as_ref().unwrap(), &vec![1, 0, 1]);
+        assert_eq!(map[1].as_ref().unwrap(), &vec![1, 0, 2]);
+        assert_eq!(rep.per_dim[0].snapped, 1);
+        assert_eq!(rep.per_dim[1].snapped, 1);
+
+        let (map, rep) = proj.project_trials(&configs, &new, ProjectPolicy::Strict);
+        assert_eq!((rep.kept, rep.snapped, rep.dropped), (1, 0, 1));
+        assert_eq!(map[0].as_ref().unwrap(), &vec![1, 0, 1]);
+        assert!(map[1].is_none());
+        // Strict blames EVERY offending dim of the dropped trial.
+        assert_eq!(rep.per_dim[0].dropped, 1);
+        assert_eq!(rep.per_dim[1].dropped, 1);
+        assert_eq!(rep.total(), configs.len());
+    }
+
+    #[test]
+    fn entirely_changed_menu_drops_all_under_strict_snaps_all_under_nearest() {
+        // Satellite edge case: bits:b's menu changed COMPLETELY.
+        let old = Space::new(vec![
+            Dim::new("bits:a", vec![8.0, 6.0]),
+            Dim::new("bits:b", vec![8.0, 6.0]),
+        ]);
+        let new = Space::new(vec![
+            Dim::new("bits:a", vec![8.0, 6.0]),
+            Dim::new("bits:b", vec![3.0, 2.0]),
+        ]);
+        let proj = SpaceProjection::between(&old, &new);
+        let configs = vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]];
+        let (map, rep) = proj.project_trials(&configs, &new, ProjectPolicy::Strict);
+        assert_eq!((rep.kept, rep.snapped, rep.dropped), (0, 0, 4));
+        assert!(map.iter().all(|m| m.is_none()));
+        let (map, rep) = proj.project_trials(&configs, &new, ProjectPolicy::Nearest);
+        assert_eq!((rep.kept, rep.snapped, rep.dropped), (0, 4, 0));
+        // Every old bits:b value is closest to the new menu's 3.0 (idx 0).
+        for m in &map {
+            assert_eq!(m.as_ref().unwrap()[1], 0);
+        }
+        let rendered = rep.render();
+        assert!(rendered.contains("4 snapped"), "{rendered}");
+    }
+
+    #[test]
+    fn dropped_dims_marginalize_and_new_dims_fill_deterministically() {
+        let old = Space::new(vec![
+            Dim::new("bits:gone", vec![8.0, 6.0]),
+            Dim::new("bits:kept", vec![6.0, 4.0, 3.0]),
+        ]);
+        let new = Space::new(vec![
+            Dim::new("bits:kept", vec![6.0, 4.0, 3.0]),
+            Dim::new("bits:fresh", vec![4.0, 3.0, 2.0]),
+        ]);
+        let proj = SpaceProjection::between(&old, &new);
+        let configs = vec![vec![0, 2], vec![1, 0], vec![1, 1]];
+        let (map1, rep) = proj.project_trials(&configs, &new, ProjectPolicy::Strict);
+        // Marginalizing an old dim never drops trials; the prior fill makes
+        // every carried trial inexact, so they count as snapped.
+        assert_eq!((rep.kept, rep.snapped, rep.dropped), (0, 3, 0));
+        assert_eq!(rep.dropped_dims, vec!["bits:gone".to_string()]);
+        assert_eq!(rep.new_dims, vec!["bits:fresh".to_string()]);
+        for (m, c) in map1.iter().zip(&configs) {
+            let m = m.as_ref().unwrap();
+            assert_eq!(m[0], c[1], "kept dim must carry its old coordinate");
+            assert!(m[1] < 3, "prior fill out of range");
+        }
+        // Deterministic: a second projection is byte-identical.
+        let proj2 = SpaceProjection::between(&old, &new);
+        let (map2, _) = proj2.project_trials(&configs, &new, ProjectPolicy::Strict);
+        assert_eq!(map1, map2);
+    }
+
+    #[test]
+    fn nearest_tie_breaks_to_the_lower_index() {
+        let old = Space::new(vec![Dim::new("d", vec![5.0])]);
+        let new = Space::new(vec![Dim::new("d", vec![4.0, 6.0])]);
+        let proj = SpaceProjection::between(&old, &new);
+        let (map, _) =
+            proj.project_trials(&[vec![0]], &new, ProjectPolicy::Nearest);
+        // |5-4| == |5-6|: the lower index wins, deterministically.
+        assert_eq!(map[0].as_ref().unwrap(), &vec![0]);
+    }
+
+    #[test]
+    fn checkpoint_projection_keeps_values_and_sanitizes_centroids() {
+        let (old, new) = (old_space(), repruned_space());
+        let mut ck = ck_of(
+            old.clone(),
+            vec![
+                (vec![1, 1, 1], 0.9),
+                (vec![4, 0, 2], f64::NEG_INFINITY), // failed eval, snapped
+                (vec![0, 2, 0], 0.4),
+            ],
+        );
+        // A failure sentinel that leaked into the warm centroids must not
+        // survive projection (it would silently disable the Lloyd warm
+        // start after restore).
+        ck.centroids = vec![0.9, f64::NEG_INFINITY, 0.1];
+        let proj = SpaceProjection::between(&old, &new);
+        let out = proj.project_checkpoint(&ck, new.clone(), ProjectPolicy::Nearest);
+        assert_eq!(out.report.total(), 3);
+        assert_eq!(out.search.history.len(), 3);
+        assert_eq!(out.search.space.fingerprint(), new.fingerprint());
+        assert_eq!(out.search.iter, ck.iter);
+        assert_eq!(out.search.rng, ck.rng);
+        assert_eq!(out.search.centroids, vec![0.9, 0.1]);
+        // Values ride along untouched — including the -inf failure.
+        assert_eq!(out.search.history.trials[0].value, 0.9);
+        assert_eq!(out.search.history.trials[1].value, f64::NEG_INFINITY);
+        for t in &out.search.history.trials {
+            assert!(new.validate(&t.config), "projected trial invalid: {:?}", t.config);
+        }
+        // The map aligns with the original trial order for side-data
+        // (EvalRecord) projection.
+        assert_eq!(out.map.len(), 3);
+        assert_eq!(
+            out.map[0].as_ref().unwrap(),
+            &out.search.history.trials[0].config
+        );
+    }
+
+    #[test]
+    fn projected_histories_restore_into_both_surrogate_states() {
+        use crate::search::kmeans_tpe::{KmeansTpeParams, KmeansTpeState};
+        use crate::search::tpe::{TpeParams, TpeState};
+        let (old, new) = (old_space(), repruned_space());
+        let ck = ck_of(
+            old.clone(),
+            vec![
+                (vec![0, 0, 0], 0.7),
+                (vec![4, 2, 2], f64::NEG_INFINITY),
+                (vec![2, 1, 1], 0.2),
+            ],
+        );
+        let proj = SpaceProjection::between(&old, &new);
+        let out = proj.project_checkpoint(&ck, new.clone(), ProjectPolicy::Nearest);
+        let configs: Vec<Config> =
+            out.search.history.trials.iter().map(|t| t.config.clone()).collect();
+        let values: Vec<f64> =
+            out.search.history.trials.iter().map(|t| t.value).collect();
+        let mut km = KmeansTpeState::restore(
+            KmeansTpeParams::default(),
+            new.clone(),
+            configs.clone(),
+            values.clone(),
+            out.search.iter,
+            out.search.centroids.clone(),
+        );
+        let mut rng = Rng::new(3);
+        // Proposals off the projected warm start stay inside the new space.
+        for _ in 0..4 {
+            assert!(new.validate(&km.propose(&mut rng)));
+        }
+        let mut tpe =
+            TpeState::restore(TpeParams::default(), new.clone(), configs, values);
+        for _ in 0..4 {
+            assert!(new.validate(&tpe.propose(&mut rng)));
+        }
+    }
+}

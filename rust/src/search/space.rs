@@ -100,6 +100,26 @@ impl Space {
             && config.iter().zip(&self.dims).all(|(&c, d)| c < d.k())
     }
 
+    /// Content fingerprint of the space: FNV-1a over every dim's name and
+    /// choice values (length-prefixed, like the pretrained-snapshot digest).
+    /// Two spaces fingerprint equal iff they present the SAME menus in the
+    /// same order — the property checkpoint resume needs, because stored
+    /// configs are choice INDICES and only mean anything against the exact
+    /// menus they were drawn from. A dim-count check cannot see a re-pruned
+    /// menu of the same width; this can.
+    pub fn fingerprint(&self) -> String {
+        let mut h = crate::util::Fnv1a::new();
+        for d in &self.dims {
+            h.write_u64(d.name.len() as u64);
+            h.write(d.name.as_bytes());
+            h.write_u64(d.choices.len() as u64);
+            for &c in &d.choices {
+                h.write_u64(c.to_bits());
+            }
+        }
+        h.hex()
+    }
+
     /// Wire/checkpoint encoding: the full menu per dimension, so a worker
     /// rebuilds the *pruned* space the leader searched, not the default.
     pub fn to_json(&self) -> Json {
@@ -164,6 +184,27 @@ mod tests {
         // Malformed configs are rejected, not coerced.
         assert!(config_from_json(&crate::util::json::Json::parse("[1,\"x\"]").unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn fingerprint_sees_menu_values_not_just_shape() {
+        let s = space();
+        assert_eq!(s.fingerprint(), space().fingerprint());
+        assert_eq!(s.fingerprint().len(), 16);
+        // Same dim count and widths, ONE choice value changed: different
+        // fingerprint — exactly the skew the dim-count resume guard missed.
+        let mut repruned = space();
+        repruned.dims[1].choices = vec![4.0, 3.0, 8.0];
+        assert_ne!(s.fingerprint(), repruned.fingerprint());
+        // A renamed dim changes it too (projection matches dims by name).
+        let mut renamed = space();
+        renamed.dims[0].name = "bits9".to_string();
+        assert_ne!(s.fingerprint(), renamed.fingerprint());
+        // Length prefixes keep boundaries honest: moving a choice across a
+        // dim boundary must not collide.
+        let a = Space::new(vec![Dim::new("a", vec![1.0, 2.0]), Dim::new("b", vec![3.0])]);
+        let b = Space::new(vec![Dim::new("a", vec![1.0]), Dim::new("b", vec![2.0, 3.0])]);
+        assert_ne!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

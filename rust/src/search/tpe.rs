@@ -106,6 +106,15 @@ impl TpeState {
         values: Vec<f64>,
     ) -> TpeState {
         assert_eq!(configs.len(), values.len(), "restore: configs/values disagree");
+        for (i, c) in configs.iter().enumerate() {
+            // Same contract as `KmeansTpeState::restore`: cross-space
+            // histories must be projected before they reach a surrogate.
+            assert!(
+                space.validate(c),
+                "restore: trial {i} ({c:?}) is invalid for this space — project the \
+                 checkpoint onto it first"
+            );
+        }
         let mut state = TpeState::new(params, space);
         for (config, value) in configs.into_iter().zip(values) {
             state.observe(config, value);

@@ -47,22 +47,17 @@ impl ParamSnapshot {
     /// starting points (different model, seed, or step count) and the
     /// session is rejected instead of silently searching skewed objectives.
     pub fn digest(&self) -> String {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        let mut mix = |bytes: &[u8]| {
-            for &b in bytes {
-                h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
-            }
-        };
+        let mut h = crate::util::Fnv1a::new();
         for t in &self.tensors {
             // Length-prefix each tensor: without a boundary marker the
             // flattened byte streams of [[1,2],[3]] and [[1],[2,3]] would
             // collide, hiding a layer-structure mismatch.
-            mix(&(t.len() as u64).to_le_bytes());
+            h.write_u64(t.len() as u64);
             for &x in t {
-                mix(&x.to_bits().to_le_bytes());
+                h.write(&x.to_bits().to_le_bytes());
             }
         }
-        format!("{h:016x}")
+        h.hex()
     }
 }
 

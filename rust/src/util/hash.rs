@@ -1,0 +1,61 @@
+//! Content digests. One FNV-1a core backs every compatibility-sensitive
+//! digest in the system — the pretrained-snapshot digest the session
+//! handshake compares and the search-space fingerprint the checkpoint
+//! resume guard compares — so the constants, framing discipline, and hex
+//! rendering can never drift apart between them.
+
+/// Incremental 64-bit FNV-1a hasher.
+///
+/// Callers length-prefix variable-length fields themselves (`write` the
+/// length, then the bytes): without a boundary marker the flattened byte
+/// streams of `[[1,2],[3]]` and `[[1],[2,3]]` would collide, hiding a
+/// structure mismatch.
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    /// Finish as the 16-hex-digit rendering every digest in the system uses.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors_and_framing_disambiguates() {
+        // Empty input = the FNV-1a offset basis.
+        assert_eq!(Fnv1a::new().hex(), "cbf29ce484222325");
+        // Classic reference vector: fnv1a64("a") = af63dc4c8601ec8c.
+        let mut h = Fnv1a::new();
+        h.write(b"a");
+        assert_eq!(h.hex(), "af63dc4c8601ec8c");
+        // Length-prefix framing keeps boundaries honest.
+        let mut x = Fnv1a::new();
+        x.write_u64(2);
+        x.write(b"ab");
+        x.write_u64(1);
+        x.write(b"c");
+        let mut y = Fnv1a::new();
+        y.write_u64(1);
+        y.write(b"a");
+        y.write_u64(2);
+        y.write(b"bc");
+        assert_ne!(x.hex(), y.hex());
+    }
+}

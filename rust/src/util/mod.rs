@@ -3,10 +3,12 @@
 
 pub mod rng;
 pub mod json;
+pub mod hash;
 pub mod stats;
 pub mod cli;
 pub mod timer;
 pub mod proptest;
 
+pub use hash::Fnv1a;
 pub use rng::Rng;
 pub use timer::Timer;

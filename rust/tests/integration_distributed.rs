@@ -12,9 +12,11 @@ use std::time::Duration;
 
 use sammpq::coordinator::service::WorkerHandle;
 use sammpq::coordinator::{serve_on_listener, serve_sessions_on, PoolCfg, RemoteObjective,
-                          ServeOpts, SessionSpec, SyntheticBackend, SyntheticFactory};
-use sammpq::search::{BatchSearcher, KmeansTpeParams, Objective, Searcher, Space,
-                     SyntheticObjective};
+                          ServeOpts, SessionSpec, SpaceBuild, SyntheticBackend,
+                          SyntheticFactory};
+use sammpq::hessian::{prune_space, PrunedSpace};
+use sammpq::search::{BatchSearcher, Dim, KmeansTpeParams, Objective, ProjectPolicy, Searcher,
+                     Space, SpaceProjection, SyntheticObjective};
 
 /// A pool config whose straggler deadline cannot fire on instant
 /// objectives — keeps exact served-count asserts deterministic on a loaded
@@ -253,6 +255,98 @@ fn concurrent_leaders_share_one_farm_bit_identically() {
         }
         let served = h1.join().unwrap() + h2.join().unwrap();
         assert_eq!(served, budget_a + budget_b);
+    });
+}
+
+/// The joint bit space a Hessian pruning induces: one dim per layer, menu
+/// from that layer's sensitivity cluster (what `build_space` does, minus
+/// the ModelMeta it needs).
+fn space_from(p: &PrunedSpace) -> Space {
+    Space::new(
+        (0..p.cluster.len())
+            .map(|l| Dim::new(format!("bits:l{l}"), p.menu_for_layer(l).to_vec()))
+            .collect(),
+    )
+}
+
+#[test]
+fn cross_space_resume_reprunes_mid_session_and_resyncs_the_farm() {
+    with_timeout(240, || {
+        // The --reprune-every wiring, end to end over TCP: a leader-side
+        // search runs over a Hessian-pruned space A on a 2-worker
+        // serve_sessions farm, tightens its own menus at a round boundary
+        // (re-cluster the same sensitivities with a larger k), PROJECTS the
+        // in-flight checkpoint onto the new space B, re-syncs the farm over
+        // the v3 handshake, and finishes on B — without re-paying the
+        // already-evaluated trials.
+        let traces = [900.0, 850.0, 300.0, 120.0, 80.0, 40.0, 12.0, 5.0, 1.0, 0.5];
+        let counts = [100usize; 10];
+        let pruned_a = prune_space(&traces, &counts, 3);
+        let space_a = space_from(&pruned_a);
+        let pruned_b = pruned_a.reprune(5);
+        let space_b = space_from(&pruned_b);
+        assert_ne!(
+            space_a.fingerprint(),
+            space_b.fingerprint(),
+            "re-pruning with k=5 must actually change the menus"
+        );
+
+        let (a1, h1) = spawn_farm_worker();
+        let (a2, h2) = spawn_farm_worker();
+        let addrs = vec![a1, a2];
+        let mut remote = RemoteObjective::connect_session(
+            SessionSpec::synthetic(space_a.clone()),
+            &addrs,
+            no_steal_cfg(),
+        )
+        .expect("session connect");
+
+        let budget = 30;
+        let params = KmeansTpeParams { n_startup: 8, seed: 13, ..Default::default() };
+        let searcher = BatchSearcher::kmeans_tpe(params, 3);
+        let mut run = searcher.start(space_a.clone(), budget, None).unwrap();
+        while run.history().len() < 15 {
+            run.step(&mut remote);
+        }
+        // Round boundary: freeze, re-prune, project, re-sync, continue.
+        let ck = run.checkpoint();
+        drop(run);
+        let evaluated_before = ck.history.len();
+        let proj = SpaceProjection::between(&space_a, &space_b);
+        let out = proj.project_checkpoint(&ck, space_b.clone(), ProjectPolicy::Nearest);
+        // Acceptance: the report accounts for every checkpointed trial.
+        assert_eq!(
+            out.report.kept + out.report.snapped + out.report.dropped,
+            evaluated_before
+        );
+        assert_eq!(out.report.dropped, 0, "nearest never drops");
+        for t in &out.search.history.trials {
+            assert!(space_b.validate(&t.config), "projected trial invalid: {:?}", t.config);
+        }
+        remote.resync_build(&SpaceBuild { space: space_b.clone(), kinds: Vec::new() })
+            .expect("farm re-sync over the v3 handshake");
+
+        let mut resumed = searcher.start(space_b.clone(), budget, Some(&out.search)).unwrap();
+        while !resumed.done() {
+            resumed.step(&mut remote);
+        }
+        let hist = resumed.finish().0;
+        assert_eq!(hist.len(), budget);
+        for t in &hist.trials {
+            assert!(space_b.validate(&t.config), "trial escaped space B: {:?}", t.config);
+        }
+        // Post-resync trials were really evaluated by the farm over the
+        // NEW space (the synthetic value is a pure function of indices).
+        for t in &hist.trials[evaluated_before..] {
+            assert_eq!(t.value, SyntheticObjective::expected_value(&t.config));
+        }
+
+        remote.shutdown().expect("farm shutdown");
+        // Projection spared the already-paid evaluations: across both
+        // spaces the farm served exactly the budget — a cold restart on B
+        // would have re-paid every pre-re-prune trial.
+        let served = h1.join().unwrap() + h2.join().unwrap();
+        assert_eq!(served, budget);
     });
 }
 
