@@ -1,0 +1,412 @@
+//! Deterministic fault injection for elastic farms.
+//!
+//! The elastic-membership machinery (drain notices, preemption, mid-search
+//! joins, degraded starts) is only trustworthy if its failure schedules can
+//! be *replayed*: a flake that depends on when the OS preempted a worker is
+//! undebuggable. This module scripts faults instead of waiting for them:
+//!
+//! * [`FaultPlan`] — a per-worker schedule of [`FaultAction`]s (latency
+//!   blips, torn connections, drains, hard preemptions) plus farm-level
+//!   late-join rounds, generated bit-reproducibly from a seed via
+//!   [`util::rng`](crate::util::rng) ([`FaultPlan::chaos`]) or written by
+//!   hand for targeted tests.
+//! * [`FaultInjector`] — the worker-side driver
+//!   ([`serve_sessions_driven`](super::serve_sessions_driven) polls it
+//!   between messages, so faults always land at a MESSAGE BOUNDARY: an
+//!   eval is either fully served + replied, or never started — which is
+//!   what makes the pool's exactly-once requeue provable).
+//! * [`WorkerControl`] — a cloneable handle that flips the same drain /
+//!   preempt latches from outside the serve loop: tests script "drain
+//!   worker 1 at round 4" with it, and `sammpq worker` wires SIGTERM to it
+//!   so real preemption notices (spot capacity) drain instead of killing
+//!   mid-eval.
+//!
+//! Faults are injected where the SCHEDULE lives (the serve loop), never
+//! into objective values: the pool's invariants under test are "every slot
+//! served, no `-inf`, history bit-identical" — a plan may reorder and
+//! re-place work, but it must never be able to change a result.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// One scripted fault, applied at the serve loop's next message boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Stall the serve loop for `millis` — a latency blip (GC pause, noisy
+    /// neighbor). Exercises straggler deadlines without changing results.
+    DelayEval { millis: u64 },
+    /// Tear every open connection mid-line (partial JSON + hard close) but
+    /// keep the listener up — the classic network blip. The leader sees a
+    /// mid-message disconnect, requeues, and redials.
+    DropConnections,
+    /// Announce `{"drain"}` on every connection and stop serving evals:
+    /// the graceful preemption-notice path (leader requeues in-flight
+    /// slots exactly once, byes the sessions, retires the handle).
+    Drain,
+    /// Hard preemption: half-close every connection at the message
+    /// boundary (written replies still flush) and exit the serve loop.
+    /// The leader sees a clean EOF — retire + requeue, no redial.
+    Preempt,
+}
+
+/// A [`FaultAction`] scheduled after this worker has served `after_evals`
+/// evaluations (0 = before the first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub after_evals: usize,
+    pub action: FaultAction,
+}
+
+/// One worker's fault schedule, ordered by trigger point.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultScript {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultScript {
+    /// Build a script; events are stably ordered by `after_evals` (ties
+    /// keep insertion order, so a delay scripted before a drain at the
+    /// same threshold fires first).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultScript {
+        events.sort_by_key(|e| e.after_evals);
+        FaultScript { events }
+    }
+
+    /// A script that never fires.
+    pub fn empty() -> FaultScript {
+        FaultScript::default()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+}
+
+/// A whole farm's scripted failure schedule: one [`FaultScript`] per
+/// worker plus the rounds at which extra workers join mid-search. Plans
+/// compare by value, so "same seed ⇒ same plan" is directly assertable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The seed the plan was generated from (0 for hand-written plans).
+    pub seed: u64,
+    scripts: Vec<FaultScript>,
+    /// Round indices at which the harness should join one extra worker
+    /// (farm-level events live in the plan, not in any worker's script).
+    pub late_joins: Vec<usize>,
+}
+
+impl FaultPlan {
+    /// A hand-written plan (no late joiners).
+    pub fn scripted(scripts: Vec<FaultScript>) -> FaultPlan {
+        FaultPlan { seed: 0, scripts, late_joins: Vec::new() }
+    }
+
+    /// Generate a reproducible chaos schedule for `workers` workers over a
+    /// horizon of roughly `horizon_evals` served evaluations per worker:
+    /// everyone gets latency blips; workers past the first may also get one
+    /// torn-connection blip and (half the time) a terminal drain or
+    /// preemption in the second half of the horizon. Worker 0 never
+    /// drains, preempts, or drops — the farm must survive its own chaos,
+    /// so one worker is always left standing. Same seed ⇒ identical plan,
+    /// bit for bit (the per-worker streams are independent forks, so
+    /// adding a worker never reshuffles the others).
+    pub fn chaos(workers: usize, horizon_evals: usize, seed: u64) -> FaultPlan {
+        let mut root = Rng::new(seed ^ 0xFA17_B01D_CA05_5EED);
+        let span = horizon_evals.max(4);
+        let mut scripts = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let mut rng = root.fork(w as u64 + 1);
+            let mut events = Vec::new();
+            for _ in 0..(1 + rng.below(2)) {
+                events.push(FaultEvent {
+                    after_evals: rng.below(span),
+                    action: FaultAction::DelayEval { millis: 5 + rng.below(20) as u64 },
+                });
+            }
+            if w > 0 {
+                if rng.bool(0.5) {
+                    events.push(FaultEvent {
+                        after_evals: rng.below(span),
+                        action: FaultAction::DropConnections,
+                    });
+                }
+                if rng.bool(0.5) {
+                    let action =
+                        if rng.bool(0.5) { FaultAction::Drain } else { FaultAction::Preempt };
+                    events.push(FaultEvent {
+                        after_evals: span / 2 + rng.below(span - span / 2),
+                        action,
+                    });
+                }
+            }
+            scripts.push(FaultScript::new(events));
+        }
+        let mut joins = root.fork(0x10_1A);
+        let late_joins =
+            if joins.bool(0.5) { vec![1 + joins.below(3)] } else { Vec::new() };
+        FaultPlan { seed, scripts, late_joins }
+    }
+
+    /// Worker `w`'s schedule (empty past the scripted farm size).
+    pub fn script_for(&self, w: usize) -> FaultScript {
+        self.scripts.get(w).cloned().unwrap_or_default()
+    }
+
+    pub fn scripts(&self) -> &[FaultScript] {
+        &self.scripts
+    }
+}
+
+/// Process-wide SIGTERM latch: the installed handler only flips this
+/// (atomic store — async-signal-safe); serve loops whose [`WorkerControl`]
+/// opted in via [`WorkerControl::honor_sigterm`] observe it as a drain
+/// request. Opt-in, so in-process test farms never see another test's
+/// signals.
+static SIGTERM_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// True once SIGTERM arrived (after [`install_sigterm_drain`]).
+pub fn sigterm_drain_pending() -> bool {
+    SIGTERM_DRAIN.load(Ordering::SeqCst)
+}
+
+/// Clear the SIGTERM latch (tests; a supervisor that finished one drain).
+pub fn clear_sigterm_drain() {
+    SIGTERM_DRAIN.store(false, Ordering::SeqCst)
+}
+
+#[cfg(unix)]
+extern "C" fn on_sigterm(_signum: i32) {
+    SIGTERM_DRAIN.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGTERM → drain-latch handler (raw `signal(2)`; libc is not
+/// vendored). `sammpq worker` calls this so a preemption notice drains the
+/// worker — in-flight eval finishes and is replied, then the serve loop
+/// announces `{"drain"}` and exits once its leaders detach — instead of
+/// the default terminate-mid-eval. No-op off unix.
+pub fn install_sigterm_drain() {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        const SIGTERM: i32 = 15;
+        unsafe {
+            let _ = signal(SIGTERM, on_sigterm);
+        }
+    }
+}
+
+/// Cloneable out-of-band control for one serve loop: tests and the CLI
+/// flip drain/preempt latches here; the loop's [`FaultInjector`] polls
+/// them between messages. Latches are sticky — once draining, always
+/// draining.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerControl {
+    drain: Arc<AtomicBool>,
+    preempt: Arc<AtomicBool>,
+    sigterm: bool,
+}
+
+impl WorkerControl {
+    pub fn new() -> WorkerControl {
+        WorkerControl::default()
+    }
+
+    /// Also treat the process-wide SIGTERM latch as a drain request (the
+    /// real `sammpq worker` wants this; in-process test farms do not).
+    pub fn honor_sigterm(mut self) -> WorkerControl {
+        self.sigterm = true;
+        self
+    }
+
+    /// Request a graceful drain (preemption notice).
+    pub fn drain(&self) {
+        self.drain.store(true, Ordering::SeqCst);
+    }
+
+    /// Request a hard preemption (clean close + exit at the next message
+    /// boundary).
+    pub fn preempt(&self) {
+        self.preempt.store(true, Ordering::SeqCst);
+    }
+
+    pub fn drain_requested(&self) -> bool {
+        self.drain.load(Ordering::SeqCst) || (self.sigterm && sigterm_drain_pending())
+    }
+
+    pub fn preempt_requested(&self) -> bool {
+        self.preempt.load(Ordering::SeqCst)
+    }
+}
+
+/// What the serve loop should do right now (polled between messages).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultDecision {
+    Continue,
+    Delay(Duration),
+    DropConnections,
+    Drain,
+    Preempt,
+}
+
+/// The per-worker fault driver: a [`FaultScript`] cursor layered over a
+/// [`WorkerControl`]. Scripted drains/preempts funnel through the control
+/// latches, so they are sticky exactly like external ones, and a manual
+/// preempt always outranks anything scripted.
+pub struct FaultInjector {
+    control: WorkerControl,
+    script: FaultScript,
+    cursor: usize,
+}
+
+impl FaultInjector {
+    /// No script, default control: the injector a plain
+    /// [`serve_sessions_on`](super::serve_sessions_on) runs under — it
+    /// never fires on its own.
+    pub fn inert() -> FaultInjector {
+        FaultInjector::manual(WorkerControl::new())
+    }
+
+    /// No script; faults come only from `control` (the CLI worker:
+    /// SIGTERM drain, admin preempt).
+    pub fn manual(control: WorkerControl) -> FaultInjector {
+        FaultInjector::scripted(control, FaultScript::empty())
+    }
+
+    /// Script plus out-of-band control (tests).
+    pub fn scripted(control: WorkerControl, script: FaultScript) -> FaultInjector {
+        FaultInjector { control, script, cursor: 0 }
+    }
+
+    /// Decide at a message boundary, given how many evals this serve loop
+    /// has completed. At most one scripted event fires per poll (the loop
+    /// polls every iteration, so back-to-back events land on consecutive
+    /// boundaries).
+    pub fn poll(&mut self, served: usize) -> FaultDecision {
+        if self.control.preempt_requested() {
+            return FaultDecision::Preempt;
+        }
+        if let Some(ev) = self.script.events().get(self.cursor) {
+            if served >= ev.after_evals {
+                self.cursor += 1;
+                match ev.action {
+                    FaultAction::DelayEval { millis } => {
+                        return FaultDecision::Delay(Duration::from_millis(millis));
+                    }
+                    FaultAction::DropConnections => return FaultDecision::DropConnections,
+                    FaultAction::Drain => self.control.drain(),
+                    FaultAction::Preempt => self.control.preempt(),
+                }
+            }
+        }
+        if self.control.preempt_requested() {
+            FaultDecision::Preempt
+        } else if self.control.drain_requested() {
+            FaultDecision::Drain
+        } else {
+            FaultDecision::Continue
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_plans_replay_bit_for_bit() {
+        let a = FaultPlan::chaos(4, 40, 77);
+        let b = FaultPlan::chaos(4, 40, 77);
+        assert_eq!(a, b, "same seed must script the same chaos");
+        let c = FaultPlan::chaos(4, 40, 78);
+        assert_ne!(a, c, "different seeds should diverge");
+        // Per-worker streams are independent forks: growing the farm must
+        // not reshuffle the schedules of the workers that were already in
+        // it.
+        let wider = FaultPlan::chaos(6, 40, 77);
+        for w in 0..4 {
+            assert_eq!(a.script_for(w), wider.script_for(w), "worker {w} reshuffled");
+        }
+    }
+
+    #[test]
+    fn chaos_never_kills_worker_zero_and_scripts_are_ordered() {
+        for seed in 0..50 {
+            let plan = FaultPlan::chaos(5, 30, seed);
+            for (w, script) in plan.scripts().iter().enumerate() {
+                let mut last = 0;
+                for ev in script.events() {
+                    assert!(ev.after_evals >= last, "script not ordered");
+                    last = ev.after_evals;
+                    if w == 0 {
+                        assert!(
+                            matches!(ev.action, FaultAction::DelayEval { .. }),
+                            "worker 0 drew {:?} under seed {seed} — the farm \
+                             must always keep one survivor",
+                            ev.action
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn injector_fires_script_events_once_in_order() {
+        let script = FaultScript::new(vec![
+            FaultEvent { after_evals: 5, action: FaultAction::DropConnections },
+            FaultEvent { after_evals: 2, action: FaultAction::DelayEval { millis: 7 } },
+        ]);
+        let mut inj = FaultInjector::scripted(WorkerControl::new(), script);
+        assert_eq!(inj.poll(0), FaultDecision::Continue);
+        assert_eq!(inj.poll(1), FaultDecision::Continue);
+        // The delay scripted at 2 fires first despite insertion order...
+        assert_eq!(inj.poll(3), FaultDecision::Delay(Duration::from_millis(7)));
+        // ...exactly once.
+        assert_eq!(inj.poll(4), FaultDecision::Continue);
+        assert_eq!(inj.poll(6), FaultDecision::DropConnections);
+        assert_eq!(inj.poll(100), FaultDecision::Continue);
+    }
+
+    #[test]
+    fn scripted_drain_is_sticky_and_preempt_outranks_it() {
+        let script = FaultScript::new(vec![FaultEvent {
+            after_evals: 1,
+            action: FaultAction::Drain,
+        }]);
+        let control = WorkerControl::new();
+        let mut inj = FaultInjector::scripted(control.clone(), script);
+        assert_eq!(inj.poll(0), FaultDecision::Continue);
+        assert_eq!(inj.poll(1), FaultDecision::Drain);
+        assert_eq!(inj.poll(2), FaultDecision::Drain, "drain latches");
+        control.preempt();
+        assert_eq!(inj.poll(3), FaultDecision::Preempt);
+        assert_eq!(inj.poll(4), FaultDecision::Preempt, "preempt latches too");
+    }
+
+    #[test]
+    fn sigterm_latch_is_opt_in() {
+        // No real signal raised: the handler is just a function, and
+        // raising SIGTERM in a multi-threaded test binary would leak the
+        // latch into concurrently running serve loops. install() itself is
+        // exercised for "does not crash".
+        install_sigterm_drain();
+        clear_sigterm_drain();
+        let plain = WorkerControl::new();
+        let opted = WorkerControl::new().honor_sigterm();
+        assert!(!plain.drain_requested() && !opted.drain_requested());
+        #[cfg(unix)]
+        {
+            on_sigterm(15);
+            assert!(sigterm_drain_pending());
+            assert!(opted.drain_requested(), "opted-in control sees SIGTERM");
+            assert!(!plain.drain_requested(), "plain control must not");
+            clear_sigterm_drain();
+            assert!(!opted.drain_requested());
+        }
+    }
+}

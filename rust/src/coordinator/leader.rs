@@ -26,7 +26,7 @@ use crate::baselines::{Evolutionary, EvolutionaryParams, GpBo, GpBoParams, Rando
                        Reinforce, ReinforceParams};
 use crate::coordinator::evaluator::{build_space, DnnObjective, EvalRecord, ObjectiveCfg,
                                     SpaceBuild};
-use crate::coordinator::service::{PoolCfg, RemoteObjective, SessionSpec};
+use crate::coordinator::service::{JoinRegistry, PoolCfg, RemoteObjective, SessionSpec};
 use crate::hessian::pruner::{prune_space, PrunedSpace};
 use crate::hw::HwConfig;
 use crate::search::{BatchAlgo, BatchSearcher, Config, History, KmeansTpe, KmeansTpeParams,
@@ -169,6 +169,14 @@ pub struct SessionOpts {
     /// session instead of shutting the farm down) — the multi-tenant
     /// deployment mode, where one farm backs many leaders.
     pub keep_workers: bool,
+    /// `--registry <host:port>`: bind a [`JoinRegistry`] on this address
+    /// for the duration of a remote search, so `sammpq worker --join`
+    /// processes can enlist mid-run — the pool adopts them at the next
+    /// round boundary via the same space-sync handshake a startup worker
+    /// gets. Remote backend only; ignored in-process.
+    ///
+    /// [`JoinRegistry`]: crate::coordinator::service::JoinRegistry
+    pub registry: Option<String>,
 }
 
 /// An objective whose evaluations produce full [`EvalRecord`]s, in eval
@@ -721,6 +729,19 @@ impl<'a> Leader<'a> {
                     digest: pre.snapshot.digest(),
                 };
                 let mut objective = RemoteObjective::connect_session(spec, addrs, *pool)?;
+                // `--registry`: accept `worker --join` announcements for the
+                // lifetime of the search (the handle's Drop stops the accept
+                // thread); the pool dials announced addresses at round
+                // boundaries and adopts them through the usual handshake.
+                let _registry = match &opts.registry {
+                    Some(addr) => {
+                        let reg = JoinRegistry::bind(addr)?;
+                        eprintln!("leader: join registry listening on {}", reg.local_addr());
+                        objective.pool.attach_joiners(reg.queue());
+                        Some(reg)
+                    }
+                    None => None,
+                };
                 let out = self.drive(algo, &mut objective, opts, pruned);
                 // Best-effort either way (workers outlive a failed search
                 // for the next session): on a shared farm, `bye` only this

@@ -32,21 +32,31 @@
 //! space is a hard error unless `--resume-project nearest|strict`
 //! projects the history through `search::project`, and
 //! `--reprune-every R` tightens a live session's menus at round
-//! boundaries, re-syncing remote farms over the same v3 handshake. See
-//! `search::batch`, `search::checkpoint`, `search::project`,
-//! `search::costmodel`, and docs/ARCHITECTURE.md for the protocol state
-//! machine and formats.
+//! boundaries, re-syncing remote farms over the same v3 handshake. Farm
+//! membership is ELASTIC: workers join a running search at runtime
+//! (`--join <leader:port>` → `service::JoinRegistry` → pool adoption
+//! mid-round), leave gracefully by draining (a `{"drain"}` notice — on
+//! SIGTERM too — makes the pool requeue their in-flight slots exactly
+//! once and retire the handle), and the whole lifecycle is testable under
+//! scripted, seeded fault schedules (`faults::FaultPlan` driving
+//! `serve_sessions_driven`). See `search::batch`, `search::checkpoint`,
+//! `search::project`, `search::costmodel`, and docs/ARCHITECTURE.md for
+//! the protocol state machine and formats.
 
 pub mod evaluator;
+pub mod faults;
 pub mod service;
 pub mod leader;
 pub mod report;
 
 pub use evaluator::{build_space, DimKind, DnnBackend, DnnFactory, DnnObjective, EvalRecord,
                     ObjectiveCfg, SpaceBuild};
+pub use faults::{install_sigterm_drain, FaultAction, FaultDecision, FaultEvent, FaultInjector,
+                 FaultPlan, FaultScript, WorkerControl};
 pub use leader::{project_session_checkpoint, Algo, CheckpointStore, EvalBackend, Leader,
                  LeaderCfg, RecordedObjective, SearchReport, SessionCheckpoint, SessionOpts};
-pub use service::{serve_on_listener, serve_sessions, serve_sessions_on, serve_worker,
-                  serve_worker_on, BackendFactory, PlainBackend, PoolCfg, RemoteObjective,
-                  RoundEvals, ServeOpts, SessionSpec, SessionTable, SyntheticBackend,
-                  SyntheticFactory, WorkerBackend, WorkerPool, PROTOCOL_VERSION};
+pub use service::{announce_join, serve_on_listener, serve_sessions, serve_sessions_driven,
+                  serve_sessions_on, serve_worker, serve_worker_on, BackendFactory, JoinRegistry,
+                  PlainBackend, PoolCfg, RemoteObjective, RoundEvals, ServeOpts, SessionSpec,
+                  SessionTable, SyntheticBackend, SyntheticFactory, WorkerBackend, WorkerPool,
+                  PROTOCOL_VERSION};

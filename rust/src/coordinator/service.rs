@@ -74,17 +74,21 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::evaluator::{DimKind, EvalRecord, ObjectiveCfg, SpaceBuild};
+use crate::coordinator::faults::{FaultDecision, FaultInjector};
 use crate::hw::HwConfig;
 use crate::search::space::{Config, Space};
 use crate::search::{CostModel, Objective, SyntheticObjective};
 use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
 use crate::util::timer::Ewma;
 
 /// Wire protocol version. Bumped when a message shape changes; a worker
@@ -731,9 +735,38 @@ pub fn serve_sessions_on(
     factory: &dyn BackendFactory,
     opts: ServeOpts,
 ) -> Result<usize> {
-    use std::sync::atomic::{AtomicBool, Ordering};
-    use std::sync::Arc;
+    serve_sessions_driven(listener, factory, opts, FaultInjector::inert())
+}
 
+/// How long a draining worker waits for its leaders to `bye` the sessions
+/// and close the connections before it exits anyway — a vanished leader
+/// must not pin a preempted worker past its grace period.
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// [`serve_sessions_on`] under a [`FaultInjector`] — the elastic-membership
+/// runtime. The injector is polled once per event-loop iteration:
+///
+/// * `Delay` stalls the loop (a slow/overloaded worker);
+/// * `DropConnections` tears every connection mid-message (torn partial
+///   line = unclean disconnect on the leader) while the listener keeps
+///   accepting, so the leader's redial finds the process alive;
+/// * `Drain` announces `{"drain": true}` on every connection, then serves
+///   only `bye` frames until the connections empty (or [`DRAIN_GRACE`]
+///   expires) and exits cleanly — in-flight evals are DROPPED unanswered,
+///   because the drain notice made the leader requeue them and a late
+///   reply would double-serve the slot;
+/// * `Preempt` half-closes every connection (written replies still flush —
+///   a full `Shutdown::Both` with unread inbound frames can RST the socket
+///   and destroy them), lingers briefly reading-and-discarding, and exits.
+///
+/// Production workers run this with [`FaultInjector::manual`] (SIGTERM
+/// latches a drain); tests script it with [`FaultInjector::scripted`].
+pub fn serve_sessions_driven(
+    listener: TcpListener,
+    factory: &dyn BackendFactory,
+    opts: ServeOpts,
+    mut faults: FaultInjector,
+) -> Result<usize> {
     let stop = Arc::new(AtomicBool::new(false));
     let (tx, rx) = mpsc::channel::<MuxEvent>();
     {
@@ -774,23 +807,115 @@ pub fn serve_sessions_on(
     let mut conns: HashMap<usize, TcpStream> = HashMap::new();
     let mut next_conn = 0usize;
     let mut served = 0usize;
+    let mut draining: Option<Instant> = None;
     loop {
-        match rx.recv_timeout(opts.tick) {
-            Ok(MuxEvent::Conn(stream)) => match stream.try_clone() {
-                Ok(writer) => {
-                    let conn = next_conn;
-                    next_conn += 1;
-                    conns.insert(conn, writer);
-                    spawn_mux_reader(tx.clone(), conn, BufReader::new(stream));
+        match faults.poll(served) {
+            FaultDecision::Continue => {}
+            FaultDecision::Delay(d) => std::thread::sleep(d),
+            FaultDecision::DropConnections => {
+                // Simulated crash: tear every connection mid-message (the
+                // torn partial line reads as an unclean disconnect, never a
+                // clean EOF) while the listener keeps accepting — the
+                // leader's bounded reconnect finds the process alive.
+                for stream in conns.values_mut() {
+                    let _ = stream.write_all(b"{\"torn");
+                    let _ = stream.shutdown(Shutdown::Both);
                 }
-                Err(e) => eprintln!("[worker] connection rejected: {e}"),
-            },
+                conns.clear();
+            }
+            FaultDecision::Drain => {
+                if draining.is_none() {
+                    eprintln!(
+                        "[worker] draining ({served} evals served): notifying leaders"
+                    );
+                    for stream in conns.values_mut() {
+                        let _ =
+                            write_line(stream, &obj(vec![("drain", Json::Bool(true))]));
+                    }
+                    draining = Some(Instant::now() + DRAIN_GRACE);
+                }
+            }
+            FaultDecision::Preempt => {
+                // Hard preemption, reply-safe: half-close so written
+                // replies flush behind a FIN, keep READING (discarding) so
+                // unread inbound frames cannot RST the socket, then exit.
+                eprintln!("[worker] preempted after {served} evals");
+                stop.store(true, Ordering::Relaxed);
+                for stream in conns.values_mut() {
+                    let _ = stream.shutdown(Shutdown::Write);
+                }
+                let linger = Instant::now() + Duration::from_millis(500);
+                while !conns.is_empty() && Instant::now() < linger {
+                    match rx.recv_timeout(opts.tick) {
+                        Ok(MuxEvent::Gone { conn, .. }) => {
+                            conns.remove(&conn);
+                        }
+                        Ok(_) => {} // dropped on the floor — we are gone
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                return Ok(served);
+            }
+        }
+        if let Some(deadline) = draining {
+            if conns.is_empty() || Instant::now() >= deadline {
+                eprintln!("[worker] drained; exiting with {served} evals served");
+                stop.store(true, Ordering::Relaxed);
+                return Ok(served);
+            }
+        }
+        match rx.recv_timeout(opts.tick) {
+            Ok(MuxEvent::Conn(stream)) => {
+                if draining.is_some() {
+                    // A connection accepted mid-drain would only inherit
+                    // the retirement; refusing it sends the dialer to a
+                    // healthy worker instead.
+                    drop(stream);
+                } else {
+                    match stream.try_clone() {
+                        Ok(writer) => {
+                            let conn = next_conn;
+                            next_conn += 1;
+                            conns.insert(conn, writer);
+                            spawn_mux_reader(tx.clone(), conn, BufReader::new(stream));
+                        }
+                        Err(e) => eprintln!("[worker] connection rejected: {e}"),
+                    }
+                }
+            }
             Ok(MuxEvent::Msg { conn, msg }) => {
                 if msg.get("shutdown").and_then(|j| j.as_bool()).unwrap_or(false) {
                     stop.store(true, Ordering::Relaxed);
                     return Ok(served);
                 }
-                if let Some(writer) = conns.get_mut(&conn) {
+                if draining.is_some() {
+                    // Draining: evals are DROPPED unanswered (the leader
+                    // requeued them on the drain notice; a late reply
+                    // would double-serve the slot). `bye` still acks —
+                    // that IS the drain completing — and a fresh hello is
+                    // politely refused.
+                    if let Some(writer) = conns.get_mut(&conn) {
+                        let reply_failed = if msg.get("bye").is_some() {
+                            serve_mux_msg(factory, &mut table, writer, &msg, &mut served)
+                                .is_err()
+                        } else if msg.get("hello").is_some() {
+                            write_line(
+                                writer,
+                                &error_reply(
+                                    "session",
+                                    "worker is draining".to_string(),
+                                ),
+                            )
+                            .is_err()
+                        } else {
+                            false
+                        };
+                        if reply_failed {
+                            conns.remove(&conn);
+                        }
+                    }
+                } else if let Some(writer) = conns.get_mut(&conn) {
                     if serve_mux_msg(factory, &mut table, writer, &msg, &mut served)
                         .is_err()
                     {
@@ -973,6 +1098,149 @@ fn spawn_mux_reader(tx: Sender<MuxEvent>, conn: usize, mut reader: BufReader<Tcp
     });
 }
 
+// ---------------------------------------------------------------------------
+// Runtime membership: the join registry
+// ---------------------------------------------------------------------------
+
+/// Leader-side registry endpoint for `--join`: late workers announce
+/// themselves (`{"join": {"proto": 3, "addr": "host:port"}}`) and the pool
+/// adopts them mid-round. The registry only QUEUES addresses — adoption
+/// (dial, handshake of every open session, entry into `fill_idle`
+/// rotation) happens on the pool thread between events, so membership
+/// changes can never race round bookkeeping.
+pub struct JoinRegistry {
+    addr: String,
+    queue: Arc<Mutex<Vec<String>>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl JoinRegistry {
+    /// Bind the registry endpoint (port 0 works) and start its accept
+    /// thread. The thread stops when the registry is dropped.
+    pub fn bind(addr: &str) -> Result<JoinRegistry> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind join registry {addr}"))?;
+        let local = listener.local_addr()?.to_string();
+        let queue: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        {
+            let queue = Arc::clone(&queue);
+            let stop = Arc::clone(&stop);
+            listener.set_nonblocking(true)?;
+            std::thread::spawn(move || loop {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // The non-blocking flag must not leak onto the
+                        // accepted socket (platform-dependent inheritance).
+                        if stream.set_nonblocking(false).is_err() {
+                            continue;
+                        }
+                        if let Err(e) = handle_join_conn(stream, &queue) {
+                            eprintln!("[registry] join rejected: {e:#}");
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                    Err(e) => {
+                        eprintln!("[registry] accept failed: {e}");
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            });
+        }
+        Ok(JoinRegistry { addr: local, queue, stop })
+    }
+
+    /// The bound address (the real port when bound with port 0).
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The announcement queue a pool attaches
+    /// ([`WorkerPool::attach_joiners`]).
+    pub fn queue(&self) -> Arc<Mutex<Vec<String>>> {
+        Arc::clone(&self.queue)
+    }
+}
+
+impl Drop for JoinRegistry {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// One registry connection: read the join frame, validate, queue, ack.
+fn handle_join_conn(stream: TcpStream, queue: &Mutex<Vec<String>>) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    reader.get_ref().set_read_timeout(Some(Duration::from_secs(5)))?;
+    let msg = read_json_line(&mut reader)?
+        .ok_or_else(|| anyhow::anyhow!("peer closed before announcing"))?;
+    let Some(join) = msg.get("join") else {
+        let detail = "expected a join frame".to_string();
+        let _ = write_line(&mut writer, &error_reply("unknown", detail.clone()));
+        anyhow::bail!(detail);
+    };
+    let proto = join.get("proto").and_then(|v| v.as_i64());
+    if proto != Some(PROTOCOL_VERSION as i64) {
+        let detail = format!(
+            "protocol version mismatch: joiner speaks {proto:?}, leader speaks \
+             {PROTOCOL_VERSION}"
+        );
+        let _ = write_line(&mut writer, &error_reply("proto", detail.clone()));
+        anyhow::bail!(detail);
+    }
+    let addr = join
+        .get("addr")
+        .and_then(|v| v.as_str())
+        .context("join frame names no addr")?
+        .to_string();
+    queue.lock().unwrap().push(addr.clone());
+    write_line(
+        &mut writer,
+        &obj(vec![(
+            "join_ack",
+            obj(vec![("proto", Json::Num(PROTOCOL_VERSION as f64))]),
+        )]),
+    )?;
+    eprintln!("[registry] worker {addr} announced; queued for adoption");
+    Ok(())
+}
+
+/// Worker side of `--join`: announce `advertise` to the leader's registry
+/// and wait (bounded) for the ack. The worker must already be LISTENING on
+/// `advertise` before announcing — the pool may dial immediately.
+pub fn announce_join(registry: &str, advertise: &str) -> Result<()> {
+    let stream = connect_with_retry(registry)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    reader.get_ref().set_read_timeout(Some(Duration::from_secs(5)))?;
+    write_line(
+        &mut writer,
+        &obj(vec![(
+            "join",
+            obj(vec![
+                ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+                ("addr", Json::Str(advertise.to_string())),
+            ]),
+        )]),
+    )?;
+    let reply = read_json_line(&mut reader)
+        .context("registry did not answer the join")?
+        .ok_or_else(|| anyhow::anyhow!("registry closed during the join handshake"))?;
+    if reply.get("join_ack").is_some() {
+        return Ok(());
+    }
+    let kind = reply.get("kind").and_then(|v| v.as_str()).unwrap_or("?");
+    let detail =
+        reply.get("error").and_then(|v| v.as_str()).unwrap_or("unparseable reply");
+    anyhow::bail!("registry rejected the join ({kind}): {detail}")
+}
+
 /// The v3 hello frame opening session `sid` with `spec` — shared by the
 /// connect-time handshake and the pool's mid-stream re-sync
 /// ([`WorkerPool::open_session`]).
@@ -1024,15 +1292,35 @@ fn client_handshake(
     anyhow::bail!("worker rejected the session ({kind}): {detail}")
 }
 
+/// Stable per-address seed (FNV-1a) for backoff jitter: every worker
+/// address gets its own deterministic jitter stream, so a restarted farm's
+/// redials spread out instead of thundering in lockstep — reproducibly.
+fn addr_seed(addr: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in addr.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic backoff jitter: uniform in [0.5, 1.5) x `base`, drawn
+/// from a seeded stream — de-synchronizes retry storms without giving up
+/// bit-for-bit replayability.
+fn jittered(base: Duration, rng: &mut Rng) -> Duration {
+    base.mul_f64(0.5 + rng.f64())
+}
+
 /// Retrying TCP connect — workers may still be compiling artifacts.
 fn connect_with_retry(addr: &str) -> Result<TcpStream> {
     let mut delay = Duration::from_millis(50);
+    let mut rng = Rng::new(addr_seed(addr));
     for attempt in 0..60 {
         match TcpStream::connect(addr) {
             Ok(stream) => return Ok(stream),
             Err(e) if attempt < 59 => {
                 let _ = e;
-                std::thread::sleep(delay);
+                std::thread::sleep(jittered(delay, &mut rng));
                 delay = (delay * 2).min(Duration::from_secs(2));
             }
             Err(e) => return Err(e.into()),
@@ -1210,6 +1498,12 @@ pub struct PoolCfg {
     /// service time (up to D x the service time), which only makes
     /// re-dispatch deadlines MORE conservative, never thrashy.
     pub pipeline_depth: usize,
+    /// Extra seed folded into every per-address backoff-jitter stream
+    /// (reconnect backoff, pending-joiner dials). Zero is fine — jitter is
+    /// deterministic per address either way; distinct leaders sharing a
+    /// farm can set distinct seeds so their retry storms also
+    /// de-correlate from each other.
+    pub jitter_seed: u64,
 }
 
 impl Default for PoolCfg {
@@ -1221,6 +1515,7 @@ impl Default for PoolCfg {
             reconnect_backoff: Duration::from_millis(100),
             tick: Duration::from_millis(5),
             pipeline_depth: 2,
+            jitter_seed: 0,
         }
     }
 }
@@ -1245,6 +1540,10 @@ enum PoolEvent {
     /// knows. Either way the connection is recycled and its reconnect
     /// re-handshakes every open session (self-healing).
     Reject { worker: usize, generation: u64, detail: String },
+    /// The worker announced it is draining (preemption notice / SIGTERM):
+    /// stop dispatching, requeue its in-flight slots exactly once, `bye`
+    /// its sessions, and retire the handle cleanly — no redial.
+    Drain { worker: usize, generation: u64 },
 }
 
 struct PoolWorker {
@@ -1269,7 +1568,28 @@ struct PoolWorker {
     outstanding: HashMap<usize, Outstanding>,
     /// Evaluations dispatched to this worker so far (stats).
     dispatched: usize,
+    /// Deterministic backoff-jitter stream, seeded from the worker's
+    /// address (plus [`PoolCfg::jitter_seed`]) — reconnect delays spread
+    /// out across a restarted farm instead of thundering in lockstep.
+    jitter: Rng,
 }
+
+/// An address the pool wants as a worker but is not connected to yet: an
+/// unreachable startup address (degraded start) or a runtime joiner
+/// announced through the [`JoinRegistry`]. The adoption loop dials these
+/// between pool events, with jittered exponential backoff.
+struct PendingJoiner {
+    addr: String,
+    attempts_left: usize,
+    next_attempt: Instant,
+    backoff: Duration,
+    jitter: Rng,
+}
+
+/// Dial attempts a pending joiner gets before the pool gives up on it —
+/// the same patience the startup connect loop has, but spent
+/// asynchronously between pool events instead of blocking the leader.
+const JOINER_DIAL_ATTEMPTS: usize = 60;
 
 /// Per-round working state of [`WorkerPool::evaluate_full`].
 struct Round<'c> {
@@ -1345,7 +1665,7 @@ pub struct RoundEvals {
 /// (separate processes OR threads in one test binary) sharing a worker
 /// farm must never collide in a worker's session table.
 fn auto_session_id() -> String {
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::atomic::AtomicU64;
     static NEXT: AtomicU64 = AtomicU64::new(0);
     let nanos = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -1393,6 +1713,17 @@ pub struct WorkerPool {
     pub requeued: usize,
     /// Successful reconnections.
     pub reconnects: usize,
+    /// Runtime-join queue shared with a [`JoinRegistry`] (`None` until
+    /// [`attach_joiners`](Self::attach_joiners)).
+    joiners: Option<Arc<Mutex<Vec<String>>>>,
+    /// Addresses the pool keeps dialing between events: unreachable
+    /// startup addrs (degraded start) and announced joiners not yet
+    /// adopted.
+    pending: Vec<PendingJoiner>,
+    /// Workers adopted at runtime (joins + degraded-start catch-ups).
+    pub adopted: usize,
+    /// Workers that left through the drain protocol.
+    pub drained: usize,
 }
 
 impl WorkerPool {
@@ -1435,10 +1766,46 @@ impl WorkerPool {
         let mut pool = WorkerPool::empty(cfg);
         pool.sessions =
             sessions.into_iter().map(|(id, spec)| PoolSession::new(id, spec)).collect();
-        for addr in addrs {
-            let stream = connect_with_retry(addr)?;
-            pool.push_worker(Some(addr.clone()), stream)
-                .with_context(|| format!("worker {addr}"))?;
+        // Degraded start: retry the whole address list (workers may still
+        // be compiling artifacts), but once at least ONE worker is up stop
+        // blocking on the rest — they become pending joiners the adoption
+        // loop keeps dialing mid-search. Only a handshake REJECTION
+        // (digest/space mismatch) stays a hard error: that is a
+        // misconfigured farm, not a slow one.
+        let mut unreached: Vec<String> = addrs.to_vec();
+        let mut delay = Duration::from_millis(50);
+        let mut rng = Rng::new(pool.cfg.jitter_seed ^ addr_seed(&addrs.join(",")));
+        for attempt in 0..60 {
+            let mut still = Vec::new();
+            for addr in unreached {
+                match TcpStream::connect(&addr) {
+                    Ok(stream) => pool
+                        .push_worker(Some(addr.clone()), stream)
+                        .with_context(|| format!("worker {addr}"))?,
+                    Err(e) => {
+                        if attempt == 0 {
+                            eprintln!(
+                                "[pool] worker {addr} unreachable ({e}); will keep trying"
+                            );
+                        }
+                        still.push(addr);
+                    }
+                }
+            }
+            unreached = still;
+            if unreached.is_empty() || pool.capacity() > 0 {
+                break;
+            }
+            anyhow::ensure!(attempt < 59, "no worker reachable: {}", addrs.join(", "));
+            std::thread::sleep(jittered(delay, &mut rng));
+            delay = (delay * 2).min(Duration::from_secs(2));
+        }
+        for addr in unreached {
+            eprintln!(
+                "[pool] starting degraded: {addr} still unreachable, queued as a \
+                 pending joiner"
+            );
+            pool.note_pending(addr);
         }
         Ok(pool)
     }
@@ -1471,6 +1838,10 @@ impl WorkerPool {
             redispatched: 0,
             requeued: 0,
             reconnects: 0,
+            joiners: None,
+            pending: Vec::new(),
+            adopted: 0,
+            drained: 0,
         }
     }
 
@@ -1485,6 +1856,11 @@ impl WorkerPool {
             client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
         }
         let w = self.workers.len();
+        // Address-less (adopted-stream) workers cannot reconnect, so their
+        // jitter stream is only a formality; index-derived seed keeps it
+        // distinct anyway.
+        let jitter_seed =
+            self.cfg.jitter_seed ^ addr.as_deref().map(addr_seed).unwrap_or(w as u64);
         self.workers.push(PoolWorker {
             addr,
             writer: Some(writer),
@@ -1497,6 +1873,7 @@ impl WorkerPool {
             evals_since_connect: 0,
             outstanding: HashMap::new(),
             dispatched: 0,
+            jitter: Rng::new(jitter_seed),
         });
         spawn_reader(self.tx.clone(), w, 0, reader);
         Ok(())
@@ -1536,6 +1913,91 @@ impl WorkerPool {
     /// Spec an open session was synced with (re-sync flows clone + edit it).
     pub fn session_spec(&self, sid: &str) -> Option<&SessionSpec> {
         self.sessions.iter().find(|s| s.id == sid).map(|s| &s.spec)
+    }
+
+    /// Attach a [`JoinRegistry`]'s announcement queue: addresses announced
+    /// there are adopted between pool events (`--registry` on the leader,
+    /// `--join` on the worker).
+    pub fn attach_joiners(&mut self, queue: Arc<Mutex<Vec<String>>>) {
+        self.joiners = Some(queue);
+    }
+
+    /// Addresses queued for adoption (degraded-start leftovers plus
+    /// announced joiners not yet connected).
+    pub fn pending_joiners(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Queue `addr` for adoption, deduplicating against handles the
+    /// reconnect machinery still owns (non-retired) and already-pending
+    /// entries. A RETIRED handle with the same address is fair game — a
+    /// drained worker re-announcing is a legitimate rejoin.
+    fn note_pending(&mut self, addr: String) {
+        let owned = self
+            .workers
+            .iter()
+            .any(|pw| pw.addr.as_deref() == Some(addr.as_str()) && !pw.retired);
+        if owned || self.pending.iter().any(|p| p.addr == addr) {
+            return;
+        }
+        let jitter = Rng::new(self.cfg.jitter_seed ^ addr_seed(&addr));
+        self.pending.push(PendingJoiner {
+            addr,
+            attempts_left: JOINER_DIAL_ATTEMPTS,
+            next_attempt: Instant::now(),
+            backoff: Duration::from_millis(50),
+            jitter,
+        });
+    }
+
+    /// Dial due pending joiners and adopt the ones that answer: the
+    /// connect-time handshake runs for EVERY open session (the strict
+    /// acking `open_session` relies on), the handle joins the rotation,
+    /// and the caller's next `fill_idle` starts feeding it — in the same
+    /// round it landed. Called between pool events, so membership changes
+    /// never race round bookkeeping.
+    fn adopt_joiners(&mut self) {
+        if let Some(queue) = &self.joiners {
+            let announced = std::mem::take(&mut *queue.lock().unwrap());
+            for addr in announced {
+                self.note_pending(addr);
+            }
+        }
+        if self.pending.is_empty() {
+            return;
+        }
+        let mut still = Vec::new();
+        for mut p in std::mem::take(&mut self.pending) {
+            if Instant::now() < p.next_attempt {
+                still.push(p);
+                continue;
+            }
+            match TcpStream::connect(&p.addr)
+                .map_err(anyhow::Error::from)
+                .and_then(|stream| self.push_worker(Some(p.addr.clone()), stream))
+            {
+                Ok(()) => {
+                    self.adopted += 1;
+                    eprintln!(
+                        "[pool] adopted worker {} (capacity now {})",
+                        p.addr,
+                        self.capacity()
+                    );
+                }
+                Err(e) => {
+                    p.attempts_left = p.attempts_left.saturating_sub(1);
+                    if p.attempts_left == 0 {
+                        eprintln!("[pool] giving up on joiner {}: {e:#}", p.addr);
+                    } else {
+                        p.backoff = (p.backoff * 2).min(Duration::from_secs(2));
+                        p.next_attempt =
+                            Instant::now() + jittered(p.backoff, &mut p.jitter);
+                        still.push(p);
+                    }
+                }
+            }
+        }
+        self.pending = still;
     }
 
     /// Open an ADDITIONAL auto-named session on the live farm mid-stream —
@@ -1729,12 +2191,16 @@ impl WorkerPool {
         };
         while r.remaining > 0 {
             self.try_reconnect();
+            self.adopt_joiners();
             self.fill_idle(&mut r);
             self.steal_stragglers(&mut r);
             if r.remaining == 0 {
                 break;
             }
-            if self.workers.iter().all(|pw| !pw.alive) && !self.reconnect_possible() {
+            if self.workers.iter().all(|pw| !pw.alive)
+                && !self.reconnect_possible()
+                && self.pending.is_empty()
+            {
                 anyhow::bail!(
                     "worker pool exhausted with {} evaluations unfinished",
                     r.remaining
@@ -1878,7 +2344,7 @@ impl WorkerPool {
             let can_reconnect =
                 !pw.retired && pw.reconnects_left > 0 && pw.addr.is_some();
             if can_reconnect {
-                pw.next_reconnect = Some(Instant::now() + pw.backoff);
+                pw.next_reconnect = Some(Instant::now() + jittered(pw.backoff, &mut pw.jitter));
             } else {
                 pw.retired = true;
             }
@@ -2016,7 +2482,34 @@ impl WorkerPool {
                 }
                 self.fail_worker(w, &detail, false, r);
             }
+            PoolEvent::Drain { worker: w, generation } => {
+                if generation != self.workers[w].generation {
+                    return;
+                }
+                self.drain_worker(w, r);
+            }
         }
+    }
+
+    /// Honor a worker's drain notice: `bye` its sessions (the draining
+    /// worker serves exactly those frames before exiting), half-close the
+    /// connection so the worker's drain loop sees it empty, and retire the
+    /// handle as a CLEAN departure — no redial — requeueing whatever it
+    /// still held in flight. Per-connection FIFO makes the requeue exact:
+    /// every reply written before the drain notice was already processed
+    /// when the notice arrives, and the worker answers no eval after it,
+    /// so "outstanding now" is precisely the set of slots that will never
+    /// come back — each requeued once, none poisoned, none duplicated.
+    fn drain_worker(&mut self, w: usize, r: Option<&mut Round>) {
+        if let Some(stream) = self.workers[w].writer.as_mut() {
+            for sess in &self.sessions {
+                let _ =
+                    write_line(stream, &obj(vec![("bye", Json::Str(sess.id.clone()))]));
+            }
+            let _ = stream.shutdown(Shutdown::Write);
+        }
+        self.drained += 1;
+        self.fail_worker(w, "drain notice", true, r);
     }
 
     fn try_reconnect(&mut self) {
@@ -2067,7 +2560,8 @@ impl WorkerPool {
                         eprintln!("[pool] worker {w} retired (reconnect failed: {e})");
                     } else {
                         pw.backoff *= 2;
-                        pw.next_reconnect = Some(Instant::now() + pw.backoff);
+                        pw.next_reconnect =
+                            Some(Instant::now() + jittered(pw.backoff, &mut pw.jitter));
                     }
                 }
             }
@@ -2095,6 +2589,18 @@ fn spawn_reader(
                     if msg.get("bye_ack").is_some() {
                         // Session-teardown ack (close_session) — pure
                         // bookkeeping, nothing to attribute.
+                        continue;
+                    }
+                    if msg.get("drain").is_some() {
+                        // Drain notice. FIFO ordering means every reply
+                        // the worker wrote before it is already behind us
+                        // in the buffer, so whatever is still outstanding
+                        // when the pool processes this will never be
+                        // answered. Keep reading: the teardown's bye_acks
+                        // and the final EOF still flow through here.
+                        if tx.send(PoolEvent::Drain { worker, generation }).is_err() {
+                            return;
+                        }
                         continue;
                     }
                     if let Some(ack) = msg.get("hello_ack") {
@@ -2863,6 +3369,143 @@ mod tests {
         SessionSpec::synthetic(
             SyntheticObjective::new(dims, choices, Duration::ZERO).space().clone(),
         )
+    }
+
+    // -- elastic membership: join / drain / fault injection ------------------
+
+    use crate::coordinator::faults::{FaultAction, FaultEvent, FaultScript, WorkerControl};
+
+    /// Multiplexed worker under a scripted fault injector. Returns its
+    /// address, a manual control handle (drain/preempt on demand), and the
+    /// join handle carrying the served count.
+    fn spawn_driven_worker(
+        sleep_ms: u64,
+        script: FaultScript,
+    ) -> (String, WorkerControl, std::thread::JoinHandle<usize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let control = WorkerControl::new();
+        let injector = FaultInjector::scripted(control.clone(), script);
+        let h = std::thread::spawn(move || {
+            let factory = SyntheticFactory { sleep: Duration::from_millis(sleep_ms) };
+            serve_sessions_driven(listener, &factory, ServeOpts::default(), injector)
+                .expect("driven worker")
+        });
+        (addr, control, h)
+    }
+
+    #[test]
+    fn drained_worker_requeues_in_flight_slots_exactly_once() {
+        // Worker A drains after 2 evals while holding pipelined slots
+        // (default depth 2); worker B stays healthy. Every slot must be
+        // served exactly once farm-wide: A's in-flight work requeues onto
+        // B, nothing is poisoned with -inf, nothing is double-served
+        // (no_steal + exact served counts make the assertion airtight).
+        let script =
+            FaultScript::new(vec![FaultEvent { after_evals: 2, action: FaultAction::Drain }]);
+        let (a1, _c1, h1) = spawn_driven_worker(30, script);
+        let (a2, _c2, h2) = spawn_driven_worker(30, FaultScript::empty());
+        let spec = synth_spec(4, 3);
+        let mut pool =
+            WorkerPool::connect_session(&[a1, a2], no_steal_cfg(), Some(spec)).unwrap();
+        let sid = pool.session_ids().pop().unwrap();
+        let configs: Vec<Config> =
+            (0..10).map(|i| vec![i % 3, (i + 1) % 3, 0, 1]).collect();
+        let out = pool.evaluate_records_in(&sid, &configs).unwrap();
+        let expect: Vec<f64> =
+            configs.iter().map(SyntheticObjective::expected_value).collect();
+        assert_eq!(out.values, expect, "a drained slot was poisoned or misattributed");
+        assert_eq!(pool.drained, 1, "drain notice not honored");
+        assert!(pool.requeued >= 1, "drained worker's in-flight slots were not requeued");
+        pool.shutdown().unwrap();
+        let (s1, s2) = (h1.join().unwrap(), h2.join().unwrap());
+        assert_eq!(s1, 2, "worker A must stop exactly at its scripted drain");
+        assert_eq!(s1 + s2, configs.len(), "farm-wide exactly-once violated: {s1}+{s2}");
+    }
+
+    #[test]
+    fn join_registry_adopts_announced_worker_mid_search() {
+        let (a1, h1) = spawn_mux_worker(ServeOpts::default());
+        let registry = JoinRegistry::bind("127.0.0.1:0").unwrap();
+        let spec = synth_spec(4, 3);
+        let mut pool = WorkerPool::connect_session(
+            std::slice::from_ref(&a1),
+            no_steal_cfg(),
+            Some(spec),
+        )
+        .unwrap();
+        pool.attach_joiners(registry.queue());
+        let sid = pool.session_ids().pop().unwrap();
+
+        // Round 1 on the original farm.
+        let out = pool.evaluate_records_in(&sid, &[vec![1, 1, 1, 1]]).unwrap();
+        assert_eq!(out.values, vec![-4.0]);
+        assert_eq!(pool.capacity(), 1);
+
+        // A second worker comes up and announces itself mid-search; a
+        // duplicate announcement must not produce a duplicate handle.
+        let (a2, h2) = spawn_mux_worker(ServeOpts::default());
+        announce_join(registry.local_addr(), &a2).unwrap();
+        announce_join(registry.local_addr(), &a2).unwrap();
+
+        // The next round adopts it — the connect-time handshake re-syncs
+        // the open session — and fill_idle feeds it in that same round.
+        let configs: Vec<Config> = (0..8).map(|i| vec![i % 3, 0, i % 2, 2]).collect();
+        let expect: Vec<f64> =
+            configs.iter().map(SyntheticObjective::expected_value).collect();
+        let out = pool.evaluate_records_in(&sid, &configs).unwrap();
+        assert_eq!(out.values, expect);
+        assert_eq!(pool.adopted, 1, "announced worker must be adopted exactly once");
+        assert_eq!(pool.capacity(), 2);
+        pool.shutdown().unwrap();
+        let (s1, s2) = (h1.join().unwrap(), h2.join().unwrap());
+        assert_eq!(s1 + s2, 9);
+        assert!(s2 >= 1, "joined worker was never fed ({s1}/{s2})");
+    }
+
+    #[test]
+    fn connect_starts_degraded_when_some_workers_are_unreachable() {
+        // A dead address FIRST in the list: the pool must come up on the
+        // live worker instead of failing the whole leader, and keep the
+        // dead address queued as a pending joiner for the adoption loop.
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        }; // listener dropped: nothing accepts here
+        let (live, h) = spawn_mux_worker(ServeOpts::default());
+        let spec = synth_spec(4, 3);
+        let mut pool =
+            WorkerPool::connect_session(&[dead, live], no_steal_cfg(), Some(spec))
+                .unwrap();
+        assert_eq!(pool.capacity(), 1, "degraded start should carry the live worker");
+        assert_eq!(pool.pending_joiners(), 1, "dead addr should queue as pending");
+        let sid = pool.session_ids().pop().unwrap();
+        let out = pool.evaluate_records_in(&sid, &[vec![2, 0, 1, 0]]).unwrap();
+        assert_eq!(out.values, vec![-3.0]);
+        pool.shutdown().unwrap();
+        assert_eq!(h.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn reconnect_backoff_jitter_is_deterministic_and_bounded() {
+        let base = Duration::from_millis(100);
+        let mut a = Rng::new(addr_seed("127.0.0.1:7070"));
+        let mut b = Rng::new(addr_seed("127.0.0.1:7070"));
+        for _ in 0..100 {
+            let ja = jittered(base, &mut a);
+            assert_eq!(ja, jittered(base, &mut b), "same seed must give same jitter");
+            assert!(
+                ja >= base / 2 && ja <= base * 3 / 2,
+                "jitter outside [0.5, 1.5)x base: {ja:?}"
+            );
+        }
+        // Distinct addresses draw from distinct streams — that spread IS
+        // the thundering-herd fix.
+        let mut c = Rng::new(addr_seed("127.0.0.1:7071"));
+        let mut d = Rng::new(addr_seed("127.0.0.1:7070"));
+        let vc: Vec<Duration> = (0..8).map(|_| jittered(base, &mut c)).collect();
+        let vd: Vec<Duration> = (0..8).map(|_| jittered(base, &mut d)).collect();
+        assert_ne!(vc, vd, "distinct addrs must not share a jitter stream");
     }
 
     #[test]

@@ -133,6 +133,23 @@ fn session_opts_from(args: &Args) -> Result<SessionOpts> {
             Some(r)
         }
     };
+    let registry = match args.get("registry") {
+        None => {
+            anyhow::ensure!(
+                !args.has_flag("registry"),
+                "--registry needs a value: the host:port to accept `worker --join` \
+                 announcements on"
+            );
+            None
+        }
+        Some(s) => {
+            anyhow::ensure!(
+                matches!(backend, EvalBackend::Remote { .. }),
+                "--registry only applies with --workers (it grows a remote farm)"
+            );
+            Some(s.to_string())
+        }
+    };
     Ok(SessionOpts {
         backend,
         checkpoint,
@@ -141,6 +158,7 @@ fn session_opts_from(args: &Args) -> Result<SessionOpts> {
         resume_project,
         reprune_every,
         keep_workers: args.has_flag("keep-workers"),
+        registry,
     })
 }
 
@@ -350,6 +368,9 @@ fn pool_cfg_from(args: &Args) -> Result<PoolCfg> {
         );
         cfg.pipeline_depth = d;
     }
+    // Fold the run seed into the reconnect-jitter streams so retries are
+    // reproducible per run but desynchronized across runs.
+    cfg.jitter_seed = args.get_u64("seed", 0);
     Ok(cfg)
 }
 
@@ -360,8 +381,17 @@ fn pool_cfg_from(args: &Args) -> Result<PoolCfg> {
 /// tenants). With `--synthetic <dims>x<choices>` it serves synthetic
 /// sessions (optionally `--sleep-ms <f>` per eval) — no artifacts needed.
 /// DNN mode pretrains once and serves every tenant from that snapshot.
+///
+/// Elastic membership: `--join <leader:port>` announces this worker to a
+/// running leader's `--registry` endpoint so its pool adopts it mid-search
+/// (`--advertise <host:port>` overrides the dial-back address when the bind
+/// address is not routable from the leader). SIGTERM drains instead of
+/// killing: the in-flight eval finishes and is replied, then the worker
+/// notifies `{"drain"}` and exits once its leaders detach.
 fn cmd_worker(args: &Args) -> Result<()> {
-    use sammpq::coordinator::{serve_sessions, DnnFactory, ServeOpts, SyntheticFactory};
+    use sammpq::coordinator::{announce_join, install_sigterm_drain, serve_sessions_driven,
+                              DnnFactory, FaultInjector, ServeOpts, SyntheticFactory,
+                              WorkerControl};
     let addr = args.get_or("addr", "127.0.0.1:7447");
     let mut opts = ServeOpts::default();
     let idle = args.get_f64("session-idle-secs", opts.idle_timeout.as_secs_f64());
@@ -370,6 +400,26 @@ fn cmd_worker(args: &Args) -> Result<()> {
         "--session-idle-secs must be a positive number of seconds"
     );
     opts.idle_timeout = std::time::Duration::from_secs_f64(idle);
+    anyhow::ensure!(
+        !args.has_flag("join"),
+        "--join needs a value: the leader's registry host:port"
+    );
+    anyhow::ensure!(
+        !args.has_flag("advertise"),
+        "--advertise needs a value: the host:port leaders should dial back"
+    );
+    // Bind BEFORE announcing: once `--join` hands our address to the
+    // leader, its pool dials immediately — the listener backlog parks that
+    // connection until the serve loop starts accepting, so nothing is lost.
+    let listener = std::net::TcpListener::bind(&addr)
+        .map_err(|e| anyhow::anyhow!("worker bind {addr}: {e}"))?;
+    let local = listener.local_addr()?.to_string();
+    let advertise =
+        args.get("advertise").map(str::to_string).unwrap_or_else(|| local.clone());
+    let join = args.get("join").map(str::to_string);
+    // SIGTERM is a preemption notice, not a kill: drain gracefully.
+    install_sigterm_drain();
+    let control = WorkerControl::new().honor_sigterm();
     if args.get("synthetic").is_some() || args.has_flag("synthetic") {
         // Sessions always adopt each LEADER's synced space, so a
         // `<dims>x<choices>` value no longer picks anything — it is still
@@ -383,11 +433,16 @@ fn cmd_worker(args: &Args) -> Result<()> {
         );
         let factory = SyntheticFactory { sleep };
         println!(
-            "[worker] synthetic sessions on {addr} (space synced per tenant, sleep \
+            "[worker] synthetic sessions on {local} (space synced per tenant, sleep \
              {sleep:?}, multi-tenant, idle timeout {:?})",
             opts.idle_timeout
         );
-        let served = serve_sessions(&addr, &factory, opts)?;
+        if let Some(reg) = &join {
+            announce_join(reg, &advertise)?;
+            println!("[worker] announced {advertise} to registry {reg}");
+        }
+        let served =
+            serve_sessions_driven(listener, &factory, opts, FaultInjector::manual(control))?;
         println!("[worker] done, served {served} evaluations");
         return Ok(());
     }
@@ -405,12 +460,19 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let pretrained = sess.snapshot_of(&st)?;
     let factory = DnnFactory::new(&sess, pretrained);
     println!(
-        "[worker] {tag} serving sessions on {addr} (snapshot digest {}, multi-tenant, \
+        "[worker] {tag} serving sessions on {local} (snapshot digest {}, multi-tenant, \
          idle timeout {:?})",
         factory.digest(),
         opts.idle_timeout
     );
-    let served = serve_sessions(&addr, &factory, opts)?;
+    // Announce only now — after the slow pretrain — so an adopting pool's
+    // handshake is answered promptly instead of queueing behind it.
+    if let Some(reg) = &join {
+        announce_join(reg, &advertise)?;
+        println!("[worker] announced {advertise} to registry {reg}");
+    }
+    let served =
+        serve_sessions_driven(listener, &factory, opts, FaultInjector::manual(control))?;
     println!("[worker] done, served {served} evaluations");
     Ok(())
 }
@@ -424,7 +486,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
 ///   sammpq worker --synthetic 8x4 --sleep-ms 500 --addr 127.0.0.1:7448
 ///   sammpq pool --addrs 127.0.0.1:7447,127.0.0.1:7448 --batch-q auto --n 64
 fn cmd_pool(args: &Args) -> Result<()> {
-    use sammpq::coordinator::{RemoteObjective, SessionSpec};
+    use sammpq::coordinator::{JoinRegistry, RemoteObjective, SessionSpec};
     use sammpq::search::{BatchAlgo, BatchSearcher, KmeansTpeParams, Objective, Searcher,
                          SyntheticObjective, TpeParams};
     use sammpq::util::Timer;
@@ -457,6 +519,22 @@ fn cmd_pool(args: &Args) -> Result<()> {
         &addrs,
         pool_cfg_from(args)?,
     )?;
+    // `--registry`: accept `worker --join` announcements while the search
+    // runs; the pool adopts announced workers at round boundaries.
+    anyhow::ensure!(
+        !args.has_flag("registry"),
+        "--registry needs a value: the host:port to accept `worker --join` \
+         announcements on"
+    );
+    let _registry = match args.get("registry") {
+        Some(reg_addr) => {
+            let reg = JoinRegistry::bind(reg_addr)?;
+            println!("[pool] join registry listening on {}", reg.local_addr());
+            remote.pool.attach_joiners(reg.queue());
+            Some(reg)
+        }
+        None => None,
+    };
     let mut searcher = BatchSearcher::new(algo, batch_q);
     let t = Timer::start();
     let h = searcher.run(&mut remote, budget);
@@ -562,6 +640,8 @@ fn main() {
                  \x20             --reprune-every r   tighten the menus every r rounds\n\
                  \x20             (re-cluster sensitivities, project the history, and\n\
                  \x20             re-sync the worker farm onto the new space)\n\
+                 \x20             --registry h:p      accept `worker --join` announcements\n\
+                 \x20             while the search runs (elastic farm growth)\n\
                  \x20 hessian     sensitivity report (--model, --k, --samples)\n\
                  \x20 hw          hardware model report (--model, --bits, --mult)\n\
                  \x20 convergence Fig. 3a/3b tabular study (no artifacts needed)\n\
@@ -572,11 +652,16 @@ fn main() {
                  \x20             (--model <tag> --addr host:port, or artifact-free:\n\
                  \x20             --synthetic [--sleep-ms <f>] — every session adopts\n\
                  \x20             its leader's synced space;\n\
-                 \x20             --session-idle-secs <s> frees abandoned sessions)\n\
+                 \x20             --session-idle-secs <s> frees abandoned sessions;\n\
+                 \x20             --join <leader:port> enlists with a running leader's\n\
+                 \x20             --registry so its pool adopts this worker mid-search\n\
+                 \x20             (--advertise <host:port> overrides the dial-back addr);\n\
+                 \x20             SIGTERM drains: finish the eval, notify, exit clean)\n\
                  \x20 pool        drive a synthetic search over a worker pool (async\n\
                  \x20             straggler-tolerant demo): --addrs a,b,c\n\
                  \x20             --synthetic <dims>x<choices> --batch-q auto|<q>\n\
                  \x20             --straggler-factor <f> --pipeline-depth <d> --n <evals>\n\
+                 \x20             --registry <h:p>    adopt `worker --join`ers mid-run\n\
                  \x20 info        list compiled artifacts"
             );
             Ok(())
