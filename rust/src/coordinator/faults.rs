@@ -50,6 +50,17 @@ pub enum FaultAction {
     /// boundary (written replies still flush) and exit the serve loop.
     /// The leader sees a clean EOF — retire + requeue, no redial.
     Preempt,
+    /// Silent result corruption (sticky): every eval served AFTER this
+    /// fires has its reply value perturbed — the "plausible-but-wrong J
+    /// from a corrupted snapshot" failure the audit/quarantine path must
+    /// catch. The worker stays protocol-healthy in every other respect,
+    /// so only result auditing can detect it.
+    CorruptValue,
+    /// Silent hang (sticky): the serve loop keeps its connections open but
+    /// stops answering everything except an administrative `{"shutdown"}`
+    /// (the test-escape hatch, so harnesses can still reap the thread).
+    /// No EOF, no error — only the leader's heartbeat can detect it.
+    Stall,
 }
 
 /// A [`FaultAction`] scheduled after this worker has served `after_evals`
@@ -141,6 +152,54 @@ impl FaultPlan {
                         action,
                     });
                 }
+            }
+            scripts.push(FaultScript::new(events));
+        }
+        let mut joins = root.fork(0x10_1A);
+        let late_joins =
+            if joins.bool(0.5) { vec![1 + joins.below(3)] } else { Vec::new() };
+        FaultPlan { seed, scripts, late_joins }
+    }
+
+    /// [`chaos`](Self::chaos) plus the SILENT failure modes the health
+    /// layer exists for: exactly one worker (worker 1) turns corrupt
+    /// partway through the horizon, and worker 2 (when the farm has one)
+    /// stalls silently in the second half. Keeping corruption to a single
+    /// worker is deliberate — the audit tie-break votes with a third
+    /// worker, so an honest majority must exist by construction. Worker 0
+    /// stays delay-only, exactly like `chaos`. A DIFFERENT salt keeps
+    /// `chaos` plans bit-identical to what they were before this
+    /// generator existed.
+    pub fn chaos_health(workers: usize, horizon_evals: usize, seed: u64) -> FaultPlan {
+        let mut root = Rng::new(seed ^ 0x5A1F_EC0D_E0F0_0D5A);
+        let span = horizon_evals.max(4);
+        let mut scripts = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let mut rng = root.fork(w as u64 + 1);
+            let mut events = Vec::new();
+            for _ in 0..(1 + rng.below(2)) {
+                events.push(FaultEvent {
+                    after_evals: rng.below(span),
+                    action: FaultAction::DelayEval { millis: 5 + rng.below(20) as u64 },
+                });
+            }
+            if w == 1 {
+                events.push(FaultEvent {
+                    after_evals: rng.below(span),
+                    action: FaultAction::CorruptValue,
+                });
+            }
+            if w == 2 {
+                events.push(FaultEvent {
+                    after_evals: span / 2 + rng.below(span - span / 2),
+                    action: FaultAction::Stall,
+                });
+            }
+            if w > 2 && rng.bool(0.5) {
+                events.push(FaultEvent {
+                    after_evals: rng.below(span),
+                    action: FaultAction::DropConnections,
+                });
             }
             scripts.push(FaultScript::new(events));
         }
@@ -251,6 +310,11 @@ pub enum FaultDecision {
     DropConnections,
     Drain,
     Preempt,
+    /// Start corrupting reply values (the serve loop latches this; it is
+    /// returned once, like `Delay`).
+    CorruptValue,
+    /// Go silent (the serve loop latches this; returned once).
+    Stall,
 }
 
 /// The per-worker fault driver: a [`FaultScript`] cursor layered over a
@@ -298,6 +362,8 @@ impl FaultInjector {
                         return FaultDecision::Delay(Duration::from_millis(millis));
                     }
                     FaultAction::DropConnections => return FaultDecision::DropConnections,
+                    FaultAction::CorruptValue => return FaultDecision::CorruptValue,
+                    FaultAction::Stall => return FaultDecision::Stall,
                     FaultAction::Drain => self.control.drain(),
                     FaultAction::Preempt => self.control.preempt(),
                 }
@@ -353,6 +419,69 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn chaos_health_replays_and_isolates_silent_faults() {
+        let a = FaultPlan::chaos_health(4, 24, 9);
+        let b = FaultPlan::chaos_health(4, 24, 9);
+        assert_eq!(a, b, "same seed must script the same health chaos");
+        // A different salt than chaos(): the two generators must not alias.
+        assert_ne!(a, FaultPlan::chaos(4, 24, 9));
+        for seed in 0..50 {
+            let plan = FaultPlan::chaos_health(5, 30, seed);
+            for (w, script) in plan.scripts().iter().enumerate() {
+                for ev in script.events() {
+                    match ev.action {
+                        FaultAction::CorruptValue => assert_eq!(
+                            w, 1,
+                            "only worker 1 may corrupt (the audit tie-break needs an \
+                             honest majority), seed {seed}"
+                        ),
+                        FaultAction::Stall => {
+                            assert_eq!(w, 2, "only worker 2 may stall, seed {seed}")
+                        }
+                        _ if w == 0 => assert!(
+                            matches!(ev.action, FaultAction::DelayEval { .. }),
+                            "worker 0 drew {:?} under seed {seed}",
+                            ev.action
+                        ),
+                        _ => {}
+                    }
+                }
+            }
+            assert!(
+                plan.script_for(1)
+                    .events()
+                    .iter()
+                    .any(|e| e.action == FaultAction::CorruptValue),
+                "worker 1 always corrupts, seed {seed}"
+            );
+            assert!(
+                plan.script_for(2)
+                    .events()
+                    .iter()
+                    .any(|e| e.action == FaultAction::Stall),
+                "worker 2 always stalls, seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn injector_returns_silent_faults_once_for_the_loop_to_latch() {
+        let script = FaultScript::new(vec![
+            FaultEvent { after_evals: 1, action: FaultAction::CorruptValue },
+            FaultEvent { after_evals: 3, action: FaultAction::Stall },
+        ]);
+        let mut inj = FaultInjector::scripted(WorkerControl::new(), script);
+        assert_eq!(inj.poll(0), FaultDecision::Continue);
+        assert_eq!(inj.poll(1), FaultDecision::CorruptValue);
+        // Returned once — stickiness is the serve loop's latch, not the
+        // injector's (unlike drain/preempt, there is no control latch to
+        // funnel through).
+        assert_eq!(inj.poll(2), FaultDecision::Continue);
+        assert_eq!(inj.poll(3), FaultDecision::Stall);
+        assert_eq!(inj.poll(4), FaultDecision::Continue);
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::baselines::{Evolutionary, EvolutionaryParams, GpBo, GpBoParams, Rando
 use crate::coordinator::evaluator::{build_space, DnnObjective, EvalRecord, ObjectiveCfg,
                                     SpaceBuild};
 use crate::coordinator::service::{JoinRegistry, PoolCfg, RemoteObjective, SessionSpec};
+use crate::coordinator::supervisor::{Decision, PoolStats, Supervisor, SupervisorCfg};
 use crate::hessian::pruner::{prune_space, PrunedSpace};
 use crate::hw::HwConfig;
 use crate::search::{BatchAlgo, BatchSearcher, Config, History, KmeansTpe, KmeansTpeParams,
@@ -177,6 +178,14 @@ pub struct SessionOpts {
     ///
     /// [`JoinRegistry`]: crate::coordinator::service::JoinRegistry
     pub registry: Option<String>,
+    /// `--autoscale`: run the farm-health supervisor during the search —
+    /// per-round [`PoolStats`] snapshots feed the pure policy in
+    /// `coordinator::supervisor`, whose decisions actually execute
+    /// (sustained low load drains an idle worker through the clean
+    /// departure path; sustained pressure emits a structured event).
+    /// Without the flag the per-round health LOG still appears for remote
+    /// backends; only the acting is gated. Remote backend only.
+    pub autoscale: bool,
 }
 
 /// An objective whose evaluations produce full [`EvalRecord`]s, in eval
@@ -191,6 +200,17 @@ pub trait RecordedObjective: Objective {
     /// its index-keyed cache; the remote objective re-syncs the whole
     /// worker farm over the v3 handshake.
     fn resync(&mut self, build: &SpaceBuild) -> Result<()>;
+
+    /// Farm-health snapshot after the latest round — `None` for backends
+    /// with no farm (in-process), which is also the default.
+    fn health(&self) -> Option<PoolStats> {
+        None
+    }
+
+    /// Execute a supervisor decision against the backend's farm. The
+    /// default (and the in-process impl) ignores it — only the remote
+    /// objective has workers to drain.
+    fn apply_decision(&mut self, _decision: &Decision) {}
 }
 
 impl RecordedObjective for DnnObjective<'_> {
@@ -211,6 +231,22 @@ impl RecordedObjective for RemoteObjective {
 
     fn resync(&mut self, build: &SpaceBuild) -> Result<()> {
         self.resync_build(build)
+    }
+
+    fn health(&self) -> Option<PoolStats> {
+        Some(self.pool.stats())
+    }
+
+    fn apply_decision(&mut self, decision: &Decision) {
+        if let Decision::DrainIdle { .. } = decision {
+            // One worker per decision — the supervisor's cooldown paces
+            // the rest, so a burst of low-load rounds cannot empty the
+            // farm before its own effect is observed.
+            match self.pool.release_idle(1) {
+                Some(w) => eprintln!("[farm] supervisor released idle worker {w}"),
+                None => eprintln!("[farm] supervisor found no releasable idle worker"),
+            }
+        }
     }
 }
 
@@ -539,6 +575,11 @@ pub struct SearchReport {
     pub pretrain_secs: f64,
     pub search_secs: f64,
     pub final_secs: f64,
+    /// Farm health counters at the end of a remote search (`None` for the
+    /// in-process backend): adopted/drained/quarantined workers, audit
+    /// verdicts, heartbeat retirements — the operator-facing summary the
+    /// round logs stream incrementally.
+    pub farm: Option<PoolStats>,
 }
 
 /// Build the searcher a `LeaderCfg` asks for. Separated from [`Leader`]
@@ -619,6 +660,8 @@ pub struct SearchOutcome {
     /// matches the space the winner was actually searched on.
     pub repruned: Option<PrunedSpace>,
     pub search_secs: f64,
+    /// Final pool health snapshot (remote backend only).
+    pub farm: Option<PoolStats>,
 }
 
 pub struct Leader<'a> {
@@ -710,7 +753,7 @@ impl<'a> Leader<'a> {
         let sess = self.session;
         let build = build_space(&sess.meta, pruned);
         let t_search = Timer::start();
-        let (history, records, repruned_build) = match &opts.backend {
+        let (history, records, repruned_build, farm) = match &opts.backend {
             EvalBackend::InProcess => {
                 let mut objective = DnnObjective::new(
                     sess,
@@ -763,7 +806,14 @@ impl<'a> Leader<'a> {
             Some((b, p)) => (b, Some(p)),
             None => (build, None),
         };
-        Ok(SearchOutcome { build, history, records, repruned, search_secs: t_search.secs() })
+        Ok(SearchOutcome {
+            build,
+            history,
+            records,
+            repruned,
+            search_secs: t_search.secs(),
+            farm,
+        })
     }
 
     /// Search-loop driver shared by both backends. Without checkpointing or
@@ -782,14 +832,19 @@ impl<'a> Leader<'a> {
         objective: &mut O,
         opts: &SessionOpts,
         pruned: Option<&PrunedSpace>,
-    ) -> Result<(History, Vec<EvalRecord>, Option<(SpaceBuild, PrunedSpace)>)> {
+    ) -> Result<(History, Vec<EvalRecord>, Option<(SpaceBuild, PrunedSpace)>, Option<PoolStats>)>
+    {
         let budget = self.cfg.n_evals;
-        if opts.checkpoint.is_none() && opts.resume.is_none() && opts.reprune_every.is_none()
+        if opts.checkpoint.is_none()
+            && opts.resume.is_none()
+            && opts.reprune_every.is_none()
+            && !opts.autoscale
         {
             let mut searcher = self.make_searcher(algo);
             let history = searcher.run(objective, budget);
             let records = objective.records().to_vec();
-            return Ok((history, records, None));
+            let farm = objective.health();
+            return Ok((history, records, None, farm));
         }
 
         let batch_algo = match algo {
@@ -804,8 +859,8 @@ impl<'a> Leader<'a> {
                 ..Default::default()
             }),
             other => anyhow::bail!(
-                "--checkpoint/--resume/--reprune-every need a TPE-family --algo \
-                 (kmeans-tpe or tpe), got '{}'",
+                "--checkpoint/--resume/--reprune-every/--autoscale need a TPE-family \
+                 --algo (kmeans-tpe or tpe), got '{}'",
                 other.name()
             ),
         };
@@ -875,9 +930,30 @@ impl<'a> Leader<'a> {
         let mut rebuilt: Option<(SpaceBuild, PrunedSpace)> = None;
         let mut reprunes = 0usize;
         let mut rounds_since = 0usize;
+        // Health loop: one PoolStats snapshot per round feeds the per-round
+        // operator log and the autoscaling policy. The supervisor is pure in
+        // the snapshot (no clocks, no RNG), so a seeded replay of the same
+        // farm produces the same decision sequence; whether a decision is
+        // ACTED on is gated by `--autoscale`, the log always appears.
+        let mut supervisor = Supervisor::new(SupervisorCfg::default());
+        let mut round_no = 0usize;
         while !run.done() {
             run.step(objective);
             rounds_since += 1;
+            round_no += 1;
+            if let Some(stats) = objective.health() {
+                eprintln!("[farm] round {round_no}: {}", stats.render());
+                let decision = supervisor.observe(round_no, &stats);
+                if !matches!(decision, Decision::Hold) {
+                    if let Some(event) = supervisor.events.last() {
+                        // Structured line a control plane can scrape.
+                        eprintln!("[farm] {}", event.to_json().to_string_compact());
+                    }
+                    if opts.autoscale {
+                        objective.apply_decision(&decision);
+                    }
+                }
+            }
             if let Some(path) = &opts.checkpoint {
                 let mut records = prior.clone();
                 records.extend(objective.records()[taken..].iter().cloned());
@@ -957,7 +1033,8 @@ impl<'a> Leader<'a> {
         let (history, _rounds) = run.finish();
         let mut records = prior;
         records.extend(objective.records()[taken..].iter().cloned());
-        Ok((history, records, rebuilt))
+        let farm = objective.health();
+        Ok((history, records, rebuilt, farm))
     }
 
     /// Stage 4: final training of the winner + report assembly. Works from
@@ -972,7 +1049,7 @@ impl<'a> Leader<'a> {
     ) -> Result<SearchReport> {
         let sess = self.session;
         let cfg = &self.cfg;
-        let SearchOutcome { build, history, records, repruned, search_secs } = search;
+        let SearchOutcome { build, history, records, repruned, search_secs, farm } = search;
         // `--reprune-every` superseded the stage-2 pruning mid-session: the
         // report's per-layer menu table must describe the build the winner
         // was actually searched on.
@@ -1029,6 +1106,7 @@ impl<'a> Leader<'a> {
             pretrain_secs: pre.pretrain_secs,
             search_secs,
             final_secs,
+            farm,
         })
     }
 }

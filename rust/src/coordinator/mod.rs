@@ -39,15 +39,23 @@
 //! SIGTERM too — makes the pool requeue their in-flight slots exactly
 //! once and retire the handle), and the whole lifecycle is testable under
 //! scripted, seeded fault schedules (`faults::FaultPlan` driving
-//! `serve_sessions_driven`). See `search::batch`, `search::checkpoint`,
-//! `search::project`, `search::costmodel`, and docs/ARCHITECTURE.md for
-//! the protocol state machine and formats.
+//! `serve_sessions_driven`). On top of the elastic membership sits a
+//! HEALTH layer: negotiated `{"ping"}`/`{"pong"}` heartbeats catch
+//! workers hung between rounds, a budgeted result-audit re-evaluates
+//! completed configs on second workers and walks misreporting workers
+//! through Healthy -> Suspect -> Quarantined (quarantine drains them and
+//! invalidates their round), and `supervisor` runs a pure, replayable
+//! policy over per-round `PoolStats` snapshots to drain idle capacity /
+//! flag pressure (`--autoscale`). See `search::batch`,
+//! `search::checkpoint`, `search::project`, `search::costmodel`, and
+//! docs/ARCHITECTURE.md for the protocol state machine and formats.
 
 pub mod evaluator;
 pub mod faults;
 pub mod service;
 pub mod leader;
 pub mod report;
+pub mod supervisor;
 
 pub use evaluator::{build_space, DimKind, DnnBackend, DnnFactory, DnnObjective, EvalRecord,
                     ObjectiveCfg, SpaceBuild};
@@ -55,8 +63,10 @@ pub use faults::{install_sigterm_drain, FaultAction, FaultDecision, FaultEvent, 
                  FaultPlan, FaultScript, WorkerControl};
 pub use leader::{project_session_checkpoint, Algo, CheckpointStore, EvalBackend, Leader,
                  LeaderCfg, RecordedObjective, SearchReport, SessionCheckpoint, SessionOpts};
-pub use service::{announce_join, serve_on_listener, serve_sessions, serve_sessions_driven,
-                  serve_sessions_on, serve_worker, serve_worker_on, BackendFactory, JoinRegistry,
-                  PlainBackend, PoolCfg, RemoteObjective, RoundEvals, ServeOpts, SessionSpec,
-                  SessionTable, SyntheticBackend, SyntheticFactory, WorkerBackend, WorkerPool,
-                  PROTOCOL_VERSION};
+pub use service::{announce_join, announce_join_retrying, serve_on_listener, serve_sessions,
+                  serve_sessions_driven, serve_sessions_on, serve_worker, serve_worker_on,
+                  BackendFactory, JoinRegistry, PlainBackend, PoolCfg, RemoteObjective,
+                  RoundEvals, ServeOpts, SessionSpec, SessionTable, SyntheticBackend,
+                  SyntheticFactory, WorkerBackend, WorkerPool, PROTOCOL_VERSION};
+pub use supervisor::{decide, Decision, PoolStats, Supervisor, SupervisorCfg, SupervisorEvent,
+                     SupervisorState};

@@ -84,6 +84,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::evaluator::{DimKind, EvalRecord, ObjectiveCfg, SpaceBuild};
 use crate::coordinator::faults::{FaultDecision, FaultInjector};
+use crate::coordinator::supervisor::PoolStats;
 use crate::hw::HwConfig;
 use crate::search::space::{Config, Space};
 use crate::search::{CostModel, Objective, SyntheticObjective};
@@ -369,6 +370,22 @@ fn parse_eval(msg: &Json) -> Result<RemoteEval> {
     Ok(RemoteEval { id, value, record })
 }
 
+/// Audit tolerance: two evaluations of the same config "disagree" when
+/// they differ by more than a relative epsilon (absolute near zero).
+/// Synthetic and recorded objectives are bit-deterministic, so the
+/// tolerance only has to absorb float formatting through the wire — but a
+/// non-finite value on either side is always a disagreement (equal `-inf`s
+/// excepted: two workers refusing the same config agree).
+fn values_disagree(a: f64, b: f64) -> bool {
+    if a == b {
+        return false;
+    }
+    if !a.is_finite() || !b.is_finite() {
+        return true;
+    }
+    (a - b).abs() > 1e-6 * a.abs().max(b.abs()).max(1.0)
+}
+
 /// Structured skew/rejection reply: machine-readable kind + the version the
 /// worker actually speaks, so a leader can tell "upgrade me" from "wrong
 /// session" without parsing prose.
@@ -579,6 +596,12 @@ pub struct ServeOpts {
     pub idle_timeout: Duration,
     /// Event-loop poll granularity (idle sweeps, shutdown checks).
     pub tick: Duration,
+    /// How long a draining worker waits for its leaders to `bye` the
+    /// sessions and close the connections before it exits anyway — a
+    /// vanished leader must not pin a preempted worker past its grace
+    /// period. CI chaos soaks shorten this so a drain never dominates the
+    /// test's time budget.
+    pub drain_grace: Duration,
 }
 
 impl Default for ServeOpts {
@@ -586,6 +609,7 @@ impl Default for ServeOpts {
         ServeOpts {
             idle_timeout: Duration::from_secs(900),
             tick: Duration::from_millis(50),
+            drain_grace: Duration::from_secs(5),
         }
     }
 }
@@ -738,11 +762,6 @@ pub fn serve_sessions_on(
     serve_sessions_driven(listener, factory, opts, FaultInjector::inert())
 }
 
-/// How long a draining worker waits for its leaders to `bye` the sessions
-/// and close the connections before it exits anyway — a vanished leader
-/// must not pin a preempted worker past its grace period.
-const DRAIN_GRACE: Duration = Duration::from_secs(5);
-
 /// [`serve_sessions_on`] under a [`FaultInjector`] — the elastic-membership
 /// runtime. The injector is polled once per event-loop iteration:
 ///
@@ -751,13 +770,20 @@ const DRAIN_GRACE: Duration = Duration::from_secs(5);
 ///   line = unclean disconnect on the leader) while the listener keeps
 ///   accepting, so the leader's redial finds the process alive;
 /// * `Drain` announces `{"drain": true}` on every connection, then serves
-///   only `bye` frames until the connections empty (or [`DRAIN_GRACE`]
-///   expires) and exits cleanly — in-flight evals are DROPPED unanswered,
-///   because the drain notice made the leader requeue them and a late
-///   reply would double-serve the slot;
+///   only `bye` frames until the connections empty (or
+///   [`ServeOpts::drain_grace`] expires) and exits cleanly — in-flight
+///   evals are DROPPED unanswered, because the drain notice made the
+///   leader requeue them and a late reply would double-serve the slot;
 /// * `Preempt` half-closes every connection (written replies still flush —
 ///   a full `Shutdown::Both` with unread inbound frames can RST the socket
-///   and destroy them), lingers briefly reading-and-discarding, and exits.
+///   and destroy them), lingers briefly reading-and-discarding, and exits;
+/// * `CorruptValue` latches a deterministic value perturbation onto every
+///   subsequent eval reply (a plausible-but-wrong worker — bad snapshot,
+///   flaky accelerator) — the connection stays perfectly healthy, so only
+///   the leader's result audit can catch it;
+/// * `Stall` latches a hang: the loop keeps its connections open but stops
+///   answering frames (only `{"shutdown"}` still works, as the tests'
+///   escape hatch). No EOF, no error — only heartbeat liveness sees it.
 ///
 /// Production workers run this with [`FaultInjector::manual`] (SIGTERM
 /// latches a drain); tests script it with [`FaultInjector::scripted`].
@@ -808,10 +834,22 @@ pub fn serve_sessions_driven(
     let mut next_conn = 0usize;
     let mut served = 0usize;
     let mut draining: Option<Instant> = None;
+    // Silent-fault latches: `poll` returns each scripted CorruptValue /
+    // Stall decision ONCE; the loop carries the state from then on.
+    let mut corrupt = false;
+    let mut stalled = false;
     loop {
         match faults.poll(served) {
             FaultDecision::Continue => {}
             FaultDecision::Delay(d) => std::thread::sleep(d),
+            FaultDecision::CorruptValue => {
+                eprintln!("[worker] fault: corrupting every value from here on");
+                corrupt = true;
+            }
+            FaultDecision::Stall => {
+                eprintln!("[worker] fault: stalled (connections held open, no replies)");
+                stalled = true;
+            }
             FaultDecision::DropConnections => {
                 // Simulated crash: tear every connection mid-message (the
                 // torn partial line reads as an unclean disconnect, never a
@@ -832,7 +870,7 @@ pub fn serve_sessions_driven(
                         let _ =
                             write_line(stream, &obj(vec![("drain", Json::Bool(true))]));
                     }
-                    draining = Some(Instant::now() + DRAIN_GRACE);
+                    draining = Some(Instant::now() + opts.drain_grace);
                 }
             }
             FaultDecision::Preempt => {
@@ -889,6 +927,13 @@ pub fn serve_sessions_driven(
                     stop.store(true, Ordering::Relaxed);
                     return Ok(served);
                 }
+                if stalled {
+                    // A hung worker: the frame was read off the socket but
+                    // nothing answers it — no EOF, no error reply, nothing
+                    // for the leader's reader to attribute. Exactly the
+                    // failure mode only heartbeat liveness can detect.
+                    continue;
+                }
                 if draining.is_some() {
                     // Draining: evals are DROPPED unanswered (the leader
                     // requeued them on the drain notice; a late reply
@@ -897,8 +942,15 @@ pub fn serve_sessions_driven(
                     // politely refused.
                     if let Some(writer) = conns.get_mut(&conn) {
                         let reply_failed = if msg.get("bye").is_some() {
-                            serve_mux_msg(factory, &mut table, writer, &msg, &mut served)
-                                .is_err()
+                            serve_mux_msg(
+                                factory,
+                                &mut table,
+                                writer,
+                                &msg,
+                                &mut served,
+                                corrupt,
+                            )
+                            .is_err()
                         } else if msg.get("hello").is_some() {
                             write_line(
                                 writer,
@@ -916,7 +968,7 @@ pub fn serve_sessions_driven(
                         }
                     }
                 } else if let Some(writer) = conns.get_mut(&conn) {
-                    if serve_mux_msg(factory, &mut table, writer, &msg, &mut served)
+                    if serve_mux_msg(factory, &mut table, writer, &msg, &mut served, corrupt)
                         .is_err()
                     {
                         // Reply write failed: the peer is gone; its
@@ -954,6 +1006,7 @@ fn serve_mux_msg<'f>(
     writer: &mut TcpStream,
     msg: &Json,
     served: &mut usize,
+    corrupt: bool,
 ) -> Result<()> {
     if let Some(hello) = msg.get("hello") {
         let proto = hello.get("proto").and_then(|v| v.as_i64());
@@ -980,17 +1033,25 @@ fn serve_mux_msg<'f>(
                 Ok(dims)
             });
         match outcome {
-            Ok(dims) => write_line(
-                writer,
-                &obj(vec![(
-                    "hello_ack",
-                    obj(vec![
-                        ("proto", Json::Num(PROTOCOL_VERSION as f64)),
-                        ("session", Json::Str(sid.to_string())),
-                        ("dims", Json::Num(dims as f64)),
-                    ]),
-                )]),
-            ),
+            Ok(dims) => {
+                let mut ack = vec![
+                    ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+                    ("session", Json::Str(sid.to_string())),
+                    ("dims", Json::Num(dims as f64)),
+                ];
+                // Heartbeat capability is negotiated, not assumed: the ack
+                // echoes the leader's `"heartbeat": true` only if this
+                // worker answers pings, so old leaders and old workers keep
+                // interoperating with the frame simply absent.
+                if hello
+                    .get("heartbeat")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false)
+                {
+                    ack.push(("heartbeat", Json::Bool(true)));
+                }
+                write_line(writer, &obj(vec![("hello_ack", obj(ack))]))
+            }
             Err(e) => {
                 eprintln!("[worker] rejecting session '{sid}': {e:#}");
                 write_line(writer, &error_reply("session", format!("{e:#}")))
@@ -1043,7 +1104,14 @@ fn serve_mux_msg<'f>(
                 );
             }
         };
-        let record = entry.backend.eval_record(&config);
+        let mut record = entry.backend.eval_record(&config);
+        if corrupt {
+            // Scripted silent fault: a deterministic, always-beyond-tolerance
+            // perturbation (pure function of the true value, so a seeded
+            // chaos soak replays it bit-for-bit). The reply stays perfectly
+            // well-formed — only a cross-worker audit can tell.
+            record.value += 1.0e3 + record.value.abs();
+        }
         entry.last_used = Instant::now();
         entry.evals += 1;
         *served += 1;
@@ -1056,6 +1124,11 @@ fn serve_mux_msg<'f>(
                 ("record", record.to_json()),
             ]),
         )
+    } else if msg.get("ping").is_some() {
+        // Heartbeat probe: answering from the single serve thread is the
+        // point — a pong proves the event loop is alive, not just the
+        // socket. No session, no id: liveness is per-connection.
+        write_line(writer, &obj(vec![("pong", Json::Bool(true))]))
     } else {
         let keys: Vec<&str> = msg
             .as_obj()
@@ -1216,6 +1289,50 @@ fn handle_join_conn(stream: TcpStream, queue: &Mutex<Vec<String>>) -> Result<()>
 /// `advertise` before announcing — the pool may dial immediately.
 pub fn announce_join(registry: &str, advertise: &str) -> Result<()> {
     let stream = connect_with_retry(registry)?;
+    announce_join_on(stream, advertise)
+}
+
+/// [`announce_join`] with the startup race handled: a worker started BEFORE
+/// its leader single-dials per attempt and retries the whole announce
+/// (dial + frame + ack) under jittered exponential backoff until the
+/// registry answers, instead of exiting. Permanent rejections (protocol
+/// skew) still fail immediately — no amount of retrying fixes a version
+/// mismatch.
+pub fn announce_join_retrying(registry: &str, advertise: &str, attempts: usize) -> Result<()> {
+    let attempts = attempts.max(1);
+    let mut delay = Duration::from_millis(50);
+    let mut rng = Rng::new(addr_seed(registry) ^ addr_seed(advertise));
+    for attempt in 0..attempts {
+        let outcome = TcpStream::connect(registry)
+            .map_err(anyhow::Error::from)
+            .and_then(|stream| announce_join_on(stream, advertise));
+        match outcome {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                // The registry answered with a structured rejection: it is
+                // alive and said no. Retrying cannot change its mind.
+                if format!("{e:#}").contains("registry rejected the join") {
+                    return Err(e);
+                }
+                if attempt + 1 == attempts {
+                    return Err(e).with_context(|| {
+                        format!("registry {registry} unreachable after {attempts} attempts")
+                    });
+                }
+                eprintln!(
+                    "[worker] join announce to {registry} failed (attempt {}): {e:#}",
+                    attempt + 1
+                );
+                std::thread::sleep(jittered(delay, &mut rng));
+                delay = (delay * 2).min(Duration::from_secs(2));
+            }
+        }
+    }
+    unreachable!()
+}
+
+/// One announce over an already-dialed registry connection.
+fn announce_join_on(stream: TcpStream, advertise: &str) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     reader.get_ref().set_read_timeout(Some(Duration::from_secs(5)))?;
@@ -1251,6 +1368,10 @@ fn hello_frame(sid: &str, spec: &SessionSpec) -> Json {
             ("proto", Json::Num(PROTOCOL_VERSION as f64)),
             ("session", Json::Str(sid.to_string())),
             ("spec", spec.to_json()),
+            // Heartbeat offer: workers that answer pings echo this in the
+            // ack; old workers ignore unknown hello fields, so the frame is
+            // a pure capability negotiation, not a version bump.
+            ("heartbeat", Json::Bool(true)),
         ]),
     )])
 }
@@ -1259,13 +1380,14 @@ fn hello_frame(sid: &str, spec: &SessionSpec) -> Json {
 /// its spec, block (bounded) for the ack. A structured rejection from the
 /// worker — version skew, digest mismatch, space the backend cannot
 /// rebuild — surfaces as an error naming the kind, so a session never
-/// silently runs over a skewed space.
+/// silently runs over a skewed space. `Ok(true)` means the worker also
+/// echoed the heartbeat capability (it answers `{"ping"}` frames).
 fn client_handshake(
     writer: &mut TcpStream,
     reader: &mut BufReader<TcpStream>,
     sid: &str,
     spec: &SessionSpec,
-) -> Result<()> {
+) -> Result<bool> {
     write_line(writer, &hello_frame(sid, spec))?;
     reader.get_ref().set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
     let reply = read_json_line(reader);
@@ -1285,7 +1407,10 @@ fn client_handshake(
             acked == Some(sid),
             "worker acked session {acked:?}, leader opened '{sid}'"
         );
-        return Ok(());
+        return Ok(ack
+            .get("heartbeat")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false));
     }
     let kind = msg.get("kind").and_then(|v| v.as_str()).unwrap_or("?");
     let detail = msg.get("error").and_then(|v| v.as_str()).unwrap_or("unparseable reply");
@@ -1356,7 +1481,7 @@ impl WorkerHandle {
     /// [`hello`](Self::hello) under an explicit session id — drives
     /// multi-tenant workers from protocol-level tests.
     pub fn hello_as(&mut self, sid: &str, spec: &SessionSpec) -> Result<()> {
-        client_handshake(&mut self.writer, &mut self.reader, sid, spec)
+        client_handshake(&mut self.writer, &mut self.reader, sid, spec).map(|_| ())
     }
 
     /// Send one raw line (protocol skew tests).
@@ -1504,6 +1629,22 @@ pub struct PoolCfg {
     /// farm can set distinct seeds so their retry storms also
     /// de-correlate from each other.
     pub jitter_seed: u64,
+    /// Heartbeat liveness deadline (`--heartbeat-secs`; zero disables). A
+    /// heartbeat-capable connection silent for this long gets a `{"ping"}`;
+    /// no `{"pong"}` within another deadline retires the worker and
+    /// requeues its in-flight slots. This is the BETWEEN-rounds liveness
+    /// net — mid-round stragglers are already caught by the EWMA deadline,
+    /// but a worker that hangs while idle would otherwise stall the next
+    /// round's first dispatch for as long as the OS keeps the socket up.
+    pub heartbeat: Duration,
+    /// Fraction of each round's completed slots to re-dispatch to a SECOND
+    /// worker as audit evaluations (`--audit-fraction`; zero disables).
+    /// Audits ride otherwise-idle capacity, never count against the search
+    /// budget, and never touch the recorded history — they exist to catch
+    /// a worker whose replies are well-formed but wrong. Disagreement
+    /// beyond tolerance walks the minority worker through
+    /// Healthy -> Suspect -> Quarantined.
+    pub audit_fraction: f64,
 }
 
 impl Default for PoolCfg {
@@ -1516,8 +1657,37 @@ impl Default for PoolCfg {
             tick: Duration::from_millis(5),
             pipeline_depth: 2,
             jitter_seed: 0,
+            heartbeat: Duration::ZERO,
+            audit_fraction: 0.0,
         }
     }
+}
+
+/// Result-integrity state of one pool worker. Transitions are driven by
+/// audit evaluations only: a disagreement beyond tolerance demotes the
+/// minority participant one step (`Healthy -> Suspect -> Quarantined`); an
+/// agreement redeems a `Suspect` back to `Healthy`. `Quarantined` is
+/// terminal for the handle — the worker is drained via the same path a
+/// drain notice takes and its slots requeue exactly once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Health {
+    Healthy,
+    Suspect,
+    Quarantined,
+}
+
+/// One in-flight audit: dispatch `id` re-evaluates `slot` (already done,
+/// value recorded) on a second worker, and the reply is compared instead
+/// of recorded.
+struct AuditProbe {
+    slot: usize,
+    /// Who served the recorded value, and what it was.
+    original_worker: usize,
+    original_value: f64,
+    /// `Some((first_auditor, its_value))` marks a stage-2 tie-break probe:
+    /// the original and the first auditor disagreed, and this dispatch
+    /// asks a third worker to pick the minority.
+    stage2: Option<(usize, f64)>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -1544,6 +1714,9 @@ enum PoolEvent {
     /// stop dispatching, requeue its in-flight slots exactly once, `bye`
     /// its sessions, and retire the handle cleanly — no redial.
     Drain { worker: usize, generation: u64 },
+    /// `{"pong"}` — the worker answered a liveness ping; the connection's
+    /// probation lifts and it is dispatchable again.
+    Pong { worker: usize, generation: u64 },
 }
 
 struct PoolWorker {
@@ -1572,6 +1745,19 @@ struct PoolWorker {
     /// address (plus [`PoolCfg::jitter_seed`]) — reconnect delays spread
     /// out across a restarted farm instead of thundering in lockstep.
     jitter: Rng,
+    /// The hello ack echoed the heartbeat capability: this connection
+    /// answers `{"ping"}` frames. Legacy/sessionless workers stay `false`
+    /// and are simply never pinged.
+    heartbeat: bool,
+    /// Last instant ANY frame arrived from this connection — results,
+    /// acks, pongs, drain notices all count as proof of life.
+    last_seen: Instant,
+    /// A ping is in flight since this instant; while `Some`, the worker is
+    /// on probation (no new dispatches, not a steal target) so a hung
+    /// event loop cannot swallow fresh work.
+    ping_sent: Option<Instant>,
+    /// Result-integrity state (audit-driven; see [`Health`]).
+    health: Health,
 }
 
 /// An address the pool wants as a worker but is not connected to yet: an
@@ -1607,6 +1793,16 @@ struct Round<'c> {
     /// Per-slot dispatch->first-result latency (0.0 until done).
     secs: Vec<f64>,
     remaining: usize,
+    /// Which worker's reply won each slot (None until done, cleared if the
+    /// slot is invalidated by an audit) — the audit layer needs to know
+    /// who to blame and who not to ask for a second opinion.
+    served_by: Vec<Option<usize>>,
+    /// Slots already audited (or currently under audit) this round.
+    audited: Vec<bool>,
+    /// Audit dispatches still allowed this round:
+    /// ceil(audit_fraction x round size), refunded when an invalidated
+    /// slot must be re-served and re-checked.
+    audit_budget: usize,
 }
 
 /// One open session on the pool. Its spec is re-handshaken on EVERY
@@ -1722,8 +1918,22 @@ pub struct WorkerPool {
     pending: Vec<PendingJoiner>,
     /// Workers adopted at runtime (joins + degraded-start catch-ups).
     pub adopted: usize,
-    /// Workers that left through the drain protocol.
+    /// Workers that left through the drain protocol (drain notices,
+    /// supervisor-initiated idle releases).
     pub drained: usize,
+    /// In-flight audit probes by dispatch id (cleared at round start —
+    /// audits are strictly per-round).
+    audit_probes: HashMap<usize, AuditProbe>,
+    /// Audit evaluations dispatched.
+    pub audits: usize,
+    /// Audit comparisons that disagreed beyond tolerance.
+    pub audit_disagreements: usize,
+    /// Workers quarantined by the result-integrity audit.
+    pub quarantined: usize,
+    /// Workers retired by the heartbeat liveness check.
+    pub heartbeat_retired: usize,
+    /// Size of the most recent `evaluate_full` round (stats snapshot).
+    last_round_size: usize,
 }
 
 impl WorkerPool {
@@ -1842,6 +2052,12 @@ impl WorkerPool {
             pending: Vec::new(),
             adopted: 0,
             drained: 0,
+            audit_probes: HashMap::new(),
+            audits: 0,
+            audit_disagreements: 0,
+            quarantined: 0,
+            heartbeat_retired: 0,
+            last_round_size: 0,
         }
     }
 
@@ -1852,8 +2068,9 @@ impl WorkerPool {
         // synchronously off the same buffered reader that is then handed to
         // the thread, so no reply bytes can be lost in a discarded buffer.
         // EVERY open session handshakes, in open order.
+        let mut heartbeat = false;
         for sess in &self.sessions {
-            client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
+            heartbeat = client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
         }
         let w = self.workers.len();
         // Address-less (adopted-stream) workers cannot reconnect, so their
@@ -1874,6 +2091,10 @@ impl WorkerPool {
             outstanding: HashMap::new(),
             dispatched: 0,
             jitter: Rng::new(jitter_seed),
+            heartbeat,
+            last_seen: Instant::now(),
+            ping_sent: None,
+            health: Health::Healthy,
         });
         spawn_reader(self.tx.clone(), w, 0, reader);
         Ok(())
@@ -2179,6 +2400,16 @@ impl WorkerPool {
                 queue = order.into();
             }
         }
+        // Audit budget: ceil(fraction x round size). Probes are strictly
+        // per-round — stale entries from an aborted round must not
+        // misattribute this round's dispatch ids.
+        let audit_budget = if self.cfg.audit_fraction > 0.0 {
+            (self.cfg.audit_fraction * configs.len() as f64).ceil() as usize
+        } else {
+            0
+        };
+        self.audit_probes.clear();
+        self.last_round_size = configs.len();
         let mut r = Round {
             configs,
             session: session_idx,
@@ -2188,19 +2419,34 @@ impl WorkerPool {
             records: vec![None; configs.len()],
             secs: vec![0.0; configs.len()],
             remaining: configs.len(),
+            served_by: vec![None; configs.len()],
+            audited: vec![false; configs.len()],
+            audit_budget,
         };
-        while r.remaining > 0 {
+        // The round also waits for its in-flight audit probes: a probe that
+        // resolves after the last real slot may still invalidate a corrupt
+        // value (remaining bumps back up) — returning early would hand the
+        // searcher a history the audit was about to reject.
+        while r.remaining > 0 || !self.audit_probes.is_empty() {
             self.try_reconnect();
             self.adopt_joiners();
+            self.heartbeat_check(&mut r);
             self.fill_idle(&mut r);
             self.steal_stragglers(&mut r);
-            if r.remaining == 0 {
+            self.dispatch_audits(&mut r);
+            if r.remaining == 0 && self.audit_probes.is_empty() {
                 break;
             }
             if self.workers.iter().all(|pw| !pw.alive)
                 && !self.reconnect_possible()
                 && self.pending.is_empty()
             {
+                if r.remaining == 0 {
+                    // Only opportunistic audits were left — abandon them;
+                    // audits must never turn a finished round into an error.
+                    self.audit_probes.clear();
+                    break;
+                }
                 anyhow::bail!(
                     "worker pool exhausted with {} evaluations unfinished",
                     r.remaining
@@ -2241,7 +2487,12 @@ impl WorkerPool {
         loop {
             let mut dispatched_any = false;
             for w in 0..self.workers.len() {
-                if !self.workers[w].alive || self.workers[w].outstanding.len() >= depth {
+                if !self.workers[w].alive
+                    || self.workers[w].outstanding.len() >= depth
+                    // Probation: an unanswered ping means the event loop
+                    // may be hung — fresh work would just be swallowed.
+                    || self.workers[w].ping_sent.is_some()
+                {
                     continue;
                 }
                 let mut next = None;
@@ -2309,7 +2560,7 @@ impl WorkerPool {
     /// schedule a bounded reconnection unless the disconnect was clean.
     fn fail_worker(&mut self, w: usize, reason: &str, clean: bool, r: Option<&mut Round>) {
         let round = self.round;
-        let (lost, can_reconnect) = {
+        let (lost, abandoned_audits, can_reconnect) = {
             let pw = &mut self.workers[w];
             pw.alive = false;
             pw.generation += 1;
@@ -2328,18 +2579,25 @@ impl WorkerPool {
                 pw.backoff = self.cfg.reconnect_backoff;
                 pw.evals_since_connect = 0;
             }
-            let mut lost: Vec<usize> = match &r {
-                Some(r) => pw
-                    .outstanding
-                    .drain()
-                    .filter(|(_, o)| o.round == round && !r.done[o.slot])
-                    .map(|(_, o)| o.slot)
-                    .collect(),
-                None => {
-                    pw.outstanding.clear();
-                    Vec::new()
+            // Audit probes die with the worker serving them: they are
+            // opportunistic re-checks of already-recorded slots, never
+            // round work, so they are dropped (not requeued) — but the
+            // audited slot's check is re-armed, or a corrupt value whose
+            // auditor happened to crash would stand unexamined.
+            let drained_out: Vec<(usize, Outstanding)> = pw.outstanding.drain().collect();
+            let mut lost: Vec<usize> = Vec::new();
+            let mut abandoned: Vec<usize> = Vec::new();
+            for (id, o) in drained_out {
+                if let Some(probe) = self.audit_probes.remove(&id) {
+                    abandoned.push(probe.slot);
+                    continue;
                 }
-            };
+                if let Some(r) = &r {
+                    if o.round == round && !r.done[o.slot] {
+                        lost.push(o.slot);
+                    }
+                }
+            }
             lost.sort_unstable();
             let can_reconnect =
                 !pw.retired && pw.reconnects_left > 0 && pw.addr.is_some();
@@ -2348,11 +2606,17 @@ impl WorkerPool {
             } else {
                 pw.retired = true;
             }
-            (lost, can_reconnect)
+            (lost, abandoned, can_reconnect)
         };
         // A slot still in flight on another worker (straggler duplicate)
         // does not need requeueing — its other copy is the retry.
         if let Some(r) = r {
+            for slot in abandoned_audits {
+                if r.done[slot] && r.audited[slot] {
+                    r.audited[slot] = false;
+                    r.audit_budget += 1;
+                }
+            }
             for &slot in lost.iter().rev() {
                 let in_flight_elsewhere = self.workers.iter().enumerate().any(|(i, pw)| {
                     i != w
@@ -2393,7 +2657,10 @@ impl WorkerPool {
         loop {
             let Some(wi) = (0..self.workers.len())
                 .filter(|&w| {
-                    self.workers[w].alive && self.workers[w].outstanding.len() < depth
+                    self.workers[w].alive
+                        && self.workers[w].outstanding.len() < depth
+                        // On ping probation: not a rescue target.
+                        && self.workers[w].ping_sent.is_none()
                 })
                 .min_by_key(|&w| self.workers[w].outstanding.len())
             else {
@@ -2431,6 +2698,300 @@ impl WorkerPool {
         }
     }
 
+    /// Heartbeat liveness sweep (no-op unless [`PoolCfg::heartbeat`] is
+    /// set). A heartbeat-capable connection silent past the deadline gets
+    /// one `{"ping"}` and goes on probation (no new dispatches, not a
+    /// steal target); a pong lifts the probation, silence for another
+    /// deadline retires the worker and requeues its slots. Retirement is
+    /// deliberate — a worker that reads frames but answers nothing is
+    /// hung, and redialing a hung process would only wedge the handshake.
+    fn heartbeat_check(&mut self, r: &mut Round) {
+        if self.cfg.heartbeat.is_zero() {
+            return;
+        }
+        let deadline = self.cfg.heartbeat;
+        let mut hung: Vec<usize> = Vec::new();
+        for w in 0..self.workers.len() {
+            let pw = &mut self.workers[w];
+            if !pw.alive || !pw.heartbeat {
+                continue;
+            }
+            if let Some(sent) = pw.ping_sent {
+                if sent.elapsed() > deadline {
+                    hung.push(w);
+                }
+            } else if pw.last_seen.elapsed() > deadline {
+                let pinged = match pw.writer.as_mut() {
+                    Some(stream) => {
+                        write_line(stream, &obj(vec![("ping", Json::Bool(true))])).is_ok()
+                    }
+                    None => false,
+                };
+                if pinged {
+                    pw.ping_sent = Some(Instant::now());
+                } else {
+                    hung.push(w);
+                }
+            }
+        }
+        for w in hung {
+            self.heartbeat_retired += 1;
+            self.workers[w].retired = true; // hung, not crashed: no redial
+            self.fail_worker(w, "heartbeat timeout", false, Some(r));
+        }
+    }
+
+    /// Opportunistic audit dispatch: once the round queue is empty (audits
+    /// must never delay fresh work), re-dispatch completed, not-yet-audited
+    /// slots — budget permitting — to a second worker for comparison.
+    fn dispatch_audits(&mut self, r: &mut Round) {
+        if r.audit_budget == 0 || !r.queue.is_empty() {
+            return;
+        }
+        let depth = self.cfg.pipeline_depth.max(1);
+        for slot in 0..r.configs.len() {
+            if r.audit_budget == 0 {
+                return;
+            }
+            if !r.done[slot] || r.audited[slot] {
+                continue;
+            }
+            let Some(server) = r.served_by[slot] else { continue };
+            // Second opinion: anyone alive and trusted except the server.
+            let Some(aud) = (0..self.workers.len())
+                .filter(|&w| {
+                    w != server
+                        && self.workers[w].alive
+                        && self.workers[w].ping_sent.is_none()
+                        && self.workers[w].health != Health::Quarantined
+                        && self.workers[w].outstanding.len() < depth
+                })
+                .min_by_key(|&w| self.workers[w].outstanding.len())
+            else {
+                return; // no spare trusted capacity — retry next tick
+            };
+            let original_value = r.out[slot];
+            r.audited[slot] = true;
+            r.audit_budget -= 1;
+            if self.dispatch_to(aud, slot, r) {
+                let id = self.next_id - 1; // the id dispatch_to just spent
+                self.audit_probes.insert(
+                    id,
+                    AuditProbe { slot, original_worker: server, original_value, stage2: None },
+                );
+                self.audits += 1;
+            } else {
+                // The auditor died on the write (its requeued work may
+                // have refilled the queue); re-arm this audit and let a
+                // later tick retry with fresh capacity.
+                r.audited[slot] = false;
+                r.audit_budget += 1;
+                return;
+            }
+        }
+    }
+
+    /// Resolve one audit reply. Stage 1 compares the auditor against the
+    /// recorded value; a disagreement beyond tolerance escalates to a
+    /// stage-2 tie-break on a third worker, whose verdict demotes the
+    /// minority participant ([`Health`] walk) — and when the RECORDED
+    /// value is the minority, the slot is invalidated and re-served, so
+    /// the history only ever keeps majority-confirmed values.
+    fn resolve_audit(&mut self, auditor: usize, probe: AuditProbe, eval: &RemoteEval, r: &mut Round) {
+        if !r.done[probe.slot] || r.served_by[probe.slot] != Some(probe.original_worker) {
+            return; // the audited value is already gone — verdict is moot
+        }
+        if eval.record.is_none() && !eval.value.is_finite() {
+            return; // the audit itself errored on the auditor: no verdict
+        }
+        match probe.stage2 {
+            None => {
+                if !values_disagree(probe.original_value, eval.value) {
+                    self.note_agreement(probe.original_worker);
+                    self.note_agreement(auditor);
+                    return;
+                }
+                self.audit_disagreements += 1;
+                eprintln!(
+                    "[pool] audit disagreement on slot {}: worker {} recorded {}, \
+                     worker {auditor} re-evaluated {}",
+                    probe.slot, probe.original_worker, probe.original_value, eval.value
+                );
+                // Tie-break on a third worker. Depth is deliberately NOT a
+                // constraint here: a rare tie-break may queue behind other
+                // work, but deferring it on "busy" could escalate honest
+                // workers on a transiently saturated farm.
+                let third = (0..self.workers.len())
+                    .filter(|&w| {
+                        w != probe.original_worker
+                            && w != auditor
+                            && self.workers[w].alive
+                            && self.workers[w].ping_sent.is_none()
+                            && self.workers[w].health != Health::Quarantined
+                    })
+                    .min_by_key(|&w| self.workers[w].outstanding.len());
+                match third {
+                    Some(t) if self.dispatch_to(t, probe.slot, r) => {
+                        let id = self.next_id - 1;
+                        self.audit_probes.insert(
+                            id,
+                            AuditProbe { stage2: Some((auditor, eval.value)), ..probe },
+                        );
+                    }
+                    _ => {
+                        // Two-worker farm (or the third died on dispatch):
+                        // no tie-break is possible. Escalate BOTH sides and
+                        // invalidate — an unverifiable value must not stand.
+                        self.invalidate_slot(r, probe.slot);
+                        self.note_disagreement(probe.original_worker, r);
+                        self.note_disagreement(auditor, r);
+                    }
+                }
+            }
+            Some((first_auditor, first_value)) => {
+                let backs_original = !values_disagree(probe.original_value, eval.value);
+                let backs_auditor = !values_disagree(first_value, eval.value);
+                if backs_original && !backs_auditor {
+                    // The recorded value stands; the first auditor lied.
+                    self.note_disagreement(first_auditor, r);
+                    self.note_agreement(probe.original_worker);
+                    self.note_agreement(auditor);
+                } else if backs_auditor && !backs_original {
+                    // The recorded value is the minority: throw it out and
+                    // re-serve the slot before demoting the server (a
+                    // quarantine would otherwise re-invalidate en masse).
+                    self.invalidate_slot(r, probe.slot);
+                    self.note_disagreement(probe.original_worker, r);
+                    self.note_agreement(first_auditor);
+                    self.note_agreement(auditor);
+                } else {
+                    // Three-way split (or a both-match tolerance artifact):
+                    // nothing is trustworthy — invalidate and demote the
+                    // original disagreeing pair.
+                    self.invalidate_slot(r, probe.slot);
+                    self.note_disagreement(probe.original_worker, r);
+                    self.note_disagreement(first_auditor, r);
+                }
+            }
+        }
+    }
+
+    /// Throw a recorded value out: the slot re-enters the queue to be
+    /// served afresh, and its audit re-arms (budget refunded) so the
+    /// replacement value is checked too.
+    fn invalidate_slot(&mut self, r: &mut Round, slot: usize) {
+        if !r.done[slot] {
+            return;
+        }
+        r.done[slot] = false;
+        r.out[slot] = f64::NAN;
+        r.records[slot] = None;
+        r.secs[slot] = 0.0;
+        r.served_by[slot] = None;
+        if r.audited[slot] {
+            r.audited[slot] = false;
+            r.audit_budget += 1;
+        }
+        r.remaining += 1;
+        r.queue.push_back(slot);
+    }
+
+    /// An audit agreement vouches for a worker: a `Suspect` is redeemed —
+    /// one bad comparison was circumstance, two in a row is a pattern.
+    fn note_agreement(&mut self, w: usize) {
+        if self.workers[w].health == Health::Suspect {
+            self.workers[w].health = Health::Healthy;
+            eprintln!("[pool] worker {w} redeemed by a clean audit (suspect -> healthy)");
+        }
+    }
+
+    /// An audit found `w` in the minority: walk it one step down the
+    /// `Healthy -> Suspect -> Quarantined` ladder.
+    fn note_disagreement(&mut self, w: usize, r: &mut Round) {
+        match self.workers[w].health {
+            Health::Healthy => {
+                self.workers[w].health = Health::Suspect;
+                eprintln!("[pool] worker {w} under suspicion (audit minority)");
+            }
+            Health::Suspect => self.quarantine_worker(w, r),
+            Health::Quarantined => {}
+        }
+    }
+
+    /// Quarantine: every value this worker served into the CURRENT round
+    /// is invalidated and re-served (its earlier rounds are already in the
+    /// searcher's history — the audit exists to stop that from happening
+    /// again), then the worker leaves through the drain path: `bye`,
+    /// half-close, retire, in-flight slots requeued exactly once.
+    fn quarantine_worker(&mut self, w: usize, r: &mut Round) {
+        if self.workers[w].health == Health::Quarantined {
+            return;
+        }
+        self.workers[w].health = Health::Quarantined;
+        self.quarantined += 1;
+        eprintln!("[pool] worker {w} QUARANTINED (repeated audit minority); draining it");
+        for slot in 0..r.configs.len() {
+            if r.served_by[slot] == Some(w) {
+                self.invalidate_slot(r, slot);
+            }
+        }
+        if self.workers[w].alive {
+            if let Some(stream) = self.workers[w].writer.as_mut() {
+                for sess in &self.sessions {
+                    let _ =
+                        write_line(stream, &obj(vec![("bye", Json::Str(sess.id.clone()))]));
+                }
+                let _ = stream.shutdown(Shutdown::Write);
+            }
+            self.fail_worker(w, "quarantined by result audit", true, Some(r));
+        }
+    }
+
+    /// Supervisor-initiated release of one idle worker (the executor of a
+    /// `DrainIdle` decision from `coordinator::supervisor`): the first
+    /// alive, healthy worker with nothing in flight leaves through the
+    /// clean-departure path, provided capacity stays above `min_workers`.
+    /// Returns the released worker's index, `None` if nobody qualified.
+    pub fn release_idle(&mut self, min_workers: usize) -> Option<usize> {
+        if self.capacity() <= min_workers.max(1) {
+            return None;
+        }
+        let w = (0..self.workers.len()).find(|&w| {
+            let pw = &self.workers[w];
+            pw.alive && pw.health == Health::Healthy && pw.outstanding.is_empty()
+        })?;
+        if let Some(stream) = self.workers[w].writer.as_mut() {
+            for sess in &self.sessions {
+                let _ = write_line(stream, &obj(vec![("bye", Json::Str(sess.id.clone()))]));
+            }
+            let _ = stream.shutdown(Shutdown::Write);
+        }
+        self.drained += 1;
+        self.fail_worker(w, "released by supervisor (idle capacity)", true, None);
+        Some(w)
+    }
+
+    /// One farm-health snapshot — the supervisor's policy input and the
+    /// per-round log line ([`PoolStats::render`]).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            capacity: self.capacity(),
+            pending_joiners: self.pending.len(),
+            quarantined: self.quarantined,
+            last_round_size: self.last_round_size,
+            ewma_eval_secs: self.eval_ewma.value(),
+            completed: self.completed,
+            redispatched: self.redispatched,
+            requeued: self.requeued,
+            reconnects: self.reconnects,
+            adopted: self.adopted,
+            drained: self.drained,
+            audits: self.audits,
+            audit_disagreements: self.audit_disagreements,
+            heartbeat_retired: self.heartbeat_retired,
+        }
+    }
+
     /// Process one pool event. `r` is `None` between rounds (the
     /// open_session ack wait): results still feed the EWMA and free
     /// pipeline slots, failures still recycle workers — there is just no
@@ -2441,6 +3002,7 @@ impl WorkerPool {
                 if generation != self.workers[w].generation {
                     return; // stale reader from before a reconnect
                 }
+                self.workers[w].last_seen = Instant::now();
                 let Some(o) = self.workers[w].outstanding.remove(&eval.id) else {
                     return; // id already cleared (failure path) — discard
                 };
@@ -2449,11 +3011,18 @@ impl WorkerPool {
                 self.completed += 1;
                 self.workers[w].evals_since_connect += 1;
                 let Some(r) = r else { return };
+                // Audit replies are compared, never recorded — they must
+                // be intercepted before the slot bookkeeping.
+                if let Some(probe) = self.audit_probes.remove(&eval.id) {
+                    self.resolve_audit(w, probe, &eval, r);
+                    return;
+                }
                 if o.round == self.round && !r.done[o.slot] {
                     r.done[o.slot] = true;
                     r.out[o.slot] = eval.value;
                     r.records[o.slot] = eval.record;
                     r.secs[o.slot] = elapsed;
+                    r.served_by[o.slot] = Some(w);
                     if let Some(si) = r.session {
                         // Feed the session's cost model with the winning
                         // copy's dispatch->result latency. At depth > 1
@@ -2486,7 +3055,16 @@ impl WorkerPool {
                 if generation != self.workers[w].generation {
                     return;
                 }
+                self.workers[w].last_seen = Instant::now();
                 self.drain_worker(w, r);
+            }
+            PoolEvent::Pong { worker: w, generation } => {
+                if generation != self.workers[w].generation {
+                    return;
+                }
+                let pw = &mut self.workers[w];
+                pw.last_seen = Instant::now();
+                pw.ping_sent = None; // probation lifted
             }
         }
     }
@@ -2537,18 +3115,23 @@ impl WorkerPool {
             match TcpStream::connect(&addr).map_err(anyhow::Error::from).and_then(|s| {
                 let mut writer = s;
                 let mut reader = BufReader::new(writer.try_clone()?);
+                let mut heartbeat = false;
                 for sess in sessions {
-                    client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
+                    heartbeat =
+                        client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
                 }
-                Ok((writer, reader))
+                Ok((writer, reader, heartbeat))
             }) {
-                Ok((writer, reader)) => {
+                Ok((writer, reader, heartbeat)) => {
                     let pw = &mut self.workers[w];
                     pw.generation += 1;
                     pw.writer = Some(writer);
                     pw.alive = true;
                     pw.next_reconnect = None;
                     pw.evals_since_connect = 0;
+                    pw.heartbeat = heartbeat;
+                    pw.last_seen = Instant::now();
+                    pw.ping_sent = None;
                     spawn_reader(self.tx.clone(), w, pw.generation, reader);
                     self.reconnects += 1;
                     eprintln!("[pool] worker {w} reconnected to {addr}");
@@ -2589,6 +3172,16 @@ fn spawn_reader(
                     if msg.get("bye_ack").is_some() {
                         // Session-teardown ack (close_session) — pure
                         // bookkeeping, nothing to attribute.
+                        continue;
+                    }
+                    if msg.get("pong").is_some() {
+                        // Heartbeat answer. Must be recognized HERE: a pong
+                        // carries neither id nor kind, so falling through
+                        // to the eval parser would misread liveness proof
+                        // as a dead connection.
+                        if tx.send(PoolEvent::Pong { worker, generation }).is_err() {
+                            return;
+                        }
                         continue;
                     }
                     if msg.get("drain").is_some() {
@@ -3551,6 +4144,7 @@ mod tests {
         let (addr, handle) = spawn_mux_worker(ServeOpts {
             idle_timeout: Duration::from_millis(100),
             tick: Duration::from_millis(10),
+            ..ServeOpts::default()
         });
         let mut w = WorkerHandle::connect(&addr).unwrap();
         let spec = synth_spec(3, 3);

@@ -1,0 +1,361 @@
+//! Autoscaling supervisor: the policy loop that watches the elastic farm
+//! and turns the capacity dial PR 6 built.
+//!
+//! The pool exposes a [`PoolStats`] snapshot per round (capacity, round
+//! size, pending joiners, quarantine count, health counters); the
+//! [`Supervisor`] feeds it through a pure policy function ([`decide`])
+//! with hysteresis (a watermark must hold for `confirm_rounds` consecutive
+//! rounds before anything fires) and a cooldown (after draining a worker
+//! the policy holds for `cooldown_rounds`, so a drain's own effect on load
+//! cannot trigger a drain cascade). Decisions:
+//!
+//! * [`Decision::DrainIdle`] — sustained low load with capacity above the
+//!   floor: release idle workers back to the farm
+//!   ([`WorkerPool::release_idle`](super::WorkerPool::release_idle) runs
+//!   the same clean-departure path a drain notice takes).
+//! * [`Decision::FlagPressure`] — sustained high load: surface a
+//!   structured capacity-pressure event (round logs now; the future
+//!   control plane later). The supervisor never conjures workers — joiners
+//!   still arrive through the registry — so pressure is a flag, not an
+//!   action.
+//!
+//! Everything here is a pure function of the snapshot — no clocks, no
+//! randomness — so a seeded chaos soak that replays the same fault plan
+//! replays the same decisions bit-for-bit. Deliberately EXCLUDED from the
+//! policy inputs: the EWMA eval latency (wall-clock noisy; it rides the
+//! snapshot for logging only) and anything derived from `Instant`.
+
+use crate::util::json::{obj, Json};
+
+/// One round's farm-health snapshot, built by
+/// [`WorkerPool::stats`](super::WorkerPool::stats). The policy consumes
+/// the deterministic fields; the timing fields are for operators.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    /// Live (dispatchable) workers right now.
+    pub capacity: usize,
+    /// Addresses queued for adoption (announced joiners + degraded-start
+    /// leftovers).
+    pub pending_joiners: usize,
+    /// Workers quarantined by the result-integrity audit so far.
+    pub quarantined: usize,
+    /// Configs in the most recent evaluation round — the demand signal the
+    /// policy weighs against `capacity`.
+    pub last_round_size: usize,
+    /// Pool EWMA of dispatch->result latency, seconds (None before the
+    /// first completion). Logged, never policied: wall-clock noise must
+    /// not steer a decision the chaos soak has to replay.
+    pub ewma_eval_secs: Option<f64>,
+    /// Lifetime counters (see the fields on `WorkerPool`).
+    pub completed: usize,
+    pub redispatched: usize,
+    pub requeued: usize,
+    pub reconnects: usize,
+    pub adopted: usize,
+    pub drained: usize,
+    /// Audit evaluations dispatched / disagreements beyond tolerance.
+    pub audits: usize,
+    pub audit_disagreements: usize,
+    /// Workers retired by the heartbeat liveness check.
+    pub heartbeat_retired: usize,
+}
+
+impl PoolStats {
+    /// The one-line round-log rendering (`RoundStat` style).
+    pub fn render(&self) -> String {
+        format!(
+            "capacity {} (+{} pending) | round {} | ewma {} | adopted {} drained {} \
+             requeued {} stolen {} | audits {} (disagree {}) quarantined {} | \
+             heartbeat-retired {}",
+            self.capacity,
+            self.pending_joiners,
+            self.last_round_size,
+            self.ewma_eval_secs
+                .map(|s| format!("{:.1}ms", s * 1e3))
+                .unwrap_or_else(|| "-".to_string()),
+            self.adopted,
+            self.drained,
+            self.requeued,
+            self.redispatched,
+            self.audits,
+            self.audit_disagreements,
+            self.quarantined,
+            self.heartbeat_retired,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("capacity", Json::Num(self.capacity as f64)),
+            ("pending_joiners", Json::Num(self.pending_joiners as f64)),
+            ("quarantined", Json::Num(self.quarantined as f64)),
+            ("last_round_size", Json::Num(self.last_round_size as f64)),
+            (
+                "ewma_eval_secs",
+                self.ewma_eval_secs.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("completed", Json::Num(self.completed as f64)),
+            ("redispatched", Json::Num(self.redispatched as f64)),
+            ("requeued", Json::Num(self.requeued as f64)),
+            ("reconnects", Json::Num(self.reconnects as f64)),
+            ("adopted", Json::Num(self.adopted as f64)),
+            ("drained", Json::Num(self.drained as f64)),
+            ("audits", Json::Num(self.audits as f64)),
+            ("audit_disagreements", Json::Num(self.audit_disagreements as f64)),
+            ("heartbeat_retired", Json::Num(self.heartbeat_retired as f64)),
+        ])
+    }
+}
+
+/// Policy knobs. Watermarks are in units of LOAD = round size / capacity:
+/// load 1.0 means exactly one config per live worker per round.
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorCfg {
+    /// Load below this is "low" (a candidate for draining idle capacity).
+    pub low_watermark: f64,
+    /// Load at or above this is "high" (capacity pressure).
+    pub high_watermark: f64,
+    /// A watermark must hold for this many CONSECUTIVE rounds before the
+    /// policy acts — one odd-sized round (a budget tail, a re-prune
+    /// boundary) must not flap the farm.
+    pub confirm_rounds: usize,
+    /// Rounds the policy holds after a drain decision, so the drain's own
+    /// load shift settles before the next decision.
+    pub cooldown_rounds: usize,
+    /// Never drain below this many live workers.
+    pub min_workers: usize,
+}
+
+impl Default for SupervisorCfg {
+    fn default() -> Self {
+        SupervisorCfg {
+            low_watermark: 0.5,
+            high_watermark: 1.5,
+            confirm_rounds: 2,
+            cooldown_rounds: 2,
+            min_workers: 1,
+        }
+    }
+}
+
+/// What the policy wants done after a round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Hold,
+    /// Sustained low load: `excess` workers are idle beyond the demand +
+    /// floor. The executor drains ONE per decision (cooldown paces the
+    /// rest) — `excess` sizes the surplus for the log.
+    DrainIdle { excess: usize },
+    /// Sustained high load: the farm is `deficit` workers short of one
+    /// config per worker per round. Surfaced, never acted on — capacity
+    /// comes from the join registry.
+    FlagPressure { deficit: usize },
+}
+
+/// Hysteresis/cooldown state carried between rounds. All updates are
+/// deterministic functions of the snapshot sequence.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SupervisorState {
+    pub consecutive_low: usize,
+    pub consecutive_high: usize,
+    pub cooldown_left: usize,
+}
+
+/// The pure policy: same (cfg, state, stats) in, same decision out — no
+/// clocks, no randomness, nothing hidden. `state` must already reflect
+/// this round's snapshot (see [`SupervisorState`] updates in
+/// [`Supervisor::observe`]).
+pub fn decide(cfg: &SupervisorCfg, state: &SupervisorState, stats: &PoolStats) -> Decision {
+    if state.cooldown_left > 0 || stats.capacity == 0 {
+        return Decision::Hold;
+    }
+    let load = stats.last_round_size as f64 / stats.capacity as f64;
+    if load >= cfg.high_watermark && state.consecutive_high >= cfg.confirm_rounds {
+        // Pending joiners are capacity already on its way; only the
+        // remaining shortfall is pressure.
+        let deficit = stats
+            .last_round_size
+            .saturating_sub(stats.capacity + stats.pending_joiners);
+        if deficit > 0 {
+            return Decision::FlagPressure { deficit };
+        }
+        return Decision::Hold;
+    }
+    if load < cfg.low_watermark && state.consecutive_low >= cfg.confirm_rounds {
+        let needed = stats.last_round_size.max(cfg.min_workers.max(1));
+        let excess = stats.capacity.saturating_sub(needed);
+        if excess > 0 {
+            return Decision::DrainIdle { excess };
+        }
+    }
+    Decision::Hold
+}
+
+/// One acted-on (non-Hold) decision, with the snapshot that produced it —
+/// the structured event stream a control plane would consume.
+#[derive(Debug, Clone)]
+pub struct SupervisorEvent {
+    pub round: usize,
+    pub decision: Decision,
+    pub stats: PoolStats,
+}
+
+impl SupervisorEvent {
+    pub fn to_json(&self) -> Json {
+        let (kind, amount) = match self.decision {
+            Decision::Hold => ("hold", 0),
+            Decision::DrainIdle { excess } => ("drain_idle", excess),
+            Decision::FlagPressure { deficit } => ("flag_pressure", deficit),
+        };
+        obj(vec![
+            ("supervisor", Json::Str(kind.to_string())),
+            ("round", Json::Num(self.round as f64)),
+            ("amount", Json::Num(amount as f64)),
+            ("stats", self.stats.to_json()),
+        ])
+    }
+}
+
+/// The stateful wrapper `drive()` runs once per round: updates hysteresis
+/// counters from the snapshot, applies the pure policy, arms the cooldown,
+/// and accumulates the structured event log.
+#[derive(Debug, Clone, Default)]
+pub struct Supervisor {
+    pub cfg: SupervisorCfg,
+    pub state: SupervisorState,
+    pub events: Vec<SupervisorEvent>,
+}
+
+impl Supervisor {
+    pub fn new(cfg: SupervisorCfg) -> Supervisor {
+        Supervisor { cfg, state: SupervisorState::default(), events: Vec::new() }
+    }
+
+    /// Feed one round's snapshot; returns what to do. Deterministic: the
+    /// decision sequence is a pure fold over the snapshot sequence.
+    pub fn observe(&mut self, round: usize, stats: &PoolStats) -> Decision {
+        if stats.capacity > 0 {
+            let load = stats.last_round_size as f64 / stats.capacity as f64;
+            if load < self.cfg.low_watermark {
+                self.state.consecutive_low += 1;
+            } else {
+                self.state.consecutive_low = 0;
+            }
+            if load >= self.cfg.high_watermark {
+                self.state.consecutive_high += 1;
+            } else {
+                self.state.consecutive_high = 0;
+            }
+        }
+        let decision = decide(&self.cfg, &self.state, stats);
+        if self.state.cooldown_left > 0 {
+            self.state.cooldown_left -= 1;
+        }
+        match decision {
+            Decision::Hold => {}
+            Decision::DrainIdle { .. } => {
+                // Acting resets both the streak and the cooldown: the next
+                // drain needs fresh evidence on the post-drain farm.
+                self.state.consecutive_low = 0;
+                self.state.cooldown_left = self.cfg.cooldown_rounds;
+                self.events.push(SupervisorEvent { round, decision, stats: *stats });
+            }
+            Decision::FlagPressure { .. } => {
+                self.state.consecutive_high = 0;
+                self.state.cooldown_left = self.cfg.cooldown_rounds;
+                self.events.push(SupervisorEvent { round, decision, stats: *stats });
+            }
+        }
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(capacity: usize, round: usize, pending: usize) -> PoolStats {
+        PoolStats {
+            capacity,
+            last_round_size: round,
+            pending_joiners: pending,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn decide_is_a_pure_function_of_its_inputs() {
+        let cfg = SupervisorCfg::default();
+        let state =
+            SupervisorState { consecutive_low: 5, consecutive_high: 0, cooldown_left: 0 };
+        let s = stats(8, 2, 0);
+        let first = decide(&cfg, &state, &s);
+        for _ in 0..100 {
+            assert_eq!(decide(&cfg, &state, &s), first, "decide must be pure");
+        }
+        assert_eq!(first, Decision::DrainIdle { excess: 6 });
+    }
+
+    #[test]
+    fn hysteresis_needs_consecutive_confirmation() {
+        let mut sup = Supervisor::new(SupervisorCfg {
+            confirm_rounds: 2,
+            ..Default::default()
+        });
+        // Round 1 of low load: observed, not yet acted on.
+        assert_eq!(sup.observe(0, &stats(8, 2, 0)), Decision::Hold);
+        // A normal-load round resets the streak...
+        assert_eq!(sup.observe(1, &stats(8, 8, 0)), Decision::Hold);
+        assert_eq!(sup.observe(2, &stats(8, 2, 0)), Decision::Hold);
+        // ...so low must hold twice in a row before the drain fires.
+        assert_eq!(sup.observe(3, &stats(8, 2, 0)), Decision::DrainIdle { excess: 6 });
+        assert_eq!(sup.events.len(), 1);
+    }
+
+    #[test]
+    fn cooldown_paces_consecutive_drains() {
+        let mut sup = Supervisor::new(SupervisorCfg {
+            confirm_rounds: 1,
+            cooldown_rounds: 2,
+            ..Default::default()
+        });
+        assert_eq!(sup.observe(0, &stats(8, 2, 0)), Decision::Hold);
+        assert_eq!(sup.observe(1, &stats(8, 2, 0)), Decision::DrainIdle { excess: 6 });
+        // Two rounds of cooldown hold even under sustained low load.
+        assert_eq!(sup.observe(2, &stats(7, 2, 0)), Decision::Hold);
+        assert_eq!(sup.observe(3, &stats(7, 2, 0)), Decision::Hold);
+        assert_eq!(sup.observe(4, &stats(7, 2, 0)), Decision::DrainIdle { excess: 5 });
+    }
+
+    #[test]
+    fn pressure_is_flagged_net_of_pending_joiners() {
+        let mut sup = Supervisor::new(SupervisorCfg {
+            confirm_rounds: 2,
+            ..Default::default()
+        });
+        assert_eq!(sup.observe(0, &stats(2, 8, 0)), Decision::Hold);
+        assert_eq!(sup.observe(1, &stats(2, 8, 0)), Decision::FlagPressure { deficit: 6 });
+        // Joiners already on their way count as capacity: no pressure when
+        // they cover the shortfall.
+        let mut sup2 = Supervisor::new(SupervisorCfg {
+            confirm_rounds: 2,
+            ..Default::default()
+        });
+        assert_eq!(sup2.observe(0, &stats(2, 8, 6)), Decision::Hold);
+        assert_eq!(sup2.observe(1, &stats(2, 8, 6)), Decision::Hold);
+        assert!(sup2.events.is_empty(), "covered pressure emits no event");
+    }
+
+    #[test]
+    fn min_workers_floor_and_empty_pool_hold() {
+        let cfg = SupervisorCfg { min_workers: 2, ..Default::default() };
+        let state =
+            SupervisorState { consecutive_low: 9, consecutive_high: 0, cooldown_left: 0 };
+        // Capacity 2 with demand 1: the floor wins, nothing drains.
+        assert_eq!(decide(&cfg, &state, &stats(2, 1, 0)), Decision::Hold);
+        // Dead pool: nothing to decide about.
+        assert_eq!(decide(&cfg, &state, &stats(0, 4, 0)), Decision::Hold);
+        // Capacity 4, demand 1, floor 2 -> 2 excess.
+        assert_eq!(decide(&cfg, &state, &stats(4, 1, 0)), Decision::DrainIdle { excess: 2 });
+    }
+}

@@ -159,6 +159,7 @@ fn session_opts_from(args: &Args) -> Result<SessionOpts> {
         reprune_every,
         keep_workers: args.has_flag("keep-workers"),
         registry,
+        autoscale: args.has_flag("autoscale"),
     })
 }
 
@@ -206,6 +207,21 @@ fn cmd_search(args: &Args) -> Result<()> {
     t.row(vec!["pretrain secs".into(), format!("{:.1}", report.pretrain_secs)]);
     t.row(vec!["search secs".into(), format!("{:.1}", report.search_secs)]);
     t.row(vec!["final-train secs".into(), format!("{:.1}", report.final_secs)]);
+    if let Some(farm) = &report.farm {
+        t.row(vec!["farm capacity (end)".into(), format!("{}", farm.capacity)]);
+        t.row(vec![
+            "farm adopted/drained/quarantined".into(),
+            format!("{}/{}/{}", farm.adopted, farm.drained, farm.quarantined),
+        ]);
+        t.row(vec![
+            "farm audits (disagreements)".into(),
+            format!("{} ({})", farm.audits, farm.audit_disagreements),
+        ]);
+        t.row(vec![
+            "farm heartbeat retirements".into(),
+            format!("{}", farm.heartbeat_retired),
+        ]);
+    }
     println!("{}", t.render());
     println!("{}", exp::table4::render_config(&report, &sess));
     Ok(())
@@ -368,6 +384,27 @@ fn pool_cfg_from(args: &Args) -> Result<PoolCfg> {
         );
         cfg.pipeline_depth = d;
     }
+    if let Some(s) = args.get("heartbeat-secs") {
+        let h: f64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--heartbeat-secs expects a number, got '{s}'"))?;
+        anyhow::ensure!(
+            h.is_finite() && h >= 0.0,
+            "--heartbeat-secs must be >= 0 seconds (0 disables heartbeats)"
+        );
+        cfg.heartbeat = std::time::Duration::from_secs_f64(h);
+    }
+    if let Some(s) = args.get("audit-fraction") {
+        let f: f64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--audit-fraction expects a number, got '{s}'"))?;
+        anyhow::ensure!(
+            f.is_finite() && (0.0..=1.0).contains(&f),
+            "--audit-fraction must be in [0, 1]: the fraction of each round's completed \
+             configs re-evaluated on a second worker (got {f})"
+        );
+        cfg.audit_fraction = f;
+    }
     // Fold the run seed into the reconnect-jitter streams so retries are
     // reproducible per run but desynchronized across runs.
     cfg.jitter_seed = args.get_u64("seed", 0);
@@ -389,9 +426,9 @@ fn pool_cfg_from(args: &Args) -> Result<PoolCfg> {
 /// killing: the in-flight eval finishes and is replied, then the worker
 /// notifies `{"drain"}` and exits once its leaders detach.
 fn cmd_worker(args: &Args) -> Result<()> {
-    use sammpq::coordinator::{announce_join, install_sigterm_drain, serve_sessions_driven,
-                              DnnFactory, FaultInjector, ServeOpts, SyntheticFactory,
-                              WorkerControl};
+    use sammpq::coordinator::{announce_join_retrying, install_sigterm_drain,
+                              serve_sessions_driven, DnnFactory, FaultInjector, ServeOpts,
+                              SyntheticFactory, WorkerControl};
     let addr = args.get_or("addr", "127.0.0.1:7447");
     let mut opts = ServeOpts::default();
     let idle = args.get_f64("session-idle-secs", opts.idle_timeout.as_secs_f64());
@@ -400,6 +437,13 @@ fn cmd_worker(args: &Args) -> Result<()> {
         "--session-idle-secs must be a positive number of seconds"
     );
     opts.idle_timeout = std::time::Duration::from_secs_f64(idle);
+    let grace = args.get_f64("drain-grace-secs", opts.drain_grace.as_secs_f64());
+    anyhow::ensure!(
+        grace.is_finite() && grace >= 0.0,
+        "--drain-grace-secs must be >= 0 seconds (how long a draining worker waits \
+         for leaders to detach before exiting)"
+    );
+    opts.drain_grace = std::time::Duration::from_secs_f64(grace);
     anyhow::ensure!(
         !args.has_flag("join"),
         "--join needs a value: the leader's registry host:port"
@@ -438,7 +482,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
             opts.idle_timeout
         );
         if let Some(reg) = &join {
-            announce_join(reg, &advertise)?;
+            // The leader may not be up yet — retry with jittered backoff so
+            // workers started first still enlist.
+            announce_join_retrying(reg, &advertise, 60)?;
             println!("[worker] announced {advertise} to registry {reg}");
         }
         let served =
@@ -468,7 +514,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     // Announce only now — after the slow pretrain — so an adopting pool's
     // handshake is answered promptly instead of queueing behind it.
     if let Some(reg) = &join {
-        announce_join(reg, &advertise)?;
+        announce_join_retrying(reg, &advertise, 60)?;
         println!("[worker] announced {advertise} to registry {reg}");
     }
     let served =
@@ -568,6 +614,14 @@ fn cmd_pool(args: &Args) -> Result<()> {
     t2.row(vec!["straggler re-dispatches".into(), format!("{}", remote.pool.redispatched)]);
     t2.row(vec!["failure requeues".into(), format!("{}", remote.pool.requeued)]);
     t2.row(vec!["reconnections".into(), format!("{}", remote.pool.reconnects)]);
+    t2.row(vec!["workers adopted".into(), format!("{}", remote.pool.adopted)]);
+    t2.row(vec!["workers drained".into(), format!("{}", remote.pool.drained)]);
+    t2.row(vec!["workers quarantined".into(), format!("{}", remote.pool.quarantined)]);
+    t2.row(vec![
+        "audit evals (disagreements)".into(),
+        format!("{} ({})", remote.pool.audits, remote.pool.audit_disagreements),
+    ]);
+    t2.row(vec!["heartbeat retirements".into(), format!("{}", remote.pool.heartbeat_retired)]);
     println!("{}", t2.render());
     Ok(())
 }
@@ -642,6 +696,14 @@ fn main() {
                  \x20             re-sync the worker farm onto the new space)\n\
                  \x20             --registry h:p      accept `worker --join` announcements\n\
                  \x20             while the search runs (elastic farm growth)\n\
+                 \x20             --heartbeat-secs s  ping idle worker connections; ones\n\
+                 \x20             that miss the pong deadline are retired (0 = off)\n\
+                 \x20             --audit-fraction f  re-evaluate this fraction of each\n\
+                 \x20             round on a second worker; disagreeing workers walk\n\
+                 \x20             Healthy -> Suspect -> Quarantined (0 = off)\n\
+                 \x20             --autoscale         act on the supervisor policy (drain\n\
+                 \x20             idle workers under sustained low load); without it the\n\
+                 \x20             per-round health log + pressure events still appear\n\
                  \x20 hessian     sensitivity report (--model, --k, --samples)\n\
                  \x20 hw          hardware model report (--model, --bits, --mult)\n\
                  \x20 convergence Fig. 3a/3b tabular study (no artifacts needed)\n\
@@ -654,14 +716,17 @@ fn main() {
                  \x20             its leader's synced space;\n\
                  \x20             --session-idle-secs <s> frees abandoned sessions;\n\
                  \x20             --join <leader:port> enlists with a running leader's\n\
-                 \x20             --registry so its pool adopts this worker mid-search\n\
+                 \x20             --registry so its pool adopts this worker mid-search,\n\
+                 \x20             retrying with backoff until the registry answers\n\
                  \x20             (--advertise <host:port> overrides the dial-back addr);\n\
-                 \x20             SIGTERM drains: finish the eval, notify, exit clean)\n\
+                 \x20             SIGTERM drains: finish the eval, notify, exit clean;\n\
+                 \x20             --drain-grace-secs <s> caps the post-drain linger)\n\
                  \x20 pool        drive a synthetic search over a worker pool (async\n\
                  \x20             straggler-tolerant demo): --addrs a,b,c\n\
                  \x20             --synthetic <dims>x<choices> --batch-q auto|<q>\n\
                  \x20             --straggler-factor <f> --pipeline-depth <d> --n <evals>\n\
                  \x20             --registry <h:p>    adopt `worker --join`ers mid-run\n\
+                 \x20             --heartbeat-secs <s> --audit-fraction <f>  health layer\n\
                  \x20 info        list compiled artifacts"
             );
             Ok(())

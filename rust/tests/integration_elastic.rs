@@ -13,9 +13,10 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::Duration;
 
-use sammpq::coordinator::{announce_join, serve_sessions_driven, FaultInjector, FaultPlan,
-                          FaultScript, JoinRegistry, PoolCfg, RemoteObjective, ServeOpts,
-                          SessionSpec, SyntheticFactory, WorkerControl};
+use sammpq::coordinator::{announce_join, serve_sessions_driven, FaultAction, FaultEvent,
+                          FaultInjector, FaultPlan, FaultScript, JoinRegistry, PoolCfg,
+                          RemoteObjective, ServeOpts, SessionSpec, SyntheticFactory,
+                          WorkerControl};
 use sammpq::search::{BatchSearcher, History, KmeansTpeParams, Objective, Space,
                      SyntheticObjective};
 
@@ -55,16 +56,31 @@ fn spawn_elastic_worker(
     sleep_ms: u64,
     script: FaultScript,
 ) -> (String, WorkerControl, std::thread::JoinHandle<usize>) {
+    spawn_elastic_worker_opts(sleep_ms, script, ServeOpts::default())
+}
+
+/// [`spawn_elastic_worker`] with explicit serve options — the chaos soaks
+/// shorten `drain_grace` so a scripted drain never dominates the test's
+/// time budget.
+fn spawn_elastic_worker_opts(
+    sleep_ms: u64,
+    script: FaultScript,
+    opts: ServeOpts,
+) -> (String, WorkerControl, std::thread::JoinHandle<usize>) {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
     let addr = listener.local_addr().expect("addr").to_string();
     let control = WorkerControl::new();
     let injector = FaultInjector::scripted(control.clone(), script);
     let handle = std::thread::spawn(move || {
         let factory = SyntheticFactory { sleep: Duration::from_millis(sleep_ms) };
-        serve_sessions_driven(listener, &factory, ServeOpts::default(), injector)
-            .expect("driven worker")
+        serve_sessions_driven(listener, &factory, opts, injector).expect("driven worker")
     });
     (addr, control, handle)
+}
+
+/// Short post-drain linger for scripted soaks (default is 5s per drain).
+fn short_grace() -> ServeOpts {
+    ServeOpts { drain_grace: Duration::from_secs(1), ..ServeOpts::default() }
 }
 
 /// Last-resort farm teardown: one best-effort shutdown frame per address.
@@ -183,11 +199,12 @@ fn run_chaos_farm(
     params: KmeansTpeParams,
     q: usize,
     budget: usize,
+    cfg: PoolCfg,
 ) -> (History, usize) {
     let mut addrs = Vec::new();
     let mut handles = Vec::new();
     for w in 0..plan.scripts().len() {
-        let (a, _c, h) = spawn_elastic_worker(2, plan.script_for(w));
+        let (a, _c, h) = spawn_elastic_worker_opts(2, plan.script_for(w), short_grace());
         addrs.push(a);
         handles.push(h);
     }
@@ -195,7 +212,7 @@ fn run_chaos_farm(
     let mut remote = RemoteObjective::connect_session(
         SessionSpec::synthetic(space.clone()),
         &addrs,
-        no_steal_cfg(),
+        cfg,
     )
     .expect("session connect");
     remote.pool.attach_joiners(registry.queue());
@@ -205,7 +222,7 @@ fn run_chaos_farm(
     let mut round = 0usize;
     while !run.done() {
         if plan.late_joins.contains(&round) {
-            let (a, _c, h) = spawn_elastic_worker(2, FaultScript::empty());
+            let (a, _c, h) = spawn_elastic_worker_opts(2, FaultScript::empty(), short_grace());
             announce_join(registry.local_addr(), &a).expect("announce --join");
             addrs.push(a);
             handles.push(h);
@@ -237,14 +254,201 @@ fn chaos_soak_replays_deterministically() {
         let params = KmeansTpeParams { n_startup: 8, seed: 17, ..Default::default() };
         let want = reference_history(&space, params, q, budget);
 
-        let (first, served_a) = run_chaos_farm(&plan, &space, params, q, budget);
-        let (second, served_b) = run_chaos_farm(&plan, &space, params, q, budget);
+        let (first, served_a) = run_chaos_farm(&plan, &space, params, q, budget, no_steal_cfg());
+        let (second, served_b) =
+            run_chaos_farm(&plan, &space, params, q, budget, no_steal_cfg());
 
         assert_bit_identical(&first, &want, "soak run 1 vs stable");
         assert_bit_identical(&second, &want, "soak run 2 vs stable");
         // Torn connections may lose an already-served reply, forcing a
         // re-serve of the same pure value — so served is >= budget, never
         // less (a lost slot would have hung the round, not shrunk it).
+        assert!(served_a >= budget, "run 1 served {served_a} < {budget}");
+        assert!(served_b >= budget, "run 2 served {served_b} < {budget}");
+    });
+}
+
+#[test]
+fn corrupt_worker_is_quarantined_history_stays_clean() {
+    with_timeout(240, || {
+        // ISSUE 7 acceptance: worker 1 silently corrupts every reply from
+        // the start — protocol-healthy in every other respect, so only the
+        // result audit can see it. With full audit coverage the pool must
+        // walk it Healthy -> Suspect -> Quarantined, throw its round
+        // values out, re-serve them on the honest majority, and finish the
+        // full budget bit-identical to a healthy-farm reference.
+        let space = SyntheticObjective::new(6, 4, Duration::ZERO).space().clone();
+        let (budget, q) = (32, 4);
+        let params = KmeansTpeParams { n_startup: 8, seed: 5, ..Default::default() };
+        let want = reference_history(&space, params, q, budget);
+
+        let corrupt = FaultScript::new(vec![FaultEvent {
+            after_evals: 0,
+            action: FaultAction::CorruptValue,
+        }]);
+        let (a0, _c0, h0) = spawn_elastic_worker(5, FaultScript::empty());
+        let (a1, _c1, h1) = spawn_elastic_worker(5, corrupt);
+        let (a2, _c2, h2) = spawn_elastic_worker(5, FaultScript::empty());
+        let cfg = PoolCfg { audit_fraction: 1.0, ..no_steal_cfg() };
+        let mut remote = RemoteObjective::connect_session(
+            SessionSpec::synthetic(space.clone()),
+            &[a0.clone(), a1.clone(), a2.clone()],
+            cfg,
+        )
+        .expect("session connect");
+
+        let searcher = BatchSearcher::kmeans_tpe(params, q);
+        let mut run = searcher.start(space.clone(), budget, None).unwrap();
+        while !run.done() {
+            run.step(&mut remote);
+        }
+        let history = run.finish().0;
+
+        assert_bit_identical(&history, &want, "audited farm vs stable");
+        assert_eq!(remote.pool.quarantined, 1, "the corrupt worker was not quarantined");
+        assert!(
+            remote.pool.audit_disagreements >= 1,
+            "quarantine without a recorded disagreement"
+        );
+        assert!(remote.pool.audits >= 1, "no audit evals ever dispatched");
+
+        remote.shutdown().expect("shutdown");
+        shutdown_farm(&[a0, a1, a2]);
+        let (s0, s1, s2) = (h0.join().unwrap(), h1.join().unwrap(), h2.join().unwrap());
+        // Audit evals and re-serves mean served >= budget; the quarantined
+        // worker must have answered at least one eval to get caught.
+        assert!(s0 + s1 + s2 >= budget, "served {s0}+{s1}+{s2} < {budget}");
+        assert!(s1 >= 1, "the corrupt worker never served (nothing to catch)");
+    });
+}
+
+#[test]
+fn stalled_idle_worker_is_caught_by_heartbeat() {
+    with_timeout(240, || {
+        // ISSUE 7 acceptance: worker 1 hangs silently after two evals —
+        // connections stay open, nothing errors, no EOF. Work stealing is
+        // disabled (30s deadline), so ONLY the heartbeat can recover its
+        // in-flight slots; the search must still finish the full budget
+        // bit-identical, with the hung worker retired and never redialed.
+        let space = SyntheticObjective::new(6, 4, Duration::ZERO).space().clone();
+        let (budget, q) = (24, 4);
+        let params = KmeansTpeParams { n_startup: 8, seed: 9, ..Default::default() };
+        let want = reference_history(&space, params, q, budget);
+
+        let stall = FaultScript::new(vec![FaultEvent {
+            after_evals: 2,
+            action: FaultAction::Stall,
+        }]);
+        let (a0, _c0, h0) = spawn_elastic_worker(5, FaultScript::empty());
+        let (a1, _c1, h1) = spawn_elastic_worker(5, stall);
+        let cfg = PoolCfg { heartbeat: Duration::from_millis(150), ..no_steal_cfg() };
+        let mut remote = RemoteObjective::connect_session(
+            SessionSpec::synthetic(space.clone()),
+            &[a0.clone(), a1.clone()],
+            cfg,
+        )
+        .expect("session connect");
+
+        let searcher = BatchSearcher::kmeans_tpe(params, q);
+        let mut run = searcher.start(space.clone(), budget, None).unwrap();
+        while !run.done() {
+            run.step(&mut remote);
+        }
+        let history = run.finish().0;
+
+        assert_bit_identical(&history, &want, "heartbeat farm vs stable");
+        assert_eq!(remote.pool.heartbeat_retired, 1, "hung worker not caught by heartbeat");
+        assert!(remote.pool.requeued >= 1, "the hung worker's slots were never requeued");
+
+        remote.shutdown().expect("shutdown");
+        // The stalled serve loop still honors the administrative shutdown
+        // frame — the test-escape hatch that lets the thread be reaped.
+        shutdown_farm(&[a0, a1]);
+        let (s0, s1) = (h0.join().unwrap(), h1.join().unwrap());
+        // The stall fires at the poll right after the second reply, so the
+        // hung worker served exactly 2; everything else (including its
+        // requeued in-flight slots) went to the healthy worker.
+        assert_eq!(s1, 2, "stall latch fired at the wrong boundary");
+        assert_eq!(s0 + s1, budget, "served {s0}+{s1} != {budget}");
+    });
+}
+
+#[test]
+fn drain_during_straggle_keeps_slots_exactly_once() {
+    with_timeout(240, || {
+        // The drain-vs-straggler race: worker 1 blips 400ms (well past the
+        // 50ms straggler deadline, so its in-flight slots get stolen),
+        // then drains at the very next poll — while its late replies for
+        // already-rescued slots are still in flight. Slot accounting must
+        // stay exactly-once: no duplicates, no -inf, history unchanged.
+        let space = SyntheticObjective::new(6, 4, Duration::ZERO).space().clone();
+        let (budget, q) = (24, 4);
+        let params = KmeansTpeParams { n_startup: 8, seed: 13, ..Default::default() };
+        let want = reference_history(&space, params, q, budget);
+
+        let script = FaultScript::new(vec![
+            FaultEvent { after_evals: 2, action: FaultAction::DelayEval { millis: 400 } },
+            FaultEvent { after_evals: 2, action: FaultAction::Drain },
+        ]);
+        let (a0, _c0, h0) = spawn_elastic_worker(5, FaultScript::empty());
+        let (a1, _c1, h1) = spawn_elastic_worker_opts(5, script, short_grace());
+        let cfg = PoolCfg { min_straggle: Duration::from_millis(50), ..Default::default() };
+        let mut remote = RemoteObjective::connect_session(
+            SessionSpec::synthetic(space.clone()),
+            &[a0.clone(), a1.clone()],
+            cfg,
+        )
+        .expect("session connect");
+
+        let searcher = BatchSearcher::kmeans_tpe(params, q);
+        let mut run = searcher.start(space.clone(), budget, None).unwrap();
+        while !run.done() {
+            run.step(&mut remote);
+        }
+        let history = run.finish().0;
+
+        assert_bit_identical(&history, &want, "drain-vs-straggle vs stable");
+        assert_eq!(remote.pool.drained, 1, "drain notice handled");
+        assert!(remote.pool.redispatched >= 1, "the 400ms blip was never stolen from");
+
+        remote.shutdown().expect("shutdown");
+        shutdown_farm(&[a0, a1]);
+        let (s0, s1) = (h0.join().unwrap(), h1.join().unwrap());
+        // Stolen slots may be served twice farm-wide (the blipped worker's
+        // late reply + the rescue) — never less than once.
+        assert!(s0 + s1 >= budget, "served {s0}+{s1} < {budget}");
+    });
+}
+
+#[test]
+fn health_chaos_soak_replays_deterministically() {
+    with_timeout(300, || {
+        // The supervisor-era soak: `chaos_health` layers the SILENT
+        // failure modes (worker 1 corrupt, worker 2 stalled) on top of the
+        // latency blips, with full audit coverage, heartbeats, and work
+        // stealing all armed at once. Two runs under the same plan must
+        // match each other AND the stable-farm reference — the health
+        // machinery may re-place and re-serve work, never change a result.
+        let plan = FaultPlan::chaos_health(3, 12, 42);
+        assert_eq!(plan, FaultPlan::chaos_health(3, 12, 42), "health plan must replay");
+
+        let space = SyntheticObjective::new(5, 3, Duration::ZERO).space().clone();
+        let (budget, q) = (36, 4);
+        let params = KmeansTpeParams { n_startup: 8, seed: 17, ..Default::default() };
+        let want = reference_history(&space, params, q, budget);
+
+        let health_cfg = || PoolCfg {
+            min_straggle: Duration::from_millis(150),
+            heartbeat: Duration::from_millis(300),
+            audit_fraction: 1.0,
+            ..Default::default()
+        };
+        let (first, served_a) = run_chaos_farm(&plan, &space, params, q, budget, health_cfg());
+        let (second, served_b) =
+            run_chaos_farm(&plan, &space, params, q, budget, health_cfg());
+
+        assert_bit_identical(&first, &want, "health soak run 1 vs stable");
+        assert_bit_identical(&second, &want, "health soak run 2 vs stable");
         assert!(served_a >= budget, "run 1 served {served_a} < {budget}");
         assert!(served_b >= budget, "run 2 served {served_b} < {budget}");
     });
