@@ -11,11 +11,12 @@
 //! Run: `cargo bench` (all) or `cargo bench -- fig3 table2 --effort quick`
 //! Filter names: fig1 fig3 fig3c fig4 table1 table2 table3 table4 ablations
 //!               kernels tpe tpe-hotpath round-latency pipeline-depth
-//!               remote-search hwmodel
+//!               remote-search wire-throughput hwmodel
 //!
 //! `tpe-hotpath` additionally records its proposals/sec numbers in
 //! `BENCH_tpe.json` at the workspace root, so the incremental-surrogate
-//! speedup is tracked across PRs.
+//! speedup is tracked across PRs; `wire-throughput` does the same for the
+//! JSON-vs-binary eval framing in `BENCH_wire_throughput.json`.
 
 use sammpq::coordinator::report::Table;
 use sammpq::exp::{self, Effort};
@@ -221,6 +222,14 @@ fn bench_tpe_hotpath() -> anyhow::Result<()> {
 
     let speedups: Vec<f64> =
         inc_pps.iter().zip(&scratch_pps).map(|(i, s)| i / s).collect();
+    // Gate: the SoA + log-table + threshold-table proposal path must hold
+    // >= 20x over the from-scratch refit at history 1000 (was >= 5x for the
+    // diff-maintained AoS Parzens alone).
+    anyhow::ensure!(
+        speedups[2] >= 20.0,
+        "incremental proposal speedup regressed at history 1000: {:.1}x (gate: >= 20x)",
+        speedups[2]
+    );
     let record = obj(vec![
         ("bench", Json::Str("tpe-hotpath".into())),
         (
@@ -532,6 +541,113 @@ fn bench_remote_search() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Wire framing throughput: the same eval rounds over a zero-sleep
+/// synthetic farm at 10k dims, once with the binary capability refused
+/// (pure v3 JSON lines) and once negotiated (v4 delta-coded binary
+/// frames). Sleep is zero and the objective is a trivial sum, so
+/// wall-clock is dominated by encode + socket + decode — exactly the cost
+/// the binary framing attacks. Acceptance: binary evals/sec beats JSON,
+/// values bit-identical across framings. Records BENCH_wire_throughput.json.
+fn bench_wire_throughput() -> anyhow::Result<()> {
+    use sammpq::coordinator::{serve_sessions_on, PoolCfg, RemoteObjective, ServeOpts,
+                              SessionSpec, SyntheticFactory};
+    use sammpq::search::space::Config;
+    use sammpq::search::SyntheticObjective;
+    use sammpq::util::json::{obj, Json};
+    use sammpq::util::rng::Rng;
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    section("wire-throughput (JSON lines vs binary frames, 10k dims)");
+    let dims = 10_000usize;
+    let choices = 4usize;
+    let workers = 2usize;
+    let batch = 16usize;
+    let rounds = 8usize;
+    let space = SyntheticObjective::new(dims, choices, Duration::ZERO).space().clone();
+
+    // Random configs: realistic (non-sparse) deltas for the binary path and
+    // full-width index arrays for the JSON path.
+    let mut rng = Rng::new(99);
+    let configs: Vec<Config> = (0..batch).map(|_| space.sample(&mut rng)).collect();
+    let expect: Vec<f64> = configs.iter().map(SyntheticObjective::expected_value).collect();
+
+    // One timed farm pass: spawn, session-connect, eval `rounds` batches,
+    // tear down. Returns (evals/sec over the timed rounds, values).
+    let run_farm = |opts: ServeOpts| -> anyhow::Result<(f64, Vec<f64>)> {
+        let mut addrs = Vec::new();
+        let mut joins = Vec::new();
+        for _ in 0..workers {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            addrs.push(listener.local_addr()?.to_string());
+            joins.push(std::thread::spawn(move || {
+                let factory = SyntheticFactory { sleep: Duration::ZERO };
+                serve_sessions_on(listener, &factory, opts).expect("bench worker")
+            }));
+        }
+        let cfg = PoolCfg { min_straggle: Duration::from_secs(30), ..Default::default() };
+        let mut remote =
+            RemoteObjective::connect_session(SessionSpec::synthetic(space.clone()), &addrs, cfg)?;
+        let got = remote.eval_batch(&configs); // warmup (delta state, buffers)
+        let t = Timer::start();
+        let mut last = Vec::new();
+        for _ in 0..rounds {
+            last = remote.eval_batch(&configs);
+        }
+        let secs = t.secs();
+        anyhow::ensure!(last == got, "values unstable across rounds");
+        remote.shutdown()?;
+        for j in joins {
+            j.join().unwrap();
+        }
+        Ok(((batch * rounds) as f64 / secs, last))
+    };
+
+    let json_only = ServeOpts { binary: false, ..ServeOpts::default() };
+    let (mut json_eps, mut bin_eps) = (0f64, 0f64);
+    let (mut json_vals, mut bin_vals) = (Vec::new(), Vec::new());
+    for _ in 0..3 {
+        let (eps, vals) = run_farm(json_only)?;
+        if eps > json_eps {
+            json_eps = eps;
+        }
+        json_vals = vals;
+        let (eps, vals) = run_farm(ServeOpts::default())?;
+        if eps > bin_eps {
+            bin_eps = eps;
+        }
+        bin_vals = vals;
+    }
+    anyhow::ensure!(json_vals == expect, "JSON framing values diverged");
+    anyhow::ensure!(bin_vals == expect, "binary framing values diverged");
+
+    let speedup = bin_eps / json_eps;
+    println!(
+        "{dims}-dim evals x{} over {workers} workers: JSON {json_eps:.0} evals/s | \
+         binary {bin_eps:.0} evals/s | {speedup:.2}x",
+        batch * rounds
+    );
+    anyhow::ensure!(
+        bin_eps > json_eps,
+        "binary framing regressed: {bin_eps:.0} evals/s vs JSON {json_eps:.0} evals/s"
+    );
+
+    let record = obj(vec![
+        ("bench", Json::Str("wire-throughput".into())),
+        ("dims", Json::Num(dims as f64)),
+        ("choices", Json::Num(choices as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("evals_timed", Json::Num((batch * rounds) as f64)),
+        ("json_evals_per_sec", Json::Num(json_eps)),
+        ("binary_evals_per_sec", Json::Num(bin_eps)),
+        ("speedup", Json::Num(speedup)),
+        ("note", Json::Str("regenerate with: cargo bench -- wire-throughput".into())),
+    ]);
+    std::fs::write("BENCH_wire_throughput.json", record.to_string_pretty() + "\n")?;
+    println!("recorded -> BENCH_wire_throughput.json");
+    Ok(())
+}
+
 /// Hardware model + cycle simulator throughput.
 fn bench_hwmodel() -> anyhow::Result<()> {
     section("hardware model + simulator");
@@ -589,6 +705,9 @@ fn main() -> anyhow::Result<()> {
     }
     if should_run(&args, "remote-search") {
         bench_remote_search()?;
+    }
+    if should_run(&args, "wire-throughput") {
+        bench_wire_throughput()?;
     }
     if should_run(&args, "hwmodel") {
         bench_hwmodel()?;

@@ -249,6 +249,30 @@ impl EvalRecord {
         })
     }
 
+    /// Binary (v4-frame) encoding: absolute varint config + the five metric
+    /// f64s as raw little-endian bits. Raw bits carry inf/-inf/nan natively
+    /// — no `enc_f64` string sentinels — and round-trip bit-identically.
+    /// Configs in replies are absolute (not delta-coded like requests)
+    /// because replies interleave across sessions and must stay stateless.
+    pub fn encode_wire(&self, out: &mut Vec<u8>) {
+        crate::coordinator::wire::put_config_abs(out, &self.config);
+        for v in [self.accuracy, self.size_mb, self.latency_ms, self.speedup, self.value] {
+            crate::coordinator::wire::put_f64(out, v);
+        }
+    }
+
+    pub fn decode_wire(buf: &[u8], pos: &mut usize) -> anyhow::Result<EvalRecord> {
+        use crate::coordinator::wire::{get_config_abs, get_f64};
+        Ok(EvalRecord {
+            config: get_config_abs(buf, pos)?,
+            accuracy: get_f64(buf, pos)?,
+            size_mb: get_f64(buf, pos)?,
+            latency_ms: get_f64(buf, pos)?,
+            speedup: get_f64(buf, pos)?,
+            value: get_f64(buf, pos)?,
+        })
+    }
+
     /// A record for an evaluation that produced only an objective value (a
     /// plain worker without hardware metrics, or a failed remote eval): the
     /// value doubles as accuracy, the hardware columns are zeroed.

@@ -56,6 +56,7 @@ pub mod service;
 pub mod leader;
 pub mod report;
 pub mod supervisor;
+pub mod wire;
 
 pub use evaluator::{build_space, DimKind, DnnBackend, DnnFactory, DnnObjective, EvalRecord,
                     ObjectiveCfg, SpaceBuild};

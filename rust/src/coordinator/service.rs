@@ -38,6 +38,20 @@
 //!                      whole worker process (demos/tests; a tenant leaving
 //!                      a shared farm sends `bye`, never this)
 //!
+//! Binary eval framing (the "v4" frames; negotiated, never assumed): the
+//! hello may offer `"binary": true` exactly like the heartbeat capability.
+//! A worker that echoes it switches the PER-EVAL frames on that connection
+//! — eval requests and happy-path replies — to length-prefixed binary
+//! frames (`coordinator::wire`): magic 0xB1, type byte, varint payload
+//! length, then varint-packed choice indices (requests delta-coded against
+//! the previous request per session) and raw-bit f64 metrics. Handshakes,
+//! liveness, teardown, and ALL error replies stay JSON-lines; a reader
+//! demuxes the two framings by peeking one byte (0xB1 can never open a
+//! JSON line). Old workers ignore the offer, old leaders never offer —
+//! mixed farms interoperate per-connection, and the values carried are
+//! bit-identical either way. Binary frames are capped at the 1 MiB control
+//! cap: varint configs stay small even at 10k dims, which is the point.
+//!
 //! Skew behavior: a worker that receives an unknown message type or a
 //! mismatched protocol version (e.g. a PR 3-era v2 client whose hello
 //! carries the spec under `"session"`) replies with a structured
@@ -73,7 +87,7 @@
 //! `round-latency` bench measures the pool against.
 
 use std::collections::{HashMap, VecDeque};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -84,6 +98,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::evaluator::{DimKind, EvalRecord, ObjectiveCfg, SpaceBuild};
 use crate::coordinator::faults::{FaultDecision, FaultInjector};
+use crate::coordinator::wire;
 use crate::coordinator::supervisor::PoolStats;
 use crate::hw::HwConfig;
 use crate::search::space::{Config, Space};
@@ -299,6 +314,87 @@ fn write_line(stream: &mut TcpStream, j: &Json) -> Result<()> {
     Ok(())
 }
 
+/// [`write_line`] through a reusable per-connection buffer — the eval hot
+/// path (JSON fallback) allocates nothing per frame. Control frames keep
+/// plain [`write_line`]; they are rare enough that a scratch would only
+/// spread connection state around.
+fn write_line_buf(stream: &mut TcpStream, j: &Json, buf: &mut String) -> Result<()> {
+    j.write_compact(buf);
+    buf.push('\n');
+    stream.write_all(buf.as_bytes())?;
+    Ok(())
+}
+
+/// Per-connection encode scratch, reused across evals: one `String` for
+/// JSON-fallback lines, one `Vec<u8>` for binary frames.
+#[derive(Default)]
+struct EncodeScratch {
+    json: String,
+    bin: Vec<u8>,
+}
+
+/// One inbound message off a demuxing reader: a JSON-lines frame or a raw
+/// binary frame's (type, payload).
+enum WireMsg {
+    Json(Json),
+    Frame { frame_type: u8, payload: Vec<u8> },
+}
+
+/// Read one message, demuxing the two framings by peeking the FIRST byte:
+/// binary frames open with [`wire::WIRE_MAGIC`] (0xB1), JSON lines with
+/// `{` — unambiguous without consuming anything. JSON lines read under
+/// `json_cap` (space-scaled frames are legitimate on some paths); binary
+/// frames always enforce the 1 MiB control cap — varint configs stay small
+/// even at 10k dims, so anything bigger is garbage on the port.
+fn read_wire_msg<R: BufRead>(reader: &mut R, json_cap: usize) -> Result<Option<WireMsg>> {
+    loop {
+        let first = {
+            let buf = match reader.fill_buf() {
+                Ok(b) => b,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            };
+            if buf.is_empty() {
+                return Ok(None); // clean EOF at a frame boundary
+            }
+            buf[0]
+        };
+        if first != wire::WIRE_MAGIC {
+            return Ok(read_json_line_capped(reader, json_cap)?.map(WireMsg::Json));
+        }
+        break;
+    }
+    let mut hdr = [0u8; 2]; // magic + type
+    reader.read_exact(&mut hdr).context("binary frame header")?;
+    let len = read_varint_stream(reader).context("binary frame length")? as usize;
+    anyhow::ensure!(
+        len <= MAX_LINE_BYTES,
+        "binary frame exceeds {MAX_LINE_BYTES} bytes — dropping connection"
+    );
+    let mut payload = vec![0u8; len];
+    reader
+        .read_exact(&mut payload)
+        .context("mid-frame disconnect in a binary frame")?;
+    Ok(Some(WireMsg::Frame { frame_type: hdr[1], payload }))
+}
+
+/// LEB128 varint straight off a stream (the frame-length field — everything
+/// after it is length-delimited and decoded from the payload slice).
+fn read_varint_stream<R: Read>(reader: &mut R) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let mut b = [0u8; 1];
+        reader.read_exact(&mut b)?;
+        anyhow::ensure!(shift < 64, "varint overflows u64");
+        v |= u64::from(b[0] & 0x7f) << shift;
+        if b[0] & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
 /// Read one JSON-lines message. `Ok(None)` is a CLEAN end-of-stream — the
 /// peer closed at a message boundary (finished / shut down). A connection
 /// that drops mid-message, a line over [`MAX_LINE_BYTES`], or unparseable
@@ -462,11 +558,53 @@ fn serve_conn(
 ) -> Result<bool> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+    let mut scratch = EncodeScratch::default();
+    // Receiver half of the binary request delta state (per session; the
+    // sessionless flow keys ""). Dies with the connection, like the
+    // leader's sender half.
+    let mut prev_rx = wire::DeltaState::new();
     loop {
         // Worker side: any frame may be a hello carrying a big serialized
         // space, so read under the handshake cap.
-        let Some(msg) = read_json_line_capped(&mut reader, MAX_HELLO_LINE_BYTES)? else {
-            return Ok(false);
+        let msg = match read_wire_msg(&mut reader, MAX_HELLO_LINE_BYTES)? {
+            None => return Ok(false),
+            Some(WireMsg::Frame { frame_type, payload }) => {
+                // Binary eval request: decoded here, replied to in binary
+                // on the happy path; every error path stays JSON.
+                anyhow::ensure!(
+                    frame_type == wire::FRAME_EVAL_REQUEST,
+                    "unexpected binary frame type {frame_type:#04x} on a worker"
+                );
+                let req = wire::decode_eval_request(&payload, &mut prev_rx)?;
+                if !backend.space().validate(&req.config) {
+                    let detail = format!(
+                        "invalid config for space ({} dims)",
+                        backend.space().num_dims()
+                    );
+                    eprintln!("[worker] rejecting evaluation {}: {detail}", req.id);
+                    let mut fields = vec![
+                        ("id", Json::Num(req.id as f64)),
+                        ("error", Json::Str(detail)),
+                    ];
+                    if !req.session.is_empty() {
+                        fields.push(("session", Json::Str(req.session)));
+                    }
+                    write_line_buf(&mut writer, &obj(fields), &mut scratch.json)?;
+                    continue;
+                }
+                let record = backend.eval_record(&req.config);
+                *served += 1;
+                wire::encode_eval_reply(
+                    &mut scratch.bin,
+                    &req.session,
+                    req.id,
+                    record.value,
+                    Some(&record),
+                );
+                writer.write_all(&scratch.bin)?;
+                continue;
+            }
+            Some(WireMsg::Json(msg)) => msg,
         };
         if msg.get("shutdown").and_then(|j| j.as_bool()).unwrap_or(false) {
             return Ok(true);
@@ -497,17 +635,20 @@ fn serve_conn(
                 .and_then(|spec| backend.sync(&spec));
             match outcome {
                 Ok(()) => {
-                    write_line(
-                        &mut writer,
-                        &obj(vec![(
-                            "hello_ack",
-                            obj(vec![
-                                ("proto", Json::Num(PROTOCOL_VERSION as f64)),
-                                ("session", Json::Str(sid)),
-                                ("dims", Json::Num(backend.space().num_dims() as f64)),
-                            ]),
-                        )]),
-                    )?;
+                    let mut ack = vec![
+                        ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+                        ("session", Json::Str(sid)),
+                        ("dims", Json::Num(backend.space().num_dims() as f64)),
+                    ];
+                    // Binary capability: the single-tenant loop always
+                    // accepts the offer (no opt-out knob here — JSON-only
+                    // farms use `serve_sessions` with `ServeOpts::binary`
+                    // off). Old leaders never offer, and the ack field is
+                    // simply absent for them.
+                    if hello.get("binary").and_then(|v| v.as_bool()).unwrap_or(false) {
+                        ack.push(("binary", Json::Bool(true)));
+                    }
+                    write_line(&mut writer, &obj(vec![("hello_ack", obj(ack))]))?;
                 }
                 Err(e) => {
                     eprintln!("[worker] rejecting session: {e:#}");
@@ -561,7 +702,7 @@ fn serve_conn(
                 if let Some(s) = session {
                     fields.push(("session", s));
                 }
-                write_line(&mut writer, &obj(fields))?;
+                write_line_buf(&mut writer, &obj(fields), &mut scratch.json)?;
                 continue;
             }
         };
@@ -575,7 +716,7 @@ fn serve_conn(
         if let Some(s) = session {
             fields.push(("session", s));
         }
-        write_line(&mut writer, &obj(fields))?;
+        write_line_buf(&mut writer, &obj(fields), &mut scratch.json)?;
     }
 }
 
@@ -602,6 +743,11 @@ pub struct ServeOpts {
     /// period. CI chaos soaks shorten this so a drain never dominates the
     /// test's time budget.
     pub drain_grace: Duration,
+    /// Accept the binary-wire capability offer (the default). Off, the
+    /// worker never echoes `"binary"` and every connection stays pure
+    /// JSON-lines — how the mixed-farm tests pin a v3-era worker, and an
+    /// operator's escape hatch for wire-level diagnosis with tcpdump.
+    pub binary: bool,
 }
 
 impl Default for ServeOpts {
@@ -610,6 +756,7 @@ impl Default for ServeOpts {
             idle_timeout: Duration::from_secs(900),
             tick: Duration::from_millis(50),
             drain_grace: Duration::from_secs(5),
+            binary: true,
         }
     }
 }
@@ -728,8 +875,25 @@ impl<'f> SessionTable<'f> {
 
 enum MuxEvent {
     Conn(TcpStream),
-    Msg { conn: usize, msg: Json },
+    Msg { conn: usize, msg: MuxMsg },
     Gone { conn: usize, clean: bool, error: String },
+}
+
+/// One inbound frame of the multiplexed runtime. Binary eval requests are
+/// decoded on the reader thread (where the per-connection delta state
+/// lives); everything else arrives as parsed JSON.
+enum MuxMsg {
+    Json(Json),
+    /// A decoded binary (v4) eval request — its happy-path reply goes back
+    /// in binary; every error reply stays JSON.
+    Eval { session: String, id: usize, config: Config },
+}
+
+/// One live connection of the multiplexed runtime: the write half plus its
+/// reusable encode scratch.
+struct ConnState {
+    stream: TcpStream,
+    scratch: EncodeScratch,
 }
 
 /// Multi-tenant worker: bind `addr` and serve sessions until an explicit
@@ -830,7 +994,7 @@ pub fn serve_sessions_driven(
     }
 
     let mut table = SessionTable::new();
-    let mut conns: HashMap<usize, TcpStream> = HashMap::new();
+    let mut conns: HashMap<usize, ConnState> = HashMap::new();
     let mut next_conn = 0usize;
     let mut served = 0usize;
     let mut draining: Option<Instant> = None;
@@ -855,9 +1019,9 @@ pub fn serve_sessions_driven(
                 // torn partial line reads as an unclean disconnect, never a
                 // clean EOF) while the listener keeps accepting — the
                 // leader's bounded reconnect finds the process alive.
-                for stream in conns.values_mut() {
-                    let _ = stream.write_all(b"{\"torn");
-                    let _ = stream.shutdown(Shutdown::Both);
+                for c in conns.values_mut() {
+                    let _ = c.stream.write_all(b"{\"torn");
+                    let _ = c.stream.shutdown(Shutdown::Both);
                 }
                 conns.clear();
             }
@@ -866,9 +1030,9 @@ pub fn serve_sessions_driven(
                     eprintln!(
                         "[worker] draining ({served} evals served): notifying leaders"
                     );
-                    for stream in conns.values_mut() {
+                    for c in conns.values_mut() {
                         let _ =
-                            write_line(stream, &obj(vec![("drain", Json::Bool(true))]));
+                            write_line(&mut c.stream, &obj(vec![("drain", Json::Bool(true))]));
                     }
                     draining = Some(Instant::now() + opts.drain_grace);
                 }
@@ -879,8 +1043,8 @@ pub fn serve_sessions_driven(
                 // unread inbound frames cannot RST the socket, then exit.
                 eprintln!("[worker] preempted after {served} evals");
                 stop.store(true, Ordering::Relaxed);
-                for stream in conns.values_mut() {
-                    let _ = stream.shutdown(Shutdown::Write);
+                for c in conns.values_mut() {
+                    let _ = c.stream.shutdown(Shutdown::Write);
                 }
                 let linger = Instant::now() + Duration::from_millis(500);
                 while !conns.is_empty() && Instant::now() < linger {
@@ -915,7 +1079,10 @@ pub fn serve_sessions_driven(
                         Ok(writer) => {
                             let conn = next_conn;
                             next_conn += 1;
-                            conns.insert(conn, writer);
+                            conns.insert(
+                                conn,
+                                ConnState { stream: writer, scratch: EncodeScratch::default() },
+                            );
                             spawn_mux_reader(tx.clone(), conn, BufReader::new(stream));
                         }
                         Err(e) => eprintln!("[worker] connection rejected: {e}"),
@@ -923,9 +1090,11 @@ pub fn serve_sessions_driven(
                 }
             }
             Ok(MuxEvent::Msg { conn, msg }) => {
-                if msg.get("shutdown").and_then(|j| j.as_bool()).unwrap_or(false) {
-                    stop.store(true, Ordering::Relaxed);
-                    return Ok(served);
+                if let MuxMsg::Json(j) = &msg {
+                    if j.get("shutdown").and_then(|j| j.as_bool()).unwrap_or(false) {
+                        stop.store(true, Ordering::Relaxed);
+                        return Ok(served);
+                    }
                 }
                 if stalled {
                     // A hung worker: the frame was read off the socket but
@@ -935,41 +1104,48 @@ pub fn serve_sessions_driven(
                     continue;
                 }
                 if draining.is_some() {
-                    // Draining: evals are DROPPED unanswered (the leader
-                    // requeued them on the drain notice; a late reply
-                    // would double-serve the slot). `bye` still acks —
-                    // that IS the drain completing — and a fresh hello is
-                    // politely refused.
-                    if let Some(writer) = conns.get_mut(&conn) {
-                        let reply_failed = if msg.get("bye").is_some() {
-                            serve_mux_msg(
+                    // Draining: evals — JSON and binary alike — are
+                    // DROPPED unanswered (the leader requeued them on the
+                    // drain notice; a late reply would double-serve the
+                    // slot). `bye` still acks — that IS the drain
+                    // completing — and a fresh hello is politely refused.
+                    if let Some(state) = conns.get_mut(&conn) {
+                        let reply_failed = match &msg {
+                            MuxMsg::Json(j) if j.get("bye").is_some() => serve_mux_msg(
                                 factory,
                                 &mut table,
-                                writer,
+                                state,
                                 &msg,
                                 &mut served,
                                 corrupt,
+                                opts.binary,
                             )
-                            .is_err()
-                        } else if msg.get("hello").is_some() {
-                            write_line(
-                                writer,
+                            .is_err(),
+                            MuxMsg::Json(j) if j.get("hello").is_some() => write_line(
+                                &mut state.stream,
                                 &error_reply(
                                     "session",
                                     "worker is draining".to_string(),
                                 ),
                             )
-                            .is_err()
-                        } else {
-                            false
+                            .is_err(),
+                            _ => false,
                         };
                         if reply_failed {
                             conns.remove(&conn);
                         }
                     }
-                } else if let Some(writer) = conns.get_mut(&conn) {
-                    if serve_mux_msg(factory, &mut table, writer, &msg, &mut served, corrupt)
-                        .is_err()
+                } else if let Some(state) = conns.get_mut(&conn) {
+                    if serve_mux_msg(
+                        factory,
+                        &mut table,
+                        state,
+                        &msg,
+                        &mut served,
+                        corrupt,
+                        opts.binary,
+                    )
+                    .is_err()
                     {
                         // Reply write failed: the peer is gone; its
                         // sessions stay (it may redial).
@@ -1003,11 +1179,39 @@ pub fn serve_sessions_driven(
 fn serve_mux_msg<'f>(
     factory: &'f dyn BackendFactory,
     table: &mut SessionTable<'f>,
-    writer: &mut TcpStream,
-    msg: &Json,
+    state: &mut ConnState,
+    msg: &MuxMsg,
     served: &mut usize,
     corrupt: bool,
+    binary_ok: bool,
 ) -> Result<()> {
+    let msg = match msg {
+        // A binary eval request was already decoded on the reader thread;
+        // serve it straight — its happy-path reply goes back binary.
+        MuxMsg::Eval { session, id, config } => {
+            if session.is_empty() {
+                // Same self-healing reply a session-less JSON eval gets.
+                return write_line_buf(
+                    &mut state.stream,
+                    &error_reply("session", format!("evaluation {id} names no session")),
+                    &mut state.scratch.json,
+                );
+            }
+            return serve_mux_eval(
+                table,
+                &mut state.stream,
+                &mut state.scratch,
+                session,
+                *id,
+                Some(config),
+                served,
+                corrupt,
+                true,
+            );
+        }
+        MuxMsg::Json(j) => j,
+    };
+    let writer = &mut state.stream;
     if let Some(hello) = msg.get("hello") {
         let proto = hello.get("proto").and_then(|v| v.as_i64());
         if proto != Some(PROTOCOL_VERSION as i64) {
@@ -1050,6 +1254,15 @@ fn serve_mux_msg<'f>(
                 {
                     ack.push(("heartbeat", Json::Bool(true)));
                 }
+                // Same negotiation for the binary wire: echoed only when
+                // this runtime accepts it ([`ServeOpts::binary`]) AND the
+                // leader offered — either side staying silent keeps the
+                // connection pure JSON-lines.
+                if binary_ok
+                    && hello.get("binary").and_then(|v| v.as_bool()).unwrap_or(false)
+                {
+                    ack.push(("binary", Json::Bool(true)));
+                }
                 write_line(writer, &obj(vec![("hello_ack", obj(ack))]))
             }
             Err(e) => {
@@ -1074,55 +1287,20 @@ fn serve_mux_msg<'f>(
                 &error_reply("session", format!("evaluation {id} names no session")),
             );
         };
-        let Some(entry) = table.entries.get_mut(sid) else {
-            // Unknown (never opened, closed, or idle-swept) session: the
-            // same self-healing recycle path as above.
-            return write_line(
-                writer,
-                &error_reply("session", format!("unknown session '{sid}'")),
-            );
-        };
         let parsed: Option<Config> = msg
             .get("config")
             .and_then(|c| c.as_arr())
             .and_then(|arr| arr.iter().map(|v| v.as_usize()).collect());
-        let config = match parsed {
-            Some(c) if entry.backend.space().validate(&c) => c,
-            _ => {
-                let detail = format!(
-                    "invalid config for space ({} dims)",
-                    entry.backend.space().num_dims()
-                );
-                eprintln!("[worker] rejecting evaluation {id} ('{sid}'): {detail}");
-                return write_line(
-                    writer,
-                    &obj(vec![
-                        ("session", Json::Str(sid.to_string())),
-                        ("id", Json::Num(id as f64)),
-                        ("error", Json::Str(detail)),
-                    ]),
-                );
-            }
-        };
-        let mut record = entry.backend.eval_record(&config);
-        if corrupt {
-            // Scripted silent fault: a deterministic, always-beyond-tolerance
-            // perturbation (pure function of the true value, so a seeded
-            // chaos soak replays it bit-for-bit). The reply stays perfectly
-            // well-formed — only a cross-worker audit can tell.
-            record.value += 1.0e3 + record.value.abs();
-        }
-        entry.last_used = Instant::now();
-        entry.evals += 1;
-        *served += 1;
-        write_line(
+        serve_mux_eval(
+            table,
             writer,
-            &obj(vec![
-                ("session", Json::Str(sid.to_string())),
-                ("id", Json::Num(id as f64)),
-                ("value", crate::util::json::enc_f64(record.value)),
-                ("record", record.to_json()),
-            ]),
+            &mut state.scratch,
+            sid,
+            id,
+            parsed.as_ref(),
+            served,
+            corrupt,
+            false,
         )
     } else if msg.get("ping").is_some() {
         // Heartbeat probe: answering from the single serve thread is the
@@ -1140,32 +1318,144 @@ fn serve_mux_msg<'f>(
     }
 }
 
+/// Serve one eval in the multiplexed runtime — the shared tail of the JSON
+/// and binary request paths. `config` is `None` when the JSON frame's
+/// config failed to parse (same reply as failing validation: non-numeric
+/// elements must NOT coerce to choice 0, always a valid index — the search
+/// would silently fold a wrong config's value into its surrogate).
+/// `reply_binary` mirrors the REQUEST framing: a binary request earns a
+/// binary happy-path reply; every error reply stays JSON.
+#[allow(clippy::too_many_arguments)]
+fn serve_mux_eval<'f>(
+    table: &mut SessionTable<'f>,
+    stream: &mut TcpStream,
+    scratch: &mut EncodeScratch,
+    sid: &str,
+    id: usize,
+    config: Option<&Config>,
+    served: &mut usize,
+    corrupt: bool,
+    reply_binary: bool,
+) -> Result<()> {
+    let Some(entry) = table.entries.get_mut(sid) else {
+        // Unknown (never opened, closed, or idle-swept) session: the
+        // structured id-free reply makes the leader's reader recycle the
+        // connection and re-handshake its sessions (self-healing).
+        return write_line_buf(
+            stream,
+            &error_reply("session", format!("unknown session '{sid}'")),
+            &mut scratch.json,
+        );
+    };
+    let config = match config {
+        Some(c) if entry.backend.space().validate(c) => c,
+        _ => {
+            let detail = format!(
+                "invalid config for space ({} dims)",
+                entry.backend.space().num_dims()
+            );
+            eprintln!("[worker] rejecting evaluation {id} ('{sid}'): {detail}");
+            return write_line_buf(
+                stream,
+                &obj(vec![
+                    ("session", Json::Str(sid.to_string())),
+                    ("id", Json::Num(id as f64)),
+                    ("error", Json::Str(detail)),
+                ]),
+                &mut scratch.json,
+            );
+        }
+    };
+    let mut record = entry.backend.eval_record(config);
+    if corrupt {
+        // Scripted silent fault: a deterministic, always-beyond-tolerance
+        // perturbation (pure function of the true value, so a seeded
+        // chaos soak replays it bit-for-bit). The reply stays perfectly
+        // well-formed — only a cross-worker audit can tell.
+        record.value += 1.0e3 + record.value.abs();
+    }
+    entry.last_used = Instant::now();
+    entry.evals += 1;
+    *served += 1;
+    if reply_binary {
+        wire::encode_eval_reply(&mut scratch.bin, sid, id, record.value, Some(&record));
+        stream.write_all(&scratch.bin)?;
+        Ok(())
+    } else {
+        write_line_buf(
+            stream,
+            &obj(vec![
+                ("session", Json::Str(sid.to_string())),
+                ("id", Json::Num(id as f64)),
+                ("value", crate::util::json::enc_f64(record.value)),
+                ("record", record.to_json()),
+            ]),
+            &mut scratch.json,
+        )
+    }
+}
+
 /// Reader thread of the multiplexed runtime: raw frames in, events out.
-/// Reads under the handshake cap — any connection may carry a (large)
-/// hello at any time.
+/// JSON reads under the handshake cap — any connection may carry a (large)
+/// hello at any time. Binary eval requests are decoded HERE, where the
+/// per-connection delta state lives (TCP FIFO order is exactly the order
+/// the leader's encoder advanced its copy); a frame that fails to decode
+/// drops the connection like a torn line would.
 fn spawn_mux_reader(tx: Sender<MuxEvent>, conn: usize, mut reader: BufReader<TcpStream>) {
-    std::thread::spawn(move || loop {
-        match read_json_line_capped(&mut reader, MAX_HELLO_LINE_BYTES) {
-            Ok(Some(msg)) => {
-                if tx.send(MuxEvent::Msg { conn, msg }).is_err() {
-                    return; // runtime exited
+    std::thread::spawn(move || {
+        let mut prev_rx = wire::DeltaState::new();
+        loop {
+            let event = match read_wire_msg(&mut reader, MAX_HELLO_LINE_BYTES) {
+                Ok(Some(WireMsg::Json(msg))) => MuxEvent::Msg { conn, msg: MuxMsg::Json(msg) },
+                Ok(Some(WireMsg::Frame { frame_type, payload })) => {
+                    if frame_type != wire::FRAME_EVAL_REQUEST {
+                        let _ = tx.send(MuxEvent::Gone {
+                            conn,
+                            clean: false,
+                            error: format!(
+                                "unexpected binary frame type {frame_type:#04x}"
+                            ),
+                        });
+                        return;
+                    }
+                    match wire::decode_eval_request(&payload, &mut prev_rx) {
+                        Ok(req) => MuxEvent::Msg {
+                            conn,
+                            msg: MuxMsg::Eval {
+                                session: req.session,
+                                id: req.id,
+                                config: req.config,
+                            },
+                        },
+                        Err(e) => {
+                            let _ = tx.send(MuxEvent::Gone {
+                                conn,
+                                clean: false,
+                                error: format!("bad binary frame: {e:#}"),
+                            });
+                            return;
+                        }
+                    }
                 }
-            }
-            Ok(None) => {
-                let _ = tx.send(MuxEvent::Gone {
-                    conn,
-                    clean: true,
-                    error: "connection closed".into(),
-                });
-                return;
-            }
-            Err(e) => {
-                let _ = tx.send(MuxEvent::Gone {
-                    conn,
-                    clean: false,
-                    error: format!("{e:#}"),
-                });
-                return;
+                Ok(None) => {
+                    let _ = tx.send(MuxEvent::Gone {
+                        conn,
+                        clean: true,
+                        error: "connection closed".into(),
+                    });
+                    return;
+                }
+                Err(e) => {
+                    let _ = tx.send(MuxEvent::Gone {
+                        conn,
+                        clean: false,
+                        error: format!("{e:#}"),
+                    });
+                    return;
+                }
+            };
+            if tx.send(event).is_err() {
+                return; // runtime exited
             }
         }
     });
@@ -1372,22 +1662,36 @@ fn hello_frame(sid: &str, spec: &SessionSpec) -> Json {
             // ack; old workers ignore unknown hello fields, so the frame is
             // a pure capability negotiation, not a version bump.
             ("heartbeat", Json::Bool(true)),
+            // Binary-wire offer, same contract: workers that echo it get
+            // their per-eval frames in v4 binary (`coordinator::wire`);
+            // silent workers keep JSON-lines on this connection.
+            ("binary", Json::Bool(true)),
         ]),
     )])
+}
+
+/// Capabilities a worker echoed in its hello ack — all negotiated
+/// per-connection, all defaulting to absent/false for old workers.
+#[derive(Debug, Clone, Copy, Default)]
+struct Caps {
+    /// Answers `{"ping"}` liveness probes.
+    heartbeat: bool,
+    /// Speaks v4 binary eval frames on this connection.
+    binary: bool,
 }
 
 /// Leader side of the Hello/SyncSpace handshake: open session `sid` with
 /// its spec, block (bounded) for the ack. A structured rejection from the
 /// worker — version skew, digest mismatch, space the backend cannot
 /// rebuild — surfaces as an error naming the kind, so a session never
-/// silently runs over a skewed space. `Ok(true)` means the worker also
-/// echoed the heartbeat capability (it answers `{"ping"}` frames).
+/// silently runs over a skewed space. The returned [`Caps`] carries which
+/// capability offers the worker echoed (heartbeat pings, binary wire).
 fn client_handshake(
     writer: &mut TcpStream,
     reader: &mut BufReader<TcpStream>,
     sid: &str,
     spec: &SessionSpec,
-) -> Result<bool> {
+) -> Result<Caps> {
     write_line(writer, &hello_frame(sid, spec))?;
     reader.get_ref().set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
     let reply = read_json_line(reader);
@@ -1407,10 +1711,10 @@ fn client_handshake(
             acked == Some(sid),
             "worker acked session {acked:?}, leader opened '{sid}'"
         );
-        return Ok(ack
-            .get("heartbeat")
-            .and_then(|v| v.as_bool())
-            .unwrap_or(false));
+        return Ok(Caps {
+            heartbeat: ack.get("heartbeat").and_then(|v| v.as_bool()).unwrap_or(false),
+            binary: ack.get("binary").and_then(|v| v.as_bool()).unwrap_or(false),
+        });
     }
     let kind = msg.get("kind").and_then(|v| v.as_str()).unwrap_or("?");
     let detail = msg.get("error").and_then(|v| v.as_str()).unwrap_or("unparseable reply");
@@ -1463,13 +1767,28 @@ pub struct WorkerHandle {
     reader: BufReader<TcpStream>,
     /// Evaluations dispatched to this worker so far.
     pub dispatched: usize,
+    /// The last handshake echoed the binary-wire capability: dispatches go
+    /// as v4 binary frames, collects demux both framings.
+    binary: bool,
+    /// Sender half of the binary request delta state (per session id; ""
+    /// keys the sessionless flow).
+    prev_tx: wire::DeltaState,
+    /// Reusable encode buffers (JSON line + binary frame).
+    scratch: EncodeScratch,
 }
 
 impl WorkerHandle {
     pub fn connect(addr: &str) -> Result<WorkerHandle> {
         let stream = connect_with_retry(addr)?;
         let writer = stream.try_clone()?;
-        Ok(WorkerHandle { writer, reader: BufReader::new(stream), dispatched: 0 })
+        Ok(WorkerHandle {
+            writer,
+            reader: BufReader::new(stream),
+            dispatched: 0,
+            binary: false,
+            prev_tx: wire::DeltaState::new(),
+            scratch: EncodeScratch::default(),
+        })
     }
 
     /// Run the session handshake on this connection (protocol-level tests
@@ -1481,7 +1800,13 @@ impl WorkerHandle {
     /// [`hello`](Self::hello) under an explicit session id — drives
     /// multi-tenant workers from protocol-level tests.
     pub fn hello_as(&mut self, sid: &str, spec: &SessionSpec) -> Result<()> {
-        client_handshake(&mut self.writer, &mut self.reader, sid, spec).map(|_| ())
+        let caps = client_handshake(&mut self.writer, &mut self.reader, sid, spec)?;
+        self.binary = caps.binary;
+        // The delta state deliberately survives re-hellos: it is per
+        // CONNECTION (keyed by session), and both ends' copies only die
+        // with the socket. A re-synced space that changes the dim count is
+        // absorbed by the codec's all-zeros length-mismatch rule.
+        Ok(())
     }
 
     /// Send one raw line (protocol skew tests).
@@ -1496,41 +1821,63 @@ impl WorkerHandle {
     }
 
     pub fn dispatch(&mut self, id: usize, config: &Config) -> Result<()> {
-        self.dispatched += 1;
-        write_line(
-            &mut self.writer,
-            &obj(vec![
-                ("id", Json::Num(id as f64)),
-                (
-                    "config",
-                    Json::Arr(config.iter().map(|&c| Json::Num(c as f64)).collect()),
-                ),
-            ]),
-        )
+        self.dispatch_keyed("", false, id, config)
     }
 
     /// Dispatch under an explicit session id (multi-tenant workers).
     pub fn dispatch_in(&mut self, sid: &str, id: usize, config: &Config) -> Result<()> {
+        self.dispatch_keyed(sid, true, id, config)
+    }
+
+    /// Shared dispatch body: binary when negotiated, JSON-lines otherwise.
+    /// `key` is the session id ("" = sessionless); `named` controls whether
+    /// the JSON fallback carries a session field (binary frames always
+    /// carry the key inline — empty means sessionless).
+    fn dispatch_keyed(
+        &mut self,
+        key: &str,
+        named: bool,
+        id: usize,
+        config: &Config,
+    ) -> Result<()> {
         self.dispatched += 1;
-        write_line(
-            &mut self.writer,
-            &obj(vec![
-                ("session", Json::Str(sid.to_string())),
-                ("id", Json::Num(id as f64)),
-                (
-                    "config",
-                    Json::Arr(config.iter().map(|&c| Json::Num(c as f64)).collect()),
-                ),
-            ]),
-        )
+        if self.binary {
+            if !self.prev_tx.contains_key(key) {
+                self.prev_tx.insert(key.to_string(), Vec::new());
+            }
+            let prev = self.prev_tx.get_mut(key).expect("just inserted");
+            wire::encode_eval_request(&mut self.scratch.bin, key, id, config, prev);
+            self.writer.write_all(&self.scratch.bin)?;
+            return Ok(());
+        }
+        let mut fields = Vec::with_capacity(3);
+        if named {
+            fields.push(("session", Json::Str(key.to_string())));
+        }
+        fields.push(("id", Json::Num(id as f64)));
+        fields.push((
+            "config",
+            Json::Arr(config.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ));
+        write_line_buf(&mut self.writer, &obj(fields), &mut self.scratch.json)
     }
 
     pub fn collect(&mut self) -> Result<RemoteEval> {
-        // Record-return replies embed the full config — space-scaled, so
-        // they read under the same cap as the hello that synced the space.
-        let msg = read_json_line_capped(&mut self.reader, MAX_HELLO_LINE_BYTES)?
-            .ok_or_else(|| anyhow::anyhow!("worker disconnected"))?;
-        parse_eval(&msg)
+        // Record-return JSON replies embed the full config — space-scaled,
+        // so they read under the same cap as the hello that synced the
+        // space. Binary replies demux off the magic byte.
+        match read_wire_msg(&mut self.reader, MAX_HELLO_LINE_BYTES)? {
+            None => anyhow::bail!("worker disconnected"),
+            Some(WireMsg::Json(msg)) => parse_eval(&msg),
+            Some(WireMsg::Frame { frame_type, payload }) => {
+                anyhow::ensure!(
+                    frame_type == wire::FRAME_EVAL_REPLY,
+                    "unexpected binary frame type {frame_type:#04x} from a worker"
+                );
+                let reply = wire::decode_eval_reply(&payload)?;
+                Ok(RemoteEval { id: reply.id, value: reply.value, record: reply.record })
+            }
+        }
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
@@ -1749,6 +2096,16 @@ struct PoolWorker {
     /// answers `{"ping"}` frames. Legacy/sessionless workers stay `false`
     /// and are simply never pinged.
     heartbeat: bool,
+    /// The hello ack echoed the binary-wire capability: eval requests to
+    /// this connection go as v4 binary frames. Legacy workers stay `false`
+    /// and keep JSON-lines — a mixed farm negotiates per connection.
+    binary: bool,
+    /// Sender half of the per-(connection, session) binary delta state.
+    /// Mirrored by the worker's reader thread; dies with the connection
+    /// (cleared on failure, rebuilt empty on reconnect).
+    prev_tx: wire::DeltaState,
+    /// Reusable encode buffers for this connection's dispatches.
+    scratch: EncodeScratch,
     /// Last instant ANY frame arrived from this connection — results,
     /// acks, pongs, drain notices all count as proof of life.
     last_seen: Instant,
@@ -2068,9 +2425,9 @@ impl WorkerPool {
         // synchronously off the same buffered reader that is then handed to
         // the thread, so no reply bytes can be lost in a discarded buffer.
         // EVERY open session handshakes, in open order.
-        let mut heartbeat = false;
+        let mut caps = Caps::default();
         for sess in &self.sessions {
-            heartbeat = client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
+            caps = client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
         }
         let w = self.workers.len();
         // Address-less (adopted-stream) workers cannot reconnect, so their
@@ -2091,7 +2448,10 @@ impl WorkerPool {
             outstanding: HashMap::new(),
             dispatched: 0,
             jitter: Rng::new(jitter_seed),
-            heartbeat,
+            heartbeat: caps.heartbeat,
+            binary: caps.binary,
+            prev_tx: wire::DeltaState::new(),
+            scratch: EncodeScratch::default(),
             last_seen: Instant::now(),
             ping_sent: None,
             health: Health::Healthy,
@@ -2526,19 +2886,50 @@ impl WorkerPool {
     fn dispatch_to(&mut self, w: usize, slot: usize, r: &mut Round) -> bool {
         let id = self.next_id;
         self.next_id += 1;
-        let mut fields = vec![
-            ("id", Json::Num(id as f64)),
-            (
-                "config",
-                Json::Arr(r.configs[slot].iter().map(|&c| Json::Num(c as f64)).collect()),
-            ),
-        ];
-        if let Some(si) = r.session {
-            fields.push(("session", Json::Str(self.sessions[si].id.clone())));
-        }
-        let msg = obj(fields);
-        let wrote = match self.workers[w].writer.as_mut() {
-            Some(stream) => write_line(stream, &msg).is_ok(),
+        // Split borrows: the session id is read while the worker's writer,
+        // scratch, and delta state are all mutably borrowed below.
+        let (sessions, workers) = (&self.sessions, &mut self.workers);
+        let sid: &str = match r.session {
+            Some(si) => &sessions[si].id,
+            None => "",
+        };
+        let pw = &mut workers[w];
+        let wrote = match pw.writer.as_mut() {
+            Some(stream) => {
+                if pw.binary {
+                    // v4 binary frame, delta-coded against this
+                    // (connection, session)'s previous request.
+                    if !pw.prev_tx.contains_key(sid) {
+                        pw.prev_tx.insert(sid.to_string(), Vec::new());
+                    }
+                    let prev = pw.prev_tx.get_mut(sid).expect("just inserted");
+                    wire::encode_eval_request(
+                        &mut pw.scratch.bin,
+                        sid,
+                        id,
+                        &r.configs[slot],
+                        prev,
+                    );
+                    stream.write_all(&pw.scratch.bin).is_ok()
+                } else {
+                    let mut fields = vec![
+                        ("id", Json::Num(id as f64)),
+                        (
+                            "config",
+                            Json::Arr(
+                                r.configs[slot]
+                                    .iter()
+                                    .map(|&c| Json::Num(c as f64))
+                                    .collect(),
+                            ),
+                        ),
+                    ];
+                    if r.session.is_some() {
+                        fields.push(("session", Json::Str(sid.to_string())));
+                    }
+                    write_line_buf(stream, &obj(fields), &mut pw.scratch.json).is_ok()
+                }
+            }
             None => false,
         };
         if wrote {
@@ -2565,6 +2956,9 @@ impl WorkerPool {
             pw.alive = false;
             pw.generation += 1;
             pw.writer = None;
+            // The binary delta state is per connection — both ends' copies
+            // die with the socket, and a reconnect starts from zeros.
+            pw.prev_tx.clear();
             if clean {
                 pw.retired = true;
             }
@@ -3115,21 +3509,23 @@ impl WorkerPool {
             match TcpStream::connect(&addr).map_err(anyhow::Error::from).and_then(|s| {
                 let mut writer = s;
                 let mut reader = BufReader::new(writer.try_clone()?);
-                let mut heartbeat = false;
+                let mut caps = Caps::default();
                 for sess in sessions {
-                    heartbeat =
-                        client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
+                    caps = client_handshake(&mut writer, &mut reader, &sess.id, &sess.spec)?;
                 }
-                Ok((writer, reader, heartbeat))
+                Ok((writer, reader, caps))
             }) {
-                Ok((writer, reader, heartbeat)) => {
+                Ok((writer, reader, caps)) => {
                     let pw = &mut self.workers[w];
                     pw.generation += 1;
                     pw.writer = Some(writer);
                     pw.alive = true;
                     pw.next_reconnect = None;
                     pw.evals_since_connect = 0;
-                    pw.heartbeat = heartbeat;
+                    pw.heartbeat = caps.heartbeat;
+                    pw.binary = caps.binary;
+                    // Fresh connection, fresh delta state on both ends.
+                    pw.prev_tx.clear();
                     pw.last_seen = Instant::now();
                     pw.ping_sent = None;
                     spawn_reader(self.tx.clone(), w, pw.generation, reader);
@@ -3162,13 +3558,51 @@ fn spawn_reader(
 ) {
     std::thread::spawn(move || {
         loop {
-            // Record-return replies embed the full config, so on a big
-            // synced space they are as space-scaled as the hello was —
+            // Record-return JSON replies embed the full config, so on a
+            // big synced space they are as space-scaled as the hello was —
             // reading them under the 1 MiB control cap would re-create
             // the exact "garbage on the port" kill the hello cap fixed,
-            // one frame later.
-            match read_json_line_capped(&mut reader, MAX_HELLO_LINE_BYTES) {
-                Ok(Some(msg)) => {
+            // one frame later. Binary replies demux off the magic byte
+            // (and stay under the control cap — varints keep them small).
+            match read_wire_msg(&mut reader, MAX_HELLO_LINE_BYTES) {
+                Ok(Some(WireMsg::Frame { frame_type, payload })) => {
+                    if frame_type != wire::FRAME_EVAL_REPLY {
+                        let _ = tx.send(PoolEvent::Down {
+                            worker,
+                            generation,
+                            clean: false,
+                            error: format!(
+                                "unexpected binary frame type {frame_type:#04x}"
+                            ),
+                        });
+                        return;
+                    }
+                    match wire::decode_eval_reply(&payload) {
+                        Ok(reply) => {
+                            let eval = RemoteEval {
+                                id: reply.id,
+                                value: reply.value,
+                                record: reply.record,
+                            };
+                            if tx
+                                .send(PoolEvent::Result { worker, generation, eval })
+                                .is_err()
+                            {
+                                return; // pool dropped
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send(PoolEvent::Down {
+                                worker,
+                                generation,
+                                clean: false,
+                                error: format!("bad binary reply: {e:#}"),
+                            });
+                            return;
+                        }
+                    }
+                }
+                Ok(Some(WireMsg::Json(msg))) => {
                     if msg.get("bye_ack").is_some() {
                         // Session-teardown ack (close_session) — pure
                         // bookkeeping, nothing to attribute.

@@ -1,0 +1,463 @@
+//! v4 binary wire framing for the eval hot path.
+//!
+//! The v3 protocol is JSON-lines; every eval re-serializes the full config
+//! and every reply re-parses a full `EvalRecord` — text frames balloon at
+//! 10k+ dims (the 32 MiB hello cap exists only because of that). This
+//! module adds a length-prefixed binary framing for the two per-eval frame
+//! types, negotiated per connection via a `"binary": true` capability in
+//! the v3 hello (exactly like the heartbeat flag): old workers ignore the
+//! field and keep line-delimited JSON, so mixed farms interoperate
+//! per-connection and the values on the wire are bit-identical either way.
+//!
+//! Frame layout (see docs/ARCHITECTURE.md §Binary wire):
+//!
+//! ```text
+//! [0xB1][type: u8][payload_len: varint][payload]
+//! ```
+//!
+//! The magic byte 0xB1 can never open a JSON-lines frame (those start with
+//! `{` = 0x7B), so a reader demuxes the two framings by peeking ONE byte.
+//! Only eval requests (type 0x01) and eval replies (type 0x02) go binary;
+//! handshakes, errors, and liveness frames stay JSON — they are rare,
+//! space-scaled or diagnostic, and keeping them text preserves every
+//! structured-error path unchanged.
+//!
+//! Integers are LEB128 varints; config deltas are zigzag varints; f64
+//! values travel as raw little-endian bits (natively carrying inf/-inf/nan
+//! — no "inf" string sentinels needed). Dim NAMES never travel: the space
+//! synced in the session's hello is the intern table, and a binary config
+//! is just choice indices in that dim order. Request configs are
+//! delta-encoded against the PREVIOUS request on the same (connection,
+//! session) — TPE proposals are near-neighbors, so most deltas are zero —
+//! with the first request on a connection deltaed against all-zeros; TCP's
+//! FIFO order keeps both ends' `prev` state in lockstep, and a reconnect
+//! resets both to zeros. Reply configs are absolute varints (replies can
+//! overtake each other across sessions, so they stay stateless).
+
+use crate::coordinator::evaluator::EvalRecord;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// One connection's half of the request-config delta state, keyed by
+/// session id (`""` = the sessionless single-tenant flow). The sender and
+/// receiver advance their copies in the same (TCP FIFO) order, so they
+/// stay in lockstep; both sides drop the whole map on reconnect.
+pub type DeltaState = HashMap<String, Vec<usize>>;
+
+/// First byte of every binary frame — never a valid JSON-lines opener.
+pub const WIRE_MAGIC: u8 = 0xB1;
+/// Leader -> worker: evaluate one config.
+pub const FRAME_EVAL_REQUEST: u8 = 0x01;
+/// Worker -> leader: one evaluation's value + record.
+pub const FRAME_EVAL_REPLY: u8 = 0x02;
+
+// ---------------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------------
+
+/// LEB128-encode `v`.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// LEB128-decode at `*pos`, advancing it.
+pub fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos).context("varint truncated")?;
+        *pos += 1;
+        anyhow::ensure!(shift < 64, "varint overflows u64");
+        v |= u64::from(b & 0x7f) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Zigzag-map a signed delta into a small unsigned varint.
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+pub fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Raw little-endian f64 bits — non-finite values travel natively.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn get_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+    let bytes: [u8; 8] = buf
+        .get(*pos..*pos + 8)
+        .context("f64 truncated")?
+        .try_into()
+        .expect("8-byte slice");
+    *pos += 8;
+    Ok(f64::from_le_bytes(bytes))
+}
+
+/// Length-prefixed UTF-8 string (session ids; empty = sessionless).
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn get_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let len = get_varint(buf, pos)? as usize;
+    let bytes = buf.get(*pos..*pos + len).context("string truncated")?;
+    *pos += len;
+    let s = std::str::from_utf8(bytes).context("non-utf8 string")?;
+    Ok(s.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Config codecs
+// ---------------------------------------------------------------------------
+
+/// Delta-encode `config` against `prev` (all-zeros when lengths differ —
+/// the deterministic rule both ends share), then advance `prev` to
+/// `config`. Emits `ndims` followed by one zigzag varint per dim.
+pub fn put_config_delta(out: &mut Vec<u8>, config: &[usize], prev: &mut Vec<usize>) {
+    put_varint(out, config.len() as u64);
+    let use_prev = prev.len() == config.len();
+    for (d, &c) in config.iter().enumerate() {
+        let base = if use_prev { prev[d] as i64 } else { 0 };
+        put_varint(out, zigzag(c as i64 - base));
+    }
+    prev.clear();
+    prev.extend_from_slice(config);
+}
+
+/// Inverse of [`put_config_delta`], applying the same all-zeros rule and
+/// advancing `prev`.
+pub fn get_config_delta(
+    buf: &[u8],
+    pos: &mut usize,
+    prev: &mut Vec<usize>,
+) -> Result<Vec<usize>> {
+    let ndims = get_varint(buf, pos)? as usize;
+    let use_prev = prev.len() == ndims;
+    let mut config = Vec::with_capacity(ndims);
+    for d in 0..ndims {
+        let base = if use_prev { prev[d] as i64 } else { 0 };
+        let c = base + unzigzag(get_varint(buf, pos)?);
+        anyhow::ensure!(c >= 0, "config delta underflows dim {d}");
+        config.push(c as usize);
+    }
+    prev.clear();
+    prev.extend_from_slice(&config);
+    Ok(config)
+}
+
+/// Absolute varint config (reply records — stateless).
+pub fn put_config_abs(out: &mut Vec<u8>, config: &[usize]) {
+    put_varint(out, config.len() as u64);
+    for &c in config {
+        put_varint(out, c as u64);
+    }
+}
+
+pub fn get_config_abs(buf: &[u8], pos: &mut usize) -> Result<Vec<usize>> {
+    let ndims = get_varint(buf, pos)? as usize;
+    let mut config = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        config.push(get_varint(buf, pos)? as usize);
+    }
+    Ok(config)
+}
+
+// ---------------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------------
+
+/// A decoded eval request: `session` is empty for the sessionless
+/// single-tenant flow.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EvalRequest {
+    pub session: String,
+    pub id: usize,
+    pub config: Vec<usize>,
+}
+
+/// A decoded eval reply. `record` is `None` for value-only replies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalReply {
+    pub session: String,
+    pub id: usize,
+    pub value: f64,
+    pub record: Option<EvalRecord>,
+}
+
+fn put_frame_header(out: &mut Vec<u8>, frame_type: u8, payload_len: usize) {
+    out.push(WIRE_MAGIC);
+    out.push(frame_type);
+    put_varint(out, payload_len as u64);
+}
+
+/// Encode one eval request as a complete frame into `out` (cleared first —
+/// callers thread a reusable per-connection scratch buffer). `prev` is the
+/// (connection, session) delta state and is advanced.
+pub fn encode_eval_request(
+    out: &mut Vec<u8>,
+    session: &str,
+    id: usize,
+    config: &[usize],
+    prev: &mut Vec<usize>,
+) {
+    out.clear();
+    let mut payload = Vec::with_capacity(config.len() + session.len() + 16);
+    put_str(&mut payload, session);
+    put_varint(&mut payload, id as u64);
+    put_config_delta(&mut payload, config, prev);
+    put_frame_header(out, FRAME_EVAL_REQUEST, payload.len());
+    out.extend_from_slice(&payload);
+}
+
+/// Decode an eval-request payload; `prev` is the receiver's half of the
+/// per-session delta state (the session id inside the payload picks the
+/// entry, so one map serves a whole multiplexed connection).
+pub fn decode_eval_request(payload: &[u8], prev: &mut DeltaState) -> Result<EvalRequest> {
+    let mut pos = 0usize;
+    let session = get_str(payload, &mut pos)?;
+    let id = get_varint(payload, &mut pos)? as usize;
+    let config =
+        get_config_delta(payload, &mut pos, prev.entry(session.clone()).or_default())?;
+    anyhow::ensure!(pos == payload.len(), "trailing bytes in eval request");
+    Ok(EvalRequest { session, id, config })
+}
+
+/// Encode one eval reply as a complete frame into `out` (cleared first).
+pub fn encode_eval_reply(
+    out: &mut Vec<u8>,
+    session: &str,
+    id: usize,
+    value: f64,
+    record: Option<&EvalRecord>,
+) {
+    out.clear();
+    let mut payload =
+        Vec::with_capacity(session.len() + 64 + record.map_or(0, |r| r.config.len() + 48));
+    put_str(&mut payload, session);
+    put_varint(&mut payload, id as u64);
+    put_f64(&mut payload, value);
+    match record {
+        Some(r) => {
+            payload.push(1);
+            r.encode_wire(&mut payload);
+        }
+        None => payload.push(0),
+    }
+    put_frame_header(out, FRAME_EVAL_REPLY, payload.len());
+    out.extend_from_slice(&payload);
+}
+
+pub fn decode_eval_reply(payload: &[u8]) -> Result<EvalReply> {
+    let mut pos = 0usize;
+    let session = get_str(payload, &mut pos)?;
+    let id = get_varint(payload, &mut pos)? as usize;
+    let value = get_f64(payload, &mut pos)?;
+    let has_record = *payload.get(pos).context("record flag truncated")?;
+    pos += 1;
+    let record = match has_record {
+        0 => None,
+        1 => Some(EvalRecord::decode_wire(payload, &mut pos)?),
+        other => anyhow::bail!("bad record flag {other}"),
+    };
+    anyhow::ensure!(pos == payload.len(), "trailing bytes in eval reply");
+    Ok(EvalReply { session, id, value, record })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(
+        session: &str,
+        id: usize,
+        config: &[usize],
+        prev_tx: &mut Vec<usize>,
+        prev_rx: &mut DeltaState,
+    ) -> Vec<u8> {
+        let mut frame = Vec::new();
+        encode_eval_request(&mut frame, session, id, config, prev_tx);
+        assert_eq!(frame[0], WIRE_MAGIC);
+        assert_eq!(frame[1], FRAME_EVAL_REQUEST);
+        let mut pos = 2usize;
+        let len = get_varint(&frame, &mut pos).unwrap() as usize;
+        assert_eq!(pos + len, frame.len());
+        let req = decode_eval_request(&frame[pos..], prev_rx).unwrap();
+        assert_eq!(req.session, session);
+        assert_eq!(req.id, id);
+        assert_eq!(req.config, config);
+        frame
+    }
+
+    #[test]
+    fn varint_and_zigzag_edges() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut out = Vec::new();
+            put_varint(&mut out, v);
+            let mut pos = 0;
+            assert_eq!(get_varint(&out, &mut pos).unwrap(), v);
+            assert_eq!(pos, out.len());
+        }
+        for v in [0i64, 1, -1, 63, -64, 64, -65, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        // Truncated varint errors instead of panicking.
+        let mut pos = 0;
+        assert!(get_varint(&[0x80, 0x80], &mut pos).is_err());
+    }
+
+    #[test]
+    fn request_roundtrip_with_delta_chain() {
+        // A chain of requests on one (connection, session): deltas compound,
+        // both ends' prev state stays in lockstep, and every frame re-encodes
+        // byte-identically from its decoded contents + the same prior state.
+        let configs: Vec<Vec<usize>> = vec![
+            vec![0, 0, 0, 0],
+            vec![1, 0, 300, 0], // multi-byte varint delta (zigzag(300))
+            vec![0, 5, 299, 2], // negative delta
+            vec![0, 5, 299, 2], // all-zero delta
+        ];
+        let mut prev_tx: Vec<usize> = Vec::new();
+        let mut prev_rx = DeltaState::new();
+        for (i, cfg) in configs.iter().enumerate() {
+            let before_state = prev_tx.clone();
+            let frame = roundtrip_request("sess-1", 1000 + i, cfg, &mut prev_tx, &mut prev_rx);
+            // Byte-identical re-encode from the decoded frame + prior state.
+            let mut again = Vec::new();
+            let mut replay_prev = before_state;
+            encode_eval_request(&mut again, "sess-1", 1000 + i, cfg, &mut replay_prev);
+            assert_eq!(frame, again, "frame {i} re-encode");
+        }
+    }
+
+    #[test]
+    fn request_interned_name_edge_cases() {
+        // Dim names never travel — only the session string does. Empty
+        // session (sessionless flow), unicode session ids, and a 0-dim
+        // config all round-trip.
+        let mut tx = Vec::new();
+        let mut rx = DeltaState::new();
+        roundtrip_request("", 0, &[], &mut tx, &mut rx);
+        let mut tx = Vec::new();
+        let mut rx = DeltaState::new();
+        roundtrip_request("sésh-αβ", usize::MAX >> 1, &[7; 3], &mut tx, &mut rx);
+    }
+
+    #[test]
+    fn prev_length_mismatch_falls_back_to_zeros_on_both_ends() {
+        // Same session re-synced onto a different-width space: both codec
+        // ends apply the identical all-zeros rule, so they stay in lockstep.
+        let mut tx: Vec<usize> = vec![9, 9]; // stale 2-dim state
+        let mut rx = DeltaState::new();
+        rx.insert("s".to_string(), vec![9, 9]);
+        let cfg = vec![4usize, 0, 2];
+        roundtrip_request("s", 1, &cfg, &mut tx, &mut rx);
+        assert_eq!(tx, cfg);
+        assert_eq!(rx["s"], cfg);
+    }
+
+    fn roundtrip_reply(reply: &EvalReply) -> Vec<u8> {
+        let mut frame = Vec::new();
+        encode_eval_reply(
+            &mut frame,
+            &reply.session,
+            reply.id,
+            reply.value,
+            reply.record.as_ref(),
+        );
+        assert_eq!(frame[0], WIRE_MAGIC);
+        assert_eq!(frame[1], FRAME_EVAL_REPLY);
+        let mut pos = 2usize;
+        let len = get_varint(&frame, &mut pos).unwrap() as usize;
+        assert_eq!(pos + len, frame.len());
+        let decoded = decode_eval_reply(&frame[pos..]).unwrap();
+        // PartialEq is not enough for nan values; compare via bits below.
+        assert_eq!(decoded.session, reply.session);
+        assert_eq!(decoded.id, reply.id);
+        assert_eq!(decoded.value.to_bits(), reply.value.to_bits());
+        // Re-encode byte-identically (replies are stateless).
+        let mut again = Vec::new();
+        encode_eval_reply(
+            &mut again,
+            &decoded.session,
+            decoded.id,
+            decoded.value,
+            decoded.record.as_ref(),
+        );
+        assert_eq!(frame, again);
+        frame
+    }
+
+    #[test]
+    fn reply_roundtrip_including_nonfinite_values() {
+        // inf / -inf / nan travel as raw bits — the JSON path needs string
+        // sentinels for these ("inf"/"-inf"/"nan"); binary must carry them
+        // natively and re-encode byte-identically.
+        for value in [1.5f64, f64::INFINITY, f64::NEG_INFINITY, f64::NAN, -0.0] {
+            roundtrip_reply(&EvalReply {
+                session: "s".into(),
+                id: 3,
+                value,
+                record: None,
+            });
+            let record = EvalRecord {
+                config: vec![0, 127, 128, 300],
+                accuracy: value,
+                size_mb: f64::NEG_INFINITY,
+                latency_ms: 0.25,
+                speedup: f64::NAN,
+                value,
+            };
+            let frame = roundtrip_reply(&EvalReply {
+                session: "sess".into(),
+                id: usize::MAX >> 2,
+                value,
+                record: Some(record.clone()),
+            });
+            // And the embedded record's fields decode to the same bits.
+            let mut pos = 2usize;
+            let len = get_varint(&frame, &mut pos).unwrap() as usize;
+            let decoded = decode_eval_reply(&frame[pos..pos + len]).unwrap();
+            let r = decoded.record.expect("record");
+            assert_eq!(r.config, record.config);
+            assert_eq!(r.accuracy.to_bits(), record.accuracy.to_bits());
+            assert_eq!(r.speedup.to_bits(), record.speedup.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncated_and_trailing_payloads_error() {
+        let mut frame = Vec::new();
+        let mut prev = Vec::new();
+        encode_eval_request(&mut frame, "s", 7, &[1, 2, 3], &mut prev);
+        let mut pos = 2usize;
+        let len = get_varint(&frame, &mut pos).unwrap() as usize;
+        let payload = &frame[pos..pos + len];
+        // Truncation anywhere inside the payload must error, never panic.
+        for cut in 0..payload.len() {
+            let mut rx = DeltaState::new();
+            assert!(decode_eval_request(&payload[..cut], &mut rx).is_err(), "cut {cut}");
+        }
+        // Trailing garbage is rejected too.
+        let mut extended = payload.to_vec();
+        extended.push(0);
+        let mut rx = DeltaState::new();
+        assert!(decode_eval_request(&extended, &mut rx).is_err());
+    }
+}

@@ -12,7 +12,11 @@
 //! worker count while the *evaluation-count* convergence stays comparable
 //! to the sequential searcher (see tests). With [`QPolicy::Auto`] the batch
 //! size itself is tuned online between 1 and the objective's parallelism
-//! from the observed eval/proposal cost ratio (see [`QController`] docs).
+//! from the observed eval/proposal cost ratio (see [`QController`] docs) —
+//! a ratio the table-driven Parzen proposal path (log-prob + threshold
+//! tables, see `search::parzen`) and the coordinator's binary v4 eval
+//! framing (delta-coded configs, see `coordinator::wire`) both shift toward
+//! larger useful q by cutting per-proposal and per-eval overhead.
 //!
 //! Also here:
 //! * [`eval_batch_parallel`] / [`ParallelObjective`] — thread-parallel batch

@@ -7,22 +7,77 @@
 //! fit on the desirable / undesirable populations; the TPE acquisition
 //! maximizes `log l(x) - log g(x)`.
 //!
-//! The surrogate is maintained INCREMENTALLY: it stores per-dim pseudo-count
-//! vectors (prior included) plus per-dim totals, so adding or removing one
-//! config costs O(dims) instead of a refit over the whole population. Counts
-//! move by exactly 1.0, which f64 represents exactly below 2^52, so an
-//! incrementally maintained instance matches a from-scratch [`Parzen::fit`]
-//! bit-for-bit (covered by tests).
+//! The surrogate is maintained INCREMENTALLY: it stores a flat
+//! struct-of-arrays pseudo-count table (prior included) plus per-dim totals,
+//! so adding or removing one config costs O(dims) instead of a refit over
+//! the whole population. Counts move by exactly 1.0, which f64 represents
+//! exactly below 2^52, so an incrementally maintained instance matches a
+//! from-scratch [`Parzen::fit`] bit-for-bit (covered by tests).
+//!
+//! # Hot-path layout
+//!
+//! The proposal loop is the searcher's per-iteration cost, so the surrogate
+//! keeps lazily rebuilt per-dim lookup tables next to the counts:
+//!
+//! * `log_prob[off_d + c] = ln(counts[off_d + c] / totals[d])` — scoring a
+//!   candidate ([`log_ratio`], [`log_pdf`]) becomes a flat gather-and-sum
+//!   over contiguous arrays (no division, no `ln` per candidate), which the
+//!   compiler can autovectorize. Each table entry is computed by exactly the
+//!   division + `ln` the scalar path used, so scores are bit-identical.
+//! * `thresh[off_d + c]` — per-choice sampling thresholds: the largest
+//!   `u >= 0` for which `Rng::weighted`'s sequential subtraction scan over
+//!   this dim's counts would return a choice `<= c`. The scan is monotone
+//!   non-decreasing in `u` (f64 subtraction is monotone), so these
+//!   thresholds exist and are found by a ~64-step binary search over the
+//!   non-negative f64 bit patterns. Sampling then draws the same
+//!   `u = f64() * total` (against `total_seq`, the cached SEQUENTIAL sum the
+//!   scan uses — the incrementally maintained `totals` can differ in the
+//!   last bit) and binary-searches the thresholds — one RNG draw per dim,
+//!   bit-identical choices, O(log K) instead of O(K) per dim.
+//!
+//! Tables are invalidated per-dim by [`add`](Parzen::add) /
+//! [`remove`](Parzen::remove) and rebuilt lazily on first use (a `RefCell`
+//! keeps the read paths `&self`), so a retarget storm between proposals
+//! costs O(changed * dims) count updates plus ONE table rebuild of the
+//! touched dims — not a rebuild per update.
 
 use super::space::{Config, Space};
 use crate::util::rng::Rng;
+use std::cell::{Ref, RefCell};
+
+/// Lazily rebuilt per-dim lookup tables (see module docs). Lives behind a
+/// `RefCell` so `sample`/`log_ratio`-style read paths stay `&self`.
+#[derive(Debug, Clone)]
+struct Tables {
+    /// Flat `ln(count/total)` per (dim, choice) — the scoring gather table.
+    log_prob: Vec<f64>,
+    /// Flat per-(dim, choice) sampling thresholds (see module docs); the
+    /// last choice of every dim holds `+inf`.
+    thresh: Vec<f64>,
+    /// Per-dim SEQUENTIAL count sum — bit-exact what `Rng::weighted`
+    /// computes internally, which may differ in the last bit from the
+    /// incrementally maintained `totals`.
+    total_seq: Vec<f64>,
+    /// Per-dim staleness flags, set by `add`/`remove`.
+    dirty: Vec<bool>,
+    /// Fast path: false once every dim is clean.
+    any_dirty: bool,
+}
 
 #[derive(Debug, Clone)]
 pub struct Parzen {
-    /// Per-dim, per-choice pseudo-counts (the prior weight is baked in).
-    counts: Vec<Vec<f64>>,
+    /// Flat per-dim, per-choice pseudo-counts (the prior weight is baked
+    /// in); dim `d` occupies `offsets[d]..offsets[d + 1]`.
+    counts: Vec<f64>,
+    /// Dim -> start index into the flat arrays (`dims + 1` entries).
+    offsets: Vec<usize>,
     /// Per-dim count totals (sum over choices), maintained alongside.
     totals: Vec<f64>,
+    /// The prior pseudo-count every choice starts from — kept on the struct
+    /// so `remove` can assert a decremented count never falls below it
+    /// (which would mean removing a config that was never added).
+    prior_weight: f64,
+    tables: RefCell<Tables>,
 }
 
 impl Parzen {
@@ -33,10 +88,29 @@ impl Parzen {
             prior_weight > 0.0 && prior_weight.is_finite(),
             "prior_weight must be positive and finite, got {prior_weight}"
         );
-        let counts: Vec<Vec<f64>> =
-            space.dims.iter().map(|dim| vec![prior_weight; dim.k()]).collect();
-        let totals = counts.iter().map(|c| prior_weight * c.len() as f64).collect();
-        Parzen { counts, totals }
+        let mut offsets = Vec::with_capacity(space.dims.len() + 1);
+        offsets.push(0usize);
+        for dim in &space.dims {
+            offsets.push(offsets.last().unwrap() + dim.k());
+        }
+        let flat = *offsets.last().unwrap();
+        let counts = vec![prior_weight; flat];
+        let totals: Vec<f64> =
+            space.dims.iter().map(|dim| prior_weight * dim.k() as f64).collect();
+        let dims = space.dims.len();
+        Parzen {
+            counts,
+            offsets,
+            totals,
+            prior_weight,
+            tables: RefCell::new(Tables {
+                log_prob: vec![0.0; flat],
+                thresh: vec![0.0; flat],
+                total_seq: vec![0.0; dims],
+                dirty: vec![true; dims],
+                any_dirty: true,
+            }),
+        }
     }
 
     /// Fit from a population of configs. `prior_weight` > 0 keeps every
@@ -49,38 +123,120 @@ impl Parzen {
         p
     }
 
+    fn num_dims(&self) -> usize {
+        self.totals.len()
+    }
+
     /// Add one config to the population: O(dims).
     pub fn add(&mut self, config: &Config) {
+        let t = self.tables.get_mut();
         for (d, &c) in config.iter().enumerate() {
-            self.counts[d][c] += 1.0;
+            self.counts[self.offsets[d] + c] += 1.0;
             self.totals[d] += 1.0;
+            t.dirty[d] = true;
         }
+        t.any_dirty = true;
     }
 
     /// Remove one previously added config: O(dims). Exact inverse of [`add`].
     pub fn remove(&mut self, config: &Config) {
+        let t = self.tables.get_mut();
         for (d, &c) in config.iter().enumerate() {
-            self.counts[d][c] -= 1.0;
+            self.counts[self.offsets[d] + c] -= 1.0;
             self.totals[d] -= 1.0;
+            t.dirty[d] = true;
+            // Every legitimately removable count is prior + (n >= 1), so the
+            // decrement can never land BELOW the bare prior. Checking `> 0`
+            // here used to let a never-added removal slip through whenever
+            // prior_weight > 1.0 (prior - 1.0 still positive) — the
+            // surrogate would silently carry a corrupted population.
             debug_assert!(
-                self.counts[d][c] > 0.0,
+                self.counts[self.offsets[d] + c] >= self.prior_weight,
                 "Parzen::remove of a config that was never added (dim {d})"
             );
         }
+        t.any_dirty = true;
+    }
+
+    /// Rebuild the lookup tables of every dirty dim, then hand out a shared
+    /// borrow. Cheap when clean: one flag check.
+    fn tables(&self) -> Ref<'_, Tables> {
+        if self.tables.borrow().any_dirty {
+            let mut t = self.tables.borrow_mut();
+            for d in 0..self.num_dims() {
+                if !t.dirty[d] {
+                    continue;
+                }
+                let off = self.offsets[d];
+                let k = self.offsets[d + 1] - off;
+                let counts = &self.counts[off..off + k];
+                for c in 0..k {
+                    t.log_prob[off + c] = (counts[c] / self.totals[d]).ln();
+                }
+                // The SEQUENTIAL sum `Rng::weighted` computes — NOT the
+                // incrementally maintained total, which can differ in the
+                // last bit (e.g. prior 0.7 summed 3x vs 0.7 * 3).
+                t.total_seq[d] = counts.iter().sum();
+                // `Rng::weighted`'s subtraction scan as a pure function of u.
+                let scan = |u0: f64| -> usize {
+                    let mut u = u0;
+                    for (i, w) in counts.iter().enumerate() {
+                        u -= w;
+                        if u <= 0.0 {
+                            return i;
+                        }
+                    }
+                    k - 1
+                };
+                for i in 0..k {
+                    // Largest u with scan(u) <= i; the scan is monotone
+                    // non-decreasing in u, and non-negative f64 bit patterns
+                    // order like the values, so a bitwise binary search
+                    // finds the EXACT boundary. scan(+inf) == k - 1 (the
+                    // fallback), so the last threshold is always +inf.
+                    t.thresh[off + i] = if scan(f64::INFINITY) <= i {
+                        f64::INFINITY
+                    } else {
+                        let mut lo = 0u64; // scan(0) == 0 <= i always
+                        let mut hi = f64::INFINITY.to_bits();
+                        while hi - lo > 1 {
+                            let mid = lo + (hi - lo) / 2;
+                            if scan(f64::from_bits(mid)) <= i {
+                                lo = mid;
+                            } else {
+                                hi = mid;
+                            }
+                        }
+                        f64::from_bits(lo)
+                    };
+                }
+                t.dirty[d] = false;
+            }
+            t.any_dirty = false;
+        }
+        self.tables.borrow()
     }
 
     pub fn log_pdf(&self, config: &Config) -> f64 {
-        config
-            .iter()
-            .enumerate()
-            .map(|(d, &c)| (self.counts[d][c] / self.totals[d]).ln())
-            .sum()
+        let t = self.tables();
+        config.iter().enumerate().map(|(d, &c)| t.log_prob[self.offsets[d] + c]).sum()
+    }
+
+    /// Draw one choice for dim `d` — the threshold tables replay
+    /// `Rng::weighted` exactly: same single `f64()` draw scaled by the same
+    /// sequential total, resolved by binary search instead of a linear scan.
+    #[inline]
+    fn draw(&self, t: &Tables, d: usize, rng: &mut Rng) -> usize {
+        let off = self.offsets[d];
+        let u = rng.f64() * t.total_seq[d];
+        // First index whose threshold is >= u == what the scan returns; the
+        // last threshold is +inf, so the result is always in range.
+        t.thresh[off..self.offsets[d + 1]].partition_point(|&x| x < u)
     }
 
     pub fn sample(&self, rng: &mut Rng) -> Config {
-        // `Rng::weighted` accepts unnormalized non-negative weights, so the
-        // raw pseudo-counts sample the same distribution as the probs.
-        self.counts.iter().map(|c| rng.weighted(c)).collect()
+        let t = self.tables();
+        (0..self.num_dims()).map(|d| self.draw(&t, d, rng)).collect()
     }
 
     /// Sample into an existing buffer — the proposal hot path draws tens of
@@ -88,22 +244,25 @@ impl Parzen {
     /// instead of allocating a fresh `Vec` per draw. Draws the same RNG
     /// sequence as [`sample`](Self::sample).
     pub fn sample_into(&self, out: &mut Config, rng: &mut Rng) {
+        let t = self.tables();
         out.clear();
-        out.extend(self.counts.iter().map(|c| rng.weighted(c)));
+        out.extend((0..self.num_dims()).map(|d| self.draw(&t, d, rng)));
     }
 
     pub fn prob(&self, dim: usize, choice: usize) -> f64 {
-        self.counts[dim][choice] / self.totals[dim]
+        self.counts[self.offsets[dim] + choice] / self.totals[dim]
     }
 
     /// Raw pseudo-count (prior included) — used by the exactness tests.
     pub fn count(&self, dim: usize, choice: usize) -> f64 {
-        self.counts[dim][choice]
+        self.counts[self.offsets[dim] + choice]
     }
 
     /// Exact structural equality of counts (and therefore of all densities).
     pub fn same_counts(&self, other: &Parzen) -> bool {
-        self.counts == other.counts && self.totals == other.totals
+        self.offsets == other.offsets
+            && self.counts == other.counts
+            && self.totals == other.totals
     }
 }
 
@@ -160,15 +319,19 @@ impl SurrogatePair {
     }
 }
 
-/// The acquisition score log l(x) − log g(x), computed in a single pass
-/// over the dimensions (one division + one `ln` per surrogate per dim,
-/// instead of two separate `log_pdf` traversals).
+/// The acquisition score log l(x) − log g(x): a flat gather-and-sum over the
+/// two precomputed log-prob tables (no division or `ln` per call — each
+/// table entry was computed by exactly the scalar arithmetic this replaced,
+/// so the sum is bit-identical).
 pub fn log_ratio(l: &Parzen, g: &Parzen, config: &Config) -> f64 {
+    let lt = l.tables();
+    let gt = g.tables();
     config
         .iter()
         .enumerate()
         .map(|(d, &c)| {
-            (l.counts[d][c] / l.totals[d]).ln() - (g.counts[d][c] / g.totals[d]).ln()
+            let i = l.offsets[d] + c;
+            lt.log_prob[i] - gt.log_prob[i]
         })
         .sum()
 }
@@ -178,32 +341,54 @@ pub fn log_ratio(l: &Parzen, g: &Parzen, config: &Config) -> f64 {
 /// a single draw from `l` instead of panicking (see KmeansTpeParams
 /// validation for the strict guard).
 ///
-/// Called tens of times per proposal round, so candidates are drawn into a
-/// reused scratch buffer ([`Parzen::sample_into`]) and scored in one pass
-/// ([`log_ratio`]) — the only per-call allocations are the scratch and the
-/// returned winner. The RNG stream and the kept candidate (first maximum
-/// wins ties) are identical to the allocating version this replaced.
+/// Called tens of times per proposal round. All candidates are drawn first
+/// into one flat buffer (same RNG stream as drawing-then-scoring one at a
+/// time — scoring consumes no randomness), scored by gathering from the
+/// precomputed log-prob tables, and the winner is lifted out with a single
+/// `select_nth_unstable_by` partial sort. Pseudo-counts are
+/// >= prior_weight > 0 with finite totals, so every score is finite and the
+/// (score desc, index asc) comparator is a total order whose minimum is
+/// exactly the FIRST maximum — the same candidate the old compare-as-you-go
+/// loop kept.
 pub fn propose(
     l: &Parzen,
     g: &Parzen,
     rng: &mut Rng,
     n_candidates: usize,
 ) -> Config {
-    let mut scratch = Config::new();
-    let mut best = Config::new();
-    let mut best_score = f64::NEG_INFINITY;
-    for _ in 0..n_candidates.max(1) {
-        l.sample_into(&mut scratch, rng);
-        let score = log_ratio(l, g, &scratch);
-        // Pseudo-counts are >= prior_weight > 0 with finite totals, so the
-        // score is always finite and the first candidate always replaces the
-        // empty initial `best`.
-        if score > best_score {
-            best_score = score;
-            std::mem::swap(&mut best, &mut scratch);
+    let n = n_candidates.max(1);
+    let dims = l.num_dims();
+    let lt = l.tables();
+    let gt = g.tables();
+    // Candidate-major flat buffer; drawing all before scoring keeps the RNG
+    // stream identical to the draw-score-draw-score loop this replaced.
+    let mut flat: Vec<usize> = Vec::with_capacity(n * dims);
+    for _ in 0..n {
+        for d in 0..dims {
+            flat.push(l.draw(&lt, d, rng));
         }
     }
-    best
+    let scores: Vec<f64> = (0..n)
+        .map(|j| {
+            flat[j * dims..(j + 1) * dims]
+                .iter()
+                .enumerate()
+                .map(|(d, &c)| {
+                    let i = l.offsets[d] + c;
+                    lt.log_prob[i] - gt.log_prob[i]
+                })
+                .sum()
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.select_nth_unstable_by(0, |&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let best = order[0];
+    flat[best * dims..(best + 1) * dims].to_vec()
 }
 
 #[cfg(test)]
@@ -355,6 +540,91 @@ mod tests {
                 configs.iter().enumerate().filter(|(i, _)| in_g[*i]).map(|(_, c)| c).collect();
             assert!(pair.l.same_counts(&Parzen::fit(&s, &l_pop, 1.0)), "round {round} l");
             assert!(pair.g.same_counts(&Parzen::fit(&s, &g_pop, 1.0)), "round {round} g");
+        }
+    }
+
+    /// The bug the stored prior fixes: with prior_weight > 1.0 the old
+    /// `> 0.0` assert stayed silent on a never-added removal (prior - 1.0 is
+    /// still positive) — the count must never fall below the bare prior.
+    /// debug_assert-only, so the guard is checked where it exists.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "never added")]
+    fn remove_of_never_added_config_panics() {
+        let s = space();
+        let mut p = Parzen::new_prior(&s, 2.0);
+        p.add(&vec![0, 0]);
+        p.remove(&vec![1, 1]); // never added: counts fall to prior - 1.0
+    }
+
+    /// The threshold tables must replay `Rng::weighted`'s subtraction scan
+    /// EXACTLY: same seed => identical choice sequences over a lumpy count
+    /// table, including after incremental updates dirty the tables.
+    #[test]
+    fn threshold_sampling_matches_weighted_reference() {
+        let s = Space::new(vec![
+            Dim::new("a", (0..7).map(|c| c as f64).collect::<Vec<_>>()),
+            Dim::new("b", vec![0.0, 1.0]),
+            Dim::new("c", (0..5).map(|c| c as f64).collect::<Vec<_>>()),
+        ]);
+        let mut rng = Rng::new(11);
+        let pop: Vec<Config> = (0..60).map(|_| s.sample(&mut rng)).collect();
+        let mut p = Parzen::fit(&s, &pop.iter().collect::<Vec<_>>(), 0.3);
+        for round in 0..3 {
+            let mut r_fast = Rng::new(100 + round);
+            let mut r_ref = Rng::new(100 + round);
+            for _ in 0..500 {
+                let fast = p.sample(&mut r_fast);
+                // Reference: the pre-table scan over the same raw counts.
+                let reference: Config = (0..s.dims.len())
+                    .map(|d| {
+                        let w: Vec<f64> =
+                            (0..s.dims[d].k()).map(|c| p.count(d, c)).collect();
+                        r_ref.weighted(&w)
+                    })
+                    .collect();
+                assert_eq!(fast, reference);
+            }
+            // Dirty the tables and check again on the updated counts.
+            p.add(&pop[round as usize]);
+            p.remove(&pop[round as usize + 10]);
+            p.add(&pop[round as usize + 10]); // net: one extra member
+        }
+    }
+
+    /// Gathered table scores must equal the scalar recompute BIT-FOR-BIT
+    /// (each table entry is produced by the same division + ln).
+    #[test]
+    fn table_log_ratio_is_bit_identical_to_recompute() {
+        let s = space();
+        let mut rng = Rng::new(12);
+        let pop: Vec<Config> = (0..25).map(|_| s.sample(&mut rng)).collect();
+        let l = Parzen::fit(&s, &pop.iter().collect::<Vec<_>>(), 0.7);
+        let g = Parzen::fit(&s, &pop[..8].iter().collect::<Vec<_>>(), 0.7);
+        for cfg in &pop {
+            let scalar: f64 = cfg
+                .iter()
+                .enumerate()
+                .map(|(d, &c)| l.prob(d, c).ln() - g.prob(d, c).ln())
+                .sum();
+            assert_eq!(log_ratio(&l, &g, cfg).to_bits(), scalar.to_bits());
+        }
+    }
+
+    /// With l == g every candidate scores exactly 0.0; the partial sort must
+    /// keep the FIRST candidate drawn — the old compare-as-you-go loop's
+    /// tie-break.
+    #[test]
+    fn propose_keeps_first_candidate_on_ties() {
+        let s = space();
+        let l = Parzen::fit(&s, &[], 1.0);
+        let g = Parzen::fit(&s, &[], 1.0);
+        for seed in 0..20 {
+            let mut r_prop = Rng::new(seed);
+            let mut r_first = Rng::new(seed);
+            let picked = propose(&l, &g, &mut r_prop, 8);
+            let first = l.sample(&mut r_first);
+            assert_eq!(picked, first, "seed {seed}");
         }
     }
 }

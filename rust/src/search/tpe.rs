@@ -8,7 +8,10 @@
 //! Like [`KmeansTpeState`](super::kmeans_tpe::KmeansTpeState), the proposal
 //! path is incremental: [`TpeState`] keeps the trial indices sorted by value
 //! (one binary-search insert per observation instead of a full re-sort) and
-//! diff-maintains the l/g Parzens as the γ-quantile boundary drifts.
+//! diff-maintains the l/g Parzens as the γ-quantile boundary drifts. The
+//! shared [`propose`] then runs on the Parzens' lazily-rebuilt per-dim
+//! log-prob and threshold tables, so this baseline inherits the same
+//! vectorized candidate loop as the k-means variant.
 
 use super::history::History;
 use super::parzen::{propose, SurrogatePair};

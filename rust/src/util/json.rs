@@ -126,6 +126,14 @@ impl Json {
         out
     }
 
+    /// Compact-serialize into a caller-owned buffer (cleared first). Hot
+    /// paths (the per-eval wire frames) thread a reusable per-connection
+    /// scratch `String` through this instead of allocating per frame.
+    pub fn write_compact(&self, out: &mut String) {
+        out.clear();
+        self.write(out, 0, false);
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),

@@ -170,13 +170,7 @@ fn killed_distributed_search_resumes_to_the_uninterrupted_history() {
 /// A multi-tenant farm worker: the `serve_sessions` runtime (concurrent
 /// connections, per-session backends) that `sammpq worker` runs.
 fn spawn_farm_worker() -> (String, std::thread::JoinHandle<usize>) {
-    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
-    let addr = listener.local_addr().expect("addr").to_string();
-    let handle = std::thread::spawn(move || {
-        let factory = SyntheticFactory { sleep: Duration::ZERO };
-        serve_sessions_on(listener, &factory, ServeOpts::default()).expect("farm worker")
-    });
-    (addr, handle)
+    spawn_farm_worker_opts(ServeOpts::default())
 }
 
 /// One tenant's distributed search over the shared farm: own session, own
@@ -255,6 +249,87 @@ fn concurrent_leaders_share_one_farm_bit_identically() {
         }
         let served = h1.join().unwrap() + h2.join().unwrap();
         assert_eq!(served, budget_a + budget_b);
+    });
+}
+
+/// [`spawn_farm_worker`] under explicit [`ServeOpts`] — `binary: false`
+/// pins a JSON-only v3-era worker for the mixed-farm test.
+fn spawn_farm_worker_opts(opts: ServeOpts) -> (String, std::thread::JoinHandle<usize>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let handle = std::thread::spawn(move || {
+        let factory = SyntheticFactory { sleep: Duration::ZERO };
+        serve_sessions_on(listener, &factory, opts).expect("farm worker")
+    });
+    (addr, handle)
+}
+
+/// One distributed search over `addrs`, returning the history AND the
+/// record-return log (full [`EvalRecord`]s, for bit-exact comparison).
+fn run_search_with_records(
+    space: Space,
+    params: KmeansTpeParams,
+    q: usize,
+    budget: usize,
+    addrs: &[String],
+) -> (sammpq::search::History, Vec<sammpq::coordinator::EvalRecord>) {
+    let mut remote = RemoteObjective::connect_session(
+        SessionSpec::synthetic(space),
+        addrs,
+        no_steal_cfg(),
+    )
+    .expect("connect");
+    let h = BatchSearcher::kmeans_tpe(params, q).run(&mut remote, budget);
+    let log = remote.log.clone();
+    remote.release().expect("release session");
+    (h, log)
+}
+
+#[test]
+fn mixed_json_and_binary_farm_matches_all_json_run_bit_identically() {
+    with_timeout(240, || {
+        // Acceptance (binary wire): a MIXED farm — one JSON-only v3 worker
+        // (`ServeOpts { binary: false }`, never echoes the capability) and
+        // one default worker speaking v4 binary eval frames — must produce
+        // a search history AND record log bit-identical to an all-JSON
+        // farm's. The wire is pure transport: delta-coded varint configs
+        // decode to the same indices, raw-bit f64 metrics round-trip
+        // exactly, and per-connection negotiation means the two workers
+        // interoperate in one pool without either noticing the other.
+        let space = SyntheticObjective::new(6, 4, Duration::ZERO).space().clone();
+        let params = KmeansTpeParams { n_startup: 8, seed: 17, ..Default::default() };
+        let (q, budget) = (3, 24);
+
+        // Reference: all-JSON farm (both workers refuse the binary offer).
+        let json_only = ServeOpts { binary: false, ..ServeOpts::default() };
+        let (ja1, jh1) = spawn_farm_worker_opts(json_only);
+        let (ja2, jh2) = spawn_farm_worker_opts(json_only);
+        let json_addrs = vec![ja1.clone(), ja2.clone()];
+        let (ref_h, ref_log) =
+            run_search_with_records(space.clone(), params, q, budget, &json_addrs);
+
+        // Mixed farm: worker 1 JSON-only, worker 2 binary-capable.
+        let (ma1, mh1) = spawn_farm_worker_opts(json_only);
+        let (ma2, mh2) = spawn_farm_worker_opts(ServeOpts::default());
+        let mixed_addrs = vec![ma1.clone(), ma2.clone()];
+        let (got_h, got_log) =
+            run_search_with_records(space.clone(), params, q, budget, &mixed_addrs);
+
+        assert_eq!(got_h.len(), ref_h.len());
+        assert_eq!(got_h.values(), ref_h.values(), "values diverged across framings");
+        for (i, (x, y)) in got_h.trials.iter().zip(&ref_h.trials).enumerate() {
+            assert_eq!(x.config, y.config, "trial {i} config diverged across framings");
+        }
+        // Full records too: every metric f64 bit-identical, every config
+        // reassembled from delta-coded varints equal to the JSON one.
+        assert_eq!(got_log, ref_log, "record logs diverged across framings");
+
+        for addr in [&ja1, &ja2, &ma1, &ma2] {
+            let mut admin = WorkerHandle::connect(addr).expect("admin connect");
+            admin.shutdown().expect("farm shutdown");
+        }
+        assert_eq!(jh1.join().unwrap() + jh2.join().unwrap(), budget);
+        assert_eq!(mh1.join().unwrap() + mh2.join().unwrap(), budget);
     });
 }
 
