@@ -11,7 +11,7 @@
 //! Run: `cargo bench` (all) or `cargo bench -- fig3 table2 --effort quick`
 //! Filter names: fig1 fig3 fig3c fig4 table1 table2 table3 table4 ablations
 //!               kernels tpe tpe-hotpath round-latency pipeline-depth
-//!               remote-search wire-throughput hwmodel
+//!               remote-search wire-throughput warm-start hwmodel
 //!
 //! `tpe-hotpath` additionally records its proposals/sec numbers in
 //! `BENCH_tpe.json` at the workspace root, so the incremental-surrogate
@@ -648,6 +648,125 @@ fn bench_wire_throughput() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Cross-session transfer store: one budgeted search run cold (every eval
+/// paid to the sleeping synthetic farm) and once warm-started from a
+/// warehouse the fleet has already filled. The sleep makes farm evals the
+/// dominant cost, so the wall-clock ratio is the re-pay saving the store
+/// buys. Acceptance: the seeded session pays strictly fewer farm evals at
+/// equal budget. Records BENCH_warm_start.json.
+fn bench_warm_start() -> anyhow::Result<()> {
+    use sammpq::coordinator::EvalRecord;
+    use sammpq::search::{cfg_digest, warehouse_key, BatchAlgo, BatchSearcher, CachedObjective,
+                         ProjectPolicy, QPolicy, SyntheticObjective, WarmStart, Warehouse};
+    use sammpq::util::json::{obj, Json};
+    use std::time::Duration;
+
+    section("warm-start (cold search vs warehouse-seeded rerun)");
+    let (dims, choices) = (6usize, 3usize);
+    let eval_ms = 10u64;
+    let budget = 32usize;
+    let sleep = Duration::from_millis(eval_ms);
+    let space = SyntheticObjective::new(dims, choices, sleep).space().clone();
+    let searcher = || {
+        BatchSearcher::new(
+            BatchAlgo::KmeansTpe(KmeansTpeParams { n_startup: 8, seed: 7, ..Default::default() }),
+            QPolicy::Fixed(4),
+        )
+    };
+
+    // (a) Cold: every evaluation hits the sleeping farm.
+    let mut cold_farm =
+        CachedObjective::new(SyntheticObjective::with_space(space.clone(), sleep));
+    let mut run = searcher().start(space.clone(), budget, None)?;
+    let t = Timer::start();
+    while !run.done() {
+        run.step(&mut cold_farm);
+    }
+    let (cold_hist, _) = run.finish();
+    let cold_secs = t.secs();
+    let cold_paid = cold_farm.inner.evals;
+    anyhow::ensure!(cold_hist.len() == budget && cold_paid > 0, "cold run degenerate");
+
+    // (b) The fleet has since paid for the whole space; a rerun at the same
+    // budget warm-starts from the store and never re-pays a trial.
+    let dir =
+        std::env::temp_dir().join(format!("sammpq_bench_warmstart_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let wh = Warehouse::open_tagged(&dir, "fleet")?;
+    let digest = cfg_digest(&["bench-objective", "bench-hw"]);
+    let mut all: Vec<Vec<usize>> = vec![Vec::new()];
+    for _ in 0..dims {
+        all = all
+            .iter()
+            .flat_map(|c| {
+                (0..choices).map(move |i| {
+                    let mut cc = c.clone();
+                    cc.push(i);
+                    cc
+                })
+            })
+            .collect();
+    }
+    let records: Vec<EvalRecord> = all
+        .into_iter()
+        .map(|c| {
+            let v = SyntheticObjective::expected_value(&c);
+            EvalRecord::value_only(c, v)
+        })
+        .collect();
+    wh.append(&warehouse_key(&space, &digest), &space, &records)?;
+
+    let Some(WarmStart::Exact { records: stored, .. }) =
+        wh.lookup(&space, &digest, ProjectPolicy::Nearest)?
+    else {
+        anyhow::bail!("expected an exact warehouse hit");
+    };
+    let mut farm = CachedObjective::new(SyntheticObjective::with_space(space.clone(), sleep));
+    let entries: Vec<(Vec<usize>, f64)> =
+        stored.iter().map(|r| (r.config.clone(), r.value)).collect();
+    farm.seed(&entries);
+    let (configs, values): (Vec<_>, Vec<_>) = entries.into_iter().unzip();
+    let mut run = searcher().start_warm(space.clone(), budget, configs, values)?;
+    let t = Timer::start();
+    while !run.done() {
+        run.step(&mut farm);
+    }
+    let (warm_hist, _) = run.finish();
+    let warm_secs = t.secs();
+    let warm_paid = farm.inner.evals;
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!(
+        "{budget}-eval search, {eval_ms}ms evals: cold {cold_paid} farm evals, {:.2}s | \
+         seeded {warm_paid} farm evals, {:.2}s | {:.1}x wall-clock",
+        cold_secs,
+        warm_secs,
+        cold_secs / warm_secs.max(1e-9)
+    );
+    anyhow::ensure!(warm_hist.len() == budget, "seeded budget not honored");
+    anyhow::ensure!(
+        warm_paid < cold_paid,
+        "warm start regressed: seeded paid {warm_paid} farm evals vs cold {cold_paid}"
+    );
+
+    let record = obj(vec![
+        ("bench", Json::Str("warm-start".into())),
+        ("dims", Json::Num(dims as f64)),
+        ("choices", Json::Num(choices as f64)),
+        ("budget", Json::Num(budget as f64)),
+        ("eval_ms", Json::Num(eval_ms as f64)),
+        ("cold_farm_evals", Json::Num(cold_paid as f64)),
+        ("seeded_farm_evals", Json::Num(warm_paid as f64)),
+        ("cold_secs", Json::Num(cold_secs)),
+        ("seeded_secs", Json::Num(warm_secs)),
+        ("wall_clock_speedup", Json::Num(cold_secs / warm_secs.max(1e-9))),
+        ("note", Json::Str("regenerate with: cargo bench -- warm-start".into())),
+    ]);
+    std::fs::write("BENCH_warm_start.json", record.to_string_pretty() + "\n")?;
+    println!("recorded -> BENCH_warm_start.json");
+    Ok(())
+}
+
 /// Hardware model + cycle simulator throughput.
 fn bench_hwmodel() -> anyhow::Result<()> {
     section("hardware model + simulator");
@@ -708,6 +827,9 @@ fn main() -> anyhow::Result<()> {
     }
     if should_run(&args, "wire-throughput") {
         bench_wire_throughput()?;
+    }
+    if should_run(&args, "warm-start") {
+        bench_warm_start()?;
     }
     if should_run(&args, "hwmodel") {
         bench_hwmodel()?;

@@ -301,9 +301,20 @@ pub struct DnnObjective<'a> {
     /// Config-keyed eval cache: duplicate proposals (common on small pruned
     /// spaces, and likelier still in batched constant-liar rounds) skip the
     /// expensive proxy-QAT re-train and return the recorded metrics.
+    /// Bounded to [`EVAL_CACHE_CAP`] entries with deterministic FIFO
+    /// eviction — warehouse-seeded long-lived leaders must not grow it
+    /// without bound.
+    ///
+    /// [`EVAL_CACHE_CAP`]: crate::search::batch::EVAL_CACHE_CAP
     cache: std::collections::HashMap<Config, EvalRecord>,
+    /// Insertion order of `cache`, for FIFO eviction at capacity.
+    cache_order: std::collections::VecDeque<Config>,
     /// Evaluations served from cache (the log still records every request).
     pub cache_hits: usize,
+    /// Evaluations that actually paid a proxy-QAT run.
+    pub cache_misses: usize,
+    /// Entries evicted by the capacity bound.
+    pub cache_evictions: usize,
 }
 
 impl<'a> DnnObjective<'a> {
@@ -326,8 +337,46 @@ impl<'a> DnnObjective<'a> {
             log: Vec::new(),
             baseline_cycles,
             cache: std::collections::HashMap::new(),
+            cache_order: std::collections::VecDeque::new(),
             cache_hits: 0,
+            cache_misses: 0,
+            cache_evictions: 0,
         }
+    }
+
+    /// Insert into the bounded cache, evicting the oldest entry at
+    /// capacity (FIFO on insertion order — deterministic, no clocks).
+    fn cache_insert(&mut self, config: &Config, rec: EvalRecord) {
+        if self.cache.contains_key(config) {
+            return;
+        }
+        if self.cache.len() >= crate::search::batch::EVAL_CACHE_CAP {
+            if let Some(old) = self.cache_order.pop_front() {
+                self.cache.remove(&old);
+                self.cache_evictions += 1;
+            }
+        }
+        self.cache.insert(config.clone(), rec);
+        self.cache_order.push_back(config.clone());
+    }
+
+    /// Pre-populate the eval cache from warehouse records (the exact-hit
+    /// warm start): a config the fleet already paid for is served from its
+    /// stored [`EvalRecord`] — bit-identical metrics, zero proxy-QAT —
+    /// instead of being re-evaluated. Only finite-valued records whose
+    /// configs are valid for the CURRENT space go in; returns the count.
+    pub fn seed_cache(&mut self, records: &[EvalRecord]) -> usize {
+        let mut added = 0;
+        for r in records {
+            if r.value.is_finite()
+                && self.build.space.validate(&r.config)
+                && !self.cache.contains_key(&r.config)
+            {
+                self.cache_insert(&r.config, r.clone());
+                added += 1;
+            }
+        }
+        added
     }
 
     /// Adopt a re-pruned `SpaceBuild` at a round boundary
@@ -339,6 +388,7 @@ impl<'a> DnnObjective<'a> {
     pub fn adopt_build(&mut self, build: SpaceBuild) {
         self.build = build;
         self.cache.clear();
+        self.cache_order.clear();
     }
 
     /// Hardware metrics only (no training) — used by one-shot baselines too.
@@ -419,6 +469,7 @@ impl<'a> Objective for DnnObjective<'a> {
             self.log.push(rec);
             return value;
         }
+        self.cache_misses += 1;
         let meta = &self.session.meta;
         let (bits, widths) = self.build.decode(meta, config);
         let (size_mb, lat_ms, speedup) = self.hw_metrics(&bits, &widths);
@@ -446,7 +497,7 @@ impl<'a> Objective for DnnObjective<'a> {
         if acc_ok {
             // Failed evaluations are not cached — a transient runtime error
             // should not pin a zero accuracy onto a config forever.
-            self.cache.insert(config.clone(), rec.clone());
+            self.cache_insert(config, rec.clone());
         }
         self.log.push(rec);
         value

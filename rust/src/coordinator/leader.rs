@@ -30,9 +30,10 @@ use crate::coordinator::service::{JoinRegistry, PoolCfg, RemoteObjective, Sessio
 use crate::coordinator::supervisor::{Decision, PoolStats, Supervisor, SupervisorCfg};
 use crate::hessian::pruner::{prune_space, PrunedSpace};
 use crate::hw::HwConfig;
-use crate::search::{BatchAlgo, BatchSearcher, Config, History, KmeansTpe, KmeansTpeParams,
-                    Objective, ProjectPolicy, ProjectionReport, QPolicy, SearchCheckpoint,
-                    Searcher, Space, SpaceProjection, Tpe, TpeParams};
+use crate::search::{cfg_digest, warehouse_key, BatchAlgo, BatchSearcher, Config, History,
+                    KmeansTpe, KmeansTpeParams, Objective, ProjectPolicy, ProjectionReport,
+                    QPolicy, SearchCheckpoint, Searcher, Space, SpaceProjection, Tpe,
+                    TpeParams, WarmStart, Warehouse};
 use crate::train::session::{ModelSession, ParamSnapshot};
 use crate::util::json::{obj, Json};
 use crate::util::Timer;
@@ -178,6 +179,19 @@ pub struct SessionOpts {
     ///
     /// [`JoinRegistry`]: crate::coordinator::service::JoinRegistry
     pub registry: Option<String>,
+    /// `--warehouse <dir>`: the cross-session transfer store. On session
+    /// start the leader looks up prior paid history for this (space,
+    /// objective + hw digest) — an exact-fingerprint hit seeds the
+    /// surrogates resume-style AND pre-populates the config-keyed eval
+    /// cache (already-paid configs are served from the store, never the
+    /// farm, and the budget counts only fresh evaluations); a near miss is
+    /// projected through `search::project` first. Every completed round
+    /// appends the session's fresh records back under a per-session
+    /// segment file, so concurrent leaders share one warehouse safely.
+    pub warehouse: Option<PathBuf>,
+    /// `--warm-start nearest|strict`: projection policy for near-miss
+    /// warehouse hits (default `nearest`). Exact hits never project.
+    pub warm_start: Option<ProjectPolicy>,
     /// `--autoscale`: run the farm-health supervisor during the search —
     /// per-round [`PoolStats`] snapshots feed the pure policy in
     /// `coordinator::supervisor`, whose decisions actually execute
@@ -211,6 +225,23 @@ pub trait RecordedObjective: Objective {
     /// default (and the in-process impl) ignores it — only the remote
     /// objective has workers to drain.
     fn apply_decision(&mut self, _decision: &Decision) {}
+
+    /// Pre-populate the backend's config-keyed eval cache with already-paid
+    /// warehouse records (exact-fingerprint warm starts only): a config the
+    /// fleet has paid for is served from the store, never re-evaluated, and
+    /// the budget buys only FRESH evaluations. Returns how many records
+    /// were adopted; the default (and the remote impl) adopts none —
+    /// workers hold their own caches.
+    fn seed_cache(&mut self, _records: &[EvalRecord]) -> usize {
+        0
+    }
+
+    /// Cumulative (hits, misses, evictions) of the backend's config-keyed
+    /// eval cache — the per-round `[cache]` log line. `None` (the default)
+    /// for backends without an inspectable cache.
+    fn cache_stats(&self) -> Option<(usize, usize, usize)> {
+        None
+    }
 }
 
 impl RecordedObjective for DnnObjective<'_> {
@@ -221,6 +252,14 @@ impl RecordedObjective for DnnObjective<'_> {
     fn resync(&mut self, build: &SpaceBuild) -> Result<()> {
         self.adopt_build(build.clone());
         Ok(())
+    }
+
+    fn seed_cache(&mut self, records: &[EvalRecord]) -> usize {
+        DnnObjective::seed_cache(self, records)
+    }
+
+    fn cache_stats(&self) -> Option<(usize, usize, usize)> {
+        Some((self.cache_hits, self.cache_misses, self.cache_evictions))
     }
 }
 
@@ -580,6 +619,11 @@ pub struct SearchReport {
     /// verdicts, heartbeat retirements — the operator-facing summary the
     /// round logs stream incrementally.
     pub farm: Option<PoolStats>,
+    /// The projection behind a NEAR-MISS warehouse warm start (`None`: cold
+    /// start, exact-fingerprint hit, or no `--warehouse`): which stored
+    /// trials were kept, snapped, or dropped on their way into this
+    /// session's surrogates.
+    pub warm_start: Option<ProjectionReport>,
 }
 
 /// Build the searcher a `LeaderCfg` asks for. Separated from [`Leader`]
@@ -662,6 +706,8 @@ pub struct SearchOutcome {
     pub search_secs: f64,
     /// Final pool health snapshot (remote backend only).
     pub farm: Option<PoolStats>,
+    /// Projection report of a near-miss warehouse warm start, if one ran.
+    pub warm_start: Option<ProjectionReport>,
 }
 
 pub struct Leader<'a> {
@@ -753,7 +799,7 @@ impl<'a> Leader<'a> {
         let sess = self.session;
         let build = build_space(&sess.meta, pruned);
         let t_search = Timer::start();
-        let (history, records, repruned_build, farm) = match &opts.backend {
+        let (history, records, repruned_build, farm, warm_start) = match &opts.backend {
             EvalBackend::InProcess => {
                 let mut objective = DnnObjective::new(
                     sess,
@@ -813,6 +859,7 @@ impl<'a> Leader<'a> {
             repruned,
             search_secs: t_search.secs(),
             farm,
+            warm_start,
         })
     }
 
@@ -832,19 +879,25 @@ impl<'a> Leader<'a> {
         objective: &mut O,
         opts: &SessionOpts,
         pruned: Option<&PrunedSpace>,
-    ) -> Result<(History, Vec<EvalRecord>, Option<(SpaceBuild, PrunedSpace)>, Option<PoolStats>)>
-    {
+    ) -> Result<(
+        History,
+        Vec<EvalRecord>,
+        Option<(SpaceBuild, PrunedSpace)>,
+        Option<PoolStats>,
+        Option<ProjectionReport>,
+    )> {
         let budget = self.cfg.n_evals;
         if opts.checkpoint.is_none()
             && opts.resume.is_none()
             && opts.reprune_every.is_none()
+            && opts.warehouse.is_none()
             && !opts.autoscale
         {
             let mut searcher = self.make_searcher(algo);
             let history = searcher.run(objective, budget);
             let records = objective.records().to_vec();
             let farm = objective.health();
-            return Ok((history, records, None, farm));
+            return Ok((history, records, None, farm, None));
         }
 
         let batch_algo = match algo {
@@ -859,8 +912,8 @@ impl<'a> Leader<'a> {
                 ..Default::default()
             }),
             other => anyhow::bail!(
-                "--checkpoint/--resume/--reprune-every/--autoscale need a TPE-family \
-                 --algo (kmeans-tpe or tpe), got '{}'",
+                "--checkpoint/--resume/--reprune-every/--warehouse/--autoscale need a \
+                 TPE-family --algo (kmeans-tpe or tpe), got '{}'",
                 other.name()
             ),
         };
@@ -898,11 +951,57 @@ impl<'a> Leader<'a> {
             }
             prior = ck.records.clone();
         }
-        let mut run = searcher.start(
-            objective.space().clone(),
-            budget,
-            resumed.as_ref().map(|c| &c.search),
-        )?;
+        // Cross-session transfer store (`--warehouse`): one digest covers
+        // the objective knobs + hardware model, so histories collected
+        // under a different reward are never mistaken for this run's.
+        let wh_ctx = match &opts.warehouse {
+            Some(dir) => {
+                let wh = Warehouse::open(dir)?;
+                let obj_cfg = self.cfg.objective.to_json().to_string_compact();
+                let hw_cfg = self.hw.to_json().to_string_compact();
+                let digest = cfg_digest(&[&obj_cfg, &hw_cfg]);
+                Some((wh, digest))
+            }
+            None => None,
+        };
+        // A resumed checkpoint already carries its own paid history — the
+        // warehouse then only RECEIVES this session's fresh records.
+        let mut warm: Option<WarmStart> = None;
+        if let (Some((wh, digest)), None) = (&wh_ctx, &resumed) {
+            let policy = opts.warm_start.unwrap_or(ProjectPolicy::Nearest);
+            warm = wh.lookup(objective.space(), digest, policy)?;
+        }
+        let mut warm_report: Option<ProjectionReport> = None;
+        let mut run = match warm {
+            None => searcher.start(
+                objective.space().clone(),
+                budget,
+                resumed.as_ref().map(|c| &c.search),
+            )?,
+            Some(WarmStart::Exact { key, records }) => {
+                let cached = objective.seed_cache(&records);
+                eprintln!(
+                    "[warehouse] exact hit {key}: {} stored trials seed the surrogates, \
+                     {cached} pre-paid configs seed the eval cache",
+                    records.len()
+                );
+                let configs: Vec<Config> = records.iter().map(|r| r.config.clone()).collect();
+                let values: Vec<f64> = records.iter().map(|r| r.value).collect();
+                searcher.start_warm(objective.space().clone(), budget, configs, values)?
+            }
+            Some(WarmStart::Projected { key, configs, values, report }) => {
+                // Projected values were measured on a DIFFERENT space: they
+                // seed the surrogates but never the eval cache — a config
+                // that was merely snapped near a paid one is still unpaid.
+                eprintln!(
+                    "[warehouse] projected hit {key}: seeding {} remapped trials",
+                    configs.len()
+                );
+                eprintln!("{}", report.render());
+                warm_report = Some(report);
+                searcher.start_warm(objective.space().clone(), budget, configs, values)?
+            }
+        };
         let store = match (&opts.checkpoint, opts.checkpoint_keep) {
             (Some(dir), Some(keep)) => {
                 let store = CheckpointStore::new(dir.clone(), keep);
@@ -941,6 +1040,12 @@ impl<'a> Leader<'a> {
             run.step(objective);
             rounds_since += 1;
             round_no += 1;
+            if let Some((hits, misses, evictions)) = objective.cache_stats() {
+                eprintln!(
+                    "[cache] round {round_no}: {hits} hits / {misses} misses / \
+                     {evictions} evicted"
+                );
+            }
             if let Some(stats) = objective.health() {
                 eprintln!("[farm] round {round_no}: {}", stats.render());
                 let decision = supervisor.observe(round_no, &stats);
@@ -969,6 +1074,19 @@ impl<'a> Leader<'a> {
                         store.save(&ck)?;
                     }
                     None => ck.save(path)?,
+                }
+            }
+            // Every completed round pays its fresh records forward: the
+            // session's own segment file is rewritten whole and deduped, so
+            // replays are idempotent and concurrent leaders never touch
+            // each other's segments. Non-fatal — a full disk must not kill
+            // an hours-long search that is otherwise healthy.
+            if let Some((wh, digest)) = &wh_ctx {
+                let key = warehouse_key(objective.space(), digest);
+                if let Err(e) =
+                    wh.append(&key, objective.space(), &objective.records()[taken..])
+                {
+                    eprintln!("[warehouse] append failed (non-fatal): {e:#}");
                 }
             }
             let due = opts.reprune_every.is_some_and(|every| rounds_since >= every.max(1));
@@ -1034,7 +1152,7 @@ impl<'a> Leader<'a> {
         let mut records = prior;
         records.extend(objective.records()[taken..].iter().cloned());
         let farm = objective.health();
-        Ok((history, records, rebuilt, farm))
+        Ok((history, records, rebuilt, farm, warm_report))
     }
 
     /// Stage 4: final training of the winner + report assembly. Works from
@@ -1049,7 +1167,8 @@ impl<'a> Leader<'a> {
     ) -> Result<SearchReport> {
         let sess = self.session;
         let cfg = &self.cfg;
-        let SearchOutcome { build, history, records, repruned, search_secs, farm } = search;
+        let SearchOutcome { build, history, records, repruned, search_secs, farm, warm_start } =
+            search;
         // `--reprune-every` superseded the stage-2 pruning mid-session: the
         // report's per-layer menu table must describe the build the winner
         // was actually searched on.
@@ -1107,6 +1226,7 @@ impl<'a> Leader<'a> {
             search_secs,
             final_secs,
             farm,
+            warm_start,
         })
     }
 }

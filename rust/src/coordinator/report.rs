@@ -133,6 +133,27 @@ pub fn report_json(
     ])
 }
 
+/// JSON summary of a warm-start projection (the near-miss warehouse path),
+/// for machine-readable report dumps beside [`report_json`].
+pub fn warm_start_json(report: &crate::search::ProjectionReport) -> Json {
+    obj(vec![
+        ("policy", Json::Str(report.policy.name().to_string())),
+        ("kept", Json::Num(report.kept as f64)),
+        ("snapped", Json::Num(report.snapped as f64)),
+        ("dropped", Json::Num(report.dropped as f64)),
+        (
+            "dropped_dims",
+            Json::Arr(report.dropped_dims.iter().map(|d| Json::Str(d.clone())).collect()),
+        ),
+        (
+            "new_dims",
+            Json::Arr(report.new_dims.iter().map(|d| Json::Str(d.clone())).collect()),
+        ),
+        ("old_fingerprint", Json::Str(report.old_fingerprint.clone())),
+        ("new_fingerprint", Json::Str(report.new_fingerprint.clone())),
+    ])
+}
+
 pub fn save_json(path: &Path, j: &Json) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
@@ -163,6 +184,23 @@ mod tests {
     fn ascii_curves_draws() {
         let s = ascii_curves("conv", &["a", "b"], &[vec![0.0, 0.5, 1.0], vec![0.2, 0.2, 0.4]], 5);
         assert!(s.contains('#') && s.contains('o'));
+    }
+
+    #[test]
+    fn warm_start_json_carries_projection_counts() {
+        use crate::search::{Dim, ProjectPolicy, Space, SpaceProjection};
+        let old = Space::new(vec![Dim::new("bits:a", vec![8.0, 4.0])]);
+        let new = Space::new(vec![Dim::new("bits:a", vec![8.0, 6.0])]);
+        let proj = SpaceProjection::between(&old, &new);
+        let (_, report) = proj.project_trials(&[vec![1]], &new, ProjectPolicy::Nearest);
+        let j = warm_start_json(&report);
+        assert_eq!(j.get("policy").and_then(|v| v.as_str()), Some("nearest"));
+        assert_eq!(j.get("snapped").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("dropped").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(
+            j.get("new_fingerprint").and_then(|v| v.as_str()),
+            Some(new.fingerprint().as_str())
+        );
     }
 
     #[test]

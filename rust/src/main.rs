@@ -133,6 +133,35 @@ fn session_opts_from(args: &Args) -> Result<SessionOpts> {
             Some(r)
         }
     };
+    let warehouse = match args.get("warehouse") {
+        None => {
+            anyhow::ensure!(
+                !args.has_flag("warehouse"),
+                "--warehouse needs a value: the transfer-store directory"
+            );
+            None
+        }
+        Some(s) => Some(std::path::PathBuf::from(s)),
+    };
+    let warm_start = match args.get("warm-start") {
+        None => {
+            anyhow::ensure!(
+                !args.has_flag("warm-start"),
+                "--warm-start needs a value: 'nearest' or 'strict'"
+            );
+            None
+        }
+        Some(s) => {
+            let policy = sammpq::search::ProjectPolicy::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("--warm-start expects 'nearest' or 'strict', got '{s}'")
+            })?;
+            anyhow::ensure!(
+                warehouse.is_some(),
+                "--warm-start only applies with --warehouse <dir>"
+            );
+            Some(policy)
+        }
+    };
     let registry = match args.get("registry") {
         None => {
             anyhow::ensure!(
@@ -159,6 +188,8 @@ fn session_opts_from(args: &Args) -> Result<SessionOpts> {
         reprune_every,
         keep_workers: args.has_flag("keep-workers"),
         registry,
+        warehouse,
+        warm_start,
         autoscale: args.has_flag("autoscale"),
     })
 }
@@ -220,6 +251,12 @@ fn cmd_search(args: &Args) -> Result<()> {
         t.row(vec![
             "farm heartbeat retirements".into(),
             format!("{}", farm.heartbeat_retired),
+        ]);
+    }
+    if let Some(ws) = &report.warm_start {
+        t.row(vec![
+            "warm-start projection".into(),
+            format!("{} kept / {} snapped / {} dropped", ws.kept, ws.snapped, ws.dropped),
         ]);
     }
     println!("{}", t.render());
@@ -626,6 +663,62 @@ fn cmd_pool(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Operator view of a transfer store (`--warehouse <dir>` on searches):
+/// `sammpq warehouse ls --warehouse <dir>` lists every key with record,
+/// segment, and byte counts; `sammpq warehouse gc --warehouse <dir>
+/// --max-mb <m>` evicts the oldest segment files until the store fits.
+fn cmd_warehouse(args: &Args) -> Result<()> {
+    use sammpq::search::Warehouse;
+    let action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ls");
+    let dir = args
+        .get("warehouse")
+        .or_else(|| args.get("dir"))
+        .ok_or_else(|| anyhow::anyhow!("warehouse {action} needs --warehouse <dir>"))?;
+    let wh = Warehouse::open(std::path::Path::new(dir))?;
+    match action {
+        "ls" => {
+            let sums = wh.summaries()?;
+            let mut t = Table::new(
+                &format!("warehouse {dir}"),
+                &["key", "dims", "records", "segments", "bytes"],
+            );
+            let (mut recs, mut bytes) = (0usize, 0u64);
+            for s in &sums {
+                recs += s.records;
+                bytes += s.bytes;
+                t.row(vec![
+                    s.key.clone(),
+                    format!("{}", s.dims),
+                    format!("{}", s.records),
+                    format!("{}", s.segments),
+                    format!("{}", s.bytes),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("{} keys, {recs} deduplicated records, {bytes} segment bytes",
+                     sums.len());
+        }
+        "gc" => {
+            anyhow::ensure!(
+                args.get("max-mb").is_some(),
+                "warehouse gc needs --max-mb <m>: the segment-byte cap in megabytes"
+            );
+            let max_mb = args.get_f64("max-mb", 0.0);
+            anyhow::ensure!(
+                max_mb.is_finite() && max_mb >= 0.0,
+                "--max-mb must be a non-negative number of megabytes"
+            );
+            let out = wh.gc((max_mb * 1024.0 * 1024.0) as u64)?;
+            println!(
+                "gc: freed {} bytes ({} segments, {} emptied keys removed); {} bytes kept",
+                out.freed_bytes, out.deleted_segments, out.deleted_keys, out.kept_bytes
+            );
+        }
+        other => anyhow::bail!("unknown warehouse action '{other}' (ls|gc)"),
+    }
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     let rt = Runtime::new()?;
     println!("platform: {}", rt.platform());
@@ -663,6 +756,7 @@ fn main() {
         "exp" => cmd_exp(&args),
         "worker" => cmd_worker(&args),
         "pool" => cmd_pool(&args),
+        "warehouse" => cmd_warehouse(&args),
         "info" => cmd_info(),
         _ => {
             println!(
@@ -704,6 +798,12 @@ fn main() {
                  \x20             --autoscale         act on the supervisor policy (drain\n\
                  \x20             idle workers under sustained low load); without it the\n\
                  \x20             per-round health log + pressure events still appear\n\
+                 \x20             --warehouse <dir>   cross-session transfer store: warm-\n\
+                 \x20             start from prior paid trials (exact space hits also\n\
+                 \x20             serve already-paid configs from the store, not the\n\
+                 \x20             farm), and pay this run's fresh records forward\n\
+                 \x20             --warm-start nearest|strict  projection policy for a\n\
+                 \x20             near-miss warehouse hit (default nearest)\n\
                  \x20 hessian     sensitivity report (--model, --k, --samples)\n\
                  \x20 hw          hardware model report (--model, --bits, --mult)\n\
                  \x20 convergence Fig. 3a/3b tabular study (no artifacts needed)\n\
@@ -727,6 +827,9 @@ fn main() {
                  \x20             --straggler-factor <f> --pipeline-depth <d> --n <evals>\n\
                  \x20             --registry <h:p>    adopt `worker --join`ers mid-run\n\
                  \x20             --heartbeat-secs <s> --audit-fraction <f>  health layer\n\
+                 \x20 warehouse   inspect a transfer store: `ls --warehouse <dir>` lists\n\
+                 \x20             keys/records/bytes; `gc --warehouse <dir> --max-mb <m>`\n\
+                 \x20             evicts the oldest segments until the store fits\n\
                  \x20 info        list compiled artifacts"
             );
             Ok(())

@@ -342,6 +342,76 @@ impl BatchSearcher {
             rounds: Vec::new(),
         })
     }
+
+    /// Open a run whose surrogates are PRE-SEEDED with transferred history
+    /// (the `--warehouse` warm start). The seeds feed the proposer exactly
+    /// as restored trials would, but — unlike `resume` — they never enter
+    /// the run's own history and do not count toward `budget`: the session
+    /// still runs its full budget of evaluations, served from the eval
+    /// cache wherever a seed already paid for them. The random-startup
+    /// phase shrinks by the seed count (the seeds ARE startup evidence),
+    /// and the RNG is the fresh-start stream, so a zero-seed warm start is
+    /// bit-identical to a cold [`start`](Self::start). Seeds must be valid
+    /// for `space` — cross-space warehouse histories are projected before
+    /// they get here (`search::warehouse`).
+    pub fn start_warm(
+        &self,
+        space: Space,
+        budget: usize,
+        seed_configs: Vec<Config>,
+        seed_values: Vec<f64>,
+    ) -> anyhow::Result<BatchRun> {
+        anyhow::ensure!(
+            seed_configs.len() == seed_values.len(),
+            "warm start: {} seed configs for {} values",
+            seed_configs.len(),
+            seed_values.len()
+        );
+        if seed_configs.is_empty() {
+            return self.start(space, budget, None);
+        }
+        for c in &seed_configs {
+            anyhow::ensure!(
+                space.validate(c),
+                "warm start: seed config {c:?} is invalid for this space — project \
+                 the stored history onto it first (--warm-start nearest|strict)"
+            );
+        }
+        let (seed, n_startup) = self.seed_and_startup();
+        let name = self.algo_name();
+        let n_seeds = seed_configs.len();
+        let cost = CostModel::for_space(&space);
+        let state = match self.algo {
+            BatchAlgo::KmeansTpe(p) => ProposerState::Km(KmeansTpeState::restore(
+                p,
+                space.clone(),
+                seed_configs,
+                seed_values,
+                0,
+                Vec::new(),
+            )),
+            BatchAlgo::Tpe(p) => ProposerState::Tpe(TpeState::restore(
+                p,
+                space.clone(),
+                seed_configs,
+                seed_values,
+            )),
+        };
+        Ok(BatchRun {
+            algo_name: name,
+            policy: self.q,
+            space,
+            state,
+            rng: Rng::new(seed ^ 0xBA7C4),
+            hist: History::new(name),
+            ctl: QController::new(),
+            cost,
+            q: None,
+            n0: n_startup.saturating_sub(n_seeds).min(budget),
+            budget,
+            rounds: Vec::new(),
+        })
+    }
 }
 
 /// An in-flight batched search (see [`BatchSearcher::start`]).
@@ -602,21 +672,79 @@ impl<O: Objective + Send> Objective for ParallelObjective<O> {
 // Config-keyed evaluation cache
 // ---------------------------------------------------------------------------
 
+/// Default capacity of the config-keyed eval caches (this wrapper and the
+/// record-level cache inside `DnnObjective`). Generous against any single
+/// session's budget — a 40-eval search never evicts — but a hard ceiling
+/// for the long-lived, warehouse-seeded leaders that used to grow these
+/// maps without bound.
+pub const EVAL_CACHE_CAP: usize = 8192;
+
 /// Memoizes an inner objective by exact config. Duplicate proposals — common
 /// once TPE concentrates on a small pruned space, and likelier still in
 /// batched rounds — skip the inner evaluation entirely. The DNN objective
 /// additionally maintains its own record-level cache (it logs full
-/// `EvalRecord`s); this wrapper serves every other objective.
+/// `EvalRecord`s); this wrapper serves every other objective. The cache is
+/// bounded ([`EVAL_CACHE_CAP`] by default) with deterministic FIFO
+/// eviction in insertion order — no clocks, so replays evict identically.
 pub struct CachedObjective<O: Objective> {
     pub inner: O,
     cache: HashMap<Config, f64>,
+    /// Insertion order, for FIFO eviction once `cap` is reached.
+    order: std::collections::VecDeque<Config>,
+    cap: usize,
     pub hits: usize,
     pub misses: usize,
+    pub evictions: usize,
 }
 
 impl<O: Objective> CachedObjective<O> {
     pub fn new(inner: O) -> CachedObjective<O> {
-        CachedObjective { inner, cache: HashMap::new(), hits: 0, misses: 0 }
+        CachedObjective::with_capacity(inner, EVAL_CACHE_CAP)
+    }
+
+    /// Cache bounded to `cap` entries (clamped to at least 1).
+    pub fn with_capacity(inner: O, cap: usize) -> CachedObjective<O> {
+        CachedObjective {
+            inner,
+            cache: HashMap::new(),
+            order: std::collections::VecDeque::new(),
+            cap: cap.max(1),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Insert a finite value, evicting the oldest entry at capacity.
+    fn remember(&mut self, config: &Config, v: f64) {
+        if !v.is_finite() || self.cache.contains_key(config) {
+            return;
+        }
+        if self.cache.len() >= self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.cache.remove(&old);
+                self.evictions += 1;
+            }
+        }
+        self.cache.insert(config.clone(), v);
+        self.order.push_back(config.clone());
+    }
+
+    /// Pre-populate from already-paid (config, value) pairs — the
+    /// warehouse exact-hit path. Non-finite values and configs invalid for
+    /// the inner space are skipped; returns how many entries went in.
+    pub fn seed(&mut self, entries: &[(Config, f64)]) -> usize {
+        let mut added = 0;
+        for (c, v) in entries {
+            if v.is_finite()
+                && self.inner.space().validate(c)
+                && !self.cache.contains_key(c)
+            {
+                self.remember(c, *v);
+                added += 1;
+            }
+        }
+        added
     }
 }
 
@@ -635,9 +763,7 @@ impl<O: Objective> Objective for CachedObjective<O> {
         // Failure sentinels (NaN from a crashed replica, -inf from a remote
         // worker hiccup) are served this once but never pinned into the
         // cache — mirroring DnnObjective's refusal to cache failed evals.
-        if v.is_finite() {
-            self.cache.insert(config.clone(), v);
-        }
+        self.remember(config, v);
         v
     }
 
@@ -679,9 +805,7 @@ impl<O: Objective> Objective for CachedObjective<O> {
             debug_assert_eq!(values.len(), miss_cfg.len(), "eval_batch length mismatch");
             for (c, &v) in miss_cfg.iter().zip(&values) {
                 // As in eval(): non-finite results are not cached.
-                if v.is_finite() {
-                    self.cache.insert(c.clone(), v);
-                }
+                self.remember(c, v);
             }
             for i in pending {
                 let at = miss_at[&configs[i]];
@@ -884,6 +1008,106 @@ mod tests {
         assert_eq!(cached.eval_batch(&[c.clone()]), vec![f64::NEG_INFINITY]);
         assert_eq!(cached.eval_batch(&[c.clone()]), vec![1.0]);
         assert_eq!(cached.inner.evals, 2);
+    }
+
+    #[test]
+    fn cache_is_bounded_with_fifo_eviction_and_seedable() {
+        let mut cached = CachedObjective::with_capacity(Sep::new(2), 2);
+        let (a, b, c): (Config, Config, Config) = (vec![0, 0], vec![1, 1], vec![2, 2]);
+        cached.eval(&a);
+        cached.eval(&b);
+        assert_eq!(cached.evictions, 0);
+        // Third insert evicts the OLDEST entry (a), deterministically.
+        cached.eval(&c);
+        assert_eq!(cached.evictions, 1);
+        assert_eq!(cached.inner.evals, 3);
+        cached.eval(&a); // evicted -> a real re-evaluation
+        assert_eq!(cached.inner.evals, 4);
+        cached.eval(&c); // still resident
+        assert_eq!(cached.inner.evals, 4);
+
+        // Warehouse-style seeding: finite + valid entries only, and a
+        // seeded config is served without ever touching the inner.
+        let mut seeded = CachedObjective::with_capacity(Sep::new(2), 8);
+        let added = seeded.seed(&[
+            (vec![0, 0], -0.5),
+            (vec![1, 1], f64::NEG_INFINITY), // failure sentinel: skipped
+            (vec![9, 9], 1.0),               // invalid config: skipped
+            (vec![0, 0], -0.7),              // already seeded: skipped
+        ]);
+        assert_eq!(added, 1);
+        assert_eq!(seeded.eval(&vec![0, 0]), -0.5);
+        assert_eq!(seeded.inner.evals, 0, "seeded config must not re-pay");
+        assert_eq!(seeded.hits, 1);
+    }
+
+    #[test]
+    fn warm_start_seeds_surrogates_without_charging_budget() {
+        let budget = 30;
+        let p = KmeansTpeParams { n_startup: 8, seed: 3, ..Default::default() };
+        let searcher = BatchSearcher::kmeans_tpe(p, 4);
+        let space = Sep::new(5).space.clone();
+
+        // Zero seeds: bit-identical to a cold start.
+        let cold = {
+            let mut run = searcher.start(space.clone(), budget, None).unwrap();
+            let mut obj = Sep::new(5);
+            while !run.done() {
+                run.step(&mut obj);
+            }
+            run.finish().0
+        };
+        let zero = {
+            let mut run =
+                searcher.start_warm(space.clone(), budget, Vec::new(), Vec::new()).unwrap();
+            let mut obj = Sep::new(5);
+            while !run.done() {
+                run.step(&mut obj);
+            }
+            run.finish().0
+        };
+        assert_eq!(cold.values(), zero.values());
+        for (a, b) in cold.trials.iter().zip(&zero.trials) {
+            assert_eq!(a.config, b.config);
+        }
+
+        // Seeded: a prior run's trials feed the surrogates, the history
+        // starts EMPTY (seeds are not charged to the budget), and with
+        // seeds >= n_startup the random-startup phase is skipped entirely.
+        let seeds: Vec<(Config, f64)> =
+            cold.trials.iter().map(|t| (t.config.clone(), t.value)).collect();
+        let (cfgs, vals): (Vec<Config>, Vec<f64>) = seeds.into_iter().unzip();
+        let mut run = searcher.start_warm(space.clone(), budget, cfgs, vals).unwrap();
+        assert_eq!(run.history().len(), 0, "seeds must not enter the history");
+        let mut obj = Sep::new(5);
+        let first = run.step(&mut obj).unwrap();
+        assert!(!first.startup, "seeded run must start model-based");
+        while !run.done() {
+            run.step(&mut obj);
+        }
+        let hist = run.finish().0;
+        assert_eq!(hist.len(), budget, "warm run still pays its full budget");
+        for t in &hist.trials {
+            assert!(space.validate(&t.config));
+        }
+
+        // Both TPE flavors reject malformed seeds loudly.
+        let err = searcher
+            .start_warm(space.clone(), budget, vec![vec![0, 0, 0, 0, 0]], Vec::new())
+            .unwrap_err();
+        assert!(err.to_string().contains("seed configs"), "{err}");
+        let err = searcher
+            .start_warm(space.clone(), budget, vec![vec![99, 0, 0, 0, 0]], vec![0.5])
+            .unwrap_err();
+        assert!(err.to_string().contains("invalid"), "{err}");
+        let tpe = BatchSearcher::tpe(
+            TpeParams { n_startup: 8, seed: 3, ..Default::default() },
+            4,
+        );
+        let err = tpe
+            .start_warm(space, budget, vec![vec![99, 0, 0, 0, 0]], vec![0.5])
+            .unwrap_err();
+        assert!(err.to_string().contains("invalid"), "{err}");
     }
 
     #[test]

@@ -13,11 +13,14 @@ pub mod checkpoint;
 pub mod costmodel;
 pub mod project;
 pub mod synthetic;
+pub mod warehouse;
 
 pub use batch::{eval_batch_parallel, BatchAlgo, BatchRun, BatchSearcher, CachedObjective,
-                ParallelObjective, QPolicy, RoundStat};
+                ParallelObjective, QPolicy, RoundStat, EVAL_CACHE_CAP};
 pub use checkpoint::{RngState, SearchCheckpoint};
 pub use project::{ProjectPolicy, ProjectionOutcome, ProjectionReport, SpaceProjection};
+pub use warehouse::{cfg_digest, warehouse_key, GcOutcome, KeySummary, StoredHistory,
+                    WarmStart, Warehouse, WAREHOUSE_MANIFEST};
 pub use costmodel::CostModel;
 pub use synthetic::SyntheticObjective;
 pub use history::{History, Trial};

@@ -248,6 +248,15 @@ impl SpaceProjection {
         }
     }
 
+    /// How many NEW dims found a same-name source in the old space — the
+    /// REAL-evidence overlap. The warehouse warm-start ranks candidate
+    /// histories by this and refuses to seed when it is zero: projecting
+    /// across disjoint spaces is pure prior fill, i.e. noise dressed up
+    /// as evidence.
+    pub fn matched_dims(&self) -> usize {
+        self.sources.iter().filter(|s| s.is_some()).count()
+    }
+
     /// Project one config. `Some((config, inexact))` carries the new
     /// config and whether any coordinate was snapped or prior-filled;
     /// `None` means the trial is dropped under the strict policy. `fill`
@@ -510,6 +519,8 @@ mod tests {
             Dim::new("bits:fresh", vec![4.0, 3.0, 2.0]),
         ]);
         let proj = SpaceProjection::between(&old, &new);
+        assert_eq!(proj.matched_dims(), 1, "only bits:kept is shared");
+        assert_eq!(SpaceProjection::between(&old, &old).matched_dims(), 2);
         let configs = vec![vec![0, 2], vec![1, 0], vec![1, 1]];
         let (map1, rep) = proj.project_trials(&configs, &new, ProjectPolicy::Strict);
         // Marginalizing an old dim never drops trials; the prior fill makes

@@ -1,0 +1,710 @@
+//! Cross-session transfer store: an on-disk [`EvalRecord`] warehouse that
+//! warm-starts searches from the fleet's history (`--warehouse <dir>`).
+//!
+//! At production scale most searches are near-duplicates of searches some
+//! leader has already paid for, yet every session starts its surrogates
+//! cold and re-evaluates configs whose metrics sit in a checkpoint nobody
+//! reads. The warehouse closes that loop:
+//!
+//! * every completed search APPENDS its fresh records under a key derived
+//!   from the space it searched ([`Space::fingerprint`]) plus a digest of
+//!   the objective + hardware config (same space, different J-weights or
+//!   target device must never cross-pollinate);
+//! * on session start the leader LOOKS UP the warehouse — an
+//!   exact-fingerprint hit seeds the surrogates resume-style AND
+//!   pre-populates the config-keyed eval cache, so already-paid configs
+//!   are served from disk instead of the farm; a near miss (overlapping
+//!   dim names / choice values) is remapped through
+//!   [`SpaceProjection`] with the [`ProjectionReport`] logged, seeding
+//!   surrogates only (projected configs are approximate evidence, never
+//!   cache-served as exact).
+//!
+//! On-disk layout, under the warehouse root:
+//!
+//! ```text
+//! manifest.json                      advisory index (atomic tmp+rename;
+//!                                    readers always fall back to a scan)
+//! <fingerprint>-<digest>/            one directory per key
+//!   space.json                       the space the records index into
+//!   seg-<session>.jsonl              one append-only segment PER SESSION
+//! ```
+//!
+//! Multi-leader safety comes from segment ownership: a session only ever
+//! rewrites its OWN segment (read-modify-write, atomic tmp+rename), so
+//! concurrent leaders on a shared warehouse never clobber each other.
+//! Readers merge all segments, tolerate a torn trailing line exactly like
+//! `CheckpointStore` tolerates a torn checkpoint, and deduplicate on
+//! (config, value bit-pattern). `sammpq warehouse ls|gc` gives operators
+//! inspection and size-capped retention (oldest segments evicted first).
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::evaluator::EvalRecord;
+use crate::util::hash::Fnv1a;
+use crate::util::json::{obj, Json};
+
+use super::project::{ProjectPolicy, ProjectionReport, SpaceProjection};
+use super::space::{Config, Space};
+
+/// File name of the warehouse's advisory index.
+pub const WAREHOUSE_MANIFEST: &str = "manifest.json";
+
+/// Digest a set of config strings (objective knobs, hardware model) into
+/// the 16-hex suffix of a warehouse key. Order-sensitive and
+/// length-prefix-framed, so `["ab", "c"]` and `["a", "bc"]` differ.
+pub fn cfg_digest(parts: &[&str]) -> String {
+    let mut h = Fnv1a::new();
+    for p in parts {
+        h.write_u64(p.len() as u64);
+        h.write(p.as_bytes());
+    }
+    h.hex()
+}
+
+/// The warehouse key a (space, objective/hw digest) pair files under.
+pub fn warehouse_key(space: &Space, digest: &str) -> String {
+    format!("{}-{digest}", space.fingerprint())
+}
+
+/// Split a key back into (space fingerprint, cfg digest). Returns `None`
+/// for directory names that are not warehouse keys.
+fn split_key(key: &str) -> Option<(&str, &str)> {
+    let (fp, digest) = key.split_at(key.find('-')?);
+    let digest = &digest[1..];
+    let hex16 = |s: &str| s.len() == 16 && s.bytes().all(|b| b.is_ascii_hexdigit());
+    (hex16(fp) && hex16(digest)).then_some((fp, digest))
+}
+
+/// Everything stored under one key: the space the configs index into and
+/// the merged, deduplicated record set across all segments.
+#[derive(Debug, Clone)]
+pub struct StoredHistory {
+    pub space: Space,
+    pub records: Vec<EvalRecord>,
+}
+
+/// One key's `warehouse ls` row.
+#[derive(Debug, Clone)]
+pub struct KeySummary {
+    pub key: String,
+    pub dims: usize,
+    /// Deduplicated record count across segments.
+    pub records: usize,
+    pub segments: usize,
+    /// Total segment bytes (the quantity `gc` caps).
+    pub bytes: u64,
+}
+
+/// What a `warehouse gc` pass did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GcOutcome {
+    pub deleted_segments: usize,
+    /// Keys whose last segment was evicted (their directory is removed).
+    pub deleted_keys: usize,
+    pub freed_bytes: u64,
+    pub kept_bytes: u64,
+}
+
+/// A warm-start hit, ready to feed `BatchSearcher::start_warm`.
+#[derive(Debug, Clone)]
+pub enum WarmStart {
+    /// Exact fingerprint + digest match: records replay verbatim — seed
+    /// the surrogates AND the config-keyed eval cache.
+    Exact { key: String, records: Vec<EvalRecord> },
+    /// Overlapping space under the same digest, remapped through
+    /// [`SpaceProjection`]: seed the surrogates ONLY (projected configs
+    /// are approximate evidence). `configs` is empty when the candidate
+    /// shared zero real dims — the report is still returned so the
+    /// degenerate case is visible, but nothing is seeded.
+    Projected {
+        key: String,
+        configs: Vec<Config>,
+        values: Vec<f64>,
+        report: ProjectionReport,
+    },
+}
+
+impl WarmStart {
+    /// Trials this hit actually seeds into the surrogates.
+    pub fn seeded(&self) -> usize {
+        match self {
+            WarmStart::Exact { records, .. } => records.len(),
+            WarmStart::Projected { configs, .. } => configs.len(),
+        }
+    }
+}
+
+/// Handle on a warehouse directory. Cheap to open; every operation goes
+/// back to disk, so concurrent leaders coordinate through the filesystem
+/// alone (rename atomicity), never through shared in-process state.
+pub struct Warehouse {
+    dir: PathBuf,
+    /// THIS session's segment file name — the only file it rewrites.
+    segment: String,
+}
+
+impl Warehouse {
+    /// Open (creating if needed) with a caller-chosen session tag. Tags
+    /// are sanitized to `[A-Za-z0-9._-]`, and two sessions with the same
+    /// tag share a segment — fine for a deliberate re-run (dedup absorbs
+    /// replays), wrong for concurrent leaders, so production callers use
+    /// [`open`](Self::open).
+    pub fn open_tagged(dir: &Path, tag: &str) -> Result<Warehouse> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create warehouse {}", dir.display()))?;
+        let tag: String = tag
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || "._-".contains(c) { c } else { '_' })
+            .collect();
+        anyhow::ensure!(!tag.is_empty(), "empty warehouse session tag");
+        Ok(Warehouse { dir: dir.to_path_buf(), segment: format!("seg-{tag}.jsonl") })
+    }
+
+    /// Open with a process-unique session tag (pid + wall-clock nanos):
+    /// concurrent leaders on one warehouse land in distinct segments.
+    pub fn open(dir: &Path) -> Result<Warehouse> {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        Warehouse::open_tagged(dir, &format!("{}-{nanos:x}", std::process::id()))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn key_dir(&self, key: &str) -> PathBuf {
+        self.dir.join(key)
+    }
+
+    /// Keys present on disk (directory scan, sorted — the manifest is
+    /// advisory and never trusted for reads).
+    pub fn keys(&self) -> Result<Vec<String>> {
+        let mut keys = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("list warehouse {}", self.dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if entry.path().is_dir() && split_key(&name).is_some() {
+                keys.push(name);
+            }
+        }
+        keys.sort();
+        Ok(keys)
+    }
+
+    /// Append `records` under `key`, writing `space.json` on first touch.
+    /// Only finite-valued records are stored (failure sentinels are cheap
+    /// to rediscover and must never be served as paid evidence), and
+    /// records already present in THIS session's segment are skipped —
+    /// (config, value-bits) dedup makes round-by-round appends idempotent.
+    /// Returns how many records were actually added.
+    pub fn append(&self, key: &str, space: &Space, records: &[EvalRecord]) -> Result<usize> {
+        anyhow::ensure!(
+            key.starts_with(&space.fingerprint()),
+            "warehouse key '{key}' does not match the space fingerprint {}",
+            space.fingerprint()
+        );
+        let kd = self.key_dir(key);
+        std::fs::create_dir_all(&kd)?;
+        let space_path = kd.join("space.json");
+        if !space_path.exists() {
+            let tmp = kd.join("space.tmp");
+            std::fs::write(&tmp, space.to_json().to_string_pretty() + "\n")?;
+            std::fs::rename(&tmp, &space_path)
+                .with_context(|| format!("commit {}", space_path.display()))?;
+        }
+        let seg = kd.join(&self.segment);
+        let mut kept = read_segment(&seg);
+        let mut seen: HashSet<(Config, u64)> =
+            kept.iter().map(|r| (r.config.clone(), r.value.to_bits())).collect();
+        let before = kept.len();
+        for r in records {
+            if !r.value.is_finite() || !space.validate(&r.config) {
+                continue;
+            }
+            if seen.insert((r.config.clone(), r.value.to_bits())) {
+                kept.push(r.clone());
+            }
+        }
+        let added = kept.len() - before;
+        if added == 0 {
+            return Ok(0);
+        }
+        let mut text = String::new();
+        for r in &kept {
+            text.push_str(&r.to_json().to_string_compact());
+            text.push('\n');
+        }
+        let tmp = seg.with_extension("tmp");
+        std::fs::write(&tmp, text)?;
+        std::fs::rename(&tmp, &seg).with_context(|| format!("commit {}", seg.display()))?;
+        self.write_manifest()?;
+        Ok(added)
+    }
+
+    /// Merge every segment under `key`: records in segment-name order,
+    /// deduplicated on (config, value-bits), torn tails tolerated. `None`
+    /// when the key (or its `space.json`) does not exist.
+    pub fn load(&self, key: &str) -> Result<Option<StoredHistory>> {
+        let kd = self.key_dir(key);
+        let space_path = kd.join("space.json");
+        if !space_path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&space_path)
+            .with_context(|| format!("read {}", space_path.display()))?;
+        let j = Json::parse(text.trim())
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", space_path.display()))?;
+        let space = Space::from_json(&j)?;
+        let mut records = Vec::new();
+        let mut seen: HashSet<(Config, u64)> = HashSet::new();
+        for seg in segments_of(&kd)? {
+            for r in read_segment(&kd.join(&seg)) {
+                if seen.insert((r.config.clone(), r.value.to_bits())) {
+                    records.push(r);
+                }
+            }
+        }
+        Ok(Some(StoredHistory { space, records }))
+    }
+
+    /// Per-key `ls` rows, sorted by key.
+    pub fn summaries(&self) -> Result<Vec<KeySummary>> {
+        let mut out = Vec::new();
+        for key in self.keys()? {
+            let kd = self.key_dir(&key);
+            let segs = segments_of(&kd)?;
+            let bytes = segs
+                .iter()
+                .filter_map(|s| std::fs::metadata(kd.join(s)).ok())
+                .map(|m| m.len())
+                .sum();
+            let (dims, records) = match self.load(&key)? {
+                Some(st) => (st.space.num_dims(), st.records.len()),
+                None => (0, 0),
+            };
+            out.push(KeySummary { key, dims, records, segments: segs.len(), bytes });
+        }
+        Ok(out)
+    }
+
+    /// Size-capped retention: evict whole segments, oldest mtime first
+    /// (ties break by key then segment name, so a replay is
+    /// deterministic), until total segment bytes fit `max_bytes`. A key
+    /// whose last segment goes loses its directory too.
+    pub fn gc(&self, max_bytes: u64) -> Result<GcOutcome> {
+        let mut segs: Vec<(std::time::SystemTime, String, String, u64)> = Vec::new();
+        for key in self.keys()? {
+            let kd = self.key_dir(&key);
+            for name in segments_of(&kd)? {
+                let meta = std::fs::metadata(kd.join(&name))?;
+                let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+                segs.push((mtime, key.clone(), name, meta.len()));
+            }
+        }
+        segs.sort_by(|a, b| (a.0, &a.1, &a.2).cmp(&(b.0, &b.1, &b.2)));
+        let mut total: u64 = segs.iter().map(|s| s.3).sum();
+        let mut out = GcOutcome::default();
+        let mut emptied: HashSet<String> = HashSet::new();
+        for (_, key, name, bytes) in &segs {
+            if total <= max_bytes {
+                break;
+            }
+            std::fs::remove_file(self.key_dir(key).join(name))?;
+            total -= bytes;
+            out.deleted_segments += 1;
+            out.freed_bytes += bytes;
+            emptied.insert(key.clone());
+        }
+        for key in emptied {
+            let kd = self.key_dir(&key);
+            if segments_of(&kd)?.is_empty() {
+                let _ = std::fs::remove_file(kd.join("space.json"));
+                if std::fs::remove_dir(&kd).is_ok() {
+                    out.deleted_keys += 1;
+                }
+            }
+        }
+        out.kept_bytes = total;
+        self.write_manifest()?;
+        Ok(out)
+    }
+
+    /// Find the best warm-start for `space` under `digest`:
+    ///
+    /// 1. the exact key `fingerprint-digest`, replayed verbatim;
+    /// 2. else, among same-digest keys, the stored space sharing the MOST
+    ///    dim names with `space` (ties: more records, then lower key) is
+    ///    projected through [`SpaceProjection::between`] +
+    ///    `project_trials` under `policy`;
+    /// 3. zero-overlap candidates seed NOTHING — the projection would be
+    ///    pure prior fill, i.e. noise dressed as evidence — but the
+    ///    report still comes back so the degenerate case is logged.
+    ///
+    /// `Ok(None)` when the warehouse holds nothing usable for this digest.
+    pub fn lookup(
+        &self,
+        space: &Space,
+        digest: &str,
+        policy: ProjectPolicy,
+    ) -> Result<Option<WarmStart>> {
+        let exact_key = warehouse_key(space, digest);
+        if let Some(st) = self.load(&exact_key)? {
+            let fp = space.fingerprint();
+            anyhow::ensure!(
+                st.space.fingerprint() == fp,
+                "warehouse key {exact_key} stores fingerprint {} (corrupt space.json?)",
+                st.space.fingerprint()
+            );
+            let records: Vec<EvalRecord> = st
+                .records
+                .into_iter()
+                .filter(|r| r.value.is_finite() && space.validate(&r.config))
+                .collect();
+            if !records.is_empty() {
+                return Ok(Some(WarmStart::Exact { key: exact_key, records }));
+            }
+        }
+        // Near miss: best same-digest candidate by real dim overlap.
+        let mut best: Option<(usize, usize, String, StoredHistory)> = None;
+        for key in self.keys()? {
+            let Some((fp, d)) = split_key(&key) else { continue };
+            if d != digest || fp == space.fingerprint() {
+                continue;
+            }
+            let Some(st) = self.load(&key)? else { continue };
+            if st.records.is_empty() {
+                continue;
+            }
+            let matched = SpaceProjection::between(&st.space, space).matched_dims();
+            let better = match &best {
+                None => true,
+                Some((bm, bn, bk, _)) => {
+                    (matched, st.records.len(), std::cmp::Reverse(&key))
+                        > (*bm, *bn, std::cmp::Reverse(bk))
+                }
+            };
+            if better {
+                best = Some((matched, st.records.len(), key, st));
+            }
+        }
+        let Some((matched, _, key, st)) = best else {
+            return Ok(None);
+        };
+        let proj = SpaceProjection::between(&st.space, space);
+        let stored: Vec<Config> = st.records.iter().map(|r| r.config.clone()).collect();
+        let (map, report) = proj.project_trials(&stored, space, policy);
+        let mut configs = Vec::new();
+        let mut values = Vec::new();
+        if matched > 0 {
+            for (m, r) in map.iter().zip(&st.records) {
+                if let Some(c) = m {
+                    if r.value.is_finite() && space.validate(c) {
+                        configs.push(c.clone());
+                        values.push(r.value);
+                    }
+                }
+            }
+        }
+        Ok(Some(WarmStart::Projected { key, configs, values, report }))
+    }
+
+    /// Rewrite the advisory manifest from a full scan (atomic tmp+rename).
+    fn write_manifest(&self) -> Result<()> {
+        let mut keys = Vec::new();
+        for s in self.summaries()? {
+            keys.push((
+                s.key.clone(),
+                obj(vec![
+                    ("dims", Json::Num(s.dims as f64)),
+                    ("records", Json::Num(s.records as f64)),
+                    ("segments", Json::Num(s.segments as f64)),
+                    ("bytes", Json::Num(s.bytes as f64)),
+                ]),
+            ));
+        }
+        let manifest = obj(vec![
+            ("version", Json::Num(1.0)),
+            (
+                "keys",
+                Json::Obj(keys.into_iter().collect()),
+            ),
+        ]);
+        let tmp = self.dir.join("manifest.tmp");
+        std::fs::write(&tmp, manifest.to_string_pretty() + "\n")?;
+        std::fs::rename(&tmp, self.dir.join(WAREHOUSE_MANIFEST))
+            .with_context(|| format!("commit manifest in {}", self.dir.display()))?;
+        Ok(())
+    }
+}
+
+/// Segment file names under a key directory, sorted (deterministic merge
+/// order).
+fn segments_of(kd: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for entry in
+        std::fs::read_dir(kd).with_context(|| format!("list {}", kd.display()))?
+    {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        if name.starts_with("seg-") && name.ends_with(".jsonl") {
+            names.push(name);
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Parse a segment, tolerating a torn tail: a trailing line that fails to
+/// parse is the crash-mid-append case and is skipped silently; garbage
+/// EARLIER in the file is unexpected and warned about, but never fatal —
+/// a damaged warehouse degrades to fewer warm-start seeds, not a dead
+/// leader. A missing file is an empty segment.
+fn read_segment(path: &Path) -> Vec<EvalRecord> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    let lines: Vec<&str> = text.lines().collect();
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = Json::parse(line)
+            .ok()
+            .and_then(|j| EvalRecord::from_json(&j).ok());
+        match rec {
+            Some(r) => out.push(r),
+            None if i + 1 == lines.len() => {} // torn tail
+            None => eprintln!(
+                "[warehouse] {}: skipping unparseable line {}",
+                path.display(),
+                i + 1
+            ),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::space::Dim;
+
+    fn temp_warehouse(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("sammpq_wh_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn space_ab() -> Space {
+        Space::new(vec![
+            Dim::new("bits:a", vec![8.0, 6.0, 4.0]),
+            Dim::new("bits:b", vec![6.0, 4.0]),
+        ])
+    }
+
+    fn rec(config: Config, value: f64) -> EvalRecord {
+        EvalRecord::value_only(config, value)
+    }
+
+    #[test]
+    fn append_load_roundtrip_dedup_and_manifest() {
+        let dir = temp_warehouse("rt");
+        let wh = Warehouse::open_tagged(&dir, "s1").unwrap();
+        let space = space_ab();
+        let key = warehouse_key(&space, &cfg_digest(&["obj", "hw"]));
+        let records = vec![
+            rec(vec![0, 0], 0.5),
+            rec(vec![1, 1], 0.7),
+            rec(vec![0, 0], 0.5),              // duplicate (config, value)
+            rec(vec![0, 0], 0.6),              // same config, NEW value: kept
+            rec(vec![2, 1], f64::NEG_INFINITY), // failure sentinel: skipped
+            rec(vec![9, 9], 0.9),              // invalid for the space: skipped
+        ];
+        assert_eq!(wh.append(&key, &space, &records).unwrap(), 3);
+        // Idempotent: a replayed round adds nothing.
+        assert_eq!(wh.append(&key, &space, &records).unwrap(), 0);
+        let st = wh.load(&key).unwrap().unwrap();
+        assert_eq!(st.space.fingerprint(), space.fingerprint());
+        assert_eq!(st.records.len(), 3);
+        assert_eq!(st.records[0], records[0]);
+        // Manifest exists and names the key; readers never require it.
+        let manifest = Json::parse(
+            std::fs::read_to_string(dir.join(WAREHOUSE_MANIFEST)).unwrap().trim(),
+        )
+        .unwrap();
+        assert!(manifest.get("keys").and_then(|k| k.get(&key)).is_some());
+        assert_eq!(wh.summaries().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segments_merge_across_sessions_and_tolerate_torn_tails() {
+        let dir = temp_warehouse("seg");
+        let space = space_ab();
+        let key = warehouse_key(&space, &cfg_digest(&["o"]));
+        let a = Warehouse::open_tagged(&dir, "a").unwrap();
+        let b = Warehouse::open_tagged(&dir, "b").unwrap();
+        a.append(&key, &space, &[rec(vec![0, 0], 0.5), rec(vec![1, 0], 0.4)]).unwrap();
+        // Session b re-pays one of a's trials: the merged view dedups it.
+        b.append(&key, &space, &[rec(vec![0, 0], 0.5), rec(vec![2, 1], 0.8)]).unwrap();
+        let st = a.load(&key).unwrap().unwrap();
+        assert_eq!(st.records.len(), 3);
+        // Torn tail: a crash mid-append leaves a half-written last line.
+        let seg = dir.join(&key).join("seg-b.jsonl");
+        let mut text = std::fs::read_to_string(&seg).unwrap();
+        text.push_str("{\"config\": [1, 1], \"val");
+        std::fs::write(&seg, text).unwrap();
+        let st = a.load(&key).unwrap().unwrap();
+        assert_eq!(st.records.len(), 3, "torn tail must not poison the segment");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_evicts_oldest_segments_until_under_cap() {
+        let dir = temp_warehouse("gc");
+        let space = space_ab();
+        let key = warehouse_key(&space, &cfg_digest(&["o"]));
+        let a = Warehouse::open_tagged(&dir, "a").unwrap();
+        let b = Warehouse::open_tagged(&dir, "b").unwrap();
+        a.append(&key, &space, &[rec(vec![0, 0], 0.5)]).unwrap();
+        b.append(&key, &space, &[rec(vec![1, 1], 0.6), rec(vec![2, 0], 0.7)]).unwrap();
+        // Make segment a unambiguously older than b's.
+        let old = std::time::SystemTime::now() - std::time::Duration::from_secs(3600);
+        let _ = filetime_set(&dir.join(&key).join("seg-a.jsonl"), old);
+        let b_bytes = std::fs::metadata(dir.join(&key).join("seg-b.jsonl")).unwrap().len();
+        let out = a.gc(b_bytes).unwrap();
+        assert_eq!(out.deleted_segments, 1);
+        assert!(out.kept_bytes <= b_bytes);
+        assert!(!dir.join(&key).join("seg-a.jsonl").exists());
+        assert_eq!(a.load(&key).unwrap().unwrap().records.len(), 2);
+        // Cap 0 evicts everything, including the emptied key directory.
+        let out = a.gc(0).unwrap();
+        assert_eq!(out.deleted_segments, 1);
+        assert_eq!(out.deleted_keys, 1);
+        assert!(!dir.join(&key).exists());
+        assert!(a.keys().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Best-effort mtime rewind so the gc test's age ordering is explicit
+    /// rather than racing sub-second timestamps.
+    fn filetime_set(path: &Path, to: std::time::SystemTime) -> std::io::Result<()> {
+        let f = std::fs::File::options().append(true).open(path)?;
+        f.set_modified(to)
+    }
+
+    #[test]
+    fn lookup_prefers_exact_hit_and_isolates_digests() {
+        let dir = temp_warehouse("exact");
+        let wh = Warehouse::open_tagged(&dir, "s").unwrap();
+        let space = space_ab();
+        let d1 = cfg_digest(&["obj-v1"]);
+        let d2 = cfg_digest(&["obj-v2"]);
+        wh.append(&warehouse_key(&space, &d1), &space, &[rec(vec![0, 0], 0.5)]).unwrap();
+        match wh.lookup(&space, &d1, ProjectPolicy::Nearest).unwrap() {
+            Some(WarmStart::Exact { records, .. }) => {
+                assert_eq!(records, vec![rec(vec![0, 0], 0.5)]);
+            }
+            other => panic!("expected exact hit, got {other:?}"),
+        }
+        // Same space, different objective digest: no hit at all.
+        assert!(wh.lookup(&space, &d2, ProjectPolicy::Nearest).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lookup_projects_near_miss_and_gates_zero_overlap() {
+        let dir = temp_warehouse("near");
+        let wh = Warehouse::open_tagged(&dir, "s").unwrap();
+        let digest = cfg_digest(&["obj"]);
+        let stored = space_ab();
+        wh.append(
+            &warehouse_key(&stored, &digest),
+            &stored,
+            &[rec(vec![0, 0], 0.5), rec(vec![2, 1], 0.9)],
+        )
+        .unwrap();
+        // Near miss: bits:a pruned to its top half, bits:b unchanged.
+        let near = Space::new(vec![
+            Dim::new("bits:a", vec![8.0, 6.0]),
+            Dim::new("bits:b", vec![6.0, 4.0]),
+        ]);
+        match wh.lookup(&near, &digest, ProjectPolicy::Nearest).unwrap() {
+            Some(WarmStart::Projected { configs, values, report, .. }) => {
+                assert_eq!(report.total(), 2);
+                assert_eq!(report.kept + report.snapped, 2);
+                assert_eq!(configs.len(), 2);
+                assert_eq!(values, vec![0.5, 0.9]);
+                for c in &configs {
+                    assert!(near.validate(c));
+                }
+            }
+            other => panic!("expected projected hit, got {other:?}"),
+        }
+        // Zero shared dims: the report comes back clean (everything is
+        // prior-fill, nothing kept) but NOTHING is seeded.
+        let alien = Space::new(vec![Dim::new("bits:z", vec![8.0, 4.0])]);
+        match wh.lookup(&alien, &digest, ProjectPolicy::Nearest).unwrap() {
+            Some(WarmStart::Projected { configs, values, report, .. }) => {
+                assert_eq!(report.kept, 0);
+                assert_eq!(report.total(), 2);
+                assert!(configs.is_empty(), "zero-overlap must seed nothing");
+                assert!(values.is_empty());
+            }
+            other => panic!("expected gated projected hit, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lookup_picks_the_candidate_with_most_shared_dims() {
+        let dir = temp_warehouse("rank");
+        let wh = Warehouse::open_tagged(&dir, "s").unwrap();
+        let digest = cfg_digest(&["obj"]);
+        let one_dim = Space::new(vec![Dim::new("bits:a", vec![8.0, 6.0, 4.0])]);
+        wh.append(&warehouse_key(&one_dim, &digest), &one_dim, &[rec(vec![0], 0.1)])
+            .unwrap();
+        let two_dim = space_ab();
+        wh.append(
+            &warehouse_key(&two_dim, &digest),
+            &two_dim,
+            &[rec(vec![1, 1], 0.8)],
+        )
+        .unwrap();
+        let target = Space::new(vec![
+            Dim::new("bits:a", vec![8.0, 6.0]),
+            Dim::new("bits:b", vec![6.0, 4.0]),
+            Dim::new("bits:c", vec![4.0, 2.0]),
+        ]);
+        match wh.lookup(&target, &digest, ProjectPolicy::Nearest).unwrap() {
+            Some(WarmStart::Projected { key, values, .. }) => {
+                assert_eq!(key, warehouse_key(&two_dim, &digest));
+                assert_eq!(values, vec![0.8]);
+            }
+            other => panic!("expected projected hit, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_and_digest_are_stable_and_parseable() {
+        let space = space_ab();
+        let d = cfg_digest(&["a", "bc"]);
+        assert_ne!(d, cfg_digest(&["ab", "c"]), "framing must be length-prefixed");
+        assert_eq!(d, cfg_digest(&["a", "bc"]));
+        let key = warehouse_key(&space, &d);
+        let (fp, back) = split_key(&key).unwrap();
+        assert_eq!(fp, space.fingerprint());
+        assert_eq!(back, d);
+        assert!(split_key("not-a-key").is_none());
+        assert!(split_key("manifest.json").is_none());
+    }
+}

@@ -1,0 +1,321 @@
+//! End-to-end cross-session transfer store (`--warehouse`) flow, PJRT-free:
+//! a prior session's paid `EvalRecord`s warm-start a later search — an
+//! exact-fingerprint hit seeds the surrogates AND the config-keyed eval
+//! cache (already-paid configs are served from the store, never the farm),
+//! a near miss is projected through `search::project` first, and a
+//! zero-overlap candidate seeds nothing and degrades to an exactly-cold
+//! search. The `seeded_search_pays_fewer_farm_evals_and_keeps_the_incumbent`
+//! test is the named CI gate for the warm-start path.
+
+use std::time::Duration;
+
+use sammpq::coordinator::EvalRecord;
+use sammpq::search::{cfg_digest, warehouse_key, BatchAlgo, BatchSearcher, CachedObjective,
+                     Config, Dim, KmeansTpeParams, Objective, ProjectPolicy, QPolicy, Space,
+                     SyntheticObjective, WarmStart, Warehouse};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("sammpq_warmstart_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn searcher(seed: u64, n0: usize) -> BatchSearcher {
+    BatchSearcher::new(
+        BatchAlgo::KmeansTpe(KmeansTpeParams { n_startup: n0, seed, ..Default::default() }),
+        QPolicy::Fixed(1),
+    )
+}
+
+/// Every config of a space, in lexicographic index order.
+fn all_configs(space: &Space) -> Vec<Config> {
+    let mut out: Vec<Config> = vec![Vec::new()];
+    for d in &space.dims {
+        let mut next = Vec::new();
+        for c in &out {
+            for i in 0..d.k() {
+                let mut cc = c.clone();
+                cc.push(i);
+                next.push(cc);
+            }
+        }
+        out = next;
+    }
+    out
+}
+
+/// The whole space, pre-paid by the fleet at the synthetic ground truth.
+fn paid_records(space: &Space) -> Vec<EvalRecord> {
+    all_configs(space)
+        .into_iter()
+        .map(|c| {
+            let v = SyntheticObjective::expected_value(&c);
+            EvalRecord::value_only(c, v)
+        })
+        .collect()
+}
+
+#[test]
+fn exact_hit_serves_paid_configs_from_the_store_not_the_farm() {
+    let dir = tmp("exact");
+    let space = SyntheticObjective::new(3, 2, Duration::ZERO).space().clone();
+    let digest = cfg_digest(&["objective-v1", "hw-v1"]);
+    let key = warehouse_key(&space, &digest);
+
+    // A prior fleet session paid for every config in the space.
+    let fleet = Warehouse::open_tagged(&dir, "fleet").unwrap();
+    assert_eq!(fleet.append(&key, &space, &paid_records(&space)).unwrap(), 8);
+
+    // A later leader finds the exact-fingerprint hit.
+    let wh = Warehouse::open_tagged(&dir, "leader-2").unwrap();
+    let hit = wh.lookup(&space, &digest, ProjectPolicy::Nearest).unwrap().expect("hit");
+    let WarmStart::Exact { records: stored, .. } = hit else {
+        panic!("expected an exact hit")
+    };
+    assert_eq!(stored.len(), 8);
+
+    // Exact hits seed the eval cache AND the surrogates; the session then
+    // pays only for fresh proposals — every one of which is pre-paid here.
+    let budget = 6;
+    let mut farm =
+        CachedObjective::new(SyntheticObjective::with_space(space.clone(), Duration::ZERO));
+    let entries: Vec<(Config, f64)> =
+        stored.iter().map(|r| (r.config.clone(), r.value)).collect();
+    assert_eq!(farm.seed(&entries), 8);
+    let (configs, values): (Vec<_>, Vec<_>) = entries.into_iter().unzip();
+    let mut run = searcher(3, 4).start_warm(space.clone(), budget, configs, values).unwrap();
+    let first = run.step(&mut farm).expect("first round");
+    assert!(!first.startup, "8 seeds fill n_startup=4: no random startup rounds remain");
+    while !run.done() {
+        run.step(&mut farm);
+    }
+    let (hist, _) = run.finish();
+
+    // The budget bought `budget` evaluations; the farm served NONE of them,
+    // and every served value is bit-identical to its stored record.
+    assert_eq!(hist.len(), budget);
+    assert_eq!(farm.inner.evals, 0, "warehouse-served configs must never hit the farm");
+    assert_eq!(farm.hits, budget);
+    for t in &hist.trials {
+        let rec = stored
+            .iter()
+            .find(|r| r.config == t.config)
+            .expect("every proposal was a stored config");
+        assert_eq!(t.value.to_bits(), rec.value.to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn near_miss_projects_the_stored_history_before_seeding() {
+    let dir = tmp("near");
+    let wide_space = SyntheticObjective::new(3, 3, Duration::ZERO).space().clone();
+    let digest = cfg_digest(&["objective-v1", "hw-v1"]);
+    let wide_key = warehouse_key(&wide_space, &digest);
+
+    // Prior session: a genuine cold search on the wide menus, paid in full.
+    let mut payer = SyntheticObjective::with_space(wide_space.clone(), Duration::ZERO);
+    let mut run = searcher(1, 4).start(wide_space.clone(), 10, None).unwrap();
+    while !run.done() {
+        run.step(&mut payer);
+    }
+    let (prior_hist, _) = run.finish();
+    let records: Vec<EvalRecord> = prior_hist
+        .trials
+        .iter()
+        .map(|t| EvalRecord::value_only(t.config.clone(), t.value))
+        .collect();
+    let fleet = Warehouse::open_tagged(&dir, "fleet").unwrap();
+    fleet.append(&wide_key, &wide_space, &records).unwrap();
+    let stored = fleet.load(&wide_key).unwrap().unwrap().records;
+
+    // This session searches a TIGHTER menu (choice 2.0 pruned away): same
+    // digest, different fingerprint — a projected near miss.
+    let narrow_space = SyntheticObjective::new(3, 2, Duration::ZERO).space().clone();
+    assert_ne!(narrow_space.fingerprint(), wide_space.fingerprint());
+    let wh = Warehouse::open_tagged(&dir, "leader-2").unwrap();
+    let hit =
+        wh.lookup(&narrow_space, &digest, ProjectPolicy::Nearest).unwrap().expect("hit");
+    let WarmStart::Projected { key, configs, values, report } = hit else {
+        panic!("expected a projected hit")
+    };
+    assert_eq!(key, wide_key);
+    // Every stored trial is accounted for: kept + snapped + dropped.
+    assert_eq!(report.kept + report.snapped + report.dropped, stored.len());
+    assert_eq!(report.dropped, 0, "nearest never drops");
+    assert_eq!(configs.len(), stored.len());
+    assert_eq!(configs.len(), values.len());
+    for c in &configs {
+        assert!(narrow_space.validate(c), "projected seed {c:?} invalid for the new space");
+    }
+
+    // Strict drops exactly the trials that touched the pruned choice.
+    let hit =
+        wh.lookup(&narrow_space, &digest, ProjectPolicy::Strict).unwrap().expect("hit");
+    let WarmStart::Projected { configs: strict_configs, report: strict_report, .. } = hit
+    else {
+        panic!("expected a projected hit")
+    };
+    let touched = stored.iter().filter(|r| r.config.iter().any(|&i| i == 2)).count();
+    assert_eq!(strict_report.dropped, touched);
+    assert_eq!(
+        strict_report.kept + strict_report.snapped + strict_report.dropped,
+        stored.len()
+    );
+    assert_eq!(strict_configs.len(), stored.len() - touched);
+
+    // The projected seeds drive a working warm search on the new space.
+    let mut farm = SyntheticObjective::with_space(narrow_space.clone(), Duration::ZERO);
+    let mut run =
+        searcher(2, 4).start_warm(narrow_space.clone(), 6, configs, values).unwrap();
+    while !run.done() {
+        run.step(&mut farm);
+    }
+    let (hist, _) = run.finish();
+    assert_eq!(hist.len(), 6);
+    assert_eq!(farm.evals, 6, "projected seeds are unpaid: every proposal hits the farm");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn zero_overlap_hit_seeds_nothing_and_equals_a_cold_search() {
+    let dir = tmp("disjoint");
+    let digest = cfg_digest(&["objective-v1", "hw-v1"]);
+    let old_space = Space::new(vec![
+        Dim::new("a0", vec![0.0, 1.0]),
+        Dim::new("a1", vec![0.0, 1.0]),
+    ]);
+    let fleet = Warehouse::open_tagged(&dir, "fleet").unwrap();
+    let records = paid_records(&old_space);
+    fleet
+        .append(&warehouse_key(&old_space, &digest), &old_space, &records)
+        .unwrap();
+
+    // The new space shares NO dim names: projecting would be pure prior
+    // fill, so the hit must seed nothing — but still report cleanly.
+    let new_space = Space::new(vec![
+        Dim::new("b0", vec![0.0, 1.0]),
+        Dim::new("b1", vec![0.0, 1.0]),
+        Dim::new("b2", vec![0.0, 1.0]),
+    ]);
+    let wh = Warehouse::open_tagged(&dir, "leader-2").unwrap();
+    let hit =
+        wh.lookup(&new_space, &digest, ProjectPolicy::Nearest).unwrap().expect("hit");
+    let WarmStart::Projected { configs, values, report, .. } = hit else {
+        panic!("expected a projected hit")
+    };
+    assert!(configs.is_empty(), "zero-overlap must never seed garbage");
+    assert!(values.is_empty());
+    assert_eq!(report.kept, 0);
+    assert_eq!(report.kept + report.snapped + report.dropped, records.len());
+    assert_eq!(report.dropped_dims.len(), 2, "both old dims marginalize away");
+    assert_eq!(report.new_dims.len(), 3, "every new dim is prior-filled");
+
+    // And the search is EXACTLY a cold one, bit for bit.
+    let budget = 8;
+    let mut cold_farm = SyntheticObjective::with_space(new_space.clone(), Duration::ZERO);
+    let mut cold = searcher(5, 3).start(new_space.clone(), budget, None).unwrap();
+    while !cold.done() {
+        cold.step(&mut cold_farm);
+    }
+    let (cold_hist, _) = cold.finish();
+    let mut warm_farm = SyntheticObjective::with_space(new_space.clone(), Duration::ZERO);
+    let mut warm =
+        searcher(5, 3).start_warm(new_space.clone(), budget, configs, values).unwrap();
+    while !warm.done() {
+        warm.step(&mut warm_farm);
+    }
+    let (warm_hist, _) = warm.finish();
+    assert_eq!(cold_hist.len(), warm_hist.len());
+    for (a, b) in cold_hist.trials.iter().zip(&warm_hist.trials) {
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Named CI gate: at equal budget, the seeded session pays strictly fewer
+/// farm evaluations than the cold one and its incumbent is at least as good.
+#[test]
+fn seeded_search_pays_fewer_farm_evals_and_keeps_the_incumbent() {
+    let dir = tmp("gate");
+    let space = SyntheticObjective::new(3, 3, Duration::ZERO).space().clone();
+    let digest = cfg_digest(&["objective-v1", "hw-v1"]);
+    let key = warehouse_key(&space, &digest);
+    let budget = 15;
+
+    // Cold baseline: every evaluation is paid to the farm.
+    let mut cold_farm =
+        CachedObjective::new(SyntheticObjective::with_space(space.clone(), Duration::ZERO));
+    let mut cold = searcher(11, 5).start(space.clone(), budget, None).unwrap();
+    while !cold.done() {
+        cold.step(&mut cold_farm);
+    }
+    let (cold_hist, _) = cold.finish();
+    let cold_best = cold_hist.best().unwrap().value;
+    let cold_paid = cold_farm.inner.evals;
+    assert!(cold_paid > 0);
+
+    // The fleet has since paid for the whole space.
+    let fleet = Warehouse::open_tagged(&dir, "fleet").unwrap();
+    assert_eq!(fleet.append(&key, &space, &paid_records(&space)).unwrap(), 27);
+
+    // Seeded rerun at the SAME seed and budget.
+    let wh = Warehouse::open_tagged(&dir, "leader-2").unwrap();
+    let WarmStart::Exact { records: stored, .. } =
+        wh.lookup(&space, &digest, ProjectPolicy::Nearest).unwrap().expect("hit")
+    else {
+        panic!("expected an exact hit")
+    };
+    let mut farm =
+        CachedObjective::new(SyntheticObjective::with_space(space.clone(), Duration::ZERO));
+    let entries: Vec<(Config, f64)> =
+        stored.iter().map(|r| (r.config.clone(), r.value)).collect();
+    farm.seed(&entries);
+    let (configs, values): (Vec<_>, Vec<_>) = entries.into_iter().unzip();
+    let mut warm = searcher(11, 5).start_warm(space.clone(), budget, configs, values).unwrap();
+    while !warm.done() {
+        warm.step(&mut farm);
+    }
+    let (warm_hist, _) = warm.finish();
+
+    assert_eq!(warm_hist.len(), budget, "the budget still buys `budget` evaluations");
+    assert_eq!(farm.inner.evals, 0, "every config was pre-paid by the fleet");
+    assert!(farm.inner.evals < cold_paid, "seeded must pay strictly fewer farm evals");
+    let warm_best = warm_hist.best().unwrap().value;
+    assert!(
+        warm_best >= cold_best,
+        "incumbent regressed: warm {warm_best} vs cold {cold_best}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Concurrent leaders write disjoint per-session segments into one store;
+/// a reader merges them all and `gc` caps the total size.
+#[test]
+fn two_leaders_share_one_store_and_gc_caps_it() {
+    let dir = tmp("shared");
+    let space = SyntheticObjective::new(2, 2, Duration::ZERO).space().clone();
+    let digest = cfg_digest(&["objective-v1", "hw-v1"]);
+    let key = warehouse_key(&space, &digest);
+    let all = paid_records(&space);
+    let a = Warehouse::open_tagged(&dir, "leader-a").unwrap();
+    let b = Warehouse::open_tagged(&dir, "leader-b").unwrap();
+    // Overlapping appends: dedup happens at read time, across segments.
+    assert_eq!(a.append(&key, &space, &all[..3]).unwrap(), 3);
+    assert_eq!(b.append(&key, &space, &all[1..]).unwrap(), 3);
+    let merged = a.load(&key).unwrap().unwrap().records;
+    assert_eq!(merged.len(), all.len());
+    let sums = a.summaries().unwrap();
+    assert_eq!(sums.len(), 1);
+    assert_eq!(sums[0].segments, 2);
+    assert_eq!(sums[0].records, all.len());
+    // gc to zero wipes the segments and the emptied key directory.
+    let out = a.gc(0).unwrap();
+    assert_eq!(out.deleted_segments, 2);
+    assert_eq!(out.deleted_keys, 1);
+    assert_eq!(out.kept_bytes, 0);
+    assert!(a.keys().unwrap().is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
