@@ -11,7 +11,8 @@
 //! Run: `cargo bench` (all) or `cargo bench -- fig3 table2 --effort quick`
 //! Filter names: fig1 fig3 fig3c fig4 table1 table2 table3 table4 ablations
 //!               kernels tpe tpe-hotpath round-latency pipeline-depth
-//!               remote-search wire-throughput warm-start hwmodel
+//!               remote-search wire-throughput warm-start serve-throughput
+//!               hwmodel
 //!
 //! `tpe-hotpath` additionally records its proposals/sec numbers in
 //! `BENCH_tpe.json` at the workspace root, so the incremental-surrogate
@@ -767,6 +768,157 @@ fn bench_warm_start() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Control-plane throughput: a fleet of small jobs POSTed to a live
+/// `sammpq serve` daemon over a zero-sleep 2-worker farm. Sleep is zero
+/// and the objective trivial, so wall-clock is dominated by the control
+/// plane itself — HTTP parse, admission, journal commit, executor spawn,
+/// and event fan-out — exactly the overhead this bench tracks. Reports
+/// admitted jobs/sec (POST round-trips), time-to-first-round-event
+/// (journal + long-poll latency), and end-to-end jobs/sec. Acceptance:
+/// every job lands Done with the full budget. Records
+/// BENCH_serve_throughput.json.
+fn bench_serve_throughput() -> anyhow::Result<()> {
+    use sammpq::coordinator::{server, Algo, JobSpec, JobState, PoolCfg, ServeCfg, ServeOpts,
+                              SessionSpec, SyntheticFactory};
+    use sammpq::search::{Objective, QPolicy, SyntheticObjective};
+    use sammpq::util::json::{obj, Json};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    section("serve-throughput (control-plane overhead over a zero-sleep farm)");
+    let n_jobs = 8usize;
+    let n_evals = 16usize;
+
+    let mut farm = Vec::new();
+    let mut joins = Vec::new();
+    for _ in 0..2 {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        farm.push(listener.local_addr()?.to_string());
+        joins.push(std::thread::spawn(move || {
+            let factory = SyntheticFactory { sleep: Duration::ZERO };
+            sammpq::coordinator::serve_sessions_on(listener, &factory, ServeOpts::default())
+                .expect("bench worker")
+        }));
+    }
+    let state_dir =
+        std::env::temp_dir().join(format!("sammpq_bench_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&state_dir);
+    let daemon = server::start(ServeCfg {
+        addr: "127.0.0.1:0".to_string(),
+        workers: farm.clone(),
+        pool: PoolCfg { min_straggle: Duration::from_secs(30), ..Default::default() },
+        state_dir: state_dir.clone(),
+        max_jobs: n_jobs,
+        tenant_quota: n_jobs,
+        ..ServeCfg::default()
+    })?;
+    let addr = daemon.addr().to_string();
+
+    // (a) Admission throughput: POST round-trips, including the journal
+    // commit and executor spawn behind each 201.
+    let mut ids = Vec::new();
+    let t = Timer::start();
+    for i in 0..n_jobs {
+        let spec = JobSpec {
+            name: format!("bench-{i}"),
+            tenant: "bench".to_string(),
+            session: SessionSpec::synthetic(
+                SyntheticObjective::new(4, 3, Duration::ZERO).space().clone(),
+            ),
+            algo: Algo::KmeansTpe,
+            seed: i as u64,
+            n_evals,
+            n_startup: 6,
+            batch_q: QPolicy::Fixed(4),
+            warm_start: None,
+        };
+        let (code, created) = server::request(&addr, "POST", "/jobs", Some(&spec.to_json()))?;
+        anyhow::ensure!(code == 201, "admission refused: {created:?}");
+        ids.push(created.req("id")?.as_str().unwrap_or_default().to_string());
+    }
+    let admit_secs = t.secs();
+
+    // (b) First-round-event latency on the last-admitted job: how long the
+    // journal + long-poll path takes to surface progress.
+    let t = Timer::start();
+    let mut first_round_secs = f64::NAN;
+    let mut from = 0usize;
+    'poll: loop {
+        let last = ids.last().expect("jobs admitted");
+        let (code, page) =
+            server::request(&addr, "GET", &format!("/jobs/{last}/events?from={from}"), None)?;
+        anyhow::ensure!(code == 200, "events refused: {page:?}");
+        for e in page.get("events").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            if e.get("ev").and_then(|v| v.as_str()) == Some("round") {
+                first_round_secs = t.secs();
+                break 'poll;
+            }
+        }
+        from = page.req("next")?.as_usize().unwrap_or(from);
+        let state = page.req("state")?.as_str().unwrap_or_default().to_string();
+        anyhow::ensure!(
+            !JobState::parse(&state).map(|s| s.terminal()).unwrap_or(false),
+            "job {last} went terminal ({state}) without a round event"
+        );
+    }
+
+    // (c) End-to-end: all jobs Done at full budget.
+    let t_all_jobs = Timer::start();
+    let mut done_secs = admit_secs;
+    for id in &ids {
+        loop {
+            let (code, status) = server::request(&addr, "GET", &format!("/jobs/{id}"), None)?;
+            anyhow::ensure!(code == 200, "status refused: {status:?}");
+            let state = status.req("state")?.as_str().unwrap_or_default().to_string();
+            if state == "done" {
+                let trials = status.req("trials")?.as_usize().unwrap_or(0);
+                anyhow::ensure!(trials == n_evals, "job {id}: {trials} of {n_evals} trials");
+                break;
+            }
+            anyhow::ensure!(
+                !JobState::parse(&state).map(|s| s.terminal()).unwrap_or(false),
+                "job {id} terminal without done: {state}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    done_secs += t_all_jobs.secs();
+    daemon.join();
+    use std::io::Write as _;
+    for a in &farm {
+        if let Ok(mut s) = TcpStream::connect(a) {
+            let _ = s.write_all(b"{\"shutdown\": true}\n");
+        }
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&state_dir);
+
+    let admit_rate = n_jobs as f64 / admit_secs.max(1e-9);
+    let e2e_rate = n_jobs as f64 / done_secs.max(1e-9);
+    println!(
+        "{n_jobs} jobs x {n_evals} evals: admitted {admit_rate:.0} jobs/s | \
+         first round event {:.1}ms | end-to-end {e2e_rate:.1} jobs/s",
+        first_round_secs * 1e3
+    );
+    let record = obj(vec![
+        ("bench", Json::Str("serve-throughput".into())),
+        ("jobs", Json::Num(n_jobs as f64)),
+        ("n_evals", Json::Num(n_evals as f64)),
+        ("workers", Json::Num(2.0)),
+        ("admit_secs", Json::Num(admit_secs)),
+        ("admitted_jobs_per_sec", Json::Num(admit_rate)),
+        ("first_round_event_secs", Json::Num(first_round_secs)),
+        ("end_to_end_secs", Json::Num(done_secs)),
+        ("end_to_end_jobs_per_sec", Json::Num(e2e_rate)),
+        ("note", Json::Str("regenerate with: cargo bench -- serve-throughput".into())),
+    ]);
+    std::fs::write("BENCH_serve_throughput.json", record.to_string_pretty() + "\n")?;
+    println!("recorded -> BENCH_serve_throughput.json");
+    Ok(())
+}
+
 /// Hardware model + cycle simulator throughput.
 fn bench_hwmodel() -> anyhow::Result<()> {
     section("hardware model + simulator");
@@ -830,6 +982,9 @@ fn main() -> anyhow::Result<()> {
     }
     if should_run(&args, "warm-start") {
         bench_warm_start()?;
+    }
+    if should_run(&args, "serve-throughput") {
+        bench_serve_throughput()?;
     }
     if should_run(&args, "hwmodel") {
         bench_hwmodel()?;

@@ -1,0 +1,1522 @@
+//! Job runtime: the search-loop driver extracted from [`Leader`], plus the
+//! job vocabulary the `sammpq serve` control plane speaks.
+//!
+//! PR 10's split: [`drive`] is the ONE stepwise search loop — per-round
+//! checkpointing, warehouse warm-start/append, re-prune projection, and the
+//! farm-health supervisor — shared verbatim by the `sammpq search` CLI (a
+//! single-job client logging through [`LogSink`]) and the serve daemon (many
+//! concurrent jobs journaling through `coordinator::journal`). The CLI and
+//! the daemon can never drift, because there is no second loop to drift.
+//!
+//! The vocabulary around it:
+//!
+//! * [`JobSpec`] — everything a search job needs (session spec + algorithm
+//!   + budget), hand-rolled JSON serde like `SpaceBuild`'s, so it rides the
+//!   HTTP body and the journal's first line unchanged.
+//! * [`JobState`]/[`JobHandle`] — the Queued → Pruning → Searching →
+//!   Done/Failed/Cancelled state machine, with transition validation and a
+//!   fold ([`JobHandle::apply`]) that both the live daemon and journal
+//!   replay use to build the same view of a job.
+//! * [`JobEvent`] + [`ProgressSink`] — per-round progress callbacks
+//!   replacing the leader's direct stderr logging. [`LogSink`] renders
+//!   exactly the pre-refactor log lines (bit-identical CLI output); the
+//!   daemon's sink appends the same events to the job's journal instead.
+//! * [`CancelToken`] — cooperative cancellation checked at round
+//!   boundaries: `cancel` is a user DELETE (terminal), `halt` is a daemon
+//!   drain/kill (the job stays resumable from its checkpoint).
+//!
+//! [`Leader`]: super::leader::Leader
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::baselines::{Evolutionary, EvolutionaryParams, GpBo, GpBoParams, RandomSearch,
+                       Reinforce, ReinforceParams};
+use crate::coordinator::evaluator::{EvalRecord, ObjectiveCfg, SpaceBuild};
+use crate::coordinator::leader::{project_session_checkpoint, Algo, CheckpointStore,
+                                 RecordedObjective, SessionCheckpoint};
+use crate::coordinator::service::SessionSpec;
+use crate::coordinator::supervisor::{Decision, PoolStats, Supervisor, SupervisorCfg,
+                                     SupervisorEvent};
+use crate::hessian::pruner::PrunedSpace;
+use crate::hw::HwConfig;
+use crate::search::space::{config_from_json, config_to_json};
+use crate::search::{cfg_digest, BatchAlgo, BatchSearcher, Config, History, KmeansTpe,
+                    KmeansTpeParams, ProjectPolicy, ProjectionReport, QPolicy, Searcher,
+                    Tpe, TpeParams, WarmStart, Warehouse, warehouse_key};
+use crate::util::json::{dec_f64, enc_f64, obj, Json};
+
+/// What the drive loop needs from a `LeaderCfg` (or a [`JobSpec`]): the
+/// algorithm, its reproducibility knobs, and the budget.
+#[derive(Debug, Clone, Copy)]
+pub struct DriveCfg {
+    pub algo: Algo,
+    pub seed: u64,
+    /// Search budget n and startup n0 (Alg. 1).
+    pub n_evals: usize,
+    pub n_startup: usize,
+    /// Proposals per round (see `LeaderCfg::batch_q`).
+    pub batch_q: QPolicy,
+    /// Stage-2 k — re-prunes grow it by one per re-prune.
+    pub sensitivity_clusters: usize,
+}
+
+/// Session options the drive loop consumes — `SessionOpts` minus the
+/// backend (the caller connects the objective) and plus the precomputed
+/// warehouse digest (the loop has no `ObjectiveCfg`/`HwConfig` to hash).
+#[derive(Debug, Clone, Default)]
+pub struct DriveOpts {
+    pub checkpoint: Option<PathBuf>,
+    pub checkpoint_keep: Option<usize>,
+    pub resume: Option<PathBuf>,
+    pub resume_project: Option<ProjectPolicy>,
+    pub reprune_every: Option<usize>,
+    pub warehouse: Option<PathBuf>,
+    pub warm_start: Option<ProjectPolicy>,
+    /// Objective + hardware digest keying warehouse lookups/appends —
+    /// required whenever `warehouse` is set (see [`session_digest`]).
+    pub warehouse_digest: Option<String>,
+    pub autoscale: bool,
+}
+
+/// The objective+hw digest that keys the cross-session warehouse: one
+/// digest covers the objective knobs and the hardware model, so histories
+/// collected under a different reward are never mistaken for this run's.
+/// The CLI leader and the serve daemon both derive it from here, so a job
+/// submitted over HTTP shares warehouse entries with the same search run
+/// from the command line.
+pub fn session_digest(objective: &ObjectiveCfg, hw: &HwConfig) -> String {
+    let obj_cfg = objective.to_json().to_string_compact();
+    let hw_cfg = hw.to_json().to_string_compact();
+    cfg_digest(&[&obj_cfg, &hw_cfg])
+}
+
+/// Everything [`drive`] produces (the tuple `Leader::drive` used to return,
+/// named, plus the interruption flag the daemon needs).
+pub struct DriveOutcome {
+    pub history: History,
+    pub records: Vec<EvalRecord>,
+    /// Final `(SpaceBuild, PrunedSpace)` when re-pruning changed the space.
+    pub rebuilt: Option<(SpaceBuild, PrunedSpace)>,
+    pub farm: Option<PoolStats>,
+    pub warm_start: Option<ProjectionReport>,
+    /// True when a [`CancelToken`] stopped the run at a round boundary
+    /// before the budget completed — the history holds only the rounds
+    /// that finished, and (with a checkpoint configured) the newest
+    /// checkpoint matches it exactly.
+    pub interrupted: bool,
+}
+
+/// Cooperative cancellation for [`drive`], checked at round boundaries
+/// (mid-round evaluations always complete — slots are never abandoned
+/// half-served). Two independent signals with different terminal
+/// semantics, both sticky:
+///
+/// * [`cancel`](Self::cancel) — a user cancelled the job (HTTP DELETE).
+///   The executor journals a terminal `Cancelled` state.
+/// * [`halt`](Self::halt) — the daemon is draining or dying. NO terminal
+///   state is journaled: the job stays `Searching` in its journal, and a
+///   restarted daemon resumes it from its checkpoint.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    cancel: Arc<AtomicBool>,
+    halt: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    pub fn halt(&self) {
+        self.halt.store(true, Ordering::SeqCst);
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst)
+    }
+
+    pub fn halted(&self) -> bool {
+        self.halt.load(Ordering::SeqCst)
+    }
+
+    pub fn should_stop(&self) -> bool {
+        self.cancelled() || self.halted()
+    }
+}
+
+/// What a re-prune boundary did to the session's space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RepruneOutcome {
+    /// Larger k produced the same menus; the session continues unchanged.
+    Unchanged,
+    /// The menus tightened and the backend re-synced; the history was
+    /// projected onto the new space.
+    Changed,
+    /// The backend refused the re-sync (non-fatal); the session continues
+    /// on the current space.
+    ResyncFailed(String),
+}
+
+/// One structured progress event out of [`drive`] (or the daemon around
+/// it). The CLI renders these as the classic stderr lines ([`LogSink`]);
+/// the serve daemon appends them to the job's journal, where they are the
+/// durable source of truth journal replay rebuilds job state from.
+#[derive(Debug, Clone)]
+pub enum JobEvent {
+    /// First journal line of every job: the full spec, so a restarted
+    /// daemon can re-run the job without any other storage.
+    Spec { spec: JobSpec },
+    /// A state-machine transition (with a human detail — failure reason,
+    /// resume note).
+    State { state: JobState, detail: String },
+    /// One completed search round: cumulative trials, the incumbent, and
+    /// the round's `RoundStat` fields.
+    Round {
+        round: usize,
+        trials: usize,
+        best_value: f64,
+        best_config: Config,
+        q: usize,
+        distinct: usize,
+        startup: bool,
+        propose_secs: f64,
+        eval_secs: f64,
+    },
+    /// Per-round eval-cache counters (backends with an inspectable cache).
+    Cache { round: usize, hits: usize, misses: usize, evictions: usize },
+    /// Per-round farm-health snapshot (remote backends).
+    Farm { round: usize, stats: PoolStats },
+    /// A non-Hold supervisor decision, with the snapshot behind it.
+    Supervisor { event: SupervisorEvent },
+    /// The supervisor flagged sustained capacity pressure: the farm is
+    /// `deficit` workers short. A dedicated event (not just the supervisor
+    /// line) so autoscaling consumers get a real signal, surfaced as the
+    /// `pressure` gauge in `/metrics`.
+    Pressure { round: usize, deficit: usize },
+    /// A warehouse warm start seeded the surrogates.
+    WarmStart { key: String, seeded: usize, cached: usize, projected: bool },
+    /// A projection ran (`phase`: "resume", "warm-start", or "reprune").
+    Projection { phase: String, report: ProjectionReport },
+    /// A `--reprune-every` boundary fired.
+    Reprune { k: usize, outcome: RepruneOutcome },
+    /// A warehouse append failed (non-fatal).
+    WarehouseError { error: String },
+    /// The daemon is draining: the job was checkpointed and halted WITHOUT
+    /// a terminal state — a restarted daemon resumes it.
+    Draining,
+    /// Terminal report (the daemon's machine-readable `SearchReport`).
+    Report { report: Json },
+}
+
+impl JobEvent {
+    pub fn to_json(&self) -> Json {
+        match self {
+            JobEvent::Spec { spec } => {
+                obj(vec![("ev", Json::Str("spec".into())), ("spec", spec.to_json())])
+            }
+            JobEvent::State { state, detail } => obj(vec![
+                ("ev", Json::Str("state".into())),
+                ("state", Json::Str(state.as_str().to_string())),
+                ("detail", Json::Str(detail.clone())),
+            ]),
+            JobEvent::Round {
+                round,
+                trials,
+                best_value,
+                best_config,
+                q,
+                distinct,
+                startup,
+                propose_secs,
+                eval_secs,
+            } => obj(vec![
+                ("ev", Json::Str("round".into())),
+                ("round", Json::Num(*round as f64)),
+                ("trials", Json::Num(*trials as f64)),
+                ("best_value", enc_f64(*best_value)),
+                ("best_config", config_to_json(best_config)),
+                ("q", Json::Num(*q as f64)),
+                ("distinct", Json::Num(*distinct as f64)),
+                ("startup", Json::Bool(*startup)),
+                ("propose_secs", enc_f64(*propose_secs)),
+                ("eval_secs", enc_f64(*eval_secs)),
+            ]),
+            JobEvent::Cache { round, hits, misses, evictions } => obj(vec![
+                ("ev", Json::Str("cache".into())),
+                ("round", Json::Num(*round as f64)),
+                ("hits", Json::Num(*hits as f64)),
+                ("misses", Json::Num(*misses as f64)),
+                ("evictions", Json::Num(*evictions as f64)),
+            ]),
+            JobEvent::Farm { round, stats } => obj(vec![
+                ("ev", Json::Str("farm".into())),
+                ("round", Json::Num(*round as f64)),
+                ("stats", stats.to_json()),
+            ]),
+            JobEvent::Supervisor { event } => obj(vec![
+                ("ev", Json::Str("supervisor".into())),
+                ("event", event.to_json()),
+            ]),
+            JobEvent::Pressure { round, deficit } => obj(vec![
+                ("ev", Json::Str("pressure".into())),
+                ("round", Json::Num(*round as f64)),
+                ("deficit", Json::Num(*deficit as f64)),
+            ]),
+            JobEvent::WarmStart { key, seeded, cached, projected } => obj(vec![
+                ("ev", Json::Str("warm_start".into())),
+                ("key", Json::Str(key.clone())),
+                ("seeded", Json::Num(*seeded as f64)),
+                ("cached", Json::Num(*cached as f64)),
+                ("projected", Json::Bool(*projected)),
+            ]),
+            JobEvent::Projection { phase, report } => obj(vec![
+                ("ev", Json::Str("projection".into())),
+                ("phase", Json::Str(phase.clone())),
+                ("report", report.to_json()),
+            ]),
+            JobEvent::Reprune { k, outcome } => {
+                let (name, error) = match outcome {
+                    RepruneOutcome::Unchanged => ("unchanged", None),
+                    RepruneOutcome::Changed => ("changed", None),
+                    RepruneOutcome::ResyncFailed(e) => ("resync-failed", Some(e.clone())),
+                };
+                let mut pairs = vec![
+                    ("ev", Json::Str("reprune".into())),
+                    ("k", Json::Num(*k as f64)),
+                    ("outcome", Json::Str(name.to_string())),
+                ];
+                if let Some(e) = error {
+                    pairs.push(("error", Json::Str(e)));
+                }
+                obj(pairs)
+            }
+            JobEvent::WarehouseError { error } => obj(vec![
+                ("ev", Json::Str("warehouse_error".into())),
+                ("error", Json::Str(error.clone())),
+            ]),
+            JobEvent::Draining => obj(vec![("ev", Json::Str("draining".into()))]),
+            JobEvent::Report { report } => obj(vec![
+                ("ev", Json::Str("report".into())),
+                ("report", report.clone()),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobEvent> {
+        let kind = j.req("ev")?.as_str().context("event kind")?;
+        let n = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().with_context(|| format!("event field '{k}'"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            dec_f64(j.req(k)?).with_context(|| format!("event field '{k}'"))
+        };
+        let s = |k: &str| -> Result<String> {
+            Ok(j.req(k)?
+                .as_str()
+                .with_context(|| format!("event field '{k}'"))?
+                .to_string())
+        };
+        Ok(match kind {
+            "spec" => JobEvent::Spec { spec: JobSpec::from_json(j.req("spec")?)? },
+            "state" => JobEvent::State {
+                state: JobState::parse(&s("state")?)
+                    .with_context(|| format!("bad state in {j:?}"))?,
+                detail: s("detail")?,
+            },
+            "round" => JobEvent::Round {
+                round: n("round")?,
+                trials: n("trials")?,
+                best_value: f("best_value")?,
+                best_config: config_from_json(j.req("best_config")?)?,
+                q: n("q")?,
+                distinct: n("distinct")?,
+                startup: j.req("startup")?.as_bool().context("startup")?,
+                propose_secs: f("propose_secs")?,
+                eval_secs: f("eval_secs")?,
+            },
+            "cache" => JobEvent::Cache {
+                round: n("round")?,
+                hits: n("hits")?,
+                misses: n("misses")?,
+                evictions: n("evictions")?,
+            },
+            "farm" => JobEvent::Farm {
+                round: n("round")?,
+                stats: PoolStats::from_json(j.req("stats")?)?,
+            },
+            "supervisor" => JobEvent::Supervisor {
+                event: SupervisorEvent::from_json(j.req("event")?)?,
+            },
+            "pressure" => JobEvent::Pressure { round: n("round")?, deficit: n("deficit")? },
+            "warm_start" => JobEvent::WarmStart {
+                key: s("key")?,
+                seeded: n("seeded")?,
+                cached: n("cached")?,
+                projected: j.req("projected")?.as_bool().context("projected")?,
+            },
+            "projection" => JobEvent::Projection {
+                phase: s("phase")?,
+                report: ProjectionReport::from_json(j.req("report")?)?,
+            },
+            "reprune" => JobEvent::Reprune {
+                k: n("k")?,
+                outcome: match s("outcome")?.as_str() {
+                    "unchanged" => RepruneOutcome::Unchanged,
+                    "changed" => RepruneOutcome::Changed,
+                    "resync-failed" => RepruneOutcome::ResyncFailed(s("error")?),
+                    other => anyhow::bail!("unknown reprune outcome '{other}'"),
+                },
+            },
+            "warehouse_error" => JobEvent::WarehouseError { error: s("error")? },
+            "draining" => JobEvent::Draining,
+            "report" => JobEvent::Report { report: j.req("report")?.clone() },
+            other => anyhow::bail!("unknown job event '{other}'"),
+        })
+    }
+}
+
+/// Where [`drive`]'s progress goes: the CLI's [`LogSink`] renders stderr
+/// lines, the daemon's sink journals + fans out to long-pollers.
+pub trait ProgressSink {
+    fn emit(&mut self, event: &JobEvent);
+}
+
+/// Renders events as EXACTLY the log lines `Leader::drive` printed before
+/// the extraction — the CLI's stderr for a fixed-seed search is
+/// bit-identical to pre-refactor behavior. Events the pre-refactor leader
+/// never logged (`Round`, `State`, `Pressure`, ...) are silently dropped.
+pub struct LogSink;
+
+impl ProgressSink for LogSink {
+    fn emit(&mut self, event: &JobEvent) {
+        match event {
+            JobEvent::Cache { round, hits, misses, evictions } => eprintln!(
+                "[cache] round {round}: {hits} hits / {misses} misses / \
+                 {evictions} evicted"
+            ),
+            JobEvent::Farm { round, stats } => {
+                eprintln!("[farm] round {round}: {}", stats.render());
+            }
+            JobEvent::Supervisor { event } => {
+                eprintln!("[farm] {}", event.to_json().to_string_compact());
+            }
+            JobEvent::WarmStart { key, seeded, cached, projected: false } => eprintln!(
+                "[warehouse] exact hit {key}: {seeded} stored trials seed the surrogates, \
+                 {cached} pre-paid configs seed the eval cache"
+            ),
+            JobEvent::WarmStart { key, seeded, projected: true, .. } => {
+                eprintln!("[warehouse] projected hit {key}: seeding {seeded} remapped trials");
+            }
+            JobEvent::Projection { report, .. } => eprintln!("{}", report.render()),
+            JobEvent::Reprune { k, outcome } => match outcome {
+                RepruneOutcome::Unchanged => eprintln!(
+                    "[reprune] k={k}: menus unchanged; continuing on the same space"
+                ),
+                RepruneOutcome::Changed => {
+                    eprintln!("[reprune] k={k}: re-pruned menus after round boundary");
+                }
+                RepruneOutcome::ResyncFailed(e) => eprintln!(
+                    "[reprune] k={k}: backend re-sync failed ({e}); continuing on \
+                     the current space"
+                ),
+            },
+            JobEvent::WarehouseError { error } => {
+                eprintln!("[warehouse] append failed (non-fatal): {error}");
+            }
+            // Daemon-only events: the pre-refactor CLI printed nothing here.
+            JobEvent::Spec { .. }
+            | JobEvent::State { .. }
+            | JobEvent::Round { .. }
+            | JobEvent::Pressure { .. }
+            | JobEvent::Draining
+            | JobEvent::Report { .. } => {}
+        }
+    }
+}
+
+/// Job lifecycle: Queued → Pruning → Searching → Done/Failed/Cancelled.
+/// (`Pruning` is the Hessian stage — daemon jobs over a synced farm skip
+/// straight to `Searching`; the state exists for in-process DNN jobs.)
+/// `Searching → Searching` is allowed: a restarted daemon re-enters the
+/// state when it resumes an unfinished job from its checkpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Pruning,
+    Searching,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Pruning => "pruning",
+            JobState::Searching => "searching",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobState> {
+        Some(match s {
+            "queued" => JobState::Queued,
+            "pruning" => JobState::Pruning,
+            "searching" => JobState::Searching,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            _ => return None,
+        })
+    }
+
+    /// Terminal states accept no further transitions.
+    pub fn terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+
+    pub fn can_transition(self, to: JobState) -> bool {
+        use JobState::*;
+        matches!(
+            (self, to),
+            (Queued, Pruning | Searching | Failed | Cancelled)
+                | (Pruning, Searching | Failed | Cancelled)
+                | (Searching, Searching | Done | Failed | Cancelled)
+        )
+    }
+}
+
+/// Everything a search job needs, hand-rolled serde like `SpaceBuild`'s:
+/// the HTTP `POST /jobs` body, the journal's first line, and the daemon's
+/// in-memory spec are all this one struct.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Operator label (free-form, may be empty).
+    pub name: String,
+    /// Admission-quota key; defaults to "default".
+    pub tenant: String,
+    /// What the farm evaluates: space + objective + hw + snapshot digest —
+    /// exactly the v3 session handshake payload.
+    pub session: SessionSpec,
+    pub algo: Algo,
+    pub seed: u64,
+    pub n_evals: usize,
+    pub n_startup: usize,
+    pub batch_q: QPolicy,
+    /// Warehouse near-miss projection policy (`--warm-start`).
+    pub warm_start: Option<ProjectPolicy>,
+}
+
+impl JobSpec {
+    /// The [`DriveCfg`] this spec asks for.
+    pub fn drive_cfg(&self) -> DriveCfg {
+        DriveCfg {
+            algo: self.algo,
+            seed: self.seed,
+            n_evals: self.n_evals,
+            n_startup: self.n_startup,
+            batch_q: self.batch_q,
+            // Daemon jobs search a client-supplied space; there are no
+            // leader-side sensitivities to re-cluster, so the stage-2 k is
+            // a formality here.
+            sensitivity_clusters: 4,
+        }
+    }
+
+    /// Warehouse digest for this job's objective + hardware model — the
+    /// same digest a CLI leader with the same knobs computes.
+    pub fn warehouse_digest(&self) -> String {
+        session_digest(&self.session.objective, &self.session.hw)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("tenant", Json::Str(self.tenant.clone())),
+            ("session", self.session.to_json()),
+            ("algo", Json::Str(self.algo.name().to_string())),
+            // Hex: a seed above 2^53 would corrupt through a JSON number.
+            ("seed", Json::Str(format!("{:016x}", self.seed))),
+            ("n_evals", Json::Num(self.n_evals as f64)),
+            ("n_startup", Json::Num(self.n_startup as f64)),
+            (
+                "batch_q",
+                match self.batch_q {
+                    QPolicy::Auto => Json::Str("auto".to_string()),
+                    QPolicy::Fixed(q) => Json::Num(q as f64),
+                },
+            ),
+            (
+                "warm_start",
+                match self.warm_start {
+                    Some(p) => Json::Str(p.name().to_string()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let algo_name = j.req("algo")?.as_str().context("algo")?;
+        let seed_hex = j.req("seed")?.as_str().context("seed")?;
+        let batch_q = match j.req("batch_q")? {
+            Json::Str(s) => {
+                QPolicy::parse(s).with_context(|| format!("bad batch_q '{s}'"))?
+            }
+            Json::Num(q) => QPolicy::Fixed((*q as usize).max(1)),
+            other => anyhow::bail!("batch_q must be a number or 'auto', got {other:?}"),
+        };
+        let warm_start = match j.get("warm_start") {
+            None | Some(Json::Null) => None,
+            Some(Json::Str(s)) => Some(
+                ProjectPolicy::parse(s)
+                    .with_context(|| format!("bad warm_start policy '{s}'"))?,
+            ),
+            Some(other) => anyhow::bail!("warm_start must be a policy name, got {other:?}"),
+        };
+        Ok(JobSpec {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            tenant: j
+                .get("tenant")
+                .and_then(|v| v.as_str())
+                .filter(|t| !t.is_empty())
+                .unwrap_or("default")
+                .to_string(),
+            session: SessionSpec::from_json(j.req("session")?)?,
+            algo: Algo::parse(algo_name)
+                .with_context(|| format!("unknown algo '{algo_name}'"))?,
+            seed: u64::from_str_radix(seed_hex, 16)
+                .with_context(|| format!("bad seed '{seed_hex}'"))?,
+            n_evals: j.req("n_evals")?.as_usize().context("n_evals")?,
+            n_startup: j.req("n_startup")?.as_usize().context("n_startup")?,
+            batch_q,
+            warm_start,
+        })
+    }
+}
+
+/// One job's live view: the state machine plus the rolling aggregates
+/// (`GET /jobs/:id` serves exactly this). Built the same way twice — the
+/// daemon folds live events through [`apply`](Self::apply), and journal
+/// replay folds the persisted events through the SAME function — so a
+/// restarted daemon sees what the dead one saw.
+#[derive(Debug, Clone)]
+pub struct JobHandle {
+    pub id: String,
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Human context for the current state (failure reason, resume note).
+    pub detail: String,
+    /// Trials evaluated so far (cumulative across resumes).
+    pub trials: usize,
+    pub best_value: Option<f64>,
+    pub best_config: Option<Config>,
+    /// Latest farm-health snapshot.
+    pub farm: Option<PoolStats>,
+    /// Latest flagged capacity deficit (0: none) — the `/metrics` gauge.
+    pub pressure: usize,
+    /// Terminal report, when the job completed.
+    pub report: Option<Json>,
+    /// The daemon journaled a drain while this job ran.
+    pub draining: bool,
+}
+
+impl JobHandle {
+    pub fn new(id: &str, spec: JobSpec) -> JobHandle {
+        JobHandle {
+            id: id.to_string(),
+            spec,
+            state: JobState::Queued,
+            detail: String::new(),
+            trials: 0,
+            best_value: None,
+            best_config: None,
+            farm: None,
+            pressure: 0,
+            report: None,
+            draining: false,
+        }
+    }
+
+    /// Validated state transition; terminal states are final.
+    pub fn transition(&mut self, to: JobState, detail: &str) -> Result<()> {
+        anyhow::ensure!(
+            self.state.can_transition(to),
+            "job {}: illegal transition {} -> {}",
+            self.id,
+            self.state.as_str(),
+            to.as_str()
+        );
+        self.state = to;
+        self.detail = detail.to_string();
+        Ok(())
+    }
+
+    /// Fold one event into the view. Both the live daemon and journal
+    /// replay go through here — one fold, one truth.
+    pub fn apply(&mut self, event: &JobEvent) -> Result<()> {
+        match event {
+            // The spec rides construction/replay, not the fold.
+            JobEvent::Spec { .. } => {}
+            JobEvent::State { state, detail } => self.transition(*state, detail)?,
+            JobEvent::Round { trials, best_value, best_config, .. } => {
+                self.trials = *trials;
+                self.best_value = Some(*best_value);
+                self.best_config = Some(best_config.clone());
+            }
+            JobEvent::Farm { stats, .. } => self.farm = Some(*stats),
+            JobEvent::Pressure { deficit, .. } => self.pressure = *deficit,
+            JobEvent::Report { report } => self.report = Some(report.clone()),
+            JobEvent::Draining => self.draining = true,
+            JobEvent::Cache { .. }
+            | JobEvent::Supervisor { .. }
+            | JobEvent::WarmStart { .. }
+            | JobEvent::Projection { .. }
+            | JobEvent::Reprune { .. }
+            | JobEvent::WarehouseError { .. } => {}
+        }
+        Ok(())
+    }
+
+    /// Rebuild a handle from a journal's event sequence. The first event
+    /// must be the [`JobEvent::Spec`]; everything after folds through
+    /// [`apply`](Self::apply).
+    pub fn replay(id: &str, events: &[JobEvent]) -> Result<JobHandle> {
+        let Some(JobEvent::Spec { spec }) = events.first() else {
+            anyhow::bail!("job {id}: journal does not start with a spec event");
+        };
+        let mut handle = JobHandle::new(id, spec.clone());
+        // A replayed drain is history, not state: the NEW daemon is not
+        // draining, so the flag resets after the fold.
+        for event in &events[1..] {
+            handle.apply(event)?;
+        }
+        handle.draining = false;
+        Ok(handle)
+    }
+
+    /// The `GET /jobs/:id` body: state + incumbent + progress.
+    pub fn status_json(&self) -> Json {
+        obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("name", Json::Str(self.spec.name.clone())),
+            ("tenant", Json::Str(self.spec.tenant.clone())),
+            ("algo", Json::Str(self.spec.algo.name().to_string())),
+            ("state", Json::Str(self.state.as_str().to_string())),
+            ("detail", Json::Str(self.detail.clone())),
+            ("trials", Json::Num(self.trials as f64)),
+            ("n_evals", Json::Num(self.spec.n_evals as f64)),
+            (
+                "best_value",
+                self.best_value.map(enc_f64).unwrap_or(Json::Null),
+            ),
+            (
+                "best_config",
+                self.best_config
+                    .as_ref()
+                    .map(|c| config_to_json(c))
+                    .unwrap_or(Json::Null),
+            ),
+            ("pressure", Json::Num(self.pressure as f64)),
+            (
+                "farm",
+                self.farm.as_ref().map(PoolStats::to_json).unwrap_or(Json::Null),
+            ),
+            ("draining", Json::Bool(self.draining)),
+            ("report", self.report.clone().unwrap_or(Json::Null)),
+        ])
+    }
+}
+
+/// Build the searcher a [`DriveCfg`] asks for (moved from `leader.rs` so
+/// the CLI and the daemon share one `batch_q` -> searcher mapping).
+pub fn searcher_for(cfg: &DriveCfg) -> Box<dyn Searcher> {
+    let seed = cfg.seed;
+    let n0 = cfg.n_startup;
+    if cfg.batch_q.batched() {
+        // Batched rounds exist for the model-based TPE family; the other
+        // baselines keep their published sequential loops.
+        let policy = cfg.batch_q;
+        match cfg.algo {
+            Algo::KmeansTpe => {
+                return Box::new(BatchSearcher::new(
+                    BatchAlgo::KmeansTpe(KmeansTpeParams {
+                        n_startup: n0,
+                        seed,
+                        ..Default::default()
+                    }),
+                    policy,
+                ));
+            }
+            Algo::Tpe => {
+                return Box::new(BatchSearcher::new(
+                    BatchAlgo::Tpe(TpeParams { n_startup: n0, seed, ..Default::default() }),
+                    policy,
+                ));
+            }
+            _ => {}
+        }
+    }
+    match cfg.algo {
+        Algo::KmeansTpe => Box::new(KmeansTpe::new(KmeansTpeParams {
+            n_startup: n0,
+            seed,
+            ..Default::default()
+        })),
+        Algo::Tpe => {
+            Box::new(Tpe::new(TpeParams { n_startup: n0, seed, ..Default::default() }))
+        }
+        Algo::Random => Box::new(RandomSearch::new(seed)),
+        Algo::Evolutionary => Box::new(Evolutionary::new(EvolutionaryParams {
+            seed,
+            ..Default::default()
+        })),
+        Algo::Reinforce => {
+            Box::new(Reinforce::new(ReinforceParams { seed, ..Default::default() }))
+        }
+        Algo::GpBo => Box::new(GpBo::new(GpBoParams {
+            n_startup: n0,
+            seed,
+            ..Default::default()
+        })),
+    }
+}
+
+/// The search-loop driver shared by every frontend — `Leader::drive`
+/// extracted whole. Without checkpointing/re-pruning/warehouse/autoscale
+/// this is a plain `Searcher::run`; otherwise the TPE-family searcher runs
+/// STEPWISE, so the session (history, records, surrogate cursors, RNG) is
+/// frozen at every round boundary — a killed search resumes instead of
+/// restarting cold, a resumed checkpoint whose space changed is PROJECTED
+/// (never silently reinterpreted), and a round boundary can tighten the
+/// menus and continue through the same projection path.
+///
+/// `rebuild` turns a re-pruned [`PrunedSpace`] into the `SpaceBuild` the
+/// backend re-syncs onto (the leader closes over its `ModelMeta`; callers
+/// without re-pruning pass anything — it is only called when `pruned` is
+/// `Some` and `reprune_every` fires). `sink` receives every progress
+/// event; `cancel` is polled at round boundaries.
+pub fn drive<O: RecordedObjective>(
+    cfg: &DriveCfg,
+    opts: &DriveOpts,
+    objective: &mut O,
+    pruned: Option<&PrunedSpace>,
+    rebuild: &dyn Fn(&PrunedSpace) -> SpaceBuild,
+    sink: &mut dyn ProgressSink,
+    cancel: &CancelToken,
+) -> Result<DriveOutcome> {
+    let budget = cfg.n_evals;
+    if opts.checkpoint.is_none()
+        && opts.resume.is_none()
+        && opts.reprune_every.is_none()
+        && opts.warehouse.is_none()
+        && !opts.autoscale
+    {
+        let mut searcher = searcher_for(cfg);
+        let history = searcher.run(objective, budget);
+        let records = objective.records().to_vec();
+        let farm = objective.health();
+        return Ok(DriveOutcome {
+            history,
+            records,
+            rebuilt: None,
+            farm,
+            warm_start: None,
+            interrupted: false,
+        });
+    }
+
+    let batch_algo = match cfg.algo {
+        Algo::KmeansTpe => BatchAlgo::KmeansTpe(KmeansTpeParams {
+            n_startup: cfg.n_startup,
+            seed: cfg.seed,
+            ..Default::default()
+        }),
+        Algo::Tpe => BatchAlgo::Tpe(TpeParams {
+            n_startup: cfg.n_startup,
+            seed: cfg.seed,
+            ..Default::default()
+        }),
+        other => anyhow::bail!(
+            "--checkpoint/--resume/--reprune-every/--warehouse/--autoscale need a \
+             TPE-family --algo (kmeans-tpe or tpe), got '{}'",
+            other.name()
+        ),
+    };
+    let searcher = BatchSearcher::new(batch_algo, cfg.batch_q);
+    let mut resumed = opts.resume.as_deref().map(SessionCheckpoint::load_auto).transpose()?;
+    // PRE-projection trial count of the resumed checkpoint — seeds the
+    // rotation store's shrink detector, so a projected (strict) resume
+    // that saves below the directory's on-disk maximum truncates the
+    // superseded timeline instead of being outranked by it.
+    let resumed_pre_trials = resumed.as_ref().map(|c| c.search.history.len());
+    let mut prior: Vec<EvalRecord> = Vec::new();
+    if let Some(ck) = &mut resumed {
+        anyhow::ensure!(
+            ck.algo == cfg.algo.name(),
+            "checkpoint holds a '{}' search, this run is '{}'",
+            ck.algo,
+            cfg.algo.name()
+        );
+        anyhow::ensure!(
+            ck.seed == cfg.seed,
+            "checkpoint seed {:#x} != --seed {:#x}: resuming would splice two \
+             different random streams",
+            ck.seed,
+            cfg.seed
+        );
+        // Cross-space gate: this run's pruning may legitimately differ
+        // from the checkpoint's (fresh sensitivity estimates). With a
+        // projection policy the history is remapped and logged; without
+        // one a fingerprint mismatch is a hard error.
+        if let Some(report) =
+            project_session_checkpoint(ck, objective.space(), opts.resume_project)?
+        {
+            sink.emit(&JobEvent::Projection { phase: "resume".to_string(), report });
+        }
+        prior = ck.records.clone();
+    }
+    // Cross-session transfer store (`--warehouse`): one digest covers the
+    // objective knobs + hardware model, so histories collected under a
+    // different reward are never mistaken for this run's.
+    let wh_ctx = match (&opts.warehouse, &opts.warehouse_digest) {
+        (Some(dir), Some(digest)) => Some((Warehouse::open(dir)?, digest.clone())),
+        (Some(dir), None) => anyhow::bail!(
+            "warehouse {} configured without a digest (DriveOpts::warehouse_digest)",
+            dir.display()
+        ),
+        _ => None,
+    };
+    // A resumed checkpoint already carries its own paid history — the
+    // warehouse then only RECEIVES this session's fresh records.
+    let mut warm: Option<WarmStart> = None;
+    if let (Some((wh, digest)), None) = (&wh_ctx, &resumed) {
+        let policy = opts.warm_start.unwrap_or(ProjectPolicy::Nearest);
+        warm = wh.lookup(objective.space(), digest, policy)?;
+    }
+    let mut warm_report: Option<ProjectionReport> = None;
+    let mut run = match warm {
+        None => searcher.start(
+            objective.space().clone(),
+            budget,
+            resumed.as_ref().map(|c| &c.search),
+        )?,
+        Some(WarmStart::Exact { key, records }) => {
+            let cached = objective.seed_cache(&records);
+            sink.emit(&JobEvent::WarmStart {
+                key,
+                seeded: records.len(),
+                cached,
+                projected: false,
+            });
+            let configs: Vec<Config> = records.iter().map(|r| r.config.clone()).collect();
+            let values: Vec<f64> = records.iter().map(|r| r.value).collect();
+            searcher.start_warm(objective.space().clone(), budget, configs, values)?
+        }
+        Some(WarmStart::Projected { key, configs, values, report }) => {
+            // Projected values were measured on a DIFFERENT space: they
+            // seed the surrogates but never the eval cache — a config that
+            // was merely snapped near a paid one is still unpaid.
+            sink.emit(&JobEvent::WarmStart {
+                key,
+                seeded: configs.len(),
+                cached: 0,
+                projected: true,
+            });
+            sink.emit(&JobEvent::Projection {
+                phase: "warm-start".to_string(),
+                report: report.clone(),
+            });
+            warm_report = Some(report);
+            searcher.start_warm(objective.space().clone(), budget, configs, values)?
+        }
+    };
+    let store = match (&opts.checkpoint, opts.checkpoint_keep) {
+        (Some(dir), Some(keep)) => {
+            let store = CheckpointStore::new(dir.clone(), keep);
+            // Seed the shrink detector ONLY when the resume source and the
+            // checkpoint directory are the same timeline (the dir itself,
+            // or a file inside it): a resume from elsewhere says nothing
+            // about THIS directory's files, and seeding anyway would
+            // bulldoze an unrelated session's later checkpoints in a
+            // reused dir.
+            let same_timeline = opts
+                .resume
+                .as_deref()
+                .is_some_and(|r| r == dir.as_path() || r.parent() == Some(dir.as_path()));
+            if let (true, Some(trials)) = (same_timeline, resumed_pre_trials) {
+                store.seed_resume_count(trials);
+            }
+            Some(store)
+        }
+        _ => None,
+    };
+    // Re-prune state: the current pruning (k grows per re-prune), how many
+    // records `prior` has already absorbed, and the latest build paired
+    // with the pruning that produced it.
+    let mut cur_pruned = pruned.cloned();
+    let mut taken = 0usize;
+    let mut rebuilt: Option<(SpaceBuild, PrunedSpace)> = None;
+    let mut reprunes = 0usize;
+    let mut rounds_since = 0usize;
+    let mut interrupted = false;
+    // Health loop: one PoolStats snapshot per round feeds the per-round
+    // operator log and the autoscaling policy. The supervisor is pure in
+    // the snapshot (no clocks, no RNG), so a seeded replay of the same
+    // farm produces the same decision sequence; whether a decision is
+    // ACTED on is gated by `autoscale`, the log always appears.
+    let mut supervisor = Supervisor::new(SupervisorCfg::default());
+    let mut round_no = 0usize;
+    while !run.done() {
+        // Round-boundary cancellation: the finished rounds are all
+        // checkpointed, nothing is half-served.
+        if cancel.should_stop() {
+            interrupted = true;
+            break;
+        }
+        let stat = run.step(objective);
+        rounds_since += 1;
+        round_no += 1;
+        if let Some(stat) = stat {
+            let (best_value, best_config) = run
+                .history()
+                .best()
+                .map(|t| (t.value, t.config.clone()))
+                .unwrap_or((f64::NEG_INFINITY, Vec::new()));
+            sink.emit(&JobEvent::Round {
+                round: round_no,
+                trials: run.history().len(),
+                best_value,
+                best_config,
+                q: stat.q,
+                distinct: stat.distinct,
+                startup: stat.startup,
+                propose_secs: stat.propose_secs,
+                eval_secs: stat.eval_secs,
+            });
+        }
+        if let Some((hits, misses, evictions)) = objective.cache_stats() {
+            sink.emit(&JobEvent::Cache { round: round_no, hits, misses, evictions });
+        }
+        if let Some(stats) = objective.health() {
+            sink.emit(&JobEvent::Farm { round: round_no, stats });
+            let decision = supervisor.observe(round_no, &stats);
+            if !matches!(decision, Decision::Hold) {
+                if let Some(event) = supervisor.events.last() {
+                    // Structured line a control plane can scrape.
+                    sink.emit(&JobEvent::Supervisor { event: event.clone() });
+                }
+                if let Decision::FlagPressure { deficit } = decision {
+                    // The dedicated pressure event autoscaling consumers
+                    // watch (the `/metrics` gauge).
+                    sink.emit(&JobEvent::Pressure { round: round_no, deficit });
+                }
+                if opts.autoscale {
+                    objective.apply_decision(&decision);
+                }
+            }
+        }
+        if let Some(path) = &opts.checkpoint {
+            let mut records = prior.clone();
+            records.extend(objective.records()[taken..].iter().cloned());
+            let ck = SessionCheckpoint {
+                algo: cfg.algo.name().to_string(),
+                seed: cfg.seed,
+                n_evals: budget,
+                search: run.checkpoint(),
+                records,
+            };
+            match &store {
+                Some(store) => {
+                    store.save(&ck)?;
+                }
+                None => ck.save(path)?,
+            }
+        }
+        // Every completed round pays its fresh records forward: the
+        // session's own segment file is rewritten whole and deduped, so
+        // replays are idempotent and concurrent leaders never touch each
+        // other's segments. Non-fatal — a full disk must not kill an
+        // hours-long search that is otherwise healthy.
+        if let Some((wh, digest)) = &wh_ctx {
+            let key = warehouse_key(objective.space(), digest);
+            if let Err(e) = wh.append(&key, objective.space(), &objective.records()[taken..])
+            {
+                sink.emit(&JobEvent::WarehouseError { error: format!("{e:#}") });
+            }
+        }
+        let due = opts.reprune_every.is_some_and(|every| rounds_since >= every.max(1));
+        if !due || run.done() {
+            continue;
+        }
+        rounds_since = 0;
+        let Some(p) = &cur_pruned else {
+            // --no-prune ablations have no sensitivities to re-cluster.
+            continue;
+        };
+        reprunes += 1;
+        let k = cfg.sensitivity_clusters + reprunes;
+        let next = p.reprune(k);
+        let build = rebuild(&next);
+        if build.space.fingerprint() == objective.space().fingerprint() {
+            sink.emit(&JobEvent::Reprune { k, outcome: RepruneOutcome::Unchanged });
+            cur_pruned = Some(next);
+            continue;
+        }
+        // Re-sync -> freeze -> project -> restart from the projection.
+        // Re-sync goes FIRST and is non-fatal: a refused or blipped farm
+        // re-sync (open_session rolls the new session back, the current
+        // one keeps serving) downgrades to "skip this re-prune and
+        // continue on the current space" — a transient farm hiccup must
+        // not kill an hours-long search, and nothing of the run's state
+        // has been touched yet at that point.
+        sink.emit(&JobEvent::Reprune { k, outcome: RepruneOutcome::Changed });
+        if let Err(e) = objective.resync(&build) {
+            sink.emit(&JobEvent::Reprune {
+                k,
+                outcome: RepruneOutcome::ResyncFailed(format!("{e:#}")),
+            });
+            continue;
+        }
+        // The freeze is a full SessionCheckpoint so the SAME gate that
+        // handles --resume projects history and records in lockstep — the
+        // invariant lives in one function, not two.
+        let mut frozen = SessionCheckpoint {
+            algo: cfg.algo.name().to_string(),
+            seed: cfg.seed,
+            n_evals: budget,
+            search: run.checkpoint(),
+            records: {
+                let mut all = std::mem::take(&mut prior);
+                all.extend(objective.records()[taken..].iter().cloned());
+                all
+            },
+        };
+        let policy = opts.resume_project.unwrap_or(ProjectPolicy::Nearest);
+        if let Some(report) =
+            project_session_checkpoint(&mut frozen, &build.space, Some(policy))?
+        {
+            sink.emit(&JobEvent::Projection { phase: "reprune".to_string(), report });
+        }
+        prior = frozen.records;
+        taken = objective.records().len();
+        run = searcher.start(build.space.clone(), budget, Some(&frozen.search))?;
+        cur_pruned = Some(next.clone());
+        rebuilt = Some((build, next));
+    }
+    let (history, _rounds) = run.finish();
+    let mut records = prior;
+    records.extend(objective.records()[taken..].iter().cloned());
+    let farm = objective.health();
+    Ok(DriveOutcome { history, records, rebuilt, farm, warm_start: warm_report, interrupted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::{Objective, Space, SyntheticObjective};
+    use std::time::Duration;
+
+    /// Synthetic objective that records like the real backends do — what
+    /// lets the drive loop be tested without PJRT artifacts or TCP.
+    struct RecordingSynthetic {
+        inner: SyntheticObjective,
+        log: Vec<EvalRecord>,
+    }
+
+    impl RecordingSynthetic {
+        fn new(dims: usize, choices: usize) -> RecordingSynthetic {
+            RecordingSynthetic {
+                inner: SyntheticObjective::new(dims, choices, Duration::ZERO),
+                log: Vec::new(),
+            }
+        }
+    }
+
+    impl Objective for RecordingSynthetic {
+        fn space(&self) -> &Space {
+            self.inner.space()
+        }
+
+        fn eval(&mut self, config: &Config) -> f64 {
+            let value = self.inner.eval(config);
+            self.log.push(EvalRecord::value_only(config.clone(), value));
+            value
+        }
+    }
+
+    impl RecordedObjective for RecordingSynthetic {
+        fn records(&self) -> &[EvalRecord] {
+            &self.log
+        }
+
+        fn resync(&mut self, build: &SpaceBuild) -> Result<()> {
+            self.inner = SyntheticObjective::with_space(build.space.clone(), Duration::ZERO);
+            Ok(())
+        }
+    }
+
+    fn cfg(seed: u64, n: usize) -> DriveCfg {
+        DriveCfg {
+            algo: Algo::KmeansTpe,
+            seed,
+            n_evals: n,
+            n_startup: 6,
+            batch_q: QPolicy::Fixed(3),
+            sensitivity_clusters: 4,
+        }
+    }
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            name: "unit".into(),
+            tenant: "acme".into(),
+            session: SessionSpec::synthetic(
+                SyntheticObjective::new(4, 3, Duration::ZERO).space().clone(),
+            ),
+            algo: Algo::KmeansTpe,
+            seed: 0xFEED_FACE_DEAD_BEEF,
+            n_evals: 24,
+            n_startup: 8,
+            batch_q: QPolicy::Fixed(4),
+            warm_start: Some(ProjectPolicy::Nearest),
+        }
+    }
+
+    /// Sink that collects events and (optionally) cancels after a number
+    /// of completed rounds — how the tests stop a run "mid-flight".
+    struct CollectSink {
+        events: Vec<JobEvent>,
+        cancel_after_rounds: Option<(usize, CancelToken)>,
+        rounds: usize,
+    }
+
+    impl CollectSink {
+        fn new() -> CollectSink {
+            CollectSink { events: Vec::new(), cancel_after_rounds: None, rounds: 0 }
+        }
+    }
+
+    impl ProgressSink for CollectSink {
+        fn emit(&mut self, event: &JobEvent) {
+            if let JobEvent::Round { .. } = event {
+                self.rounds += 1;
+                if let Some((after, token)) = &self.cancel_after_rounds {
+                    if self.rounds >= *after {
+                        token.halt();
+                    }
+                }
+            }
+            self.events.push(event.clone());
+        }
+    }
+
+    fn noop_rebuild(_p: &PrunedSpace) -> SpaceBuild {
+        unreachable!("no re-pruning in these tests")
+    }
+
+    #[test]
+    fn job_spec_json_round_trips_and_defaults_tenant() {
+        let s = spec();
+        let text = s.to_json().to_string_pretty();
+        let back = JobSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        assert_eq!(back.seed, 0xFEED_FACE_DEAD_BEEF);
+        assert_eq!(back.batch_q, QPolicy::Fixed(4));
+        assert_eq!(back.warm_start, Some(ProjectPolicy::Nearest));
+        // Missing tenant/name default instead of failing.
+        let mut j = s.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("tenant");
+            map.remove("name");
+            map.remove("warm_start");
+        }
+        let defaulted = JobSpec::from_json(&j).unwrap();
+        assert_eq!(defaulted.tenant, "default");
+        assert_eq!(defaulted.name, "");
+        assert_eq!(defaulted.warm_start, None);
+        // The digest matches what a CLI leader with the same knobs derives.
+        assert_eq!(
+            s.warehouse_digest(),
+            session_digest(&s.session.objective, &s.session.hw)
+        );
+    }
+
+    #[test]
+    fn job_events_round_trip_through_json() {
+        let stats = PoolStats { capacity: 3, last_round_size: 4, ..Default::default() };
+        let report = ProjectionReport {
+            policy: ProjectPolicy::Nearest,
+            kept: 3,
+            snapped: 1,
+            dropped: 0,
+            per_dim: Vec::new(),
+            dropped_dims: Vec::new(),
+            new_dims: Vec::new(),
+            old_fingerprint: "a".into(),
+            new_fingerprint: "b".into(),
+        };
+        let events = vec![
+            JobEvent::Spec { spec: spec() },
+            JobEvent::State { state: JobState::Searching, detail: "resumed".into() },
+            JobEvent::Round {
+                round: 2,
+                trials: 6,
+                best_value: f64::NEG_INFINITY,
+                best_config: vec![0, 2, 1],
+                q: 3,
+                distinct: 3,
+                startup: false,
+                propose_secs: 0.25,
+                eval_secs: 1.5,
+            },
+            JobEvent::Cache { round: 2, hits: 1, misses: 5, evictions: 0 },
+            JobEvent::Farm { round: 2, stats },
+            JobEvent::Supervisor {
+                event: SupervisorEvent {
+                    round: 2,
+                    decision: Decision::FlagPressure { deficit: 2 },
+                    stats,
+                },
+            },
+            JobEvent::Pressure { round: 2, deficit: 2 },
+            JobEvent::WarmStart { key: "k".into(), seeded: 9, cached: 4, projected: false },
+            JobEvent::Projection { phase: "resume".into(), report },
+            JobEvent::Reprune { k: 5, outcome: RepruneOutcome::Unchanged },
+            JobEvent::Reprune { k: 6, outcome: RepruneOutcome::Changed },
+            JobEvent::Reprune {
+                k: 7,
+                outcome: RepruneOutcome::ResyncFailed("farm blipped".into()),
+            },
+            JobEvent::WarehouseError { error: "disk full".into() },
+            JobEvent::Draining,
+            JobEvent::Report { report: obj(vec![("algo", Json::Str("tpe".into()))]) },
+        ];
+        for ev in &events {
+            let text = ev.to_json().to_string_compact();
+            let back = JobEvent::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.to_json().to_string_compact(), text, "event {text}");
+        }
+        assert!(JobEvent::from_json(
+            &Json::parse(r#"{"ev":"martian"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn job_state_machine_validates_transitions() {
+        let mut h = JobHandle::new("job-1", spec());
+        assert_eq!(h.state, JobState::Queued);
+        h.transition(JobState::Searching, "").unwrap();
+        // Resume re-entry is legal; backwards to Queued is not.
+        h.transition(JobState::Searching, "resumed").unwrap();
+        assert!(h.transition(JobState::Queued, "").is_err());
+        h.transition(JobState::Done, "").unwrap();
+        assert!(h.state.terminal());
+        // Terminal states are final.
+        assert!(h.transition(JobState::Searching, "").is_err());
+        assert!(h.transition(JobState::Cancelled, "").is_err());
+        // Queued can fail straight away (connect error).
+        let mut h2 = JobHandle::new("job-2", spec());
+        h2.transition(JobState::Failed, "no worker reachable").unwrap();
+        assert_eq!(h2.detail, "no worker reachable");
+    }
+
+    #[test]
+    fn replay_rebuilds_the_handle_from_events() {
+        let events = vec![
+            JobEvent::Spec { spec: spec() },
+            JobEvent::State { state: JobState::Searching, detail: String::new() },
+            JobEvent::Round {
+                round: 1,
+                trials: 4,
+                best_value: -2.0,
+                best_config: vec![0, 1, 0, 1],
+                q: 4,
+                distinct: 4,
+                startup: true,
+                propose_secs: 0.0,
+                eval_secs: 0.1,
+            },
+            JobEvent::Pressure { round: 1, deficit: 3 },
+            JobEvent::Round {
+                round: 2,
+                trials: 8,
+                best_value: -1.0,
+                best_config: vec![0, 0, 0, 1],
+                q: 4,
+                distinct: 4,
+                startup: true,
+                propose_secs: 0.0,
+                eval_secs: 0.1,
+            },
+            JobEvent::Draining,
+        ];
+        let h = JobHandle::replay("job-9", &events).unwrap();
+        assert_eq!(h.id, "job-9");
+        assert_eq!(h.state, JobState::Searching);
+        assert!(!h.state.terminal(), "unfinished job must be resumable");
+        assert_eq!(h.trials, 8);
+        assert_eq!(h.best_value, Some(-1.0));
+        assert_eq!(h.best_config, Some(vec![0, 0, 0, 1]));
+        assert_eq!(h.pressure, 3);
+        // The drain belonged to the DEAD daemon; the replayed handle is live.
+        assert!(!h.draining);
+        // A journal that lost its spec line is an error, not a panic.
+        assert!(JobHandle::replay("job-9", &events[1..]).is_err());
+        // Status json carries the incumbent with raw-bit values.
+        let status = h.status_json();
+        assert_eq!(status.get("state").and_then(|v| v.as_str()), Some("searching"));
+        assert_eq!(status.get("trials").and_then(|v| v.as_usize()), Some(8));
+    }
+
+    #[test]
+    fn drive_checkpointed_matches_plain_run_bit_for_bit() {
+        // The stepwise checkpointed path must not change the search: same
+        // seed, same budget -> same history and records as Searcher::run.
+        let dir = std::env::temp_dir()
+            .join(format!("sammpq_jobs_drive_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = cfg(11, 18);
+
+        let mut plain_obj = RecordingSynthetic::new(4, 3);
+        let mut plain_searcher = searcher_for(&c);
+        let plain = plain_searcher.run(&mut plain_obj, c.n_evals);
+
+        let mut obj = RecordingSynthetic::new(4, 3);
+        let mut sink = CollectSink::new();
+        let opts = DriveOpts {
+            checkpoint: Some(dir.join("ckpt")),
+            checkpoint_keep: Some(3),
+            ..Default::default()
+        };
+        let out = drive(
+            &c,
+            &opts,
+            &mut obj,
+            None,
+            &noop_rebuild,
+            &mut sink,
+            &CancelToken::new(),
+        )
+        .unwrap();
+        assert!(!out.interrupted);
+        assert_eq!(out.history.values(), plain.values());
+        assert_eq!(
+            out.history.trials.iter().map(|t| &t.config).collect::<Vec<_>>(),
+            plain.trials.iter().map(|t| &t.config).collect::<Vec<_>>()
+        );
+        assert_eq!(out.records, plain_obj.log);
+        // Round events cover the full budget and agree with the history.
+        let rounds: Vec<&JobEvent> = sink
+            .events
+            .iter()
+            .filter(|e| matches!(e, JobEvent::Round { .. }))
+            .collect();
+        assert!(!rounds.is_empty());
+        if let JobEvent::Round { trials, best_value, .. } = rounds.last().unwrap() {
+            assert_eq!(*trials, c.n_evals);
+            assert_eq!(*best_value, out.history.best().unwrap().value);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn halted_drive_resumes_from_checkpoint_bit_identically() {
+        // The daemon's crash/drain story in miniature: halt a run at a
+        // round boundary, then resume from the rotation dir — the final
+        // history must be bit-identical to the uninterrupted run.
+        let dir = std::env::temp_dir()
+            .join(format!("sammpq_jobs_resume_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = cfg(23, 21);
+
+        let mut ref_obj = RecordingSynthetic::new(4, 3);
+        let mut ref_sink = CollectSink::new();
+        let ref_opts = DriveOpts {
+            checkpoint: Some(dir.join("ref")),
+            checkpoint_keep: Some(2),
+            ..Default::default()
+        };
+        let reference = drive(
+            &c,
+            &ref_opts,
+            &mut ref_obj,
+            None,
+            &noop_rebuild,
+            &mut ref_sink,
+            &CancelToken::new(),
+        )
+        .unwrap();
+
+        // Interrupted run: the sink halts the token after two rounds.
+        let token = CancelToken::new();
+        let mut sink = CollectSink::new();
+        sink.cancel_after_rounds = Some((2, token.clone()));
+        let ck_dir = dir.join("live");
+        let opts = DriveOpts {
+            checkpoint: Some(ck_dir.clone()),
+            checkpoint_keep: Some(2),
+            ..Default::default()
+        };
+        let mut obj = RecordingSynthetic::new(4, 3);
+        let first = drive(&c, &opts, &mut obj, None, &noop_rebuild, &mut sink, &token)
+            .unwrap();
+        assert!(first.interrupted, "halt must stop the run early");
+        assert!(first.history.len() < c.n_evals);
+        assert!(!token.cancelled() && token.halted());
+
+        // Resume (fresh objective — the daemon restarted) and finish.
+        let resume_opts = DriveOpts {
+            checkpoint: Some(ck_dir.clone()),
+            checkpoint_keep: Some(2),
+            resume: Some(ck_dir),
+            ..Default::default()
+        };
+        let mut obj2 = RecordingSynthetic::new(4, 3);
+        let mut sink2 = CollectSink::new();
+        let resumed = drive(
+            &c,
+            &resume_opts,
+            &mut obj2,
+            None,
+            &noop_rebuild,
+            &mut sink2,
+            &CancelToken::new(),
+        )
+        .unwrap();
+        assert!(!resumed.interrupted);
+        assert_eq!(resumed.history.values(), reference.history.values());
+        assert_eq!(resumed.records, reference.records);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drive_rejects_non_tpe_algos_for_stateful_runs() {
+        let mut obj = RecordingSynthetic::new(3, 3);
+        let mut sink = CollectSink::new();
+        let c = DriveCfg { algo: Algo::Random, ..cfg(1, 8) };
+        let opts = DriveOpts {
+            checkpoint: Some(std::env::temp_dir().join("sammpq_never_written.json")),
+            ..Default::default()
+        };
+        let err = drive(&c, &opts, &mut obj, None, &noop_rebuild, &mut sink, &CancelToken::new())
+            .unwrap_err();
+        assert!(err.to_string().contains("TPE-family"), "{err}");
+    }
+}

@@ -1,0 +1,252 @@
+//! Per-job append-only event journals — the serve daemon's source of truth.
+//!
+//! One JSONL file per job (`<state_dir>/journal/<job-id>.jsonl`), one
+//! [`JobEvent`] per line wrapped as `{"seq": N, "ev": {...}}`. The first
+//! line is always the job's `Spec` event, so a journal alone is enough to
+//! re-run the job; everything after is the progress stream the runtime
+//! emitted. Writes go through the same atomic tmp+rename discipline as the
+//! warehouse segments: the file is rewritten whole and committed by rename,
+//! so a crash mid-write leaves the previous intact version, never a torn
+//! line. (Journals are hundreds of small lines — rewriting whole is cheaper
+//! than the corruption story of appends, and it keeps the recovery code
+//! trivial: a journal on disk is always a valid prefix of the job's life.)
+//!
+//! On daemon restart, [`Journal::scan`] loads every journal in the
+//! directory; jobs whose event stream reaches a terminal `State` are
+//! reconstructed read-only, and a job still `Searching` is resumed from its
+//! checkpoint directory with its journal continued in place.
+//!
+//! [`JobEvent`]: super::jobs::JobEvent
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::jobs::JobEvent;
+use crate::util::json::{obj, Json};
+
+/// One job's event log, held in memory and mirrored to disk on every
+/// append.
+pub struct Journal {
+    path: PathBuf,
+    events: Vec<JobEvent>,
+}
+
+impl Journal {
+    /// File a job's journal lives in.
+    pub fn path_for(dir: &Path, job_id: &str) -> PathBuf {
+        dir.join(format!("{job_id}.jsonl"))
+    }
+
+    /// Open (or create) the journal for `job_id` under `dir`, loading any
+    /// events a previous daemon persisted. Unparseable lines — a torn
+    /// write from a pre-rename crash window, manual editing — end the
+    /// loaded prefix with a warning rather than failing the whole daemon:
+    /// the journal up to that point is still a valid history.
+    pub fn open(dir: &Path, job_id: &str) -> Result<Journal> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create journal dir {}", dir.display()))?;
+        let path = Journal::path_for(dir, job_id);
+        let events = match std::fs::read_to_string(&path) {
+            Ok(text) => parse_journal(&path, &text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => {
+                return Err(e).with_context(|| format!("read journal {}", path.display()));
+            }
+        };
+        Ok(Journal { path, events })
+    }
+
+    pub fn events(&self) -> &[JobEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Append one event and commit the journal to disk (atomic
+    /// tmp+rename). The event is sequenced by its position, so replay
+    /// order is the file's line order.
+    pub fn append(&mut self, event: JobEvent) -> Result<()> {
+        self.events.push(event);
+        let mut text = String::new();
+        for (seq, ev) in self.events.iter().enumerate() {
+            let line = obj(vec![
+                ("seq", Json::Num(seq as f64)),
+                ("ev", ev.to_json()),
+            ]);
+            text.push_str(&line.to_string_compact());
+            text.push('\n');
+        }
+        let tmp = self.path.with_extension("tmp");
+        std::fs::write(&tmp, text)
+            .with_context(|| format!("write journal {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("commit journal {}", self.path.display()))?;
+        Ok(())
+    }
+
+    /// Load every journal under `dir`, sorted by job id — what a
+    /// restarting daemon replays. A missing directory is an empty fleet,
+    /// not an error.
+    pub fn scan(dir: &Path) -> Result<Vec<(String, Vec<JobEvent>)>> {
+        let entries = match std::fs::read_dir(dir) {
+            Ok(entries) => entries,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => {
+                return Err(e).with_context(|| format!("scan journals {}", dir.display()));
+            }
+        };
+        let mut out = Vec::new();
+        for entry in entries {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("jsonl") {
+                continue;
+            }
+            let Some(job_id) = path.file_stem().and_then(|s| s.to_str()) else {
+                continue;
+            };
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("read journal {}", path.display()))?;
+            out.push((job_id.to_string(), parse_journal(&path, &text)));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+}
+
+/// Parse a journal body into its event prefix, stopping (with a warning)
+/// at the first line that does not decode.
+fn parse_journal(path: &Path, text: &str) -> Vec<JobEvent> {
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(line)
+            .ok()
+            .and_then(|j| j.req("ev").ok().cloned())
+            .and_then(|ev| JobEvent::from_json(&ev).ok());
+        match parsed {
+            Some(ev) => events.push(ev),
+            None => {
+                eprintln!(
+                    "[journal] {}: line {} unreadable; keeping the {} events before it",
+                    path.display(),
+                    i + 1,
+                    events.len()
+                );
+                break;
+            }
+        }
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::jobs::{JobHandle, JobSpec, JobState};
+    use crate::coordinator::leader::Algo;
+    use crate::coordinator::service::SessionSpec;
+    use crate::search::{Objective, ProjectPolicy, QPolicy, SyntheticObjective};
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            name: "journal-test".into(),
+            tenant: "default".into(),
+            session: SessionSpec::synthetic(
+                SyntheticObjective::new(3, 3, std::time::Duration::ZERO).space().clone(),
+            ),
+            algo: Algo::KmeansTpe,
+            seed: 7,
+            n_evals: 12,
+            n_startup: 4,
+            batch_q: QPolicy::Fixed(3),
+            warm_start: Some(ProjectPolicy::Strict),
+        }
+    }
+
+    fn round(round: usize, trials: usize, best: f64) -> JobEvent {
+        JobEvent::Round {
+            round,
+            trials,
+            best_value: best,
+            best_config: vec![0, 1, 2],
+            q: 3,
+            distinct: 3,
+            startup: false,
+            propose_secs: 0.0,
+            eval_secs: 0.5,
+        }
+    }
+
+    #[test]
+    fn journal_persists_and_reloads_events() {
+        let dir = std::env::temp_dir()
+            .join(format!("sammpq_journal_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut j = Journal::open(&dir, "job-1").unwrap();
+            assert!(j.is_empty());
+            j.append(JobEvent::Spec { spec: spec() }).unwrap();
+            j.append(JobEvent::State {
+                state: JobState::Searching,
+                detail: String::new(),
+            })
+            .unwrap();
+            j.append(round(1, 3, -4.0)).unwrap();
+            j.append(round(2, 6, -2.0)).unwrap();
+            assert_eq!(j.len(), 4);
+        }
+        // A fresh open (a restarted daemon) sees the same prefix...
+        let j = Journal::open(&dir, "job-1").unwrap();
+        assert_eq!(j.len(), 4);
+        let handle = JobHandle::replay("job-1", j.events()).unwrap();
+        assert_eq!(handle.state, JobState::Searching);
+        assert_eq!(handle.trials, 6);
+        assert_eq!(handle.best_value, Some(-2.0));
+        // ...and an unrelated job starts empty next to it.
+        let other = Journal::open(&dir, "job-2").unwrap();
+        assert!(other.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_returns_all_jobs_and_survives_a_torn_tail() {
+        let dir = std::env::temp_dir()
+            .join(format!("sammpq_journal_scan_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut a = Journal::open(&dir, "job-a").unwrap();
+        a.append(JobEvent::Spec { spec: spec() }).unwrap();
+        a.append(round(1, 3, -5.0)).unwrap();
+        let mut b = Journal::open(&dir, "job-b").unwrap();
+        b.append(JobEvent::Spec { spec: spec() }).unwrap();
+        // Tear job-a's tail the way a crashed half-write would (the
+        // tmp+rename discipline makes this near-impossible, but recovery
+        // must still be graceful if it ever happens).
+        let path = Journal::path_for(&dir, "job-a");
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"seq\":2,\"ev\":{\"ev\":\"rou");
+        std::fs::write(&path, text).unwrap();
+        // Non-journal files are ignored.
+        std::fs::write(dir.join("notes.txt"), "not a journal").unwrap();
+
+        let scanned = Journal::scan(&dir).unwrap();
+        assert_eq!(
+            scanned.iter().map(|(id, _)| id.as_str()).collect::<Vec<_>>(),
+            vec!["job-a", "job-b"]
+        );
+        // The torn line is dropped, the valid prefix survives.
+        assert_eq!(scanned[0].1.len(), 2);
+        assert_eq!(scanned[1].1.len(), 1);
+        // Scanning a directory that never existed is an empty fleet.
+        assert!(Journal::scan(&dir.join("nowhere")).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

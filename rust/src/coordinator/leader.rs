@@ -22,18 +22,15 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::baselines::{Evolutionary, EvolutionaryParams, GpBo, GpBoParams, RandomSearch,
-                       Reinforce, ReinforceParams};
 use crate::coordinator::evaluator::{build_space, DnnObjective, EvalRecord, ObjectiveCfg,
                                     SpaceBuild};
+use crate::coordinator::jobs;
 use crate::coordinator::service::{JoinRegistry, PoolCfg, RemoteObjective, SessionSpec};
-use crate::coordinator::supervisor::{Decision, PoolStats, Supervisor, SupervisorCfg};
+use crate::coordinator::supervisor::{Decision, PoolStats};
 use crate::hessian::pruner::{prune_space, PrunedSpace};
 use crate::hw::HwConfig;
-use crate::search::{cfg_digest, warehouse_key, BatchAlgo, BatchSearcher, Config, History,
-                    KmeansTpe, KmeansTpeParams, Objective, ProjectPolicy, ProjectionReport,
-                    QPolicy, SearchCheckpoint, Searcher, Space, SpaceProjection, Tpe,
-                    TpeParams, WarmStart, Warehouse};
+use crate::search::{Config, History, Objective, ProjectPolicy, ProjectionReport, QPolicy,
+                    SearchCheckpoint, Searcher, Space, SpaceProjection};
 use crate::train::session::{ModelSession, ParamSnapshot};
 use crate::util::json::{obj, Json};
 use crate::util::Timer;
@@ -626,63 +623,26 @@ pub struct SearchReport {
     pub warm_start: Option<ProjectionReport>,
 }
 
-/// Build the searcher a `LeaderCfg` asks for. Separated from [`Leader`]
-/// (which needs a live `ModelSession`) so the `batch_q` -> searcher
-/// plumbing is testable without PJRT artifacts.
+/// The job-runtime [`DriveCfg`] a `LeaderCfg` asks for, for `algo`.
+///
+/// [`DriveCfg`]: crate::coordinator::jobs::DriveCfg
+fn drive_cfg(cfg: &LeaderCfg, algo: Algo) -> jobs::DriveCfg {
+    jobs::DriveCfg {
+        algo,
+        seed: cfg.seed,
+        n_evals: cfg.n_evals,
+        n_startup: cfg.n_startup,
+        batch_q: cfg.batch_q,
+        sensitivity_clusters: cfg.sensitivity_clusters,
+    }
+}
+
+/// Build the searcher a `LeaderCfg` asks for. The `batch_q` -> searcher
+/// mapping itself lives in the job runtime ([`jobs::searcher_for`]) so the
+/// CLI leader and the serve daemon can never disagree about it; this shim
+/// only translates the config.
 fn searcher_for(cfg: &LeaderCfg, algo: Algo) -> Box<dyn Searcher> {
-    let seed = cfg.seed;
-    let n0 = cfg.n_startup;
-    if cfg.batch_q.batched() {
-        // Batched rounds exist for the model-based TPE family; the other
-        // baselines keep their published sequential loops.
-        let policy = cfg.batch_q;
-        match algo {
-            Algo::KmeansTpe => {
-                return Box::new(BatchSearcher::new(
-                    crate::search::BatchAlgo::KmeansTpe(KmeansTpeParams {
-                        n_startup: n0,
-                        seed,
-                        ..Default::default()
-                    }),
-                    policy,
-                ));
-            }
-            Algo::Tpe => {
-                return Box::new(BatchSearcher::new(
-                    crate::search::BatchAlgo::Tpe(TpeParams {
-                        n_startup: n0,
-                        seed,
-                        ..Default::default()
-                    }),
-                    policy,
-                ));
-            }
-            _ => {}
-        }
-    }
-    match algo {
-        Algo::KmeansTpe => Box::new(KmeansTpe::new(KmeansTpeParams {
-            n_startup: n0,
-            seed,
-            ..Default::default()
-        })),
-        Algo::Tpe => {
-            Box::new(Tpe::new(TpeParams { n_startup: n0, seed, ..Default::default() }))
-        }
-        Algo::Random => Box::new(RandomSearch::new(seed)),
-        Algo::Evolutionary => Box::new(Evolutionary::new(EvolutionaryParams {
-            seed,
-            ..Default::default()
-        })),
-        Algo::Reinforce => {
-            Box::new(Reinforce::new(ReinforceParams { seed, ..Default::default() }))
-        }
-        Algo::GpBo => Box::new(GpBo::new(GpBoParams {
-            n_startup: n0,
-            seed,
-            ..Default::default()
-        })),
-    }
+    jobs::searcher_for(&drive_cfg(cfg, algo))
 }
 
 /// Stage-1 output: the shared pretrained snapshot + FiP16 baseline metrics.
@@ -719,10 +679,6 @@ pub struct Leader<'a> {
 impl<'a> Leader<'a> {
     pub fn new(session: &'a ModelSession, cfg: LeaderCfg, hw: HwConfig) -> Leader<'a> {
         Leader { session, cfg, hw }
-    }
-
-    fn make_searcher(&self, algo: Algo) -> Box<dyn Searcher> {
-        searcher_for(&self.cfg, algo)
     }
 
     /// Run the full pipeline in-process (the classic single-machine path).
@@ -863,16 +819,12 @@ impl<'a> Leader<'a> {
         })
     }
 
-    /// Search-loop driver shared by both backends. Without checkpointing or
-    /// re-pruning this is a plain `Searcher::run`; with
-    /// `--checkpoint`/`--resume`/`--reprune-every` the TPE-family searcher
-    /// runs STEPWISE, so the session (history, records, surrogate cursors,
-    /// RNG) is frozen at every round boundary — a killed search resumes
-    /// instead of restarting cold, a resumed checkpoint whose space changed
-    /// is PROJECTED (never silently reinterpreted), and a round boundary
-    /// can tighten the menus and continue through the same projection path.
-    /// Returns the final `(SpaceBuild, PrunedSpace)` when re-pruning
-    /// changed the space.
+    /// Search-loop driver shared by both backends — a thin client of the
+    /// extracted job runtime ([`jobs::drive`]), which owns the stepwise
+    /// checkpoint/resume/re-prune/warehouse loop. The CLI keeps its exact
+    /// pre-extraction stderr via [`jobs::LogSink`] and never cancels
+    /// ([`jobs::CancelToken`] stays unsignalled). Returns the final
+    /// `(SpaceBuild, PrunedSpace)` when re-pruning changed the space.
     fn drive<O: RecordedObjective>(
         &self,
         algo: Algo,
@@ -886,273 +838,32 @@ impl<'a> Leader<'a> {
         Option<PoolStats>,
         Option<ProjectionReport>,
     )> {
-        let budget = self.cfg.n_evals;
-        if opts.checkpoint.is_none()
-            && opts.resume.is_none()
-            && opts.reprune_every.is_none()
-            && opts.warehouse.is_none()
-            && !opts.autoscale
-        {
-            let mut searcher = self.make_searcher(algo);
-            let history = searcher.run(objective, budget);
-            let records = objective.records().to_vec();
-            let farm = objective.health();
-            return Ok((history, records, None, farm, None));
-        }
-
-        let batch_algo = match algo {
-            Algo::KmeansTpe => BatchAlgo::KmeansTpe(KmeansTpeParams {
-                n_startup: self.cfg.n_startup,
-                seed: self.cfg.seed,
-                ..Default::default()
-            }),
-            Algo::Tpe => BatchAlgo::Tpe(TpeParams {
-                n_startup: self.cfg.n_startup,
-                seed: self.cfg.seed,
-                ..Default::default()
-            }),
-            other => anyhow::bail!(
-                "--checkpoint/--resume/--reprune-every/--warehouse/--autoscale need a \
-                 TPE-family --algo (kmeans-tpe or tpe), got '{}'",
-                other.name()
-            ),
+        let cfg = drive_cfg(&self.cfg, algo);
+        let drive_opts = jobs::DriveOpts {
+            checkpoint: opts.checkpoint.clone(),
+            checkpoint_keep: opts.checkpoint_keep,
+            resume: opts.resume.clone(),
+            resume_project: opts.resume_project,
+            reprune_every: opts.reprune_every,
+            warehouse: opts.warehouse.clone(),
+            warm_start: opts.warm_start,
+            warehouse_digest: opts
+                .warehouse
+                .is_some()
+                .then(|| jobs::session_digest(&self.cfg.objective, &self.hw)),
+            autoscale: opts.autoscale,
         };
-        let searcher = BatchSearcher::new(batch_algo, self.cfg.batch_q);
-        let mut resumed =
-            opts.resume.as_deref().map(SessionCheckpoint::load_auto).transpose()?;
-        // PRE-projection trial count of the resumed checkpoint — seeds the
-        // rotation store's shrink detector, so a projected (strict) resume
-        // that saves below the directory's on-disk maximum truncates the
-        // superseded timeline instead of being outranked by it.
-        let resumed_pre_trials = resumed.as_ref().map(|c| c.search.history.len());
-        let mut prior: Vec<EvalRecord> = Vec::new();
-        if let Some(ck) = &mut resumed {
-            anyhow::ensure!(
-                ck.algo == algo.name(),
-                "checkpoint holds a '{}' search, this run is '{}'",
-                ck.algo,
-                algo.name()
-            );
-            anyhow::ensure!(
-                ck.seed == self.cfg.seed,
-                "checkpoint seed {:#x} != --seed {:#x}: resuming would splice two \
-                 different random streams",
-                ck.seed,
-                self.cfg.seed
-            );
-            // Cross-space gate: this run's pruning may legitimately differ
-            // from the checkpoint's (fresh sensitivity estimates). With a
-            // projection policy the history is remapped and logged; without
-            // one a fingerprint mismatch is a hard error.
-            if let Some(report) =
-                project_session_checkpoint(ck, objective.space(), opts.resume_project)?
-            {
-                eprintln!("{}", report.render());
-            }
-            prior = ck.records.clone();
-        }
-        // Cross-session transfer store (`--warehouse`): one digest covers
-        // the objective knobs + hardware model, so histories collected
-        // under a different reward are never mistaken for this run's.
-        let wh_ctx = match &opts.warehouse {
-            Some(dir) => {
-                let wh = Warehouse::open(dir)?;
-                let obj_cfg = self.cfg.objective.to_json().to_string_compact();
-                let hw_cfg = self.hw.to_json().to_string_compact();
-                let digest = cfg_digest(&[&obj_cfg, &hw_cfg]);
-                Some((wh, digest))
-            }
-            None => None,
-        };
-        // A resumed checkpoint already carries its own paid history — the
-        // warehouse then only RECEIVES this session's fresh records.
-        let mut warm: Option<WarmStart> = None;
-        if let (Some((wh, digest)), None) = (&wh_ctx, &resumed) {
-            let policy = opts.warm_start.unwrap_or(ProjectPolicy::Nearest);
-            warm = wh.lookup(objective.space(), digest, policy)?;
-        }
-        let mut warm_report: Option<ProjectionReport> = None;
-        let mut run = match warm {
-            None => searcher.start(
-                objective.space().clone(),
-                budget,
-                resumed.as_ref().map(|c| &c.search),
-            )?,
-            Some(WarmStart::Exact { key, records }) => {
-                let cached = objective.seed_cache(&records);
-                eprintln!(
-                    "[warehouse] exact hit {key}: {} stored trials seed the surrogates, \
-                     {cached} pre-paid configs seed the eval cache",
-                    records.len()
-                );
-                let configs: Vec<Config> = records.iter().map(|r| r.config.clone()).collect();
-                let values: Vec<f64> = records.iter().map(|r| r.value).collect();
-                searcher.start_warm(objective.space().clone(), budget, configs, values)?
-            }
-            Some(WarmStart::Projected { key, configs, values, report }) => {
-                // Projected values were measured on a DIFFERENT space: they
-                // seed the surrogates but never the eval cache — a config
-                // that was merely snapped near a paid one is still unpaid.
-                eprintln!(
-                    "[warehouse] projected hit {key}: seeding {} remapped trials",
-                    configs.len()
-                );
-                eprintln!("{}", report.render());
-                warm_report = Some(report);
-                searcher.start_warm(objective.space().clone(), budget, configs, values)?
-            }
-        };
-        let store = match (&opts.checkpoint, opts.checkpoint_keep) {
-            (Some(dir), Some(keep)) => {
-                let store = CheckpointStore::new(dir.clone(), keep);
-                // Seed the shrink detector ONLY when the resume source and
-                // the checkpoint directory are the same timeline (the dir
-                // itself, or a file inside it): a resume from elsewhere
-                // says nothing about THIS directory's files, and seeding
-                // anyway would bulldoze an unrelated session's later
-                // checkpoints in a reused dir.
-                let same_timeline = opts.resume.as_deref().is_some_and(|r| {
-                    r == dir.as_path() || r.parent() == Some(dir.as_path())
-                });
-                if let (true, Some(trials)) = (same_timeline, resumed_pre_trials) {
-                    store.seed_resume_count(trials);
-                }
-                Some(store)
-            }
-            _ => None,
-        };
-        // Re-prune state: the current pruning (k grows per re-prune), how
-        // many records `prior` has already absorbed, and the latest build
-        // paired with the pruning that produced it.
-        let mut cur_pruned = pruned.cloned();
-        let mut taken = 0usize;
-        let mut rebuilt: Option<(SpaceBuild, PrunedSpace)> = None;
-        let mut reprunes = 0usize;
-        let mut rounds_since = 0usize;
-        // Health loop: one PoolStats snapshot per round feeds the per-round
-        // operator log and the autoscaling policy. The supervisor is pure in
-        // the snapshot (no clocks, no RNG), so a seeded replay of the same
-        // farm produces the same decision sequence; whether a decision is
-        // ACTED on is gated by `--autoscale`, the log always appears.
-        let mut supervisor = Supervisor::new(SupervisorCfg::default());
-        let mut round_no = 0usize;
-        while !run.done() {
-            run.step(objective);
-            rounds_since += 1;
-            round_no += 1;
-            if let Some((hits, misses, evictions)) = objective.cache_stats() {
-                eprintln!(
-                    "[cache] round {round_no}: {hits} hits / {misses} misses / \
-                     {evictions} evicted"
-                );
-            }
-            if let Some(stats) = objective.health() {
-                eprintln!("[farm] round {round_no}: {}", stats.render());
-                let decision = supervisor.observe(round_no, &stats);
-                if !matches!(decision, Decision::Hold) {
-                    if let Some(event) = supervisor.events.last() {
-                        // Structured line a control plane can scrape.
-                        eprintln!("[farm] {}", event.to_json().to_string_compact());
-                    }
-                    if opts.autoscale {
-                        objective.apply_decision(&decision);
-                    }
-                }
-            }
-            if let Some(path) = &opts.checkpoint {
-                let mut records = prior.clone();
-                records.extend(objective.records()[taken..].iter().cloned());
-                let ck = SessionCheckpoint {
-                    algo: algo.name().to_string(),
-                    seed: self.cfg.seed,
-                    n_evals: budget,
-                    search: run.checkpoint(),
-                    records,
-                };
-                match &store {
-                    Some(store) => {
-                        store.save(&ck)?;
-                    }
-                    None => ck.save(path)?,
-                }
-            }
-            // Every completed round pays its fresh records forward: the
-            // session's own segment file is rewritten whole and deduped, so
-            // replays are idempotent and concurrent leaders never touch
-            // each other's segments. Non-fatal — a full disk must not kill
-            // an hours-long search that is otherwise healthy.
-            if let Some((wh, digest)) = &wh_ctx {
-                let key = warehouse_key(objective.space(), digest);
-                if let Err(e) =
-                    wh.append(&key, objective.space(), &objective.records()[taken..])
-                {
-                    eprintln!("[warehouse] append failed (non-fatal): {e:#}");
-                }
-            }
-            let due = opts.reprune_every.is_some_and(|every| rounds_since >= every.max(1));
-            if !due || run.done() {
-                continue;
-            }
-            rounds_since = 0;
-            let Some(p) = &cur_pruned else {
-                // --no-prune ablations have no sensitivities to re-cluster.
-                continue;
-            };
-            reprunes += 1;
-            let k = self.cfg.sensitivity_clusters + reprunes;
-            let next = p.reprune(k);
-            let build = build_space(&self.session.meta, Some(&next));
-            if build.space.fingerprint() == objective.space().fingerprint() {
-                eprintln!("[reprune] k={k}: menus unchanged; continuing on the same space");
-                cur_pruned = Some(next);
-                continue;
-            }
-            // Re-sync -> freeze -> project -> restart from the projection.
-            // Re-sync goes FIRST and is non-fatal: a refused or blipped
-            // farm re-sync (open_session rolls the new session back, the
-            // current one keeps serving) downgrades to "skip this
-            // re-prune and continue on the current space" — a transient
-            // farm hiccup must not kill an hours-long search, and nothing
-            // of the run's state has been touched yet at that point.
-            eprintln!("[reprune] k={k}: re-pruned menus after round boundary");
-            if let Err(e) = objective.resync(&build) {
-                eprintln!(
-                    "[reprune] k={k}: backend re-sync failed ({e:#}); continuing on \
-                     the current space"
-                );
-                continue;
-            }
-            // The freeze is a full SessionCheckpoint so the SAME gate that
-            // handles --resume projects history and records in lockstep —
-            // the invariant lives in one function, not two.
-            let mut frozen = SessionCheckpoint {
-                algo: algo.name().to_string(),
-                seed: self.cfg.seed,
-                n_evals: budget,
-                search: run.checkpoint(),
-                records: {
-                    let mut all = std::mem::take(&mut prior);
-                    all.extend(objective.records()[taken..].iter().cloned());
-                    all
-                },
-            };
-            let policy = opts.resume_project.unwrap_or(ProjectPolicy::Nearest);
-            if let Some(report) =
-                project_session_checkpoint(&mut frozen, &build.space, Some(policy))?
-            {
-                eprintln!("{}", report.render());
-            }
-            prior = frozen.records;
-            taken = objective.records().len();
-            run = searcher.start(build.space.clone(), budget, Some(&frozen.search))?;
-            cur_pruned = Some(next.clone());
-            rebuilt = Some((build, next));
-        }
-        let (history, _rounds) = run.finish();
-        let mut records = prior;
-        records.extend(objective.records()[taken..].iter().cloned());
-        let farm = objective.health();
-        Ok((history, records, rebuilt, farm, warm_report))
+        let rebuild = |p: &PrunedSpace| build_space(&self.session.meta, Some(p));
+        let out = jobs::drive(
+            &cfg,
+            &drive_opts,
+            objective,
+            pruned,
+            &rebuild,
+            &mut jobs::LogSink,
+            &jobs::CancelToken::new(),
+        )?;
+        Ok((out.history, out.records, out.rebuilt, out.farm, out.warm_start))
     }
 
     /// Stage 4: final training of the winner + report assembly. Works from

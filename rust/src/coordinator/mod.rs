@@ -49,12 +49,24 @@
 //! flag pressure (`--autoscale`). See `search::batch`,
 //! `search::checkpoint`, `search::project`, `search::costmodel`, and
 //! docs/ARCHITECTURE.md for the protocol state machine and formats.
+//!
+//! The CONTROL PLANE sits above all of it: `jobs` is the search-loop
+//! runtime extracted from the leader (one drive loop shared by the CLI and
+//! the daemon, progressing through `ProgressSink` callbacks instead of
+//! stderr), `journal` persists each job's event stream as an append-only
+//! JSONL log, and `server` is `sammpq serve` — a std-only HTTP/1.1 daemon
+//! multiplexing many concurrent search jobs (admission-controlled, journal
+//! -backed, checkpoint-resumable across daemon restarts) onto one shared
+//! v3 worker farm.
 
 pub mod evaluator;
 pub mod faults;
+pub mod jobs;
+pub mod journal;
 pub mod service;
 pub mod leader;
 pub mod report;
+pub mod server;
 pub mod supervisor;
 pub mod wire;
 
@@ -62,8 +74,12 @@ pub use evaluator::{build_space, DimKind, DnnBackend, DnnFactory, DnnObjective, 
                     ObjectiveCfg, SpaceBuild};
 pub use faults::{install_sigterm_drain, FaultAction, FaultDecision, FaultEvent, FaultInjector,
                  FaultPlan, FaultScript, WorkerControl};
+pub use jobs::{session_digest, CancelToken, DriveCfg, DriveOpts, DriveOutcome, JobEvent,
+               JobHandle, JobSpec, JobState, LogSink, ProgressSink};
+pub use journal::Journal;
 pub use leader::{project_session_checkpoint, Algo, CheckpointStore, EvalBackend, Leader,
                  LeaderCfg, RecordedObjective, SearchReport, SessionCheckpoint, SessionOpts};
+pub use server::{ServeCfg, ServerHandle};
 pub use service::{announce_join, announce_join_retrying, serve_on_listener, serve_sessions,
                   serve_sessions_driven, serve_sessions_on, serve_worker, serve_worker_on,
                   BackendFactory, JoinRegistry, PlainBackend, PoolCfg, RemoteObjective,

@@ -154,6 +154,43 @@ pub fn warm_start_json(report: &crate::search::ProjectionReport) -> Json {
     ])
 }
 
+/// Machine-readable terminal report of a serve-daemon job: the payload of
+/// the journal's `report` event and the object `GET /jobs/:id` exposes once
+/// a job completes. Values are raw-bit encoded (`enc_f64`) and the FULL
+/// record log rides along, so two reports compare equal — as `Json` values
+/// — exactly when the searches behind them were bit-identical. That is the
+/// control plane's acceptance contract: an HTTP-submitted job must produce
+/// the same report as the same search run through the CLI path.
+pub fn job_report_json(
+    algo: &str,
+    history: &crate::search::History,
+    records: &[crate::coordinator::evaluator::EvalRecord],
+) -> Json {
+    use crate::search::space::config_to_json;
+    use crate::util::json::enc_f64;
+    obj(vec![
+        ("algo", Json::Str(algo.to_string())),
+        ("trials", Json::Num(history.len() as f64)),
+        (
+            "best_value",
+            history.best().map(|t| enc_f64(t.value)).unwrap_or(Json::Null),
+        ),
+        (
+            "best_config",
+            history.best().map(|t| config_to_json(&t.config)).unwrap_or(Json::Null),
+        ),
+        (
+            "values",
+            Json::Arr(history.values().iter().map(|v| enc_f64(*v)).collect()),
+        ),
+        (
+            "configs",
+            Json::Arr(history.trials.iter().map(|t| config_to_json(&t.config)).collect()),
+        ),
+        ("records", Json::Arr(records.iter().map(|r| r.to_json()).collect())),
+    ])
+}
+
 pub fn save_json(path: &Path, j: &Json) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
@@ -201,6 +238,30 @@ mod tests {
             j.get("new_fingerprint").and_then(|v| v.as_str()),
             Some(new.fingerprint().as_str())
         );
+    }
+
+    #[test]
+    fn job_report_json_detects_any_search_divergence() {
+        use crate::coordinator::evaluator::EvalRecord;
+        use crate::search::History;
+        let mut h = History::new("tpe");
+        h.push(vec![0, 1], -2.5, 0.1);
+        h.push(vec![1, 1], -1.0, 0.2);
+        let recs = vec![
+            EvalRecord::value_only(vec![0, 1], -2.5),
+            EvalRecord::value_only(vec![1, 1], -1.0),
+        ];
+        let a = job_report_json("tpe", &h, &recs);
+        assert_eq!(a, job_report_json("tpe", &h, &recs));
+        assert_eq!(a.get("trials").and_then(|v| v.as_usize()), Some(2));
+        // Any divergence — a different value bit, a different config —
+        // breaks equality.
+        let mut h2 = h.clone();
+        h2.trials[1].value = -1.0 + f64::EPSILON;
+        assert_ne!(a, job_report_json("tpe", &h2, &recs));
+        let mut h3 = h.clone();
+        h3.trials[0].config = vec![1, 0];
+        assert_ne!(a, job_report_json("tpe", &h3, &recs));
     }
 
     #[test]

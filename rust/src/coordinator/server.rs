@@ -1,0 +1,974 @@
+//! `sammpq serve` — the search-as-a-service control plane.
+//!
+//! A std-only threaded HTTP/1.1 daemon (hand-rolled request parsing; the
+//! repo is offline-vendored, so no HTTP crate) that runs many concurrent
+//! search jobs over ONE shared v3 worker farm. Each admitted job gets its
+//! own executor thread driving the extracted job runtime
+//! ([`jobs::drive`]); per-job session-id namespacing keeps concurrent
+//! jobs' farm sessions disjoint, every job's progress is journaled
+//! (`coordinator::journal`) as the source of truth, and each job
+//! checkpoints per round under the daemon's state dir — so a daemon
+//! restart replays the journals and resumes unfinished jobs from their
+//! checkpoints, bit-identically to never having died.
+//!
+//! Endpoints:
+//!
+//! | method + path              | semantics                                   |
+//! |----------------------------|---------------------------------------------|
+//! | `POST /jobs`               | submit a [`JobSpec`]; admission control      |
+//! |                            | (max concurrent + per-tenant quota, 429;     |
+//! |                            | 503 while draining)                          |
+//! | `GET /jobs/:id`            | state + incumbent (+ terminal report)        |
+//! | `GET /jobs/:id/events?from=N` | long-poll the journal tail                |
+//! | `DELETE /jobs/:id`         | cancel at the next round boundary; the farm  |
+//! |                            | session is closed with `bye` (keep-workers)  |
+//! | `GET /metrics`             | jobs by state, pressure gauge, farm stats,   |
+//! |                            | warehouse size, admission counters           |
+//!
+//! Shutdown is graceful (`SIGTERM`, or [`ServerHandle::drain`]): stop
+//! admitting, journal a `Draining` event per running job, halt each at its
+//! round boundary (checkpoint already on disk), and `bye` their sessions so
+//! the shared farm keeps serving other tenants. [`ServerHandle::kill`]
+//! skips all of that — the crash-simulation path the restart tests use.
+//!
+//! [`jobs::drive`]: super::jobs::drive
+//! [`JobSpec`]: super::jobs::JobSpec
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::faults::{clear_sigterm_drain, install_sigterm_drain,
+                                 sigterm_drain_pending};
+use crate::coordinator::jobs::{self, CancelToken, DriveOpts, JobEvent, JobHandle, JobSpec,
+                               JobState, ProgressSink};
+use crate::coordinator::journal::Journal;
+use crate::coordinator::report::job_report_json;
+use crate::coordinator::service::{JoinRegistry, PoolCfg, RemoteObjective};
+use crate::search::Warehouse;
+use crate::util::json::{obj, Json};
+
+/// Daemon configuration (the `sammpq serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// HTTP bind address (port 0 picks a free port).
+    pub addr: String,
+    /// The shared worker farm every job multiplexes onto.
+    pub workers: Vec<String>,
+    pub pool: PoolCfg,
+    /// Durable state root: `journal/` (per-job event logs) and
+    /// `ckpt-<job>/` (per-job checkpoint rotation dirs) live here.
+    pub state_dir: PathBuf,
+    /// Admission: max concurrently active (non-terminal) jobs.
+    pub max_jobs: usize,
+    /// Admission: max concurrently active jobs per tenant.
+    pub tenant_quota: usize,
+    /// Shared cross-session transfer store for every job (`--warehouse`).
+    pub warehouse: Option<PathBuf>,
+    /// Join-registry bind address for elastic `worker --join` growth;
+    /// joiners fan out to every active job's pool.
+    pub registry: Option<String>,
+    /// Act on supervisor decisions (drain idle workers) per job.
+    pub autoscale: bool,
+    /// Long-poll ceiling for `GET /jobs/:id/events`.
+    pub poll_wait: Duration,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            addr: "127.0.0.1:7460".to_string(),
+            workers: Vec::new(),
+            pool: PoolCfg::default(),
+            state_dir: PathBuf::from("sammpq-serve"),
+            max_jobs: 4,
+            tenant_quota: 2,
+            warehouse: None,
+            registry: None,
+            autoscale: false,
+            poll_wait: Duration::from_secs(10),
+        }
+    }
+}
+
+/// The part of a job the HTTP threads read and the executor writes.
+struct SlotView {
+    handle: JobHandle,
+    /// Rendered event payloads, 1:1 with the journal lines — what the
+    /// events endpoint serves.
+    events: Vec<Json>,
+}
+
+/// One job's shared state: view + journal + cancellation.
+struct JobSlot {
+    id: String,
+    tenant: String,
+    view: Mutex<SlotView>,
+    cv: Condvar,
+    cancel: CancelToken,
+    journal: Mutex<Journal>,
+}
+
+impl JobSlot {
+    /// Record one event everywhere it must land, in order: the journal
+    /// (durability first — an event the journal never saw must not shape
+    /// in-memory state), then the live view, then the long-pollers.
+    /// Journal failures are non-fatal by design: a full disk degrades
+    /// durability, it does not kill an hours-long search.
+    fn record(&self, event: &JobEvent) {
+        if let Err(e) = self.journal.lock().unwrap().append(event.clone()) {
+            eprintln!("[serve] job {}: journal write failed (non-fatal): {e:#}", self.id);
+        }
+        let mut view = self.view.lock().unwrap();
+        if let Err(e) = view.handle.apply(event) {
+            eprintln!("[serve] job {}: event fold rejected: {e:#}", self.id);
+        }
+        view.events.push(event.to_json());
+        self.cv.notify_all();
+    }
+
+    fn state(&self) -> JobState {
+        self.view.lock().unwrap().handle.state
+    }
+}
+
+/// Executor-side [`ProgressSink`]: every runtime event goes through the
+/// slot's single record path (journal + view + notify).
+struct SlotSink<'a> {
+    slot: &'a JobSlot,
+}
+
+impl ProgressSink for SlotSink<'_> {
+    fn emit(&mut self, event: &JobEvent) {
+        self.slot.record(event);
+    }
+}
+
+struct DaemonInner {
+    cfg: ServeCfg,
+    slots: Mutex<Vec<Arc<JobSlot>>>,
+    next_id: AtomicU64,
+    draining: AtomicBool,
+    /// Crash-simulation kill: executors abandon their sessions without
+    /// `bye` and journal nothing further.
+    killed: AtomicBool,
+    /// Accept/fan-out loops and long-pollers should wind down.
+    stopped: AtomicBool,
+    admitted: AtomicU64,
+    rejected_capacity: AtomicU64,
+    rejected_quota: AtomicU64,
+    /// Workers that announced via the join registry — future jobs connect
+    /// to them too.
+    joined: Mutex<Vec<String>>,
+    /// Active jobs' per-pool joiner queues the registry fans out to.
+    joiner_sinks: Mutex<Vec<(String, Arc<Mutex<Vec<String>>>)>>,
+    exec_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    conn_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl DaemonInner {
+    fn journal_dir(&self) -> PathBuf {
+        self.cfg.state_dir.join("journal")
+    }
+
+    fn ckpt_dir(&self, job_id: &str) -> PathBuf {
+        self.cfg.state_dir.join(format!("ckpt-{job_id}"))
+    }
+
+    /// The farm this moment: configured workers plus everyone who joined.
+    fn farm_addrs(&self) -> Vec<String> {
+        let mut addrs = self.cfg.workers.clone();
+        for a in self.joined.lock().unwrap().iter() {
+            if !addrs.contains(a) {
+                addrs.push(a.clone());
+            }
+        }
+        addrs
+    }
+
+    fn find(&self, job_id: &str) -> Option<Arc<JobSlot>> {
+        self.slots.lock().unwrap().iter().find(|s| s.id == job_id).cloned()
+    }
+}
+
+fn spawn_executor(daemon: &Arc<DaemonInner>, slot: Arc<JobSlot>) {
+    let daemon2 = Arc::clone(daemon);
+    let name = format!("sammpq-{}", slot.id);
+    let handle = std::thread::Builder::new()
+        .name(name)
+        .spawn(move || run_job(&daemon2, &slot))
+        .expect("spawn job executor");
+    daemon.exec_threads.lock().unwrap().push(handle);
+}
+
+fn run_job(daemon: &Arc<DaemonInner>, slot: &Arc<JobSlot>) {
+    if let Err(e) = execute_job(daemon, slot) {
+        // Executor errors (farm unreachable, bad resume, ...) terminate
+        // the job, never the daemon.
+        if !slot.state().terminal() {
+            slot.record(&JobEvent::State {
+                state: JobState::Failed,
+                detail: format!("{e:#}"),
+            });
+        }
+    }
+}
+
+fn execute_job(daemon: &Arc<DaemonInner>, slot: &Arc<JobSlot>) -> Result<()> {
+    let spec = slot.view.lock().unwrap().handle.spec.clone();
+    let ck_dir = daemon.ckpt_dir(&slot.id);
+    // A manifest in the job's checkpoint dir means a previous daemon's
+    // executor got through at least one round: resume it instead of
+    // restarting the stream cold.
+    let resuming = ck_dir.join("manifest.json").exists();
+    let addrs = daemon.farm_addrs();
+    anyhow::ensure!(!addrs.is_empty(), "no farm workers configured (--workers)");
+    // The shared farm, namespaced by job id so concurrent jobs' sessions
+    // can never collide (service::namespaced_session_id).
+    let mut objective = RemoteObjective::connect_session_ns(
+        spec.session.clone(),
+        &addrs,
+        daemon.cfg.pool,
+        Some(&slot.id),
+    )?;
+    // Elastic joins: this job's pool adopts registry announcements at its
+    // round boundaries.
+    let joiners: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    objective.pool.attach_joiners(Arc::clone(&joiners));
+    daemon.joiner_sinks.lock().unwrap().push((slot.id.clone(), joiners));
+    slot.record(&JobEvent::State {
+        state: JobState::Searching,
+        detail: if resuming {
+            "resumed from checkpoint after daemon restart".to_string()
+        } else {
+            String::new()
+        },
+    });
+    let cfg = spec.drive_cfg();
+    let opts = DriveOpts {
+        // Always checkpointed: per-round durability is what makes a
+        // crashed daemon resumable at all.
+        checkpoint: Some(ck_dir.clone()),
+        checkpoint_keep: Some(3),
+        resume: resuming.then(|| ck_dir.clone()),
+        warehouse: daemon.cfg.warehouse.clone(),
+        warm_start: spec.warm_start,
+        warehouse_digest: daemon
+            .cfg
+            .warehouse
+            .is_some()
+            .then(|| spec.warehouse_digest()),
+        autoscale: daemon.cfg.autoscale,
+        ..Default::default()
+    };
+    let rebuild = |_: &crate::hessian::pruner::PrunedSpace| -> crate::coordinator::evaluator::SpaceBuild {
+        unreachable!("serve jobs never re-prune (no reprune_every)")
+    };
+    let mut sink = SlotSink { slot };
+    let out = jobs::drive(&cfg, &opts, &mut objective, None, &rebuild, &mut sink, &slot.cancel);
+    daemon.joiner_sinks.lock().unwrap().retain(|(id, _)| id != &slot.id);
+    let out = match out {
+        Ok(out) => out,
+        Err(e) => {
+            let _ = objective.release();
+            return Err(e);
+        }
+    };
+    if out.interrupted {
+        if slot.cancel.cancelled() {
+            // Client cancel: terminal, session byed cleanly — the farm
+            // requeues nothing (the round that finished was complete).
+            slot.record(&JobEvent::State {
+                state: JobState::Cancelled,
+                detail: "cancelled by client".to_string(),
+            });
+            let _ = objective.release();
+        } else if daemon.killed.load(Ordering::SeqCst) {
+            // Crash simulation / hard kill: drop the connections with no
+            // bye and journal nothing — exactly the disk state a dead
+            // daemon leaves. The journal still says Searching; the
+            // checkpoint holds every finished round; a restart resumes.
+        } else {
+            // Drain: the daemon already journaled Draining; no terminal
+            // state, so a restarted daemon resumes this job. Bye only our
+            // session — keep-workers semantics on the shared farm.
+            let _ = objective.release();
+        }
+        return Ok(());
+    }
+    let report = job_report_json(spec.algo.name(), &out.history, &out.records);
+    slot.record(&JobEvent::Report { report });
+    slot.record(&JobEvent::State { state: JobState::Done, detail: String::new() });
+    let _ = objective.release();
+    Ok(())
+}
+
+/// A running daemon. Dropping the handle does NOT stop it — call
+/// [`join`](Self::join) (run until externally drained), [`drain`](Self::drain)
+/// + `join` (graceful stop), or [`kill`](Self::kill) (crash simulation).
+pub struct ServerHandle {
+    addr: String,
+    daemon: Arc<DaemonInner>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    fanout: Option<std::thread::JoinHandle<()>>,
+    _registry: Option<JoinRegistry>,
+}
+
+impl ServerHandle {
+    /// The bound HTTP address (resolved, so port 0 is concrete here).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Graceful shutdown, phase 1: stop admitting (503), journal a
+    /// `Draining` event per running job, and halt each executor at its
+    /// next round boundary. Running jobs keep their `Searching` journal
+    /// state — a restarted daemon resumes them from their checkpoints.
+    pub fn drain(&self) {
+        self.daemon.draining.store(true, Ordering::SeqCst);
+        for slot in self.daemon.slots.lock().unwrap().iter() {
+            if !slot.state().terminal() {
+                slot.record(&JobEvent::Draining);
+                slot.cancel.halt();
+            }
+        }
+    }
+
+    /// Crash simulation (restart tests): halt executors at their round
+    /// boundaries WITHOUT journaling a terminal/draining state or byeing
+    /// farm sessions, then reap every thread. Disk is left exactly as a
+    /// daemon death at a round boundary would leave it: the journal still
+    /// says `Searching`, the checkpoint holds every finished round.
+    pub fn kill(mut self) {
+        self.daemon.killed.store(true, Ordering::SeqCst);
+        self.daemon.draining.store(true, Ordering::SeqCst);
+        for slot in self.daemon.slots.lock().unwrap().iter() {
+            slot.cancel.halt();
+        }
+        self.stop_and_reap();
+    }
+
+    /// Wait for the daemon to wind down: executors finish (or hit their
+    /// halt tokens), the accept loop stops. Call after [`drain`](Self::drain)
+    /// for a graceful stop.
+    pub fn join(mut self) {
+        self.stop_and_reap();
+    }
+
+    fn stop_and_reap(&mut self) {
+        self.daemon.stopped.store(true, Ordering::SeqCst);
+        // Wake long-pollers so connection threads exit promptly.
+        for slot in self.daemon.slots.lock().unwrap().iter() {
+            slot.cv.notify_all();
+        }
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.fanout.take() {
+            let _ = t.join();
+        }
+        let execs: Vec<_> = std::mem::take(&mut *self.daemon.exec_threads.lock().unwrap());
+        for t in execs {
+            let _ = t.join();
+        }
+        let conns: Vec<_> = std::mem::take(&mut *self.daemon.conn_threads.lock().unwrap());
+        for t in conns {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the daemon: replay journals (resuming unfinished jobs), bind the
+/// HTTP endpoint and optional join registry, and serve until the handle is
+/// drained/joined/killed.
+pub fn start(cfg: ServeCfg) -> Result<ServerHandle> {
+    std::fs::create_dir_all(&cfg.state_dir)
+        .with_context(|| format!("create state dir {}", cfg.state_dir.display()))?;
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("bind serve endpoint {}", cfg.addr))?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?.to_string();
+
+    let daemon = Arc::new(DaemonInner {
+        cfg,
+        slots: Mutex::new(Vec::new()),
+        next_id: AtomicU64::new(1),
+        draining: AtomicBool::new(false),
+        killed: AtomicBool::new(false),
+        stopped: AtomicBool::new(false),
+        admitted: AtomicU64::new(0),
+        rejected_capacity: AtomicU64::new(0),
+        rejected_quota: AtomicU64::new(0),
+        joined: Mutex::new(Vec::new()),
+        joiner_sinks: Mutex::new(Vec::new()),
+        exec_threads: Mutex::new(Vec::new()),
+        conn_threads: Mutex::new(Vec::new()),
+    });
+
+    // Journal replay: rebuild every job the previous daemon knew about.
+    // Terminal jobs come back read-only; live ones resume from checkpoint.
+    let mut max_id = 0u64;
+    for (job_id, events) in Journal::scan(&daemon.journal_dir())? {
+        if let Some(n) = job_id.strip_prefix("job-").and_then(|n| n.parse::<u64>().ok()) {
+            max_id = max_id.max(n);
+        }
+        let handle = match JobHandle::replay(&job_id, &events) {
+            Ok(h) => h,
+            Err(e) => {
+                eprintln!("[serve] journal {job_id}: replay failed, skipping: {e:#}");
+                continue;
+            }
+        };
+        let journal = Journal::open(&daemon.journal_dir(), &job_id)?;
+        let slot = Arc::new(JobSlot {
+            id: job_id.clone(),
+            tenant: handle.spec.tenant.clone(),
+            view: Mutex::new(SlotView {
+                events: events.iter().map(JobEvent::to_json).collect(),
+                handle,
+            }),
+            cv: Condvar::new(),
+            cancel: CancelToken::new(),
+            journal: Mutex::new(journal),
+        });
+        let live = !slot.state().terminal();
+        eprintln!(
+            "[serve] replayed {job_id}: {}{}",
+            slot.state().as_str(),
+            if live { " (resuming)" } else { "" }
+        );
+        daemon.slots.lock().unwrap().push(Arc::clone(&slot));
+        if live {
+            spawn_executor(&daemon, slot);
+        }
+    }
+    daemon.next_id.store(max_id + 1, Ordering::SeqCst);
+
+    // Optional elastic-join registry, fanned out to every active job.
+    let registry = match &daemon.cfg.registry {
+        Some(addr) => {
+            let reg = JoinRegistry::bind(addr)?;
+            eprintln!("[serve] join registry listening on {}", reg.local_addr());
+            Some(reg)
+        }
+        None => None,
+    };
+    let fanout = registry.as_ref().map(|reg| {
+        let queue = reg.queue();
+        let daemon = Arc::clone(&daemon);
+        std::thread::spawn(move || {
+            while !daemon.stopped.load(Ordering::SeqCst) {
+                let announced: Vec<String> = std::mem::take(&mut *queue.lock().unwrap());
+                if !announced.is_empty() {
+                    let mut joined = daemon.joined.lock().unwrap();
+                    for addr in announced {
+                        if !joined.contains(&addr) {
+                            eprintln!("[serve] worker joined: {addr}");
+                            joined.push(addr.clone());
+                        }
+                        // Every ACTIVE job's pool adopts the joiner at its
+                        // next round boundary (multi-tenant: one worker,
+                        // many sessions).
+                        for (_, sink) in daemon.joiner_sinks.lock().unwrap().iter() {
+                            sink.lock().unwrap().push(addr.clone());
+                        }
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        })
+    });
+
+    let accept = {
+        let daemon = Arc::clone(&daemon);
+        std::thread::spawn(move || {
+            while !daemon.stopped.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let _ = stream.set_nonblocking(false);
+                        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+                        let daemon2 = Arc::clone(&daemon);
+                        let t = std::thread::spawn(move || handle_conn(&daemon2, stream));
+                        daemon.conn_threads.lock().unwrap().push(t);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        eprintln!("[serve] accept error: {e}");
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        })
+    };
+
+    eprintln!("[serve] control plane listening on {addr}");
+    Ok(ServerHandle { addr, daemon, accept: Some(accept), fanout, _registry: registry })
+}
+
+/// CLI entrypoint: start, then serve until SIGTERM drains us.
+pub fn run(cfg: ServeCfg) -> Result<()> {
+    install_sigterm_drain();
+    let handle = start(cfg)?;
+    println!("sammpq serve: POST /jobs on http://{}/ (SIGTERM drains)", handle.addr());
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        if sigterm_drain_pending() {
+            eprintln!("[serve] SIGTERM: draining — no new jobs, checkpointing running ones");
+            handle.drain();
+            handle.join();
+            clear_sigterm_drain();
+            return Ok(());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP plumbing (hand-rolled; std only)
+
+fn handle_conn(daemon: &Arc<DaemonInner>, mut stream: TcpStream) {
+    let (status, body) = match read_request(&mut stream) {
+        Ok((method, path, body)) => route(daemon, &method, &path, &body),
+        Err(e) => (400, error_json(&format!("bad request: {e:#}"))),
+    };
+    respond(&mut stream, status, &body);
+}
+
+/// Parse one request: request line, headers (only `Content-Length`
+/// matters), then the body.
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, Vec<u8>)> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_string();
+    let path = parts.next().context("request line has no path")?.to_string();
+    let mut content_len = 0usize;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            break;
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some(v) = header.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    anyhow::ensure!(content_len <= 8 * 1024 * 1024, "body too large ({content_len} bytes)");
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    Ok((method, path, body))
+}
+
+fn respond(stream: &mut TcpStream, status: u16, body: &Json) {
+    let reason = match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "",
+    };
+    let text = body.to_string_compact();
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n{text}",
+        text.len()
+    );
+    let _ = stream.flush();
+}
+
+fn error_json(msg: &str) -> Json {
+    obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+fn route(daemon: &Arc<DaemonInner>, method: &str, raw_path: &str, body: &[u8]) -> (u16, Json) {
+    let (path, query) = match raw_path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (raw_path, ""),
+    };
+    let segments: Vec<&str> =
+        path.trim_matches('/').split('/').filter(|s| !s.is_empty()).collect();
+    match (method, segments.as_slice()) {
+        ("POST", ["jobs"]) => post_job(daemon, body),
+        ("GET", ["jobs", id]) => job_status(daemon, id),
+        ("GET", ["jobs", id, "events"]) => job_events(daemon, id, query),
+        ("DELETE", ["jobs", id]) => cancel_job(daemon, id),
+        ("GET", ["metrics"]) => (200, metrics_json(daemon)),
+        ("POST" | "GET" | "DELETE", _) => (404, error_json("no such endpoint")),
+        _ => (405, error_json("method not allowed")),
+    }
+}
+
+/// `POST /jobs`: parse, admit (quota), journal the spec, spawn the
+/// executor.
+fn post_job(daemon: &Arc<DaemonInner>, body: &[u8]) -> (u16, Json) {
+    if daemon.draining.load(Ordering::SeqCst) {
+        return (503, error_json("draining: daemon is shutting down, resubmit elsewhere"));
+    }
+    let parsed = std::str::from_utf8(body)
+        .ok()
+        .and_then(|t| Json::parse(t).ok())
+        .ok_or_else(|| "body is not JSON".to_string())
+        .and_then(|j| JobSpec::from_json(&j).map_err(|e| format!("bad job spec: {e:#}")));
+    let spec = match parsed {
+        Ok(spec) => spec,
+        Err(e) => return (400, error_json(&e)),
+    };
+    // Admission control under the slots lock, so two concurrent POSTs
+    // cannot both squeeze past the same last free slot.
+    let mut slots = daemon.slots.lock().unwrap();
+    let active = slots.iter().filter(|s| !s.state().terminal()).count();
+    if active >= daemon.cfg.max_jobs {
+        daemon.rejected_capacity.fetch_add(1, Ordering::SeqCst);
+        return (
+            429,
+            obj(vec![
+                ("error", Json::Str("capacity".to_string())),
+                ("active", Json::Num(active as f64)),
+                ("max_jobs", Json::Num(daemon.cfg.max_jobs as f64)),
+            ]),
+        );
+    }
+    let tenant_active = slots
+        .iter()
+        .filter(|s| !s.state().terminal() && s.tenant == spec.tenant)
+        .count();
+    if tenant_active >= daemon.cfg.tenant_quota {
+        daemon.rejected_quota.fetch_add(1, Ordering::SeqCst);
+        return (
+            429,
+            obj(vec![
+                ("error", Json::Str("tenant-quota".to_string())),
+                ("tenant", Json::Str(spec.tenant.clone())),
+                ("active", Json::Num(tenant_active as f64)),
+                ("tenant_quota", Json::Num(daemon.cfg.tenant_quota as f64)),
+            ]),
+        );
+    }
+    let id = format!("job-{}", daemon.next_id.fetch_add(1, Ordering::SeqCst));
+    let journal = match Journal::open(&daemon.journal_dir(), &id) {
+        Ok(j) => j,
+        Err(e) => return (500, error_json(&format!("journal open failed: {e:#}"))),
+    };
+    let slot = Arc::new(JobSlot {
+        id: id.clone(),
+        tenant: spec.tenant.clone(),
+        view: Mutex::new(SlotView { handle: JobHandle::new(&id, spec.clone()), events: Vec::new() }),
+        cv: Condvar::new(),
+        cancel: CancelToken::new(),
+        journal: Mutex::new(journal),
+    });
+    slot.record(&JobEvent::Spec { spec });
+    slots.push(Arc::clone(&slot));
+    drop(slots);
+    daemon.admitted.fetch_add(1, Ordering::SeqCst);
+    spawn_executor(daemon, slot);
+    (201, obj(vec![("id", Json::Str(id)), ("state", Json::Str("queued".to_string()))]))
+}
+
+fn job_status(daemon: &Arc<DaemonInner>, id: &str) -> (u16, Json) {
+    match daemon.find(id) {
+        Some(slot) => (200, slot.view.lock().unwrap().handle.status_json()),
+        None => (404, error_json(&format!("no job '{id}'"))),
+    }
+}
+
+/// `GET /jobs/:id/events?from=N`: long-poll the journal tail. Returns as
+/// soon as there is anything past `from`, the job is terminal, or the
+/// poll ceiling elapses.
+fn job_events(daemon: &Arc<DaemonInner>, id: &str, query: &str) -> (u16, Json) {
+    let Some(slot) = daemon.find(id) else {
+        return (404, error_json(&format!("no job '{id}'")));
+    };
+    let from = query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix("from="))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(0);
+    let deadline = Instant::now() + daemon.cfg.poll_wait;
+    let mut view = slot.view.lock().unwrap();
+    while view.events.len() <= from
+        && !view.handle.state.terminal()
+        && !daemon.stopped.load(Ordering::SeqCst)
+    {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (v, _timeout) = slot.cv.wait_timeout(view, deadline - now).unwrap();
+        view = v;
+    }
+    let events: Vec<Json> = view.events.get(from..).unwrap_or(&[]).to_vec();
+    let next = from + events.len();
+    (
+        200,
+        obj(vec![
+            ("job", Json::Str(id.to_string())),
+            ("state", Json::Str(view.handle.state.as_str().to_string())),
+            ("from", Json::Num(from as f64)),
+            ("next", Json::Num(next as f64)),
+            ("events", Json::Arr(events)),
+        ]),
+    )
+}
+
+/// `DELETE /jobs/:id`: cooperative cancel — the executor stops at its next
+/// round boundary, journals `Cancelled`, and byes its farm session.
+fn cancel_job(daemon: &Arc<DaemonInner>, id: &str) -> (u16, Json) {
+    let Some(slot) = daemon.find(id) else {
+        return (404, error_json(&format!("no job '{id}'")));
+    };
+    let state = slot.state();
+    if state.terminal() {
+        return (
+            409,
+            obj(vec![
+                ("error", Json::Str("terminal".to_string())),
+                ("state", Json::Str(state.as_str().to_string())),
+            ]),
+        );
+    }
+    slot.cancel.cancel();
+    (
+        202,
+        obj(vec![
+            ("id", Json::Str(id.to_string())),
+            ("state", Json::Str("cancelling".to_string())),
+        ]),
+    )
+}
+
+/// `GET /metrics`: jobs by state, the pressure gauge (sum of active jobs'
+/// latest flagged worker deficits), latest farm stats, admission counters,
+/// and the shared warehouse's size.
+fn metrics_json(daemon: &Arc<DaemonInner>) -> Json {
+    let slots = daemon.slots.lock().unwrap();
+    let mut by_state: Vec<(JobState, usize)> = [
+        JobState::Queued,
+        JobState::Pruning,
+        JobState::Searching,
+        JobState::Done,
+        JobState::Failed,
+        JobState::Cancelled,
+    ]
+    .into_iter()
+    .map(|s| (s, 0))
+    .collect();
+    let mut pressure = 0usize;
+    let mut farm: Option<Json> = None;
+    for slot in slots.iter() {
+        let view = slot.view.lock().unwrap();
+        let state = view.handle.state;
+        if let Some(e) = by_state.iter_mut().find(|(s, _)| *s == state) {
+            e.1 += 1;
+        }
+        if !state.terminal() {
+            pressure += view.handle.pressure;
+            if let Some(stats) = &view.handle.farm {
+                farm = Some(stats.to_json());
+            }
+        }
+    }
+    let jobs_obj = Json::Obj(
+        by_state
+            .into_iter()
+            .map(|(s, n)| (s.as_str().to_string(), Json::Num(n as f64)))
+            .collect(),
+    );
+    let warehouse = match &daemon.cfg.warehouse {
+        Some(dir) => match Warehouse::open(dir).and_then(|wh| wh.stats()) {
+            Ok((keys, records, bytes)) => obj(vec![
+                ("keys", Json::Num(keys as f64)),
+                ("records", Json::Num(records as f64)),
+                ("bytes", Json::Num(bytes as f64)),
+            ]),
+            Err(e) => error_json(&format!("{e:#}")),
+        },
+        None => Json::Null,
+    };
+    obj(vec![
+        ("jobs", jobs_obj),
+        ("pressure", Json::Num(pressure as f64)),
+        ("farm", farm.unwrap_or(Json::Null)),
+        ("admitted", Json::Num(daemon.admitted.load(Ordering::SeqCst) as f64)),
+        (
+            "rejected_capacity",
+            Json::Num(daemon.rejected_capacity.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "rejected_quota",
+            Json::Num(daemon.rejected_quota.load(Ordering::SeqCst) as f64),
+        ),
+        ("joined_workers", Json::Num(daemon.joined.lock().unwrap().len() as f64)),
+        ("draining", Json::Bool(daemon.draining.load(Ordering::SeqCst))),
+        ("max_jobs", Json::Num(daemon.cfg.max_jobs as f64)),
+        ("tenant_quota", Json::Num(daemon.cfg.tenant_quota as f64)),
+        ("warehouse", warehouse),
+    ])
+}
+
+/// Minimal HTTP/1.1 client for the daemon's endpoints — what the CLI
+/// helpers, benches, and integration tests submit with (std only, like the
+/// server).
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let body_text = body.map(|b| b.to_string_compact()).unwrap_or_default();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n{body_text}",
+        body_text.len()
+    )?;
+    stream.flush()?;
+    let mut text = String::new();
+    BufReader::new(stream).read_to_string(&mut text)?;
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad response status line: {:?}", text.lines().next()))?;
+    let payload = match text.split_once("\r\n\r\n") {
+        Some((_, p)) if !p.trim().is_empty() => {
+            Json::parse(p.trim()).map_err(|e| anyhow::anyhow!("bad response body: {e:?}"))?
+        }
+        _ => Json::Null,
+    };
+    Ok((status, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::leader::Algo;
+    use crate::coordinator::service::SessionSpec;
+    use crate::search::{Objective, QPolicy, SyntheticObjective};
+
+    fn test_cfg(dir: &str) -> ServeCfg {
+        let state_dir = std::env::temp_dir().join(format!("{dir}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&state_dir);
+        ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            state_dir,
+            max_jobs: 1,
+            tenant_quota: 1,
+            poll_wait: Duration::from_millis(300),
+            ..ServeCfg::default()
+        }
+    }
+
+    fn spec_json() -> Json {
+        let spec = JobSpec {
+            name: "t".into(),
+            tenant: "acme".into(),
+            session: SessionSpec::synthetic(
+                SyntheticObjective::new(3, 3, Duration::ZERO).space().clone(),
+            ),
+            algo: Algo::KmeansTpe,
+            seed: 5,
+            n_evals: 9,
+            n_startup: 3,
+            batch_q: QPolicy::Fixed(3),
+            warm_start: None,
+        };
+        spec.to_json()
+    }
+
+    fn wait_terminal(addr: &str, id: &str) -> Json {
+        for _ in 0..200 {
+            let (code, status) = request(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+            assert_eq!(code, 200);
+            let state = status.get("state").and_then(|v| v.as_str()).unwrap().to_string();
+            if JobState::parse(&state).unwrap().terminal() {
+                return status;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        panic!("job {id} never reached a terminal state");
+    }
+
+    #[test]
+    fn routing_admission_and_failure_paths_without_a_farm() {
+        let cfg = test_cfg("sammpq_serve_unit");
+        let state_dir = cfg.state_dir.clone();
+        let server = start(cfg).unwrap();
+        let addr = server.addr().to_string();
+
+        // Unknown endpoints and methods.
+        let (code, _) = request(&addr, "GET", "/nope", None).unwrap();
+        assert_eq!(code, 404);
+        let (code, _) = request(&addr, "PUT", "/jobs", None).unwrap();
+        assert_eq!(code, 405);
+        let (code, _) = request(&addr, "GET", "/jobs/job-77", None).unwrap();
+        assert_eq!(code, 404);
+        let (code, _) = request(&addr, "DELETE", "/jobs/job-77", None).unwrap();
+        assert_eq!(code, 404);
+        let (code, body) =
+            request(&addr, "POST", "/jobs", Some(&Json::Str("not a spec".into()))).unwrap();
+        assert_eq!(code, 400, "{body:?}");
+
+        // Metrics render with an empty fleet.
+        let (code, m) = request(&addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(m.get("pressure").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(m.get("draining").and_then(|v| v.as_bool()), Some(false));
+
+        // A valid spec is admitted — and fails fast: no farm configured.
+        let (code, created) = request(&addr, "POST", "/jobs", Some(&spec_json())).unwrap();
+        assert_eq!(code, 201, "{created:?}");
+        let id = created.get("id").and_then(|v| v.as_str()).unwrap().to_string();
+        let status = wait_terminal(&addr, &id);
+        assert_eq!(status.get("state").and_then(|v| v.as_str()), Some("failed"));
+        let detail = status.get("detail").and_then(|v| v.as_str()).unwrap();
+        assert!(detail.contains("no farm workers"), "{detail}");
+
+        // The failure is journaled, so the events endpoint serves it...
+        let (code, ev) =
+            request(&addr, "GET", &format!("/jobs/{id}/events?from=0"), None).unwrap();
+        assert_eq!(code, 200);
+        let events = ev.get("events").and_then(|v| v.as_arr()).unwrap();
+        assert!(!events.is_empty());
+        // ...and a terminal job frees its admission slot.
+        let (code, _) = request(&addr, "POST", "/jobs", Some(&spec_json())).unwrap();
+        assert_eq!(code, 201);
+        let (code, cancel) = request(&addr, "DELETE", &format!("/jobs/{id}"), None).unwrap();
+        assert_eq!(code, 409, "{cancel:?}");
+
+        server.join();
+        // The journals survived on disk for the next daemon.
+        let journals = Journal::scan(&state_dir.join("journal")).unwrap();
+        assert_eq!(journals.len(), 2);
+        let _ = std::fs::remove_dir_all(&state_dir);
+    }
+
+    #[test]
+    fn draining_daemon_rejects_submissions() {
+        let cfg = test_cfg("sammpq_serve_drain");
+        let state_dir = cfg.state_dir.clone();
+        let server = start(cfg).unwrap();
+        let addr = server.addr().to_string();
+        server.drain();
+        let (code, body) = request(&addr, "POST", "/jobs", Some(&spec_json())).unwrap();
+        assert_eq!(code, 503, "{body:?}");
+        let (_, m) = request(&addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(m.get("draining").and_then(|v| v.as_bool()), Some(true));
+        server.join();
+        let _ = std::fs::remove_dir_all(&state_dir);
+    }
+}

@@ -2218,18 +2218,32 @@ pub struct RoundEvals {
 /// (separate processes OR threads in one test binary) sharing a worker
 /// farm must never collide in a worker's session table.
 fn auto_session_id() -> String {
+    namespaced_session_id(None)
+}
+
+/// Auto session id, optionally prefixed with a caller-owned namespace. The
+/// pid+nanos+counter core already separates processes and threads; the
+/// namespace separates LOGICAL OWNERS inside one process — the `serve`
+/// daemon runs many concurrent jobs over one shared pool, and every session
+/// a job opens (including mid-run re-sync re-opens) must be attributable to
+/// that job and collision-free against its neighbours by construction.
+pub fn namespaced_session_id(ns: Option<&str>) -> String {
     use std::sync::atomic::AtomicU64;
     static NEXT: AtomicU64 = AtomicU64::new(0);
     let nanos = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.subsec_nanos() as u64 ^ (d.as_secs() << 20))
         .unwrap_or(0);
-    format!(
+    let core = format!(
         "s{:x}-{:x}-{:x}",
         std::process::id(),
         nanos,
         NEXT.fetch_add(1, Ordering::Relaxed)
-    )
+    );
+    match ns {
+        Some(ns) => format!("{ns}.{core}"),
+        None => core,
+    }
 }
 
 /// Async straggler-tolerant worker pool (see module docs).
@@ -2291,6 +2305,11 @@ pub struct WorkerPool {
     pub heartbeat_retired: usize,
     /// Size of the most recent `evaluate_full` round (stats snapshot).
     last_round_size: usize,
+    /// Namespace prefixed onto every AUTO-GENERATED session id this pool
+    /// mints (`connect_session_ns`), including mid-run re-sync re-opens —
+    /// how the serve daemon keeps concurrent jobs' sessions disjoint on a
+    /// shared farm. `None`: bare pid+nanos+counter ids (the CLI path).
+    session_ns: Option<String>,
 }
 
 impl WorkerPool {
@@ -2307,10 +2326,25 @@ impl WorkerPool {
         cfg: PoolCfg,
         session: Option<SessionSpec>,
     ) -> Result<WorkerPool> {
+        WorkerPool::connect_session_ns(addrs, cfg, session, None)
+    }
+
+    /// [`connect_session`](Self::connect_session) with a session-id
+    /// namespace: the auto-generated id is prefixed with `ns`, and the pool
+    /// remembers the namespace so every LATER auto id it mints (the
+    /// re-prune re-sync path re-opens sessions mid-run) stays inside it.
+    pub fn connect_session_ns(
+        addrs: &[String],
+        cfg: PoolCfg,
+        session: Option<SessionSpec>,
+        ns: Option<&str>,
+    ) -> Result<WorkerPool> {
         let sessions = session
-            .map(|spec| vec![(auto_session_id(), spec)])
+            .map(|spec| vec![(namespaced_session_id(ns), spec)])
             .unwrap_or_default();
-        WorkerPool::connect_sessions(addrs, cfg, sessions)
+        let mut pool = WorkerPool::connect_sessions(addrs, cfg, sessions)?;
+        pool.session_ns = ns.map(str::to_string);
+        Ok(pool)
     }
 
     /// Connect with several named sessions open from the start (one leader
@@ -2415,6 +2449,7 @@ impl WorkerPool {
             quarantined: 0,
             heartbeat_retired: 0,
             last_round_size: 0,
+            session_ns: None,
         }
     }
 
@@ -2596,7 +2631,7 @@ impl WorkerPool {
     /// acked open still pick the session up through the reconnect
     /// re-handshake (every open session is re-handshaken there).
     pub fn open_session(&mut self, spec: SessionSpec) -> Result<String> {
-        let sid = auto_session_id();
+        let sid = namespaced_session_id(self.session_ns.as_deref());
         let frame = hello_frame(&sid, &spec);
         let expect_dims = spec.build.space.num_dims();
         // Register FIRST: a reconnect racing this call must already see the
@@ -3749,8 +3784,22 @@ impl RemoteObjective {
         addrs: &[String],
         cfg: PoolCfg,
     ) -> Result<RemoteObjective> {
+        RemoteObjective::connect_session_ns(spec, addrs, cfg, None)
+    }
+
+    /// [`connect_session`](Self::connect_session) with a session-id
+    /// namespace (the serve daemon passes its job id): this objective's
+    /// session — and every re-sync session it opens later — carries the
+    /// namespace prefix, so concurrent jobs on one shared farm can never
+    /// collide in a worker's session table.
+    pub fn connect_session_ns(
+        spec: SessionSpec,
+        addrs: &[String],
+        cfg: PoolCfg,
+        ns: Option<&str>,
+    ) -> Result<RemoteObjective> {
         let space = spec.build.space.clone();
-        let pool = WorkerPool::connect_session(addrs, cfg, Some(spec))?;
+        let pool = WorkerPool::connect_session_ns(addrs, cfg, Some(spec), ns)?;
         let sid = pool.session_ids().pop();
         Ok(RemoteObjective { space, pool, sid, log: Vec::new() })
     }
@@ -4985,5 +5034,32 @@ mod tests {
 
         pool.shutdown().unwrap();
         assert_eq!(handle.join().unwrap(), 2);
+    }
+
+    #[test]
+    fn namespaced_session_ids_cannot_collide_across_jobs() {
+        // Two jobs on one shared farm mint ids inside disjoint namespaces:
+        // a collision would need equal job ids, which the daemon's monotone
+        // job counter rules out by construction.
+        let a = namespaced_session_id(Some("job-1"));
+        let b = namespaced_session_id(Some("job-2"));
+        assert!(a.starts_with("job-1."), "{a}");
+        assert!(b.starts_with("job-2."), "{b}");
+        assert_ne!(a, b);
+        // Within ONE namespace the pid+nanos+counter core still separates
+        // consecutive sessions (the re-sync path opens before it closes).
+        let a2 = namespaced_session_id(Some("job-1"));
+        assert_ne!(a, a2);
+        // Un-namespaced ids keep the legacy single-leader shape — no dot,
+        // so a namespaced id can never be mistaken for a bare one.
+        let bare = namespaced_session_id(None);
+        assert!(bare.starts_with('s') && !bare.contains('.'), "{bare}");
+        assert!(!auto_session_id().contains('.'));
+        // A burst of ids across namespaces stays globally distinct.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..64 {
+            let ns = format!("job-{}", i % 4);
+            assert!(seen.insert(namespaced_session_id(Some(&ns))));
+        }
     }
 }

@@ -105,6 +105,34 @@ impl PoolStats {
             ("heartbeat_retired", Json::Num(self.heartbeat_retired as f64)),
         ])
     }
+
+    /// Inverse of [`to_json`](Self::to_json) — the serve daemon's journal
+    /// replay rebuilds farm snapshots from journaled supervisor events.
+    pub fn from_json(j: &Json) -> anyhow::Result<PoolStats> {
+        use anyhow::Context;
+        let n = |k: &str| -> anyhow::Result<usize> {
+            j.req(k)?.as_usize().with_context(|| format!("stats field '{k}'"))
+        };
+        Ok(PoolStats {
+            capacity: n("capacity")?,
+            pending_joiners: n("pending_joiners")?,
+            quarantined: n("quarantined")?,
+            last_round_size: n("last_round_size")?,
+            ewma_eval_secs: match j.req("ewma_eval_secs")? {
+                Json::Null => None,
+                v => Some(v.as_f64().context("ewma_eval_secs")?),
+            },
+            completed: n("completed")?,
+            redispatched: n("redispatched")?,
+            requeued: n("requeued")?,
+            reconnects: n("reconnects")?,
+            adopted: n("adopted")?,
+            drained: n("drained")?,
+            audits: n("audits")?,
+            audit_disagreements: n("audit_disagreements")?,
+            heartbeat_retired: n("heartbeat_retired")?,
+        })
+    }
 }
 
 /// Policy knobs. Watermarks are in units of LOAD = round size / capacity:
@@ -213,6 +241,24 @@ impl SupervisorEvent {
             ("amount", Json::Num(amount as f64)),
             ("stats", self.stats.to_json()),
         ])
+    }
+
+    /// Inverse of [`to_json`](Self::to_json) — journal replay.
+    pub fn from_json(j: &Json) -> anyhow::Result<SupervisorEvent> {
+        use anyhow::Context;
+        let kind = j.req("supervisor")?.as_str().context("supervisor kind")?;
+        let amount = j.req("amount")?.as_usize().context("amount")?;
+        let decision = match kind {
+            "hold" => Decision::Hold,
+            "drain_idle" => Decision::DrainIdle { excess: amount },
+            "flag_pressure" => Decision::FlagPressure { deficit: amount },
+            other => anyhow::bail!("unknown supervisor decision '{other}'"),
+        };
+        Ok(SupervisorEvent {
+            round: j.req("round")?.as_usize().context("round")?,
+            decision,
+            stats: PoolStats::from_json(j.req("stats")?)?,
+        })
     }
 }
 
@@ -344,6 +390,52 @@ mod tests {
         assert_eq!(sup2.observe(0, &stats(2, 8, 6)), Decision::Hold);
         assert_eq!(sup2.observe(1, &stats(2, 8, 6)), Decision::Hold);
         assert!(sup2.events.is_empty(), "covered pressure emits no event");
+    }
+
+    #[test]
+    fn stats_and_event_json_round_trip() {
+        let s = PoolStats {
+            capacity: 5,
+            pending_joiners: 1,
+            quarantined: 2,
+            last_round_size: 8,
+            ewma_eval_secs: Some(0.125),
+            completed: 40,
+            redispatched: 3,
+            requeued: 1,
+            reconnects: 2,
+            adopted: 4,
+            drained: 1,
+            audits: 6,
+            audit_disagreements: 1,
+            heartbeat_retired: 1,
+        };
+        assert_eq!(PoolStats::from_json(&s.to_json()).unwrap(), s);
+        // None EWMA survives as JSON null (not a missing key).
+        let s2 = PoolStats { ewma_eval_secs: None, ..s };
+        assert_eq!(PoolStats::from_json(&s2.to_json()).unwrap(), s2);
+        for decision in [
+            Decision::Hold,
+            Decision::DrainIdle { excess: 3 },
+            Decision::FlagPressure { deficit: 2 },
+        ] {
+            let ev = SupervisorEvent { round: 7, decision, stats: s };
+            let back = SupervisorEvent::from_json(&ev.to_json()).unwrap();
+            assert_eq!(back.round, 7);
+            assert_eq!(back.stats, s);
+            // Hold round-trips as Hold (amount 0 is not a drain of 0).
+            match (decision, back.decision) {
+                (Decision::Hold, Decision::Hold) => {}
+                (a, b) => assert_eq!(a, b),
+            }
+        }
+        assert!(SupervisorEvent::from_json(&obj(vec![
+            ("supervisor", Json::Str("explode".into())),
+            ("round", Json::Num(1.0)),
+            ("amount", Json::Num(0.0)),
+            ("stats", s.to_json()),
+        ]))
+        .is_err());
     }
 
     #[test]

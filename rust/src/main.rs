@@ -663,6 +663,39 @@ fn cmd_pool(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Search-as-a-service: run the control-plane daemon. Jobs arrive as JSON
+/// over HTTP (`POST /jobs`), multiplex one shared worker farm under
+/// per-job session namespaces, journal every event under --state-dir, and
+/// survive daemon restarts (journals replay; unfinished jobs resume from
+/// their per-round checkpoints). SIGTERM drains gracefully. E.g.:
+///
+///   sammpq worker --synthetic 8x4 --addr 127.0.0.1:7447
+///   sammpq serve --addr 127.0.0.1:7460 --workers 127.0.0.1:7447 \
+///       --state-dir /tmp/sammpq-serve --max-jobs 4 --tenant-quota 2
+fn cmd_serve(args: &Args) -> Result<()> {
+    use sammpq::coordinator::{server, ServeCfg};
+
+    anyhow::ensure!(
+        args.get("workers").is_some(),
+        "serve needs --workers a,b,c: the shared farm jobs evaluate on"
+    );
+    let cfg = ServeCfg {
+        addr: args.get_or("addr", "127.0.0.1:7460"),
+        workers: parse_addr_list(&args.get_or("workers", "")),
+        pool: pool_cfg_from(args)?,
+        state_dir: std::path::PathBuf::from(args.get_or("state-dir", "sammpq-serve")),
+        max_jobs: args.get_usize("max-jobs", 4).max(1),
+        tenant_quota: args.get_usize("tenant-quota", 2).max(1),
+        warehouse: args.get("warehouse").map(std::path::PathBuf::from),
+        registry: args.get("registry").map(str::to_string),
+        autoscale: args.has_flag("autoscale"),
+        poll_wait: std::time::Duration::from_secs_f64(
+            args.get_f64("poll-wait-secs", 10.0).clamp(0.1, 300.0),
+        ),
+    };
+    server::run(cfg)
+}
+
 /// Operator view of a transfer store (`--warehouse <dir>` on searches):
 /// `sammpq warehouse ls --warehouse <dir>` lists every key with record,
 /// segment, and byte counts; `sammpq warehouse gc --warehouse <dir>
@@ -756,6 +789,7 @@ fn main() {
         "exp" => cmd_exp(&args),
         "worker" => cmd_worker(&args),
         "pool" => cmd_pool(&args),
+        "serve" => cmd_serve(&args),
         "warehouse" => cmd_warehouse(&args),
         "info" => cmd_info(),
         _ => {
@@ -827,6 +861,22 @@ fn main() {
                  \x20             --straggler-factor <f> --pipeline-depth <d> --n <evals>\n\
                  \x20             --registry <h:p>    adopt `worker --join`ers mid-run\n\
                  \x20             --heartbeat-secs <s> --audit-fraction <f>  health layer\n\
+                 \x20 serve       search-as-a-service control plane: HTTP daemon running\n\
+                 \x20             concurrent jobs over one shared worker farm\n\
+                 \x20             --addr h:p (127.0.0.1:7460) --workers a,b,c (required)\n\
+                 \x20             --state-dir <dir>  journals + per-job checkpoints; a\n\
+                 \x20             restarted daemon replays the journals and resumes\n\
+                 \x20             unfinished jobs from their checkpoints\n\
+                 \x20             --max-jobs <n> --tenant-quota <n>  admission control\n\
+                 \x20             (structured 429s when either cap is hit)\n\
+                 \x20             --warehouse <dir>   shared transfer store for all jobs\n\
+                 \x20             --registry <h:p>    adopt `worker --join`ers into every\n\
+                 \x20             active job's pool    --autoscale  supervisor actions\n\
+                 \x20             endpoints: POST /jobs, GET /jobs/:id,\n\
+                 \x20             GET /jobs/:id/events?from=N (long-poll),\n\
+                 \x20             DELETE /jobs/:id (cancel), GET /metrics;\n\
+                 \x20             SIGTERM drains: stop admitting, checkpoint + journal\n\
+                 \x20             running jobs, bye farm sessions keep-workers\n\
                  \x20 warehouse   inspect a transfer store: `ls --warehouse <dir>` lists\n\
                  \x20             keys/records/bytes; `gc --warehouse <dir> --max-mb <m>`\n\
                  \x20             evicts the oldest segments until the store fits\n\

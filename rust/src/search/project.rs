@@ -30,6 +30,7 @@
 use super::checkpoint::SearchCheckpoint;
 use super::history::History;
 use super::space::{Config, Space};
+use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 
 /// What to do with a checkpointed trial whose choice was pruned away.
@@ -154,6 +155,86 @@ impl ProjectionReport {
             ));
         }
         s
+    }
+
+    /// Structured encoding for the serve daemon's job journal (resume /
+    /// warm-start / re-prune projections become replayable events, not
+    /// just log lines).
+    pub fn to_json(&self) -> Json {
+        let dims = |names: &[String]| {
+            Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect())
+        };
+        obj(vec![
+            ("policy", Json::Str(self.policy.name().to_string())),
+            ("kept", Json::Num(self.kept as f64)),
+            ("snapped", Json::Num(self.snapped as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            (
+                "per_dim",
+                Json::Arr(
+                    self.per_dim
+                        .iter()
+                        .map(|d| {
+                            obj(vec![
+                                ("name", Json::Str(d.name.clone())),
+                                ("snapped", Json::Num(d.snapped as f64)),
+                                ("dropped", Json::Num(d.dropped as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("dropped_dims", dims(&self.dropped_dims)),
+            ("new_dims", dims(&self.new_dims)),
+            ("old_fingerprint", Json::Str(self.old_fingerprint.clone())),
+            ("new_fingerprint", Json::Str(self.new_fingerprint.clone())),
+        ])
+    }
+
+    /// Inverse of [`to_json`](Self::to_json) — journal replay.
+    pub fn from_json(j: &Json) -> anyhow::Result<ProjectionReport> {
+        use anyhow::Context;
+        let names = |k: &str| -> anyhow::Result<Vec<String>> {
+            Ok(j.req(k)?
+                .as_arr()
+                .with_context(|| format!("'{k}' not an array"))?
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect())
+        };
+        let policy_name = j.req("policy")?.as_str().context("policy")?;
+        Ok(ProjectionReport {
+            policy: ProjectPolicy::parse(policy_name)
+                .with_context(|| format!("unknown projection policy '{policy_name}'"))?,
+            kept: j.req("kept")?.as_usize().context("kept")?,
+            snapped: j.req("snapped")?.as_usize().context("snapped")?,
+            dropped: j.req("dropped")?.as_usize().context("dropped")?,
+            per_dim: j
+                .req("per_dim")?
+                .as_arr()
+                .context("per_dim")?
+                .iter()
+                .map(|d| {
+                    Ok(DimReport {
+                        name: d.req("name")?.as_str().context("dim name")?.to_string(),
+                        snapped: d.req("snapped")?.as_usize().context("dim snapped")?,
+                        dropped: d.req("dropped")?.as_usize().context("dim dropped")?,
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?,
+            dropped_dims: names("dropped_dims")?,
+            new_dims: names("new_dims")?,
+            old_fingerprint: j
+                .req("old_fingerprint")?
+                .as_str()
+                .context("old_fingerprint")?
+                .to_string(),
+            new_fingerprint: j
+                .req("new_fingerprint")?
+                .as_str()
+                .context("new_fingerprint")?
+                .to_string(),
+        })
     }
 }
 
@@ -625,5 +706,28 @@ mod tests {
         for _ in 0..4 {
             assert!(new.validate(&tpe.propose(&mut rng)));
         }
+    }
+
+    #[test]
+    fn projection_report_json_round_trip() {
+        let report = ProjectionReport {
+            policy: ProjectPolicy::Strict,
+            kept: 5,
+            snapped: 2,
+            dropped: 1,
+            per_dim: vec![
+                DimReport { name: "bits:a".into(), snapped: 2, dropped: 1 },
+                DimReport { name: "width:w".into(), snapped: 0, dropped: 0 },
+            ],
+            dropped_dims: vec!["bits:gone".into()],
+            new_dims: vec!["bits:new".into()],
+            old_fingerprint: "fp-old".into(),
+            new_fingerprint: "fp-new".into(),
+        };
+        let back = ProjectionReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(back.to_json(), report.to_json());
+        assert_eq!(back.policy, ProjectPolicy::Strict);
+        assert_eq!(back.total(), report.total());
+        assert_eq!(back.render(), report.render());
     }
 }

@@ -294,6 +294,20 @@ impl Warehouse {
         Ok(out)
     }
 
+    /// Whole-store totals — (keys, deduplicated records, segment bytes) —
+    /// from a fresh scan. What the serve daemon's `GET /metrics` reports
+    /// as the shared warehouse's size.
+    pub fn stats(&self) -> Result<(usize, usize, u64)> {
+        let mut records = 0usize;
+        let mut bytes = 0u64;
+        let summaries = self.summaries()?;
+        for s in &summaries {
+            records += s.records;
+            bytes += s.bytes;
+        }
+        Ok((summaries.len(), records, bytes))
+    }
+
     /// Size-capped retention: evict whole segments, oldest mtime first
     /// (ties break by key then segment name, so a replay is
     /// deterministic), until total segment bytes fit `max_bytes`. A key

@@ -1,0 +1,420 @@
+//! End-to-end `sammpq serve` control-plane flow, PJRT-free: HTTP-submitted
+//! jobs multiplex a real multi-tenant 2-worker synthetic farm over
+//! localhost TCP, and their terminal reports must be BIT-IDENTICAL to the
+//! same searches run through the CLI path (`jobs::drive` over an isolated
+//! farm) — transport, concurrency, journaling, and checkpointing must all
+//! be invisible in the result. On top of that: admission control
+//! (capacity + per-tenant quota 429s), cooperative cancellation that
+//! requeues nothing, and the crash story — a killed daemon's journals
+//! replay in a fresh daemon, which resumes the interrupted job from its
+//! checkpoint to the uninterrupted reference, bit for bit.
+//!
+//! `two_http_jobs_on_a_shared_farm_match_cli_path_reports_bit_for_bit` and
+//! `killed_daemon_replays_journals_and_resumes_jobs_from_checkpoints` are
+//! the named CI gates for the serve path.
+//!
+//! Every test body runs under an explicit wall-clock bound: a wedged
+//! long-poll or a stuck executor must FAIL the suite, not hang CI.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use sammpq::coordinator::report::job_report_json;
+use sammpq::coordinator::server;
+use sammpq::coordinator::{jobs, CancelToken, DriveOpts, JobSpec, JobState, LogSink, PoolCfg,
+                          RemoteObjective, ServeCfg, ServeOpts, SessionSpec, SpaceBuild,
+                          SyntheticFactory};
+use sammpq::hessian::PrunedSpace;
+use sammpq::search::{Objective, QPolicy, SyntheticObjective};
+use sammpq::util::json::Json;
+
+/// A pool config whose straggler deadline cannot fire on fast synthetic
+/// objectives — keeps results deterministic on a loaded CI runner.
+fn no_steal_cfg() -> PoolCfg {
+    PoolCfg { min_straggle: Duration::from_secs(30), ..Default::default() }
+}
+
+/// Hard timeout harness: run `f` on a worker thread and fail loudly if it
+/// does not finish in `secs`.
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            handle.join().expect("test thread panicked");
+            v
+        }
+        Err(_) => {
+            if handle.is_finished() {
+                handle.join().expect("test thread panicked");
+                unreachable!("test thread finished without sending a result");
+            }
+            panic!("serve integration test exceeded its {secs}s bound");
+        }
+    }
+}
+
+/// A multi-tenant farm worker (protocol v3 session table), like a real
+/// `sammpq worker --synthetic` process: binds port 0, serves many
+/// concurrent sessions until a shutdown frame.
+fn spawn_farm_worker(sleep_ms: u64) -> (String, std::thread::JoinHandle<usize>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let handle = std::thread::spawn(move || {
+        let factory = SyntheticFactory { sleep: Duration::from_millis(sleep_ms) };
+        sammpq::coordinator::serve_sessions_on(listener, &factory, ServeOpts::default())
+            .expect("farm worker")
+    });
+    (addr, handle)
+}
+
+/// Last-resort farm teardown: one best-effort shutdown frame per address.
+fn shutdown_farm(addrs: &[String]) {
+    use std::io::Write as _;
+    for addr in addrs {
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            let _ = s.write_all(b"{\"shutdown\": true}\n");
+        }
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("sammpq_serve_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn job_spec(name: &str, tenant: &str, seed: u64, n_evals: usize) -> JobSpec {
+    JobSpec {
+        name: name.to_string(),
+        tenant: tenant.to_string(),
+        session: SessionSpec::synthetic(
+            SyntheticObjective::new(4, 3, Duration::ZERO).space().clone(),
+        ),
+        algo: sammpq::coordinator::Algo::KmeansTpe,
+        seed,
+        n_evals,
+        n_startup: 6,
+        batch_q: QPolicy::Fixed(4),
+        warm_start: None,
+    }
+}
+
+fn no_rebuild(_: &PrunedSpace) -> SpaceBuild {
+    unreachable!("serve integration jobs never re-prune")
+}
+
+/// The CLI-path reference: the SAME job driven by `jobs::drive` (exactly
+/// what `sammpq search --workers` runs) over its own isolated 2-worker
+/// farm, uncheckpointed and uninterrupted. Returns the terminal report the
+/// daemon's journaled report must equal as a `Json` value — raw value
+/// bits, configs, and the full record log included.
+fn cli_reference_report(spec: &JobSpec) -> Json {
+    let (a1, h1) = spawn_farm_worker(0);
+    let (a2, h2) = spawn_farm_worker(0);
+    let addrs = vec![a1, a2];
+    let mut objective =
+        RemoteObjective::connect_session(spec.session.clone(), &addrs, no_steal_cfg())
+            .expect("reference session");
+    let out = jobs::drive(
+        &spec.drive_cfg(),
+        &DriveOpts::default(),
+        &mut objective,
+        None,
+        &no_rebuild,
+        &mut LogSink,
+        &CancelToken::new(),
+    )
+    .expect("reference drive");
+    objective.shutdown().expect("reference shutdown");
+    h1.join().unwrap();
+    h2.join().unwrap();
+    job_report_json(spec.algo.name(), &out.history, &out.records)
+}
+
+/// Poll `GET /jobs/:id` until the job reaches a terminal state.
+fn wait_terminal(addr: &str, id: &str) -> Json {
+    loop {
+        let (code, status) = server::request(addr, "GET", &format!("/jobs/{id}"), None)
+            .expect("status request");
+        assert_eq!(code, 200, "{status:?}");
+        let state = status.get("state").and_then(|v| v.as_str()).expect("state");
+        if JobState::parse(state).expect("known state").terminal() {
+            return status;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Long-poll `GET /jobs/:id/events` until at least `n` completed-round
+/// events have been journaled; returns the cursor past them.
+fn wait_rounds(addr: &str, id: &str, n: usize) -> usize {
+    let mut from = 0usize;
+    let mut rounds = 0usize;
+    loop {
+        let (code, page) =
+            server::request(addr, "GET", &format!("/jobs/{id}/events?from={from}"), None)
+                .expect("events request");
+        assert_eq!(code, 200, "{page:?}");
+        for e in page.get("events").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            if e.get("ev").and_then(|v| v.as_str()) == Some("round") {
+                rounds += 1;
+            }
+        }
+        from = page.get("next").and_then(|v| v.as_usize()).expect("next cursor");
+        if rounds >= n {
+            return from;
+        }
+        let state = page.get("state").and_then(|v| v.as_str()).expect("state");
+        assert!(
+            !JobState::parse(state).expect("known state").terminal() || rounds >= n,
+            "job went terminal ({state}) after only {rounds} rounds"
+        );
+    }
+}
+
+/// Named CI gate: two jobs submitted over HTTP — different tenants, one
+/// shared 2-worker farm, concurrent sessions — finish with terminal
+/// reports bit-identical to the same searches run through the CLI path on
+/// isolated farms. The control plane adds multiplexing, journaling, and
+/// per-round checkpointing; it must add NOTHING to the result.
+#[test]
+fn two_http_jobs_on_a_shared_farm_match_cli_path_reports_bit_for_bit() {
+    with_timeout(300, || {
+        let spec_a = job_spec("job-a", "acme", 0xA11CE, 24);
+        let spec_b = job_spec("job-b", "bolt", 0xB0B, 20);
+        let reference_a = cli_reference_report(&spec_a);
+        let reference_b = cli_reference_report(&spec_b);
+        assert_ne!(reference_a, reference_b, "distinct seeds must diverge");
+
+        let (a1, h1) = spawn_farm_worker(0);
+        let (a2, h2) = spawn_farm_worker(0);
+        let farm = vec![a1, a2];
+        let state_dir = tmp("shared");
+        let daemon = server::start(ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            workers: farm.clone(),
+            pool: no_steal_cfg(),
+            state_dir: state_dir.clone(),
+            ..ServeCfg::default()
+        })
+        .expect("daemon start");
+        let addr = daemon.addr().to_string();
+
+        let (code, created_a) =
+            server::request(&addr, "POST", "/jobs", Some(&spec_a.to_json())).unwrap();
+        assert_eq!(code, 201, "{created_a:?}");
+        let (code, created_b) =
+            server::request(&addr, "POST", "/jobs", Some(&spec_b.to_json())).unwrap();
+        assert_eq!(code, 201, "{created_b:?}");
+        let id_a = created_a.get("id").and_then(|v| v.as_str()).unwrap().to_string();
+        let id_b = created_b.get("id").and_then(|v| v.as_str()).unwrap().to_string();
+        assert_ne!(id_a, id_b);
+
+        let status_a = wait_terminal(&addr, &id_a);
+        let status_b = wait_terminal(&addr, &id_b);
+        assert_eq!(status_a.get("state").and_then(|v| v.as_str()), Some("done"));
+        assert_eq!(status_b.get("state").and_then(|v| v.as_str()), Some("done"));
+
+        // The acceptance contract: reports equal as Json values — same
+        // value bits, same configs, same full record logs.
+        assert_eq!(status_a.get("report"), Some(&reference_a));
+        assert_eq!(status_b.get("report"), Some(&reference_b));
+
+        // The journals carry the whole life of each job and replay to the
+        // same terminal view the daemon serves.
+        let journals =
+            sammpq::coordinator::Journal::scan(&state_dir.join("journal")).unwrap();
+        assert_eq!(journals.len(), 2);
+        for (job_id, events) in &journals {
+            let replayed =
+                sammpq::coordinator::JobHandle::replay(job_id, events).unwrap();
+            assert_eq!(replayed.state, JobState::Done);
+            let reference =
+                if job_id == &id_a { &reference_a } else { &reference_b };
+            assert_eq!(replayed.report.as_ref(), Some(reference));
+        }
+
+        daemon.join();
+        shutdown_farm(&farm);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        let _ = std::fs::remove_dir_all(&state_dir);
+    });
+}
+
+/// Admission control and cancellation: capacity and per-tenant overflows
+/// draw structured 429s, `DELETE` cancels cooperatively (clean `bye`, no
+/// double-requeue — the shared farm keeps serving a subsequent job to a
+/// bit-correct result), and terminal jobs free their admission slots.
+#[test]
+fn admission_quotas_reject_overflow_and_cancellation_leaves_the_farm_clean() {
+    with_timeout(300, || {
+        // Slow evals so submitted jobs are still running when the quota
+        // checks and the cancel land.
+        let (a1, h1) = spawn_farm_worker(25);
+        let (a2, h2) = spawn_farm_worker(25);
+        let farm = vec![a1, a2];
+        let state_dir = tmp("admission");
+        let daemon = server::start(ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            workers: farm.clone(),
+            pool: no_steal_cfg(),
+            state_dir: state_dir.clone(),
+            max_jobs: 2,
+            tenant_quota: 1,
+            ..ServeCfg::default()
+        })
+        .expect("daemon start");
+        let addr = daemon.addr().to_string();
+
+        let (code, created_a) =
+            server::request(&addr, "POST", "/jobs", Some(&job_spec("a", "acme", 1, 64).to_json()))
+                .unwrap();
+        assert_eq!(code, 201, "{created_a:?}");
+        let id_a = created_a.get("id").and_then(|v| v.as_str()).unwrap().to_string();
+
+        // Tenant quota: acme already has its one active job.
+        let (code, rejected) =
+            server::request(&addr, "POST", "/jobs", Some(&job_spec("a2", "acme", 2, 8).to_json()))
+                .unwrap();
+        assert_eq!(code, 429, "{rejected:?}");
+        assert_eq!(rejected.get("error").and_then(|v| v.as_str()), Some("tenant-quota"));
+
+        let (code, created_b) =
+            server::request(&addr, "POST", "/jobs", Some(&job_spec("b", "bolt", 3, 64).to_json()))
+                .unwrap();
+        assert_eq!(code, 201, "{created_b:?}");
+        let id_b = created_b.get("id").and_then(|v| v.as_str()).unwrap().to_string();
+
+        // Capacity: two active jobs is the daemon-wide cap.
+        let (code, rejected) =
+            server::request(&addr, "POST", "/jobs", Some(&job_spec("c", "crux", 4, 8).to_json()))
+                .unwrap();
+        assert_eq!(code, 429, "{rejected:?}");
+        assert_eq!(rejected.get("error").and_then(|v| v.as_str()), Some("capacity"));
+
+        let (_, metrics) = server::request(&addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(metrics.get("admitted").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(metrics.get("rejected_capacity").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(metrics.get("rejected_quota").and_then(|v| v.as_usize()), Some(1));
+
+        // Cancel both mid-flight; wait for at least one finished round
+        // first so the cancel lands on a genuinely running search.
+        wait_rounds(&addr, &id_a, 1);
+        for id in [&id_a, &id_b] {
+            let (code, accepted) =
+                server::request(&addr, "DELETE", &format!("/jobs/{id}"), None).unwrap();
+            assert_eq!(code, 202, "{accepted:?}");
+        }
+        let status_a = wait_terminal(&addr, &id_a);
+        let status_b = wait_terminal(&addr, &id_b);
+        assert_eq!(status_a.get("state").and_then(|v| v.as_str()), Some("cancelled"));
+        assert_eq!(status_b.get("state").and_then(|v| v.as_str()), Some("cancelled"));
+        // Cooperative cancel stops at a round boundary: strictly short of
+        // the budget, never past it (nothing requeued, nothing paid twice).
+        let trials = status_a.get("trials").and_then(|v| v.as_usize()).unwrap();
+        assert!(trials > 0 && trials < 64, "cancelled after {trials} of 64");
+        // Cancelling an already-terminal job is a conflict, not a repeat.
+        let (code, conflict) =
+            server::request(&addr, "DELETE", &format!("/jobs/{id_a}"), None).unwrap();
+        assert_eq!(code, 409, "{conflict:?}");
+
+        // Terminal jobs freed both admission slots, the cancelled
+        // sessions left with a clean `bye` — the SAME farm now serves a
+        // fresh job to the bit-exact CLI-path result.
+        let probe = job_spec("probe", "acme", 5, 12);
+        let reference = cli_reference_report(&probe);
+        let (code, created) =
+            server::request(&addr, "POST", "/jobs", Some(&probe.to_json())).unwrap();
+        assert_eq!(code, 201, "{created:?}");
+        let id = created.get("id").and_then(|v| v.as_str()).unwrap().to_string();
+        let status = wait_terminal(&addr, &id);
+        assert_eq!(status.get("state").and_then(|v| v.as_str()), Some("done"));
+        assert_eq!(status.get("report"), Some(&reference));
+
+        daemon.join();
+        shutdown_farm(&farm);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        let _ = std::fs::remove_dir_all(&state_dir);
+    });
+}
+
+/// Named CI gate for the crash story: kill a daemon mid-job (no drain, no
+/// `bye`, journals frozen at `Searching`), start a fresh daemon on the
+/// same state dir — it replays the journal, resumes the job from its
+/// checkpoint against the still-running farm, and finishes with the
+/// uninterrupted CLI-path report, bit for bit.
+#[test]
+fn killed_daemon_replays_journals_and_resumes_jobs_from_checkpoints() {
+    with_timeout(300, || {
+        let spec = job_spec("survivor", "acme", 0xD1ED, 40);
+        let reference = cli_reference_report(&spec);
+
+        // Slow enough that the kill lands mid-search, fast enough to
+        // finish the resumed tail comfortably.
+        let (a1, h1) = spawn_farm_worker(15);
+        let (a2, h2) = spawn_farm_worker(15);
+        let farm = vec![a1, a2];
+        let state_dir = tmp("restart");
+        let cfg = ServeCfg {
+            addr: "127.0.0.1:0".to_string(),
+            workers: farm.clone(),
+            pool: no_steal_cfg(),
+            state_dir: state_dir.clone(),
+            ..ServeCfg::default()
+        };
+
+        let first = server::start(cfg.clone()).expect("first daemon");
+        let addr1 = first.addr().to_string();
+        let (code, created) =
+            server::request(&addr1, "POST", "/jobs", Some(&spec.to_json())).unwrap();
+        assert_eq!(code, 201, "{created:?}");
+        let id = created.get("id").and_then(|v| v.as_str()).unwrap().to_string();
+        // Let it get at least two rounds deep, then die without ceremony.
+        wait_rounds(&addr1, &id, 2);
+        first.kill();
+
+        // The journal on disk still says Searching — no terminal state,
+        // no Draining line: a crash, not a shutdown.
+        let journals =
+            sammpq::coordinator::Journal::scan(&state_dir.join("journal")).unwrap();
+        assert_eq!(journals.len(), 1);
+        let frozen =
+            sammpq::coordinator::JobHandle::replay(&journals[0].0, &journals[0].1).unwrap();
+        assert_eq!(frozen.state, JobState::Searching);
+        assert!(frozen.trials >= 8, "kill landed before two rounds? ({})", frozen.trials);
+        assert!(frozen.trials < 40, "job finished before the kill");
+
+        // Second daemon, same state dir: replay + resume.
+        let second = server::start(cfg).expect("second daemon");
+        let addr2 = second.addr().to_string();
+        let status = wait_terminal(&addr2, &id);
+        assert_eq!(status.get("state").and_then(|v| v.as_str()), Some("done"));
+        assert_eq!(status.get("report"), Some(&reference));
+
+        // The journal records the resume hand-off explicitly.
+        let (_, page) =
+            server::request(&addr2, "GET", &format!("/jobs/{id}/events?from=0"), None)
+                .unwrap();
+        let events = page.get("events").and_then(|v| v.as_arr()).unwrap();
+        let resumed = events.iter().any(|e| {
+            e.get("ev").and_then(|v| v.as_str()) == Some("state")
+                && e.get("detail")
+                    .and_then(|v| v.as_str())
+                    .is_some_and(|d| d.contains("resumed from checkpoint"))
+        });
+        assert!(resumed, "no resume transition journaled");
+
+        second.join();
+        shutdown_farm(&farm);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        let _ = std::fs::remove_dir_all(&state_dir);
+    });
+}
